@@ -1,0 +1,16 @@
+use panther::data::TextCorpus;
+use panther::rng::Philox;
+use std::io::Write;
+fn main() {
+    let c = TextCorpus::generate(256, 200_000, 0 ^ 0xC0FFEE);
+    let mut rng = Philox::new(0, 1);
+    let mut f = std::io::BufWriter::new(std::fs::File::create("/tmp/rust_batches.txt").unwrap());
+    for _ in 0..600 {
+        let b = c.mlm_batch(16, 64, &mut rng);
+        for t in [&b.tokens, &b.labels, &b.mask] {
+            let s: Vec<String> = t.data().iter().map(|v| format!("{v}")).collect();
+            writeln!(f, "{}", s.join(" ")).unwrap();
+        }
+    }
+    println!("dumped");
+}

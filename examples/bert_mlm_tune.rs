@@ -1,0 +1,106 @@
+//! **End-to-end driver** — reproduces the paper's §4.2 BERT quality
+//! experiment and the Listing-2 SKAutoTuner migration flow, exercising all
+//! three layers of the stack (Pallas kernels → JAX train graphs → Rust
+//! coordinator):
+//!
+//! 1. Train `bert_dense` (BERT-mini MLM) on the synthetic corpus; log the
+//!    loss curve.
+//! 2. Train `bert_sk_1_8` (every encoder Linear sketched, ~76% fewer
+//!    parameters) from scratch with identical data; log its curve.
+//! 3. Run the SKAutoTuner: sketch the *trained dense* weights into every
+//!    candidate (l,k) variant, evaluate MLM loss, and pick the smallest
+//!    feasible model under a loss constraint — the paper's
+//!    `accuracy_threshold` flow.
+//!
+//! Results land in EXPERIMENTS.md (§4.2 rows).
+//!
+//! ```bash
+//! cargo run --release --example bert_mlm_tune -- [steps] [seed]
+//! ```
+
+use panther::data::TextCorpus;
+use panther::rng::Philox;
+use panther::runtime::Runtime;
+use panther::train::{BertTrainer, ModelState};
+use panther::tuner::bert_tune::tune_bert_candidates;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: u64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(600);
+    let seed: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+    let artifacts =
+        std::env::var("PANTHER_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+
+    let mut rt = Runtime::open(&artifacts)?;
+    let dense_spec = rt.manifest().model("bert_dense").unwrap().clone();
+    let sk_spec = rt.manifest().model("bert_sk_1_8").unwrap().clone();
+    let vocab = dense_spec.config_usize("vocab").unwrap();
+    let corpus = TextCorpus::generate(vocab, 200_000, seed ^ 0xC0FFEE);
+    println!(
+        "corpus: {} tokens over {vocab} symbols, unigram entropy {:.3} nats (uniform {:.3})",
+        corpus.len(),
+        corpus.unigram_entropy(),
+        (vocab as f64).ln()
+    );
+
+    // --- 1+2: train dense and sketched variants on identical data ---------
+    let mut curves = Vec::new();
+    let mut finals = Vec::new();
+    for model in ["bert_dense", "bert_sk_1_8"] {
+        let spec = rt.manifest().model(model).unwrap().clone();
+        println!(
+            "\n== training {model}: {} params ({}) ==",
+            spec.param_count,
+            match spec.sketch() {
+                Some((l, k)) => format!("sketched l={l} k={k}"),
+                None => "dense".to_string(),
+            }
+        );
+        let mut state = ModelState::init(&mut rt, model, seed as f32)?;
+        let mut data_rng = Philox::new(seed, 1); // same stream for both
+        let t0 = std::time::Instant::now();
+        let report = {
+            let mut trainer = BertTrainer::new(&mut rt, &corpus);
+            trainer.train(&mut state, steps, &mut data_rng)?
+        };
+        let mut eval_rng = Philox::new(seed, 2);
+        let eval = {
+            let mut trainer = BertTrainer::new(&mut rt, &corpus);
+            trainer.evaluate(&state, 8, &mut eval_rng)?
+        };
+        println!(
+            "{model}: {} steps in {:.1?} ({:.2} steps/s), final train loss {:.4}, eval loss {:.4}",
+            steps,
+            t0.elapsed(),
+            steps as f64 / t0.elapsed().as_secs_f64(),
+            report.final_loss,
+            eval
+        );
+        curves.push((model.to_string(), report.losses.clone()));
+        finals.push((model.to_string(), spec.param_count, eval));
+    }
+
+    println!("\n== loss curves (step, loss) ==");
+    for (model, curve) in &curves {
+        let pts: Vec<String> = curve
+            .iter()
+            .map(|(s, l)| format!("({s},{l:.3})"))
+            .collect();
+        println!("{model}: {}", pts.join(" "));
+    }
+    let reduction = 1.0 - sk_spec.param_count as f64 / dense_spec.param_count as f64;
+    println!(
+        "\n§4.2 summary: {:.1}% parameter reduction; eval loss dense {:.4} vs sketched {:.4}",
+        reduction * 100.0,
+        finals[0].2,
+        finals[1].2
+    );
+
+    // --- 3: SKAutoTuner over candidates (Listing 2) ------------------------
+    println!("\n== SKAutoTuner: sketch trained dense weights, constraint = loss margin ==");
+    drop(rt); // tune opens its own runtime
+    let outcome = tune_bert_candidates(&artifacts, steps.min(120), 4, 0.40, seed)?;
+    println!("{outcome}");
+    println!("\nbert_mlm_tune OK");
+    Ok(())
+}

@@ -1,0 +1,153 @@
+//! Randomized matrix decompositions: RSVD and CQRRPT vs their deterministic
+//! baselines — the library features of Panther §2 ("randomized matrix
+//! decompositions (such as pivoted CholeskyQR)").
+//!
+//! ```bash
+//! cargo run --release --example decompositions
+//! ```
+
+use panther::decomp::{
+    cqrrpt, lstsq_normal_eq, pivoted_cholesky, rsvd, sketched_lstsq, CqrrptOpts, LstsqOpts,
+    RsvdOpts,
+};
+use panther::linalg::{fro_norm, matmul, matmul_tn, ortho_error, qr_thin, svd_jacobi, Mat};
+use panther::rng::Philox;
+use panther::util::bench::Table;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Philox::seeded(0);
+
+    // --- RSVD on a decaying spectrum ---------------------------------------
+    println!("== RSVD vs Jacobi SVD (300×200, spectrum σ_i = 0.8^i) ==");
+    let (m, n, full) = (300usize, 200usize, 60usize);
+    let u = qr_thin(&Mat::randn(m, full, &mut rng)).0;
+    let v = qr_thin(&Mat::randn(n, full, &mut rng)).0;
+    let mut core = Mat::zeros(full, full);
+    for i in 0..full {
+        core.set(i, i, 0.8f32.powi(i as i32));
+    }
+    let a = matmul(&matmul(&u, &core), &v.transpose());
+
+    let mut table = Table::new(&["rank", "rsvd err", "optimal err", "ratio", "rsvd ms", "svd ms"]);
+    let t0 = Instant::now();
+    let exact = svd_jacobi(&a);
+    let t_svd = t0.elapsed();
+    for rank in [5usize, 10, 20, 40] {
+        let t0 = Instant::now();
+        let f = rsvd(
+            &a,
+            &RsvdOpts {
+                rank,
+                power_iters: 1,
+                oversample: 8,
+                seed: 3,
+            },
+        );
+        let t_rsvd = t0.elapsed();
+        let err = fro_norm(&a.sub(&f.reconstruct()));
+        let opt = fro_norm(&a.sub(&exact.truncate(rank).reconstruct()));
+        table.row(&[
+            rank.to_string(),
+            format!("{err:.5}"),
+            format!("{opt:.5}"),
+            format!("{:.2}×", err / opt.max(1e-12)),
+            format!("{:.1}", t_rsvd.as_secs_f64() * 1e3),
+            format!("{:.1}", t_svd.as_secs_f64() * 1e3),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // --- CQRRPT on tall matrices -------------------------------------------
+    println!("== CQRRPT vs Householder QR (tall, ill-conditioned) ==");
+    let mut table = Table::new(&["size", "method", "ms", "‖QᵀQ−I‖", "‖QR−AP‖/‖A‖"]);
+    for &(rows, cols) in &[(2000usize, 50usize), (8000, 100)] {
+        // Near-dependent columns: κ ≈ 1e4.
+        let base = Mat::randn(rows, 1, &mut rng);
+        let noise = Mat::randn(rows, cols, &mut rng);
+        let mut a = Mat::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                a.set(i, j, base.get(i, 0) + 1e-4 * noise.get(i, j));
+            }
+        }
+        let t0 = Instant::now();
+        let f = cqrrpt(&a, &CqrrptOpts::default());
+        let t_c = t0.elapsed();
+        let ap = a.permute_cols(&f.perm).slice(0, rows, 0, f.rank);
+        let recon =
+            fro_norm(&matmul(&f.q, &f.r.slice(0, f.rank, 0, f.rank)).sub(&ap)) / fro_norm(&a);
+        table.row(&[
+            format!("{rows}×{cols}"),
+            format!("cqrrpt (rank {})", f.rank),
+            format!("{:.1}", t_c.as_secs_f64() * 1e3),
+            format!("{:.2e}", ortho_error(&f.q)),
+            format!("{recon:.2e}"),
+        ]);
+        let t0 = Instant::now();
+        let (q, r) = qr_thin(&a);
+        let t_h = t0.elapsed();
+        let recon_h = fro_norm(&matmul(&q, &r).sub(&a)) / fro_norm(&a);
+        table.row(&[
+            format!("{rows}×{cols}"),
+            "householder".to_string(),
+            format!("{:.1}", t_h.as_secs_f64() * 1e3),
+            format!("{:.2e}", ortho_error(&q)),
+            format!("{recon_h:.2e}"),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // --- Pivoted Cholesky ----------------------------------------------------
+    println!("== pivoted Cholesky (PSD low-rank compression) ==");
+    let b = Mat::randn(150, 12, &mut rng);
+    let spd = matmul_tn(&b.transpose(), &b.transpose()); // 150×150 rank-12 PSD
+    let mut table = Table::new(&["rank", "rel err", "pivots"]);
+    for rank in [4usize, 8, 12, 16] {
+        let f = pivoted_cholesky(&spd, rank, 0.0);
+        let rec = matmul(&f.l, &f.l.transpose());
+        table.row(&[
+            rank.to_string(),
+            format!("{:.2e}", panther::linalg::rel_error(&rec, &spd)),
+            format!("{:?}", &f.pivots[..f.pivots.len().min(4)]),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // --- Sketched least squares ---------------------------------------------
+    println!("== sketch-and-precondition least squares (Blendenpik-style) ==");
+    let (m, n) = (6000usize, 80usize);
+    let a = Mat::randn(m, n, &mut rng);
+    let x_true: Vec<f32> = (0..n).map(|i| ((i % 7) as f32 - 3.0) / 3.0).collect();
+    let mut b = a.matvec(&x_true);
+    for (i, v) in b.iter_mut().enumerate() {
+        *v += 0.05 * ((i as f32 * 0.37).sin()); // structured noise
+    }
+    let t0 = Instant::now();
+    let sk = sketched_lstsq(&a, &b, &LstsqOpts::default())?;
+    let t_sk = t0.elapsed();
+    let t0 = Instant::now();
+    let ne = lstsq_normal_eq(&a, &b)?;
+    let t_ne = t0.elapsed();
+    let resid = |x: &[f32]| -> f64 {
+        a.matvec(x)
+            .iter()
+            .zip(&b)
+            .map(|(p, q)| ((p - q) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    };
+    println!(
+        "  sketched:   {:>8.1?}  residual {:.5}  ({} LSQR iters)",
+        t_sk,
+        resid(&sk.x),
+        sk.iters
+    );
+    println!(
+        "  normal eq:  {:>8.1?}  residual {:.5}",
+        t_ne,
+        resid(&ne)
+    );
+    println!("decompositions OK");
+    Ok(())
+}

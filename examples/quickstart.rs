@@ -1,0 +1,78 @@
+//! Quickstart: the paper's Listing 1 — drop-in replacement of a dense
+//! linear layer with `SKLinear`, plus the cost model that explains when it
+//! wins.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use panther::linalg::{rel_error, Mat};
+use panther::nn::{linear_cost, sketch_beats_dense, Linear, SKLinear};
+use panther::rng::Philox;
+use panther::util::bench::{Bencher, Table};
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Philox::seeded(0);
+
+    // --- Listing 1: StandardModel vs PantherModel -------------------------
+    // Standard PyTorch model:    nn.Linear(2048, 2048)
+    // Panther-optimized model:   pr.nn.SKLinear(2048, 2048, num_terms=1,
+    //                                           low_rank=16)
+    let d = 2048;
+    println!("== drop-in replacement (Listing 1) ==");
+    let dense = Linear::random(d, d, &mut rng);
+    let sk = SKLinear::from_dense(&dense, /*num_terms=*/ 1, /*low_rank=*/ 16, &mut rng);
+    println!(
+        "dense params: {:>10}   sketched params: {:>9}  ({:.1}% of dense)",
+        dense.param_count(),
+        sk.param_count(),
+        sk.compression_ratio() * 100.0
+    );
+
+    // Same call-site, same shapes:
+    let x = Mat::randn(32, d, &mut rng);
+    let y_dense = dense.forward(&x);
+    let y_sk = sk.forward(&x);
+    assert_eq!(y_dense.shape(), y_sk.shape());
+    println!(
+        "output shapes match: {:?}; sketch relative deviation {:.3} (unbiased, variance ∝ 1/(l·k))",
+        y_sk.shape(),
+        rel_error(&y_sk, &y_dense)
+    );
+
+    // --- Speed: measured, not just modeled --------------------------------
+    println!("\n== measured forward latency (B=32, d=2048) ==");
+    let bench = Bencher::quick();
+    let t_dense = bench.run("dense", || dense.forward(&x));
+    let t_sk = bench.run("sketched l=1 k=16", || sk.forward(&x));
+    println!("{}", t_dense.report());
+    println!("{}", t_sk.report());
+    println!(
+        "speedup: {:.1}× (FLOP model predicts {:.1}×)",
+        t_dense.mean.as_secs_f64() / t_sk.mean.as_secs_f64(),
+        panther::nn::cost::predicted_speedup(d, d, 1, 16)
+    );
+
+    // --- The cost model and the paper's skip rule -------------------------
+    println!("\n== when does sketching win? (the 2lk(din+dout) ≤ din·dout rule) ==");
+    let mut table = Table::new(&["config", "params", "fwd FLOPs/row", "wins?"]);
+    let dense_cost = linear_cost(d, d, 1, None);
+    table.row(&[
+        "dense".into(),
+        dense_cost.params.to_string(),
+        dense_cost.flops.to_string(),
+        "-".into(),
+    ]);
+    for (l, k) in [(1usize, 16usize), (1, 128), (2, 256), (3, 512)] {
+        let c = linear_cost(d, d, 1, Some((l, k)));
+        table.row(&[
+            format!("sk l={l} k={k}"),
+            c.params.to_string(),
+            c.flops.to_string(),
+            sketch_beats_dense(d, d, l, k).to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,3 @@
+"""Panther-RS build-time Python: Pallas kernels (L1), JAX models (L2), and
+the AOT lowering pipeline. Never imported at runtime — `make artifacts`
+runs once and the Rust binary is self-contained afterwards."""

@@ -1,0 +1,272 @@
+"""AOT pipeline: lower every Layer-2 entry point to HLO **text** and write
+`artifacts/manifest.json` describing each artifact's inputs/outputs so the
+Rust runtime binds buffers by name.
+
+HLO text — not `lowered.compile()` / serialized protos — is the interchange
+format: jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Run via `make artifacts`:  python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.performer import performer_attention, performer_vmem_floats
+from .kernels.sk_linear import sk_linear, sk_linear_vmem_floats
+
+# TPU VMEM budget the BlockSpecs must respect (bytes); see DESIGN.md
+# §Hardware-Adaptation. Checked for every kernel configuration we compile.
+VMEM_BUDGET = 16 * 1024 * 1024
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def _flat_names(prefix_tree):
+    """Flatten a pytree of name-strings in the same order JAX flattens the
+    corresponding value tree (dicts sort by key)."""
+    leaves, _ = jax.tree_util.tree_flatten(prefix_tree)
+    return leaves
+
+
+def _name_tree_like(values, prefix):
+    """Build a pytree of dotted names shaped like `values`."""
+    if isinstance(values, dict):
+        return {k: _name_tree_like(v, f"{prefix}.{k}") for k, v in values.items()}
+    return prefix
+
+
+class Builder:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.manifest = {"artifacts": {}, "models": {}, "kernels": {}}
+
+    def lower(self, name, fn, example_args, arg_name_trees):
+        """Lower `fn(*example_args)` and record the artifact.
+
+        arg_name_trees: pytree of names, same structure as example_args.
+        """
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, path), "w") as f:
+            f.write(text)
+        in_names = _flat_names(arg_name_trees)
+        in_shapes = [list(x.shape) for x in jax.tree_util.tree_leaves(example_args)]
+        out = jax.eval_shape(fn, *example_args)
+        out_leaves = jax.tree_util.tree_leaves(out)
+        out_shapes = [list(x.shape) for x in out_leaves]
+        self.manifest["artifacts"][name] = {
+            "path": path,
+            "inputs": [
+                {"name": n, "shape": s} for n, s in zip(in_names, in_shapes)
+            ],
+            "outputs": [{"shape": s} for s in out_shapes],
+        }
+        print(f"  lowered {name}: {len(in_names)} inputs, {len(out_shapes)} outputs, "
+              f"{len(text) / 1e6:.2f} MB hlo")
+        return out
+
+    def save(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+
+
+def build_kernel_artifacts(b: Builder):
+    """Small kernel-level artifacts: runtime smoke tests + micro-benches."""
+    # SKLinear kernel: B=32, d=256, l=2, k=32.
+    batch, d, l, k = 32, 256, 2, 32
+    args = (_spec((batch, d)), _spec((l, d, k)), _spec((l, k, d)), _spec((d,)))
+    names = ("x", "u", "v", "b")
+    b.lower("k_sk_linear", lambda x, u, v, bb: sk_linear(x, u, v, bb), args, names)
+    vmem = sk_linear_vmem_floats(batch, d, d, l, k) * 4
+    assert vmem < VMEM_BUDGET, f"k_sk_linear VMEM {vmem} over budget"
+    b.manifest["kernels"]["k_sk_linear"] = {
+        "vmem_bytes_per_step": vmem,
+        "grid": [l],
+        "config": {"batch": batch, "d_in": d, "d_out": d, "l": l, "k": k},
+    }
+
+    # Performer kernel: h=4, n=128, dh=32, m=64.
+    h, n, dh, m = 4, 128, 32, 64
+    args = (_spec((h, n, dh)), _spec((h, n, dh)), _spec((h, n, dh)), _spec((h, dh, m)))
+    names = ("q", "k", "v", "w")
+    b.lower(
+        "k_performer",
+        lambda q, kk, v, w: performer_attention(q, kk, v, w, kind="softmax"),
+        args,
+        names,
+    )
+    vmem = performer_vmem_floats(n, dh, m) * 4
+    assert vmem < VMEM_BUDGET, f"k_performer VMEM {vmem} over budget"
+    b.manifest["kernels"]["k_performer"] = {
+        "vmem_bytes_per_step": vmem,
+        "grid": [h],
+        "config": {"heads": h, "n": n, "dh": dh, "m": m},
+    }
+
+
+def build_bert_artifacts(b: Builder, cfg: M.BertConfig, lr: float, with_train: bool):
+    """init (+train) + eval artifacts for one BERT variant."""
+    name = cfg.name()
+    params = M.bert_init_params(jax.random.PRNGKey(0), cfg)
+    pspecs = {k: _spec(v.shape) for k, v in params.items()}
+    pnames = _name_tree_like(pspecs, "params")
+    mnames = _name_tree_like(pspecs, "m")
+    vnames = _name_tree_like(pspecs, "v")
+    tok = _spec((cfg.batch, cfg.seq))
+
+    b.lower(f"{name}_init", M.bert_init_fn(cfg), (_spec(()),), ("seed",))
+    if with_train:
+        b.lower(
+            f"{name}_train",
+            M.bert_train_step(cfg, lr),
+            (pspecs, pspecs, pspecs, _spec(()), tok, tok, tok),
+            (pnames, mnames, vnames, "step", "tokens", "labels", "mask"),
+        )
+    b.lower(
+        f"{name}_eval",
+        M.bert_eval_step(cfg),
+        (pspecs, tok, tok, tok),
+        (pnames, "tokens", "labels", "mask"),
+    )
+    if with_train:
+        # Serving path: per-row scoring for the dynamic batcher.
+        b.lower(
+            f"{name}_eval_rows",
+            M.bert_eval_rows(cfg),
+            (pspecs, tok, tok, tok),
+            (pnames, "tokens", "labels", "mask"),
+        )
+    b.manifest["models"][name] = {
+        "family": "bert",
+        "init": f"{name}_init",
+        "train": f"{name}_train" if with_train else None,
+        "eval": f"{name}_eval",
+        "eval_rows": f"{name}_eval_rows" if with_train else None,
+        "param_names": sorted(params.keys()),
+        "param_count": int(sum(v.size for v in params.values())),
+        "config": {
+            "vocab": cfg.vocab,
+            "seq": cfg.seq,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "batch": cfg.batch,
+            "sketch": list(cfg.sketch) if cfg.sketch else None,
+            "lr": lr,
+        },
+    }
+
+
+def build_conv_artifacts(b: Builder, cfg: M.ConvConfig, lr: float):
+    name = cfg.name()
+    params = M.conv_init_params(jax.random.PRNGKey(0), cfg)
+    pspecs = {k: _spec(v.shape) for k, v in params.items()}
+    pnames = _name_tree_like(pspecs, "params")
+    mnames = _name_tree_like(pspecs, "m")
+    vnames = _name_tree_like(pspecs, "v")
+    img = _spec((cfg.batch, cfg.channels * cfg.image * cfg.image))
+    lab = _spec((cfg.batch,))
+
+    b.lower(f"{name}_init", M.conv_init_fn(cfg), (_spec(()),), ("seed",))
+    b.lower(
+        f"{name}_train",
+        M.conv_train_step(cfg, lr),
+        (pspecs, pspecs, pspecs, _spec(()), img, lab),
+        (pnames, mnames, vnames, "step", "images", "labels"),
+    )
+    b.lower(f"{name}_predict", M.conv_predict_fn(cfg), (pspecs, img), (pnames, "images"))
+    b.manifest["models"][name] = {
+        "family": "conv",
+        "init": f"{name}_init",
+        "train": f"{name}_train",
+        "eval": None,
+        "predict": f"{name}_predict",
+        "param_names": sorted(params.keys()),
+        "param_count": int(sum(v.size for v in params.values())),
+        "config": {
+            "image": cfg.image,
+            "channels": cfg.channels,
+            "c1": cfg.c1,
+            "c2": cfg.c2,
+            "kernel": cfg.kernel,
+            "classes": cfg.classes,
+            "batch": cfg.batch,
+            "sketch": list(cfg.sketch) if cfg.sketch else None,
+            "lr": lr,
+        },
+    }
+
+
+# Tuner candidate grid: eval-only artifacts. The SKAutoTuner (Rust) sketches
+# the *trained dense* weights host-side (`SKLinear::from_dense`) and scores
+# each candidate through its eval artifact — so candidates don't need train
+# graphs. (1, 8) is the headline ~75%-reduction configuration and also gets
+# a train graph for the train-from-scratch comparison.
+BERT_CANDIDATES = [(1, 4), (1, 8), (1, 16), (1, 32), (2, 8), (2, 16)]
+BERT_TRAIN_SKETCH = (1, 8)
+CONV_SKETCH = (1, 8)
+# 3e-3: the BERT-mini learns the corpus' Markov structure within a few
+# hundred steps (at 1e-3 it stalls near the unigram entropy for the length
+# of run the examples use).
+LR_BERT = 3e-3
+LR_CONV = 1e-3
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-models", action="store_true",
+                    help="only kernel artifacts (fast smoke builds)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    b = Builder(args.out)
+
+    print("[aot] kernel artifacts")
+    build_kernel_artifacts(b)
+
+    if not args.skip_models:
+        print("[aot] bert dense")
+        build_bert_artifacts(b, M.BertConfig(sketch=None), LR_BERT, with_train=True)
+        print(f"[aot] bert sketched (train) {BERT_TRAIN_SKETCH}")
+        build_bert_artifacts(
+            b, M.BertConfig(sketch=BERT_TRAIN_SKETCH), LR_BERT, with_train=True
+        )
+        for cand in BERT_CANDIDATES:
+            if cand == BERT_TRAIN_SKETCH:
+                continue  # already built with train
+            print(f"[aot] bert candidate {cand}")
+            build_bert_artifacts(b, M.BertConfig(sketch=cand), LR_BERT, with_train=False)
+        print("[aot] conv dense / sketched")
+        build_conv_artifacts(b, M.ConvConfig(sketch=None), LR_CONV)
+        build_conv_artifacts(b, M.ConvConfig(sketch=CONV_SKETCH), LR_CONV)
+
+    b.save()
+    print(f"[aot] wrote manifest with {len(b.manifest['artifacts'])} artifacts to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels and their pure-jnp reference oracles."""
+
+from . import ref  # noqa: F401
+from .performer import performer_attention, performer_vmem_floats  # noqa: F401
+from .sk_conv2d import (  # noqa: F401
+    extract_patches,
+    sk_conv2d_gemm,
+    sk_conv2d_layer,
+    sk_conv2d_vmem_floats,
+)
+from .sk_linear import sk_linear, sk_linear_layer, sk_linear_vmem_floats  # noqa: F401

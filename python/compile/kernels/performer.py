@@ -1,0 +1,86 @@
+"""Layer-1 Pallas kernel: Performer FAVOR+ linear attention (single head).
+
+The memory story of Figure 3 lives here: the kernel never materializes the
+n×n score matrix. Grid = (heads,); per step the VMEM-resident state is the
+two (n, m) feature blocks, the (m, d_h) KV accumulator, and the (m,)
+normalizer — O(n·m), linear in sequence length.
+
+On a real TPU the natural refinement is a second grid axis over sequence
+blocks with the KV state in VMEM scratch (`pl.run_scoped`), which makes
+peak VMEM O(block·m). We keep the per-head formulation because (a)
+interpret-mode is the only executable path on this image and (b) the HLO
+the CPU PJRT runs is identical math either way; the blocked variant's VMEM
+arithmetic is recorded in DESIGN.md §Hardware-Adaptation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _performer_kernel(q_ref, k_ref, v_ref, w_ref, o_ref, *, kind):
+    """One head: FAVOR+ features + linear attention.
+
+    q_ref/k_ref/v_ref: (n, d_h); w_ref: (d_h, m); o_ref: (n, d_h).
+    """
+    # Blocks carry the leading size-1 head axis — index it off.
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    w = w_ref[0]
+    m = w.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(m))
+
+    def features(x):
+        proj = jnp.dot(x, w, preferred_element_type=jnp.float32)
+        if kind == "softmax":
+            sq = jnp.sum(x * x, axis=-1, keepdims=True) / 2.0
+            # Scalar stabilizer — per-row would reweight keys and bias the
+            # estimator (see ref.softmax_features).
+            stab = jnp.max(proj)
+            return jnp.exp(proj - sq - stab) * scale
+        return jnp.maximum(proj, 0.0) * scale
+
+    pq = features(q)  # (n, m)
+    pk = features(k)  # (n, m)
+    kv = jnp.dot(pk.T, v, preferred_element_type=jnp.float32)  # (m, d_h)
+    z = jnp.sum(pk, axis=0)  # (m,)
+    num = jnp.dot(pq, kv, preferred_element_type=jnp.float32)  # (n, d_h)
+    den = jnp.maximum(jnp.dot(pq, z), 1e-9)  # (n,)
+    o_ref[0] = num / den[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "interpret"))
+def performer_attention(q, k, v, w, kind="softmax", interpret=True):
+    """Multi-head FAVOR+ attention.
+
+    Args:
+      q, k, v: (h, n, d_h) — per-head projections, q/k pre-scaled by the
+        caller (1/√d_h).
+      w: (h, d_h, m) random feature projections.
+    Returns:
+      (h, n, d_h)
+    """
+    h, n, dh = q.shape
+    m = w.shape[2]
+    kernel = functools.partial(_performer_kernel, kind=kind)
+    return pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, n, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, dh, m), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, n, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v, w)
+
+
+def performer_vmem_floats(n, dh, m):
+    """Per-head VMEM residency estimate (floats)."""
+    return 3 * n * dh + dh * m + 2 * n * m + m * dh + m + n * dh

@@ -1,0 +1,87 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the ground truth the pytest/hypothesis suite checks the kernels
+against (`assert_allclose`), and they double as readable specifications of
+the math:
+
+- ``sk_linear_ref``   — SKLinear forward: mean of `l` rank-`k` two-stage
+  products (Kasiviswanathan et al. 2017, the paper's [7]).
+- ``sk_matmul_ref``   — the same two-stage product without the bias (used by
+  SKConv2d on im2col patches).
+- ``performer_ref``   — FAVOR+ linear attention (Choromanski et al. 2022,
+  the paper's [3]) for softmax and ReLU feature maps.
+- ``attention_ref``   — exact softmax attention (the dense baseline).
+"""
+
+import jax.numpy as jnp
+
+
+def sk_linear_ref(x, u, v, b):
+    """SKLinear forward.
+
+    Args:
+      x: (B, d_in)
+      u: (l, d_in, k)   per-term left factors
+      v: (l, k, d_out)  per-term right factors
+      b: (d_out,)
+    Returns:
+      (B, d_out): ``(1/l) * sum_j (x @ u[j]) @ v[j] + b``
+    """
+    xu = jnp.einsum("bi,lik->lbk", x, u)
+    y = jnp.einsum("lbk,lko->bo", xu, v) / u.shape[0]
+    return y + b
+
+
+def sk_matmul_ref(x, u, v):
+    """Two-stage sketched matmul without bias: (1/l)·Σ_j (x·U_j)·V_j."""
+    xu = jnp.einsum("bi,lik->lbk", x, u)
+    return jnp.einsum("lbk,lko->bo", xu, v) / u.shape[0]
+
+
+def softmax_features(x, w):
+    """FAVOR+ positive random features for the softmax kernel.
+
+    phi(x) = exp(x·w − ‖x‖²/2 − c) / sqrt(m) with a *scalar* stabilizer
+    c = max(x·w) over the whole block. The stabilizer must be shared by all
+    rows: a per-row stabilizer on the keys would reweight keys and bias the
+    attention estimate (it cancels only for queries, where both numerator
+    and denominator carry the same per-row factor).
+    x: (n, d_h), w: (d_h, m) → (n, m)
+    """
+    m = w.shape[1]
+    proj = x @ w
+    sq = jnp.sum(x * x, axis=-1, keepdims=True) / 2.0
+    stab = jnp.max(proj)
+    return jnp.exp(proj - sq - stab) / jnp.sqrt(m)
+
+
+def relu_features(x, w):
+    """ReLU random features: max(x·w, 0)/sqrt(m)."""
+    m = w.shape[1]
+    return jnp.maximum(x @ w, 0.0) / jnp.sqrt(m)
+
+
+def performer_ref(q, k, v, w, kernel="softmax"):
+    """Single-head FAVOR+ linear attention.
+
+    q, k: (n, d_h) pre-scaled by 1/sqrt(d_h) by the caller.
+    v: (n, d_h); w: (d_h, m) random projection.
+    Returns (n, d_h): phi(Q)·(phi(K)ᵀV) / (phi(Q)·phi(K)ᵀ1).
+    """
+    feat = softmax_features if kernel == "softmax" else relu_features
+    pq = feat(q, w)  # n×m
+    pk = feat(k, w)  # n×m
+    kv = pk.T @ v  # m×d_h — the O(1)-in-n state
+    z = jnp.sum(pk, axis=0)  # m
+    num = pq @ kv  # n×d_h
+    den = pq @ z  # n
+    return num / jnp.maximum(den, 1e-9)[:, None]
+
+
+def attention_ref(q, k, v):
+    """Exact softmax attention for one head; q pre-scaled."""
+    scores = q @ k.T
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return p @ v

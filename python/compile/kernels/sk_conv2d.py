@@ -1,0 +1,119 @@
+"""Layer-1 Pallas kernel: sketched matmul over im2col patches (SKConv2d).
+
+SKConv2d [Kasiviswanathan et al. 2017] = im2col + the same fused two-stage
+sketched product as SKLinear, with `d_in = C_in·k²` and `d_out = C_out`.
+The patch extraction is pure data movement and is done at Layer 2 with
+`jax.lax.conv_general_dilated_patches` (XLA fuses it); the FLOP-heavy
+sketched GEMM is this kernel.
+
+The kernel tiles the *rows* of the patches matrix (B·H_out·W_out rows — the
+large axis for convolutions) so each grid step touches one (rows_tile ×
+d_in) panel: grid = (row_tiles, l). VMEM per step = rows_tile·d_in +
+d_in·k + k·d_out + rows_tile·d_out floats.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sk_conv_kernel(p_ref, u_ref, v_ref, b_ref, o_ref, *, num_terms):
+    """Grid step (i, j): rows tile i × sketch term j.
+
+    p_ref: (T, d_in) — patch rows tile
+    u_ref: (d_in, k); v_ref: (k, d_out); b_ref: (d_out,)
+    o_ref: (T, d_out) — output tile, accumulated over j
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.broadcast_to(b_ref[...], o_ref.shape)
+
+    # u_ref/v_ref blocks carry the leading size-1 term axis — index it off.
+    pu = jnp.dot(p_ref[...], u_ref[0], preferred_element_type=jnp.float32)
+    o_ref[...] += jnp.dot(pu, v_ref[0], preferred_element_type=jnp.float32) / num_terms
+
+
+@functools.partial(jax.jit, static_argnames=("rows_tile", "interpret"))
+def sk_conv2d_gemm(patches, u, v, b, rows_tile=None, interpret=True):
+    """Sketched GEMM over patches.
+
+    Args:
+      patches: (R, d_in) im2col rows, R = B·H_out·W_out
+      u: (l, d_in, k); v: (l, k, d_out); b: (d_out,)
+    Returns:
+      (R, d_out)
+    """
+    rows, d_in = patches.shape
+    num_terms, _, k = u.shape
+    d_out = v.shape[2]
+    if rows_tile is None or rows_tile > rows:
+        rows_tile = rows
+    assert rows % rows_tile == 0, "rows must divide evenly into tiles"
+    kernel = functools.partial(_sk_conv_kernel, num_terms=float(num_terms))
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // rows_tile, num_terms),
+        in_specs=[
+            pl.BlockSpec((rows_tile, d_in), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d_in, k), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, k, d_out), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((d_out,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows_tile, d_out), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d_out), patches.dtype),
+        interpret=interpret,
+    )(patches, u, v, b)
+
+
+def extract_patches(x, kernel, padding):
+    """im2col at Layer 2: x (B, C, H, W) → (B·H_out·W_out, C·k²).
+
+    Column order matches the Rust `nn::conv::im2col` (channel-major, then
+    ky, kx) so weights are interchangeable between the two paths.
+    """
+    b = x.shape[0]
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kernel, kernel),
+        window_strides=(1, 1),
+        padding=[(padding, padding)] * 2,
+    )  # (B, C·k·k, H_out, W_out); feature dim is already channel-major
+    c_kk = patches.shape[1]
+    return patches.transpose(0, 2, 3, 1).reshape(b * patches.shape[2] * patches.shape[3], c_kk)
+
+
+def sk_conv2d_vmem_floats(rows_tile, d_in, d_out, k):
+    """Per-grid-step VMEM residency estimate (floats)."""
+    return rows_tile * d_in + d_in * k + k * d_out + rows_tile * d_out
+
+
+# --- differentiable wrapper (same VJP shape as sk_linear) -------------------
+
+
+@jax.custom_vjp
+def sk_conv2d_layer(patches, u, v, b):
+    """Differentiable sketched conv GEMM: Pallas forward, analytic VJP."""
+    return sk_conv2d_gemm(patches, u, v, b)
+
+
+def _fwd(patches, u, v, b):
+    return sk_conv2d_gemm(patches, u, v, b), (patches, u, v)
+
+
+def _bwd(res, g):
+    x, u, v = res
+    inv_l = 1.0 / u.shape[0]
+    gv = jnp.einsum("bo,lko->lbk", g, v)
+    dx = jnp.einsum("lbk,lik->bi", gv, u) * inv_l
+    du = jnp.einsum("bi,lbk->lik", x, gv) * inv_l
+    xu = jnp.einsum("bi,lik->lbk", x, u)
+    dv = jnp.einsum("lbk,bo->lko", xu, g) * inv_l
+    db = jnp.sum(g, axis=0)
+    return dx, du, dv, db
+
+
+sk_conv2d_layer.defvjp(_fwd, _bwd)

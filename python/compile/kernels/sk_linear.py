@@ -1,0 +1,121 @@
+"""Layer-1 Pallas kernel: fused SKLinear forward.
+
+The paper's pawX backend implements the sketched linear layer with CUDA
+WMMA tiles staged through shared memory. The TPU rethink (DESIGN.md
+§Hardware-Adaptation): both GEMMs of one term — ``(x·U_j)`` and
+``(x·U_j)·V_j`` — are fused into a single kernel body so the rank-``k``
+intermediate (``B × k``, tiny *by construction*: k is the sketch rank)
+lives in VMEM and never round-trips to HBM. The grid iterates over the
+``l`` sketch terms; each step streams one ``U_j``/``V_j`` panel from HBM
+into VMEM (expressed by the BlockSpec index maps) and accumulates into the
+output block, which stays resident across the whole grid.
+
+MXU notes (compile-only on this CPU image — interpret=True at runtime):
+the contraction shapes are (B×d_in)·(d_in×k) and (B×k)·(k×d_out); with
+d_in, d_out multiples of 128 and B a multiple of 8 both map directly onto
+the 128×128 systolic array. VMEM per step = B·d_in + d_in·k + k·d_out +
+B·k + B·d_out floats — the aot pipeline asserts this fits the ~16 MiB VMEM
+budget for every compiled configuration.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sk_linear_kernel(x_ref, u_ref, v_ref, b_ref, o_ref, *, num_terms):
+    """One grid step: accumulate term j's contribution into o_ref.
+
+    Block shapes (leading `l` axis indexed by the grid):
+      x_ref: (B, d_in)  — full x, resident every step
+      u_ref: (d_in, k)  — term j's left factor
+      v_ref: (k, d_out) — term j's right factor
+      b_ref: (d_out,)
+      o_ref: (B, d_out) — accumulated output block
+    """
+    j = pl.program_id(0)
+
+    # Initialize the accumulator on the first step with the bias.
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.broadcast_to(b_ref[...], o_ref.shape)
+
+    # Fused two-stage product; xu (B×k) stays in registers/VMEM scratch.
+    # u_ref/v_ref blocks carry the leading size-1 term axis — index it off.
+    xu = jnp.dot(x_ref[...], u_ref[0], preferred_element_type=jnp.float32)
+    o_ref[...] += jnp.dot(xu, v_ref[0], preferred_element_type=jnp.float32) / num_terms
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sk_linear(x, u, v, b, interpret=True):
+    """SKLinear forward via the fused Pallas kernel.
+
+    Args:
+      x: (B, d_in); u: (l, d_in, k); v: (l, k, d_out); b: (d_out,)
+    Returns:
+      (B, d_out)
+    """
+    num_terms, d_in, k = u.shape
+    batch, _ = x.shape
+    d_out = v.shape[2]
+    kernel = functools.partial(_sk_linear_kernel, num_terms=float(num_terms))
+    return pl.pallas_call(
+        kernel,
+        grid=(num_terms,),
+        in_specs=[
+            pl.BlockSpec((batch, d_in), lambda j: (0, 0)),
+            pl.BlockSpec((1, d_in, k), lambda j: (j, 0, 0)),
+            pl.BlockSpec((1, k, d_out), lambda j: (j, 0, 0)),
+            pl.BlockSpec((d_out,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((batch, d_out), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, d_out), x.dtype),
+        interpret=interpret,
+    )(x, u, v, b)
+
+
+def sk_linear_vmem_floats(batch, d_in, d_out, num_terms, k):
+    """Per-grid-step VMEM residency estimate (floats) — see module docs."""
+    del num_terms  # one term resident per step
+    return batch * d_in + d_in * k + k * d_out + batch * k + batch * d_out
+
+
+# --- differentiable wrapper -------------------------------------------------
+#
+# pallas_call is not natively differentiable; the Layer-2 training graphs
+# need gradients through the sketched layer, so we pair the Pallas forward
+# with a hand-derived VJP (the math is two GEMMs per term, mirroring the
+# forward):
+#
+#   y = (1/l)·Σ_j (x·U_j)·V_j + b
+#   dx   = (1/l)·Σ_j (g·V_jᵀ)·U_jᵀ
+#   dU_j = (1/l)·xᵀ·(g·V_jᵀ)
+#   dV_j = (1/l)·(x·U_j)ᵀ·g
+#   db   = Σ_rows g
+
+
+@jax.custom_vjp
+def sk_linear_layer(x, u, v, b):
+    """Differentiable SKLinear: Pallas forward, analytic VJP backward."""
+    return sk_linear(x, u, v, b)
+
+
+def _sk_linear_fwd(x, u, v, b):
+    return sk_linear(x, u, v, b), (x, u, v)
+
+
+def _sk_linear_bwd(res, g):
+    x, u, v = res
+    inv_l = 1.0 / u.shape[0]
+    gv = jnp.einsum("bo,lko->lbk", g, v)  # g·V_jᵀ per term
+    dx = jnp.einsum("lbk,lik->bi", gv, u) * inv_l
+    du = jnp.einsum("bi,lbk->lik", x, gv) * inv_l
+    xu = jnp.einsum("bi,lik->lbk", x, u)
+    dv = jnp.einsum("lbk,bo->lko", xu, g) * inv_l
+    db = jnp.sum(g, axis=0)
+    return dx, du, dv, db
+
+
+sk_linear_layer.defvjp(_sk_linear_fwd, _sk_linear_bwd)

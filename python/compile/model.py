@@ -1,0 +1,374 @@
+"""Layer-2: JAX model graphs (build-time only; never on the request path).
+
+Two model families, each in a dense and a sketched variant:
+
+- **BERT-mini MLM** — a small BERT-style encoder trained with masked
+  language modeling, reproducing the paper's §4.2 quality experiment
+  ("up to 75% reduction in size while maintaining a comparable MLM loss").
+  The sketched variant replaces every Linear map in the encoder blocks
+  (QKV, attention output, both FFN matrices) with the fused Pallas
+  SKLinear kernel — the same layer set the paper's `SKAutoTuner` targets
+  with `layer_names={"type": "Linear"}`.
+
+- **Conv classifier** — a small CNN for the ResNet/CIFAR-10 case study
+  (§4.2: "controlled size reduction of 30%, accuracy 89% → 86%"). The
+  sketched variant replaces the dominant conv layer with the Pallas
+  SKConv2d kernel.
+
+Everything is parameterized by a config dataclass; `aot.py` lowers
+`init / train_step / eval_step(/predict)` for each variant to HLO text.
+Parameters travel as a flat dict keyed by dotted names; JAX flattens dicts
+in sorted-key order, which `aot.py` records in the manifest so the Rust
+runtime binds buffers by name, not position guessing.
+
+Integer model inputs (tokens, labels) are passed as f32 and cast inside the
+graph — this keeps the Rust↔HLO boundary single-dtype (f32), which the
+`xla` crate handles most robustly.
+"""
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.sk_conv2d import extract_patches, sk_conv2d_layer
+from .kernels.sk_linear import sk_linear_layer
+
+# ---------------------------------------------------------------------------
+# BERT-mini MLM
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BertConfig:
+    """BERT-mini configuration (defaults sized for CPU training)."""
+
+    vocab: int = 256
+    seq: int = 64
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 512
+    batch: int = 16
+    # Sketch config: None = dense; (num_terms, low_rank) sketches every
+    # Linear in the encoder blocks.
+    sketch: Optional[Tuple[int, int]] = None
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+    def name(self):
+        if self.sketch is None:
+            return "bert_dense"
+        l, k = self.sketch
+        return f"bert_sk_{l}_{k}"
+
+    def param_count(self, params=None):
+        """Total parameter count (from shapes)."""
+        p = params if params is not None else bert_init_params(jax.random.PRNGKey(0), self)
+        return sum(int(v.size) for v in p.values())
+
+
+def _linear_params(key, name, d_in, d_out, sketch):
+    """Parameter dict entries for one (possibly sketched) linear map."""
+    if sketch is None:
+        w = jax.random.normal(key, (d_in, d_out), jnp.float32) * (2.0 / d_in) ** 0.5
+        return {f"{name}.w": w, f"{name}.b": jnp.zeros((d_out,), jnp.float32)}
+    l, k = sketch
+    ku, kv = jax.random.split(key)
+    u = jax.random.normal(ku, (l, d_in, k), jnp.float32) * (1.0 / k) ** 0.5
+    v = jax.random.normal(kv, (l, k, d_out), jnp.float32) * (2.0 / d_in) ** 0.5
+    return {
+        f"{name}.u": u,
+        f"{name}.v": v,
+        f"{name}.b": jnp.zeros((d_out,), jnp.float32),
+    }
+
+
+def _apply_linear(params, name, x):
+    """Apply a linear map by name — dense or sketched, decided by the keys."""
+    if f"{name}.w" in params:
+        return x @ params[f"{name}.w"] + params[f"{name}.b"]
+    return sk_linear_layer(x, params[f"{name}.u"], params[f"{name}.v"], params[f"{name}.b"])
+
+
+def bert_init_params(key, cfg: BertConfig):
+    """Initialize the parameter dict (sorted keys = manifest order)."""
+    params = {}
+    keys = jax.random.split(key, 3 + 4 * cfg.n_layers)
+    params["tok_emb"] = jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 0.02
+    params["pos_emb"] = jax.random.normal(keys[1], (cfg.seq, cfg.d_model)) * 0.02
+    for i in range(cfg.n_layers):
+        kq, ko, k1, k2 = jax.random.split(keys[2 + i], 4)
+        blk = f"block{i}"
+        params.update(_linear_params(kq, f"{blk}.qkv", cfg.d_model, 3 * cfg.d_model, cfg.sketch))
+        params.update(_linear_params(ko, f"{blk}.attn_out", cfg.d_model, cfg.d_model, cfg.sketch))
+        params.update(_linear_params(k1, f"{blk}.ff1", cfg.d_model, cfg.d_ff, cfg.sketch))
+        params.update(_linear_params(k2, f"{blk}.ff2", cfg.d_ff, cfg.d_model, cfg.sketch))
+        for ln in ("ln1", "ln2"):
+            params[f"{blk}.{ln}.scale"] = jnp.ones((cfg.d_model,))
+            params[f"{blk}.{ln}.bias"] = jnp.zeros((cfg.d_model,))
+    params["final_ln.scale"] = jnp.ones((cfg.d_model,))
+    params["final_ln.bias"] = jnp.zeros((cfg.d_model,))
+    params["head.w"] = jax.random.normal(keys[-1], (cfg.d_model, cfg.vocab)) * 0.02
+    params["head.b"] = jnp.zeros((cfg.vocab,))
+    return {k: v.astype(jnp.float32) for k, v in params.items()}
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _attention(cfg: BertConfig, params, blk, x):
+    """Exact softmax self-attention; the Q/K/V/out projections are the
+    (possibly sketched) Linear layers."""
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    qkv = _apply_linear(params, f"{blk}.qkv", x.reshape(b * s, d)).reshape(b, s, 3, h, dh)
+    q = qkv[:, :, 0].transpose(0, 2, 1, 3)  # b,h,s,dh
+    k = qkv[:, :, 1].transpose(0, 2, 1, 3)
+    v = qkv[:, :, 2].transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) / jnp.sqrt(jnp.float32(dh))
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhst,bhtd->bhsd", p, v).transpose(0, 2, 1, 3).reshape(b * s, d)
+    return _apply_linear(params, f"{blk}.attn_out", o).reshape(b, s, d)
+
+
+def bert_forward(cfg: BertConfig, params, tokens_f32):
+    """Logits for a token batch. tokens_f32: (B, S) float-encoded ids."""
+    tokens = tokens_f32.astype(jnp.int32)
+    x = jnp.take(params["tok_emb"], tokens, axis=0) + params["pos_emb"][None, :, :]
+    b, s, d = x.shape
+    for i in range(cfg.n_layers):
+        blk = f"block{i}"
+        a = _attention(cfg, params, blk, _layer_norm(
+            x, params[f"{blk}.ln1.scale"], params[f"{blk}.ln1.bias"]))
+        x = x + a
+        hpre = _layer_norm(x, params[f"{blk}.ln2.scale"], params[f"{blk}.ln2.bias"])
+        hidden = _apply_linear(params, f"{blk}.ff1", hpre.reshape(b * s, d))
+        hidden = jax.nn.gelu(hidden)
+        out = _apply_linear(params, f"{blk}.ff2", hidden).reshape(b, s, d)
+        x = x + out
+    x = _layer_norm(x, params["final_ln.scale"], params["final_ln.bias"])
+    return x.reshape(b * s, d) @ params["head.w"] + params["head.b"]
+
+
+def bert_mlm_loss(cfg: BertConfig, params, tokens, labels, mask):
+    """Masked-LM cross entropy averaged over masked positions.
+
+    tokens/labels: (B, S) f32-encoded ids; mask: (B, S) f32 ∈ {0,1} marking
+    the positions that were masked out (loss is computed there only).
+    """
+    logits = bert_forward(cfg, params, tokens)  # (B·S, V)
+    labels_i = labels.astype(jnp.int32).reshape(-1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels_i[:, None], axis=1)[:, 0]
+    m = mask.reshape(-1)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Adam (shared by both model families)
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def adam_update(params, grads, m, v, step, lr):
+    """One Adam step over parameter dicts. `step` is the 1-based f32 step."""
+    b1t = ADAM_B1 ** step
+    b2t = ADAM_B2 ** step
+    new_p, new_m, new_v = {}, {}, {}
+    for key in params:
+        g = grads[key]
+        mk = ADAM_B1 * m[key] + (1 - ADAM_B1) * g
+        vk = ADAM_B2 * v[key] + (1 - ADAM_B2) * g * g
+        mhat = mk / (1 - b1t)
+        vhat = vk / (1 - b2t)
+        new_p[key] = params[key] - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+        new_m[key] = mk
+        new_v[key] = vk
+    return new_p, new_m, new_v
+
+
+def bert_train_step(cfg: BertConfig, lr: float):
+    """Build the jittable train step: (params, m, v, step, tokens, labels,
+    mask) → (params', m', v', loss)."""
+
+    def step_fn(params, m, v, step, tokens, labels, mask):
+        loss, grads = jax.value_and_grad(
+            lambda p: bert_mlm_loss(cfg, p, tokens, labels, mask)
+        )(params)
+        new_p, new_m, new_v = adam_update(params, grads, m, v, step, lr)
+        return new_p, new_m, new_v, loss
+
+    return step_fn
+
+
+def bert_eval_step(cfg: BertConfig):
+    """(params, tokens, labels, mask) → loss."""
+
+    def eval_fn(params, tokens, labels, mask):
+        return bert_mlm_loss(cfg, params, tokens, labels, mask)
+
+    return eval_fn
+
+
+def bert_eval_rows(cfg: BertConfig):
+    """(params, tokens, labels, mask) → per-sequence losses (B,).
+
+    The serving path: the Rust dynamic batcher merges single-sequence
+    scoring requests into one fixed-batch execution and needs per-row
+    results to route back to callers (padded rows carry zero mask and
+    return 0).
+    """
+
+    def eval_fn(params, tokens, labels, mask):
+        logits = bert_forward(cfg, params, tokens)  # (B·S, V)
+        b, s = tokens.shape
+        labels_i = labels.astype(jnp.int32).reshape(-1)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels_i[:, None], axis=1)[:, 0].reshape(b, s)
+        m = mask
+        return jnp.sum(nll * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+
+    return eval_fn
+
+
+def bert_init_fn(cfg: BertConfig):
+    """(seed,) → (params, m, v): init params and zeroed Adam state."""
+
+    def init(seed):
+        key = jax.random.PRNGKey(seed.astype(jnp.int32))
+        params = bert_init_params(key, cfg)
+        zeros = {k: jnp.zeros_like(p) for k, p in params.items()}
+        return params, zeros, {k: jnp.zeros_like(p) for k, p in params.items()}
+
+    _ = init  # (split zeros dicts so they are distinct pytrees)
+
+    def init_fixed(seed):
+        key = jax.random.PRNGKey(seed.astype(jnp.int32))
+        params = bert_init_params(key, cfg)
+        m = {k: jnp.zeros_like(p) for k, p in params.items()}
+        v = {k: jnp.zeros_like(p) for k, p in params.items()}
+        return params, m, v
+
+    return init_fixed
+
+
+# ---------------------------------------------------------------------------
+# Conv classifier (ResNet/CIFAR case-study stand-in)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvConfig:
+    """Small CNN: conv1 → relu → pool → conv2 → relu → pool → fc."""
+
+    image: int = 16
+    channels: int = 3
+    c1: int = 16
+    c2: int = 32
+    kernel: int = 3
+    classes: int = 10
+    batch: int = 32
+    # Sketch for conv2 only (the dominant conv): None = dense.
+    sketch: Optional[Tuple[int, int]] = None
+
+    def name(self):
+        if self.sketch is None:
+            return "conv_dense"
+        l, k = self.sketch
+        return f"conv_sk_{l}_{k}"
+
+    @property
+    def fc_in(self):
+        return self.c2 * (self.image // 4) * (self.image // 4)
+
+
+def conv_init_params(key, cfg: ConvConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d1 = cfg.channels * cfg.kernel * cfg.kernel
+    d2 = cfg.c1 * cfg.kernel * cfg.kernel
+    params = {
+        "conv1.w": jax.random.normal(k1, (d1, cfg.c1)) * (2.0 / d1) ** 0.5,
+        "conv1.b": jnp.zeros((cfg.c1,)),
+        "fc.w": jax.random.normal(k3, (cfg.fc_in, cfg.classes)) * (2.0 / cfg.fc_in) ** 0.5,
+        "fc.b": jnp.zeros((cfg.classes,)),
+    }
+    if cfg.sketch is None:
+        params["conv2.w"] = jax.random.normal(k2, (d2, cfg.c2)) * (2.0 / d2) ** 0.5
+        params["conv2.b"] = jnp.zeros((cfg.c2,))
+    else:
+        l, k = cfg.sketch
+        ku, kv = jax.random.split(k2)
+        params["conv2.u"] = jax.random.normal(ku, (l, d2, k)) * (1.0 / k) ** 0.5
+        params["conv2.v"] = jax.random.normal(kv, (l, k, cfg.c2)) * (2.0 / d2) ** 0.5
+        params["conv2.b"] = jnp.zeros((cfg.c2,))
+    return {k_: v.astype(jnp.float32) for k_, v in params.items()}
+
+
+def _pool2(x):
+    """2×2 max pool on (B, C, H, W)."""
+    b, c, h, w = x.shape
+    return jnp.max(x.reshape(b, c, h // 2, 2, w // 2, 2), axis=(3, 5))
+
+
+def conv_forward(cfg: ConvConfig, params, images):
+    """Logits. images: (B, C·H·W) flattened f32 (matches the Rust layout)."""
+    b = images.shape[0]
+    x = images.reshape(b, cfg.channels, cfg.image, cfg.image)
+    # conv1 (dense GEMM over patches).
+    p1 = extract_patches(x, cfg.kernel, cfg.kernel // 2)
+    y1 = p1 @ params["conv1.w"] + params["conv1.b"]
+    h1 = cfg.image
+    x = jax.nn.relu(y1.reshape(b, h1, h1, cfg.c1).transpose(0, 3, 1, 2))
+    x = _pool2(x)  # (B, c1, H/2, W/2)
+    # conv2 — dense or the Pallas sketched GEMM.
+    p2 = extract_patches(x, cfg.kernel, cfg.kernel // 2)
+    if "conv2.w" in params:
+        y2 = p2 @ params["conv2.w"] + params["conv2.b"]
+    else:
+        y2 = sk_conv2d_layer(p2, params["conv2.u"], params["conv2.v"], params["conv2.b"])
+    h2 = cfg.image // 2
+    x = jax.nn.relu(y2.reshape(b, h2, h2, cfg.c2).transpose(0, 3, 1, 2))
+    x = _pool2(x)  # (B, c2, H/4, W/4)
+    return x.reshape(b, cfg.fc_in) @ params["fc.w"] + params["fc.b"]
+
+
+def conv_loss(cfg: ConvConfig, params, images, labels):
+    logits = conv_forward(cfg, params, images)
+    labels_i = labels.astype(jnp.int32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels_i[:, None], axis=1))
+
+
+def conv_train_step(cfg: ConvConfig, lr: float):
+    def step_fn(params, m, v, step, images, labels):
+        loss, grads = jax.value_and_grad(lambda p: conv_loss(cfg, p, images, labels))(params)
+        new_p, new_m, new_v = adam_update(params, grads, m, v, step, lr)
+        return new_p, new_m, new_v, loss
+
+    return step_fn
+
+
+def conv_predict_fn(cfg: ConvConfig):
+    def predict(params, images):
+        return conv_forward(cfg, params, images)
+
+    return predict
+
+
+def conv_init_fn(cfg: ConvConfig):
+    def init(seed):
+        key = jax.random.PRNGKey(seed.astype(jnp.int32))
+        params = conv_init_params(key, cfg)
+        m = {k: jnp.zeros_like(p) for k, p in params.items()}
+        v = {k: jnp.zeros_like(p) for k, p in params.items()}
+        return params, m, v
+
+    return init

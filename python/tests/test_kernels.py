@@ -1,0 +1,211 @@
+"""Layer-1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+swept over shapes with hypothesis."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    performer_attention,
+    sk_conv2d_gemm,
+    sk_conv2d_layer,
+    sk_linear,
+    sk_linear_layer,
+)
+from compile.kernels.ref import (
+    attention_ref,
+    performer_ref,
+    sk_linear_ref,
+    sk_matmul_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# SKLinear
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 16),
+    d_in=st.integers(1, 48),
+    d_out=st.integers(1, 48),
+    l=st.integers(1, 3),
+    k=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sk_linear_matches_ref(batch, d_in, d_out, l, k, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = rand(keys[0], (batch, d_in))
+    u = rand(keys[1], (l, d_in, k))
+    v = rand(keys[2], (l, k, d_out))
+    b = rand(keys[3], (d_out,))
+    got = sk_linear(x, u, v, b)
+    want = sk_linear_ref(x, u, v, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_sk_linear_zero_input_gives_bias():
+    x = jnp.zeros((4, 8))
+    u = jnp.ones((2, 8, 3))
+    v = jnp.ones((2, 3, 5))
+    b = jnp.arange(5, dtype=jnp.float32)
+    got = sk_linear(x, u, v, b)
+    np.testing.assert_allclose(got, jnp.broadcast_to(b, (4, 5)))
+
+
+def test_sk_linear_term_averaging():
+    # Duplicating the single term must not change the output.
+    key = jax.random.PRNGKey(0)
+    x = rand(key, (5, 6))
+    u1 = rand(jax.random.PRNGKey(1), (1, 6, 2))
+    v1 = rand(jax.random.PRNGKey(2), (1, 2, 7))
+    b = jnp.zeros((7,))
+    once = sk_linear(x, u1, v1, b)
+    twice = sk_linear(
+        x, jnp.concatenate([u1, u1]), jnp.concatenate([v1, v1]), b
+    )
+    np.testing.assert_allclose(once, twice, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_sk_linear_vjp_matches_ref_grads(seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = rand(keys[0], (6, 10))
+    u = rand(keys[1], (2, 10, 4))
+    v = rand(keys[2], (2, 4, 8))
+    b = rand(keys[3], (8,))
+
+    def loss_kernel(x, u, v, b):
+        return jnp.sum(sk_linear_layer(x, u, v, b) ** 2)
+
+    def loss_ref(x, u, v, b):
+        return jnp.sum(sk_linear_ref(x, u, v, b) ** 2)
+
+    g_kernel = jax.grad(loss_kernel, argnums=(0, 1, 2, 3))(x, u, v, b)
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(x, u, v, b)
+    for a, r in zip(g_kernel, g_ref):
+        np.testing.assert_allclose(a, r, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SKConv2d GEMM
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tiles=st.integers(1, 4),
+    rows_tile=st.sampled_from([2, 4, 8]),
+    d_in=st.integers(1, 32),
+    d_out=st.integers(1, 24),
+    l=st.integers(1, 3),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sk_conv2d_gemm_matches_ref(tiles, rows_tile, d_in, d_out, l, k, seed):
+    rows = tiles * rows_tile
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    p = rand(keys[0], (rows, d_in))
+    u = rand(keys[1], (l, d_in, k))
+    v = rand(keys[2], (l, k, d_out))
+    b = jnp.zeros((d_out,))
+    got = sk_conv2d_gemm(p, u, v, b, rows_tile=rows_tile)
+    want = sk_matmul_ref(p, u, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_sk_conv2d_row_tiling_invariance():
+    # Different tilings must agree exactly on the same input.
+    key = jax.random.PRNGKey(3)
+    p = rand(key, (16, 12))
+    u = rand(jax.random.PRNGKey(4), (2, 12, 4))
+    v = rand(jax.random.PRNGKey(5), (2, 4, 6))
+    b = rand(jax.random.PRNGKey(6), (6,))
+    a = sk_conv2d_gemm(p, u, v, b, rows_tile=4)
+    c = sk_conv2d_gemm(p, u, v, b, rows_tile=16)
+    np.testing.assert_allclose(a, c, rtol=1e-5, atol=1e-5)
+
+
+def test_sk_conv2d_vjp_runs():
+    key = jax.random.PRNGKey(7)
+    p = rand(key, (8, 9))
+    u = rand(jax.random.PRNGKey(8), (1, 9, 3))
+    v = rand(jax.random.PRNGKey(9), (1, 3, 5))
+    b = jnp.zeros((5,))
+    g = jax.grad(lambda pp: jnp.sum(sk_conv2d_layer(pp, u, v, b)))(p)
+    assert g.shape == p.shape
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+# ---------------------------------------------------------------------------
+# Performer attention
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(1, 4),
+    n=st.sampled_from([4, 16, 33]),
+    dh=st.sampled_from([4, 8]),
+    m=st.sampled_from([8, 32]),
+    kind=st.sampled_from(["softmax", "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_performer_matches_ref(h, n, dh, m, kind, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = rand(keys[0], (h, n, dh), 0.5)
+    k = rand(keys[1], (h, n, dh), 0.5)
+    v = rand(keys[2], (h, n, dh))
+    w = rand(keys[3], (h, dh, m))
+    got = performer_attention(q, k, v, w, kind=kind)
+    want = jnp.stack(
+        [performer_ref(q[i], k[i], v[i], w[i], kernel=kind) for i in range(h)]
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_performer_approximates_exact_attention():
+    # Monte-Carlo check: with many features the softmax-kernel Performer
+    # should land near exact attention for small-norm inputs.
+    keys = jax.random.split(jax.random.PRNGKey(11), 4)
+    n, dh, m = 12, 8, 4096
+    q = rand(keys[0], (1, n, dh), 0.3)
+    k = rand(keys[1], (1, n, dh), 0.3)
+    v = rand(keys[2], (1, n, dh))
+    w = rand(keys[3], (1, dh, m))
+    approx = performer_attention(q, k, v, w, kind="softmax")[0]
+    exact = attention_ref(q[0], k[0], v[0])
+    err = float(
+        jnp.linalg.norm(approx - exact) / jnp.maximum(jnp.linalg.norm(exact), 1e-9)
+    )
+    assert err < 0.2, f"performer far from exact attention: {err}"
+
+
+def test_performer_outputs_finite_for_large_inputs():
+    # The row stabilizer must prevent overflow for big projections.
+    keys = jax.random.split(jax.random.PRNGKey(12), 4)
+    q = rand(keys[0], (2, 8, 4), 10.0)
+    k = rand(keys[1], (2, 8, 4), 10.0)
+    v = rand(keys[2], (2, 8, 4))
+    w = rand(keys[3], (2, 4, 16))
+    out = performer_attention(q, k, v, w, kind="softmax")
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+if __name__ == "__main__":
+    sys.exit(pytest.main([__file__, "-q"]))

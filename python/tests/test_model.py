@@ -1,0 +1,136 @@
+"""Layer-2 model graph tests: shapes, losses, gradients, sketch accounting."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = M.BertConfig(vocab=32, seq=8, d_model=16, n_layers=1, n_heads=2, d_ff=32, batch=2)
+TINY_SK = M.BertConfig(
+    vocab=32, seq=8, d_model=16, n_layers=1, n_heads=2, d_ff=32, batch=2, sketch=(1, 2)
+)
+
+
+def params_for(cfg):
+    return M.bert_init_params(jax.random.PRNGKey(0), cfg)
+
+
+def batch_for(cfg, key=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    tokens = jax.random.randint(k1, (cfg.batch, cfg.seq), 2, cfg.vocab).astype(jnp.float32)
+    labels = jax.random.randint(k2, (cfg.batch, cfg.seq), 2, cfg.vocab).astype(jnp.float32)
+    mask = jnp.ones((cfg.batch, cfg.seq), jnp.float32)
+    return tokens, labels, mask
+
+
+def test_bert_forward_shapes():
+    p = params_for(TINY)
+    tokens, _, _ = batch_for(TINY)
+    logits = M.bert_forward(TINY, p, tokens)
+    assert logits.shape == (TINY.batch * TINY.seq, TINY.vocab)
+
+
+def test_bert_initial_loss_near_uniform():
+    # At init the MLM loss should sit near ln(vocab).
+    p = params_for(TINY)
+    tokens, labels, mask = batch_for(TINY)
+    loss = float(M.bert_mlm_loss(TINY, p, tokens, labels, mask))
+    assert abs(loss - np.log(TINY.vocab)) < 1.0, loss
+
+
+def test_bert_sketched_param_reduction():
+    dense = sum(v.size for v in params_for(TINY).values())
+    sk = sum(v.size for v in params_for(TINY_SK).values())
+    assert sk < dense
+
+
+def test_bert_headline_config_hits_75pct_reduction():
+    dense = M.BertConfig(sketch=None)
+    sk = M.BertConfig(sketch=M.BERT_TRAIN_SKETCH) if hasattr(M, "BERT_TRAIN_SKETCH") else M.BertConfig(sketch=(1, 8))
+    nd = sum(v.size for v in params_for(dense).values())
+    ns = sum(v.size for v in params_for(sk).values())
+    reduction = 1 - ns / nd
+    assert reduction > 0.70, f"reduction {reduction:.3f} below the paper's ~75%"
+
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_SK], ids=["dense", "sketched"])
+def test_bert_train_step_reduces_loss_on_fixed_batch(cfg):
+    # Repeatedly stepping on ONE batch must drive its loss down (overfit).
+    p = params_for(cfg)
+    m = {k: jnp.zeros_like(v) for k, v in p.items()}
+    v = {k: jnp.zeros_like(vv) for k, vv in p.items()}
+    tokens, labels, mask = batch_for(cfg)
+    step = jax.jit(M.bert_train_step(cfg, 1e-2))
+    first = None
+    loss = None
+    for i in range(30):
+        p, m, v, loss = step(p, m, v, jnp.float32(i + 1), tokens, labels, mask)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first * 0.8, f"{first} → {float(loss)}"
+
+
+def test_bert_mask_zero_positions_do_not_contribute():
+    p = params_for(TINY)
+    tokens, labels, _ = batch_for(TINY)
+    # All-zero mask → loss guard returns 0.
+    loss = float(M.bert_mlm_loss(TINY, p, tokens, labels, jnp.zeros_like(tokens)))
+    assert loss == 0.0
+
+
+CONV = M.ConvConfig(image=8, c1=4, c2=8, batch=4)
+CONV_SK = M.ConvConfig(image=8, c1=4, c2=8, batch=4, sketch=(1, 2))
+
+
+@pytest.mark.parametrize("cfg", [CONV, CONV_SK], ids=["dense", "sketched"])
+def test_conv_forward_and_train(cfg):
+    p = M.conv_init_params(jax.random.PRNGKey(0), cfg)
+    images = jax.random.normal(jax.random.PRNGKey(1), (cfg.batch, 3 * cfg.image**2))
+    labels = jnp.zeros((cfg.batch,), jnp.float32)
+    logits = M.conv_forward(cfg, p, images)
+    assert logits.shape == (cfg.batch, cfg.classes)
+    m = {k: jnp.zeros_like(v) for k, v in p.items()}
+    v = {k: jnp.zeros_like(vv) for k, vv in p.items()}
+    step = jax.jit(M.conv_train_step(cfg, 1e-2))
+    loss0 = None
+    loss = None
+    for i in range(20):
+        p, m, v, loss = step(p, m, v, jnp.float32(i + 1), images, labels)
+        if loss0 is None:
+            loss0 = float(loss)
+    assert float(loss) < loss0
+
+
+def test_conv_sketch_reduction_near_30pct():
+    nd = sum(v.size for v in M.conv_init_params(jax.random.PRNGKey(0), M.ConvConfig()).values())
+    ns = sum(
+        v.size
+        for v in M.conv_init_params(jax.random.PRNGKey(0), M.ConvConfig(sketch=(1, 8))).values()
+    )
+    reduction = 1 - ns / nd
+    assert 0.2 < reduction < 0.45, f"conv reduction {reduction:.3f} not ≈30%"
+
+
+def test_adam_matches_reference_formula():
+    p = {"w": jnp.array([1.0, 2.0])}
+    g = {"w": jnp.array([0.5, -0.5])}
+    m = {"w": jnp.zeros(2)}
+    v = {"w": jnp.zeros(2)}
+    new_p, new_m, new_v = M.adam_update(p, g, m, v, jnp.float32(1), 0.1)
+    # step 1: mhat = g, vhat = g², update = lr·g/(|g|+eps) = lr·sign(g).
+    np.testing.assert_allclose(new_p["w"], p["w"] - 0.1 * np.sign(g["w"]), rtol=1e-4)
+    np.testing.assert_allclose(new_m["w"], 0.1 * g["w"], rtol=1e-5)
+    np.testing.assert_allclose(new_v["w"], 0.001 * g["w"] ** 2, rtol=1e-3)
+
+
+if __name__ == "__main__":
+    sys.exit(pytest.main([__file__, "-q"]))

@@ -1,0 +1,168 @@
+//! Decomposition benchmarks: RSVD and CQRRPT vs deterministic baselines.
+//!
+//! Not a numbered figure in the paper (the decompositions are §2 library
+//! features), but the RandNLA literature the paper builds on — [9] for
+//! CQRRPT, Halko et al. for RSVD — reports exactly these two tables:
+//! runtime scaling on tall matrices and error/orthogonality quality.
+
+use panther::decomp::{
+    cqrrpt, lstsq_normal_eq, rangefinder, rsvd, sketched_lstsq, CqrrptOpts, LstsqOpts,
+    RangefinderOpts, RsvdOpts,
+};
+use panther::linalg::{fro_norm, matmul, matmul_tn, ortho_error, qr_thin, svd_jacobi, Mat};
+use panther::rng::Philox;
+use panther::util::bench::{Bencher, Table};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let bench = if quick {
+        Bencher::quick()
+    } else {
+        Bencher {
+            min_samples: 5,
+            max_samples: 20,
+            target_time: std::time::Duration::from_secs(2),
+            warmup: std::time::Duration::from_millis(100),
+        }
+    };
+    let mut rng = Philox::seeded(1);
+
+    // --- CQRRPT runtime scaling on tall matrices ---------------------------
+    println!("# CQRRPT vs Householder QR — tall matrices (runtime + quality)\n");
+    let sizes: &[(usize, usize)] = if quick {
+        &[(2000, 50)]
+    } else {
+        &[(2000, 50), (8000, 100), (20000, 100)]
+    };
+    let mut table = Table::new(&[
+        "size", "cqrrpt ms", "householder ms", "speedup", "cqrrpt ‖QᵀQ−I‖", "hh ‖QᵀQ−I‖",
+    ]);
+    for &(m, n) in sizes {
+        let a = Mat::randn(m, n, &mut rng);
+        let t_c = bench.run(&format!("cqrrpt {m}x{n}"), || {
+            cqrrpt(&a, &CqrrptOpts::default())
+        });
+        let t_h = bench.run(&format!("householder {m}x{n}"), || qr_thin(&a));
+        let f = cqrrpt(&a, &CqrrptOpts::default());
+        let (q, _) = qr_thin(&a);
+        table.row(&[
+            format!("{m}×{n}"),
+            format!("{:.1}", t_c.mean_ms()),
+            format!("{:.1}", t_h.mean_ms()),
+            format!("{:.2}×", t_h.mean_ms() / t_c.mean_ms()),
+            format!("{:.2e}", ortho_error(&f.q)),
+            format!("{:.2e}", ortho_error(&q)),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // --- RSVD runtime + error vs exact SVD ---------------------------------
+    println!("# RSVD vs Jacobi SVD — runtime and near-optimality\n");
+    let (m, n) = if quick { (200, 120) } else { (500, 300) };
+    let a = Mat::randn(m, n, &mut rng);
+    let t_svd = bench.run("jacobi svd", || svd_jacobi(&a));
+    let exact = svd_jacobi(&a);
+    let mut table = Table::new(&["rank", "rsvd ms", "svd ms", "speedup", "err ratio vs optimal"]);
+    for &rank in &[8usize, 16, 32] {
+        let opts = RsvdOpts {
+            rank,
+            power_iters: 1,
+            oversample: 8,
+            seed: 9,
+        };
+        let t_r = bench.run(&format!("rsvd k={rank}"), || rsvd(&a, &opts));
+        let f = rsvd(&a, &opts);
+        let err = fro_norm(&a.sub(&f.reconstruct()));
+        let opt = fro_norm(&a.sub(&exact.truncate(rank).reconstruct()));
+        table.row(&[
+            rank.to_string(),
+            format!("{:.1}", t_r.mean_ms()),
+            format!("{:.1}", t_svd.mean_ms()),
+            format!("{:.1}×", t_svd.mean_ms() / t_r.mean_ms()),
+            format!("{:.3}×", err / opt.max(1e-12)),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // --- Ablation: power iterations in the rangefinder ---------------------
+    println!("# Ablation: rangefinder power iterations (slow-decay spectrum)\n");
+    let (m2, n2, full) = (300usize, 200usize, 100usize);
+    let u = qr_thin(&Mat::randn(m2, full, &mut rng)).0;
+    let v = qr_thin(&Mat::randn(n2, full, &mut rng)).0;
+    let mut core = Mat::zeros(full, full);
+    for i in 0..full {
+        core.set(i, i, 1.0 / (i + 1) as f32);
+    }
+    let slow = matmul(&matmul(&u, &core), &v.transpose());
+    let mut table = Table::new(&["power iters", "ms", "capture error"]);
+    for q_iters in 0..=3usize {
+        let opts = RangefinderOpts {
+            rank: 16,
+            oversample: 8,
+            power_iters: q_iters,
+            seed: 5,
+        };
+        let t = bench.run(&format!("rangefinder q={q_iters}"), || {
+            rangefinder(&slow, &opts)
+        });
+        let qb = rangefinder(&slow, &opts);
+        let resid = {
+            let proj = matmul(&qb, &matmul_tn(&qb, &slow));
+            fro_norm(&slow.sub(&proj)) / fro_norm(&slow)
+        };
+        table.row(&[
+            q_iters.to_string(),
+            format!("{:.1}", t.mean_ms()),
+            format!("{resid:.4}"),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // --- Sketched least squares vs normal equations -------------------------
+    println!("# Sketch-and-precondition least squares vs normal equations\n");
+    let mut table = Table::new(&["size", "sketched ms", "normal-eq ms", "speedup", "lsqr iters"]);
+    let ls_sizes: &[(usize, usize)] = if quick {
+        &[(4000, 60)]
+    } else {
+        &[(4000, 60), (16000, 120)]
+    };
+    for &(m, n) in ls_sizes {
+        let a = Mat::randn(m, n, &mut rng);
+        let bvec: Vec<f32> = a.matvec(&vec![1.0f32; n]);
+        let t_s = bench.run(&format!("sketched lstsq {m}x{n}"), || {
+            sketched_lstsq(&a, &bvec, &LstsqOpts::default()).unwrap()
+        });
+        let t_n = bench.run(&format!("normal eq {m}x{n}"), || {
+            lstsq_normal_eq(&a, &bvec).unwrap()
+        });
+        let r = sketched_lstsq(&a, &bvec, &LstsqOpts::default()).unwrap();
+        table.row(&[
+            format!("{m}×{n}"),
+            format!("{:.1}", t_s.mean_ms()),
+            format!("{:.1}", t_n.mean_ms()),
+            format!("{:.2}×", t_n.mean_ms() / t_s.mean_ms()),
+            r.iters.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // --- Ablation: CholeskyQR2 refinement in CQRRPT --------------------------
+    println!("# Ablation: CQRRPT CholeskyQR2 refinement\n");
+    let a = Mat::randn(8000, 80, &mut rng);
+    let mut table = Table::new(&["variant", "ms", "‖QᵀQ−I‖"]);
+    for refine in [false, true] {
+        let opts = CqrrptOpts {
+            refine,
+            ..Default::default()
+        };
+        let t = bench.run(&format!("cqrrpt refine={refine}"), || cqrrpt(&a, &opts));
+        let f = cqrrpt(&a, &opts);
+        table.row(&[
+            if refine { "choleskyqr2" } else { "single pass" }.to_string(),
+            format!("{:.1}", t.mean_ms()),
+            format!("{:.2e}", ortho_error(&f.q)),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("decomp done");
+}

@@ -1,0 +1,170 @@
+//! End-to-end runtime benchmarks over the AOT artifacts: per-step latency
+//! of the dense vs sketched BERT train/eval executables, kernel-artifact
+//! latency, and coordinator round-trip overhead.
+//!
+//! This is the §4.2-adjacent "what do you actually pay per step" table —
+//! the figure benches isolate layer math; this one times the full compiled
+//! HLO through PJRT, exactly what production inference/training would run.
+
+use panther::coordinator::RuntimeServer;
+use panther::data::TextCorpus;
+use panther::rng::Philox;
+use panther::runtime::{HostTensor, Runtime};
+use panther::train::{BertTrainer, ModelState};
+use panther::util::bench::{Bencher, Table};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts =
+        std::env::var("PANTHER_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        println!("artifacts/ not built — run `make artifacts` first; skipping e2e bench");
+        return Ok(());
+    }
+    let bench = Bencher::quick();
+    let mut rng = Philox::seeded(3);
+
+    // --- kernel artifacts ---------------------------------------------------
+    println!("# Kernel artifact latency (PJRT CPU)\n");
+    let mut rt = Runtime::open(&artifacts)?;
+    let mut table = Table::new(&["artifact", "mean", "median"]);
+    for name in ["k_sk_linear", "k_performer"] {
+        let spec = rt.manifest().artifact(name).unwrap().clone();
+        let inputs: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .map(|s| HostTensor::randn(&s.shape, 0.5, &mut rng))
+            .collect();
+        rt.execute(name, &inputs)?; // compile outside the timer
+        let t = bench.run(name, || rt.execute(name, &inputs).unwrap());
+        table.row(&[
+            name.to_string(),
+            format!("{:.3} ms", t.mean_ms()),
+            format!("{:.3} ms", t.median_ms()),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // --- train/eval step latency: dense vs sketched -------------------------
+    println!("# BERT train/eval step latency: dense vs sketched (batch from manifest)\n");
+    let corpus = TextCorpus::generate(256, 50_000, 5);
+    let mut table = Table::new(&["model", "params", "train ms/step", "eval ms/batch"]);
+    for model in ["bert_dense", "bert_sk_1_8"] {
+        let spec = rt.manifest().model(model).unwrap().clone();
+        let mut state = ModelState::init(&mut rt, model, 0.0)?;
+        let mut data_rng = Philox::seeded(9);
+        let (batch, seq) = (
+            spec.config_usize("batch").unwrap(),
+            spec.config_usize("seq").unwrap(),
+        );
+        let mb = corpus.mlm_batch(batch, seq, &mut data_rng);
+        let train_art = spec.train.clone().unwrap();
+        // Warm both executables.
+        {
+            let mut tr = BertTrainer::new(&mut rt, &corpus);
+            tr.step(&mut state, &train_art, &mb)?;
+        }
+        let t_train = {
+            let mut tr = BertTrainer::new(&mut rt, &corpus);
+            bench.run(&format!("{model} train"), || {
+                tr.step(&mut state, &train_art, &mb).unwrap()
+            })
+        };
+        let t_eval = {
+            let mut tr = BertTrainer::new(&mut rt, &corpus);
+            let mut erng = Philox::seeded(10);
+            bench.run(&format!("{model} eval"), || {
+                tr.evaluate(&state, 1, &mut erng).unwrap()
+            })
+        };
+        table.row(&[
+            model.to_string(),
+            spec.param_count.to_string(),
+            format!("{:.2}", t_train.mean_ms()),
+            format!("{:.2}", t_eval.mean_ms()),
+        ]);
+    }
+    println!("{}", table.render());
+    drop(rt);
+
+    // --- coordinator round-trip overhead -------------------------------------
+    println!("# Coordinator RPC overhead (request → runtime thread → reply)\n");
+    let server = RuntimeServer::start(&artifacts)?;
+    let h = server.handle();
+    let spec = h.manifest().artifact("k_sk_linear").unwrap().clone();
+    let inputs: Vec<HostTensor> = spec
+        .inputs
+        .iter()
+        .map(|s| HostTensor::zeros(&s.shape))
+        .collect();
+    h.execute("k_sk_linear", inputs.clone())?; // warm
+    let t_rpc = bench.run("coordinator rpc", || {
+        h.execute("k_sk_linear", inputs.clone()).unwrap()
+    });
+    println!("{}", t_rpc.report());
+    println!(
+        "(direct runtime call above was ~the kernel latency; the difference is channel + clone overhead)\n"
+    );
+
+    // --- dynamic batcher throughput ------------------------------------------
+    // Serving-path table: requests/s scoring single sequences, unbatched
+    // (one exec per request) vs coalesced through the DynamicBatcher.
+    if server
+        .handle()
+        .manifest()
+        .model("bert_dense")
+        .and_then(|m| m.eval_rows.clone())
+        .is_some()
+    {
+        println!("# Dynamic batcher: single-sequence MLM scoring throughput\n");
+        let mut rt2 = Runtime::open(&artifacts)?;
+        let params = panther::train::ModelState::init(&mut rt2, "bert_dense", 0.0)?.params;
+        drop(rt2);
+        fn mk_req(seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+            let seq = 64usize;
+            let mut rng = Philox::seeded(seed);
+            use panther::rng::Rng;
+            let tokens: Vec<f32> = (0..seq)
+                .map(|_| (2 + rng.next_below(254)) as f32)
+                .collect();
+            let mut mask = vec![0f32; seq];
+            for m in mask.iter_mut().take(16) {
+                *m = 1.0;
+            }
+            (tokens.clone(), tokens, mask)
+        }
+        let n_requests = 64usize;
+        // Batched path.
+        let batcher = panther::coordinator::DynamicBatcher::start(
+            server.handle(),
+            "bert_dense",
+            params,
+            std::time::Duration::from_millis(20),
+        )?;
+        let t0 = std::time::Instant::now();
+        let workers: Vec<_> = (0..n_requests)
+            .map(|i| {
+                let h = batcher.handle();
+                std::thread::spawn(move || {
+                    let (t, l, m) = mk_req(i as u64);
+                    h.score(&t, &l, &m).unwrap()
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().unwrap();
+        }
+        let batched = t0.elapsed();
+        let occupancy = batcher.handle().stats().mean_occupancy();
+        println!(
+            "batched:   {n_requests} requests in {:.1?} ({:.1} req/s, mean occupancy {:.1} rows/exec)",
+            batched,
+            n_requests as f64 / batched.as_secs_f64(),
+            occupancy
+        );
+        println!(
+            "(each execution scores a fixed 16-row batch; unbatched serving would pay one\n full execution per request — occupancy is the measured coalescing factor)\n"
+        );
+    }
+    println!("e2e_runtime done");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Figure 1 reproduction: forward-pass runtime of SKLinear vs dense Linear.
+//!
+//! Paper setup: d_in = d_out = 8192, l ∈ {1,2,3}, k ∈ {16,…,512}, mean over
+//! 200 trials on T4/P100 GPUs; configurations violating the skip rule
+//! `2lk(d_in+d_out) > d_in·d_out` are skipped.
+//!
+//! This CPU reproduction keeps the protocol but scales d to
+//! {1024, 2048, 4096} (the environment has no GPU; both sides run on the
+//! same Rust GEMM substrate, so the *relative* curves — who wins at which
+//! (l,k), where the crossover sits — are the reproduced object).
+
+use panther::linalg::Mat;
+use panther::nn::cost::predicted_speedup;
+use panther::nn::{sketch_beats_dense, Linear, SKLinear};
+use panther::rng::Philox;
+use panther::util::bench::{Bencher, Table};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let batch = 32usize;
+    let dims: &[usize] = if quick { &[1024] } else { &[1024, 2048, 4096] };
+    let terms: &[usize] = &[1, 2, 3];
+    let ranks: &[usize] = &[16, 32, 64, 128, 256, 512];
+    let bench = if quick {
+        Bencher::quick()
+    } else {
+        Bencher::paper()
+    };
+
+    println!("# Figure 1: SKLinear forward runtime vs dense (batch {batch})");
+    println!("# paper: d=8192 on T4/P100; here d∈{dims:?} on CPU, same-substrate comparison\n");
+    let mut rng = Philox::seeded(42);
+    for &d in dims {
+        let dense = Linear::random(d, d, &mut rng);
+        let x = Mat::randn(batch, d, &mut rng);
+        let t_dense = bench.run(&format!("dense d={d}"), || dense.forward(&x));
+        println!("== d_in = d_out = {d} ==");
+        println!("dense: {:.3} ms", t_dense.mean_ms());
+        let mut table = Table::new(&["l", "k", "ms", "speedup", "flop-model", "params vs dense"]);
+        for &l in terms {
+            for &k in ranks {
+                if !sketch_beats_dense(d, d, l, k) {
+                    table.row(&[
+                        l.to_string(),
+                        k.to_string(),
+                        "skipped".into(),
+                        "-".into(),
+                        "-".into(),
+                        "(2lk(din+dout) > din·dout)".into(),
+                    ]);
+                    continue;
+                }
+                let sk = SKLinear::from_dense(&dense, l, k, &mut rng);
+                let t = bench.run(&format!("sk d={d} l={l} k={k}"), || sk.forward(&x));
+                table.row(&[
+                    l.to_string(),
+                    k.to_string(),
+                    format!("{:.3}", t.mean_ms()),
+                    format!("{:.2}×", t_dense.mean_ms() / t.mean_ms()),
+                    format!("{:.2}×", predicted_speedup(d, d, l, k)),
+                    format!("{:.1}%", sk.compression_ratio() * 100.0),
+                ]);
+            }
+        }
+        println!("{}", table.render());
+    }
+    println!("fig1_sklinear done");
+}

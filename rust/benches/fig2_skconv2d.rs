@@ -1,0 +1,83 @@
+//! Figure 2 reproduction: forward-pass runtime of SKConv2d vs dense Conv2d.
+//!
+//! Paper setup: input/output channels 256×2048, 9×9 kernel, 64×64 image,
+//! l ∈ {1,2,3}, k ∈ {8,16,32}. Dense convolution at those sizes is a
+//! 256·81 × 2048 GEMM over 64²·B patch rows — CPU-scaled here to channels
+//! 64×512 and a 32×32 image (paper shapes with `--paper`, slow on CPU).
+//! Both paths share the im2col, so the measured difference is exactly the
+//! sketched-vs-dense GEMM — the object of the figure.
+
+use panther::linalg::Mat;
+use panther::nn::conv::{im2col, Conv2d, ConvShape, SKConv2d};
+use panther::nn::cost::sketch_beats_dense;
+use panther::rng::Philox;
+use panther::util::bench::{Bencher, Table};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let paper = std::env::args().any(|a| a == "--paper");
+    let (c_in, c_out, kernel, image) = if paper {
+        (256usize, 2048usize, 9usize, 64usize)
+    } else if quick {
+        (32, 128, 5, 16)
+    } else {
+        (64, 512, 9, 32)
+    };
+    let batch = 1usize;
+    let shape = ConvShape {
+        c_in,
+        c_out,
+        kernel,
+        image,
+        padding: kernel / 2,
+    };
+    let bench = if quick {
+        Bencher::quick()
+    } else {
+        Bencher::paper()
+    };
+    let d_in = shape.patch_dim();
+
+    println!("# Figure 2: SKConv2d forward runtime vs dense Conv2d");
+    println!(
+        "# channels {c_in}→{c_out}, kernel {kernel}×{kernel}, image {image}×{image} (paper: 256→2048, 9, 64)\n"
+    );
+    let mut rng = Philox::seeded(7);
+    let dense = Conv2d::random(shape, &mut rng);
+    let x = Mat::randn(batch, c_in * image * image, &mut rng);
+    // Shared im2col (both sides pay it; measured separately below).
+    let t_im2col = bench.run("im2col", || im2col(&x, &shape));
+    let cols = im2col(&x, &shape);
+    let t_dense = bench.run("dense conv gemm", || dense.forward_cols(&cols));
+    println!(
+        "im2col: {:.3} ms; dense GEMM: {:.3} ms (patch dim {d_in})",
+        t_im2col.mean_ms(),
+        t_dense.mean_ms()
+    );
+    let mut table = Table::new(&["l", "k", "gemm ms", "speedup", "params vs dense"]);
+    for &l in &[1usize, 2, 3] {
+        for &k in &[8usize, 16, 32] {
+            if !sketch_beats_dense(d_in, c_out, l, k) {
+                table.row(&[
+                    l.to_string(),
+                    k.to_string(),
+                    "skipped".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                continue;
+            }
+            let sk = SKConv2d::from_dense(&dense, l, k, &mut rng);
+            let t = bench.run(&format!("sk l={l} k={k}"), || sk.forward_cols(&cols));
+            table.row(&[
+                l.to_string(),
+                k.to_string(),
+                format!("{:.3}", t.mean_ms()),
+                format!("{:.2}×", t_dense.mean_ms() / t.mean_ms()),
+                format!("{:.1}%", sk.compression_ratio() * 100.0),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!("fig2_skconv2d done");
+}

@@ -1,0 +1,86 @@
+//! Figure 3 reproduction: peak forward memory of Performer linear attention
+//! vs exact multi-head attention.
+//!
+//! Paper setup: embed dim 512, softmax kernel, sequence lengths up to 8192,
+//! heads ∈ {4,8,16}, random features ∈ {64,128,256}; "x" markers where
+//! PyTorch OOMs on the GPU.
+//!
+//! Reproduction: both attention implementations route every activation
+//! through the accounting allocator (`util::memtrack`); a device-memory
+//! budget turns would-be OOMs into clean "x" rows. Peak bytes are measured,
+//! not modeled (the analytic model in `nn::cost` is cross-checked against
+//! the measurement here).
+
+use panther::linalg::Mat;
+use panther::nn::attention::{
+    AttnWeights, KernelKind, MultiHeadAttention, RandMultiHeadAttention,
+};
+use panther::nn::cost::{dense_attention_mem, performer_attention_mem};
+use panther::rng::Philox;
+use panther::util::bench::Table;
+use panther::util::memtrack::MemTracker;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let d = 512usize;
+    // 4 GiB "device" budget (a T4 has 16 GiB, but it also holds weights,
+    // optimizer state and framework overhead; the crossover shape is what
+    // matters).
+    let budget: u64 = 4 * 1024 * 1024 * 1024;
+    let seqs: &[usize] = if quick {
+        &[512, 2048]
+    } else {
+        &[512, 1024, 2048, 4096, 8192]
+    };
+    let heads: &[usize] = if quick { &[8] } else { &[4, 8, 16] };
+    let features: &[usize] = if quick { &[128] } else { &[64, 128, 256] };
+
+    println!("# Figure 3: peak forward memory, Performer vs dense MHA (embed {d}, softmax kernel)");
+    println!("# budget {} — rows marked 'x' exceed it (the paper's OOM markers)\n",
+        panther::util::human_bytes(budget));
+    let mut rng = Philox::seeded(11);
+    let mut table = Table::new(&[
+        "seq", "heads", "m", "dense peak", "dense", "performer peak", "performer", "model dense", "model perf",
+    ]);
+    for &h in heads {
+        let weights = AttnWeights::random(d, h, &mut rng);
+        let dense = MultiHeadAttention::new(weights.clone());
+        for &n in seqs {
+            let x = Mat::randn(n, d, &mut rng);
+            let mem_d = MemTracker::with_budget(budget);
+            let dense_res = dense.forward(&x, &mem_d);
+            let (dense_peak, dense_status) = match dense_res {
+                Ok(_) => (
+                    panther::util::human_bytes(mem_d.peak_bytes()),
+                    "ok".to_string(),
+                ),
+                Err(_) => ("-".into(), "x".to_string()),
+            };
+            for &m in features {
+                let perf = RandMultiHeadAttention::new(weights.clone(), m, KernelKind::Softmax, 3);
+                let mem_p = MemTracker::with_budget(budget);
+                let perf_res = perf.forward(&x, &mem_p);
+                let (perf_peak, perf_status) = match perf_res {
+                    Ok(_) => (
+                        panther::util::human_bytes(mem_p.peak_bytes()),
+                        "ok".to_string(),
+                    ),
+                    Err(_) => ("-".into(), "x".to_string()),
+                };
+                table.row(&[
+                    n.to_string(),
+                    h.to_string(),
+                    m.to_string(),
+                    dense_peak.clone(),
+                    dense_status.clone(),
+                    perf_peak,
+                    perf_status,
+                    panther::util::human_bytes(dense_attention_mem(n, d, h)),
+                    panther::util::human_bytes(performer_attention_mem(n, d, h, m)),
+                ]);
+            }
+        }
+    }
+    println!("{}", table.render());
+    println!("fig3_attention_mem done");
+}

@@ -1,0 +1,77 @@
+//! Tuner-engine benchmarks: sampler throughput and study overhead — the
+//! coordinator-side cost of SKAutoTuner (§2.2). The paper's pitch is that
+//! the tuner "automates the trade-off analysis"; this bench shows the
+//! automation itself is cheap relative to a single candidate evaluation
+//! (which costs milliseconds-to-seconds of model execution).
+
+use panther::tuner::{
+    Direction, GridSampler, MedianPruner, NoPruner, RandomSampler, Sampler, SearchSpace, Study,
+    TpeSampler,
+};
+use panther::util::bench::{Bencher, Table};
+
+fn drive(study: &mut Study, trials: usize) {
+    for i in 0..trials {
+        let mut t = study.ask();
+        // Synthetic objective over the sketch space.
+        let l = t.params["num_terms"].as_f64().unwrap();
+        let k = t.params["low_rank"].as_f64().unwrap();
+        let value = (k - 24.0).abs() + 4.0 * (l - 1.0);
+        study.tell(&mut t, value, i % 7 != 0);
+    }
+}
+
+fn main() {
+    let bench = Bencher::quick();
+    println!("# Tuner engine overhead\n");
+    let mut table = Table::new(&["sampler", "100-trial study", "per trial"]);
+    for name in ["random", "grid", "tpe"] {
+        let t = bench.run(name, || {
+            let sampler: Box<dyn Sampler> = match name {
+                "random" => Box::new(RandomSampler::new(1)),
+                "grid" => Box::new(GridSampler::new(1)),
+                _ => Box::new(TpeSampler::new(1)),
+            };
+            let mut study = Study::new(
+                "bench",
+                Direction::Minimize,
+                SearchSpace::auto_sketch(64),
+                sampler,
+                Box::new(NoPruner),
+            );
+            drive(&mut study, 100);
+            study.best_value()
+        });
+        table.row(&[
+            name.to_string(),
+            format!("{:.3} ms", t.mean_ms()),
+            format!("{:.1} µs", t.mean_ms() * 10.0),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // Pruner evaluation cost on a deep history.
+    let t = bench.run("median-pruner check", || {
+        let mut study = Study::new(
+            "p",
+            Direction::Minimize,
+            SearchSpace::auto_sketch(64),
+            Box::new(RandomSampler::new(2)),
+            Box::new(MedianPruner::default()),
+        );
+        for _ in 0..50 {
+            let mut tr = study.ask();
+            for step in 0..10 {
+                if study.should_prune(&mut tr, step, step as f64) {
+                    break;
+                }
+            }
+            if tr.state != panther::tuner::TrialState::Pruned {
+                study.tell(&mut tr, 1.0, true);
+            }
+        }
+        study.trials().len()
+    });
+    println!("50 trials × 10 interim reports with MedianPruner: {}", t.report());
+    println!("tuner_overhead done");
+}

@@ -1,0 +1,371 @@
+//! Dynamic request batching — the serving-side coordinator feature.
+//!
+//! The AOT executables have fixed batch shape (`B × S` baked at lowering),
+//! but serving traffic arrives one sequence at a time. The
+//! [`DynamicBatcher`] does what a vLLM-style router does: queue incoming
+//! single-sequence scoring requests, coalesce up to `B` of them (or
+//! whatever arrived within `max_wait`), pad the remainder with zero-mask
+//! rows (which score 0 and are discarded), execute the `eval_rows`
+//! artifact once, and route each row's result back to its caller.
+//!
+//! Throughput scales ~B× over one-request-per-execution at full occupancy;
+//! the occupancy histogram is exported for the e2e bench.
+
+use super::RuntimeHandle;
+use crate::runtime::HostTensor;
+use anyhow::{anyhow, Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One MLM scoring request: a single sequence (tokens/labels/mask, each
+/// `seq` long, f32-encoded as the artifacts expect).
+pub struct ScoreRequest {
+    pub tokens: Vec<f32>,
+    pub labels: Vec<f32>,
+    pub mask: Vec<f32>,
+    reply: mpsc::Sender<Result<f32>>,
+}
+
+/// Cloneable submission handle.
+#[derive(Clone)]
+pub struct BatcherHandle {
+    tx: mpsc::Sender<ScoreRequest>,
+    seq: usize,
+    stats: Arc<BatcherStats>,
+}
+
+impl BatcherHandle {
+    /// Score one sequence (blocks until the batch it joins completes).
+    pub fn score(&self, tokens: &[f32], labels: &[f32], mask: &[f32]) -> Result<f32> {
+        anyhow::ensure!(
+            tokens.len() == self.seq && labels.len() == self.seq && mask.len() == self.seq,
+            "sequence length must be {} (artifact shape)",
+            self.seq
+        );
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(ScoreRequest {
+                tokens: tokens.to_vec(),
+                labels: labels.to_vec(),
+                mask: mask.to_vec(),
+                reply: rtx,
+            })
+            .map_err(|_| anyhow!("batcher stopped"))?;
+        rrx.recv().map_err(|_| anyhow!("batcher dropped reply"))?
+    }
+
+    pub fn stats(&self) -> &BatcherStats {
+        &self.stats
+    }
+}
+
+/// Occupancy + latency statistics.
+#[derive(Default)]
+pub struct BatcherStats {
+    inner: Mutex<StatsInner>,
+}
+
+#[derive(Default)]
+struct StatsInner {
+    batches: u64,
+    requests: u64,
+    /// Histogram over occupancy (index = rows used − 1).
+    occupancy: Vec<u64>,
+}
+
+impl BatcherStats {
+    fn record(&self, used: usize, capacity: usize) {
+        let mut s = self.inner.lock().unwrap();
+        s.batches += 1;
+        s.requests += used as u64;
+        if s.occupancy.len() < capacity {
+            s.occupancy.resize(capacity, 0);
+        }
+        s.occupancy[used - 1] += 1;
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.inner.lock().unwrap().batches
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.inner.lock().unwrap().requests
+    }
+
+    /// Mean rows per executed batch.
+    pub fn mean_occupancy(&self) -> f64 {
+        let s = self.inner.lock().unwrap();
+        if s.batches == 0 {
+            0.0
+        } else {
+            s.requests as f64 / s.batches as f64
+        }
+    }
+}
+
+/// The batcher service. Dropping it stops the worker thread.
+pub struct DynamicBatcher {
+    handle: BatcherHandle,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl DynamicBatcher {
+    /// Start a batcher for `model`'s `eval_rows` artifact, using trained
+    /// `params` (cloned into the service thread).
+    pub fn start(
+        runtime: RuntimeHandle,
+        model: &str,
+        params: Vec<HostTensor>,
+        max_wait: Duration,
+    ) -> Result<Self> {
+        let spec = runtime
+            .manifest()
+            .model(model)
+            .with_context(|| format!("unknown model {model}"))?
+            .clone();
+        let art = spec
+            .eval_rows
+            .clone()
+            .with_context(|| format!("model {model} has no eval_rows artifact"))?;
+        let batch = spec.config_usize("batch").context("missing batch")?;
+        let seq = spec.config_usize("seq").context("missing seq")?;
+        anyhow::ensure!(
+            params.len() == spec.param_names.len(),
+            "params arity {} != {}",
+            params.len(),
+            spec.param_names.len()
+        );
+        let (tx, rx) = mpsc::channel::<ScoreRequest>();
+        let stats = Arc::new(BatcherStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = BatcherHandle {
+            tx,
+            seq,
+            stats: Arc::clone(&stats),
+        };
+        let stop2 = Arc::clone(&stop);
+        let join = std::thread::Builder::new()
+            .name("panther-batcher".into())
+            .spawn(move || {
+                batcher_loop(rx, runtime, art, params, batch, seq, max_wait, stats, stop2)
+            })
+            .context("spawning batcher thread")?;
+        Ok(DynamicBatcher {
+            handle,
+            stop,
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> BatcherHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for DynamicBatcher {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn batcher_loop(
+    rx: mpsc::Receiver<ScoreRequest>,
+    runtime: RuntimeHandle,
+    artifact: String,
+    params: Vec<HostTensor>,
+    batch: usize,
+    seq: usize,
+    max_wait: Duration,
+    stats: Arc<BatcherStats>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut pending: Vec<ScoreRequest> = Vec::with_capacity(batch);
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        // Block for the first request of a batch; then drain greedily until
+        // full or the wait budget elapses (classic size-or-timeout policy).
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(req) => pending.push(req),
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        }
+        let deadline = Instant::now() + max_wait;
+        while pending.len() < batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(req) => pending.push(req),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Assemble the padded batch.
+        let used = pending.len();
+        let mut tokens = vec![0f32; batch * seq];
+        let mut labels = vec![0f32; batch * seq];
+        let mut mask = vec![0f32; batch * seq];
+        for (i, r) in pending.iter().enumerate() {
+            tokens[i * seq..(i + 1) * seq].copy_from_slice(&r.tokens);
+            labels[i * seq..(i + 1) * seq].copy_from_slice(&r.labels);
+            mask[i * seq..(i + 1) * seq].copy_from_slice(&r.mask);
+            // padding rows stay all-zero: mask 0 → loss 0, discarded.
+        }
+        let mut inputs = params.clone();
+        inputs.push(HostTensor::new(&[batch, seq], tokens));
+        inputs.push(HostTensor::new(&[batch, seq], labels));
+        inputs.push(HostTensor::new(&[batch, seq], mask));
+        let result = runtime.execute(&artifact, inputs);
+        stats.record(used, batch);
+        match result {
+            Ok(out) => {
+                let rows = &out[0];
+                for (i, r) in pending.drain(..).enumerate() {
+                    let _ = r.reply.send(Ok(rows.data()[i]));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for r in pending.drain(..) {
+                    let _ = r.reply.send(Err(anyhow!("batch execution failed: {msg}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RuntimeServer;
+    use crate::train::ModelState;
+
+    fn setup() -> Option<(RuntimeServer, Vec<HostTensor>)> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts/ not built");
+            return None;
+        }
+        // Check the serving artifact exists (older artifact dirs may lack it).
+        let mut rt = crate::runtime::Runtime::open(&dir).ok()?;
+        if rt
+            .manifest()
+            .model("bert_dense")
+            .and_then(|m| m.eval_rows.clone())
+            .is_none()
+        {
+            eprintln!("skipping: artifacts predate eval_rows (re-run `make artifacts`)");
+            return None;
+        }
+        let state = ModelState::init(&mut rt, "bert_dense", 0.0).unwrap();
+        drop(rt);
+        let server = RuntimeServer::start(dir).unwrap();
+        Some((server, state.params))
+    }
+
+    fn fake_request(seq: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        use crate::rng::{Philox, Rng};
+        let mut rng = Philox::seeded(seed);
+        let tokens: Vec<f32> = (0..seq)
+            .map(|_| (2 + rng.next_below(254)) as f32)
+            .collect();
+        let labels = tokens.clone();
+        let mut mask = vec![0f32; seq];
+        for m in mask.iter_mut().take(seq / 4) {
+            *m = 1.0;
+        }
+        (tokens, labels, mask)
+    }
+
+    #[test]
+    fn concurrent_requests_all_answered() {
+        let Some((server, params)) = setup() else {
+            return;
+        };
+        let batcher = DynamicBatcher::start(
+            server.handle(),
+            "bert_dense",
+            params,
+            Duration::from_millis(30),
+        )
+        .unwrap();
+        let seq = 64;
+        let threads: Vec<_> = (0..10)
+            .map(|i| {
+                let h = batcher.handle();
+                std::thread::spawn(move || {
+                    let (t, l, m) = fake_request(seq, i);
+                    h.score(&t, &l, &m).unwrap()
+                })
+            })
+            .collect();
+        let scores: Vec<f32> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+        assert_eq!(scores.len(), 10);
+        assert!(scores.iter().all(|s| s.is_finite() && *s > 0.0));
+        let stats = batcher.handle();
+        assert_eq!(stats.stats().requests(), 10);
+        // Coalescing actually happened: fewer batches than requests.
+        assert!(stats.stats().batches() < 10, "no batching occurred");
+    }
+
+    #[test]
+    fn results_independent_of_batch_composition() {
+        let Some((server, params)) = setup() else {
+            return;
+        };
+        let batcher = DynamicBatcher::start(
+            server.handle(),
+            "bert_dense",
+            params,
+            Duration::from_millis(5),
+        )
+        .unwrap();
+        let (t, l, m) = fake_request(64, 42);
+        // Alone.
+        let solo = batcher.handle().score(&t, &l, &m).unwrap();
+        // Amid other traffic.
+        let h2 = batcher.handle();
+        let noise: Vec<_> = (0..6)
+            .map(|i| {
+                let h = batcher.handle();
+                std::thread::spawn(move || {
+                    let (t, l, m) = fake_request(64, 100 + i);
+                    h.score(&t, &l, &m).unwrap()
+                })
+            })
+            .collect();
+        let busy = h2.score(&t, &l, &m).unwrap();
+        for n in noise {
+            n.join().unwrap();
+        }
+        assert!(
+            (solo - busy).abs() < 1e-5,
+            "padding/composition changed a result: {solo} vs {busy}"
+        );
+    }
+
+    #[test]
+    fn wrong_length_rejected() {
+        let Some((server, params)) = setup() else {
+            return;
+        };
+        let batcher = DynamicBatcher::start(
+            server.handle(),
+            "bert_dense",
+            params,
+            Duration::from_millis(5),
+        )
+        .unwrap();
+        let err = batcher.handle().score(&[0.0; 3], &[0.0; 3], &[0.0; 3]);
+        assert!(err.is_err());
+    }
+}

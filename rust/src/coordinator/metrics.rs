@@ -1,0 +1,106 @@
+//! Coordinator metrics: per-artifact latency/throughput counters.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Aggregate stats for one artifact.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactStats {
+    pub count: u64,
+    pub errors: u64,
+    pub total: Duration,
+    pub min: Option<Duration>,
+    pub max: Duration,
+}
+
+impl ArtifactStats {
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            self.total / self.count as u32
+        }
+    }
+}
+
+/// Shared metrics sink (interior mutability; the runtime thread writes,
+/// anyone reads).
+#[derive(Default)]
+pub struct CoordinatorMetrics {
+    stats: Mutex<HashMap<String, ArtifactStats>>,
+}
+
+impl CoordinatorMetrics {
+    pub fn record(&self, artifact: &str, latency: Duration, ok: bool) {
+        let mut map = self.stats.lock().unwrap();
+        let s = map.entry(artifact.to_string()).or_default();
+        s.count += 1;
+        if !ok {
+            s.errors += 1;
+        }
+        s.total += latency;
+        s.min = Some(s.min.map_or(latency, |m| m.min(latency)));
+        s.max = s.max.max(latency);
+    }
+
+    pub fn artifact_stats(&self, artifact: &str) -> Option<ArtifactStats> {
+        self.stats.lock().unwrap().get(artifact).cloned()
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.stats.lock().unwrap().values().map(|s| s.count).sum()
+    }
+
+    pub fn total_errors(&self) -> u64 {
+        self.stats.lock().unwrap().values().map(|s| s.errors).sum()
+    }
+
+    /// Render a summary table (for `panther info` / example epilogues).
+    pub fn report(&self) -> String {
+        let map = self.stats.lock().unwrap();
+        let mut names: Vec<&String> = map.keys().collect();
+        names.sort();
+        let mut t = crate::util::bench::Table::new(&["artifact", "count", "errors", "mean", "max"]);
+        for n in names {
+            let s = &map[n];
+            t.row(&[
+                n.clone(),
+                s.count.to_string(),
+                s.errors.to_string(),
+                crate::util::human_duration(s.mean()),
+                crate::util::human_duration(s.max),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_aggregates() {
+        let m = CoordinatorMetrics::default();
+        m.record("a", Duration::from_millis(10), true);
+        m.record("a", Duration::from_millis(20), true);
+        m.record("a", Duration::from_millis(30), false);
+        let s = m.artifact_stats("a").unwrap();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.mean(), Duration::from_millis(20));
+        assert_eq!(s.min, Some(Duration::from_millis(10)));
+        assert_eq!(s.max, Duration::from_millis(30));
+        assert_eq!(m.total_requests(), 3);
+        assert_eq!(m.total_errors(), 1);
+    }
+
+    #[test]
+    fn report_renders() {
+        let m = CoordinatorMetrics::default();
+        m.record("x", Duration::from_micros(5), true);
+        let r = m.report();
+        assert!(r.contains("| x"));
+    }
+}

@@ -1,0 +1,217 @@
+//! Coordinator: multi-threaded access to the single-threaded PJRT runtime.
+//!
+//! The `xla` crate's client wraps raw C pointers and is not `Send`, so one
+//! dedicated **runtime service thread** owns the [`Runtime`]; everything
+//! else (tuner workers, examples, benches) talks to it through a cloneable
+//! [`RuntimeHandle`] over an mpsc channel. This is the same
+//! leader-owns-the-engine shape as a vLLM-style router: requests queue,
+//! the service thread executes in arrival order, per-artifact latency and
+//! queue-depth metrics are tracked, and backpressure falls out of the
+//! bounded queue.
+
+pub mod batcher;
+pub mod metrics;
+
+pub use batcher::{BatcherHandle, DynamicBatcher, ScoreRequest};
+pub use metrics::{ArtifactStats, CoordinatorMetrics};
+
+use crate::runtime::{HostTensor, Manifest, Runtime};
+use anyhow::{anyhow, Context, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+/// Upper bound on queued requests before `submit` blocks the caller —
+/// simple backpressure so a fast producer cannot grow the queue unboundedly.
+const QUEUE_CAP: usize = 64;
+
+enum Msg {
+    Execute {
+        artifact: String,
+        inputs: Vec<HostTensor>,
+        reply: mpsc::Sender<Result<Vec<HostTensor>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the runtime service thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: mpsc::SyncSender<Msg>,
+    metrics: Arc<CoordinatorMetrics>,
+    manifest: Arc<Manifest>,
+    depth: Arc<AtomicUsize>,
+}
+
+/// The runtime service: owns the thread; dropping it shuts the thread down.
+pub struct RuntimeServer {
+    handle: RuntimeHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RuntimeServer {
+    /// Start the service over an artifact directory.
+    pub fn start(artifact_dir: impl Into<std::path::PathBuf>) -> Result<Self> {
+        let dir = artifact_dir.into();
+        // Open once on the caller thread to fail fast + grab the manifest,
+        // then hand the path to the service thread (Runtime itself is !Send).
+        let probe = Runtime::open(&dir)?;
+        let manifest = Arc::new(probe.manifest().clone());
+        drop(probe);
+        let (tx, rx) = mpsc::sync_channel::<Msg>(QUEUE_CAP);
+        let metrics = Arc::new(CoordinatorMetrics::default());
+        let depth = Arc::new(AtomicUsize::new(0));
+        let m2 = Arc::clone(&metrics);
+        let d2 = Arc::clone(&depth);
+        let join = std::thread::Builder::new()
+            .name("panther-runtime".into())
+            .spawn(move || {
+                let mut rt = match Runtime::open(&dir) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        crate::log_error!("runtime thread failed to open artifacts: {e}");
+                        // Drain, replying with errors.
+                        while let Ok(msg) = rx.recv() {
+                            if let Msg::Execute { reply, .. } = msg {
+                                let _ = reply.send(Err(anyhow!("runtime unavailable")));
+                            } else {
+                                break;
+                            }
+                        }
+                        return;
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Execute {
+                            artifact,
+                            inputs,
+                            reply,
+                        } => {
+                            d2.fetch_sub(1, Ordering::SeqCst);
+                            let t0 = Instant::now();
+                            let res = rt.execute(&artifact, &inputs);
+                            m2.record(&artifact, t0.elapsed(), res.is_ok());
+                            let _ = reply.send(res);
+                        }
+                        Msg::Shutdown => break,
+                    }
+                }
+            })
+            .context("spawning runtime thread")?;
+        Ok(RuntimeServer {
+            handle: RuntimeHandle {
+                tx,
+                metrics,
+                manifest,
+                depth,
+            },
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        self.handle.clone()
+    }
+
+    pub fn metrics(&self) -> Arc<CoordinatorMetrics> {
+        Arc::clone(&self.handle.metrics)
+    }
+}
+
+impl Drop for RuntimeServer {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl RuntimeHandle {
+    /// Execute an artifact (synchronous RPC to the service thread).
+    pub fn execute(&self, artifact: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.depth.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .send(Msg::Execute {
+                artifact: artifact.to_string(),
+                inputs,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("runtime thread dropped reply"))?
+    }
+
+    /// Current queue depth (requests submitted but not yet started).
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::SeqCst)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn metrics(&self) -> &CoordinatorMetrics {
+        &self.metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn serves_requests_from_many_threads() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let server = RuntimeServer::start(dir).unwrap();
+        let spec = server
+            .handle()
+            .manifest()
+            .artifact("k_sk_linear")
+            .unwrap()
+            .clone();
+        let mk_inputs = || -> Vec<HostTensor> {
+            spec.inputs
+                .iter()
+                .map(|s| HostTensor::zeros(&s.shape))
+                .collect()
+        };
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let h = server.handle();
+                let inputs = mk_inputs();
+                std::thread::spawn(move || h.execute("k_sk_linear", inputs).unwrap())
+            })
+            .collect();
+        for t in handles {
+            let out = t.join().unwrap();
+            assert_eq!(out.len(), 1);
+        }
+        let stats = server.metrics().artifact_stats("k_sk_linear").unwrap();
+        assert_eq!(stats.count, 4);
+        assert_eq!(stats.errors, 0);
+    }
+
+    #[test]
+    fn errors_propagate_to_caller() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let server = RuntimeServer::start(dir).unwrap();
+        let res = server.handle().execute("nope", vec![]);
+        assert!(res.is_err());
+        assert_eq!(server.metrics().total_errors(), 1);
+    }
+}

@@ -1,0 +1,16 @@
+//! Synthetic datasets (WikiText and CIFAR-10 stand-ins — no network access
+//! in this environment; see DESIGN.md §Substitutions).
+//!
+//! - [`corpus`]: a Markov-chain character corpus with Zipf-distributed
+//!   state transitions. It has real sequential structure (entropy well
+//!   below uniform), so MLM training shows a genuine learning curve and
+//!   dense-vs-sketched loss comparisons are meaningful.
+//! - [`images`]: class-conditional structured images (oriented gratings +
+//!   class-dependent quadrant blobs, plus noise) for the CIFAR case study —
+//!   not linearly separable, but learnable by a small CNN.
+
+pub mod corpus;
+pub mod images;
+
+pub use corpus::{MaskedBatch, TextCorpus};
+pub use images::ImageDataset;

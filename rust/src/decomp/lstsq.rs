@@ -1,0 +1,316 @@
+//! Sketch-and-precondition least squares (Blendenpik / LSRN style) — the
+//! "sketching-based regression" the paper's introduction lists among the
+//! matured RandNLA tools.
+//!
+//! To solve `min‖Ax − b‖₂` for tall `A (m × n, m ≫ n)`:
+//! 1. Sketch `A_sk = S·A` (sparse sign, `d = γ·n` rows).
+//! 2. QR the small sketch: `A_sk = Q_sk·R` → `R` is a near-perfect
+//!    preconditioner: `κ(A·R⁻¹) = O(1)` w.h.p.
+//! 3. Run LSQR on the preconditioned system to machine-ish accuracy in a
+//!    handful of iterations (each iteration two matvecs — O(mn)).
+//!
+//! Total: O(mn·log n + n³) versus O(mn²) for dense normal equations /
+//! Householder — the classical RandNLA win on tall systems.
+
+use crate::linalg::{qr_thin, solve_triu, Mat};
+use crate::sketch::{Sketch, SparseSignSketch};
+use anyhow::Result;
+
+/// Options for the sketched solver.
+#[derive(Debug, Clone)]
+pub struct LstsqOpts {
+    /// Sketch size factor γ (d = max(γ·n, n+16) rows).
+    pub gamma: f64,
+    /// Sparse-sign nonzeros per column.
+    pub nnz: usize,
+    /// LSQR iteration cap.
+    pub max_iters: usize,
+    /// Relative residual-gradient tolerance ‖Aᵀr‖/(‖A‖·‖r‖).
+    pub tol: f64,
+    pub seed: u64,
+}
+
+impl Default for LstsqOpts {
+    fn default() -> Self {
+        LstsqOpts {
+            gamma: 2.0,
+            nnz: 8,
+            max_iters: 100,
+            // f32 storage: the residual estimate stalls near 1e-6·‖b‖;
+            // asking for more just burns iterations.
+            tol: 1e-6,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of the sketched solve.
+pub struct LstsqResult {
+    pub x: Vec<f32>,
+    /// LSQR iterations used.
+    pub iters: usize,
+    /// Final residual norm ‖Ax − b‖.
+    pub residual: f64,
+}
+
+/// Solve `min‖Ax − b‖` by sketch-precondition-LSQR.
+pub fn sketched_lstsq(a: &Mat, b: &[f32], opts: &LstsqOpts) -> Result<LstsqResult> {
+    let (m, n) = a.shape();
+    anyhow::ensure!(b.len() == m, "rhs length {} != rows {m}", b.len());
+    anyhow::ensure!(m >= n && n > 0, "need a tall system");
+    // 1. Sketch + QR → R.
+    let d = (((n as f64) * opts.gamma).ceil() as usize).clamp(n + 16, m.max(n + 16));
+    let s = SparseSignSketch::new(m, d.min(m), opts.nnz, opts.seed);
+    let a_sk = s.apply(a);
+    let (_q, r) = qr_thin(&a_sk);
+    // 2. LSQR on min‖(A·R⁻¹)y − b‖, x = R⁻¹y.
+    // Operators: apply   v ↦ A·(R⁻¹v)   and   u ↦ R⁻ᵀ·(Aᵀu).
+    let apply = |v: &[f32]| -> Vec<f32> {
+        let rv = solve_triu(&r, &Mat::from_vec(n, 1, v.to_vec()));
+        a.matvec(rv.data())
+    };
+    let apply_t = |u: &[f32]| -> Vec<f32> {
+        let atu = a.matvec_t(u);
+        // R⁻ᵀ·w: solve Rᵀ·z = w (lower-triangular solve on Rᵀ).
+        solve_tril_t(&r, &atu)
+    };
+    let (y, iters) = lsqr(m, n, apply, apply_t, b, opts.max_iters, opts.tol);
+    let x = solve_triu(&r, &Mat::from_vec(n, 1, y)).into_vec();
+    // Residual.
+    let ax = a.matvec(&x);
+    let residual = ax
+        .iter()
+        .zip(b)
+        .map(|(p, q)| ((p - q) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    Ok(LstsqResult { x, iters, residual })
+}
+
+/// Dense baseline via normal equations + Cholesky (O(mn²)); used by tests
+/// and the regression bench as the comparison point.
+pub fn lstsq_normal_eq(a: &Mat, b: &[f32]) -> Result<Vec<f32>> {
+    let gram = crate::linalg::matmul_tn(a, a);
+    let atb = a.matvec_t(b);
+    let l = crate::linalg::cholesky_lower(&gram)?;
+    // Solve L·z = Aᵀb, then Lᵀ·x = z.
+    let z = solve_tril(&l, &atb);
+    let x = solve_triu(&l.transpose(), &Mat::from_vec(z.len(), 1, z)).into_vec();
+    Ok(x)
+}
+
+/// Solve lower-triangular `L·z = w`.
+fn solve_tril(l: &Mat, w: &[f32]) -> Vec<f32> {
+    let n = l.rows();
+    let mut z = vec![0f64; n];
+    for i in 0..n {
+        let mut s = w[i] as f64;
+        for p in 0..i {
+            s -= l.get(i, p) as f64 * z[p];
+        }
+        z[i] = s / l.get(i, i) as f64;
+    }
+    z.into_iter().map(|v| v as f32).collect()
+}
+
+/// Solve `Rᵀ·z = w` with `R` upper-triangular (forward substitution).
+fn solve_tril_t(r: &Mat, w: &[f32]) -> Vec<f32> {
+    let n = r.rows();
+    let mut z = vec![0f64; n];
+    for i in 0..n {
+        let mut s = w[i] as f64;
+        for p in 0..i {
+            s -= r.get(p, i) as f64 * z[p];
+        }
+        z[i] = s / r.get(i, i) as f64;
+    }
+    z.into_iter().map(|v| v as f32).collect()
+}
+
+/// Textbook LSQR (Paige–Saunders) on an abstract operator pair.
+fn lsqr(
+    m: usize,
+    n: usize,
+    apply: impl Fn(&[f32]) -> Vec<f32>,
+    apply_t: impl Fn(&[f32]) -> Vec<f32>,
+    b: &[f32],
+    max_iters: usize,
+    tol: f64,
+) -> (Vec<f32>, usize) {
+    let norm = |v: &[f32]| v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    let scale = |v: &mut [f32], s: f64| {
+        for x in v.iter_mut() {
+            *x = (*x as f64 * s) as f32;
+        }
+    };
+    let mut x = vec![0f32; n];
+    let mut u = b.to_vec();
+    let beta0 = norm(&u);
+    if beta0 == 0.0 {
+        return (x, 0);
+    }
+    scale(&mut u, 1.0 / beta0);
+    let mut v = apply_t(&u);
+    let mut alpha = norm(&v);
+    if alpha == 0.0 {
+        return (x, 0);
+    }
+    scale(&mut v, 1.0 / alpha);
+    let mut w = v.clone();
+    let mut phi_bar = beta0;
+    let mut rho_bar = alpha;
+    let mut phi_prev = f64::INFINITY;
+    let _ = m;
+    for iter in 0..max_iters {
+        // Bidiagonalization step.
+        let mut au = apply(&v);
+        for (a_, u_) in au.iter_mut().zip(&u) {
+            *a_ -= (alpha * *u_ as f64) as f32;
+        }
+        let beta = norm(&au);
+        if beta > 0.0 {
+            u = au;
+            scale(&mut u, 1.0 / beta);
+            let mut atv = apply_t(&u);
+            for (a_, v_) in atv.iter_mut().zip(&v) {
+                *a_ -= (beta * *v_ as f64) as f32;
+            }
+            alpha = norm(&atv);
+            if alpha > 0.0 {
+                v = atv;
+                scale(&mut v, 1.0 / alpha);
+            }
+        }
+        // Givens rotation.
+        let rho = (rho_bar * rho_bar + beta * beta).sqrt();
+        let c = rho_bar / rho;
+        let s = beta / rho;
+        let theta = s * alpha;
+        rho_bar = -c * alpha;
+        let phi = c * phi_bar;
+        phi_bar *= s;
+        // Update x, w.
+        let t1 = phi / rho;
+        let t2 = -theta / rho;
+        for i in 0..n {
+            x[i] = (x[i] as f64 + t1 * w[i] as f64) as f32;
+            w[i] = (v[i] as f64 + t2 * w[i] as f64) as f32;
+        }
+        // Convergence: residual estimate (phi_bar) small, operator
+        // exhausted, or stagnation (phi_bar no longer shrinking — the f32
+        // noise floor for least-squares problems with nonzero residual).
+        let prev = phi_prev;
+        phi_prev = phi_bar;
+        if phi_bar / beta0 < tol
+            || alpha.abs() < 1e-300
+            || (iter > 5 && phi_bar > prev * 0.999)
+        {
+            return (x, iter + 1);
+        }
+    }
+    (x, max_iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Philox, Rng};
+    use crate::util::prop::prop_check;
+
+    fn residual(a: &Mat, x: &[f32], b: &[f32]) -> f64 {
+        a.matvec(x)
+            .iter()
+            .zip(b)
+            .map(|(p, q)| ((p - q) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    #[test]
+    fn consistent_system_solved_exactly() {
+        let mut rng = Philox::seeded(201);
+        let a = Mat::randn(500, 20, &mut rng);
+        let x_true: Vec<f32> = (0..20).map(|i| (i as f32 - 10.0) / 5.0).collect();
+        let b = a.matvec(&x_true);
+        let r = sketched_lstsq(&a, &b, &LstsqOpts::default()).unwrap();
+        let err: f64 = r
+            .x
+            .iter()
+            .zip(&x_true)
+            .map(|(p, q)| ((p - q) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!(err < 1e-3, "x error {err}");
+        assert!(r.residual < 1e-2, "residual {}", r.residual);
+        assert!(r.iters < 30, "iters {}", r.iters);
+    }
+
+    #[test]
+    fn matches_normal_equations_on_noisy_system() {
+        let mut rng = Philox::seeded(202);
+        let a = Mat::randn(800, 30, &mut rng);
+        let mut b: Vec<f32> = a.matvec(&vec![1.0; 30]);
+        for v in &mut b {
+            *v += 0.1 * rng.next_normal();
+        }
+        let x_sketch = sketched_lstsq(&a, &b, &LstsqOpts::default()).unwrap();
+        let x_dense = lstsq_normal_eq(&a, &b).unwrap();
+        let r_sketch = residual(&a, &x_sketch.x, &b);
+        let r_dense = residual(&a, &x_dense, &b);
+        assert!(
+            (r_sketch - r_dense).abs() < 1e-2 * r_dense,
+            "residuals differ: {r_sketch} vs {r_dense}"
+        );
+    }
+
+    #[test]
+    fn preconditioning_keeps_iterations_flat_as_conditioning_degrades() {
+        // Iterations should stay O(1) even as κ(A) grows — the point of the
+        // sketch preconditioner.
+        let mut rng = Philox::seeded(203);
+        let mut worst = 0usize;
+        for decade in 1..=4 {
+            let mut a = Mat::randn(600, 15, &mut rng);
+            for j in 0..15 {
+                let s = 10f32.powf(-(j as f32) * decade as f32 / 15.0);
+                for i in 0..600 {
+                    a.set(i, j, a.get(i, j) * s);
+                }
+            }
+            let b: Vec<f32> = (0..600).map(|_| rng.next_normal()).collect();
+            let r = sketched_lstsq(&a, &b, &LstsqOpts::default()).unwrap();
+            worst = worst.max(r.iters);
+        }
+        assert!(worst <= 60, "iterations blew up: {worst}");
+    }
+
+    #[test]
+    fn property_random_tall_systems() {
+        prop_check("lstsq-props", 10, |g| {
+            let n = 2 + g.usize(0..10);
+            let m = n * 10 + g.usize(0..50);
+            let a = Mat::randn(m, n, g.rng());
+            let x_true: Vec<f32> = (0..n).map(|_| g.normal()).collect();
+            let b = a.matvec(&x_true);
+            let r = sketched_lstsq(&a, &b, &LstsqOpts { seed: 5, ..Default::default() })
+                .unwrap();
+            let err: f64 = r
+                .x
+                .iter()
+                .zip(&x_true)
+                .map(|(p, q)| ((p - q) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            let scale: f64 = x_true.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+            assert!(err < 1e-2 * scale.max(1.0), "err {err}");
+        });
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let a = Mat::zeros(10, 20); // wide
+        assert!(sketched_lstsq(&a, &vec![0.0; 10], &LstsqOpts::default()).is_err());
+        let a2 = Mat::zeros(30, 3);
+        assert!(sketched_lstsq(&a2, &vec![0.0; 7], &LstsqOpts::default()).is_err());
+    }
+}

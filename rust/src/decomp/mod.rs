@@ -1,0 +1,23 @@
+//! Randomized matrix decompositions — the algorithmic heart of Panther.
+//!
+//! - [`rsvd`] — randomized SVD (Halko–Martinsson–Tropp): rangefinder +
+//!   power iteration + small exact SVD.
+//! - [`cqrrpt`] — CholeskyQR with Randomization and Pivoting for Tall
+//!   matrices (Melnichenko et al. 2025, the paper's reference [9]).
+//! - [`pivoted_cholesky`] — low-rank PSD approximation with greedy
+//!   diagonal pivoting.
+//! - Deterministic baselines ([`crate::linalg::qr_thin`],
+//!   [`crate::linalg::svd_jacobi`]) live in `linalg`; the decomposition
+//!   benches compare against them.
+
+mod cqrrpt;
+mod lstsq;
+mod pivoted_cholesky;
+mod rangefinder;
+mod rsvd;
+
+pub use cqrrpt::{cqrrpt, CqrrptOpts, CqrrptResult};
+pub use lstsq::{lstsq_normal_eq, sketched_lstsq, LstsqOpts, LstsqResult};
+pub use pivoted_cholesky::{pivoted_cholesky, PivCholResult};
+pub use rangefinder::{rangefinder, RangefinderOpts};
+pub use rsvd::{rsvd, RsvdOpts};

@@ -1,0 +1,123 @@
+//! Pivoted (partial) Cholesky: greedy low-rank approximation of a PSD
+//! matrix, `A ≈ L·Lᵀ` with `L` m×k. Listed among Panther's randomized
+//! decompositions ("pivoted CholeskyQR"); also the standard tool for kernel
+//! matrix compression.
+
+use crate::linalg::Mat;
+
+/// Result of the pivoted Cholesky.
+pub struct PivCholResult {
+    /// The m×k factor (rows in original ordering).
+    pub l: Mat,
+    /// Pivot order (indices selected, best first).
+    pub pivots: Vec<usize>,
+    /// Trace residual after each step (diagnostic; length k).
+    pub residuals: Vec<f64>,
+}
+
+/// Greedy diagonal-pivoted partial Cholesky of PSD `a`, stopping at rank
+/// `max_rank` or when the trace residual falls below `tol · trace(A)`.
+pub fn pivoted_cholesky(a: &Mat, max_rank: usize, tol: f64) -> PivCholResult {
+    let n = a.rows();
+    assert_eq!(a.rows(), a.cols());
+    let mut diag: Vec<f64> = (0..n).map(|i| a.get(i, i) as f64).collect();
+    let trace0: f64 = diag.iter().sum();
+    let mut l: Vec<Vec<f64>> = Vec::new(); // columns of L
+    let mut pivots = Vec::new();
+    let mut residuals = Vec::new();
+    let k = max_rank.min(n);
+    for step in 0..k {
+        // Largest remaining diagonal.
+        let (p, &dmax) = diag
+            .iter()
+            .enumerate()
+            .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+            .unwrap();
+        if dmax <= tol * trace0.max(1e-300) || dmax <= 0.0 {
+            break;
+        }
+        let sq = dmax.sqrt();
+        // New column: (A[:,p] - Σ_j L[:,j]·L[p,j]) / sqrt(d_p)
+        let mut col = vec![0f64; n];
+        for i in 0..n {
+            let mut v = a.get(i, p) as f64;
+            for lj in &l {
+                v -= lj[i] * lj[p];
+            }
+            col[i] = v / sq;
+        }
+        for i in 0..n {
+            diag[i] -= col[i] * col[i];
+        }
+        let _ = step;
+        pivots.push(p);
+        residuals.push(diag.iter().cloned().fold(0.0, f64::max).max(0.0));
+        l.push(col);
+    }
+    let rank = l.len();
+    let mut lm = Mat::zeros(n, rank);
+    for (j, col) in l.iter().enumerate() {
+        for i in 0..n {
+            lm.set(i, j, col[i] as f32);
+        }
+    }
+    PivCholResult {
+        l: lm,
+        pivots,
+        residuals,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_tn, rel_error};
+    use crate::rng::Philox;
+
+    #[test]
+    fn exact_on_low_rank_psd() {
+        let mut rng = Philox::seeded(101);
+        let b = Mat::randn(20, 4, &mut rng);
+        let a = matmul(&b, &b.transpose()); // PSD, rank 4
+        let f = pivoted_cholesky(&a, 10, 1e-8);
+        assert!(f.l.cols() <= 5, "rank inflated: {}", f.l.cols());
+        let rec = matmul(&f.l, &f.l.transpose());
+        assert!(rel_error(&rec, &a) < 1e-3);
+    }
+
+    #[test]
+    fn full_rank_full_factorization() {
+        let mut rng = Philox::seeded(102);
+        let b = Mat::randn(30, 12, &mut rng);
+        let a = matmul_tn(&b, &b); // 12×12 SPD
+        let f = pivoted_cholesky(&a, 12, 0.0);
+        assert_eq!(f.l.cols(), 12);
+        let rec = matmul(&f.l, &f.l.transpose());
+        assert!(rel_error(&rec, &a) < 1e-3);
+    }
+
+    #[test]
+    fn pivots_unique_and_residual_decreasing() {
+        let mut rng = Philox::seeded(103);
+        let b = Mat::randn(25, 25, &mut rng);
+        let a = matmul(&b, &b.transpose());
+        let f = pivoted_cholesky(&a, 15, 0.0);
+        let set: std::collections::HashSet<_> = f.pivots.iter().collect();
+        assert_eq!(set.len(), f.pivots.len());
+        for w in f.residuals.windows(2) {
+            assert!(w[1] <= w[0] * 1.001, "residual grew: {:?}", w);
+        }
+    }
+
+    #[test]
+    fn truncation_gives_partial_approx() {
+        let mut rng = Philox::seeded(104);
+        let b = Mat::randn(20, 20, &mut rng);
+        let a = matmul(&b, &b.transpose());
+        let f2 = pivoted_cholesky(&a, 2, 0.0);
+        let f8 = pivoted_cholesky(&a, 8, 0.0);
+        let e2 = rel_error(&matmul(&f2.l, &f2.l.transpose()), &a);
+        let e8 = rel_error(&matmul(&f8.l, &f8.l.transpose()), &a);
+        assert!(e8 < e2, "more rank must reduce error: {e8} vs {e2}");
+    }
+}

@@ -1,0 +1,128 @@
+//! Randomized SVD (Halko–Martinsson–Tropp 2011).
+
+use super::rangefinder::{rangefinder, RangefinderOpts};
+use crate::linalg::{matmul, matmul_tn, svd_jacobi, Mat, Svd};
+
+/// RSVD options.
+#[derive(Debug, Clone)]
+pub struct RsvdOpts {
+    pub rank: usize,
+    pub oversample: usize,
+    pub power_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for RsvdOpts {
+    fn default() -> Self {
+        RsvdOpts {
+            rank: 10,
+            oversample: 8,
+            power_iters: 1,
+            seed: 0,
+        }
+    }
+}
+
+/// Rank-`k` randomized SVD: Stage A finds `Q` spanning the approximate
+/// range; Stage B takes the exact SVD of the small matrix `B = QᵀA` and
+/// lifts: `A ≈ (Q·Ũ)·diag(s)·Vᵀ`. Cost: O(mnk) + O(nk²) instead of O(mn²).
+pub fn rsvd(a: &Mat, opts: &RsvdOpts) -> Svd {
+    let q = rangefinder(
+        a,
+        &RangefinderOpts {
+            rank: opts.rank,
+            oversample: opts.oversample,
+            power_iters: opts.power_iters,
+            seed: opts.seed,
+        },
+    );
+    let b = matmul_tn(&q, a); // (k+p) × n
+    let small = svd_jacobi(&b);
+    let u = matmul(&q, &small.u); // m × r
+    Svd {
+        u,
+        s: small.s,
+        v: small.v,
+    }
+    .truncate(opts.rank)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{fro_norm, ortho_error, rel_error};
+    use crate::rng::Philox;
+    use crate::util::prop::prop_check;
+
+    fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat {
+        let mut rng = Philox::seeded(seed);
+        matmul(&Mat::randn(m, r, &mut rng), &Mat::randn(r, n, &mut rng))
+    }
+
+    #[test]
+    fn recovers_exact_low_rank() {
+        let a = low_rank(80, 50, 6, 81);
+        let f = rsvd(&a, &RsvdOpts { rank: 6, ..Default::default() });
+        assert!(rel_error(&f.reconstruct(), &a) < 1e-3);
+        assert!(ortho_error(&f.u) < 1e-3);
+        assert!(ortho_error(&f.v) < 1e-3);
+        assert_eq!(f.s.len(), 6);
+    }
+
+    #[test]
+    fn near_optimal_vs_truncated_svd() {
+        // RSVD error should be within a modest factor of the optimal
+        // (Eckart–Young) rank-k error.
+        let mut rng = Philox::seeded(82);
+        let a = Mat::randn(60, 40, &mut rng);
+        let k = 10;
+        let exact = svd_jacobi(&a);
+        let opt_err = fro_norm(&a.sub(&exact.truncate(k).reconstruct()));
+        let f = rsvd(&a, &RsvdOpts { rank: k, oversample: 10, power_iters: 2, seed: 3 });
+        let rand_err = fro_norm(&a.sub(&f.reconstruct()));
+        assert!(
+            rand_err <= opt_err * 1.5 + 1e-6,
+            "rsvd {rand_err} vs optimal {opt_err}"
+        );
+    }
+
+    #[test]
+    fn singular_values_close_on_decaying_spectrum() {
+        let mut rng = Philox::seeded(83);
+        let (m, n, full) = (70, 50, 20);
+        let u = crate::linalg::qr_thin(&Mat::randn(m, full, &mut rng)).0;
+        let v = crate::linalg::qr_thin(&Mat::randn(n, full, &mut rng)).0;
+        let mut core = Mat::zeros(full, full);
+        for i in 0..full {
+            core.set(i, i, (0.5f32).powi(i as i32));
+        }
+        let a = matmul(&matmul(&u, &core), &v.transpose());
+        let f = rsvd(&a, &RsvdOpts { rank: 5, power_iters: 2, seed: 7, oversample: 10 });
+        for i in 0..5 {
+            let truth = (0.5f32).powi(i as i32);
+            assert!(
+                (f.s[i] - truth).abs() < 0.05 * truth,
+                "σ_{i}: {} vs {}",
+                f.s[i],
+                truth
+            );
+        }
+    }
+
+    #[test]
+    fn property_rank_and_orthogonality() {
+        prop_check("rsvd-props", 10, |g| {
+            let m = 20 + g.usize(0..40);
+            let n = 10 + g.usize(0..30);
+            let k = g.usize(1..=8.min(n.min(m)));
+            let a = Mat::randn(m, n, g.rng());
+            let f = rsvd(&a, &RsvdOpts { rank: k, seed: 11, ..Default::default() });
+            assert_eq!(f.u.shape(), (m, k.min(n).min(m)));
+            assert!(ortho_error(&f.u) < 1e-3);
+            // Singular values sorted.
+            for w in f.s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-6);
+            }
+        });
+    }
+}

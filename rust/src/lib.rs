@@ -1,0 +1,64 @@
+//! # Panther-RS
+//!
+//! A production-oriented reproduction of **Panther: Faster and Cheaper
+//! Computations with Randomized Numerical Linear Algebra** as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! Panther consolidates Randomized Numerical Linear Algebra (RandNLA)
+//! techniques — sketched linear layers, sketched 2D convolution, Performer
+//! style random-feature attention, and randomized matrix decompositions
+//! (RSVD, CQRRPT) — behind a drop-in layer API, with an AutoTuner that
+//! searches sketching hyper-parameters under accuracy constraints.
+//!
+//! ## Architecture
+//!
+//! - **Layer 1 (build-time Python)** — Pallas kernels for the compute
+//!   hot-spots (`python/compile/kernels/`), verified against pure-jnp
+//!   oracles.
+//! - **Layer 2 (build-time Python)** — JAX model graphs (BERT-mini MLM,
+//!   conv classifier; dense and sketched variants) lowered once to HLO text
+//!   artifacts by `python/compile/aot.py`.
+//! - **Layer 3 (this crate)** — everything at run time: the PJRT
+//!   [`runtime`], the [`tuner`] (the paper's `SKAutoTuner`), the
+//!   [`coordinator`] that schedules tuning trials and evaluation batches,
+//!   the [`train`] driver, and a pure-Rust RandNLA substrate
+//!   ([`linalg`], [`sketch`], [`decomp`], [`nn`]) used by the benchmark
+//!   harness and the host-side decomposition API.
+//!
+//! Python is never on the request path: after `make artifacts` the `panther`
+//! binary and examples are self-contained.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use panther::nn::{Linear, SKLinear};
+//! use panther::linalg::Mat;
+//! use panther::rng::Philox;
+//!
+//! let mut rng = Philox::seeded(0);
+//! // A dense layer and its sketched drop-in replacement.
+//! let dense = Linear::random(512, 512, &mut rng);
+//! let sk = SKLinear::from_dense(&dense, /*num_terms=*/1, /*low_rank=*/16, &mut rng);
+//! let x = Mat::randn(8, 512, &mut rng);
+//! let y_dense = dense.forward(&x);
+//! let y_sk = sk.forward(&x);
+//! assert_eq!(y_dense.shape(), y_sk.shape());
+//! ```
+
+pub mod coordinator;
+pub mod data;
+pub mod decomp;
+pub mod linalg;
+pub mod nn;
+pub mod rng;
+pub mod runtime;
+pub mod sketch;
+pub mod train;
+pub mod tuner;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Library version string (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,112 @@
+//! Cholesky factorization. CholeskyQR (and therefore CQRRPT) reduces tall
+//! QR to the Cholesky of the small Gram matrix `AᵀA`; failure of this
+//! factorization is precisely the signal CQRRPT uses to detect that its
+//! preconditioner did not make `A` well-conditioned enough.
+
+use super::Mat;
+
+/// Cholesky failure: the matrix was not (numerically) positive definite.
+#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+#[error("cholesky failed at pivot {pivot}: diagonal value {value}")]
+pub struct CholError {
+    pub pivot: usize,
+    pub value: f64,
+}
+
+/// Lower Cholesky `A = L·Lᵀ` of a symmetric positive-definite matrix.
+/// f64 accumulation throughout; returns Err on a non-positive pivot.
+pub fn cholesky_lower(a: &Mat) -> Result<Mat, CholError> {
+    let n = a.rows();
+    assert_eq!(a.rows(), a.cols(), "cholesky needs a square matrix");
+    let mut l = vec![0f64; n * n];
+    let ad = a.data();
+    for j in 0..n {
+        // Diagonal.
+        let mut d = ad[j * n + j] as f64;
+        for p in 0..j {
+            d -= l[j * n + p] * l[j * n + p];
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return Err(CholError { pivot: j, value: d });
+        }
+        let djs = d.sqrt();
+        l[j * n + j] = djs;
+        // Column below the diagonal.
+        for i in (j + 1)..n {
+            let mut s = ad[i * n + j] as f64;
+            for p in 0..j {
+                s -= l[i * n + p] * l[j * n + p];
+            }
+            l[i * n + j] = s / djs;
+        }
+    }
+    Ok(Mat::from_vec(
+        n,
+        n,
+        l.into_iter().map(|v| v as f32).collect(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_tn, rel_error};
+    use crate::rng::Philox;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn reconstructs_spd() {
+        let mut rng = Philox::seeded(31);
+        let b = Mat::randn(20, 10, &mut rng);
+        let a = matmul_tn(&b, &b); // AᵀA is SPD (b has full column rank w.p. 1)
+        let l = cholesky_lower(&a).unwrap();
+        let rec = matmul(&l, &l.transpose());
+        assert!(rel_error(&rec, &a) < 1e-4);
+    }
+
+    #[test]
+    fn lower_triangular_structure() {
+        let mut rng = Philox::seeded(32);
+        let b = Mat::randn(15, 6, &mut rng);
+        let a = matmul_tn(&b, &b);
+        let l = cholesky_lower(&a).unwrap();
+        for i in 0..6 {
+            for j in (i + 1)..6 {
+                assert_eq!(l.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn fails_on_indefinite() {
+        let mut a = Mat::eye(3);
+        a.set(2, 2, -1.0);
+        let err = cholesky_lower(&a).unwrap_err();
+        assert_eq!(err.pivot, 2);
+    }
+
+    #[test]
+    fn fails_on_singular() {
+        let a = Mat::zeros(4, 4);
+        assert!(cholesky_lower(&a).is_err());
+    }
+
+    #[test]
+    fn identity_factors_to_identity() {
+        let l = cholesky_lower(&Mat::eye(5)).unwrap();
+        assert!(rel_error(&l, &Mat::eye(5)) < 1e-7);
+    }
+
+    #[test]
+    fn property_gram_matrices_factor() {
+        prop_check("chol-gram", 25, |g| {
+            let n = g.usize(1..10);
+            let m = n + g.usize(1..20);
+            let b = Mat::randn(m, n, g.rng());
+            let a = matmul_tn(&b, &b);
+            let l = cholesky_lower(&a).expect("gram of full-rank tall matrix is SPD");
+            let rec = matmul(&l, &l.transpose());
+            assert!(rel_error(&rec, &a) < 1e-3);
+        });
+    }
+}

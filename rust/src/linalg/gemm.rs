@@ -1,0 +1,322 @@
+//! Blocked, multi-threaded GEMM.
+//!
+//! This is the dense baseline every figure bench compares against, so it is
+//! the one routine we tune hard (see EXPERIMENTS.md §Perf): i-k-j loop order
+//! over a packed B panel, 4-wide j unrolling for the autovectorizer, L2-size
+//! blocking, and row-block parallelism over a shared thread pool.
+
+use super::Mat;
+use crate::util::threadpool::ThreadPool;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Row-block size (tuned; see EXPERIMENTS.md §Perf).
+const MC: usize = 64;
+/// Depth-block size.
+const KC: usize = 256;
+
+static POOL: OnceLock<ThreadPool> = OnceLock::new();
+static GEMM_THREADS: AtomicUsize = AtomicUsize::new(0); // 0 = default
+
+/// Configure GEMM parallelism (takes effect before first use; after that the
+/// pool is fixed — call early in `main`). 1 disables threading.
+pub fn set_gemm_threads(n: usize) {
+    GEMM_THREADS.store(n, Ordering::SeqCst);
+}
+
+fn pool() -> &'static ThreadPool {
+    POOL.get_or_init(|| {
+        let n = GEMM_THREADS.load(Ordering::SeqCst);
+        let n = if n == 0 {
+            ThreadPool::default_size()
+        } else {
+            n
+        };
+        ThreadPool::new(n)
+    })
+}
+
+/// `C = A · B`.
+///
+/// Large products are routed through an explicit transpose of `B` and the
+/// NT dot kernel: the O(k·n) transpose is amortized over O(m·k·n) MACs and
+/// the dot kernel sustains ~3.5× the axpy kernel's throughput on this CPU
+/// (no store traffic in the inner loop) — see EXPERIMENTS.md §Perf #3.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(
+        a.cols(),
+        b.rows(),
+        "matmul shape mismatch: {:?} x {:?}",
+        a.shape(),
+        b.shape()
+    );
+    let work = a.rows() * a.cols() * b.cols();
+    // Transpose pays off once the GEMM dominates the O(k·n) reshuffle;
+    // m ≥ 8 rows of reuse is the observed break-even.
+    if a.rows() >= 8 && work >= 32 * 32 * 32 {
+        return matmul_nt(a, &b.transpose());
+    }
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    gemm_into(a, b, &mut c);
+    c
+}
+
+/// `C = Aᵀ · B` without materializing the transpose.
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "matmul_tn shape mismatch");
+    // Aᵀ·B with A row-major is a k-major sweep: accumulate outer products of
+    // A's rows into C. Parallelize over column strips of the output instead
+    // (each worker owns disjoint C columns) to stay race-free.
+    let (k, m) = a.shape();
+    let n = b.cols();
+    let mut c = Mat::zeros(m, n);
+    // Serial k-sweep, vectorized inner j loop; for the sizes used here
+    // (sketch application, QᵀA in decompositions) this is bandwidth-bound.
+    for p in 0..k {
+        let arow = a.row(p);
+        let brow = b.row(p);
+        for i in 0..m {
+            let aip = arow[i];
+            if aip == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(i);
+            for j in 0..n {
+                crow[j] += aip * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// `C = A · Bᵀ` without materializing the transpose.
+///
+/// NT is the dot-product layout (both operand rows contiguous), so the
+/// kernel is 8 independent f32 partial sums per dot (keeps the FMA pipes
+/// full; a single accumulator serializes on the add latency) with row-block
+/// parallelism. This is the dense `Linear::forward` path the figure benches
+/// compare against — see EXPERIMENTS.md §Perf for the before/after.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt shape mismatch");
+    let m = a.rows();
+    let n = b.rows();
+    let k = a.cols();
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let work = m * n * k;
+    if work < 64 * 64 * 64 {
+        for i in 0..m {
+            nt_row(a.row(i), b, c.row_mut(i));
+        }
+        return c;
+    }
+    struct SendPtr(*mut f32);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+    let cptr = SendPtr(c.data_mut().as_mut_ptr());
+    let cptr = &cptr;
+    let nblocks = m.div_ceil(MC);
+    pool().parallel_for(nblocks, move |ib| {
+        let i0 = ib * MC;
+        let i1 = ((ib + 1) * MC).min(m);
+        // SAFETY: row blocks are disjoint across ib.
+        let cslice = unsafe { std::slice::from_raw_parts_mut(cptr.0, m * n) };
+        for i in i0..i1 {
+            nt_row(a.row(i), b, &mut cslice[i * n..(i + 1) * n]);
+        }
+    });
+    c
+}
+
+/// One output row of the NT product: `crow[j] = arow · b.row(j)`.
+#[inline]
+fn nt_row(arow: &[f32], b: &Mat, crow: &mut [f32]) {
+    for (j, cv) in crow.iter_mut().enumerate() {
+        let brow = b.row(j);
+        // 8 partial sums; the tail handled scalar.
+        let mut acc = [0f32; 8];
+        let chunks = arow.len() / 8 * 8;
+        let (ah, at) = arow.split_at(chunks);
+        let (bh, bt) = brow.split_at(chunks);
+        for (av, bv) in ah.chunks_exact(8).zip(bh.chunks_exact(8)) {
+            for p in 0..8 {
+                acc[p] += av[p] * bv[p];
+            }
+        }
+        let mut s = (acc[0] + acc[4]) + (acc[1] + acc[5]) + (acc[2] + acc[6]) + (acc[3] + acc[7]);
+        for (x, y) in at.iter().zip(bt) {
+            s += x * y;
+        }
+        *cv = s;
+    }
+}
+
+/// General `C = alpha·A·B + beta·C`.
+pub fn gemm(alpha: f32, a: &Mat, b: &Mat, beta: f32, c: &mut Mat) {
+    assert_eq!(a.cols(), b.rows());
+    assert_eq!(c.rows(), a.rows());
+    assert_eq!(c.cols(), b.cols());
+    if beta != 1.0 {
+        for v in c.data_mut() {
+            *v *= beta;
+        }
+    }
+    if alpha == 0.0 {
+        return;
+    }
+    let tmp = matmul(a, b);
+    c.axpy(alpha, &tmp);
+}
+
+/// Core blocked kernel: `C += A · B`, parallel over row blocks.
+fn gemm_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    let m = a.rows();
+    let k = a.cols();
+    let n = b.cols();
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let nblocks = m.div_ceil(MC);
+    // Small problems: stay serial to avoid pool overhead.
+    let work = m * n * k;
+    if work < 64 * 64 * 64 || nblocks == 1 {
+        let cdata = c.data_mut();
+        for ib in 0..nblocks {
+            gemm_rows_raw(a, b, cdata, ib * MC, ((ib + 1) * MC).min(m));
+        }
+        return;
+    }
+    // Each worker writes a disjoint row range of C — safe to share &mut via
+    // pointer (the pool joins before we return).
+    struct SendPtr(*mut f32);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+    let cptr = SendPtr(c.data_mut().as_mut_ptr());
+    let cptr = &cptr;
+    pool().parallel_for(nblocks, move |ib| {
+        let i0 = ib * MC;
+        let i1 = ((ib + 1) * MC).min(m);
+        // SAFETY: row blocks [i0, i1) are disjoint across ib.
+        let cslice = unsafe { std::slice::from_raw_parts_mut(cptr.0, m * n) };
+        gemm_rows_raw(a, b, cslice, i0, i1);
+    });
+}
+
+
+/// `C[i0..i1, :] += A[i0..i1, :] · B` on raw C storage (row-major, n cols).
+fn gemm_rows_raw(a: &Mat, b: &Mat, cdata: &mut [f32], i0: usize, i1: usize) {
+    let k = a.cols();
+    let n = b.cols();
+    for p0 in (0..k).step_by(KC) {
+        let p1 = (p0 + KC).min(k);
+        for i in i0..i1 {
+            let arow = a.row(i);
+            let crow = &mut cdata[i * n..(i + 1) * n];
+            for p in p0..p1 {
+                let aip = arow[p];
+                if aip == 0.0 {
+                    continue;
+                }
+                let brow = b.row(p);
+                // 4-wide unroll; the tail handled separately.
+                let chunks = n / 4 * 4;
+                let (bh, bt) = brow.split_at(chunks);
+                let (ch, ct) = crow.split_at_mut(chunks);
+                for (cv, bv) in ch.chunks_exact_mut(4).zip(bh.chunks_exact(4)) {
+                    cv[0] += aip * bv[0];
+                    cv[1] += aip * bv[1];
+                    cv[2] += aip * bv[2];
+                    cv[3] += aip * bv[3];
+                }
+                for (cv, bv) in ct.iter_mut().zip(bt) {
+                    *cv += aip * bv;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Philox;
+
+    fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut acc = 0f64;
+                for p in 0..a.cols() {
+                    acc += a.get(i, p) as f64 * b.get(p, j) as f64;
+                }
+                c.set(i, j, acc as f32);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive_small() {
+        let mut rng = Philox::seeded(4);
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (7, 7, 7), (16, 1, 16)] {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let c = matmul(&a, &b);
+            let r = matmul_naive(&a, &b);
+            assert!(super::super::rel_error(&c, &r) < 1e-5, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matches_naive_blocked_sizes() {
+        let mut rng = Philox::seeded(5);
+        // Cross the MC/KC block boundaries.
+        let a = Mat::randn(130, 300, &mut rng);
+        let b = Mat::randn(300, 70, &mut rng);
+        assert!(super::super::rel_error(&matmul(&a, &b), &matmul_naive(&a, &b)) < 1e-5);
+    }
+
+    #[test]
+    fn tn_and_nt_variants() {
+        let mut rng = Philox::seeded(6);
+        let a = Mat::randn(40, 30, &mut rng);
+        let b = Mat::randn(40, 20, &mut rng);
+        let c1 = matmul_tn(&a, &b);
+        let c2 = matmul(&a.transpose(), &b);
+        assert!(super::super::rel_error(&c1, &c2) < 1e-5);
+
+        let x = Mat::randn(25, 40, &mut rng);
+        let y = Mat::randn(35, 40, &mut rng);
+        let d1 = matmul_nt(&x, &y);
+        let d2 = matmul(&x, &y.transpose());
+        assert!(super::super::rel_error(&d1, &d2) < 1e-5);
+    }
+
+    #[test]
+    fn gemm_alpha_beta() {
+        let mut rng = Philox::seeded(7);
+        let a = Mat::randn(10, 12, &mut rng);
+        let b = Mat::randn(12, 8, &mut rng);
+        let mut c = Mat::filled(10, 8, 1.0);
+        gemm(2.0, &a, &b, 0.5, &mut c);
+        let expect = matmul(&a, &b).scale(2.0).add(&Mat::filled(10, 8, 0.5));
+        assert!(super::super::rel_error(&c, &expect) < 1e-5);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Philox::seeded(8);
+        let a = Mat::randn(9, 9, &mut rng);
+        let c = matmul(&a, &Mat::eye(9));
+        assert!(super::super::rel_error(&c, &a) < 1e-6);
+    }
+
+    #[test]
+    fn empty_dims() {
+        let a = Mat::zeros(0, 5);
+        let b = Mat::zeros(5, 3);
+        assert_eq!(matmul(&a, &b).shape(), (0, 3));
+    }
+}

@@ -1,0 +1,326 @@
+//! Row-major dense f32 matrix.
+
+use crate::rng::{fill_normal, Rng};
+
+/// Dense row-major matrix of f32. The storage layout matches what the PJRT
+/// runtime exchanges with HLO executables, so host↔device copies are flat
+/// memcpys.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![v; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a closure `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// I.i.d. standard normal entries.
+    pub fn randn<R: Rng>(rows: usize, cols: usize, rng: &mut R) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        fill_normal(rng, &mut m.data);
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Explicit transpose (cache-blocked).
+    pub fn transpose(&self) -> Mat {
+        const B: usize = 32;
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    /// Sub-matrix copy `rows r0..r1, cols c0..c1`.
+    pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Mat {
+        assert!(r0 <= r1 && r1 <= self.rows && c0 <= c1 && c1 <= self.cols);
+        let mut out = Mat::zeros(r1 - r0, c1 - c0);
+        for i in r0..r1 {
+            out.row_mut(i - r0)
+                .copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    /// Horizontal concatenation.
+    pub fn hcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Mat::zeros(self.rows, self.cols + other.cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        out
+    }
+
+    /// Vertical concatenation.
+    pub fn vcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Mat::from_vec(self.rows + other.rows, self.cols, data)
+    }
+
+    /// `self + other`.
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| a + b)
+            .collect();
+        Mat::from_vec(self.rows, self.cols, data)
+    }
+
+    /// `self - other`.
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| a - b)
+            .collect();
+        Mat::from_vec(self.rows, self.cols, data)
+    }
+
+    /// `self * s` (scalar).
+    pub fn scale(&self, s: f32) -> Mat {
+        let data = self.data.iter().map(|&a| a * s).collect();
+        Mat::from_vec(self.rows, self.cols, data)
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Matrix-vector product `A x` (f64 accumulation).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|i| {
+                self.row(i)
+                    .iter()
+                    .zip(x)
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum::<f64>() as f32
+            })
+            .collect()
+    }
+
+    /// `Aᵀ x` without forming the transpose.
+    pub fn matvec_t(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows);
+        let mut out = vec![0f64; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i] as f64;
+            for (j, &a) in self.row(i).iter().enumerate() {
+                out[j] += a as f64 * xi;
+            }
+        }
+        out.into_iter().map(|v| v as f32).collect()
+    }
+
+    /// Apply a column permutation: `out[:, j] = self[:, perm[j]]`.
+    pub fn permute_cols(&self, perm: &[usize]) -> Mat {
+        assert_eq!(perm.len(), self.cols);
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = out.row_mut(i);
+            for (j, &p) in perm.iter().enumerate() {
+                dst[j] = src[p];
+            }
+        }
+        out
+    }
+
+    /// Maximum absolute entry.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0f32, |m, &x| m.max(x.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Philox;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.get(1, 2), 12.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0]);
+        assert_eq!(m.col(2), vec![2.0, 12.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Philox::seeded(2);
+        let a = Mat::randn(13, 7, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().get(3, 5), a.get(5, 3));
+    }
+
+    #[test]
+    fn slicing_and_concat() {
+        let a = Mat::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
+        let s = a.slice(1, 3, 2, 4);
+        assert_eq!(s.shape(), (2, 2));
+        assert_eq!(s.get(0, 0), 6.0);
+        let h = a.slice(0, 4, 0, 2).hcat(&a.slice(0, 4, 2, 4));
+        assert_eq!(h, a);
+        let v = a.slice(0, 2, 0, 4).vcat(&a.slice(2, 4, 0, 4));
+        assert_eq!(v, a);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Mat::filled(2, 2, 2.0);
+        let b = Mat::filled(2, 2, 3.0);
+        assert_eq!(a.add(&b), Mat::filled(2, 2, 5.0));
+        assert_eq!(b.sub(&a), Mat::filled(2, 2, 1.0));
+        assert_eq!(a.scale(4.0), Mat::filled(2, 2, 8.0));
+        let mut c = a.clone();
+        c.axpy(2.0, &b);
+        assert_eq!(c, Mat::filled(2, 2, 8.0));
+    }
+
+    #[test]
+    fn matvec_consistency() {
+        let mut rng = Philox::seeded(3);
+        let a = Mat::randn(6, 4, &mut rng);
+        let x: Vec<f32> = (0..4).map(|i| i as f32).collect();
+        let y = a.matvec(&x);
+        let at = a.transpose();
+        let y2 = at.matvec_t(&x);
+        for (u, v) in y.iter().zip(&y2) {
+            assert!((u - v).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn permute_cols_identity_and_swap() {
+        let a = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        assert_eq!(a.permute_cols(&[0, 1, 2]), a);
+        let p = a.permute_cols(&[2, 0, 1]);
+        assert_eq!(p.row(0), &[2.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        let _ = Mat::from_vec(2, 2, vec![1.0; 3]);
+    }
+}

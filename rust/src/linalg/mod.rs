@@ -1,0 +1,131 @@
+//! Dense linear-algebra substrate.
+//!
+//! The paper's backend (pawX) bundles OpenBLAS; nothing of the sort is
+//! available here, so this module implements the dense kernels the rest of
+//! the crate needs: a row-major [`Mat`] type, blocked multi-threaded GEMM,
+//! Householder QR (plain and column-pivoted), Cholesky, triangular solves,
+//! and a one-sided Jacobi SVD. Everything is f32 storage with f64
+//! accumulation in reductions, which keeps the decompositions stable enough
+//! for the CQRRPT/RSVD experiments.
+
+mod chol;
+mod gemm;
+mod mat;
+mod qr;
+mod svd;
+mod tri;
+
+pub use chol::{cholesky_lower, CholError};
+pub use gemm::{gemm, matmul, matmul_tn, matmul_nt, set_gemm_threads};
+pub use mat::Mat;
+pub use qr::{qr_cp, qr_thin, QrCp};
+pub use svd::{svd_jacobi, Svd};
+pub use tri::{solve_triu, solve_triu_right, inv_triu};
+
+/// Frobenius norm.
+pub fn fro_norm(a: &Mat) -> f64 {
+    a.data().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// Relative Frobenius error ‖a − b‖_F / ‖b‖_F.
+pub fn rel_error(a: &Mat, b: &Mat) -> f64 {
+    assert_eq!(a.shape(), b.shape());
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for (&x, &y) in a.data().iter().zip(b.data()) {
+        num += ((x - y) as f64).powi(2);
+        den += (y as f64).powi(2);
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+/// Orthogonality defect ‖QᵀQ − I‖_F — the metric the CQRRPT paper reports.
+pub fn ortho_error(q: &Mat) -> f64 {
+    let qtq = matmul_tn(q, q);
+    let n = qtq.rows();
+    let mut err = 0f64;
+    for i in 0..n {
+        for j in 0..n {
+            let target = if i == j { 1.0 } else { 0.0 };
+            err += ((qtq.get(i, j) as f64) - target).powi(2);
+        }
+    }
+    err.sqrt()
+}
+
+/// Largest singular value estimate via power iteration on AᵀA.
+pub fn spectral_norm_est(a: &Mat, iters: usize, seed: u64) -> f64 {
+    use crate::rng::{fill_normal, Philox};
+    let n = a.cols();
+    if n == 0 || a.rows() == 0 {
+        return 0.0;
+    }
+    let mut rng = Philox::seeded(seed);
+    let mut v = vec![0f32; n];
+    fill_normal(&mut rng, &mut v);
+    normalize(&mut v);
+    let mut est = 0f64;
+    for _ in 0..iters {
+        // w = A v ; v' = Aᵀ w
+        let w = a.matvec(&v);
+        let v2 = a.matvec_t(&w);
+        est = norm2(&v2).sqrt(); // ‖AᵀAv‖ ≈ σ² when v is the top vector
+        v = v2;
+        let nv = norm2(&v).sqrt();
+        if nv < 1e-30 {
+            return 0.0;
+        }
+        for x in &mut v {
+            *x = (*x as f64 / nv) as f32;
+        }
+    }
+    est.sqrt()
+}
+
+fn norm2(v: &[f32]) -> f64 {
+    v.iter().map(|&x| (x as f64) * (x as f64)).sum()
+}
+
+fn normalize(v: &mut [f32]) {
+    let n = norm2(v).sqrt();
+    if n > 0.0 {
+        for x in v.iter_mut() {
+            *x = (*x as f64 / n) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Philox;
+
+    #[test]
+    fn fro_norm_identity() {
+        let i = Mat::eye(4);
+        assert!((fro_norm(&i) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rel_error_zero_for_equal() {
+        let mut rng = Philox::seeded(1);
+        let a = Mat::randn(5, 7, &mut rng);
+        assert_eq!(rel_error(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn ortho_error_of_identity_is_zero() {
+        let q = Mat::eye(6);
+        assert!(ortho_error(&q) < 1e-7);
+    }
+
+    #[test]
+    fn spectral_norm_diag() {
+        // diag(3, 1) has spectral norm 3.
+        let mut a = Mat::zeros(2, 2);
+        a.set(0, 0, 3.0);
+        a.set(1, 1, 1.0);
+        let s = spectral_norm_est(&a, 50, 7);
+        assert!((s - 3.0).abs() < 1e-3, "{s}");
+    }
+}

@@ -1,0 +1,297 @@
+//! Householder QR: thin (economy) and column-pivoted variants.
+//!
+//! The column-pivoted factorization is the deterministic core CQRRPT runs on
+//! the *sketch* (a short, wide-ish matrix), so it only ever sees `d × n`
+//! inputs with `d = O(n)` — the O(mn²) cost lives here, not on the tall
+//! input. `qr_thin` is the deterministic baseline the decomposition benches
+//! compare against.
+
+use super::Mat;
+
+/// Thin QR via Householder reflections: `A = Q·R` with `Q: m×n` (orthonormal
+/// columns, requires m ≥ n) and `R: n×n` upper-triangular.
+pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "qr_thin requires m >= n (got {m}x{n})");
+    // Work in f64 for stability; matrices here are modest (n ≤ few hundred).
+    let mut r = to_f64(a);
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n); // Householder vectors
+    for k in 0..n {
+        // Build the reflector for column k below the diagonal.
+        let mut x = vec![0f64; m - k];
+        for i in k..m {
+            x[i - k] = r[i * n + k];
+        }
+        let normx = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if normx < 1e-300 {
+            vs.push(vec![0f64; m - k]);
+            continue;
+        }
+        let alpha = if x[0] >= 0.0 { -normx } else { normx };
+        let mut v = x;
+        v[0] -= alpha;
+        let vnorm2 = v.iter().map(|t| t * t).sum::<f64>();
+        if vnorm2 < 1e-300 {
+            vs.push(vec![0f64; m - k]);
+            continue;
+        }
+        // Apply H = I - 2 v vᵀ / (vᵀv) to R[k.., k..].
+        for j in k..n {
+            let mut dot = 0f64;
+            for i in k..m {
+                dot += v[i - k] * r[i * n + j];
+            }
+            let c = 2.0 * dot / vnorm2;
+            for i in k..m {
+                r[i * n + j] -= c * v[i - k];
+            }
+        }
+        vs.push(v);
+    }
+    // Extract R (upper n×n).
+    let mut rmat = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            rmat.set(i, j, r[i * n + j] as f32);
+        }
+    }
+    // Form thin Q by applying reflectors to the first n columns of I.
+    let mut q = vec![0f64; m * n];
+    for j in 0..n {
+        q[j * n + j] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        if v.is_empty() || v.iter().all(|&t| t == 0.0) {
+            continue;
+        }
+        let vnorm2 = v.iter().map(|t| t * t).sum::<f64>();
+        for j in 0..n {
+            let mut dot = 0f64;
+            for i in k..m {
+                dot += v[i - k] * q[i * n + j];
+            }
+            let c = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[i * n + j] -= c * v[i - k];
+            }
+        }
+    }
+    let qmat = Mat::from_vec(m, n, q.into_iter().map(|v| v as f32).collect());
+    (qmat, rmat)
+}
+
+/// Result of column-pivoted QR: `A·P = Q·R`, `perm[j]` = original index of
+/// the j-th pivoted column, `rank` = numerical rank at tolerance `tol`.
+pub struct QrCp {
+    pub q: Mat,
+    pub r: Mat,
+    pub perm: Vec<usize>,
+    pub rank: usize,
+}
+
+/// Column-pivoted Householder QR (LAPACK `geqp3`-style greedy pivoting on
+/// remaining column norms).
+pub fn qr_cp(a: &Mat, tol: f64) -> QrCp {
+    let (m, n) = a.shape();
+    let kmax = m.min(n);
+    let mut work = to_f64(a);
+    let mut perm: Vec<usize> = (0..n).collect();
+    // Column norms (squared), updated as we go; recomputed when cancellation
+    // makes the running value unreliable.
+    let mut cnorm2: Vec<f64> = (0..n)
+        .map(|j| (0..m).map(|i| work[i * n + j].powi(2)).sum())
+        .collect();
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(kmax);
+    let mut rank = kmax;
+    let norm_tol = {
+        let max0 = cnorm2.iter().cloned().fold(0f64, f64::max).sqrt();
+        (tol * max0.max(1e-300)).powi(2)
+    };
+    for k in 0..kmax {
+        // Pivot: remaining column with the largest norm.
+        let (jmax, &nmax) = cnorm2[k..]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(off, v)| (k + off, v))
+            .unwrap();
+        if nmax <= norm_tol {
+            rank = k;
+            // Zero vectors for remaining reflectors (identity).
+            for _ in k..kmax {
+                vs.push(Vec::new());
+            }
+            break;
+        }
+        if jmax != k {
+            for i in 0..m {
+                work.swap(i * n + k, i * n + jmax);
+            }
+            perm.swap(k, jmax);
+            cnorm2.swap(k, jmax);
+        }
+        // Householder on column k.
+        let mut x = vec![0f64; m - k];
+        for i in k..m {
+            x[i - k] = work[i * n + k];
+        }
+        let normx = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let alpha = if x[0] >= 0.0 { -normx } else { normx };
+        let mut v = x;
+        v[0] -= alpha;
+        let vnorm2 = v.iter().map(|t| t * t).sum::<f64>();
+        if vnorm2 < 1e-300 {
+            vs.push(Vec::new());
+            continue;
+        }
+        for j in k..n {
+            let mut dot = 0f64;
+            for i in k..m {
+                dot += v[i - k] * work[i * n + j];
+            }
+            let c = 2.0 * dot / vnorm2;
+            for i in k..m {
+                work[i * n + j] -= c * v[i - k];
+            }
+        }
+        vs.push(v);
+        // Downdate column norms for columns right of k.
+        for j in (k + 1)..n {
+            let rkj = work[k * n + j];
+            cnorm2[j] -= rkj * rkj;
+            if cnorm2[j] < 1e-12 * norm_tol.max(1e-300) || cnorm2[j] < 0.0 {
+                // Recompute to dodge cancellation.
+                cnorm2[j] = ((k + 1)..m).map(|i| work[i * n + j].powi(2)).sum();
+            }
+        }
+    }
+    // R: kmax×n upper-trapezoidal.
+    let mut rmat = Mat::zeros(kmax, n);
+    for i in 0..kmax {
+        for j in i..n {
+            rmat.set(i, j, work[i * n + j] as f32);
+        }
+    }
+    // Thin Q: m×kmax.
+    let mut q = vec![0f64; m * kmax];
+    for j in 0..kmax {
+        q[j * kmax + j] = 1.0;
+    }
+    for k in (0..kmax).rev() {
+        let v = match vs.get(k) {
+            Some(v) if !v.is_empty() => v,
+            _ => continue,
+        };
+        let vnorm2 = v.iter().map(|t| t * t).sum::<f64>();
+        for j in 0..kmax {
+            let mut dot = 0f64;
+            for i in k..m {
+                dot += v[i - k] * q[i * kmax + j];
+            }
+            let c = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[i * kmax + j] -= c * v[i - k];
+            }
+        }
+    }
+    QrCp {
+        q: Mat::from_vec(m, kmax, q.into_iter().map(|v| v as f32).collect()),
+        r: rmat,
+        perm,
+        rank,
+    }
+}
+
+fn to_f64(a: &Mat) -> Vec<f64> {
+    a.data().iter().map(|&x| x as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{fro_norm, matmul, ortho_error, rel_error};
+    use crate::rng::Philox;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn thin_qr_reconstructs() {
+        let mut rng = Philox::seeded(21);
+        let a = Mat::randn(50, 20, &mut rng);
+        let (q, r) = qr_thin(&a);
+        assert_eq!(q.shape(), (50, 20));
+        assert_eq!(r.shape(), (20, 20));
+        assert!(rel_error(&matmul(&q, &r), &a) < 1e-5);
+        assert!(ortho_error(&q) < 1e-5);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Philox::seeded(22);
+        let a = Mat::randn(30, 10, &mut rng);
+        let (_q, r) = qr_thin(&a);
+        for i in 0..10 {
+            for j in 0..i {
+                assert_eq!(r.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_property_orthogonal_and_exact() {
+        prop_check("qr-thin-props", 25, |g| {
+            let n = g.usize(1..12);
+            let m = n + g.usize(0..20);
+            let a = Mat::randn(m, n, g.rng());
+            let (q, r) = qr_thin(&a);
+            assert!(ortho_error(&q) < 1e-4, "ortho {}", ortho_error(&q));
+            assert!(rel_error(&matmul(&q, &r), &a) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn pivoted_qr_reconstructs_with_permutation() {
+        let mut rng = Philox::seeded(23);
+        let a = Mat::randn(40, 15, &mut rng);
+        let f = qr_cp(&a, 1e-10);
+        let ap = a.permute_cols(&f.perm);
+        assert!(rel_error(&matmul(&f.q, &f.r), &ap) < 1e-4);
+        assert!(ortho_error(&f.q) < 1e-4);
+        assert_eq!(f.rank, 15);
+    }
+
+    #[test]
+    fn pivoted_qr_detects_rank() {
+        // Rank-3 matrix: outer product structure.
+        let mut rng = Philox::seeded(24);
+        let u = Mat::randn(30, 3, &mut rng);
+        let v = Mat::randn(3, 12, &mut rng);
+        let a = matmul(&u, &v);
+        let f = qr_cp(&a, 1e-5);
+        assert_eq!(f.rank, 3, "expected rank 3");
+    }
+
+    #[test]
+    fn pivoted_diagonal_decreasing() {
+        // |R[k,k]| must be non-increasing under greedy pivoting.
+        let mut rng = Philox::seeded(25);
+        let a = Mat::randn(25, 10, &mut rng);
+        let f = qr_cp(&a, 1e-12);
+        for k in 1..10 {
+            let prev = f.r.get(k - 1, k - 1).abs();
+            let cur = f.r.get(k, k).abs();
+            assert!(
+                cur <= prev * 1.3 + 1e-4,
+                "diagonal grew at {k}: {cur} > {prev}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_matrix_rank_zero() {
+        let a = Mat::zeros(10, 4);
+        let f = qr_cp(&a, 1e-10);
+        assert_eq!(f.rank, 0);
+        assert!(fro_norm(&f.r) < 1e-6);
+    }
+}

@@ -1,0 +1,222 @@
+//! One-sided Jacobi SVD.
+//!
+//! RSVD reduces the SVD of a huge matrix to the SVD of a small `k×n` (or
+//! `(k+p)×n`) core, so a robust dense SVD for modest sizes is all the
+//! substrate needs. One-sided Jacobi is simple, numerically excellent
+//! (it computes small singular values to high relative accuracy), and its
+//! O(n³) per-sweep cost is irrelevant at these sizes.
+
+use super::{matmul, Mat};
+
+/// Thin SVD result: `A = U · diag(s) · Vᵀ` with `U: m×r`, `s: r`, `V: n×r`,
+/// `r = min(m, n)`, singular values in non-increasing order.
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f32>,
+    pub v: Mat,
+}
+
+impl Svd {
+    /// Reconstruct `A` (mostly for tests).
+    pub fn reconstruct(&self) -> Mat {
+        let r = self.s.len();
+        let mut us = self.u.clone();
+        for i in 0..us.rows() {
+            for j in 0..r {
+                us.set(i, j, us.get(i, j) * self.s[j]);
+            }
+        }
+        matmul(&us, &self.v.transpose())
+    }
+
+    /// Truncate to rank `k`.
+    pub fn truncate(&self, k: usize) -> Svd {
+        let k = k.min(self.s.len());
+        Svd {
+            u: self.u.slice(0, self.u.rows(), 0, k),
+            s: self.s[..k].to_vec(),
+            v: self.v.slice(0, self.v.rows(), 0, k),
+        }
+    }
+}
+
+/// One-sided Jacobi SVD (Hestenes). Orthogonalizes the columns of a working
+/// copy of `A` by Jacobi rotations; on convergence the column norms are the
+/// singular values and the accumulated rotations give `V`.
+///
+/// For `m < n` the factorization is computed on `Aᵀ` and swapped back.
+pub fn svd_jacobi(a: &Mat) -> Svd {
+    let (m, n) = a.shape();
+    if m < n {
+        let t = svd_jacobi(&a.transpose());
+        return Svd {
+            u: t.v,
+            s: t.s,
+            v: t.u,
+        };
+    }
+    // Work in f64.
+    let mut w: Vec<f64> = a.data().iter().map(|&x| x as f64).collect(); // m×n
+    let mut v = vec![0f64; n * n];
+    for j in 0..n {
+        v[j * n + j] = 1.0;
+    }
+    let max_sweeps = 60;
+    let eps = 1e-12;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Gram entries for columns p, q.
+                let mut app = 0f64;
+                let mut aqq = 0f64;
+                let mut apq = 0f64;
+                for i in 0..m {
+                    let xp = w[i * n + p];
+                    let xq = w[i * n + q];
+                    app += xp * xp;
+                    aqq += xq * xq;
+                    apq += xp * xq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let xp = w[i * n + p];
+                    let xq = w[i * n + q];
+                    w[i * n + p] = c * xp - s * xq;
+                    w[i * n + q] = s * xp + c * xq;
+                }
+                for i in 0..n {
+                    let vp = v[i * n + p];
+                    let vq = v[i * n + q];
+                    v[i * n + p] = c * vp - s * vq;
+                    v[i * n + q] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-15 {
+            break;
+        }
+    }
+    // Column norms → singular values; normalize U columns.
+    let mut sv: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let norm = (0..m).map(|i| w[i * n + j].powi(2)).sum::<f64>().sqrt();
+            (norm, j)
+        })
+        .collect();
+    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut u = Mat::zeros(m, n);
+    let mut vout = Mat::zeros(n, n);
+    let mut s = Vec::with_capacity(n);
+    for (dst, &(norm, src)) in sv.iter().enumerate() {
+        s.push(norm as f32);
+        if norm > 1e-300 {
+            for i in 0..m {
+                u.set(i, dst, (w[i * n + src] / norm) as f32);
+            }
+        }
+        for i in 0..n {
+            vout.set(i, dst, v[i * n + src] as f32);
+        }
+    }
+    Svd { u, s, v: vout }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{ortho_error, rel_error};
+    use crate::rng::Philox;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn reconstructs_random() {
+        let mut rng = Philox::seeded(51);
+        let a = Mat::randn(20, 12, &mut rng);
+        let svd = svd_jacobi(&a);
+        assert!(rel_error(&svd.reconstruct(), &a) < 1e-4);
+        assert!(ortho_error(&svd.u) < 1e-4);
+        assert!(ortho_error(&svd.v) < 1e-4);
+    }
+
+    #[test]
+    fn wide_matrix_via_transpose() {
+        let mut rng = Philox::seeded(52);
+        let a = Mat::randn(8, 25, &mut rng);
+        let svd = svd_jacobi(&a);
+        assert_eq!(svd.u.shape(), (8, 8));
+        assert_eq!(svd.v.shape(), (25, 8));
+        assert!(rel_error(&svd.reconstruct(), &a) < 1e-4);
+    }
+
+    #[test]
+    fn known_singular_values() {
+        // diag(3, 2, 1) embedded in 5×3.
+        let mut a = Mat::zeros(5, 3);
+        a.set(0, 0, 3.0);
+        a.set(1, 1, 2.0);
+        a.set(2, 2, 1.0);
+        let svd = svd_jacobi(&a);
+        assert!((svd.s[0] - 3.0).abs() < 1e-5);
+        assert!((svd.s[1] - 2.0).abs() < 1e-5);
+        assert!((svd.s[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn values_sorted_nonincreasing() {
+        let mut rng = Philox::seeded(53);
+        let a = Mat::randn(15, 15, &mut rng);
+        let svd = svd_jacobi(&a);
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+
+    #[test]
+    fn truncation_error_is_tail_energy() {
+        // Eckart–Young: ‖A − A_k‖_F² = Σ_{i>k} σ_i².
+        let mut rng = Philox::seeded(54);
+        let a = Mat::randn(18, 10, &mut rng);
+        let svd = svd_jacobi(&a);
+        let k = 4;
+        let ak = svd.truncate(k).reconstruct();
+        let err2: f64 = {
+            let d = a.sub(&ak);
+            d.data().iter().map(|&x| (x as f64).powi(2)).sum()
+        };
+        let tail2: f64 = svd.s[k..].iter().map(|&s| (s as f64).powi(2)).sum();
+        assert!(
+            (err2 - tail2).abs() < 1e-3 * tail2.max(1e-9),
+            "err2={err2} tail2={tail2}"
+        );
+    }
+
+    #[test]
+    fn property_reconstruction() {
+        prop_check("svd-reconstruct", 15, |g| {
+            let m = g.usize(1..15);
+            let n = g.usize(1..15);
+            let a = Mat::randn(m, n, g.rng());
+            let svd = svd_jacobi(&a);
+            assert!(rel_error(&svd.reconstruct(), &a) < 1e-3);
+        });
+    }
+
+    #[test]
+    fn rank_deficient() {
+        let mut rng = Philox::seeded(55);
+        let u = Mat::randn(12, 2, &mut rng);
+        let v = Mat::randn(2, 9, &mut rng);
+        let a = matmul(&u, &v);
+        let svd = svd_jacobi(&a);
+        assert!(svd.s[2] < 1e-4 * svd.s[0], "σ₃ should collapse: {:?}", &svd.s[..4]);
+    }
+}

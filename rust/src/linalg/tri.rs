@@ -1,0 +1,112 @@
+//! Triangular solves and inversion, used by CholeskyQR / CQRRPT
+//! (preconditioning `A · R⁻¹`) and by RSVD's re-orthonormalization.
+
+use super::Mat;
+
+/// Solve `R · X = B` for X, with `R` upper-triangular (n×n), `B` n×m.
+pub fn solve_triu(r: &Mat, b: &Mat) -> Mat {
+    let n = r.rows();
+    assert_eq!(r.cols(), n);
+    assert_eq!(b.rows(), n);
+    let m = b.cols();
+    let mut x = vec![0f64; n * m];
+    for j in 0..m {
+        for i in (0..n).rev() {
+            let mut s = b.get(i, j) as f64;
+            for p in (i + 1)..n {
+                s -= r.get(i, p) as f64 * x[p * m + j];
+            }
+            let d = r.get(i, i) as f64;
+            x[i * m + j] = s / d;
+        }
+    }
+    Mat::from_vec(n, m, x.into_iter().map(|v| v as f32).collect())
+}
+
+/// Solve `X · R = B` for X, with `R` upper-triangular (n×n), `B` m×n.
+/// This is the CholeskyQR preconditioning step `A_pre = A · R⁻¹`.
+pub fn solve_triu_right(b: &Mat, r: &Mat) -> Mat {
+    let n = r.rows();
+    assert_eq!(r.cols(), n);
+    assert_eq!(b.cols(), n);
+    let m = b.rows();
+    let mut x = Mat::zeros(m, n);
+    for i in 0..m {
+        let brow = b.row(i);
+        // Forward sweep over columns: x[i,j] = (b[i,j] - Σ_{p<j} x[i,p] R[p,j]) / R[j,j]
+        let mut xrow = vec![0f64; n];
+        for j in 0..n {
+            let mut s = brow[j] as f64;
+            for (p, xv) in xrow.iter().enumerate().take(j) {
+                s -= xv * r.get(p, j) as f64;
+            }
+            xrow[j] = s / r.get(j, j) as f64;
+        }
+        for (j, v) in xrow.into_iter().enumerate() {
+            x.set(i, j, v as f32);
+        }
+    }
+    x
+}
+
+/// Invert an upper-triangular matrix.
+pub fn inv_triu(r: &Mat) -> Mat {
+    solve_triu(r, &Mat::eye(r.rows()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, rel_error};
+    use crate::rng::{Philox, Rng};
+
+    /// Random well-conditioned upper-triangular matrix.
+    fn rand_triu(n: usize, rng: &mut Philox) -> Mat {
+        let mut r = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                r.set(i, j, rng.next_normal() * 0.3);
+            }
+            // Push the diagonal away from zero.
+            r.set(i, i, 1.0 + rng.next_f32());
+        }
+        r
+    }
+
+    #[test]
+    fn solve_left() {
+        let mut rng = Philox::seeded(41);
+        let r = rand_triu(8, &mut rng);
+        let x_true = Mat::randn(8, 5, &mut rng);
+        let b = matmul(&r, &x_true);
+        let x = solve_triu(&r, &b);
+        assert!(rel_error(&x, &x_true) < 1e-4);
+    }
+
+    #[test]
+    fn solve_right() {
+        let mut rng = Philox::seeded(42);
+        let r = rand_triu(8, &mut rng);
+        let x_true = Mat::randn(6, 8, &mut rng);
+        let b = matmul(&x_true, &r);
+        let x = solve_triu_right(&b, &r);
+        assert!(rel_error(&x, &x_true) < 1e-4);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut rng = Philox::seeded(43);
+        let r = rand_triu(10, &mut rng);
+        let rinv = inv_triu(&r);
+        let prod = matmul(&r, &rinv);
+        assert!(rel_error(&prod, &Mat::eye(10)) < 1e-4);
+    }
+
+    #[test]
+    fn identity_solve_is_copy() {
+        let mut rng = Philox::seeded(44);
+        let b = Mat::randn(4, 4, &mut rng);
+        assert!(rel_error(&solve_triu(&Mat::eye(4), &b), &b) < 1e-7);
+        assert!(rel_error(&solve_triu_right(&b, &Mat::eye(4)), &b) < 1e-7);
+    }
+}

@@ -1,0 +1,315 @@
+//! `panther` — CLI for the Panther-RS framework.
+//!
+//! Subcommands:
+//! - `info`       — artifact/model inventory
+//! - `train`      — train a model variant (BERT-mini MLM or conv classifier)
+//! - `tune`       — run the SKAutoTuner over BERT sketch candidates
+//! - `decompose`  — RSVD / CQRRPT vs deterministic baselines
+//! - `smoke`      — execute kernel artifacts once and check numerics (CI)
+
+use anyhow::{bail, Context, Result};
+use panther::coordinator::RuntimeServer;
+use panther::data::{ImageDataset, TextCorpus};
+use panther::decomp::{cqrrpt, rsvd, CqrrptOpts, RsvdOpts};
+use panther::linalg::{fro_norm, matmul, ortho_error, qr_thin, svd_jacobi, Mat};
+use panther::rng::Philox;
+use panther::runtime::{HostTensor, Runtime};
+use panther::train::{BertTrainer, ConvTrainer, ModelState};
+use panther::util::cli::Command;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(sub) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match sub.as_str() {
+        "info" => cmd_info(rest),
+        "train" => cmd_train(rest),
+        "tune" => cmd_tune(rest),
+        "decompose" => cmd_decompose(rest),
+        "smoke" => cmd_smoke(rest),
+        "--help" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (see `panther help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "panther {} — RandNLA model compression (Rust + JAX + Pallas)\n\n\
+         subcommands:\n\
+         \x20 info        artifact & model inventory\n\
+         \x20 train       train a model variant end-to-end\n\
+         \x20 tune        SKAutoTuner over BERT sketch candidates\n\
+         \x20 decompose   RSVD / CQRRPT vs deterministic baselines\n\
+         \x20 smoke       execute each kernel artifact once\n\n\
+         run `panther <subcommand> --help` for options",
+        panther::VERSION
+    );
+}
+
+fn wants_help(args: &[String]) -> bool {
+    args.iter().any(|a| a == "--help" || a == "-h")
+}
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let cmd = Command::new("info", "artifact & model inventory").opt(
+        "artifacts",
+        "artifact directory",
+        Some("artifacts"),
+    );
+    if wants_help(args) {
+        println!("{}", cmd.help());
+        return Ok(());
+    }
+    let parsed = cmd.parse(args).map_err(anyhow::Error::msg)?;
+    let rt = Runtime::open(parsed.get_or("artifacts", "artifacts"))?;
+    println!("panther {} — artifact inventory", panther::VERSION);
+    println!("\nmodels:");
+    for name in rt.manifest().model_names() {
+        let m = rt.manifest().model(name).unwrap();
+        println!(
+            "  {:<16} family={:<5} params={:>9} sketch={:?}",
+            m.name,
+            m.family,
+            m.param_count,
+            m.sketch()
+        );
+    }
+    println!("\nartifacts:");
+    for name in rt.manifest().artifact_names() {
+        let a = rt.manifest().artifact(name).unwrap();
+        println!(
+            "  {:<24} {:>3} inputs {:>3} outputs  ({})",
+            a.name,
+            a.inputs.len(),
+            a.outputs.len(),
+            a.path
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let cmd = Command::new("train", "train a model variant")
+        .opt("artifacts", "artifact directory", Some("artifacts"))
+        .opt("model", "model name from the manifest", Some("bert_dense"))
+        .opt("steps", "training steps", Some("100"))
+        .opt("seed", "init + data seed", Some("0"))
+        .opt("eval-batches", "eval batches after training", Some("8"))
+        .opt("checkpoint", "path to save the final state", None);
+    if wants_help(args) {
+        println!("{}", cmd.help());
+        return Ok(());
+    }
+    let p = cmd.parse(args).map_err(anyhow::Error::msg)?;
+    let mut rt = Runtime::open(p.get_or("artifacts", "artifacts"))?;
+    let model = p.get_or("model", "bert_dense").to_string();
+    let steps = p.get_u64("steps", 100);
+    let seed = p.get_u64("seed", 0);
+    let spec = rt
+        .manifest()
+        .model(&model)
+        .with_context(|| format!("unknown model {model}"))?
+        .clone();
+    let mut state = ModelState::init(&mut rt, &model, seed as f32)?;
+    println!(
+        "training {model} ({} params) for {steps} steps",
+        state.param_count()
+    );
+    let mut data_rng = Philox::new(seed, 1);
+    match spec.family.as_str() {
+        "bert" => {
+            let corpus = TextCorpus::generate(
+                spec.config_usize("vocab").unwrap_or(256),
+                200_000,
+                seed ^ 0xC0FFEE,
+            );
+            let mut trainer = BertTrainer::new(&mut rt, &corpus);
+            let report = trainer.train(&mut state, steps, &mut data_rng)?;
+            let eval = trainer.evaluate(&state, p.get_usize("eval-batches", 8), &mut data_rng)?;
+            println!(
+                "done in {:.1?}: final train loss {:.4}, eval loss {:.4}",
+                report.wall, report.final_loss, eval
+            );
+        }
+        "conv" => {
+            let ds = ImageDataset::cifar_like();
+            let mut trainer = ConvTrainer::new(&mut rt, &ds);
+            let report = trainer.train(&mut state, steps, &mut data_rng)?;
+            let acc = trainer.accuracy(&state, p.get_usize("eval-batches", 8), &mut data_rng)?;
+            println!(
+                "done in {:.1?}: final loss {:.4}, accuracy {:.1}%",
+                report.wall,
+                report.final_loss,
+                acc * 100.0
+            );
+        }
+        f => bail!("unknown model family {f}"),
+    }
+    if let Some(ckpt) = p.get("checkpoint") {
+        panther::train::checkpoint::save(&state, ckpt)?;
+        println!("checkpoint written to {ckpt}");
+    }
+    Ok(())
+}
+
+fn cmd_tune(args: &[String]) -> Result<()> {
+    let cmd = Command::new("tune", "SKAutoTuner over BERT sketch candidates")
+        .opt("artifacts", "artifact directory", Some("artifacts"))
+        .opt("train-steps", "dense pre-training steps", Some("60"))
+        .opt("eval-batches", "eval batches per candidate", Some("4"))
+        .opt(
+            "loss-margin",
+            "allowed eval-loss increase over dense",
+            Some("0.35"),
+        )
+        .opt("seed", "seed", Some("0"));
+    if wants_help(args) {
+        println!("{}", cmd.help());
+        return Ok(());
+    }
+    let p = cmd.parse(args).map_err(anyhow::Error::msg)?;
+    let outcome = panther::tuner::bert_tune::tune_bert_candidates(
+        p.get_or("artifacts", "artifacts"),
+        p.get_u64("train-steps", 60),
+        p.get_usize("eval-batches", 4),
+        p.get_f64("loss-margin", 0.35),
+        p.get_u64("seed", 0),
+    )?;
+    println!("{outcome}");
+    Ok(())
+}
+
+fn cmd_decompose(args: &[String]) -> Result<()> {
+    let cmd = Command::new("decompose", "randomized decompositions demo")
+        .opt("rows", "matrix rows", Some("2000"))
+        .opt("cols", "matrix cols", Some("64"))
+        .opt("rank", "RSVD target rank", Some("16"))
+        .opt("seed", "seed", Some("0"));
+    if wants_help(args) {
+        println!("{}", cmd.help());
+        return Ok(());
+    }
+    let p = cmd.parse(args).map_err(anyhow::Error::msg)?;
+    let (m, n) = (p.get_usize("rows", 2000), p.get_usize("cols", 64));
+    let rank = p.get_usize("rank", 16);
+    let mut rng = Philox::seeded(p.get_u64("seed", 0));
+    let a = Mat::randn(m, n, &mut rng);
+
+    let t0 = std::time::Instant::now();
+    let f = cqrrpt(&a, &CqrrptOpts::default());
+    let t_cqrrpt = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let (q_hh, _r) = qr_thin(&a);
+    let t_hh = t0.elapsed();
+    println!("CQRRPT on {m}×{n}:");
+    println!(
+        "  cqrrpt:      {:>10.2?}  ‖QᵀQ−I‖ = {:.2e}  (fallback: {})",
+        t_cqrrpt,
+        ortho_error(&f.q),
+        f.fallback
+    );
+    println!(
+        "  householder: {:>10.2?}  ‖QᵀQ−I‖ = {:.2e}",
+        t_hh,
+        ortho_error(&q_hh)
+    );
+
+    let t0 = std::time::Instant::now();
+    let rs = rsvd(
+        &a,
+        &RsvdOpts {
+            rank,
+            ..Default::default()
+        },
+    );
+    let t_rsvd = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let exact = svd_jacobi(&a);
+    let t_svd = t0.elapsed();
+    let opt = fro_norm(&a.sub(&exact.truncate(rank).reconstruct()));
+    let got = fro_norm(&a.sub(&rs.reconstruct()));
+    println!("RSVD rank {rank}:");
+    println!("  rsvd:        {t_rsvd:>10.2?}  ‖A−Â‖ = {got:.4}");
+    println!("  jacobi svd:  {t_svd:>10.2?}  optimal rank-{rank} error = {opt:.4}");
+    println!("  suboptimality: {:.3}×", got / opt.max(1e-12));
+    Ok(())
+}
+
+fn cmd_smoke(args: &[String]) -> Result<()> {
+    let cmd = Command::new("smoke", "execute each kernel artifact once").opt(
+        "artifacts",
+        "artifact directory",
+        Some("artifacts"),
+    );
+    if wants_help(args) {
+        println!("{}", cmd.help());
+        return Ok(());
+    }
+    let p = cmd.parse(args).map_err(anyhow::Error::msg)?;
+    let server = RuntimeServer::start(p.get_or("artifacts", "artifacts"))?;
+    let h = server.handle();
+    for name in ["k_sk_linear", "k_performer"] {
+        let spec = h
+            .manifest()
+            .artifact(name)
+            .with_context(|| format!("missing {name}"))?
+            .clone();
+        let inputs: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .map(|s| HostTensor::zeros(&s.shape))
+            .collect();
+        let out = h.execute(name, inputs)?;
+        println!("{name}: OK ({} outputs)", out.len());
+    }
+    // Verify against the Rust reference path: random SKLinear inputs.
+    let spec = h.manifest().artifact("k_sk_linear").unwrap().clone();
+    let mut rng = Philox::seeded(7);
+    let inputs: Vec<HostTensor> = spec
+        .inputs
+        .iter()
+        .map(|s| HostTensor::randn(&s.shape, 0.5, &mut rng))
+        .collect();
+    let out = h.execute("k_sk_linear", inputs.clone())?;
+    let (x, u, v, bias) = (&inputs[0], &inputs[1], &inputs[2], &inputs[3]);
+    let l = u.shape()[0];
+    let (d_in, k) = (u.shape()[1], u.shape()[2]);
+    let d_out = v.shape()[2];
+    let mut expect = Mat::zeros(x.shape()[0], d_out);
+    for j in 0..l {
+        let uj = Mat::from_vec(d_in, k, u.data()[j * d_in * k..(j + 1) * d_in * k].to_vec());
+        let vj = Mat::from_vec(
+            k,
+            d_out,
+            v.data()[j * k * d_out..(j + 1) * k * d_out].to_vec(),
+        );
+        expect.axpy(1.0 / l as f32, &matmul(&matmul(&x.to_mat(), &uj), &vj));
+    }
+    for i in 0..expect.rows() {
+        for (val, bb) in expect.row_mut(i).iter_mut().zip(bias.data()) {
+            *val += bb;
+        }
+    }
+    let err = panther::linalg::rel_error(&out[0].to_mat(), &expect);
+    println!("k_sk_linear vs rust reference: rel error {err:.2e}");
+    anyhow::ensure!(err < 1e-4, "kernel/reference mismatch");
+    println!("{}", server.metrics().report());
+    Ok(())
+}

@@ -1,0 +1,521 @@
+//! Multi-head attention: exact softmax attention and Panther's
+//! `RandMultiHeadAttention` (Performer FAVOR+ linear attention,
+//! Choromanski et al. 2022 — the paper's [3]).
+//!
+//! Both forwards route every temporary through a [`MemTracker`], so the
+//! Figure-3 experiment (peak forward memory vs sequence length, with "x"
+//! markers where the dense implementation exceeds the device budget) is
+//! measured, not modeled: the dense path materializes the `h × n × n` score
+//! tensor exactly like `nn.MultiheadAttention` does, the Performer path
+//! only ever holds `n × m` feature blocks and the `m × d_h` running state.
+
+use crate::linalg::{matmul, Mat};
+use crate::rng::{Philox, Rng};
+use crate::util::memtrack::{MemError, MemTracker};
+
+/// Random-feature kernel for the Performer (the paper benchmarks both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// FAVOR+ positive features for the softmax kernel.
+    Softmax,
+    /// ReLU features.
+    Relu,
+}
+
+/// Shared per-head projection weights (Q, K, V, output), so the dense and
+/// random variants compare with identical parameter state.
+#[derive(Clone, Debug)]
+pub struct AttnWeights {
+    pub wq: Mat,
+    pub wk: Mat,
+    pub wv: Mat,
+    pub wo: Mat,
+    pub embed_dim: usize,
+    pub num_heads: usize,
+}
+
+impl AttnWeights {
+    pub fn random<R: Rng>(embed_dim: usize, num_heads: usize, rng: &mut R) -> Self {
+        assert_eq!(embed_dim % num_heads, 0, "embed_dim must divide num_heads");
+        let s = (1.0 / embed_dim as f32).sqrt();
+        AttnWeights {
+            wq: Mat::randn(embed_dim, embed_dim, rng).scale(s),
+            wk: Mat::randn(embed_dim, embed_dim, rng).scale(s),
+            wv: Mat::randn(embed_dim, embed_dim, rng).scale(s),
+            wo: Mat::randn(embed_dim, embed_dim, rng).scale(s),
+            embed_dim,
+            num_heads,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.embed_dim / self.num_heads
+    }
+}
+
+/// Exact softmax multi-head attention (the `nn.MultiheadAttention` baseline).
+pub struct MultiHeadAttention {
+    pub weights: AttnWeights,
+}
+
+impl MultiHeadAttention {
+    pub fn new(weights: AttnWeights) -> Self {
+        MultiHeadAttention { weights }
+    }
+
+    /// Self-attention forward on `x: n × d`, tracking every temporary in
+    /// `mem`. Returns `n × d` or a budget error (the Fig. 3 "x").
+    pub fn forward(&self, x: &Mat, mem: &MemTracker) -> Result<Mat, MemError> {
+        let w = &self.weights;
+        let n = x.rows();
+        let d = w.embed_dim;
+        let h = w.num_heads;
+        let dh = w.head_dim();
+        assert_eq!(x.cols(), d);
+        // Projections (each n×d).
+        let _gq = mem.alloc((n * d * 4) as u64)?;
+        let q = matmul(x, &w.wq);
+        let _gk = mem.alloc((n * d * 4) as u64)?;
+        let k = matmul(x, &w.wk);
+        let _gv = mem.alloc((n * d * 4) as u64)?;
+        let v = matmul(x, &w.wv);
+        let mut out = Mat::zeros(n, d);
+        let _go = mem.alloc((n * d * 4) as u64)?;
+        let scale = 1.0 / (dh as f32).sqrt();
+        // The dense score matrix for ALL heads is what blows memory on GPUs;
+        // PyTorch materializes (h, n, n) at once — we account the same.
+        let _gscores = mem.alloc((h * n * n * 4) as u64)?;
+        for head in 0..h {
+            let c0 = head * dh;
+            let qh = q.slice(0, n, c0, c0 + dh);
+            let kh = k.slice(0, n, c0, c0 + dh);
+            let vh = v.slice(0, n, c0, c0 + dh);
+            // scores = Qh·Khᵀ · scale, then row-softmax.
+            let mut scores = crate::linalg::matmul_nt(&qh, &kh);
+            for i in 0..n {
+                let row = scores.row_mut(i);
+                let mut mx = f32::NEG_INFINITY;
+                for v in row.iter_mut() {
+                    *v *= scale;
+                    mx = mx.max(*v);
+                }
+                let mut sum = 0f32;
+                for v in row.iter_mut() {
+                    *v = (*v - mx).exp();
+                    sum += *v;
+                }
+                for v in row.iter_mut() {
+                    *v /= sum;
+                }
+            }
+            let oh = matmul(&scores, &vh); // n × dh
+            for i in 0..n {
+                out.row_mut(i)[c0..c0 + dh].copy_from_slice(oh.row(i));
+            }
+        }
+        Ok(matmul(&out, &w.wo))
+    }
+}
+
+/// Performer-style random-feature attention — Panther's
+/// `RandMultiHeadAttention`.
+pub struct RandMultiHeadAttention {
+    pub weights: AttnWeights,
+    pub num_features: usize,
+    pub kernel: KernelKind,
+    /// Per-head random projection `ω: d_h × m` (orthogonal-ish gaussian).
+    features: Vec<Mat>,
+}
+
+impl RandMultiHeadAttention {
+    pub fn new(weights: AttnWeights, num_features: usize, kernel: KernelKind, seed: u64) -> Self {
+        let dh = weights.head_dim();
+        let mut rng = Philox::seeded(seed);
+        let features = (0..weights.num_heads)
+            .map(|_| Mat::randn(dh, num_features, &mut rng))
+            .collect();
+        RandMultiHeadAttention {
+            weights,
+            num_features,
+            kernel,
+            features,
+        }
+    }
+
+    /// FAVOR+ feature map. Softmax: `φ(x) = exp(ωᵀx − ‖x‖²/2 − c)/√m`
+    /// (positive, with a *scalar* stabilizer `c` shared by all rows — a
+    /// per-row stabilizer would reweight keys and bias the attention
+    /// estimate); ReLU: `max(ωᵀx, 0)/√m`.
+    fn feature_map(&self, xh: &Mat, head: usize) -> Mat {
+        self.feature_map_with_stab(xh, head, None)
+    }
+
+    /// Feature map with an explicit stabilizer. `None` = the block's global
+    /// max (batch path). Streaming passes `Some(0.0)`: the stabilizer must
+    /// be *constant across time steps* or the accumulated KV state mixes
+    /// inconsistently-scaled features.
+    fn feature_map_with_stab(&self, xh: &Mat, head: usize, stab: Option<f32>) -> Mat {
+        let m = self.num_features;
+        let proj = matmul(xh, &self.features[head]); // n × m
+        let mut phi = Mat::zeros(xh.rows(), m);
+        let scale = 1.0 / (m as f32).sqrt();
+        match self.kernel {
+            KernelKind::Softmax => {
+                let mx = stab.unwrap_or_else(|| {
+                    proj.data()
+                        .iter()
+                        .cloned()
+                        .fold(f32::NEG_INFINITY, f32::max)
+                });
+                for i in 0..xh.rows() {
+                    let sq: f32 = xh.row(i).iter().map(|&v| v * v).sum::<f32>() / 2.0;
+                    let prow = proj.row(i);
+                    let out = phi.row_mut(i);
+                    for (o, &p) in out.iter_mut().zip(prow) {
+                        *o = (p - sq - mx).exp() * scale;
+                    }
+                }
+            }
+            KernelKind::Relu => {
+                for i in 0..xh.rows() {
+                    let prow = proj.row(i);
+                    let out = phi.row_mut(i);
+                    for (o, &p) in out.iter_mut().zip(prow) {
+                        *o = p.max(0.0) * scale;
+                    }
+                }
+            }
+        }
+        phi
+    }
+
+    /// Linear-attention forward: `out = φ(Q)·(φ(K)ᵀV) / (φ(Q)·φ(K)ᵀ1)`.
+    /// Never materializes an n×n matrix — peak extra memory is
+    /// `O(n·m + m·d_h)` per head.
+    pub fn forward(&self, x: &Mat, mem: &MemTracker) -> Result<Mat, MemError> {
+        let w = &self.weights;
+        let n = x.rows();
+        let d = w.embed_dim;
+        let h = w.num_heads;
+        let dh = w.head_dim();
+        let m = self.num_features;
+        assert_eq!(x.cols(), d);
+        let _gq = mem.alloc((n * d * 4) as u64)?;
+        let q = matmul(x, &w.wq);
+        let _gk = mem.alloc((n * d * 4) as u64)?;
+        let k = matmul(x, &w.wk);
+        let _gv = mem.alloc((n * d * 4) as u64)?;
+        let v = matmul(x, &w.wv);
+        let mut out = Mat::zeros(n, d);
+        let _go = mem.alloc((n * d * 4) as u64)?;
+        // Per-head temporaries: φ(Q), φ(K) (n×m each), KV state (m×dh),
+        // normalizer (m). Accounted per head, released before the next.
+        let scale = 1.0 / (dh as f32).sqrt();
+        for head in 0..h {
+            let _ghead = mem.alloc(((2 * n * m + m * dh + m) * 4) as u64)?;
+            let c0 = head * dh;
+            let qh = q.slice(0, n, c0, c0 + dh).scale(scale);
+            let kh = k.slice(0, n, c0, c0 + dh).scale(scale);
+            let vh = v.slice(0, n, c0, c0 + dh);
+            let phi_q = self.feature_map(&qh, head); // n × m
+            let phi_k = self.feature_map(&kh, head); // n × m
+            // KV state: φ(K)ᵀ·V (m × dh) — the O(1)-in-n state.
+            let kv = crate::linalg::matmul_tn(&phi_k, &vh);
+            // Normalizer: z = φ(K)ᵀ·1 (length m).
+            let mut z = vec![0f32; m];
+            for i in 0..n {
+                for (zj, &pj) in z.iter_mut().zip(phi_k.row(i)) {
+                    *zj += pj;
+                }
+            }
+            let num = matmul(&phi_q, &kv); // n × dh
+            for i in 0..n {
+                let denom: f32 = phi_q
+                    .row(i)
+                    .iter()
+                    .zip(&z)
+                    .map(|(&a, &b)| a * b)
+                    .sum::<f32>()
+                    .max(1e-9);
+                let orow = &mut out.row_mut(i)[c0..c0 + dh];
+                for (o, &nv) in orow.iter_mut().zip(num.row(i)) {
+                    *o = nv / denom;
+                }
+            }
+        }
+        Ok(matmul(&out, &w.wo))
+    }
+
+    /// Extra parameters vs dense attention: the random features are fixed
+    /// (not trained), so the parameter count is identical to dense MHA.
+    pub fn feature_state_bytes(&self) -> u64 {
+        (self.weights.num_heads * self.weights.head_dim() * self.num_features * 4) as u64
+    }
+
+    /// Start an autoregressive decode session. Performer's linear attention
+    /// admits O(1)-per-token causal decoding: the per-head running state is
+    /// just `φ(K)ᵀV (m × d_h)` plus the normalizer `φ(K)ᵀ1 (m)` — constant
+    /// in sequence length, unlike a softmax KV cache which grows O(n).
+    pub fn start_stream(&self) -> PerformerStream<'_> {
+        let h = self.weights.num_heads;
+        let dh = self.weights.head_dim();
+        let m = self.num_features;
+        PerformerStream {
+            attn: self,
+            kv: vec![Mat::zeros(m, dh); h],
+            z: vec![vec![0f32; m]; h],
+            tokens_seen: 0,
+        }
+    }
+}
+
+/// Streaming decode state for [`RandMultiHeadAttention`].
+pub struct PerformerStream<'a> {
+    attn: &'a RandMultiHeadAttention,
+    /// Per-head running `φ(K)ᵀV` (m × d_h).
+    kv: Vec<Mat>,
+    /// Per-head running normalizer `φ(K)ᵀ1` (m).
+    z: Vec<Vec<f32>>,
+    tokens_seen: usize,
+}
+
+impl PerformerStream<'_> {
+    /// Number of tokens absorbed so far.
+    pub fn len(&self) -> usize {
+        self.tokens_seen
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens_seen == 0
+    }
+
+    /// State size in bytes — constant in sequence length.
+    pub fn state_bytes(&self) -> u64 {
+        let m = self.attn.num_features as u64;
+        let dh = self.attn.weights.head_dim() as u64;
+        let h = self.attn.weights.num_heads as u64;
+        h * (m * dh + m) * 4
+    }
+
+    /// Feed one token embedding `x_t (d,)`; returns the causal attention
+    /// output for this position (attending to all tokens fed so far,
+    /// including this one).
+    pub fn step(&mut self, x_t: &[f32]) -> Vec<f32> {
+        let w = &self.attn.weights;
+        let d = w.embed_dim;
+        assert_eq!(x_t.len(), d);
+        let h = w.num_heads;
+        let dh = w.head_dim();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let x = Mat::from_vec(1, d, x_t.to_vec());
+        let q = matmul(&x, &w.wq);
+        let k = matmul(&x, &w.wk);
+        let v = matmul(&x, &w.wv);
+        let mut out = vec![0f32; d];
+        for head in 0..h {
+            let c0 = head * dh;
+            let qh = Mat::from_vec(1, dh, q.row(0)[c0..c0 + dh].to_vec()).scale(scale);
+            let kh = Mat::from_vec(1, dh, k.row(0)[c0..c0 + dh].to_vec()).scale(scale);
+            let vh = &v.row(0)[c0..c0 + dh];
+            let phi_q = self.attn.feature_map_with_stab(&qh, head, Some(0.0)); // 1 × m
+            let phi_k = self.attn.feature_map_with_stab(&kh, head, Some(0.0)); // 1 × m
+            // State update: kv += φ(k)ᵀ·v ; z += φ(k).
+            let kv = &mut self.kv[head];
+            for (j, &pk) in phi_k.row(0).iter().enumerate() {
+                self.z[head][j] += pk;
+                let row = kv.row_mut(j);
+                for (dst, &vv) in row.iter_mut().zip(vh) {
+                    *dst += pk * vv;
+                }
+            }
+            // Output: φ(q)·kv / (φ(q)·z).
+            let pq = phi_q.row(0);
+            let denom: f32 = pq
+                .iter()
+                .zip(&self.z[head])
+                .map(|(&a, &b)| a * b)
+                .sum::<f32>()
+                .max(1e-9);
+            let orow = &mut out[c0..c0 + dh];
+            for (j, &pqj) in pq.iter().enumerate() {
+                let kvrow = self.kv[head].row(j);
+                for (o, &s) in orow.iter_mut().zip(kvrow) {
+                    *o += pqj * s;
+                }
+            }
+            for o in orow.iter_mut() {
+                *o /= denom;
+            }
+        }
+        self.tokens_seen += 1;
+        // Output projection.
+        matmul(&Mat::from_vec(1, d, out), &w.wo).into_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rel_error;
+    use crate::rng::Philox;
+
+    #[test]
+    fn dense_attention_rows_are_convex_combinations() {
+        // With Wv = I and softmax rows summing to 1, each head output row
+        // lies in the convex hull of V rows — check value bounds instead:
+        // output of softmax(scores)·V has entries ≤ max|V|.
+        let mut rng = Philox::seeded(131);
+        let w = AttnWeights::random(16, 4, &mut rng);
+        let mha = MultiHeadAttention::new(w);
+        let x = Mat::randn(12, 16, &mut rng);
+        let mem = MemTracker::unlimited();
+        let y = mha.forward(&x, &mem).unwrap();
+        assert_eq!(y.shape(), (12, 16));
+        assert!(mem.peak_bytes() > 0);
+        assert_eq!(mem.live_bytes(), 0, "all temporaries released");
+    }
+
+    #[test]
+    fn performer_approximates_dense_softmax() {
+        // With plenty of random features the Performer output should land
+        // near exact attention (loose tolerance — it's a Monte-Carlo method).
+        let mut rng = Philox::seeded(132);
+        let w = AttnWeights::random(8, 1, &mut rng);
+        let x = Mat::randn(10, 8, &mut rng).scale(0.3); // small norms: RF approx is accurate
+        let dense = MultiHeadAttention::new(w.clone());
+        let mem = MemTracker::unlimited();
+        let y_exact = dense.forward(&x, &mem).unwrap();
+        let perf = RandMultiHeadAttention::new(w, 2048, KernelKind::Softmax, 5);
+        let y_rand = perf.forward(&x, &mem).unwrap();
+        let err = rel_error(&y_rand, &y_exact);
+        assert!(err < 0.5, "performer deviates: rel {err}");
+    }
+
+    #[test]
+    fn performer_memory_linear_dense_quadratic() {
+        let mut rng = Philox::seeded(133);
+        let w = AttnWeights::random(32, 4, &mut rng);
+        let measure_dense = |n: usize| {
+            let x = Mat::randn(n, 32, &mut Philox::seeded(1));
+            let mem = MemTracker::unlimited();
+            MultiHeadAttention::new(w.clone()).forward(&x, &mem).unwrap();
+            mem.peak_bytes()
+        };
+        let measure_perf = |n: usize| {
+            let x = Mat::randn(n, 32, &mut Philox::seeded(1));
+            let mem = MemTracker::unlimited();
+            RandMultiHeadAttention::new(w.clone(), 16, KernelKind::Softmax, 2)
+                .forward(&x, &mem)
+                .unwrap();
+            mem.peak_bytes()
+        };
+        // Dense grows ~4× when n doubles; performer ~2×.
+        let (d1, d2) = (measure_dense(64), measure_dense(128));
+        let (p1, p2) = (measure_perf(64), measure_perf(128));
+        let dense_ratio = d2 as f64 / d1 as f64;
+        let perf_ratio = p2 as f64 / p1 as f64;
+        assert!(dense_ratio > 3.0, "dense ratio {dense_ratio}");
+        assert!(perf_ratio < 2.5, "performer ratio {perf_ratio}");
+    }
+
+    #[test]
+    fn dense_oom_performer_survives() {
+        // A budget that the quadratic path exceeds but the linear one fits —
+        // the Figure-3 "x" marker scenario.
+        let mut rng = Philox::seeded(134);
+        let w = AttnWeights::random(32, 8, &mut rng);
+        let n = 256;
+        let x = Mat::randn(n, 32, &mut rng);
+        let budget = 2 * 1024 * 1024; // 2 MiB
+        let mem_d = MemTracker::with_budget(budget);
+        let dense_res = MultiHeadAttention::new(w.clone()).forward(&x, &mem_d);
+        assert!(dense_res.is_err(), "dense should exceed 2 MiB at n=256,h=8");
+        let mem_p = MemTracker::with_budget(budget);
+        let perf_res =
+            RandMultiHeadAttention::new(w, 32, KernelKind::Softmax, 3).forward(&x, &mem_p);
+        assert!(perf_res.is_ok(), "performer must fit the same budget");
+    }
+
+    #[test]
+    fn streaming_matches_causal_reference() {
+        // The t-th streamed output must equal linear attention computed
+        // over the prefix 0..=t with the same (stab=0) feature map.
+        let mut rng = Philox::seeded(136);
+        let (d, h, m, n) = (16usize, 2usize, 32usize, 10usize);
+        let w = AttnWeights::random(d, h, &mut rng);
+        let attn = RandMultiHeadAttention::new(w.clone(), m, KernelKind::Softmax, 11);
+        let x = Mat::randn(n, d, &mut rng).scale(0.4);
+        let mut stream = attn.start_stream();
+        let dh = d / h;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let q = crate::linalg::matmul(&x, &w.wq);
+        let k = crate::linalg::matmul(&x, &w.wk);
+        let v = crate::linalg::matmul(&x, &w.wv);
+        for t in 0..n {
+            let got = stream.step(x.row(t));
+            // Reference: per head, φ over prefix with stab 0.
+            let mut pre = Mat::zeros(1, d);
+            for head in 0..h {
+                let c0 = head * dh;
+                let qh = Mat::from_vec(1, dh, q.row(t)[c0..c0 + dh].to_vec()).scale(scale);
+                let pq = attn.feature_map_with_stab(&qh, head, Some(0.0));
+                let mut num = vec![0f64; dh];
+                let mut den = 0f64;
+                for s in 0..=t {
+                    let kh =
+                        Mat::from_vec(1, dh, k.row(s)[c0..c0 + dh].to_vec()).scale(scale);
+                    let pk = attn.feature_map_with_stab(&kh, head, Some(0.0));
+                    let dot: f64 = pq
+                        .row(0)
+                        .iter()
+                        .zip(pk.row(0))
+                        .map(|(&a, &b)| a as f64 * b as f64)
+                        .sum();
+                    den += dot;
+                    for (nv, &vv) in num.iter_mut().zip(&v.row(s)[c0..c0 + dh]) {
+                        *nv += dot * vv as f64;
+                    }
+                }
+                for (j, nv) in num.iter().enumerate() {
+                    pre.set(0, c0 + j, (nv / den.max(1e-12)) as f32);
+                }
+            }
+            let want = crate::linalg::matmul(&pre, &w.wo);
+            for (a, b) in got.iter().zip(want.row(0)) {
+                assert!(
+                    (a - b).abs() < 1e-3 * b.abs().max(1.0),
+                    "t={t}: {a} vs {b}"
+                );
+            }
+        }
+        assert_eq!(stream.len(), n);
+    }
+
+    #[test]
+    fn streaming_state_is_constant_size() {
+        let mut rng = Philox::seeded(137);
+        let w = AttnWeights::random(32, 4, &mut rng);
+        let attn = RandMultiHeadAttention::new(w, 64, KernelKind::Relu, 2);
+        let mut stream = attn.start_stream();
+        let s0 = stream.state_bytes();
+        let x = Mat::randn(100, 32, &mut rng);
+        for t in 0..100 {
+            stream.step(x.row(t));
+        }
+        assert_eq!(stream.state_bytes(), s0, "state must not grow with n");
+        assert_eq!(stream.len(), 100);
+    }
+
+    #[test]
+    fn relu_kernel_runs() {
+        let mut rng = Philox::seeded(135);
+        let w = AttnWeights::random(16, 2, &mut rng);
+        let x = Mat::randn(20, 16, &mut rng);
+        let mem = MemTracker::unlimited();
+        let y = RandMultiHeadAttention::new(w, 24, KernelKind::Relu, 7)
+            .forward(&x, &mem)
+            .unwrap();
+        assert_eq!(y.shape(), (20, 16));
+        assert!(y.data().iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,328 @@
+//! 2D convolution (dense, via im2col) and its sketched replacement
+//! `SKConv2d` [Kasiviswanathan et al. 2017].
+//!
+//! im2col turns convolution into a GEMM: patches matrix
+//! `X_col ∈ R^{(B·H_out·W_out) × (C_in·kh·kw)}` times the reshaped kernel
+//! `W_mat ∈ R^{(C_in·kh·kw) × C_out}`. `SKConv2d` sketches that GEMM exactly
+//! like `SKLinear` does (d_in = C_in·kh·kw, d_out = C_out), so the whole
+//! Figure-2 experiment reduces to the same two-stage low-rank product with a
+//! patch-extraction preamble shared by both sides.
+
+use crate::linalg::{matmul, Mat};
+use crate::rng::Rng;
+
+/// Shape bookkeeping for a (square-kernel, stride-1) convolution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvShape {
+    pub c_in: usize,
+    pub c_out: usize,
+    pub kernel: usize,
+    pub image: usize,
+    pub padding: usize,
+}
+
+impl ConvShape {
+    pub fn out_size(&self) -> usize {
+        self.image + 2 * self.padding - self.kernel + 1
+    }
+
+    /// im2col inner dimension `C_in·k²`.
+    pub fn patch_dim(&self) -> usize {
+        self.c_in * self.kernel * self.kernel
+    }
+}
+
+/// Extract im2col patches from an input batch laid out `B × (C_in·H·W)`
+/// (channel-major rows). Output: `(B·H_out·W_out) × (C_in·kh·kw)`.
+pub fn im2col(x: &Mat, shape: &ConvShape) -> Mat {
+    let b = x.rows();
+    let (c, h) = (shape.c_in, shape.image);
+    assert_eq!(x.cols(), c * h * h, "input layout mismatch");
+    let ho = shape.out_size();
+    let k = shape.kernel;
+    let pad = shape.padding as isize;
+    let mut out = Mat::zeros(b * ho * ho, shape.patch_dim());
+    for bi in 0..b {
+        let img = x.row(bi);
+        for oy in 0..ho {
+            for ox in 0..ho {
+                let orow = out.row_mut((bi * ho + oy) * ho + ox);
+                let mut idx = 0;
+                for ci in 0..c {
+                    for ky in 0..k {
+                        let iy = oy as isize + ky as isize - pad;
+                        for kx in 0..k {
+                            let ix = ox as isize + kx as isize - pad;
+                            orow[idx] = if iy >= 0 && iy < h as isize && ix >= 0 && ix < h as isize
+                            {
+                                img[ci * h * h + iy as usize * h + ix as usize]
+                            } else {
+                                0.0
+                            };
+                            idx += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Dense convolution layer.
+#[derive(Clone, Debug)]
+pub struct Conv2d {
+    pub shape: ConvShape,
+    /// Reshaped kernel: `(C_in·k²) × C_out`.
+    pub w_mat: Mat,
+    pub bias: Vec<f32>,
+}
+
+impl Conv2d {
+    pub fn random<R: Rng>(shape: ConvShape, rng: &mut R) -> Self {
+        let fan_in = shape.patch_dim();
+        let w_mat = Mat::randn(fan_in, shape.c_out, rng).scale((2.0 / fan_in as f32).sqrt());
+        Conv2d {
+            shape,
+            w_mat,
+            bias: vec![0.0; shape.c_out],
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.w_mat.len() + self.bias.len()
+    }
+
+    /// Forward on `x: B × (C_in·H·W)` → `(B·H_out·W_out) × C_out`
+    /// (callers reshape as needed; keeping the GEMM output layout avoids a
+    /// transpose on the hot path).
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let cols = im2col(x, &self.shape);
+        self.forward_cols(&cols)
+    }
+
+    /// Forward given pre-extracted patches (benches share the im2col).
+    pub fn forward_cols(&self, cols: &Mat) -> Mat {
+        let mut y = matmul(cols, &self.w_mat);
+        for i in 0..y.rows() {
+            for (v, b) in y.row_mut(i).iter_mut().zip(&self.bias) {
+                *v += b;
+            }
+        }
+        y
+    }
+}
+
+/// Sketched convolution — Panther's `pr.nn.SKConv2d`.
+#[derive(Clone, Debug)]
+pub struct SKConv2d {
+    pub shape: ConvShape,
+    pub num_terms: usize,
+    pub low_rank: usize,
+    /// Per-term factors: `U_j (C_in·k²) × r`, `V_j r × C_out`.
+    pub u: Vec<Mat>,
+    pub v: Vec<Mat>,
+    pub bias: Vec<f32>,
+}
+
+impl SKConv2d {
+    pub fn random<R: Rng>(
+        shape: ConvShape,
+        num_terms: usize,
+        low_rank: usize,
+        rng: &mut R,
+    ) -> Self {
+        assert!(num_terms > 0 && low_rank > 0);
+        let fan_in = shape.patch_dim();
+        let su = (1.0 / low_rank as f32).sqrt();
+        let sv = (2.0 / fan_in as f32).sqrt();
+        let mut u = Vec::new();
+        let mut v = Vec::new();
+        for _ in 0..num_terms {
+            u.push(Mat::randn(fan_in, low_rank, rng).scale(su));
+            v.push(Mat::randn(low_rank, shape.c_out, rng).scale(sv));
+        }
+        SKConv2d {
+            shape,
+            num_terms,
+            low_rank,
+            u,
+            v,
+            bias: vec![0.0; shape.c_out],
+        }
+    }
+
+    /// Compress a trained dense convolution (unbiased weight sketch, same
+    /// construction as [`super::SKLinear::from_dense`]).
+    pub fn from_dense<R: Rng>(dense: &Conv2d, num_terms: usize, low_rank: usize, rng: &mut R) -> Self {
+        let fan_in = dense.shape.patch_dim();
+        let scale = (1.0 / low_rank as f32).sqrt();
+        let mut u = Vec::new();
+        let mut v = Vec::new();
+        for _ in 0..num_terms {
+            let s = Mat::randn(fan_in, low_rank, rng).scale(scale);
+            let vj = crate::linalg::matmul_tn(&s, &dense.w_mat);
+            u.push(s);
+            v.push(vj);
+        }
+        SKConv2d {
+            shape: dense.shape,
+            num_terms,
+            low_rank,
+            u,
+            v,
+            bias: dense.bias.clone(),
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.num_terms * self.low_rank * (self.shape.patch_dim() + self.shape.c_out)
+            + self.shape.c_out
+    }
+
+    pub fn compression_ratio(&self) -> f64 {
+        self.param_count() as f64
+            / (self.shape.patch_dim() * self.shape.c_out + self.shape.c_out) as f64
+    }
+
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let cols = im2col(x, &self.shape);
+        self.forward_cols(&cols)
+    }
+
+    pub fn forward_cols(&self, cols: &Mat) -> Mat {
+        let mut y = Mat::zeros(cols.rows(), self.shape.c_out);
+        for (uj, vj) in self.u.iter().zip(&self.v) {
+            let t = matmul(&matmul(cols, uj), vj);
+            y.axpy(1.0 / self.num_terms as f32, &t);
+        }
+        for i in 0..y.rows() {
+            for (v, b) in y.row_mut(i).iter_mut().zip(&self.bias) {
+                *v += b;
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rel_error;
+    use crate::rng::Philox;
+    use crate::util::prop::prop_check;
+
+    fn small_shape() -> ConvShape {
+        ConvShape {
+            c_in: 3,
+            c_out: 5,
+            kernel: 3,
+            image: 8,
+            padding: 1,
+        }
+    }
+
+    #[test]
+    fn im2col_identity_kernel_recovers_input() {
+        // 1×1 kernel, no padding: im2col is a reshape.
+        let shape = ConvShape {
+            c_in: 2,
+            c_out: 1,
+            kernel: 1,
+            image: 4,
+            padding: 0,
+        };
+        let x = Mat::from_fn(1, 2 * 16, |_, j| j as f32);
+        let cols = im2col(&x, &shape);
+        assert_eq!(cols.shape(), (16, 2));
+        // Pixel (y,x) of channel c lands at row y*4+x, col c.
+        assert_eq!(cols.get(5, 0), 5.0);
+        assert_eq!(cols.get(5, 1), 21.0);
+    }
+
+    #[test]
+    fn conv_matches_direct_convolution() {
+        let shape = small_shape();
+        let mut rng = Philox::seeded(121);
+        let conv = Conv2d::random(shape, &mut rng);
+        let x = Mat::randn(2, shape.c_in * shape.image * shape.image, &mut rng);
+        let y = conv.forward(&x);
+        let ho = shape.out_size();
+        assert_eq!(y.shape(), (2 * ho * ho, shape.c_out));
+        // Check one output element by direct summation.
+        let (bi, oy, ox, co) = (1usize, 2usize, 3usize, 4usize);
+        let mut acc = conv.bias[co] as f64;
+        for ci in 0..shape.c_in {
+            for ky in 0..shape.kernel {
+                for kx in 0..shape.kernel {
+                    let iy = oy as isize + ky as isize - 1;
+                    let ix = ox as isize + kx as isize - 1;
+                    if iy < 0 || ix < 0 || iy >= 8 || ix >= 8 {
+                        continue;
+                    }
+                    let xv = x.get(bi, ci * 64 + iy as usize * 8 + ix as usize) as f64;
+                    let widx = ci * 9 + ky * 3 + kx;
+                    acc += xv * conv.w_mat.get(widx, co) as f64;
+                }
+            }
+        }
+        let got = y.get((bi * ho + oy) * ho + ox, co) as f64;
+        assert!((got - acc).abs() < 1e-3, "direct {acc} vs im2col {got}");
+    }
+
+    #[test]
+    fn skconv_shape_and_unbiasedness() {
+        let shape = small_shape();
+        let mut rng = Philox::seeded(122);
+        let dense = Conv2d::random(shape, &mut rng);
+        let x = Mat::randn(1, shape.c_in * 64, &mut rng);
+        let y_ref = dense.forward(&x);
+        // Mean over seeds approaches the dense output.
+        let mut acc = Mat::zeros(y_ref.rows(), y_ref.cols());
+        let trials = 200;
+        for t in 0..trials {
+            let mut r = Philox::seeded(3000 + t);
+            let sk = SKConv2d::from_dense(&dense, 1, 6, &mut r);
+            acc.axpy(1.0 / trials as f32, &sk.forward(&x));
+        }
+        assert!(rel_error(&acc, &y_ref) < 0.25, "rel {}", rel_error(&acc, &y_ref));
+    }
+
+    #[test]
+    fn param_count_and_compression() {
+        let shape = ConvShape {
+            c_in: 64,
+            c_out: 128,
+            kernel: 3,
+            image: 16,
+            padding: 1,
+        };
+        let mut rng = Philox::seeded(123);
+        let sk = SKConv2d::random(shape, 2, 8, &mut rng);
+        assert_eq!(
+            sk.param_count(),
+            2 * 8 * (64 * 9 + 128) + 128
+        );
+        assert!(sk.compression_ratio() < 0.5);
+    }
+
+    #[test]
+    fn property_output_shapes() {
+        prop_check("skconv-shapes", 10, |g| {
+            let shape = ConvShape {
+                c_in: 1 + g.usize(0..4),
+                c_out: 1 + g.usize(0..6),
+                kernel: *g.choose(&[1usize, 3, 5]),
+                image: 6 + g.usize(0..6),
+                padding: g.usize(0..2),
+            };
+            if shape.kernel > shape.image + 2 * shape.padding {
+                return;
+            }
+            let sk = SKConv2d::random(shape, 1 + g.usize(0..2), 1 + g.usize(0..4), g.rng());
+            let x = Mat::randn(2, shape.c_in * shape.image * shape.image, g.rng());
+            let ho = shape.out_size();
+            assert_eq!(sk.forward(&x).shape(), (2 * ho * ho, shape.c_out));
+        });
+    }
+}

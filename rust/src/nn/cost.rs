@@ -1,0 +1,134 @@
+//! Analytic cost models for dense vs sketched layers.
+//!
+//! The paper computes layer-size reduction analytically for linear and
+//! convolution layers ("the reduction in layer size can be computed
+//! analytically [7]") and skips benchmark configurations where
+//! `2·l·k·(d_in + d_out) > d_in·d_out` — configurations that cannot yield a
+//! theoretical speedup. This module is the single source of truth for those
+//! formulas; benches, the tuner's search-space pruning, and the examples all
+//! call into it.
+
+/// Cost summary for one layer configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerCost {
+    /// Stored parameters.
+    pub params: usize,
+    /// Multiply-accumulate FLOPs for one forward pass at batch size `b`
+    /// (2 FLOPs per MAC).
+    pub flops: u64,
+    /// Bytes of parameter storage (f32).
+    pub param_bytes: u64,
+}
+
+/// Dense/sketched cost of a linear layer at batch `b`. `low_rank = None`
+/// gives the dense layer.
+pub fn linear_cost(d_in: usize, d_out: usize, b: usize, sketch: Option<(usize, usize)>) -> LayerCost {
+    match sketch {
+        None => {
+            let params = d_in * d_out + d_out;
+            LayerCost {
+                params,
+                flops: 2 * (b * d_in * d_out) as u64,
+                param_bytes: params as u64 * 4,
+            }
+        }
+        Some((l, k)) => {
+            let params = l * k * (d_in + d_out) + d_out;
+            LayerCost {
+                params,
+                flops: 2 * (b * l * k * (d_in + d_out)) as u64,
+                param_bytes: params as u64 * 4,
+            }
+        }
+    }
+}
+
+/// Dense/sketched cost of a conv layer (square kernel, stride 1).
+/// `spatial_out` is `H_out·W_out`; the im2col GEMM has
+/// `d_in = c_in·kernel²`, `d_out = c_out`, batch `b·spatial_out`.
+pub fn conv_cost(
+    c_in: usize,
+    c_out: usize,
+    kernel: usize,
+    spatial_out: usize,
+    b: usize,
+    sketch: Option<(usize, usize)>,
+) -> LayerCost {
+    linear_cost(c_in * kernel * kernel, c_out, b * spatial_out, sketch)
+}
+
+/// The paper's Figure-1/2 skip rule: a sketched configuration can only beat
+/// dense when `2·l·k·(d_in+d_out) ≤ d_in·d_out`. (The factor 2 counts both
+/// sketch factors of the two-sided construction in [7].)
+pub fn sketch_beats_dense(d_in: usize, d_out: usize, l: usize, k: usize) -> bool {
+    2 * l * k * (d_in + d_out) <= d_in * d_out
+}
+
+/// Speedup predicted by the FLOP model (dense / sketched); > 1 means the
+/// sketch wins. The Figure-1 curve shape comes straight from this ratio.
+pub fn predicted_speedup(d_in: usize, d_out: usize, l: usize, k: usize) -> f64 {
+    (d_in * d_out) as f64 / (l * k * (d_in + d_out)) as f64
+}
+
+/// Peak forward activation memory (bytes) for exact softmax attention:
+/// the h×n×n score tensor plus four n×d projections.
+pub fn dense_attention_mem(n: usize, d: usize, h: usize) -> u64 {
+    ((h * n * n + 4 * n * d) * 4) as u64
+}
+
+/// Peak forward activation memory for Performer linear attention with `m`
+/// random features: two n×m feature blocks, the m×d_h state, four n×d
+/// projections.
+pub fn performer_attention_mem(n: usize, d: usize, h: usize, m: usize) -> u64 {
+    let dh = d / h;
+    ((2 * n * m + m * dh + m + 4 * n * d) * 4) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_linear_cost() {
+        let c = linear_cost(100, 50, 8, None);
+        assert_eq!(c.params, 5050);
+        assert_eq!(c.flops, 2 * 8 * 100 * 50);
+    }
+
+    #[test]
+    fn sketched_linear_cost() {
+        let c = linear_cost(100, 50, 8, Some((2, 4)));
+        assert_eq!(c.params, 2 * 4 * 150 + 50);
+        assert_eq!(c.flops, 2 * 8 * 2 * 4 * 150);
+    }
+
+    #[test]
+    fn skip_rule_matches_paper_examples() {
+        // d=8192, l=1, k=16: 2·16·16384 = 524288 ≪ 8192² — keep.
+        assert!(sketch_beats_dense(8192, 8192, 1, 16));
+        // d=256, l=3, k=512: 2·3·512·512 = 1.5M > 65536 — skip.
+        assert!(!sketch_beats_dense(256, 256, 3, 512));
+    }
+
+    #[test]
+    fn speedup_monotone_in_k() {
+        let s16 = predicted_speedup(8192, 8192, 1, 16);
+        let s256 = predicted_speedup(8192, 8192, 1, 256);
+        assert!(s16 > s256);
+        assert!(s16 > 100.0); // 8192²/(16·16384) = 256
+    }
+
+    #[test]
+    fn conv_cost_equals_linear_on_patches() {
+        let c = conv_cost(64, 128, 3, 32 * 32, 2, None);
+        let l = linear_cost(64 * 9, 128, 2 * 32 * 32, None);
+        assert_eq!(c, l);
+    }
+
+    #[test]
+    fn attention_memory_crossover() {
+        // At long n dense must exceed performer; at tiny n it may not.
+        let (n, d, h, m) = (4096, 512, 8, 128);
+        assert!(dense_attention_mem(n, d, h) > performer_attention_mem(n, d, h, m));
+    }
+}

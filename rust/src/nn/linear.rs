@@ -1,0 +1,320 @@
+//! Dense linear layer and its sketched drop-in replacement `SKLinear`.
+//!
+//! `SKLinear(d_in, d_out, num_terms=l, low_rank=k)` follows the tensor-
+//! sketching formulation of Kasiviswanathan et al. 2017 (the paper's [7]):
+//! the effective weight `Wᵀ ∈ R^{d_in×d_out}` is approximated by the average
+//! of `l` rank-`k` terms,
+//!
+//! ```text
+//!   Wᵀ ≈ (1/l) Σ_j U_j·V_j,   U_j = S_j (d_in×k),  V_j = S_jᵀ·Wᵀ (k×d_out)
+//! ```
+//!
+//! with `S_j` i.i.d. N(0, 1/k). Since `E[S_j S_jᵀ] = I`, the approximation
+//! is *unbiased*; increasing `num_terms` shrinks its variance (this is
+//! exactly the paper's "closer to the expected value at the cost of more
+//! parameters"). After initialization both factors are free parameters and
+//! train like any other weight.
+//!
+//! Forward cost: `2·l·k·(d_in+d_out)` FLOPs/row vs `2·d_in·d_out` dense —
+//! the Figure-1 crossover.
+
+use crate::linalg::{matmul, Mat};
+use crate::rng::Rng;
+
+/// Dense fully-connected layer, `y = x·Wᵀ + b` (PyTorch convention:
+/// `weight` is `d_out × d_in`).
+#[derive(Clone, Debug)]
+pub struct Linear {
+    pub weight: Mat, // d_out × d_in
+    pub bias: Vec<f32>,
+}
+
+impl Linear {
+    pub fn new(weight: Mat, bias: Vec<f32>) -> Self {
+        assert_eq!(weight.rows(), bias.len());
+        Linear { weight, bias }
+    }
+
+    /// Kaiming-ish random init (for tests/benches).
+    pub fn random<R: Rng>(d_in: usize, d_out: usize, rng: &mut R) -> Self {
+        let scale = (2.0 / d_in as f32).sqrt();
+        let weight = Mat::randn(d_out, d_in, rng).scale(scale);
+        Linear {
+            weight,
+            bias: vec![0.0; d_out],
+        }
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.weight.cols()
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.weight.rows()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.weight.len() + self.bias.len()
+    }
+
+    /// `y = x·Wᵀ + b`, `x: B×d_in`.
+    pub fn forward(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols(), self.d_in());
+        let mut y = crate::linalg::matmul_nt(x, &self.weight);
+        for i in 0..y.rows() {
+            let row = y.row_mut(i);
+            for (v, b) in row.iter_mut().zip(&self.bias) {
+                *v += b;
+            }
+        }
+        y
+    }
+}
+
+/// Sketched linear layer — Panther's `pr.nn.SKLinear`.
+#[derive(Clone, Debug)]
+pub struct SKLinear {
+    pub d_in: usize,
+    pub d_out: usize,
+    /// `l`: number of averaged sketch terms.
+    pub num_terms: usize,
+    /// `k`: rank of each term.
+    pub low_rank: usize,
+    /// Per-term left factors `U_j: d_in × k`.
+    pub u: Vec<Mat>,
+    /// Per-term right factors `V_j: k × d_out`.
+    pub v: Vec<Mat>,
+    pub bias: Vec<f32>,
+    /// Cached transposes (`U_jᵀ: k × d_in`, `V_jᵀ: d_out × k`) so both GEMM
+    /// stages run in the fast dot-product (NT) layout — see EXPERIMENTS.md
+    /// §Perf. Kept in sync by the constructors; not part of the public
+    /// parameter state.
+    u_t: Vec<Mat>,
+    v_t: Vec<Mat>,
+}
+
+impl SKLinear {
+    /// Fresh randomly-initialized sketched layer (both factors random — the
+    /// "during development" use case of the paper's Listing 1).
+    pub fn random<R: Rng>(
+        d_in: usize,
+        d_out: usize,
+        num_terms: usize,
+        low_rank: usize,
+        rng: &mut R,
+    ) -> Self {
+        assert!(num_terms > 0 && low_rank > 0);
+        let mut u = Vec::with_capacity(num_terms);
+        let mut v = Vec::with_capacity(num_terms);
+        let su = (1.0 / low_rank as f32).sqrt();
+        let sv = (2.0 / d_in as f32).sqrt();
+        for _ in 0..num_terms {
+            u.push(Mat::randn(d_in, low_rank, rng).scale(su));
+            v.push(Mat::randn(low_rank, d_out, rng).scale(sv));
+        }
+        Self::assemble(d_in, d_out, num_terms, low_rank, u, v, vec![0.0; d_out])
+    }
+
+    fn assemble(
+        d_in: usize,
+        d_out: usize,
+        num_terms: usize,
+        low_rank: usize,
+        u: Vec<Mat>,
+        v: Vec<Mat>,
+        bias: Vec<f32>,
+    ) -> Self {
+        let u_t = u.iter().map(Mat::transpose).collect();
+        let v_t = v.iter().map(Mat::transpose).collect();
+        SKLinear {
+            d_in,
+            d_out,
+            num_terms,
+            low_rank,
+            u,
+            v,
+            bias,
+            u_t,
+            v_t,
+        }
+    }
+
+    /// Compress an existing dense layer (the "after development" use case,
+    /// what `SKAutoTuner(copy_weights=True)` does): `U_j = S_j`,
+    /// `V_j = S_jᵀ·Wᵀ` with `S_j` i.i.d. N(0, 1/k) — an unbiased sketch of
+    /// the trained weights.
+    pub fn from_dense<R: Rng>(
+        dense: &Linear,
+        num_terms: usize,
+        low_rank: usize,
+        rng: &mut R,
+    ) -> Self {
+        assert!(num_terms > 0 && low_rank > 0);
+        let d_in = dense.d_in();
+        let d_out = dense.d_out();
+        let wt = dense.weight.transpose(); // d_in × d_out
+        let scale = (1.0 / low_rank as f32).sqrt();
+        let mut u = Vec::with_capacity(num_terms);
+        let mut v = Vec::with_capacity(num_terms);
+        for _ in 0..num_terms {
+            let s = Mat::randn(d_in, low_rank, rng).scale(scale);
+            let vj = crate::linalg::matmul_tn(&s, &wt); // k × d_out
+            u.push(s);
+            v.push(vj);
+        }
+        Self::assemble(d_in, d_out, num_terms, low_rank, u, v, dense.bias.clone())
+    }
+
+    /// Stored parameters: `l·k·(d_in+d_out) + d_out`.
+    pub fn param_count(&self) -> usize {
+        self.num_terms * self.low_rank * (self.d_in + self.d_out) + self.d_out
+    }
+
+    /// Size relative to the dense layer it replaces.
+    pub fn compression_ratio(&self) -> f64 {
+        self.param_count() as f64 / (self.d_in * self.d_out + self.d_out) as f64
+    }
+
+    /// `y = (1/l)·Σ_j (x·U_j)·V_j + b`. Both stages run in NT (dot-product)
+    /// layout against the cached transposes.
+    pub fn forward(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols(), self.d_in);
+        let mut y = Mat::zeros(x.rows(), self.d_out);
+        for (ujt, vjt) in self.u_t.iter().zip(&self.v_t) {
+            let xu = crate::linalg::matmul_nt(x, ujt); // B×k — the tiny intermediate
+            let t = crate::linalg::matmul_nt(&xu, vjt); // B×d_out
+            y.axpy(1.0 / self.num_terms as f32, &t);
+        }
+        for i in 0..y.rows() {
+            for (vv, b) in y.row_mut(i).iter_mut().zip(&self.bias) {
+                *vv += b;
+            }
+        }
+        y
+    }
+
+    /// Materialize the effective dense weight `Wᵀ_eff = (1/l)ΣU_jV_j`
+    /// (d_in×d_out) — used by tests and by `to_dense` round-trips.
+    pub fn effective_weight_t(&self) -> Mat {
+        let mut w = Mat::zeros(self.d_in, self.d_out);
+        for (uj, vj) in self.u.iter().zip(&self.v) {
+            w.axpy(1.0 / self.num_terms as f32, &matmul(uj, vj));
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{fro_norm, rel_error};
+    use crate::rng::Philox;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn dense_forward_shapes_and_bias() {
+        let mut rng = Philox::seeded(111);
+        let mut l = Linear::random(6, 4, &mut rng);
+        l.bias = vec![1.0, 2.0, 3.0, 4.0];
+        let x = Mat::zeros(3, 6);
+        let y = l.forward(&x);
+        assert_eq!(y.shape(), (3, 4));
+        assert_eq!(y.row(0), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn sk_forward_matches_effective_weight() {
+        let mut rng = Philox::seeded(112);
+        let sk = SKLinear::random(10, 8, 2, 3, &mut rng);
+        let x = Mat::randn(5, 10, &mut rng);
+        let direct = sk.forward(&x);
+        let via_dense = {
+            let w = sk.effective_weight_t();
+            let mut y = matmul(&x, &w);
+            for i in 0..y.rows() {
+                for (v, b) in y.row_mut(i).iter_mut().zip(&sk.bias) {
+                    *v += b;
+                }
+            }
+            y
+        };
+        assert!(rel_error(&direct, &via_dense) < 1e-4);
+    }
+
+    #[test]
+    fn from_dense_is_unbiased() {
+        // Average the sketched effective weight over many seeds → dense W.
+        let mut rng = Philox::seeded(113);
+        let dense = Linear::random(12, 9, &mut rng);
+        let wt = dense.weight.transpose();
+        let mut acc = Mat::zeros(12, 9);
+        let trials = 300;
+        for t in 0..trials {
+            let mut r = Philox::seeded(1000 + t);
+            let sk = SKLinear::from_dense(&dense, 1, 4, &mut r);
+            acc.axpy(1.0 / trials as f32, &sk.effective_weight_t());
+        }
+        let err = fro_norm(&acc.sub(&wt)) / fro_norm(&wt);
+        assert!(err < 0.2, "bias check: rel err {err}");
+    }
+
+    #[test]
+    fn more_terms_reduce_approximation_variance() {
+        let mut rng = Philox::seeded(114);
+        let dense = Linear::random(30, 30, &mut rng);
+        let wt = dense.weight.transpose();
+        let avg_err = |l: usize| {
+            let mut tot = 0f64;
+            let trials = 30;
+            for t in 0..trials {
+                let mut r = Philox::seeded(5000 + t);
+                let sk = SKLinear::from_dense(&dense, l, 8, &mut r);
+                tot += fro_norm(&sk.effective_weight_t().sub(&wt));
+            }
+            tot / trials as f64
+        };
+        let e1 = avg_err(1);
+        let e4 = avg_err(4);
+        assert!(e4 < e1, "l=4 err {e4} should beat l=1 err {e1}");
+    }
+
+    #[test]
+    fn param_count_formula() {
+        let mut rng = Philox::seeded(115);
+        let sk = SKLinear::random(100, 60, 2, 16, &mut rng);
+        assert_eq!(sk.param_count(), 2 * 16 * 160 + 60);
+        assert!(sk.compression_ratio() < 1.0);
+    }
+
+    #[test]
+    fn property_shapes_all_configs() {
+        prop_check("sklinear-shapes", 20, |g| {
+            let d_in = 1 + g.usize(0..32);
+            let d_out = 1 + g.usize(0..32);
+            let l = 1 + g.usize(0..3);
+            let k = 1 + g.usize(0..8);
+            let b = 1 + g.usize(0..6);
+            let sk = SKLinear::random(d_in, d_out, l, k, g.rng());
+            let x = Mat::randn(b, d_in, g.rng());
+            assert_eq!(sk.forward(&x).shape(), (b, d_out));
+        });
+    }
+
+    #[test]
+    fn bigger_rank_approximates_better() {
+        let mut rng = Philox::seeded(116);
+        let dense = Linear::random(40, 40, &mut rng);
+        let x = Mat::randn(8, 40, &mut rng);
+        let y_ref = dense.forward(&x);
+        let err = |k: usize| {
+            let mut tot = 0f64;
+            for t in 0..20 {
+                let mut r = Philox::seeded(9000 + t);
+                let sk = SKLinear::from_dense(&dense, 1, k, &mut r);
+                tot += rel_error(&sk.forward(&x), &y_ref);
+            }
+            tot / 20.0
+        };
+        assert!(err(32) < err(4), "k=32 {} vs k=4 {}", err(32), err(4));
+    }
+}

@@ -1,0 +1,25 @@
+//! Neural-network layer library: dense layers and their RandNLA drop-in
+//! replacements, mirroring Panther's `panther.nn` (`SKLinear`, `SKConv2d`,
+//! `RandMultiHeadAttention`).
+//!
+//! Two execution paths exist for each layer:
+//! - the **CPU reference forward** implemented here on [`crate::linalg`],
+//!   used by the figure benches (dense and sketched run on the *same*
+//!   substrate, so relative speedups are meaningful), and
+//! - the **AOT path**: the same math compiled from the Pallas/JAX layers
+//!   into HLO artifacts and executed through [`crate::runtime`].
+//!
+//! [`cost`] holds the analytic parameter/FLOP/memory models, including the
+//! paper's benchmark-skip rule `2·l·k·(d_in+d_out) > d_in·d_out`.
+
+pub mod attention;
+pub mod conv;
+pub mod cost;
+pub mod linear;
+pub mod model;
+
+pub use attention::{KernelKind, MultiHeadAttention, RandMultiHeadAttention};
+pub use conv::{Conv2d, ConvShape, SKConv2d};
+pub use cost::{conv_cost, linear_cost, sketch_beats_dense, LayerCost};
+pub use linear::{Linear, SKLinear};
+pub use model::{LayerKind, LayerSelector, Model, NamedLayer};

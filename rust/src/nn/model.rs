@@ -1,0 +1,261 @@
+//! Model container: a flat registry of *named* layers, mirroring how
+//! `SKAutoTuner` navigates a `torch` module hierarchy ("given a torch-saved
+//! model provided with regex or specific layers to replace"). Layer names
+//! use dotted paths (`encoder.layer3.ffn.fc1`), and [`LayerSelector`]
+//! reproduces the paper's `LayerConfig(layer_names={"type": "Linear"})` /
+//! regex / explicit-list selection modes.
+
+use super::attention::{KernelKind, MultiHeadAttention, RandMultiHeadAttention};
+use super::conv::{Conv2d, SKConv2d};
+use super::linear::{Linear, SKLinear};
+use crate::rng::Philox;
+
+/// Any layer the model registry can hold.
+pub enum LayerKind {
+    Linear(Linear),
+    SKLinear(SKLinear),
+    Conv2d(Conv2d),
+    SKConv2d(SKConv2d),
+    Attention(MultiHeadAttention),
+    RandAttention(RandMultiHeadAttention),
+}
+
+impl LayerKind {
+    /// Type name as the selector sees it (matches the paper's `"Linear"`,
+    /// `"Conv2d"`, …).
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            LayerKind::Linear(_) => "Linear",
+            LayerKind::SKLinear(_) => "SKLinear",
+            LayerKind::Conv2d(_) => "Conv2d",
+            LayerKind::SKConv2d(_) => "SKConv2d",
+            LayerKind::Attention(_) => "MultiheadAttention",
+            LayerKind::RandAttention(_) => "RandMultiheadAttention",
+        }
+    }
+
+    /// Stored parameter count.
+    pub fn param_count(&self) -> usize {
+        match self {
+            LayerKind::Linear(l) => l.param_count(),
+            LayerKind::SKLinear(l) => l.param_count(),
+            LayerKind::Conv2d(c) => c.param_count(),
+            LayerKind::SKConv2d(c) => c.param_count(),
+            LayerKind::Attention(a) => 4 * a.weights.embed_dim * a.weights.embed_dim,
+            LayerKind::RandAttention(a) => 4 * a.weights.embed_dim * a.weights.embed_dim,
+        }
+    }
+}
+
+/// A named layer in the registry.
+pub struct NamedLayer {
+    pub name: String,
+    pub layer: LayerKind,
+}
+
+/// The model: ordered named layers (a flattened module tree).
+#[derive(Default)]
+pub struct Model {
+    pub layers: Vec<NamedLayer>,
+}
+
+impl Model {
+    pub fn new() -> Self {
+        Model { layers: Vec::new() }
+    }
+
+    pub fn add(&mut self, name: &str, layer: LayerKind) -> &mut Self {
+        assert!(
+            !self.layers.iter().any(|l| l.name == name),
+            "duplicate layer name {name}"
+        );
+        self.layers.push(NamedLayer {
+            name: name.to_string(),
+            layer,
+        });
+        self
+    }
+
+    pub fn get(&self, name: &str) -> Option<&LayerKind> {
+        self.layers
+            .iter()
+            .find(|l| l.name == name)
+            .map(|l| &l.layer)
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.layers.iter().map(|l| l.layer.param_count()).sum()
+    }
+
+    /// Names of layers matching a selector.
+    pub fn select(&self, sel: &LayerSelector) -> Vec<String> {
+        self.layers
+            .iter()
+            .filter(|l| sel.matches(&l.name, l.layer.type_name()))
+            .map(|l| l.name.clone())
+            .collect()
+    }
+
+    /// Replace a dense layer with its sketched counterpart at `(l, k)`,
+    /// sketching trained weights (`copy_weights=True` semantics). Attention
+    /// layers interpret `k` as the random-feature count. No-op error if the
+    /// layer is already sketched or missing.
+    pub fn sketchify(
+        &mut self,
+        name: &str,
+        num_terms: usize,
+        low_rank: usize,
+        seed: u64,
+    ) -> anyhow::Result<()> {
+        let slot = self
+            .layers
+            .iter_mut()
+            .find(|l| l.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no layer named {name}"))?;
+        let mut rng = Philox::seeded(seed);
+        let new = match &slot.layer {
+            LayerKind::Linear(l) => {
+                LayerKind::SKLinear(SKLinear::from_dense(l, num_terms, low_rank, &mut rng))
+            }
+            LayerKind::Conv2d(c) => {
+                LayerKind::SKConv2d(SKConv2d::from_dense(c, num_terms, low_rank, &mut rng))
+            }
+            LayerKind::Attention(a) => LayerKind::RandAttention(RandMultiHeadAttention::new(
+                a.weights.clone(),
+                low_rank,
+                KernelKind::Softmax,
+                seed,
+            )),
+            other => anyhow::bail!("layer {name} ({}) is not sketchable", other.type_name()),
+        };
+        slot.layer = new;
+        Ok(())
+    }
+}
+
+/// Layer selection — the three modes of the paper's `LayerConfig`.
+pub enum LayerSelector {
+    /// All layers of a given type: `{"type": "Linear"}`.
+    ByType(String),
+    /// Regex on the dotted layer path.
+    ByRegex(regex::Regex),
+    /// Explicit layer names.
+    ByName(Vec<String>),
+}
+
+impl LayerSelector {
+    pub fn by_type(t: &str) -> Self {
+        LayerSelector::ByType(t.to_string())
+    }
+
+    pub fn by_regex(pat: &str) -> anyhow::Result<Self> {
+        Ok(LayerSelector::ByRegex(regex::Regex::new(pat)?))
+    }
+
+    pub fn by_names(names: &[&str]) -> Self {
+        LayerSelector::ByName(names.iter().map(|s| s.to_string()).collect())
+    }
+
+    pub fn matches(&self, name: &str, type_name: &str) -> bool {
+        match self {
+            LayerSelector::ByType(t) => t == type_name,
+            LayerSelector::ByRegex(re) => re.is_match(name),
+            LayerSelector::ByName(ns) => ns.iter().any(|n| n == name),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::attention::AttnWeights;
+    use crate::nn::conv::ConvShape;
+
+    fn toy_model() -> Model {
+        let mut rng = Philox::seeded(141);
+        let mut m = Model::new();
+        m.add(
+            "encoder.fc1",
+            LayerKind::Linear(Linear::random(32, 64, &mut rng)),
+        );
+        m.add(
+            "encoder.fc2",
+            LayerKind::Linear(Linear::random(64, 32, &mut rng)),
+        );
+        m.add(
+            "encoder.conv",
+            LayerKind::Conv2d(Conv2d::random(
+                ConvShape {
+                    c_in: 3,
+                    c_out: 8,
+                    kernel: 3,
+                    image: 8,
+                    padding: 1,
+                },
+                &mut rng,
+            )),
+        );
+        m.add(
+            "encoder.attn",
+            LayerKind::Attention(MultiHeadAttention::new(AttnWeights::random(
+                16, 4, &mut rng,
+            ))),
+        );
+        m
+    }
+
+    #[test]
+    fn select_by_type() {
+        let m = toy_model();
+        let linears = m.select(&LayerSelector::by_type("Linear"));
+        assert_eq!(linears, vec!["encoder.fc1", "encoder.fc2"]);
+    }
+
+    #[test]
+    fn select_by_regex() {
+        let m = toy_model();
+        let sel = LayerSelector::by_regex(r"fc\d$").unwrap();
+        assert_eq!(m.select(&sel).len(), 2);
+        let sel2 = LayerSelector::by_regex(r"^encoder\.(conv|attn)$").unwrap();
+        assert_eq!(m.select(&sel2).len(), 2);
+    }
+
+    #[test]
+    fn select_by_name() {
+        let m = toy_model();
+        let sel = LayerSelector::by_names(&["encoder.fc2", "missing"]);
+        assert_eq!(m.select(&sel), vec!["encoder.fc2"]);
+    }
+
+    #[test]
+    fn sketchify_reduces_params_and_changes_type() {
+        let mut m = toy_model();
+        let before = m.total_params();
+        m.sketchify("encoder.fc1", 1, 4, 9).unwrap();
+        assert_eq!(m.get("encoder.fc1").unwrap().type_name(), "SKLinear");
+        assert!(m.total_params() < before);
+        // Second sketchify on an already-sketched layer errors.
+        assert!(m.sketchify("encoder.fc1", 1, 4, 9).is_err());
+    }
+
+    #[test]
+    fn sketchify_conv_and_attention() {
+        let mut m = toy_model();
+        m.sketchify("encoder.conv", 2, 4, 1).unwrap();
+        m.sketchify("encoder.attn", 1, 32, 1).unwrap();
+        assert_eq!(m.get("encoder.conv").unwrap().type_name(), "SKConv2d");
+        assert_eq!(
+            m.get("encoder.attn").unwrap().type_name(),
+            "RandMultiheadAttention"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate layer name")]
+    fn duplicate_names_rejected() {
+        let mut rng = Philox::seeded(1);
+        let mut m = Model::new();
+        m.add("x", LayerKind::Linear(Linear::random(2, 2, &mut rng)));
+        m.add("x", LayerKind::Linear(Linear::random(2, 2, &mut rng)));
+    }
+}

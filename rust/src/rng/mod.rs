@@ -1,0 +1,222 @@
+//! Counter-based random number generation.
+//!
+//! Sketching operators must be (a) cheap, (b) reproducible, and (c) safely
+//! parallelizable — a worker sketching column block `j` must be able to
+//! generate exactly the entries it needs without coordinating with other
+//! workers. Counter-based generators (Salmon et al., "Parallel Random
+//! Numbers: As Easy as 1, 2, 3") give all three; we implement
+//! **Philox-4x32-10**, the same family used by JAX's `threefry`/`philox`
+//! PRNGs, plus a tiny SplitMix64 for seeding and cheap non-crypto use.
+
+mod philox;
+mod splitmix;
+
+pub use philox::Philox;
+pub use splitmix::SplitMix64;
+
+/// A minimal uniform-random source. Implemented by both generators so
+/// higher-level samplers ([`normal`], [`rademacher`], …) are generic.
+pub trait Rng {
+    /// Next 32 uniform random bits.
+    fn next_u32(&mut self) -> u32;
+
+    /// Next 64 uniform random bits.
+    fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform f32 in `[0, 1)` with 24 bits of mantissa.
+    fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 bits of mantissa.
+    fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)` (n > 0) via Lemire-style rejection.
+    fn next_below(&mut self, n: u32) -> u32 {
+        assert!(n > 0, "next_below(0)");
+        // Rejection sampling on the top of the range to avoid modulo bias.
+        let zone = u32::MAX - (u32::MAX % n);
+        loop {
+            let v = self.next_u32();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (cached spare is *not* kept: callers
+    /// that need bulk normals should use [`fill_normal`]).
+    fn next_normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.next_f32();
+            if u1 > 1e-10 {
+                let u2 = self.next_f32();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f32::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// ±1 with equal probability.
+    fn next_sign(&mut self) -> f32 {
+        if self.next_u32() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+}
+
+/// Fill `out` with i.i.d. standard normals (pairwise Box–Muller, no waste).
+pub fn fill_normal<R: Rng>(rng: &mut R, out: &mut [f32]) {
+    let mut i = 0;
+    while i + 1 < out.len() {
+        let (a, b) = normal_pair(rng);
+        out[i] = a;
+        out[i + 1] = b;
+        i += 2;
+    }
+    if i < out.len() {
+        out[i] = rng.next_normal();
+    }
+}
+
+/// Fill `out` with i.i.d. Rademacher (±1) entries.
+pub fn fill_sign<R: Rng>(rng: &mut R, out: &mut [f32]) {
+    // Use each u32 for 32 signs.
+    let mut i = 0;
+    while i < out.len() {
+        let mut bits = rng.next_u32();
+        let n = 32.min(out.len() - i);
+        for _ in 0..n {
+            out[i] = if bits & 1 == 0 { 1.0 } else { -1.0 };
+            bits >>= 1;
+            i += 1;
+        }
+    }
+}
+
+/// One Box–Muller pair.
+fn normal_pair<R: Rng>(rng: &mut R) -> (f32, f32) {
+    loop {
+        let u1 = rng.next_f32();
+        if u1 > 1e-10 {
+            let u2 = rng.next_f32();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let t = 2.0 * std::f32::consts::PI * u2;
+            return (r * t.cos(), r * t.sin());
+        }
+    }
+}
+
+/// Fisher–Yates shuffle of a slice.
+pub fn shuffle<R: Rng, T>(rng: &mut R, xs: &mut [T]) {
+    for i in (1..xs.len()).rev() {
+        let j = rng.next_below(i as u32 + 1) as usize;
+        xs.swap(i, j);
+    }
+}
+
+/// A random permutation of `0..n`.
+pub fn permutation<R: Rng>(rng: &mut R, n: usize) -> Vec<usize> {
+    let mut p: Vec<usize> = (0..n).collect();
+    shuffle(rng, &mut p);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn philox_reproducible() {
+        let mut a = Philox::seeded(42);
+        let mut b = Philox::seeded(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn philox_seed_sensitivity() {
+        let mut a = Philox::seeded(1);
+        let mut b = Philox::seeded(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4, "different seeds should decorrelate: {same}");
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Philox::seeded(7);
+        for _ in 0..10_000 {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+            let y = r.next_f64();
+            assert!((0.0..1.0).contains(&y));
+        }
+    }
+
+    #[test]
+    fn next_below_unbiased_small() {
+        let mut r = Philox::seeded(3);
+        let mut counts = [0usize; 7];
+        let n = 70_000;
+        for _ in 0..n {
+            counts[r.next_below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            let expect = n / 7;
+            assert!(
+                (c as i64 - expect as i64).abs() < (expect as f64 * 0.1) as i64,
+                "bucket count {c} too far from {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Philox::seeded(11);
+        let mut buf = vec![0f32; 200_000];
+        fill_normal(&mut r, &mut buf);
+        let mean: f64 = buf.iter().map(|&x| x as f64).sum::<f64>() / buf.len() as f64;
+        let var: f64 =
+            buf.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / buf.len() as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn sign_balance() {
+        let mut r = Philox::seeded(13);
+        let mut buf = vec![0f32; 100_000];
+        fill_sign(&mut r, &mut buf);
+        let pos = buf.iter().filter(|&&x| x == 1.0).count();
+        assert!(buf.iter().all(|&x| x == 1.0 || x == -1.0));
+        assert!((pos as i64 - 50_000).abs() < 2_000, "pos {pos}");
+    }
+
+    #[test]
+    fn permutation_valid() {
+        let mut r = Philox::seeded(17);
+        let p = permutation(&mut r, 100);
+        let mut seen = vec![false; 100];
+        for &i in &p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn stream_independence() {
+        // Streams with different counter prefixes must not collide.
+        let mut a = Philox::new(99, 0);
+        let mut b = Philox::new(99, 1);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+}

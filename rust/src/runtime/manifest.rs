@@ -1,0 +1,247 @@
+//! `manifest.json` model: what the AOT pipeline produced.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// One named input/output tensor of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// One lowered HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    /// Index of a named input.
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|s| s.name == name)
+    }
+}
+
+/// A model variant: init/train/eval(/predict) artifact names + metadata.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub family: String,
+    pub init: String,
+    pub train: Option<String>,
+    pub eval: Option<String>,
+    /// Per-row eval (the serving/batcher path).
+    pub eval_rows: Option<String>,
+    pub predict: Option<String>,
+    pub param_names: Vec<String>,
+    pub param_count: usize,
+    /// Raw config object (batch, seq, sketch, lr, …).
+    pub config: Json,
+}
+
+impl ModelSpec {
+    pub fn config_usize(&self, key: &str) -> Option<usize> {
+        self.config.get(key)?.as_usize()
+    }
+
+    pub fn config_f64(&self, key: &str) -> Option<f64> {
+        self.config.get(key)?.as_f64()
+    }
+
+    /// Sketch config `(l, k)` or None for dense variants.
+    pub fn sketch(&self) -> Option<(usize, usize)> {
+        match self.config.get("sketch") {
+            Some(Json::Arr(a)) if a.len() == 2 => {
+                Some((a[0].as_usize()?, a[1].as_usize()?))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    artifacts: BTreeMap<String, ArtifactSpec>,
+    models: BTreeMap<String, ModelSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = Json::parse(text).context("manifest.json parse error")?;
+        let mut artifacts = BTreeMap::new();
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .context("manifest missing 'artifacts'")?;
+        for (name, spec) in arts {
+            let parse_tensors = |key: &str, with_names: bool| -> Result<Vec<TensorSpec>> {
+                let arr = spec
+                    .get(key)
+                    .and_then(Json::as_arr)
+                    .with_context(|| format!("artifact {name} missing '{key}'"))?;
+                arr.iter()
+                    .enumerate()
+                    .map(|(i, t)| {
+                        let shape = t
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .context("tensor missing shape")?
+                            .iter()
+                            .map(|d| d.as_usize().context("bad dim"))
+                            .collect::<Result<Vec<_>>>()?;
+                        let tname = if with_names {
+                            t.get("name")
+                                .and_then(Json::as_str)
+                                .unwrap_or("")
+                                .to_string()
+                        } else {
+                            format!("out{i}")
+                        };
+                        Ok(TensorSpec { name: tname, shape })
+                    })
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    path: spec
+                        .get("path")
+                        .and_then(Json::as_str)
+                        .context("artifact missing path")?
+                        .to_string(),
+                    inputs: parse_tensors("inputs", true)?,
+                    outputs: parse_tensors("outputs", false)?,
+                },
+            );
+        }
+        let mut models = BTreeMap::new();
+        if let Some(ms) = root.get("models").and_then(Json::as_obj) {
+            for (name, spec) in ms {
+                let get_str =
+                    |k: &str| spec.get(k).and_then(Json::as_str).map(|s| s.to_string());
+                models.insert(
+                    name.clone(),
+                    ModelSpec {
+                        name: name.clone(),
+                        family: get_str("family").unwrap_or_default(),
+                        init: get_str("init").context("model missing init")?,
+                        train: get_str("train"),
+                        eval: get_str("eval"),
+                        eval_rows: get_str("eval_rows"),
+                        predict: get_str("predict"),
+                        param_names: spec
+                            .get("param_names")
+                            .and_then(Json::as_arr)
+                            .map(|a| {
+                                a.iter()
+                                    .filter_map(|v| v.as_str().map(|s| s.to_string()))
+                                    .collect()
+                            })
+                            .unwrap_or_default(),
+                        param_count: spec
+                            .get("param_count")
+                            .and_then(Json::as_usize)
+                            .unwrap_or(0),
+                        config: spec.get("config").cloned().unwrap_or(Json::Null),
+                    },
+                );
+            }
+        }
+        Ok(Manifest { artifacts, models })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(name)
+    }
+
+    pub fn artifact_names(&self) -> impl Iterator<Item = &str> {
+        self.artifacts.keys().map(|s| s.as_str())
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelSpec> {
+        self.models.get(name)
+    }
+
+    pub fn model_names(&self) -> impl Iterator<Item = &str> {
+        self.models.keys().map(|s| s.as_str())
+    }
+
+    /// All model variants of a family (`bert`, `conv`), dense first.
+    pub fn models_in_family(&self, family: &str) -> Vec<&ModelSpec> {
+        let mut v: Vec<&ModelSpec> = self
+            .models
+            .values()
+            .filter(|m| m.family == family)
+            .collect();
+        v.sort_by_key(|m| (m.sketch().is_some(), m.name.clone()));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "toy_eval": {
+          "path": "toy_eval.hlo.txt",
+          "inputs": [
+            {"name": "params.w", "shape": [4, 2]},
+            {"name": "x", "shape": [8, 4]}
+          ],
+          "outputs": [{"shape": []}]
+        }
+      },
+      "models": {
+        "toy": {
+          "family": "bert",
+          "init": "toy_init",
+          "train": null,
+          "eval": "toy_eval",
+          "param_names": ["w"],
+          "param_count": 8,
+          "config": {"batch": 8, "sketch": [1, 4], "lr": 0.001}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_artifacts_and_models() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.artifact("toy_eval").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].name, "params.w");
+        assert_eq!(a.inputs[0].shape, vec![4, 2]);
+        assert_eq!(a.input_index("x"), Some(1));
+        assert_eq!(a.outputs.len(), 1);
+        assert!(a.outputs[0].shape.is_empty());
+
+        let model = m.model("toy").unwrap();
+        assert_eq!(model.eval.as_deref(), Some("toy_eval"));
+        assert_eq!(model.train, None);
+        assert_eq!(model.sketch(), Some((1, 4)));
+        assert_eq!(model.config_usize("batch"), Some(8));
+        assert!((model.config_f64("lr").unwrap() - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_sections_error() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn family_listing_orders_dense_first() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.models_in_family("bert").len(), 1);
+        assert_eq!(m.models_in_family("conv").len(), 0);
+    }
+}

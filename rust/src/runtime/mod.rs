@@ -1,0 +1,204 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! `make artifacts` (the only step that runs Python) leaves
+//! `artifacts/*.hlo.txt` plus `manifest.json`; everything here is pure Rust
+//! on top of the `xla` crate's PJRT CPU client:
+//!
+//! - [`tensor::HostTensor`] — host-side f32 tensor exchanged with HLO
+//!   executables (row-major, matching [`crate::linalg::Mat`]).
+//! - [`manifest::Manifest`] — parsed `manifest.json`: artifact input/output
+//!   specs, model descriptors (param names/order, config).
+//! - [`Runtime`] — compile-on-demand executable cache + name-checked
+//!   execution.
+//!
+//! The PJRT client wrapper is not `Send` (raw C pointers), so a `Runtime`
+//! lives on one thread; [`crate::coordinator`] owns one on a dedicated
+//! service thread and multiplexes requests over channels.
+
+pub mod manifest;
+pub mod tensor;
+
+pub use manifest::{ArtifactSpec, Manifest, ModelSpec, TensorSpec};
+pub use tensor::HostTensor;
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Loaded runtime: PJRT client + manifest + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions per artifact (metrics).
+    exec_counts: HashMap<String, u64>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (expects `manifest.json` inside).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir,
+            cache: HashMap::new(),
+            exec_counts: HashMap::new(),
+        })
+    }
+
+    /// Default artifact location: `$PANTHER_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("PANTHER_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile an artifact (cached after the first call).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .artifact(name)
+            .with_context(|| format!("artifact {name} not in manifest"))?;
+        let path = self.dir.join(&spec.path);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        crate::log_info!(
+            "compiled artifact {name} in {}",
+            crate::util::human_duration(t0.elapsed())
+        );
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with shape-checked inputs; returns the flattened
+    /// output tensors (the HLO returns one tuple; we decompose it).
+    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.load(name)?;
+        let spec = self.manifest.artifact(name).unwrap().clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact {name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if t.shape() != s.shape.as_slice() {
+                bail!(
+                    "artifact {name} input {i} ({}): shape {:?} != manifest {:?}",
+                    s.name,
+                    t.shape(),
+                    s.shape
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let exe = self.cache.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+        // return_tuple=True → single tuple output on replica 0.
+        let out_lit = result[0][0].to_literal_sync()?;
+        let parts = out_lit.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "artifact {name}: manifest declares {} outputs, HLO returned {}",
+                spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(lit, os)| HostTensor::from_literal(lit, &os.shape))
+            .collect()
+    }
+
+    /// Total executions of an artifact so far.
+    pub fn exec_count(&self, name: &str) -> u64 {
+        self.exec_counts.get(name).copied().unwrap_or(0)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn kernel_artifact_roundtrip() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        };
+        let mut rt = Runtime::open(dir).unwrap();
+        let spec = rt.manifest().artifact("k_sk_linear").unwrap().clone();
+        // Zero inputs → output should equal the (zero) bias broadcast.
+        let inputs: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .map(|s| HostTensor::zeros(&s.shape))
+            .collect();
+        let out = rt.execute("k_sk_linear", &inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].data().iter().all(|&v| v == 0.0));
+        assert_eq!(rt.exec_count("k_sk_linear"), 1);
+        assert_eq!(rt.cached_executables(), 1);
+    }
+
+    #[test]
+    fn execute_rejects_bad_arity_and_shape() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let mut rt = Runtime::open(dir).unwrap();
+        assert!(rt
+            .execute("k_sk_linear", &[HostTensor::zeros(&[1])])
+            .is_err());
+        let spec = rt.manifest().artifact("k_sk_linear").unwrap().clone();
+        let mut inputs: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .map(|s| HostTensor::zeros(&s.shape))
+            .collect();
+        inputs[0] = HostTensor::zeros(&[3, 3]);
+        assert!(rt.execute("k_sk_linear", &inputs).is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let mut rt = Runtime::open(dir).unwrap();
+        assert!(rt.execute("no_such_artifact", &[]).is_err());
+    }
+}

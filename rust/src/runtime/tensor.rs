@@ -1,0 +1,163 @@
+//! Host-side tensors exchanged with HLO executables.
+
+use crate::linalg::Mat;
+use anyhow::Result;
+
+/// A row-major f32 tensor with explicit shape. The runtime converts these
+/// to/from `xla::Literal`s at the executable boundary; `Mat` converts for
+/// the 2-D case so the linalg substrate and the PJRT path interoperate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} / data {} mismatch",
+            data.len()
+        );
+        HostTensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        HostTensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        HostTensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    /// Fill with i.i.d. N(0, σ²) entries.
+    pub fn randn<R: crate::rng::Rng>(shape: &[usize], sigma: f32, rng: &mut R) -> Self {
+        let mut t = Self::zeros(shape);
+        crate::rng::fill_normal(rng, &mut t.data);
+        for v in &mut t.data {
+            *v *= sigma;
+        }
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Scalar extraction (shape [] or [1]).
+    pub fn to_scalar(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "to_scalar on shape {:?}", self.shape);
+        self.data[0]
+    }
+
+    /// 2-D view as a `Mat` (copies).
+    pub fn to_mat(&self) -> Mat {
+        assert_eq!(self.shape.len(), 2, "to_mat on shape {:?}", self.shape);
+        Mat::from_vec(self.shape[0], self.shape[1], self.data.clone())
+    }
+
+    pub fn from_mat(m: &Mat) -> Self {
+        HostTensor::new(&[m.rows(), m.cols()], m.data().to_vec())
+    }
+
+    /// Convert to an `xla::Literal` (f32, row-major).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // Scalars: reshape to rank-0.
+            Ok(lit.reshape(&[])?)
+        } else {
+            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    /// Read back from a literal, validating the element count against the
+    /// expected shape from the manifest.
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Self> {
+        let data = lit.to_vec::<f32>()?;
+        anyhow::ensure!(
+            data.len() == shape.iter().product::<usize>(),
+            "literal has {} elements, manifest shape {shape:?}",
+            data.len()
+        );
+        Ok(HostTensor::new(shape, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Philox;
+
+    #[test]
+    fn construction_invariants() {
+        let t = HostTensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert_eq!(t.shape(), &[2, 3, 4]);
+        let s = HostTensor::scalar(5.0);
+        assert_eq!(s.to_scalar(), 5.0);
+        assert!(s.shape().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn shape_data_mismatch_panics() {
+        let _ = HostTensor::new(&[2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn mat_roundtrip() {
+        let mut rng = Philox::seeded(7);
+        let m = Mat::randn(4, 6, &mut rng);
+        let t = HostTensor::from_mat(&m);
+        assert_eq!(t.to_mat(), m);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = HostTensor::new(&[2, 3], (0..6).map(|i| i as f32).collect());
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, &[2, 3]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_literal_roundtrip() {
+        let t = HostTensor::scalar(3.5);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, &[]).unwrap();
+        assert_eq!(back.to_scalar(), 3.5);
+    }
+}

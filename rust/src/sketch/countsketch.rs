@@ -1,0 +1,99 @@
+//! CountSketch: one nonzero (±1) per input coordinate. The cheapest sketch
+//! to apply — a single pass over the data — and the basis of tensor-sketch
+//! convolution approximations [Kasiviswanathan et al. 2017].
+
+use super::Sketch;
+use crate::linalg::Mat;
+use crate::rng::{Philox, Rng};
+
+pub struct CountSketch {
+    m: usize,
+    d: usize,
+    seed: u64,
+}
+
+impl CountSketch {
+    pub fn new(m: usize, d: usize, seed: u64) -> Self {
+        assert!(d > 0 && m > 0);
+        CountSketch { m, d, seed }
+    }
+
+    /// Hash of coordinate `j`: (target row, sign).
+    #[inline]
+    fn hash(&self, j: usize) -> (usize, f32) {
+        let mut rng = Philox::new(self.seed, j as u64);
+        let row = rng.next_below(self.d as u32) as usize;
+        (row, rng.next_sign())
+    }
+}
+
+impl Sketch for CountSketch {
+    fn input_dim(&self) -> usize {
+        self.m
+    }
+
+    fn output_dim(&self) -> usize {
+        self.d
+    }
+
+    fn apply(&self, a: &Mat) -> Mat {
+        assert_eq!(a.rows(), self.m);
+        let mut out = Mat::zeros(self.d, a.cols());
+        for srow in 0..self.m {
+            let (drow, sign) = self.hash(srow);
+            let arow = a.row(srow);
+            let orow = out.row_mut(drow);
+            if sign > 0.0 {
+                for (o, &v) in orow.iter_mut().zip(arow) {
+                    *o += v;
+                }
+            } else {
+                for (o, &v) in orow.iter_mut().zip(arow) {
+                    *o -= v;
+                }
+            }
+        }
+        out
+    }
+
+    fn to_dense(&self) -> Mat {
+        let mut s = Mat::zeros(self.d, self.m);
+        for j in 0..self.m {
+            let (i, sg) = self.hash(j);
+            s.set(i, j, sg);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_nonzero_per_column() {
+        let s = CountSketch::new(40, 8, 2).to_dense();
+        for j in 0..40 {
+            let nnz = (0..8).filter(|&i| s.get(i, j) != 0.0).count();
+            assert_eq!(nnz, 1);
+        }
+    }
+
+    #[test]
+    fn entries_are_signs() {
+        let s = CountSketch::new(40, 8, 2).to_dense();
+        for &v in s.data() {
+            assert!(v == 0.0 || v == 1.0 || v == -1.0);
+        }
+    }
+
+    #[test]
+    fn apply_linear_in_input() {
+        let cs = CountSketch::new(20, 5, 7);
+        let a = Mat::randn(20, 3, &mut Philox::seeded(1));
+        let b = Mat::randn(20, 3, &mut Philox::seeded(2));
+        let sum = cs.apply(&a.add(&b));
+        let parts = cs.apply(&a).add(&cs.apply(&b));
+        assert!(crate::linalg::rel_error(&sum, &parts) < 1e-5);
+    }
+}

@@ -1,0 +1,158 @@
+//! Sketching operators — the "R" in RandNLA.
+//!
+//! A sketch is a random linear map `S : R^m → R^d` (d ≪ m) that preserves
+//! geometry with high probability (Johnson–Lindenstrauss). Panther uses
+//! sketches in three places: compressing layer weights (SKLinear/SKConv2d),
+//! the rangefinder inside RSVD, and the pivot-selection step of CQRRPT.
+//!
+//! Implemented operators:
+//! - [`GaussianSketch`] — dense i.i.d. N(0, 1/d); the JL workhorse.
+//! - [`SparseSignSketch`] — Achlioptas/"short-axis" sparse ±1, `nnz` per
+//!   column; the operator CQRRPT recommends for tall inputs.
+//! - [`CountSketch`] — one nonzero per column; O(nnz(A)) application.
+//! - [`SrhtSketch`] — subsampled randomized Hadamard transform; O(m log m)
+//!   apply with strong uniformity guarantees.
+//!
+//! All operators are deterministic functions of `(seed, shape)` via Philox
+//! streams, so distributed workers can regenerate any block on demand
+//! without storing the sketch.
+
+mod countsketch;
+mod gaussian;
+mod sparse_sign;
+mod srht;
+
+pub use countsketch::CountSketch;
+pub use gaussian::GaussianSketch;
+pub use sparse_sign::SparseSignSketch;
+pub use srht::SrhtSketch;
+
+use crate::linalg::Mat;
+
+/// A random linear sketching operator `S: R^m -> R^d` applied to matrices
+/// with `m` rows: `sketch(A) = S·A` has shape `d × n`.
+pub trait Sketch {
+    /// Input dimension `m` (rows consumed).
+    fn input_dim(&self) -> usize;
+
+    /// Output dimension `d` (rows produced).
+    fn output_dim(&self) -> usize;
+
+    /// Apply to a matrix: `S · a`, where `a` is `m × n`.
+    fn apply(&self, a: &Mat) -> Mat;
+
+    /// Materialize `S` as a dense `d × m` matrix (tests / small cases).
+    fn to_dense(&self) -> Mat;
+}
+
+/// Embedding distortion of a sketch on a set of vectors: max over columns of
+/// `|‖Sx‖²/‖x‖² − 1|`. Used by tests to check JL concentration.
+pub fn max_distortion(s: &dyn Sketch, a: &Mat) -> f64 {
+    let sa = s.apply(a);
+    let mut worst = 0f64;
+    for j in 0..a.cols() {
+        let orig: f64 = (0..a.rows()).map(|i| (a.get(i, j) as f64).powi(2)).sum();
+        let skch: f64 = (0..sa.rows()).map(|i| (sa.get(i, j) as f64).powi(2)).sum();
+        if orig > 1e-30 {
+            worst = worst.max((skch / orig - 1.0).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Philox;
+    use crate::util::prop::prop_check;
+
+    fn operators(m: usize, d: usize, seed: u64) -> Vec<Box<dyn Sketch>> {
+        vec![
+            Box::new(GaussianSketch::new(m, d, seed)),
+            Box::new(SparseSignSketch::new(m, d, 8.min(d), seed)),
+            Box::new(CountSketch::new(m, d, seed)),
+            Box::new(SrhtSketch::new(m, d, seed)),
+        ]
+    }
+
+    #[test]
+    fn apply_matches_dense_materialization() {
+        let mut rng = Philox::seeded(61);
+        let a = Mat::randn(64, 9, &mut rng);
+        for op in operators(64, 16, 7) {
+            let fast = op.apply(&a);
+            let dense = crate::linalg::matmul(&op.to_dense(), &a);
+            assert!(
+                crate::linalg::rel_error(&fast, &dense) < 1e-4,
+                "operator dim {}x{}",
+                op.output_dim(),
+                op.input_dim()
+            );
+        }
+    }
+
+    #[test]
+    fn shapes() {
+        for op in operators(100, 20, 3) {
+            assert_eq!(op.input_dim(), 100);
+            assert_eq!(op.output_dim(), 20);
+            let a = Mat::zeros(100, 5);
+            assert_eq!(op.apply(&a).shape(), (20, 5));
+            assert_eq!(op.to_dense().shape(), (20, 100));
+        }
+    }
+
+    #[test]
+    fn jl_concentration_gaussian() {
+        // With d = 512 rows, distortion on a handful of vectors should be
+        // well under 30% with overwhelming probability.
+        let mut rng = Philox::seeded(62);
+        let a = Mat::randn(256, 4, &mut rng);
+        let s = GaussianSketch::new(256, 512, 11);
+        assert!(max_distortion(&s, &a) < 0.3);
+    }
+
+    #[test]
+    fn property_norm_preservation_in_expectation() {
+        // Averaged over many seeds, ‖Sx‖² ≈ ‖x‖² for every operator family.
+        prop_check("sketch-unbiased", 4, |g| {
+            let m = 32 + g.usize(0..32);
+            let d = 16;
+            let x = Mat::randn(m, 1, g.rng());
+            let orig: f64 = (0..m).map(|i| (x.get(i, 0) as f64).powi(2)).sum();
+            for family in 0..4usize {
+                let mut acc = 0f64;
+                let trials = 48;
+                for t in 0..trials {
+                    let seed = (family * 1000 + t) as u64;
+                    let op: Box<dyn Sketch> = match family {
+                        0 => Box::new(GaussianSketch::new(m, d, seed)),
+                        1 => Box::new(SparseSignSketch::new(m, d, 4, seed)),
+                        2 => Box::new(CountSketch::new(m, d, seed)),
+                        _ => Box::new(SrhtSketch::new(m, d, seed)),
+                    };
+                    let sx = op.apply(&x);
+                    acc += (0..d).map(|i| (sx.get(i, 0) as f64).powi(2)).sum::<f64>();
+                }
+                let mean = acc / trials as f64;
+                let ratio = mean / orig;
+                assert!(
+                    (0.55..1.45).contains(&ratio),
+                    "family {family}: E‖Sx‖²/‖x‖² = {ratio}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let mut rng = Philox::seeded(63);
+        let a = Mat::randn(50, 3, &mut rng);
+        for (x, y) in operators(50, 10, 5)
+            .into_iter()
+            .zip(operators(50, 10, 5))
+        {
+            assert_eq!(x.apply(&a).data(), y.apply(&a).data());
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Subsampled Randomized Hadamard Transform: `S = √(m/d)·P·H·D` where `D` is
+//! a random sign diagonal, `H` the (normalized) Walsh–Hadamard transform,
+//! and `P` samples `d` rows. Applies in O(m log m) per column via the fast
+//! WHT; the Hadamard mixing makes row sampling safe for arbitrary inputs.
+
+use super::Sketch;
+use crate::linalg::Mat;
+use crate::rng::{fill_sign, Philox, Rng};
+
+pub struct SrhtSketch {
+    m: usize,
+    /// m rounded up to a power of two (the FWHT size).
+    mpad: usize,
+    d: usize,
+    signs: Vec<f32>,
+    rows: Vec<usize>,
+}
+
+impl SrhtSketch {
+    pub fn new(m: usize, d: usize, seed: u64) -> Self {
+        assert!(d > 0 && m > 0);
+        let mpad = m.next_power_of_two();
+        let mut rng = Philox::new(seed, 0);
+        let mut signs = vec![0f32; m];
+        fill_sign(&mut rng, &mut signs);
+        // Sample d distinct rows of the padded transform.
+        let mut rows = Vec::with_capacity(d);
+        let mut chosen = std::collections::HashSet::with_capacity(d);
+        let mut row_rng = Philox::new(seed, 1);
+        while rows.len() < d.min(mpad) {
+            let r = row_rng.next_below(mpad as u32) as usize;
+            if chosen.insert(r) {
+                rows.push(r);
+            }
+        }
+        SrhtSketch {
+            m,
+            mpad,
+            d: rows.len(),
+            signs,
+            rows,
+        }
+    }
+
+    /// In-place fast Walsh–Hadamard transform (unnormalized).
+    fn fwht(buf: &mut [f64]) {
+        let n = buf.len();
+        let mut h = 1;
+        while h < n {
+            for i in (0..n).step_by(h * 2) {
+                for j in i..i + h {
+                    let x = buf[j];
+                    let y = buf[j + h];
+                    buf[j] = x + y;
+                    buf[j + h] = x - y;
+                }
+            }
+            h *= 2;
+        }
+    }
+}
+
+impl Sketch for SrhtSketch {
+    fn input_dim(&self) -> usize {
+        self.m
+    }
+
+    fn output_dim(&self) -> usize {
+        self.d
+    }
+
+    fn apply(&self, a: &Mat) -> Mat {
+        assert_eq!(a.rows(), self.m);
+        let n = a.cols();
+        let mut out = Mat::zeros(self.d, n);
+        // Overall scaling: H normalized by 1/√mpad, sampling by √(mpad/d)
+        // → combined 1/√(d·?)… algebra: (1/√mpad)·√(mpad/d) = 1/√d.
+        let scale = 1.0 / (self.d as f64).sqrt();
+        let mut buf = vec![0f64; self.mpad];
+        for j in 0..n {
+            for v in buf.iter_mut() {
+                *v = 0.0;
+            }
+            for i in 0..self.m {
+                buf[i] = (self.signs[i] * a.get(i, j)) as f64;
+            }
+            Self::fwht(&mut buf);
+            for (k, &r) in self.rows.iter().enumerate() {
+                out.set(k, j, (buf[r] * scale) as f32);
+            }
+        }
+        out
+    }
+
+    fn to_dense(&self) -> Mat {
+        // Apply to the identity.
+        self.apply(&Mat::eye(self.m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fwht_matches_definition_small() {
+        // H₂ = [[1,1],[1,-1]] ⊗ …, unnormalized.
+        let mut buf = vec![1.0, 2.0, 3.0, 4.0];
+        SrhtSketch::fwht(&mut buf);
+        assert_eq!(buf, vec![10.0, -2.0, -4.0, 0.0]);
+    }
+
+    #[test]
+    fn fwht_is_self_inverse_up_to_n() {
+        let mut buf: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        let orig = buf.clone();
+        SrhtSketch::fwht(&mut buf);
+        SrhtSketch::fwht(&mut buf);
+        for (a, b) in buf.iter().zip(&orig) {
+            assert!((a / 8.0 - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn handles_non_power_of_two_input() {
+        let s = SrhtSketch::new(48, 12, 4);
+        assert_eq!(s.mpad, 64);
+        let a = Mat::randn(48, 2, &mut Philox::seeded(3));
+        assert_eq!(s.apply(&a).shape(), (12, 2));
+    }
+
+    #[test]
+    fn d_clamped_to_padded_size() {
+        let s = SrhtSketch::new(3, 100, 1);
+        assert_eq!(s.output_dim(), 4); // padded to 4, can't sample more rows
+    }
+}

@@ -1,0 +1,159 @@
+//! Checkpoints: serialize a [`super::ModelState`] to a simple binary file.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "PNTH" | version u32 | step u64 | model-name (u32 len + utf8)
+//! | n_params u32 | 3 groups (params, m, v) × n tensors:
+//!     rank u32 | dims u64 × rank | data f32 × prod(dims)
+//! ```
+
+use super::ModelState;
+use crate::runtime::HostTensor;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"PNTH";
+const VERSION: u32 = 1;
+
+/// Write a checkpoint.
+pub fn save(state: &ModelState, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&state.step.to_le_bytes())?;
+    let name = state.model.as_bytes();
+    w.write_all(&(name.len() as u32).to_le_bytes())?;
+    w.write_all(name)?;
+    w.write_all(&(state.params.len() as u32).to_le_bytes())?;
+    for group in [&state.params, &state.m, &state.v] {
+        for t in group.iter() {
+            w.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+            for &d in t.shape() {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &x in t.data() {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a checkpoint.
+pub fn load(path: impl AsRef<Path>) -> Result<ModelState> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a panther checkpoint (bad magic)");
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let step = read_u64(&mut r)?;
+    let name_len = read_u32(&mut r)? as usize;
+    let mut name = vec![0u8; name_len];
+    r.read_exact(&mut name)?;
+    let model = String::from_utf8(name).context("bad model name")?;
+    let n = read_u32(&mut r)? as usize;
+    let mut groups = Vec::with_capacity(3);
+    for _ in 0..3 {
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let rank = read_u32(&mut r)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(read_u64(&mut r)? as usize);
+            }
+            let count: usize = shape.iter().product();
+            let mut data = vec![0f32; count];
+            let mut buf = [0u8; 4];
+            for x in &mut data {
+                r.read_exact(&mut buf)?;
+                *x = f32::from_le_bytes(buf);
+            }
+            tensors.push(HostTensor::new(&shape, data));
+        }
+        groups.push(tensors);
+    }
+    let v = groups.pop().unwrap();
+    let m = groups.pop().unwrap();
+    let params = groups.pop().unwrap();
+    Ok(ModelState {
+        model,
+        params,
+        m,
+        v,
+        step,
+    })
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Philox;
+
+    fn toy_state() -> ModelState {
+        let mut rng = Philox::seeded(3);
+        let params = vec![
+            HostTensor::randn(&[4, 3], 1.0, &mut rng),
+            HostTensor::randn(&[7], 0.5, &mut rng),
+            HostTensor::scalar(2.0),
+        ];
+        let m = params.iter().map(|t| HostTensor::zeros(t.shape())).collect();
+        let v = params.iter().map(|t| HostTensor::zeros(t.shape())).collect();
+        ModelState {
+            model: "toy_model".into(),
+            params,
+            m,
+            v,
+            step: 42,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let state = toy_state();
+        let dir = std::env::temp_dir().join("panther_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("toy.ckpt");
+        save(&state, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.model, "toy_model");
+        assert_eq!(back.step, 42);
+        assert_eq!(back.params.len(), 3);
+        for (a, b) in back.params.iter().zip(&state.params) {
+            assert_eq!(a, b);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("panther_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,32 @@
+//! SKAutoTuner — the paper's §2.2 contribution, rebuilt in Rust.
+//!
+//! "Users specify high-level constraints, such as a memory budget or
+//! accuracy tolerance, and the tuner explores the configuration space" —
+//! here as an Optuna-style ask/tell study engine:
+//!
+//! - [`space`] — search-space definition (int/categorical/log-uniform
+//!   dimensions; the `(num_terms, low_rank)` space sketching introduces).
+//! - [`sampler`] — [`RandomSampler`], [`GridSampler`], and [`TpeSampler`]
+//!   (Tree-structured Parzen Estimator, the algorithm behind Optuna's
+//!   default sampler).
+//! - [`study`] — trial lifecycle (running → complete/pruned/failed),
+//!   constraint handling (accuracy threshold), best-trial selection, JSON
+//!   persistence.
+//! - [`pruner`] — median pruning of unpromising trials from interim
+//!   reports.
+//! - [`autotuner`] — the high-level `SKAutoTuner` mirroring the paper's
+//!   Listing 2: layer selection (type/regex/name), per-layer or joint
+//!   search, `apply_best_params`.
+
+pub mod autotuner;
+pub mod bert_tune;
+pub mod pruner;
+pub mod sampler;
+pub mod space;
+pub mod study;
+
+pub use autotuner::{AccuracyMode, SkAutoTuner, TuneOutcome, TuningConfig};
+pub use pruner::{MedianPruner, NoPruner, Pruner, SuccessiveHalvingPruner};
+pub use sampler::{GridSampler, RandomSampler, Sampler, TpeSampler};
+pub use space::{Categorical, Dimension, ParamValue, SearchSpace};
+pub use study::{Direction, Study, Trial, TrialState};

@@ -1,0 +1,210 @@
+//! Pruners: early-stop unpromising trials from interim reports.
+
+use super::study::{Trial, TrialState};
+
+/// Decides whether a running trial should be stopped early.
+pub trait Pruner: Send {
+    /// `value` is the canonical (lower-better) interim value at `step`.
+    fn should_prune(&self, history: &[Trial], trial: &Trial, step: usize, value: f64) -> bool;
+}
+
+/// Never prunes.
+pub struct NoPruner;
+
+impl Pruner for NoPruner {
+    fn should_prune(&self, _h: &[Trial], _t: &Trial, _s: usize, _v: f64) -> bool {
+        false
+    }
+}
+
+/// Optuna's `MedianPruner`: stop if the trial's interim value is worse than
+/// the median of completed trials' values at the same step.
+pub struct MedianPruner {
+    /// Number of completed trials required before pruning activates.
+    pub n_startup_trials: usize,
+    /// Steps at the start of each trial that are never pruned.
+    pub n_warmup_steps: usize,
+}
+
+impl Default for MedianPruner {
+    fn default() -> Self {
+        MedianPruner {
+            n_startup_trials: 4,
+            n_warmup_steps: 1,
+        }
+    }
+}
+
+impl Pruner for MedianPruner {
+    fn should_prune(&self, history: &[Trial], trial: &Trial, step: usize, value: f64) -> bool {
+        if step < self.n_warmup_steps {
+            return false;
+        }
+        // Interim values of other trials at the same (or nearest ≤) step.
+        let mut peers: Vec<f64> = history
+            .iter()
+            .filter(|t| t.id != trial.id && t.state == TrialState::Complete)
+            .filter_map(|t| {
+                t.interim
+                    .iter()
+                    .rev()
+                    .find(|(s, _)| *s <= step)
+                    .map(|(_, v)| *v)
+            })
+            .collect();
+        if peers.len() < self.n_startup_trials {
+            return false;
+        }
+        peers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = peers[peers.len() / 2];
+        value > median
+    }
+}
+
+/// Successive-halving (ASHA-style) pruner: at each rung (step =
+/// `min_resource·η^r`), keep only the top `1/η` fraction of trials seen at
+/// that rung; everything else is stopped. Asynchronous: decisions use
+/// whatever history exists when a trial reaches the rung.
+pub struct SuccessiveHalvingPruner {
+    /// First rung (steps before any pruning decision).
+    pub min_resource: usize,
+    /// Reduction factor η (Optuna default 4; 3 in the ASHA paper).
+    pub eta: usize,
+}
+
+impl Default for SuccessiveHalvingPruner {
+    fn default() -> Self {
+        SuccessiveHalvingPruner {
+            min_resource: 1,
+            eta: 3,
+        }
+    }
+}
+
+impl SuccessiveHalvingPruner {
+    /// Is `step` exactly a rung boundary?
+    fn rung(&self, step: usize) -> Option<u32> {
+        if step < self.min_resource {
+            return None;
+        }
+        let mut r = self.min_resource;
+        let mut i = 0u32;
+        while r < step {
+            r *= self.eta;
+            i += 1;
+        }
+        (r == step).then_some(i)
+    }
+}
+
+impl Pruner for SuccessiveHalvingPruner {
+    fn should_prune(&self, history: &[Trial], trial: &Trial, step: usize, value: f64) -> bool {
+        let Some(_rung) = self.rung(step) else {
+            return false;
+        };
+        // Competitors' values at (or before) the same rung step.
+        let mut peers: Vec<f64> = history
+            .iter()
+            .filter(|t| t.id != trial.id)
+            .filter_map(|t| {
+                t.interim
+                    .iter()
+                    .rev()
+                    .find(|(s, _)| *s <= step)
+                    .map(|(_, v)| *v)
+            })
+            .collect();
+        if peers.len() < self.eta {
+            return false; // not enough signal at this rung yet
+        }
+        peers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Survive only in the top 1/η fraction (lower is better).
+        let cutoff_idx = (peers.len() / self.eta).max(1) - 1;
+        value > peers[cutoff_idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::study::Trial;
+
+    fn completed(id: usize, interim: &[(usize, f64)]) -> Trial {
+        let mut t = Trial::new(id);
+        t.state = TrialState::Complete;
+        t.interim = interim.to_vec();
+        t.value = interim.last().map(|&(_, v)| v);
+        t
+    }
+
+    #[test]
+    fn no_pruner_never_prunes() {
+        let t = Trial::new(0);
+        assert!(!NoPruner.should_prune(&[], &t, 100, f64::INFINITY));
+    }
+
+    #[test]
+    fn median_pruner_stops_bad_trials() {
+        let history: Vec<Trial> = (0..6)
+            .map(|i| completed(i, &[(0, 1.0), (5, 0.5), (10, 0.3)]))
+            .collect();
+        let p = MedianPruner::default();
+        let t = Trial::new(99);
+        // Way worse than the 0.5 median at step 5.
+        assert!(p.should_prune(&history, &t, 5, 2.0));
+        // Better than median — keep going.
+        assert!(!p.should_prune(&history, &t, 5, 0.3));
+    }
+
+    #[test]
+    fn sh_rungs_are_geometric() {
+        let p = SuccessiveHalvingPruner {
+            min_resource: 2,
+            eta: 3,
+        };
+        assert_eq!(p.rung(1), None);
+        assert_eq!(p.rung(2), Some(0));
+        assert_eq!(p.rung(6), Some(1));
+        assert_eq!(p.rung(18), Some(2));
+        assert_eq!(p.rung(7), None, "non-rung steps never prune");
+    }
+
+    #[test]
+    fn sh_keeps_top_fraction() {
+        let p = SuccessiveHalvingPruner {
+            min_resource: 4,
+            eta: 4,
+        };
+        // 8 peers with values 1..8 at step 4.
+        let history: Vec<Trial> = (0..8)
+            .map(|i| completed(i, &[(4, (i + 1) as f64)]))
+            .collect();
+        let t = Trial::new(99);
+        // Top quarter = values ≤ 2. A 1.5 survives; a 5.0 is pruned.
+        assert!(!p.should_prune(&history, &t, 4, 1.5));
+        assert!(p.should_prune(&history, &t, 4, 5.0));
+        // Off-rung step: never prune.
+        assert!(!p.should_prune(&history, &t, 5, 100.0));
+    }
+
+    #[test]
+    fn sh_insufficient_peers_no_prune() {
+        let p = SuccessiveHalvingPruner::default();
+        let history: Vec<Trial> = (0..2).map(|i| completed(i, &[(1, 0.0)])).collect();
+        let t = Trial::new(9);
+        assert!(!p.should_prune(&history, &t, 1, 100.0));
+    }
+
+    #[test]
+    fn median_pruner_respects_warmup_and_startup() {
+        let p = MedianPruner {
+            n_startup_trials: 4,
+            n_warmup_steps: 3,
+        };
+        let history: Vec<Trial> = (0..6).map(|i| completed(i, &[(5, 0.1)])).collect();
+        let t = Trial::new(9);
+        assert!(!p.should_prune(&history, &t, 2, 100.0), "warmup");
+        let small: Vec<Trial> = (0..2).map(|i| completed(i, &[(5, 0.1)])).collect();
+        assert!(!p.should_prune(&small, &t, 5, 100.0), "startup");
+    }
+}

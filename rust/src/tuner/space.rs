@@ -1,0 +1,198 @@
+//! Search-space definition.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// A sampled parameter value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamValue {
+    Int(i64),
+    Float(f64),
+    Str(String),
+}
+
+impl ParamValue {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            ParamValue::Int(v) => Some(*v),
+            ParamValue::Float(v) => Some(*v as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|v| usize::try_from(v).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            ParamValue::Int(v) => Some(*v as f64),
+            ParamValue::Float(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            ParamValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            ParamValue::Int(v) => Json::Num(*v as f64),
+            ParamValue::Float(v) => Json::Num(*v),
+            ParamValue::Str(s) => Json::Str(s.clone()),
+        }
+    }
+}
+
+/// Categorical choice set.
+#[derive(Debug, Clone)]
+pub struct Categorical {
+    pub choices: Vec<ParamValue>,
+}
+
+/// One search dimension.
+#[derive(Debug, Clone)]
+pub enum Dimension {
+    /// Integer range [lo, hi] inclusive.
+    Int { lo: i64, hi: i64 },
+    /// Integer range sampled log-uniformly (for ranks: 4..512).
+    IntLog { lo: i64, hi: i64 },
+    /// Float range [lo, hi).
+    Float { lo: f64, hi: f64 },
+    /// Explicit categorical choices.
+    Cat(Categorical),
+}
+
+impl Dimension {
+    /// All values of a discrete dimension (None for Float).
+    pub fn grid_values(&self) -> Option<Vec<ParamValue>> {
+        match self {
+            Dimension::Int { lo, hi } => Some((*lo..=*hi).map(ParamValue::Int).collect()),
+            Dimension::IntLog { lo, hi } => {
+                // Powers of two within the range (the natural rank grid).
+                let mut v = Vec::new();
+                let mut x = *lo;
+                while x <= *hi {
+                    v.push(ParamValue::Int(x));
+                    x *= 2;
+                }
+                Some(v)
+            }
+            Dimension::Cat(c) => Some(c.choices.clone()),
+            Dimension::Float { .. } => None,
+        }
+    }
+}
+
+/// Named collection of dimensions. BTreeMap for deterministic ordering.
+#[derive(Debug, Clone, Default)]
+pub struct SearchSpace {
+    pub dims: BTreeMap<String, Dimension>,
+}
+
+impl SearchSpace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn int(mut self, name: &str, lo: i64, hi: i64) -> Self {
+        self.dims.insert(name.into(), Dimension::Int { lo, hi });
+        self
+    }
+
+    pub fn int_log(mut self, name: &str, lo: i64, hi: i64) -> Self {
+        self.dims.insert(name.into(), Dimension::IntLog { lo, hi });
+        self
+    }
+
+    pub fn float(mut self, name: &str, lo: f64, hi: f64) -> Self {
+        self.dims.insert(name.into(), Dimension::Float { lo, hi });
+        self
+    }
+
+    pub fn categorical(mut self, name: &str, choices: &[&str]) -> Self {
+        self.dims.insert(
+            name.into(),
+            Dimension::Cat(Categorical {
+                choices: choices
+                    .iter()
+                    .map(|s| ParamValue::Str(s.to_string()))
+                    .collect(),
+            }),
+        );
+        self
+    }
+
+    pub fn int_choices(mut self, name: &str, choices: &[i64]) -> Self {
+        self.dims.insert(
+            name.into(),
+            Dimension::Cat(Categorical {
+                choices: choices.iter().map(|&v| ParamValue::Int(v)).collect(),
+            }),
+        );
+        self
+    }
+
+    /// The default space sketching introduces — the paper's `params="auto"`:
+    /// `num_terms ∈ {1,2,3}`, `low_rank ∈ {4,8,…,max_rank}` (log grid).
+    pub fn auto_sketch(max_rank: i64) -> Self {
+        SearchSpace::new()
+            .int("num_terms", 1, 3)
+            .int_log("low_rank", 4, max_rank)
+    }
+
+    /// Cartesian size of the discrete grid (None if any float dim).
+    pub fn grid_size(&self) -> Option<usize> {
+        let mut total = 1usize;
+        for d in self.dims.values() {
+            total = total.checked_mul(d.grid_values()?.len())?;
+        }
+        Some(total)
+    }
+}
+
+/// A concrete assignment of all dimensions.
+pub type ParamAssignment = BTreeMap<String, ParamValue>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_sketch_space_shape() {
+        let s = SearchSpace::auto_sketch(64);
+        assert_eq!(s.dims.len(), 2);
+        // 3 term choices × ranks {4,8,16,32,64} = 15.
+        assert_eq!(s.grid_size(), Some(15));
+    }
+
+    #[test]
+    fn float_dim_has_no_grid() {
+        let s = SearchSpace::new().float("lr", 1e-5, 1e-1);
+        assert_eq!(s.grid_size(), None);
+    }
+
+    #[test]
+    fn int_log_grid_powers_of_two() {
+        let d = Dimension::IntLog { lo: 4, hi: 32 };
+        let vals: Vec<i64> = d
+            .grid_values()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap())
+            .collect();
+        assert_eq!(vals, vec![4, 8, 16, 32]);
+    }
+
+    #[test]
+    fn param_value_conversions() {
+        assert_eq!(ParamValue::Int(5).as_usize(), Some(5));
+        assert_eq!(ParamValue::Float(2.5).as_f64(), Some(2.5));
+        assert_eq!(ParamValue::Str("x".into()).as_str(), Some("x"));
+        assert_eq!(ParamValue::Str("x".into()).as_i64(), None);
+    }
+}

@@ -1,0 +1,309 @@
+//! Study: trial lifecycle, best-trial selection, constraints, persistence.
+
+use super::pruner::Pruner;
+use super::sampler::Sampler;
+use super::space::{ParamAssignment, SearchSpace};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+/// Optimization direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    Minimize,
+    Maximize,
+}
+
+/// Trial lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrialState {
+    Running,
+    Complete,
+    Pruned,
+    Failed,
+}
+
+/// One evaluation of a parameter assignment.
+#[derive(Debug, Clone)]
+pub struct Trial {
+    pub id: usize,
+    pub params: ParamAssignment,
+    pub state: TrialState,
+    /// Objective value (canonical: lower is better — maximize studies
+    /// negate on the way in and out).
+    pub value: Option<f64>,
+    /// Interim values reported during the trial (step, value).
+    pub interim: Vec<(usize, f64)>,
+    /// Whether the trial satisfied all constraints (e.g. accuracy ≥ thresh).
+    pub feasible: bool,
+}
+
+impl Trial {
+    pub fn new(id: usize) -> Self {
+        Trial {
+            id,
+            params: ParamAssignment::new(),
+            state: TrialState::Running,
+            value: None,
+            interim: Vec::new(),
+            feasible: true,
+        }
+    }
+}
+
+/// An Optuna-style study: ask → (run) → tell.
+pub struct Study {
+    pub name: String,
+    pub direction: Direction,
+    pub space: SearchSpace,
+    sampler: Box<dyn Sampler>,
+    pruner: Box<dyn Pruner>,
+    trials: Vec<Trial>,
+}
+
+impl Study {
+    pub fn new(
+        name: &str,
+        direction: Direction,
+        space: SearchSpace,
+        sampler: Box<dyn Sampler>,
+        pruner: Box<dyn Pruner>,
+    ) -> Self {
+        Study {
+            name: name.to_string(),
+            direction,
+            space,
+            sampler,
+            pruner,
+            trials: Vec::new(),
+        }
+    }
+
+    fn canon(&self, objective: f64) -> f64 {
+        match self.direction {
+            Direction::Minimize => objective,
+            Direction::Maximize => -objective,
+        }
+    }
+
+    fn uncanon(&self, v: f64) -> f64 {
+        match self.direction {
+            Direction::Minimize => v,
+            Direction::Maximize => -v,
+        }
+    }
+
+    /// Ask for the next trial (samples parameters from history).
+    pub fn ask(&mut self) -> Trial {
+        let id = self.trials.len();
+        let params = self.sampler.sample(&self.space, &self.trials);
+        let mut t = Trial::new(id);
+        t.params = params;
+        self.trials.push(t.clone());
+        t
+    }
+
+    /// Report an interim value; returns true if the pruner says stop.
+    pub fn should_prune(&mut self, trial: &mut Trial, step: usize, objective: f64) -> bool {
+        let v = self.canon(objective);
+        trial.interim.push((step, v));
+        let verdict = self.pruner.should_prune(&self.trials, trial, step, v);
+        if verdict {
+            trial.state = TrialState::Pruned;
+            self.sync(trial);
+        }
+        verdict
+    }
+
+    /// Complete a trial with its objective and feasibility.
+    pub fn tell(&mut self, trial: &mut Trial, objective: f64, feasible: bool) {
+        trial.value = Some(self.canon(objective));
+        trial.feasible = feasible;
+        trial.state = TrialState::Complete;
+        self.sync(trial);
+    }
+
+    /// Mark a trial failed (runtime error).
+    pub fn tell_failed(&mut self, trial: &mut Trial) {
+        trial.state = TrialState::Failed;
+        self.sync(trial);
+    }
+
+    fn sync(&mut self, trial: &Trial) {
+        self.trials[trial.id] = trial.clone();
+    }
+
+    pub fn trials(&self) -> &[Trial] {
+        &self.trials
+    }
+
+    /// Best *feasible* completed trial (respecting constraints), if any.
+    pub fn best_trial(&self) -> Option<&Trial> {
+        self.trials
+            .iter()
+            .filter(|t| t.state == TrialState::Complete && t.feasible && t.value.is_some())
+            .min_by(|a, b| a.value.partial_cmp(&b.value).unwrap())
+    }
+
+    /// Best objective in user orientation.
+    pub fn best_value(&self) -> Option<f64> {
+        self.best_trial().map(|t| self.uncanon(t.value.unwrap()))
+    }
+
+    /// Serialize the study to JSON (trial history + params).
+    pub fn to_json(&self) -> Json {
+        let mut trials = Vec::new();
+        for t in &self.trials {
+            let mut o = Json::obj();
+            o.set("id", t.id);
+            o.set(
+                "state",
+                match t.state {
+                    TrialState::Running => "running",
+                    TrialState::Complete => "complete",
+                    TrialState::Pruned => "pruned",
+                    TrialState::Failed => "failed",
+                },
+            );
+            if let Some(v) = t.value {
+                o.set("value", self.uncanon(v));
+            }
+            o.set("feasible", t.feasible);
+            let mut params = Json::obj();
+            for (k, v) in &t.params {
+                params.set(k, v.to_json());
+            }
+            o.set("params", params);
+            trials.push(o);
+        }
+        let mut root = Json::obj();
+        root.set("study", self.name.as_str());
+        root.set(
+            "direction",
+            match self.direction {
+                Direction::Minimize => "minimize",
+                Direction::Maximize => "maximize",
+            },
+        );
+        root.set("trials", Json::Arr(trials));
+        root
+    }
+
+    /// Persist to a JSON file.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().to_pretty())
+            .with_context(|| format!("writing study to {:?}", path.as_ref()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::pruner::NoPruner;
+    use crate::tuner::sampler::RandomSampler;
+    use crate::tuner::space::SearchSpace;
+    use crate::util::prop::prop_check;
+
+    fn study(direction: Direction) -> Study {
+        Study::new(
+            "test",
+            direction,
+            SearchSpace::new().int("x", 0, 10),
+            Box::new(RandomSampler::new(1)),
+            Box::new(NoPruner),
+        )
+    }
+
+    #[test]
+    fn minimize_selects_smallest() {
+        let mut s = study(Direction::Minimize);
+        for v in [3.0, 1.0, 2.0] {
+            let mut t = s.ask();
+            s.tell(&mut t, v, true);
+        }
+        assert_eq!(s.best_value(), Some(1.0));
+    }
+
+    #[test]
+    fn maximize_selects_largest() {
+        let mut s = study(Direction::Maximize);
+        for v in [3.0, 1.0, 2.0] {
+            let mut t = s.ask();
+            s.tell(&mut t, v, true);
+        }
+        assert_eq!(s.best_value(), Some(3.0));
+    }
+
+    #[test]
+    fn infeasible_trials_never_best() {
+        let mut s = study(Direction::Minimize);
+        let mut t1 = s.ask();
+        s.tell(&mut t1, 0.1, false); // better value but infeasible
+        let mut t2 = s.ask();
+        s.tell(&mut t2, 5.0, true);
+        assert_eq!(s.best_value(), Some(5.0));
+    }
+
+    #[test]
+    fn failed_trials_have_no_value() {
+        let mut s = study(Direction::Minimize);
+        let mut t = s.ask();
+        s.tell_failed(&mut t);
+        assert!(s.best_trial().is_none());
+        assert_eq!(s.trials()[0].state, TrialState::Failed);
+    }
+
+    #[test]
+    fn json_roundtrippable_and_user_oriented() {
+        let mut s = study(Direction::Maximize);
+        let mut t = s.ask();
+        s.tell(&mut t, 7.5, true);
+        let j = s.to_json();
+        let trials = j.get("trials").unwrap().as_arr().unwrap();
+        // User sees 7.5, not the internal -7.5.
+        assert_eq!(trials[0].get("value").unwrap().as_f64(), Some(7.5));
+        let text = j.to_pretty();
+        assert!(crate::util::json::Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn property_study_invariants() {
+        // For any mixture of tells, invariants hold: every Complete trial
+        // has a value; Pruned/Failed have none unless told; best is minimal
+        // among feasible completes.
+        prop_check("study-invariants", 30, |g| {
+            let mut s = study(Direction::Minimize);
+            let n = g.usize(1..20);
+            for _ in 0..n {
+                let mut t = s.ask();
+                match g.usize(0..3) {
+                    0 => {
+                        let v = g.f32(0.0, 100.0) as f64;
+                        let feasible = g.bool(0.7);
+                        s.tell(&mut t, v, feasible);
+                    }
+                    1 => s.tell_failed(&mut t),
+                    _ => { /* leave running */ }
+                }
+            }
+            let mut best_seen: Option<f64> = None;
+            for t in s.trials() {
+                match t.state {
+                    TrialState::Complete => {
+                        assert!(t.value.is_some());
+                        if t.feasible {
+                            best_seen = Some(match best_seen {
+                                None => t.value.unwrap(),
+                                Some(b) => b.min(t.value.unwrap()),
+                            });
+                        }
+                    }
+                    TrialState::Failed | TrialState::Running => {
+                        assert!(t.value.is_none());
+                    }
+                    TrialState::Pruned => {}
+                }
+            }
+            assert_eq!(s.best_value(), best_seen);
+        });
+    }
+}

@@ -1,0 +1,231 @@
+//! Criterion-style micro-benchmark statistics (criterion itself is not
+//! available offline). Provides warm-up, adaptive sample counts, robust
+//! statistics, and a stable one-line report format that the figure benches
+//! and EXPERIMENTS.md rely on.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark: robust timing statistics over N samples.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+
+    pub fn median_ms(&self) -> f64 {
+        self.median.as_secs_f64() * 1e3
+    }
+
+    /// One-line report: `name  mean ± stddev  (median, N samples)`.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} ± {:<10} (median {:>12}, n={})",
+            self.name,
+            super::human_duration(self.mean),
+            super::human_duration(self.stddev),
+            super::human_duration(self.median),
+            self.samples
+        )
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Minimum number of timed samples.
+    pub min_samples: usize,
+    /// Maximum number of timed samples.
+    pub max_samples: usize,
+    /// Target total measurement time; sampling stops at whichever of
+    /// max_samples / target_time comes last after min_samples.
+    pub target_time: Duration,
+    /// Warm-up time before measurement.
+    pub warmup: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            min_samples: 10,
+            max_samples: 200,
+            target_time: Duration::from_secs(2),
+            warmup: Duration::from_millis(300),
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick preset for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Bencher {
+            min_samples: 5,
+            max_samples: 30,
+            target_time: Duration::from_millis(800),
+            warmup: Duration::from_millis(100),
+        }
+    }
+
+    /// Paper preset: the paper reports the mean over 200 repeated trials.
+    pub fn paper() -> Self {
+        Bencher {
+            min_samples: 20,
+            max_samples: 200,
+            target_time: Duration::from_secs(3),
+            warmup: Duration::from_millis(300),
+        }
+    }
+
+    /// Time `f` repeatedly; `f` should perform one complete operation and
+    /// return a value (returned values are black-boxed to stop DCE).
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Stats {
+        // Warm-up.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Measure.
+        let mut samples: Vec<Duration> = Vec::with_capacity(self.max_samples);
+        let t0 = Instant::now();
+        while samples.len() < self.min_samples
+            || (samples.len() < self.max_samples && t0.elapsed() < self.target_time)
+        {
+            let s = Instant::now();
+            black_box(f());
+            samples.push(s.elapsed());
+        }
+        stats_from(name, &mut samples)
+    }
+}
+
+/// Compute statistics from raw samples.
+pub fn stats_from(name: &str, samples: &mut [Duration]) -> Stats {
+    assert!(!samples.is_empty());
+    samples.sort();
+    let n = samples.len();
+    let sum: Duration = samples.iter().sum();
+    let mean = sum / n as u32;
+    let median = samples[n / 2];
+    let mean_s = mean.as_secs_f64();
+    let var = samples
+        .iter()
+        .map(|d| (d.as_secs_f64() - mean_s).powi(2))
+        .sum::<f64>()
+        / n as f64;
+    Stats {
+        name: name.to_string(),
+        samples: n,
+        mean,
+        median,
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: samples[0],
+        max: samples[n - 1],
+    }
+}
+
+/// Opaque value sink: prevents the optimizer from deleting the benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// A simple table printer for bench suites: aligned columns, markdown-ish.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(r[c].len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", cell, w = widths[c]));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}-|", "-".repeat(w + 1)));
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r, &widths));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering_invariants() {
+        let b = Bencher {
+            min_samples: 5,
+            max_samples: 10,
+            target_time: Duration::from_millis(50),
+            warmup: Duration::from_millis(1),
+        };
+        let s = b.run("noop", || 1 + 1);
+        assert!(s.min <= s.median);
+        assert!(s.median <= s.max);
+        assert!(s.samples >= 5);
+    }
+
+    #[test]
+    fn stats_from_known_values() {
+        let mut samples = vec![
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+            Duration::from_millis(3),
+        ];
+        let s = stats_from("x", &mut samples);
+        assert_eq!(s.median, Duration::from_millis(2));
+        assert_eq!(s.mean, Duration::from_millis(2));
+        assert_eq!(s.min, Duration::from_millis(1));
+        assert_eq!(s.max, Duration::from_millis(3));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "ms"]);
+        t.row(&["dense".into(), "12.5".into()]);
+        t.row(&["sketched_k16".into(), "3.1".into()]);
+        let r = t.render();
+        assert!(r.contains("| name"));
+        assert!(r.lines().count() == 4);
+    }
+}

@@ -1,0 +1,120 @@
+//! Leveled, timestamped logging to stderr. `PANTHER_LOG` selects the level
+//! (`error|warn|info|debug|trace`, default `info`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn from_str(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
+
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw == 255 {
+        let lv = std::env::var("PANTHER_LOG")
+            .map(|s| Level::from_str(&s))
+            .unwrap_or(Level::Info);
+        LEVEL.store(lv as u8, Ordering::Relaxed);
+        lv
+    } else {
+        // SAFETY-free mapping: raw was stored from a valid Level.
+        match raw {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            3 => Level::Debug,
+            _ => Level::Trace,
+        }
+    }
+}
+
+/// Override the level programmatically (tests, examples).
+pub fn set_level(lv: Level) {
+    LEVEL.store(lv as u8, Ordering::Relaxed);
+}
+
+/// Core log call — prefer the macros.
+pub fn log(lv: Level, module: &str, msg: &str) {
+    if lv <= level() {
+        let t = START.get_or_init(Instant::now).elapsed();
+        eprintln!("[{:>9.3}s {} {}] {}", t.as_secs_f64(), lv.tag(), module, msg);
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, module_path!(), &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, module_path!(), &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Error, module_path!(), &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, module_path!(), &format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::from_str("error"), Level::Error);
+        assert_eq!(Level::from_str("TRACE"), Level::Trace);
+        assert_eq!(Level::from_str("bogus"), Level::Info);
+    }
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Debug < Level::Trace);
+    }
+}

@@ -1,0 +1,183 @@
+//! Peak-memory accounting for the Figure-3 reproduction.
+//!
+//! The paper reports *peak forward memory* of attention variants and marks
+//! configurations that OOM on the GPU with an "x". We reproduce that with an
+//! explicit accounting arena: every buffer an attention implementation
+//! allocates is registered here, and a configurable budget turns
+//! would-be-OOM configurations into a clean [`MemError::BudgetExceeded`] —
+//! the same semantics as CUDA's allocator failing, without crashing the
+//! bench process.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Error from the tracking allocator.
+#[derive(Debug, Clone, thiserror::Error, PartialEq, Eq)]
+pub enum MemError {
+    #[error("memory budget exceeded: requested {requested} B with {live} B live (budget {budget} B)")]
+    BudgetExceeded {
+        requested: u64,
+        live: u64,
+        budget: u64,
+    },
+}
+
+/// Shared accounting state. Cloneable handle.
+#[derive(Clone, Debug)]
+pub struct MemTracker {
+    inner: Arc<Inner>,
+}
+
+#[derive(Debug)]
+struct Inner {
+    live: AtomicU64,
+    peak: AtomicU64,
+    budget: u64, // 0 = unlimited
+}
+
+impl MemTracker {
+    /// Unlimited tracker (pure accounting).
+    pub fn unlimited() -> Self {
+        Self::with_budget(0)
+    }
+
+    /// Tracker that fails allocations pushing `live` above `budget` bytes.
+    pub fn with_budget(budget: u64) -> Self {
+        MemTracker {
+            inner: Arc::new(Inner {
+                live: AtomicU64::new(0),
+                peak: AtomicU64::new(0),
+                budget,
+            }),
+        }
+    }
+
+    /// Account an allocation of `bytes`; returns a guard that releases on
+    /// drop. Fails if the budget would be exceeded.
+    pub fn alloc(&self, bytes: u64) -> Result<MemGuard, MemError> {
+        let live = self.inner.live.fetch_add(bytes, Ordering::SeqCst) + bytes;
+        if self.inner.budget != 0 && live > self.inner.budget {
+            self.inner.live.fetch_sub(bytes, Ordering::SeqCst);
+            return Err(MemError::BudgetExceeded {
+                requested: bytes,
+                live: live - bytes,
+                budget: self.inner.budget,
+            });
+        }
+        self.inner.peak.fetch_max(live, Ordering::SeqCst);
+        Ok(MemGuard {
+            tracker: self.clone(),
+            bytes,
+        })
+    }
+
+    /// Allocate a tracked f32 buffer of `len` elements.
+    pub fn alloc_f32(&self, len: usize) -> Result<TrackedBuf, MemError> {
+        let guard = self.alloc((len * std::mem::size_of::<f32>()) as u64)?;
+        Ok(TrackedBuf {
+            data: vec![0f32; len],
+            _guard: guard,
+        })
+    }
+
+    pub fn live_bytes(&self) -> u64 {
+        self.inner.live.load(Ordering::SeqCst)
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.inner.peak.load(Ordering::SeqCst)
+    }
+
+    /// Reset the peak to the current live value (between bench cases).
+    pub fn reset_peak(&self) {
+        self.inner
+            .peak
+            .store(self.inner.live.load(Ordering::SeqCst), Ordering::SeqCst);
+    }
+}
+
+/// RAII guard: releases its byte count when dropped.
+#[derive(Debug)]
+pub struct MemGuard {
+    tracker: MemTracker,
+    bytes: u64,
+}
+
+impl Drop for MemGuard {
+    fn drop(&mut self) {
+        self.tracker.inner.live.fetch_sub(self.bytes, Ordering::SeqCst);
+    }
+}
+
+/// An f32 buffer whose lifetime is tied to its accounting guard.
+pub struct TrackedBuf {
+    pub data: Vec<f32>,
+    _guard: MemGuard,
+}
+
+impl std::ops::Deref for TrackedBuf {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl std::ops::DerefMut for TrackedBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_live_and_peak() {
+        let t = MemTracker::unlimited();
+        let a = t.alloc(100).unwrap();
+        assert_eq!(t.live_bytes(), 100);
+        let b = t.alloc(50).unwrap();
+        assert_eq!(t.live_bytes(), 150);
+        assert_eq!(t.peak_bytes(), 150);
+        drop(a);
+        assert_eq!(t.live_bytes(), 50);
+        assert_eq!(t.peak_bytes(), 150, "peak survives frees");
+        drop(b);
+        assert_eq!(t.live_bytes(), 0);
+    }
+
+    #[test]
+    fn budget_enforced() {
+        let t = MemTracker::with_budget(1000);
+        let _a = t.alloc(800).unwrap();
+        let err = t.alloc(300).unwrap_err();
+        assert!(matches!(err, MemError::BudgetExceeded { .. }));
+        // Failed alloc must not leak accounting.
+        assert_eq!(t.live_bytes(), 800);
+        // Freeing makes room.
+        drop(_a);
+        assert!(t.alloc(900).is_ok());
+    }
+
+    #[test]
+    fn tracked_buf_accounts_elements() {
+        let t = MemTracker::unlimited();
+        {
+            let mut buf = t.alloc_f32(256).unwrap();
+            buf[0] = 1.0;
+            assert_eq!(t.live_bytes(), 1024);
+        }
+        assert_eq!(t.live_bytes(), 0);
+    }
+
+    #[test]
+    fn reset_peak() {
+        let t = MemTracker::unlimited();
+        let a = t.alloc(100).unwrap();
+        drop(a);
+        assert_eq!(t.peak_bytes(), 100);
+        t.reset_peak();
+        assert_eq!(t.peak_bytes(), 0);
+    }
+}

@@ -1,0 +1,62 @@
+//! Self-contained utilities (this build environment has no network access
+//! to crates.io, so JSON, CLI parsing, bench statistics, the thread pool,
+//! and property-testing helpers are implemented here from `std` only).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod memtrack;
+pub mod prop;
+pub mod threadpool;
+
+/// Format a byte count human-readably (`1.5 GiB` style).
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a duration in adaptive units (`1.23 ms` style).
+pub fn human_duration(d: std::time::Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn duration_formatting() {
+        use std::time::Duration;
+        assert!(human_duration(Duration::from_nanos(100)).ends_with("ns"));
+        assert!(human_duration(Duration::from_micros(100)).ends_with("µs"));
+        assert!(human_duration(Duration::from_millis(100)).ends_with("ms"));
+        assert!(human_duration(Duration::from_secs(100)).ends_with(" s"));
+    }
+}

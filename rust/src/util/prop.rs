@@ -1,0 +1,141 @@
+//! Hand-rolled property-based testing harness (proptest is unavailable
+//! offline). Deterministic: cases are generated from a Philox stream seeded
+//! by the test name, so failures reproduce exactly. On failure the harness
+//! reports the case index and the generated inputs' debug rendering.
+//!
+//! ```ignore
+//! prop_check("qr_orthogonal", 64, |g| {
+//!     let m = g.usize(1..40);
+//!     let n = g.usize(1..=m);
+//!     let a = Mat::randn(m, n, g.rng());
+//!     let (q, _r) = qr(&a);
+//!     assert!(ortho_error(&q) < 1e-4);
+//! });
+//! ```
+
+use crate::rng::{Philox, Rng, SplitMix64};
+
+/// Input generator handed to each property case.
+pub struct Gen {
+    rng: Philox,
+    trace: Vec<String>,
+}
+
+impl Gen {
+    /// Uniform usize in `range` (supports `a..b` and `a..=b` via RangeBounds).
+    pub fn usize(&mut self, range: impl std::ops::RangeBounds<usize>) -> usize {
+        let lo = match range.start_bound() {
+            std::ops::Bound::Included(&v) => v,
+            std::ops::Bound::Excluded(&v) => v + 1,
+            std::ops::Bound::Unbounded => 0,
+        };
+        let hi = match range.end_bound() {
+            std::ops::Bound::Included(&v) => v + 1,
+            std::ops::Bound::Excluded(&v) => v,
+            std::ops::Bound::Unbounded => usize::MAX,
+        };
+        assert!(hi > lo, "empty range");
+        let v = lo + self.rng.next_below((hi - lo) as u32) as usize;
+        self.trace.push(format!("usize={v}"));
+        v
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        let v = lo + self.rng.next_f32() * (hi - lo);
+        self.trace.push(format!("f32={v}"));
+        v
+    }
+
+    /// Standard normal f32.
+    pub fn normal(&mut self) -> f32 {
+        let v = self.rng.next_normal();
+        self.trace.push(format!("normal={v}"));
+        v
+    }
+
+    /// Bernoulli(p).
+    pub fn bool(&mut self, p: f64) -> bool {
+        let v = self.rng.next_f64() < p;
+        self.trace.push(format!("bool={v}"));
+        v
+    }
+
+    /// Pick one element from a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.next_below(xs.len() as u32) as usize;
+        self.trace.push(format!("choose[{i}]"));
+        &xs[i]
+    }
+
+    /// Direct access to the underlying RNG (for bulk generation).
+    pub fn rng(&mut self) -> &mut Philox {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` generated instances of property `f`. Panics (failing the
+/// enclosing `#[test]`) with the case index and input trace on the first
+/// failing case.
+pub fn prop_check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut f: F) {
+    // Seed from the property name so each property has its own stream but is
+    // fully deterministic run-to-run.
+    let seed = name
+        .bytes()
+        .fold(0xA5A5_5A5A_u64, |acc, b| SplitMix64::mix(acc ^ b as u64));
+    for case in 0..cases {
+        let mut g = Gen {
+            rng: Philox::new(seed, case as u64),
+            trace: Vec::new(),
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| panic.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case}/{cases}\n  inputs: [{}]\n  cause: {msg}",
+                g.trace.join(", ")
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first: Vec<usize> = Vec::new();
+        prop_check("det-test", 10, |g| {
+            first.push(g.usize(0..1000));
+        });
+        let mut second: Vec<usize> = Vec::new();
+        prop_check("det-test", 10, |g| {
+            second.push(g.usize(0..1000));
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn ranges_respected() {
+        prop_check("range-test", 200, |g| {
+            let v = g.usize(3..=7);
+            assert!((3..=7).contains(&v));
+            let f = g.f32(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failing' failed at case")]
+    fn failure_reports_case() {
+        prop_check("failing", 50, |g| {
+            let v = g.usize(0..100);
+            assert!(v < 2, "too big: {v}");
+        });
+    }
+}

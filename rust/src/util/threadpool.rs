@@ -1,0 +1,212 @@
+//! A small work-stealing-free thread pool (tokio is unavailable offline; the
+//! coordinator's workloads are coarse-grained, so a shared-queue pool with
+//! scoped parallel-for is sufficient and much simpler to reason about).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size thread pool with job counting, so callers can block until all
+/// outstanding jobs are finished (`wait_idle`) — the pattern the trial
+/// scheduler and the blocked GEMM both use.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+struct Shared {
+    queue_rx: Mutex<mpsc::Receiver<Msg>>,
+    pending: AtomicUsize,
+    idle: Condvar,
+    idle_lock: Mutex<()>,
+    panics: AtomicUsize,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (clamped to ≥1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let shared = Arc::new(Shared {
+            queue_rx: Mutex::new(rx),
+            pending: AtomicUsize::new(0),
+            idle: Condvar::new(),
+            idle_lock: Mutex::new(()),
+            panics: AtomicUsize::new(0),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("panther-worker-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            tx,
+            shared,
+            workers,
+        }
+    }
+
+    /// Pool sized to the machine (#cpus, capped at 16).
+    pub fn default_size() -> usize {
+        thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(16)
+    }
+
+    pub fn with_default_size() -> Self {
+        Self::new(Self::default_size())
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.pending.fetch_add(1, Ordering::SeqCst);
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn wait_idle(&self) {
+        let mut guard = self.shared.idle_lock.lock().unwrap();
+        while self.shared.pending.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.idle.wait(guard).unwrap();
+        }
+        drop(guard);
+    }
+
+    /// Number of jobs that panicked since pool creation.
+    pub fn panic_count(&self) -> usize {
+        self.shared.panics.load(Ordering::SeqCst)
+    }
+
+    /// Run `f(i)` for `i in 0..n` across scoped worker threads and wait.
+    /// `f` must be `Sync` since multiple workers call it concurrently.
+    /// (Scoped threads rather than the shared queue: jobs may borrow `f`
+    /// and local data, which `execute`'s `'static` bound cannot express.)
+    pub fn parallel_for<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
+        if n == 0 {
+            return;
+        }
+        let workers = self.num_workers().min(n);
+        if workers <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    f(i);
+                });
+            }
+        });
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let msg = {
+            let rx = shared.queue_rx.lock().unwrap();
+            rx.recv()
+        };
+        match msg {
+            Ok(Msg::Run(job)) => {
+                let res = catch_unwind(AssertUnwindSafe(job));
+                if res.is_err() {
+                    shared.panics.fetch_add(1, Ordering::SeqCst);
+                }
+                if shared.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+                    let _g = shared.idle_lock.lock().unwrap();
+                    shared.idle.notify_all();
+                }
+            }
+            Ok(Msg::Shutdown) | Err(_) => break,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let pool = ThreadPool::new(8);
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(1000, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn panic_is_counted_not_fatal() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        pool.execute(|| {});
+        pool.wait_idle();
+        assert_eq!(pool.panic_count(), 1);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn parallel_for_zero_items() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(0, |_| unreachable!());
+    }
+}

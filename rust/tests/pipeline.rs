@@ -1,0 +1,184 @@
+//! Cross-module integration tests that need no artifacts: sketching →
+//! decomposition → layer compression compose on the pure-Rust substrate.
+
+use panther::decomp::{cqrrpt, rsvd, CqrrptOpts, RsvdOpts};
+use panther::linalg::{fro_norm, matmul, ortho_error, rel_error, Mat};
+use panther::nn::{LayerKind, LayerSelector, Linear, Model, SKLinear};
+use panther::rng::Philox;
+use panther::sketch::{GaussianSketch, Sketch, SparseSignSketch};
+use panther::tuner::{AccuracyMode, GridSampler, SkAutoTuner, TuningConfig};
+
+/// RSVD of a sketched-then-lifted matrix: the compression pipeline a user
+/// would run to pick a rank before configuring SKLinear.
+#[test]
+fn rsvd_guides_rank_selection_for_sklinear() {
+    let mut rng = Philox::seeded(100);
+    // A weight matrix with a genuine low-rank core + noise.
+    let core = matmul(
+        &Mat::randn(128, 8, &mut rng),
+        &Mat::randn(8, 128, &mut rng),
+    );
+    let noise = Mat::randn(128, 128, &mut rng).scale(0.05);
+    let w = core.add(&noise);
+    // RSVD tells us rank 8 captures most of the energy.
+    let f = rsvd(
+        &w,
+        &RsvdOpts {
+            rank: 16,
+            power_iters: 2,
+            ..Default::default()
+        },
+    );
+    let energy: f64 = f.s.iter().map(|&s| (s as f64).powi(2)).sum();
+    let head: f64 = f.s[..8].iter().map(|&s| (s as f64).powi(2)).sum();
+    assert!(head / energy > 0.9, "top-8 energy {}", head / energy);
+
+    // The weight-sketch error follows the √(d/(l·k)) law — the quantity
+    // the SKAutoTuner's (l,k) search is actually navigating. (Note the
+    // two-sided identity sketch does NOT exploit W's low rank at init —
+    // that structure is recovered by training the factors afterwards.)
+    let dense = Linear::new(w.transpose(), vec![0.0; 128]);
+    let x = Mat::randn(16, 128, &mut rng);
+    let y_ref = dense.forward(&x);
+    let avg_err = |l: usize, k: usize| -> f64 {
+        let mut tot = 0.0;
+        for t in 0..5 {
+            let mut r2 = Philox::seeded(200 + t);
+            let sk = SKLinear::from_dense(&dense, l, k, &mut r2);
+            tot += rel_error(&sk.forward(&x), &y_ref);
+        }
+        tot / 5.0
+    };
+    let coarse = avg_err(1, 8); // √(128/8)   ≈ 4.0
+    let mid = avg_err(2, 32); //   √(128/64)  ≈ 1.4
+    let fine = avg_err(2, 128); // √(128/256) ≈ 0.7
+    assert!(
+        fine < mid && mid < coarse,
+        "error not decreasing in l·k: {coarse} > {mid} > {fine} expected"
+    );
+    assert!(fine < 1.0, "high-rank sketch should beat signal scale: {fine}");
+    assert!(coarse > 2.0, "low-rank sketch suspiciously good: {coarse}");
+}
+
+/// CQRRPT's sketch stage uses the same sparse-sign operator exposed in
+/// `sketch` — verify the embedding quality bound that makes CQRRPT sound.
+#[test]
+fn sparse_sign_embedding_preserves_subspace_geometry() {
+    let mut rng = Philox::seeded(101);
+    let a = Mat::randn(2000, 30, &mut rng);
+    let s = SparseSignSketch::new(2000, 90, 8, 7);
+    let sa = s.apply(&a);
+    // Singular values of the sketch stay within a modest distortion band of
+    // the original (subspace embedding property).
+    let sv_a = panther::linalg::svd_jacobi(&a).s;
+    let sv_sa = panther::linalg::svd_jacobi(&sa).s;
+    for (x, y) in sv_a.iter().zip(&sv_sa) {
+        let ratio = (*y as f64) / (*x as f64).max(1e-12);
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "singular value distorted: {ratio}"
+        );
+    }
+    // And CQRRPT itself stays orthogonal on this input.
+    let f = cqrrpt(&a, &CqrrptOpts::default());
+    assert!(ortho_error(&f.q) < 1e-3);
+}
+
+/// Gaussian sketch + rangefinder + QR: residual decays as rank grows.
+#[test]
+fn sketch_rank_sweep_monotone_residual() {
+    let mut rng = Philox::seeded(102);
+    let a = matmul(
+        &Mat::randn(200, 24, &mut rng),
+        &Mat::randn(24, 100, &mut rng),
+    );
+    let mut last = f64::INFINITY;
+    for d in [4usize, 8, 16, 32] {
+        let s = GaussianSketch::new(200, d, 5);
+        let sa = s.apply(&a); // d×100 row-space sketch
+        // Residual of projecting A's rows onto the sketched row space.
+        let (q, _) = panther::linalg::qr_thin(&sa.transpose()); // 100×d
+        let proj = matmul(&matmul(&a, &q), &q.transpose());
+        let resid = fro_norm(&a.sub(&proj)) / fro_norm(&a);
+        assert!(
+            resid <= last + 1e-6,
+            "residual not decreasing at d={d}: {resid} > {last}"
+        );
+        last = resid;
+    }
+    assert!(last < 0.1, "rank-32 sketch residual {last}");
+}
+
+/// Full host-side tuner flow on a multi-layer model — Listing 2 without the
+/// PJRT runtime (the runtime variant lives in the bert_tune module tests).
+#[test]
+fn autotuner_compresses_multi_layer_model_under_constraint() {
+    let mut rng = Philox::seeded(103);
+    let mut model = Model::new();
+    for (i, (din, dout)) in [(256usize, 512usize), (512, 256), (256, 64)]
+        .iter()
+        .enumerate()
+    {
+        model.add(
+            &format!("encoder.layer{i}.fc"),
+            LayerKind::Linear(Linear::random(*din, *dout, &mut rng)),
+        );
+    }
+    let dense_params = model.total_params();
+    let probe = Mat::randn(4, 256, &mut rng);
+    let reference = match model.get("encoder.layer0.fc").unwrap() {
+        LayerKind::Linear(l) => l.forward(&probe),
+        _ => unreachable!(),
+    };
+    let mut tuner = SkAutoTuner::new(
+        model,
+        TuningConfig {
+            selector: LayerSelector::by_regex(r"^encoder\.layer\d+\.fc$").unwrap(),
+            space: None,
+            separate: false,
+        },
+        |m| {
+            let out = match m.get("encoder.layer0.fc").unwrap() {
+                LayerKind::Linear(l) => l.forward(&probe),
+                LayerKind::SKLinear(l) => l.forward(&probe),
+                _ => unreachable!(),
+            };
+            -rel_error(&out, &reference)
+        },
+        AccuracyMode::AtLeast(-4.0),
+        |m| m.total_params() as f64,
+        Box::new(GridSampler::new(9)),
+    )
+    .unwrap();
+    assert_eq!(tuner.matched_layers().len(), 3);
+    let outcome = tuner.tune(15).unwrap();
+    assert!(outcome.n_feasible > 0);
+    let best = tuner.apply_best_params().unwrap();
+    assert!(best.total_params() < dense_params);
+    // Study persistence round-trips.
+    let dir = std::env::temp_dir().join("panther_study_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("study.json");
+    tuner.study().save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let parsed = panther::util::json::Json::parse(&text).unwrap();
+    assert_eq!(
+        parsed.get("trials").unwrap().as_arr().unwrap().len(),
+        15
+    );
+    std::fs::remove_file(path).ok();
+}
+
+/// The analytic cost model agrees with actual parameter counts of layers.
+#[test]
+fn cost_model_matches_layer_reality() {
+    let mut rng = Philox::seeded(104);
+    for &(din, dout, l, k) in &[(64usize, 32usize, 1usize, 4usize), (128, 256, 2, 16)] {
+        let sk = SKLinear::random(din, dout, l, k, &mut rng);
+        let c = panther::nn::linear_cost(din, dout, 1, Some((l, k)));
+        assert_eq!(sk.param_count(), c.params);
+        let dense = Linear::random(din, dout, &mut rng);
+        let cd = panther::nn::linear_cost(din, dout, 1, None);
+        assert_eq!(dense.param_count(), cd.params);
+    }
+}
