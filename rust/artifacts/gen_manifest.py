@@ -1,0 +1,218 @@
+#!/usr/bin/env python3
+"""Generate the *reference* manifest.json for the default (offline) backend.
+
+The PJRT path replaces this file via `make artifacts` (python/compile/aot.py),
+which lowers the real JAX graphs to HLO text and writes a manifest whose
+artifacts point at `*.hlo.txt` files. This generator instead declares the
+same artifact/model inventory with `"ref"` configs naming the builtin graphs
+implemented in `rust/src/runtime/reference.rs`, so the full runtime stack
+(coordinator, batcher, trainers, tuner) runs with zero external deps.
+
+Keep the shapes here in lockstep with the reference backend's expectations:
+params are ordered exactly as `param_names`, factor tensors are stacked
+`[l, d_in, k]` / `[l, k, d_out]`.
+"""
+import json
+import os
+
+# --- bert family (BERT-mini MLM stand-in) ---
+VOCAB, DIM, HIDDEN, BATCH, SEQ, LR = 256, 64, 1024, 16, 64, 1e-3
+# --- conv family (image classifier stand-in) ---
+CLASSES, CHANNELS, IMAGE, C_HIDDEN, C_BATCH = 10, 3, 16, 128, 32
+PX = CHANNELS * IMAGE * IMAGE
+
+
+def tensors(named):
+    return [{"name": n, "shape": list(s)} for n, s in named]
+
+
+def outs(shapes):
+    return [{"shape": list(s)} for s in shapes]
+
+
+def numel(shape):
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def bert_params(sketch):
+    if sketch is None:
+        return [
+            ("tok_emb", (VOCAB, DIM)),
+            ("fc1.w", (DIM, HIDDEN)),
+            ("fc2.w", (HIDDEN, DIM)),
+        ]
+    l, k = sketch
+    return [
+        ("tok_emb", (VOCAB, DIM)),
+        ("fc1.u", (l, DIM, k)),
+        ("fc1.v", (l, k, HIDDEN)),
+        ("fc2.u", (l, HIDDEN, k)),
+        ("fc2.v", (l, k, DIM)),
+    ]
+
+
+def conv_params(sketch):
+    if sketch is None:
+        return [("fc1.w", (PX, C_HIDDEN)), ("fc2.w", (C_HIDDEN, CLASSES))]
+    l, k = sketch
+    return [
+        ("fc1.u", (l, PX, k)),
+        ("fc1.v", (l, k, C_HIDDEN)),
+        ("fc2.w", (C_HIDDEN, CLASSES)),
+    ]
+
+
+def state_io(params, prefix_groups=("params", "m", "v")):
+    named = []
+    for g in prefix_groups:
+        named += [(f"{g}.{n}", s) for n, s in params]
+    return named
+
+
+artifacts = {}
+models = {}
+
+
+def add_bert(name, sketch):
+    params = bert_params(sketch)
+    ref = {
+        "vocab": VOCAB,
+        "dim": DIM,
+        "hidden": HIDDEN,
+        "lr": LR,
+        "sketch": list(sketch) if sketch else None,
+    }
+    pshapes = [s for _, s in params]
+    batch_io = [("tokens", (BATCH, SEQ)), ("labels", (BATCH, SEQ)), ("mask", (BATCH, SEQ))]
+    artifacts[f"{name}_init"] = {
+        "path": "builtin",
+        "inputs": tensors([("seed", ())]),
+        "outputs": outs(pshapes * 3),
+        "ref": dict(ref, graph="bert_init"),
+    }
+    artifacts[f"{name}_train"] = {
+        "path": "builtin",
+        "inputs": tensors(state_io(params) + [("step", ())] + batch_io),
+        "outputs": outs(pshapes * 3 + [()]),
+        "ref": dict(ref, graph="bert_train"),
+    }
+    artifacts[f"{name}_eval"] = {
+        "path": "builtin",
+        "inputs": tensors([(f"params.{n}", s) for n, s in params] + batch_io),
+        "outputs": outs([()]),
+        "ref": dict(ref, graph="bert_eval"),
+    }
+    artifacts[f"{name}_eval_rows"] = {
+        "path": "builtin",
+        "inputs": tensors([(f"params.{n}", s) for n, s in params] + batch_io),
+        "outputs": outs([(BATCH,)]),
+        "ref": dict(ref, graph="bert_eval_rows"),
+    }
+    models[name] = {
+        "family": "bert",
+        "init": f"{name}_init",
+        "train": f"{name}_train",
+        "eval": f"{name}_eval",
+        "eval_rows": f"{name}_eval_rows",
+        "param_names": [n for n, _ in params],
+        "param_count": sum(numel(s) for s in pshapes),
+        "config": {
+            "vocab": VOCAB,
+            "dim": DIM,
+            "hidden": HIDDEN,
+            "batch": BATCH,
+            "seq": SEQ,
+            "lr": LR,
+            "sketch": list(sketch) if sketch else None,
+        },
+    }
+
+
+def add_conv(name, sketch):
+    params = conv_params(sketch)
+    ref = {
+        "classes": CLASSES,
+        "px": PX,
+        "hidden": C_HIDDEN,
+        "lr": LR,
+        "sketch": list(sketch) if sketch else None,
+    }
+    pshapes = [s for _, s in params]
+    artifacts[f"{name}_init"] = {
+        "path": "builtin",
+        "inputs": tensors([("seed", ())]),
+        "outputs": outs(pshapes * 3),
+        "ref": dict(ref, graph="conv_init"),
+    }
+    artifacts[f"{name}_train"] = {
+        "path": "builtin",
+        "inputs": tensors(
+            state_io(params)
+            + [("step", ()), ("images", (C_BATCH, PX)), ("labels", (C_BATCH,))]
+        ),
+        "outputs": outs(pshapes * 3 + [()]),
+        "ref": dict(ref, graph="conv_train"),
+    }
+    artifacts[f"{name}_predict"] = {
+        "path": "builtin",
+        "inputs": tensors(
+            [(f"params.{n}", s) for n, s in params] + [("images", (C_BATCH, PX))]
+        ),
+        "outputs": outs([(C_BATCH, CLASSES)]),
+        "ref": dict(ref, graph="conv_predict"),
+    }
+    models[name] = {
+        "family": "conv",
+        "init": f"{name}_init",
+        "train": f"{name}_train",
+        "predict": f"{name}_predict",
+        "param_names": [n for n, _ in params],
+        "param_count": sum(numel(s) for s in pshapes),
+        "config": {
+            "classes": CLASSES,
+            "channels": CHANNELS,
+            "image": IMAGE,
+            "px": PX,
+            "hidden": C_HIDDEN,
+            "batch": C_BATCH,
+            "lr": LR,
+            "sketch": list(sketch) if sketch else None,
+        },
+    }
+
+
+# Kernel artifacts (fixed bench-friendly shapes).
+artifacts["k_sk_linear"] = {
+    "path": "builtin",
+    "inputs": tensors(
+        [("x", (8, 64)), ("u", (2, 64, 16)), ("v", (2, 16, 32)), ("bias", (32,))]
+    ),
+    "outputs": outs([(8, 32)]),
+    "ref": {"graph": "sk_linear"},
+}
+artifacts["k_performer"] = {
+    "path": "builtin",
+    "inputs": tensors(
+        [("q", (32, 16)), ("k", (32, 16)), ("v", (32, 16)), ("omega", (16, 24))]
+    ),
+    "outputs": outs([(32, 16)]),
+    "ref": {"graph": "performer"},
+}
+
+add_bert("bert_dense", None)
+add_bert("bert_sk_1_8", (1, 8))
+add_bert("bert_sk_2_16", (2, 16))
+add_bert("bert_sk_1_32", (1, 32))
+add_conv("conv_dense", None)
+add_conv("conv_sk_1_8", (1, 8))
+
+out_path = os.path.join(os.path.dirname(os.path.abspath(__file__)), "manifest.json")
+with open(out_path, "w") as f:
+    json.dump({"artifacts": artifacts, "models": models}, f, indent=2, sort_keys=True)
+    f.write("\n")
+print(f"wrote {out_path}: {len(artifacts)} artifacts, {len(models)} models")
+for name, m in sorted(models.items()):
+    print(f"  {name:<14} {m['param_count']:>8} params")

@@ -75,8 +75,14 @@ struct StatsInner {
 }
 
 impl BatcherStats {
+    /// Poison-tolerant lock: a panic on a scoring thread must not turn
+    /// every later stats read into an `unwrap` panic cascade.
+    fn locked(&self) -> std::sync::MutexGuard<'_, StatsInner> {
+        crate::util::lock_ignore_poison(&self.inner)
+    }
+
     fn record(&self, used: usize, capacity: usize) {
-        let mut s = self.inner.lock().unwrap();
+        let mut s = self.locked();
         s.batches += 1;
         s.requests += used as u64;
         if s.occupancy.len() < capacity {
@@ -86,16 +92,16 @@ impl BatcherStats {
     }
 
     pub fn batches(&self) -> u64 {
-        self.inner.lock().unwrap().batches
+        self.locked().batches
     }
 
     pub fn requests(&self) -> u64 {
-        self.inner.lock().unwrap().requests
+        self.locked().requests
     }
 
     /// Mean rows per executed batch.
     pub fn mean_occupancy(&self) -> f64 {
-        let s = self.inner.lock().unwrap();
+        let s = self.locked();
         if s.batches == 0 {
             0.0
         } else {

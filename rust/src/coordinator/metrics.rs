@@ -32,8 +32,15 @@ pub struct CoordinatorMetrics {
 }
 
 impl CoordinatorMetrics {
+    /// Poison-tolerant lock: the counters stay structurally valid even if a
+    /// recording thread panicked, so a poisoned mutex must not cascade into
+    /// panics on every later read.
+    fn locked(&self) -> std::sync::MutexGuard<'_, HashMap<String, ArtifactStats>> {
+        crate::util::lock_ignore_poison(&self.stats)
+    }
+
     pub fn record(&self, artifact: &str, latency: Duration, ok: bool) {
-        let mut map = self.stats.lock().unwrap();
+        let mut map = self.locked();
         let s = map.entry(artifact.to_string()).or_default();
         s.count += 1;
         if !ok {
@@ -45,20 +52,20 @@ impl CoordinatorMetrics {
     }
 
     pub fn artifact_stats(&self, artifact: &str) -> Option<ArtifactStats> {
-        self.stats.lock().unwrap().get(artifact).cloned()
+        self.locked().get(artifact).cloned()
     }
 
     pub fn total_requests(&self) -> u64 {
-        self.stats.lock().unwrap().values().map(|s| s.count).sum()
+        self.locked().values().map(|s| s.count).sum()
     }
 
     pub fn total_errors(&self) -> u64 {
-        self.stats.lock().unwrap().values().map(|s| s.errors).sum()
+        self.locked().values().map(|s| s.errors).sum()
     }
 
     /// Render a summary table (for `panther info` / example epilogues).
     pub fn report(&self) -> String {
-        let map = self.stats.lock().unwrap();
+        let map = self.locked();
         let mut names: Vec<&String> = map.keys().collect();
         names.sort();
         let mut t = crate::util::bench::Table::new(&["artifact", "count", "errors", "mean", "max"]);

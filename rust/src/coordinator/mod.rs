@@ -1,9 +1,9 @@
-//! Coordinator: multi-threaded access to the single-threaded PJRT runtime.
+//! Coordinator: multi-threaded access to the single-threaded runtime.
 //!
-//! The `xla` crate's client wraps raw C pointers and is not `Send`, so one
-//! dedicated **runtime service thread** owns the [`Runtime`]; everything
-//! else (tuner workers, examples, benches) talks to it through a cloneable
-//! [`RuntimeHandle`] over an mpsc channel. This is the same
+//! Execution backends may be `!Send` (the PJRT client wraps raw C
+//! pointers), so one dedicated **runtime service thread** owns the
+//! [`Runtime`]; everything else (tuner workers, examples, benches) talks to
+//! it through a cloneable [`RuntimeHandle`] over an mpsc channel. This is the same
 //! leader-owns-the-engine shape as a vLLM-style router: requests queue,
 //! the service thread executes in arrival order, per-artifact latency and
 //! queue-depth metrics are tracked, and backpressure falls out of the

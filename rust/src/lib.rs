@@ -18,32 +18,43 @@
 //! - **Layer 2 (build-time Python)** — JAX model graphs (BERT-mini MLM,
 //!   conv classifier; dense and sketched variants) lowered once to HLO text
 //!   artifacts by `python/compile/aot.py`.
-//! - **Layer 3 (this crate)** — everything at run time: the PJRT
-//!   [`runtime`], the [`tuner`] (the paper's `SKAutoTuner`), the
-//!   [`coordinator`] that schedules tuning trials and evaluation batches,
-//!   the [`train`] driver, and a pure-Rust RandNLA substrate
-//!   ([`linalg`], [`sketch`], [`decomp`], [`nn`]) used by the benchmark
-//!   harness and the host-side decomposition API.
+//! - **Layer 3 (this crate)** — everything at run time: the [`runtime`]
+//!   (an `ExecBackend` seam with an offline reference executor by default
+//!   and the PJRT client behind the non-default `pjrt` cargo feature), the
+//!   [`tuner`] (the paper's `SKAutoTuner`), the [`coordinator`] that
+//!   schedules tuning trials and evaluation batches, the [`train`] driver,
+//!   and a pure-Rust RandNLA substrate ([`linalg`], [`sketch`], [`decomp`],
+//!   [`nn`]) used by the benchmark harness and the host-side decomposition
+//!   API.
 //!
-//! Python is never on the request path: after `make artifacts` the `panther`
-//! binary and examples are self-contained.
+//! Python is never on the request path: the default build executes the
+//! committed reference artifacts (`rust/artifacts/manifest.json`) with no
+//! external dependencies, and after `make artifacts` a `--features pjrt`
+//! build runs the real lowered HLO instead.
 //!
 //! ## Quickstart
 //!
-//! ```no_run
+//! ```
 //! use panther::nn::{Linear, SKLinear};
 //! use panther::linalg::Mat;
 //! use panther::rng::Philox;
 //!
 //! let mut rng = Philox::seeded(0);
 //! // A dense layer and its sketched drop-in replacement.
-//! let dense = Linear::random(512, 512, &mut rng);
-//! let sk = SKLinear::from_dense(&dense, /*num_terms=*/1, /*low_rank=*/16, &mut rng);
-//! let x = Mat::randn(8, 512, &mut rng);
+//! let dense = Linear::random(128, 128, &mut rng);
+//! let sk = SKLinear::from_dense(&dense, /*num_terms=*/ 1, /*low_rank=*/ 16, &mut rng);
+//! assert!(sk.param_count() < dense.param_count());
+//!
+//! // Same call-site, same shapes.
+//! let x = Mat::randn(8, 128, &mut rng);
 //! let y_dense = dense.forward(&x);
 //! let y_sk = sk.forward(&x);
 //! assert_eq!(y_dense.shape(), y_sk.shape());
 //! ```
+
+// Dense numeric kernels index heavily by design; the iterator rewrites
+// clippy suggests for these loops obscure the math.
+#![allow(clippy::needless_range_loop)]
 
 pub mod coordinator;
 pub mod data;

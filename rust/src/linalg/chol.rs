@@ -6,12 +6,23 @@
 use super::Mat;
 
 /// Cholesky failure: the matrix was not (numerically) positive definite.
-#[derive(Debug, Clone, thiserror::Error, PartialEq)]
-#[error("cholesky failed at pivot {pivot}: diagonal value {value}")]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CholError {
     pub pivot: usize,
     pub value: f64,
 }
+
+impl std::fmt::Display for CholError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "cholesky failed at pivot {}: diagonal value {}",
+            self.pivot, self.value
+        )
+    }
+}
+
+impl std::error::Error for CholError {}
 
 /// Lower Cholesky `A = L·Lᵀ` of a symmetric positive-definite matrix.
 /// f64 accumulation throughout; returns Err on a non-positive pivot.

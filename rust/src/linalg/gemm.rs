@@ -18,6 +18,14 @@ const KC: usize = 256;
 static POOL: OnceLock<ThreadPool> = OnceLock::new();
 static GEMM_THREADS: AtomicUsize = AtomicUsize::new(0); // 0 = default
 
+/// Raw pointer to C's storage shared with pooled workers. Each call site
+/// partitions C into disjoint ranges and every worker materializes `&mut`
+/// slices only over the ranges it owns (never the whole buffer), so no two
+/// live `&mut` alias.
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
 /// Configure GEMM parallelism (takes effect before first use; after that the
 /// pool is fixed — call early in `main`). 1 disables threading.
 pub fn set_gemm_threads(n: usize) {
@@ -62,31 +70,78 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 }
 
 /// `C = Aᵀ · B` without materializing the transpose.
+///
+/// Aᵀ·B with A row-major is a k-major sweep: accumulate outer products of
+/// A's rows into C. Parallelized over disjoint tiles of the output (row
+/// blocks × column strips — each worker owns its own C entries, so the
+/// sweep is race-free), with a serial fallback for small problems. Tiling
+/// both dimensions keeps skinny outputs parallel too (Gram matrices
+/// `AᵀA` with few columns but a huge k are the common decomposition shape).
+/// Every C entry accumulates its k terms in the same ascending-p order
+/// regardless of tile layout, so results are bit-identical to the serial
+/// sweep at any thread count.
 pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.rows(), b.rows(), "matmul_tn shape mismatch");
-    // Aᵀ·B with A row-major is a k-major sweep: accumulate outer products of
-    // A's rows into C. Parallelize over column strips of the output instead
-    // (each worker owns disjoint C columns) to stay race-free.
     let (k, m) = a.shape();
     let n = b.cols();
     let mut c = Mat::zeros(m, n);
-    // Serial k-sweep, vectorized inner j loop; for the sizes used here
-    // (sketch application, QᵀA in decompositions) this is bandwidth-bound.
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    // Tile sizes: a C tile plus B's strip stay cache resident through the
+    // k sweep.
+    const JB: usize = 128;
+    const RB: usize = 16;
+    let work = k * m * n;
+    let col_strips = n.div_ceil(JB);
+    let row_blocks = m.div_ceil(RB);
+    let ntiles = col_strips * row_blocks;
+    if work < 64 * 64 * 64 || ntiles == 1 {
+        tn_tile(a, b, c.data_mut().as_mut_ptr(), (0, m), (0, n), n);
+        return c;
+    }
+    let cptr = SendPtr(c.data_mut().as_mut_ptr());
+    let cptr = &cptr;
+    pool().parallel_for(ntiles, move |t| {
+        let (rb, sb) = (t / col_strips, t % col_strips);
+        let rows = (rb * RB, ((rb + 1) * RB).min(m));
+        let cols = (sb * JB, ((sb + 1) * JB).min(n));
+        tn_tile(a, b, cptr.0, rows, cols, n);
+    });
+    c
+}
+
+/// `C[i0..i1, j0..j1] += (Aᵀ·B)[i0..i1, j0..j1]` on raw C storage
+/// (row-major, n cols).
+///
+/// Callers pass disjoint tiles per thread; the only `&mut` slices formed
+/// are over this tile's own row segments.
+fn tn_tile(
+    a: &Mat,
+    b: &Mat,
+    cbase: *mut f32,
+    (i0, i1): (usize, usize),
+    (j0, j1): (usize, usize),
+    n: usize,
+) {
+    let k = a.rows();
     for p in 0..k {
         let arow = a.row(p);
-        let brow = b.row(p);
-        for i in 0..m {
+        let brow = &b.row(p)[j0..j1];
+        for i in i0..i1 {
             let aip = arow[i];
             if aip == 0.0 {
                 continue;
             }
-            let crow = c.row_mut(i);
-            for j in 0..n {
-                crow[j] += aip * brow[j];
+            // SAFETY: [i·n+j0, i·n+j1) lies inside C and belongs exclusively
+            // to this tile (tiles partition C's rows and columns).
+            let crow =
+                unsafe { std::slice::from_raw_parts_mut(cbase.add(i * n + j0), j1 - j0) };
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aip * bv;
             }
         }
     }
-    c
 }
 
 /// `C = A · Bᵀ` without materializing the transpose.
@@ -112,19 +167,17 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
         }
         return c;
     }
-    struct SendPtr(*mut f32);
-    unsafe impl Send for SendPtr {}
-    unsafe impl Sync for SendPtr {}
     let cptr = SendPtr(c.data_mut().as_mut_ptr());
     let cptr = &cptr;
     let nblocks = m.div_ceil(MC);
     pool().parallel_for(nblocks, move |ib| {
         let i0 = ib * MC;
         let i1 = ((ib + 1) * MC).min(m);
-        // SAFETY: row blocks are disjoint across ib.
-        let cslice = unsafe { std::slice::from_raw_parts_mut(cptr.0, m * n) };
         for i in i0..i1 {
-            nt_row(a.row(i), b, &mut cslice[i * n..(i + 1) * n]);
+            // SAFETY: row i belongs to this worker's block; row blocks
+            // [i0, i1) are disjoint across ib, so no two live `&mut` alias.
+            let crow = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i * n), n) };
+            nt_row(a.row(i), b, crow);
         }
     });
     c
@@ -182,38 +235,37 @@ fn gemm_into(a: &Mat, b: &Mat, c: &mut Mat) {
     // Small problems: stay serial to avoid pool overhead.
     let work = m * n * k;
     if work < 64 * 64 * 64 || nblocks == 1 {
-        let cdata = c.data_mut();
+        let cbase = c.data_mut().as_mut_ptr();
         for ib in 0..nblocks {
-            gemm_rows_raw(a, b, cdata, ib * MC, ((ib + 1) * MC).min(m));
+            gemm_rows_raw(a, b, cbase, ib * MC, ((ib + 1) * MC).min(m));
         }
         return;
     }
-    // Each worker writes a disjoint row range of C — safe to share &mut via
-    // pointer (the pool joins before we return).
-    struct SendPtr(*mut f32);
-    unsafe impl Send for SendPtr {}
-    unsafe impl Sync for SendPtr {}
+    // Each worker writes a disjoint row range of C (the pool joins before
+    // we return).
     let cptr = SendPtr(c.data_mut().as_mut_ptr());
     let cptr = &cptr;
     pool().parallel_for(nblocks, move |ib| {
         let i0 = ib * MC;
         let i1 = ((ib + 1) * MC).min(m);
-        // SAFETY: row blocks [i0, i1) are disjoint across ib.
-        let cslice = unsafe { std::slice::from_raw_parts_mut(cptr.0, m * n) };
-        gemm_rows_raw(a, b, cslice, i0, i1);
+        gemm_rows_raw(a, b, cptr.0, i0, i1);
     });
 }
 
-
 /// `C[i0..i1, :] += A[i0..i1, :] · B` on raw C storage (row-major, n cols).
-fn gemm_rows_raw(a: &Mat, b: &Mat, cdata: &mut [f32], i0: usize, i1: usize) {
+///
+/// Callers pass disjoint `[i0, i1)` row blocks per thread; the only `&mut`
+/// slices formed are over this block's own rows.
+fn gemm_rows_raw(a: &Mat, b: &Mat, cbase: *mut f32, i0: usize, i1: usize) {
     let k = a.cols();
     let n = b.cols();
     for p0 in (0..k).step_by(KC) {
         let p1 = (p0 + KC).min(k);
         for i in i0..i1 {
             let arow = a.row(i);
-            let crow = &mut cdata[i * n..(i + 1) * n];
+            // SAFETY: row i lies in [i0, i1), owned exclusively by this
+            // block (row blocks partition C's rows).
+            let crow = unsafe { std::slice::from_raw_parts_mut(cbase.add(i * n), n) };
             for p in p0..p1 {
                 let aip = arow[p];
                 if aip == 0.0 {
@@ -292,6 +344,33 @@ mod tests {
         let d1 = matmul_nt(&x, &y);
         let d2 = matmul(&x, &y.transpose());
         assert!(super::super::rel_error(&d1, &d2) < 1e-5);
+    }
+
+    #[test]
+    fn tn_parallel_tiles_bit_identical_to_serial() {
+        let mut rng = Philox::seeded(9);
+        // 90 rows × 300 cols spans multiple 16-row blocks and 128-column
+        // strips, and the work size crosses the parallel threshold, so this
+        // exercises the pooled tile path.
+        let a = Mat::randn(120, 90, &mut rng);
+        let b = Mat::randn(120, 300, &mut rng);
+        let c = matmul_tn(&a, &b);
+        assert!(super::super::rel_error(&c, &matmul(&a.transpose(), &b)) < 1e-5);
+        let mut serial = Mat::zeros(90, 300);
+        tn_tile(&a, &b, serial.data_mut().as_mut_ptr(), (0, 90), (0, 300), 300);
+        assert_eq!(c.data(), serial.data(), "tile layout changed the bits");
+    }
+
+    #[test]
+    fn tn_skinny_gram_shape_parallel_path_correct() {
+        // Gram-matrix shape: huge k, few columns — row blocks carry the
+        // parallelism. 40 output rows × 40 cols, k = 700 → work above the
+        // serial threshold with a single column strip.
+        let mut rng = Philox::seeded(10);
+        let a = Mat::randn(700, 40, &mut rng);
+        let g = matmul_tn(&a, &a);
+        let reference = matmul(&a.transpose(), &a);
+        assert!(super::super::rel_error(&g, &reference) < 1e-5);
     }
 
     #[test]

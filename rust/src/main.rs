@@ -7,6 +7,8 @@
 //! - `decompose`  — RSVD / CQRRPT vs deterministic baselines
 //! - `smoke`      — execute kernel artifacts once and check numerics (CI)
 
+#![allow(clippy::needless_range_loop)]
+
 use anyhow::{bail, Context, Result};
 use panther::coordinator::RuntimeServer;
 use panther::data::{ImageDataset, TextCorpus};
@@ -80,6 +82,7 @@ fn cmd_info(args: &[String]) -> Result<()> {
     let parsed = cmd.parse(args).map_err(anyhow::Error::msg)?;
     let rt = Runtime::open(parsed.get_or("artifacts", "artifacts"))?;
     println!("panther {} — artifact inventory", panther::VERSION);
+    println!("execution backend: {}", rt.backend_name());
     println!("\nmodels:");
     for name in rt.manifest().model_names() {
         let m = rt.manifest().model(name).unwrap();

@@ -137,8 +137,9 @@ impl Model {
 pub enum LayerSelector {
     /// All layers of a given type: `{"type": "Linear"}`.
     ByType(String),
-    /// Regex on the dotted layer path.
-    ByRegex(regex::Regex),
+    /// Regex on the dotted layer path (see [`crate::util::rex`] for the
+    /// supported subset).
+    ByRegex(crate::util::rex::Regex),
     /// Explicit layer names.
     ByName(Vec<String>),
 }
@@ -149,7 +150,7 @@ impl LayerSelector {
     }
 
     pub fn by_regex(pat: &str) -> anyhow::Result<Self> {
-        Ok(LayerSelector::ByRegex(regex::Regex::new(pat)?))
+        Ok(LayerSelector::ByRegex(crate::util::rex::Regex::new(pat)?))
     }
 
     pub fn by_names(names: &[&str]) -> Self {

@@ -1,0 +1,57 @@
+//! The execution-backend seam: everything above the runtime (coordinator,
+//! trainers, tuner, benches) talks to artifacts through [`ExecBackend`], so
+//! the concrete executor is swappable:
+//!
+//! - [`ReferenceBackend`] (default) — interprets the manifest's builtin
+//!   graphs on the in-crate `linalg` substrate; works fully offline.
+//! - `PjrtBackend` (cargo feature `pjrt`) — compiles the AOT HLO text via
+//!   the `xla` crate's PJRT CPU client, exactly what production runs.
+//!
+//! Backends receive inputs that [`super::Runtime`] has already arity- and
+//! shape-checked against the manifest.
+
+use super::manifest::ArtifactSpec;
+use super::tensor::HostTensor;
+use anyhow::Result;
+use std::path::Path;
+
+/// An artifact executor. Implementations may be `!Send` (the PJRT client
+/// wraps raw C pointers), which is why the coordinator confines the whole
+/// [`super::Runtime`] to one service thread.
+pub trait ExecBackend {
+    /// Human-readable backend name (logs, `panther info`).
+    fn name(&self) -> &'static str;
+
+    /// Prepare an artifact for execution (compile + cache). Called once per
+    /// artifact before the first `execute`; must be idempotent.
+    fn load(&mut self, spec: &ArtifactSpec, dir: &Path) -> Result<()>;
+
+    /// Execute a loaded artifact on shape-checked inputs.
+    fn execute(&mut self, spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+}
+
+/// Executes the manifest's builtin graphs on the in-crate substrate.
+#[derive(Default)]
+pub struct ReferenceBackend;
+
+impl ReferenceBackend {
+    pub fn new() -> Self {
+        ReferenceBackend
+    }
+}
+
+impl ExecBackend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn load(&mut self, spec: &ArtifactSpec, _dir: &Path) -> Result<()> {
+        // The reference analogue of a compile failure: reject artifacts
+        // whose `ref` config names no (or an unknown) builtin graph.
+        super::reference::check(spec)
+    }
+
+    fn execute(&mut self, spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        super::reference::execute(spec, inputs)
+    }
+}

@@ -11,13 +11,18 @@ pub struct TensorSpec {
     pub shape: Vec<usize>,
 }
 
-/// One lowered HLO artifact.
+/// One executable artifact. `path` points at the lowered HLO text for the
+/// PJRT backend; `ref_config` tells the in-crate reference backend which
+/// builtin graph (and hyper-parameters) the artifact corresponds to. Either
+/// may be vestigial depending on which backend executes the manifest.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
     pub name: String,
     pub path: String,
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
+    /// Raw `"ref"` object from the manifest (`Json::Null` when absent).
+    pub ref_config: Json,
 }
 
 impl ArtifactSpec {
@@ -118,6 +123,7 @@ impl Manifest {
                         .to_string(),
                     inputs: parse_tensors("inputs", true)?,
                     outputs: parse_tensors("outputs", false)?,
+                    ref_config: spec.get("ref").cloned().unwrap_or(Json::Null),
                 },
             );
         }

@@ -1,54 +1,78 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//! Artifact runtime: load the manifest and execute model/kernel graphs.
 //!
-//! `make artifacts` (the only step that runs Python) leaves
-//! `artifacts/*.hlo.txt` plus `manifest.json`; everything here is pure Rust
-//! on top of the `xla` crate's PJRT CPU client:
+//! The artifact directory holds `manifest.json` plus (for PJRT builds) the
+//! `*.hlo.txt` files `make artifacts` lowered from the JAX layer. Execution
+//! goes through the [`ExecBackend`] seam:
 //!
-//! - [`tensor::HostTensor`] — host-side f32 tensor exchanged with HLO
+//! - **default build** — [`ReferenceBackend`] interprets each artifact's
+//!   builtin graph (named by its `"ref"` manifest entry) directly on the
+//!   in-crate [`crate::linalg`]/[`crate::nn`] substrate. Fully offline; the
+//!   committed `artifacts/manifest.json` works out of the box.
+//! - **`--features pjrt`** — the `xla` crate's PJRT CPU client compiles and
+//!   runs the real HLO. Set `PANTHER_BACKEND=reference` to force the
+//!   reference backend even in a pjrt build.
+//!
+//! Components:
+//! - [`tensor::HostTensor`] — host-side f32 tensors exchanged with
 //!   executables (row-major, matching [`crate::linalg::Mat`]).
 //! - [`manifest::Manifest`] — parsed `manifest.json`: artifact input/output
 //!   specs, model descriptors (param names/order, config).
 //! - [`Runtime`] — compile-on-demand executable cache + name-checked
-//!   execution.
+//!   execution on top of a backend.
 //!
-//! The PJRT client wrapper is not `Send` (raw C pointers), so a `Runtime`
-//! lives on one thread; [`crate::coordinator`] owns one on a dedicated
-//! service thread and multiplexes requests over channels.
+//! A backend may be `!Send` (the PJRT client wraps raw C pointers), so a
+//! `Runtime` lives on one thread; [`crate::coordinator`] owns one on a
+//! dedicated service thread and multiplexes requests over channels.
 
+pub mod backend;
 pub mod manifest;
+mod reference;
 pub mod tensor;
 
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use backend::{ExecBackend, ReferenceBackend};
 pub use manifest::{ArtifactSpec, Manifest, ModelSpec, TensorSpec};
 pub use tensor::HostTensor;
 
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 
-/// Loaded runtime: PJRT client + manifest + compiled-executable cache.
+/// Loaded runtime: execution backend + manifest + loaded-artifact cache.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Box<dyn ExecBackend>,
     manifest: Manifest,
     dir: PathBuf,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    loaded: HashSet<String>,
     /// Executions per artifact (metrics).
     exec_counts: HashMap<String, u64>,
 }
 
 impl Runtime {
-    /// Open the artifact directory (expects `manifest.json` inside).
+    /// Open the artifact directory (expects `manifest.json` inside) with the
+    /// build's default backend.
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        Self::open_with(dir, default_backend()?)
+    }
+
+    /// Open with an explicit backend (tests, embedding).
+    pub fn open_with(dir: impl AsRef<Path>, backend: Box<dyn ExecBackend>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {manifest_path:?} — point at the committed reference \
+                 artifacts (rust/artifacts) or run `make artifacts`"
+            )
+        })?;
         let manifest = Manifest::parse(&text)?;
-        let client = xla::PjRtClient::cpu()?;
         Ok(Runtime {
-            client,
+            backend,
             manifest,
             dir,
-            cache: HashMap::new(),
+            loaded: HashSet::new(),
             exec_counts: HashMap::new(),
         })
     }
@@ -63,30 +87,35 @@ impl Runtime {
         &self.manifest
     }
 
-    /// Compile an artifact (cached after the first call).
+    /// Name of the active execution backend (`"reference"` or `"pjrt"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Prepare an artifact (compile on PJRT, validate on reference); cached
+    /// after the first call.
     pub fn load(&mut self, name: &str) -> Result<()> {
-        if self.cache.contains_key(name) {
+        if self.loaded.contains(name) {
             return Ok(());
         }
         let spec = self
             .manifest
             .artifact(name)
-            .with_context(|| format!("artifact {name} not in manifest"))?;
-        let path = self.dir.join(&spec.path);
+            .with_context(|| format!("artifact {name} not in manifest"))?
+            .clone();
         let t0 = std::time::Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
+        self.backend.load(&spec, &self.dir)?;
         crate::log_info!(
-            "compiled artifact {name} in {}",
+            "loaded artifact {name} on {} backend in {}",
+            self.backend.name(),
             crate::util::human_duration(t0.elapsed())
         );
-        self.cache.insert(name.to_string(), exe);
+        self.loaded.insert(name.to_string());
         Ok(())
     }
 
     /// Execute an artifact with shape-checked inputs; returns the flattened
-    /// output tensors (the HLO returns one tuple; we decompose it).
+    /// output tensors.
     pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         self.load(name)?;
         let spec = self.manifest.artifact(name).unwrap().clone();
@@ -107,28 +136,28 @@ impl Runtime {
                 );
             }
         }
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        let exe = self.cache.get(name).unwrap();
-        let result = exe.execute::<xla::Literal>(&literals)?;
-        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
-        // return_tuple=True → single tuple output on replica 0.
-        let out_lit = result[0][0].to_literal_sync()?;
-        let parts = out_lit.to_tuple()?;
-        if parts.len() != spec.outputs.len() {
+        let out = self.backend.execute(&spec, inputs)?;
+        // Backend-agnostic output validation: a manifest whose declared
+        // outputs drift from what the executor produces should fail here,
+        // not as a confusing index/shape error downstream.
+        if out.len() != spec.outputs.len() {
             bail!(
-                "artifact {name}: manifest declares {} outputs, HLO returned {}",
+                "artifact {name}: manifest declares {} outputs, backend returned {}",
                 spec.outputs.len(),
-                parts.len()
+                out.len()
             );
         }
-        parts
-            .iter()
-            .zip(&spec.outputs)
-            .map(|(lit, os)| HostTensor::from_literal(lit, &os.shape))
-            .collect()
+        for (i, (t, s)) in out.iter().zip(&spec.outputs).enumerate() {
+            if t.shape() != s.shape.as_slice() {
+                bail!(
+                    "artifact {name} output {i}: shape {:?} != manifest {:?}",
+                    t.shape(),
+                    s.shape
+                );
+            }
+        }
+        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+        Ok(out)
     }
 
     /// Total executions of an artifact so far.
@@ -136,10 +165,49 @@ impl Runtime {
         self.exec_counts.get(name).copied().unwrap_or(0)
     }
 
-    /// Number of compiled executables currently cached.
+    /// Number of artifacts currently loaded (compiled/validated + cached).
     pub fn cached_executables(&self) -> usize {
-        self.cache.len()
+        self.loaded.len()
     }
+}
+
+/// The backend this build executes with. `PANTHER_BACKEND` selects
+/// explicitly (`reference` or `pjrt`; anything else is an error, and `pjrt`
+/// errors on builds without the feature); unset, a `pjrt` build uses the
+/// PJRT client and a default build uses the reference backend.
+fn default_backend() -> Result<Box<dyn ExecBackend>> {
+    match std::env::var("PANTHER_BACKEND").ok().as_deref() {
+        Some("reference") => reference_backend(),
+        Some("pjrt") => pjrt_backend(),
+        Some(other) => bail!(
+            "unknown PANTHER_BACKEND '{other}' (expected 'reference' or 'pjrt')"
+        ),
+        None => build_default_backend(),
+    }
+}
+
+fn reference_backend() -> Result<Box<dyn ExecBackend>> {
+    Ok(Box::new(ReferenceBackend::new()))
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_backend() -> Result<Box<dyn ExecBackend>> {
+    Ok(Box::new(pjrt::PjrtBackend::new()?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend() -> Result<Box<dyn ExecBackend>> {
+    bail!("PANTHER_BACKEND=pjrt requires a build with --features pjrt")
+}
+
+#[cfg(feature = "pjrt")]
+fn build_default_backend() -> Result<Box<dyn ExecBackend>> {
+    pjrt_backend()
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn build_default_backend() -> Result<Box<dyn ExecBackend>> {
+    reference_backend()
 }
 
 #[cfg(test)]

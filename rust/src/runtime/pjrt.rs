@@ -1,0 +1,115 @@
+//! PJRT execution backend (cargo feature `pjrt`): compiles the AOT HLO text
+//! artifacts produced by `make artifacts` through the `xla` crate's PJRT CPU
+//! client. This is the production execution path; the offline default build
+//! uses [`super::backend::ReferenceBackend`] instead.
+
+use super::backend::ExecBackend;
+use super::manifest::ArtifactSpec;
+use super::tensor::HostTensor;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// PJRT CPU client + compiled-executable cache. Not `Send` (raw C pointers),
+/// so a `Runtime` holding it lives on one thread; the coordinator owns it on
+/// a dedicated service thread and multiplexes requests over channels.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<Self> {
+        Ok(PjrtBackend {
+            client: xla::PjRtClient::cpu()?,
+            cache: HashMap::new(),
+        })
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn load(&mut self, spec: &ArtifactSpec, dir: &Path) -> Result<()> {
+        if self.cache.contains_key(&spec.name) {
+            return Ok(());
+        }
+        let path = dir.join(&spec.path);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.insert(spec.name.clone(), exe);
+        Ok(())
+    }
+
+    fn execute(&mut self, spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let Some(exe) = self.cache.get(&spec.name) else {
+            bail!("artifact {} executed before load", spec.name);
+        };
+        let literals: Vec<xla::Literal> = inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        // return_tuple=True → single tuple output on replica 0.
+        let out_lit = result[0][0].to_literal_sync()?;
+        let parts = out_lit.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "artifact {}: manifest declares {} outputs, HLO returned {}",
+                spec.name,
+                spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(lit, os)| from_literal(lit, &os.shape))
+            .collect()
+    }
+}
+
+/// Convert to an `xla::Literal` (f32, row-major).
+fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    if t.shape().is_empty() {
+        // Scalars: reshape to rank-0.
+        Ok(lit.reshape(&[])?)
+    } else {
+        let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// Read back from a literal, validating the element count against the
+/// expected shape from the manifest.
+fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<HostTensor> {
+    let data = lit.to_vec::<f32>()?;
+    anyhow::ensure!(
+        data.len() == shape.iter().product::<usize>(),
+        "literal has {} elements, manifest shape {shape:?}",
+        data.len()
+    );
+    Ok(HostTensor::new(shape, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = HostTensor::new(&[2, 3], (0..6).map(|i| i as f32).collect());
+        let lit = to_literal(&t).unwrap();
+        let back = from_literal(&lit, &[2, 3]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_literal_roundtrip() {
+        let t = HostTensor::scalar(3.5);
+        let lit = to_literal(&t).unwrap();
+        let back = from_literal(&lit, &[]).unwrap();
+        assert_eq!(back.to_scalar(), 3.5);
+    }
+}

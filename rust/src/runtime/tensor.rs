@@ -1,11 +1,12 @@
-//! Host-side tensors exchanged with HLO executables.
+//! Host-side tensors exchanged with executable artifacts.
 
 use crate::linalg::Mat;
-use anyhow::Result;
 
-/// A row-major f32 tensor with explicit shape. The runtime converts these
-/// to/from `xla::Literal`s at the executable boundary; `Mat` converts for
-/// the 2-D case so the linalg substrate and the PJRT path interoperate.
+/// A row-major f32 tensor with explicit shape. The execution backends
+/// consume and produce these at the artifact boundary (the PJRT backend
+/// converts to/from `xla::Literal`s, the reference backend reads the flat
+/// storage directly); `Mat` converts for the 2-D case so the linalg
+/// substrate and both execution paths interoperate.
 #[derive(Clone, Debug, PartialEq)]
 pub struct HostTensor {
     shape: Vec<usize>,
@@ -90,30 +91,6 @@ impl HostTensor {
     pub fn from_mat(m: &Mat) -> Self {
         HostTensor::new(&[m.rows(), m.cols()], m.data().to_vec())
     }
-
-    /// Convert to an `xla::Literal` (f32, row-major).
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = xla::Literal::vec1(&self.data);
-        if self.shape.is_empty() {
-            // Scalars: reshape to rank-0.
-            Ok(lit.reshape(&[])?)
-        } else {
-            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-            Ok(lit.reshape(&dims)?)
-        }
-    }
-
-    /// Read back from a literal, validating the element count against the
-    /// expected shape from the manifest.
-    pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Self> {
-        let data = lit.to_vec::<f32>()?;
-        anyhow::ensure!(
-            data.len() == shape.iter().product::<usize>(),
-            "literal has {} elements, manifest shape {shape:?}",
-            data.len()
-        );
-        Ok(HostTensor::new(shape, data))
-    }
 }
 
 #[cfg(test)]
@@ -143,21 +120,5 @@ mod tests {
         let m = Mat::randn(4, 6, &mut rng);
         let t = HostTensor::from_mat(&m);
         assert_eq!(t.to_mat(), m);
-    }
-
-    #[test]
-    fn literal_roundtrip() {
-        let t = HostTensor::new(&[2, 3], (0..6).map(|i| i as f32).collect());
-        let lit = t.to_literal().unwrap();
-        let back = HostTensor::from_literal(&lit, &[2, 3]).unwrap();
-        assert_eq!(back, t);
-    }
-
-    #[test]
-    fn scalar_literal_roundtrip() {
-        let t = HostTensor::scalar(3.5);
-        let lit = t.to_literal().unwrap();
-        let back = HostTensor::from_literal(&lit, &[]).unwrap();
-        assert_eq!(back.to_scalar(), 3.5);
     }
 }

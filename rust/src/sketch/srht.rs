@@ -1,4 +1,4 @@
-//! Subsampled Randomized Hadamard Transform: `S = √(m/d)·P·H·D` where `D` is
+//! Subsampled Randomized Hadamard Transform: `S = √(mpad/d)·P·H·D` where `D` is
 //! a random sign diagonal, `H` the (normalized) Walsh–Hadamard transform,
 //! and `P` samples `d` rows. Applies in O(m log m) per column via the fast
 //! WHT; the Hadamard mixing makes row sampling safe for arbitrary inputs.
@@ -20,6 +20,15 @@ impl SrhtSketch {
     pub fn new(m: usize, d: usize, seed: u64) -> Self {
         assert!(d > 0 && m > 0);
         let mpad = m.next_power_of_two();
+        // A sketch cannot sample more distinct transform rows than the padded
+        // transform has. Silently shrinking `d` here used to hand callers an
+        // operator with a different output_dim than requested — fail loudly
+        // instead.
+        assert!(
+            d <= mpad,
+            "SrhtSketch: sketch size d={d} exceeds padded input size {mpad} \
+             (m={m} rounds up to {mpad}); choose d <= {mpad}"
+        );
         let mut rng = Philox::new(seed, 0);
         let mut signs = vec![0f32; m];
         fill_sign(&mut rng, &mut signs);
@@ -27,7 +36,7 @@ impl SrhtSketch {
         let mut rows = Vec::with_capacity(d);
         let mut chosen = std::collections::HashSet::with_capacity(d);
         let mut row_rng = Philox::new(seed, 1);
-        while rows.len() < d.min(mpad) {
+        while rows.len() < d {
             let r = row_rng.next_below(mpad as u32) as usize;
             if chosen.insert(r) {
                 rows.push(r);
@@ -36,7 +45,7 @@ impl SrhtSketch {
         SrhtSketch {
             m,
             mpad,
-            d: rows.len(),
+            d,
             signs,
             rows,
         }
@@ -73,8 +82,11 @@ impl Sketch for SrhtSketch {
         assert_eq!(a.rows(), self.m);
         let n = a.cols();
         let mut out = Mat::zeros(self.d, n);
-        // Overall scaling: H normalized by 1/√mpad, sampling by √(mpad/d)
-        // → combined 1/√(d·?)… algebra: (1/√mpad)·√(mpad/d) = 1/√d.
+        // Scaling: `fwht` below is the *unnormalized* transform (entries ±1,
+        // i.e. √mpad times the orthonormal H), and the operator is
+        // S = √(mpad/d)·P·H·D. Folding the normalizations together:
+        //   √(mpad/d) · (1/√mpad) · fwht = (1/√d) · fwht,
+        // so a single 1/√d factor on the sampled rows makes E‖Sx‖² = ‖x‖².
         let scale = 1.0 / (self.d as f64).sqrt();
         let mut buf = vec![0f64; self.mpad];
         for j in 0..n {
@@ -130,8 +142,18 @@ mod tests {
     }
 
     #[test]
-    fn d_clamped_to_padded_size() {
-        let s = SrhtSketch::new(3, 100, 1);
-        assert_eq!(s.output_dim(), 4); // padded to 4, can't sample more rows
+    #[should_panic(expected = "exceeds padded input size")]
+    fn oversized_d_rejected() {
+        // m=3 pads to 4; asking for 100 output rows is a caller bug and must
+        // fail loudly rather than silently shrink the sketch.
+        let _ = SrhtSketch::new(3, 100, 1);
+    }
+
+    #[test]
+    fn d_equal_to_padded_size_allowed() {
+        let s = SrhtSketch::new(3, 4, 1);
+        assert_eq!(s.output_dim(), 4);
+        let a = Mat::randn(3, 2, &mut Philox::seeded(9));
+        assert_eq!(s.apply(&a).shape(), (4, 2));
     }
 }

@@ -12,15 +12,31 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Error from the tracking allocator.
-#[derive(Debug, Clone, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum MemError {
-    #[error("memory budget exceeded: requested {requested} B with {live} B live (budget {budget} B)")]
     BudgetExceeded {
         requested: u64,
         live: u64,
         budget: u64,
     },
 }
+
+impl std::fmt::Display for MemError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MemError::BudgetExceeded {
+                requested,
+                live,
+                budget,
+            } => write!(
+                f,
+                "memory budget exceeded: requested {requested} B with {live} B live (budget {budget} B)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MemError {}
 
 /// Shared accounting state. Cloneable handle.
 #[derive(Clone, Debug)]

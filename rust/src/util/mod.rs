@@ -8,7 +8,17 @@ pub mod json;
 pub mod log;
 pub mod memtrack;
 pub mod prop;
+pub mod rex;
 pub mod threadpool;
+
+/// Poison-tolerant mutex lock: recover the guard when a panicking thread
+/// poisoned the lock. For counters/histograms that stay structurally valid
+/// regardless of where a panic landed, poisoning must not cascade into
+/// panics on every later read (worker panics are already surfaced via
+/// [`threadpool::ThreadPool::panic_count`]).
+pub fn lock_ignore_poison<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// Format a byte count human-readably (`1.5 GiB` style).
 pub fn human_bytes(bytes: u64) -> String {

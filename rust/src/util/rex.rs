@@ -1,0 +1,458 @@
+//! Minimal regular-expression engine (the `regex` crate is unavailable
+//! offline). Supports the subset [`crate::nn::LayerSelector`] needs for
+//! layer-path matching:
+//!
+//! - literals, `.` (any char), escaped metacharacters (`\.` `\(` …)
+//! - Perl classes `\d \D \w \W \s \S`
+//! - character classes `[a-z0-9_]`, negated `[^…]`, with ranges
+//! - anchors `^` and `$`
+//! - quantifiers `*` `+` `?` — greedy with backtracking, applying to a
+//!   single-character atom (literal, `.`, or class)
+//! - alternation `|` and (unquantified) groups `(…)`
+//!
+//! Unsupported constructs (quantified groups, `{n,m}` counts, captures,
+//! lookaround) are rejected at compile time with a clear error, never
+//! mis-matched silently.
+
+use std::fmt;
+
+/// Compile error for the mini regex engine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RexError {
+    pub msg: String,
+}
+
+impl fmt::Display for RexError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "regex error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for RexError {}
+
+#[derive(Debug, Clone, PartialEq)]
+enum ClassItem {
+    Single(char),
+    Range(char, char),
+    Digit(bool),
+    Word(bool),
+    Space(bool),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Node {
+    Char(char),
+    Any,
+    Class { neg: bool, items: Vec<ClassItem> },
+    Start,
+    End,
+    Group(Vec<Vec<Node>>),
+    Repeat {
+        atom: Box<Node>,
+        min: usize,
+        max: Option<usize>,
+    },
+}
+
+/// A compiled pattern. `is_match` searches for the pattern anywhere in the
+/// input (use `^`/`$` to anchor), like `regex::Regex::is_match`.
+#[derive(Debug, Clone)]
+pub struct Regex {
+    alts: Vec<Vec<Node>>,
+    pattern: String,
+}
+
+impl Regex {
+    pub fn new(pattern: &str) -> Result<Regex, RexError> {
+        let chars: Vec<char> = pattern.chars().collect();
+        let mut p = Parser {
+            chars: &chars,
+            pos: 0,
+        };
+        let alts = p.alternation()?;
+        if p.pos != chars.len() {
+            return Err(RexError {
+                msg: format!("unexpected ')' at offset {}", p.pos),
+            });
+        }
+        Ok(Regex {
+            alts,
+            pattern: pattern.to_string(),
+        })
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.pattern
+    }
+
+    /// Does the pattern match anywhere in `text`?
+    pub fn is_match(&self, text: &str) -> bool {
+        let chars: Vec<char> = text.chars().collect();
+        (0..=chars.len()).any(|start| {
+            self.alts
+                .iter()
+                .any(|seq| match_nodes(seq, 0, &chars, start, &Cont::Done))
+        })
+    }
+}
+
+struct Parser<'a> {
+    chars: &'a [char],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn err(&self, msg: impl Into<String>) -> RexError {
+        RexError { msg: msg.into() }
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn alternation(&mut self) -> Result<Vec<Vec<Node>>, RexError> {
+        let mut alts = Vec::new();
+        loop {
+            alts.push(self.sequence()?);
+            if self.peek() == Some('|') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        Ok(alts)
+    }
+
+    fn sequence(&mut self) -> Result<Vec<Node>, RexError> {
+        let mut seq = Vec::new();
+        while let Some(c) = self.peek() {
+            if c == '|' || c == ')' {
+                break;
+            }
+            let node = self.atom()?;
+            match self.peek() {
+                Some(q @ ('*' | '+' | '?')) => {
+                    self.pos += 1;
+                    let quantifiable = matches!(
+                        node,
+                        Node::Char(_) | Node::Any | Node::Class { .. }
+                    );
+                    if !quantifiable {
+                        return Err(self.err(format!(
+                            "'{q}' may only follow a single-character atom (got {node:?})"
+                        )));
+                    }
+                    let (min, max) = match q {
+                        '*' => (0, None),
+                        '+' => (1, None),
+                        _ => (0, Some(1)),
+                    };
+                    seq.push(Node::Repeat {
+                        atom: Box::new(node),
+                        min,
+                        max,
+                    });
+                }
+                Some('{') => return Err(self.err("{n,m} quantifiers are not supported")),
+                _ => seq.push(node),
+            }
+        }
+        Ok(seq)
+    }
+
+    fn atom(&mut self) -> Result<Node, RexError> {
+        let c = self.bump().ok_or_else(|| self.err("unexpected end"))?;
+        match c {
+            '^' => Ok(Node::Start),
+            '$' => Ok(Node::End),
+            '.' => Ok(Node::Any),
+            '(' => {
+                let alts = self.alternation()?;
+                if self.bump() != Some(')') {
+                    return Err(self.err("unclosed group"));
+                }
+                Ok(Node::Group(alts))
+            }
+            '[' => self.class(),
+            '\\' => self.escape(),
+            '*' | '+' | '?' => Err(self.err(format!("dangling quantifier '{c}'"))),
+            c => Ok(Node::Char(c)),
+        }
+    }
+
+    fn escape(&mut self) -> Result<Node, RexError> {
+        let c = self
+            .bump()
+            .ok_or_else(|| self.err("trailing backslash"))?;
+        let perl = |item: ClassItem| Node::Class {
+            neg: false,
+            items: vec![item],
+        };
+        match c {
+            'd' => Ok(perl(ClassItem::Digit(false))),
+            'D' => Ok(perl(ClassItem::Digit(true))),
+            'w' => Ok(perl(ClassItem::Word(false))),
+            'W' => Ok(perl(ClassItem::Word(true))),
+            's' => Ok(perl(ClassItem::Space(false))),
+            'S' => Ok(perl(ClassItem::Space(true))),
+            'n' => Ok(Node::Char('\n')),
+            't' => Ok(Node::Char('\t')),
+            'r' => Ok(Node::Char('\r')),
+            // Escaped metacharacters and punctuation match literally.
+            c if !c.is_alphanumeric() => Ok(Node::Char(c)),
+            c => Err(self.err(format!("unsupported escape '\\{c}'"))),
+        }
+    }
+
+    fn class(&mut self) -> Result<Node, RexError> {
+        let neg = if self.peek() == Some('^') {
+            self.pos += 1;
+            true
+        } else {
+            false
+        };
+        let mut items = Vec::new();
+        loop {
+            let c = self
+                .bump()
+                .ok_or_else(|| self.err("unclosed character class"))?;
+            match c {
+                ']' => {
+                    // `]` as the very first item would be a literal in POSIX;
+                    // keep it simple and reject the empty class instead.
+                    if items.is_empty() {
+                        return Err(self.err("empty character class"));
+                    }
+                    break;
+                }
+                '\\' => {
+                    let e = self
+                        .bump()
+                        .ok_or_else(|| self.err("trailing backslash in class"))?;
+                    let item = match e {
+                        'd' => ClassItem::Digit(false),
+                        'D' => ClassItem::Digit(true),
+                        'w' => ClassItem::Word(false),
+                        'W' => ClassItem::Word(true),
+                        's' => ClassItem::Space(false),
+                        'S' => ClassItem::Space(true),
+                        'n' => ClassItem::Single('\n'),
+                        't' => ClassItem::Single('\t'),
+                        'r' => ClassItem::Single('\r'),
+                        e if !e.is_alphanumeric() => ClassItem::Single(e),
+                        e => return Err(self.err(format!("unsupported escape '\\{e}' in class"))),
+                    };
+                    items.push(item);
+                }
+                lo => {
+                    // Possible range `a-z` (a trailing `-` is a literal).
+                    if self.peek() == Some('-')
+                        && self.chars.get(self.pos + 1).is_some_and(|&c| c != ']')
+                    {
+                        self.pos += 1; // consume '-'
+                        let hi = self.bump().unwrap();
+                        if hi == '\\' {
+                            // `[0-\d]` and friends: reject rather than treat
+                            // the backslash as a literal bound.
+                            return Err(
+                                self.err("escape sequences cannot bound a class range")
+                            );
+                        }
+                        if hi < lo {
+                            return Err(self.err(format!("invalid range {lo}-{hi}")));
+                        }
+                        items.push(ClassItem::Range(lo, hi));
+                    } else {
+                        items.push(ClassItem::Single(lo));
+                    }
+                }
+            }
+        }
+        Ok(Node::Class { neg, items })
+    }
+}
+
+fn class_item_matches(item: &ClassItem, c: char) -> bool {
+    match item {
+        ClassItem::Single(x) => c == *x,
+        ClassItem::Range(lo, hi) => (*lo..=*hi).contains(&c),
+        ClassItem::Digit(neg) => c.is_ascii_digit() != *neg,
+        ClassItem::Word(neg) => (c.is_alphanumeric() || c == '_') != *neg,
+        ClassItem::Space(neg) => c.is_whitespace() != *neg,
+    }
+}
+
+fn atom_matches(node: &Node, c: char) -> bool {
+    match node {
+        Node::Char(x) => c == *x,
+        Node::Any => true,
+        Node::Class { neg, items } => items.iter().any(|i| class_item_matches(i, c)) != *neg,
+        _ => false,
+    }
+}
+
+/// Continuation stack for backtracking through groups.
+enum Cont<'a> {
+    Done,
+    Nodes {
+        nodes: &'a [Node],
+        i: usize,
+        next: &'a Cont<'a>,
+    },
+}
+
+fn run_cont(cont: &Cont, text: &[char], pos: usize) -> bool {
+    match cont {
+        Cont::Done => true,
+        Cont::Nodes { nodes, i, next } => match_nodes(nodes, *i, text, pos, next),
+    }
+}
+
+fn match_nodes(nodes: &[Node], i: usize, text: &[char], pos: usize, cont: &Cont) -> bool {
+    let Some(node) = nodes.get(i) else {
+        return run_cont(cont, text, pos);
+    };
+    match node {
+        Node::Char(_) | Node::Any | Node::Class { .. } => {
+            pos < text.len()
+                && atom_matches(node, text[pos])
+                && match_nodes(nodes, i + 1, text, pos + 1, cont)
+        }
+        Node::Start => pos == 0 && match_nodes(nodes, i + 1, text, pos, cont),
+        Node::End => pos == text.len() && match_nodes(nodes, i + 1, text, pos, cont),
+        Node::Group(alts) => {
+            let after = Cont::Nodes {
+                nodes,
+                i: i + 1,
+                next: cont,
+            };
+            alts.iter()
+                .any(|alt| match_nodes(alt, 0, text, pos, &after))
+        }
+        Node::Repeat { atom, min, max } => {
+            // Greedy: consume as many as possible, then backtrack to `min`.
+            let limit = max.unwrap_or(usize::MAX);
+            let mut count = 0usize;
+            while count < limit
+                && pos + count < text.len()
+                && atom_matches(atom, text[pos + count])
+            {
+                count += 1;
+            }
+            if count < *min {
+                return false;
+            }
+            let mut c = count;
+            loop {
+                if match_nodes(nodes, i + 1, text, pos + c, cont) {
+                    return true;
+                }
+                if c == *min {
+                    return false;
+                }
+                c -= 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(pat: &str, text: &str) -> bool {
+        Regex::new(pat).unwrap().is_match(text)
+    }
+
+    #[test]
+    fn literals_and_search_semantics() {
+        assert!(m("fc", "encoder.fc1"));
+        assert!(m("fc1", "encoder.fc1"));
+        assert!(!m("fc2", "encoder.fc1"));
+    }
+
+    #[test]
+    fn anchors() {
+        assert!(m("^encoder", "encoder.fc1"));
+        assert!(!m("^fc1", "encoder.fc1"));
+        assert!(m("fc1$", "encoder.fc1"));
+        assert!(!m("encoder$", "encoder.fc1"));
+        assert!(m("^abc$", "abc"));
+        assert!(!m("^abc$", "xabc"));
+    }
+
+    #[test]
+    fn perl_classes_and_quantifiers() {
+        assert!(m(r"fc\d$", "encoder.fc1"));
+        assert!(!m(r"fc\d$", "encoder.fc"));
+        assert!(m(r"layer\d+\.fc", "encoder.layer12.fc"));
+        assert!(!m(r"layer\d+\.fc", "encoder.layer.fc"));
+        assert!(m(r"^encoder\.layer\d+\.fc$", "encoder.layer0.fc"));
+        assert!(!m(r"^encoder\.layer\d+\.fc$", "encoder.layer0.fc.bias"));
+        assert!(m(r"\w+", "abc_123"));
+        assert!(m(r"a\s?b", "ab"));
+        assert!(m(r"a\s?b", "a b"));
+        assert!(m(r"ab*c", "ac"));
+        assert!(m(r"ab*c", "abbbc"));
+    }
+
+    #[test]
+    fn escaped_dot_vs_any() {
+        assert!(m(r"a\.b", "a.b"));
+        assert!(!m(r"a\.b", "axb"));
+        assert!(m("a.b", "axb"));
+    }
+
+    #[test]
+    fn alternation_groups() {
+        let re = Regex::new(r"^encoder\.(conv|attn)$").unwrap();
+        assert!(re.is_match("encoder.conv"));
+        assert!(re.is_match("encoder.attn"));
+        assert!(!re.is_match("encoder.fc1"));
+        assert!(!re.is_match("encoder.convX"));
+        assert!(m("(a|b|c)x", "bx"));
+        assert!(!m("(a|b|c)x", "dx"));
+    }
+
+    #[test]
+    fn char_classes() {
+        assert!(m("[a-z]+[0-9]$", "fc1"));
+        assert!(m("[^0-9]$", "fcx"));
+        assert!(!m("^[^0-9]+$", "fc1"));
+        assert!(m(r"[\d_-]+$", "12_-3"));
+    }
+
+    #[test]
+    fn backtracking_repeat() {
+        // Greedy + must give back characters for the suffix to match.
+        assert!(m(r"^a+ab$", "aaab"));
+        assert!(m(r"^.*fc$", "encoder.fc"));
+        assert!(m(r"^\d*1$", "11"));
+    }
+
+    #[test]
+    fn compile_errors() {
+        assert!(Regex::new("(ab)+").is_err(), "quantified group unsupported");
+        assert!(Regex::new("a{2,3}").is_err());
+        assert!(Regex::new("[abc").is_err());
+        assert!(Regex::new("(ab").is_err());
+        assert!(Regex::new("*a").is_err());
+        assert!(Regex::new(r"\q").is_err());
+        assert!(Regex::new("a)b").is_err());
+        assert!(Regex::new(r"[0-\d]").is_err(), "escape as range bound");
+    }
+
+    #[test]
+    fn empty_pattern_matches_everything() {
+        assert!(m("", ""));
+        assert!(m("", "anything"));
+    }
+}

@@ -90,7 +90,10 @@ impl ThreadPool {
         drop(guard);
     }
 
-    /// Number of jobs that panicked since pool creation.
+    /// Number of jobs that panicked since pool creation. Worker panics never
+    /// kill the pool or poison caller-side locks — they are caught, counted
+    /// here, and (for `parallel_for`) re-surfaced on the *calling* thread
+    /// once all workers have finished.
     pub fn panic_count(&self) -> usize {
         self.shared.panics.load(Ordering::SeqCst)
     }
@@ -99,29 +102,74 @@ impl ThreadPool {
     /// `f` must be `Sync` since multiple workers call it concurrently.
     /// (Scoped threads rather than the shared queue: jobs may borrow `f`
     /// and local data, which `execute`'s `'static` bound cannot express.)
+    ///
+    /// Panics in `f` are caught on the worker, counted in the pool's panic
+    /// counter, and re-raised as a single panic on the calling thread after
+    /// every index has been attempted — so sibling work completes, no worker
+    /// dies mid-queue, and no mutex held by the caller is poisoned from a
+    /// foreign thread.
     pub fn parallel_for<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
         if n == 0 {
             return;
         }
+        // Keep the first panic's payload so the re-raised panic names the
+        // actual cause, not just a count.
+        let first_cause: Mutex<Option<String>> = Mutex::new(None);
+        let run_caught = |i: usize| -> bool {
+            match catch_unwind(AssertUnwindSafe(|| f(i))) {
+                Ok(()) => false,
+                Err(payload) => {
+                    let msg = payload
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "<non-string panic>".to_string());
+                    let mut slot = first_cause
+                        .lock()
+                        .unwrap_or_else(std::sync::PoisonError::into_inner);
+                    slot.get_or_insert(msg);
+                    true
+                }
+            }
+        };
         let workers = self.num_workers().min(n);
+        let mut new_panics = 0usize;
         if workers <= 1 {
             for i in 0..n {
-                f(i);
+                if run_caught(i) {
+                    new_panics += 1;
+                }
             }
-            return;
+        } else {
+            let next = AtomicUsize::new(0);
+            let panicked = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    scope.spawn(|| loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        if run_caught(i) {
+                            panicked.fetch_add(1, Ordering::SeqCst);
+                        }
+                    });
+                }
+            });
+            new_panics = panicked.load(Ordering::SeqCst);
         }
-        let next = AtomicUsize::new(0);
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    f(i);
-                });
-            }
-        });
+        if new_panics > 0 {
+            let total = self.shared.panics.fetch_add(new_panics, Ordering::SeqCst) + new_panics;
+            let cause = first_cause
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .take()
+                .unwrap_or_default();
+            panic!(
+                "parallel_for: {new_panics} of {n} jobs panicked \
+                 (pool panic_count now {total}); first cause: {cause}"
+            );
+        }
     }
 }
 
@@ -208,5 +256,34 @@ mod tests {
     fn parallel_for_zero_items() {
         let pool = ThreadPool::new(2);
         pool.parallel_for(0, |_| unreachable!());
+    }
+
+    #[test]
+    fn parallel_for_panic_surfaces_on_caller_with_count() {
+        let pool = ThreadPool::new(4);
+        let done = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.parallel_for(100, |i| {
+                if i == 13 || i == 77 {
+                    panic!("job {i} failed");
+                }
+                done.fetch_add(1, Ordering::SeqCst);
+            });
+        }));
+        let err = result.expect_err("caller must observe the failure");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("2 of 100 jobs panicked"), "message: {msg}");
+        assert!(msg.contains("failed"), "first cause missing: {msg}");
+        assert_eq!(pool.panic_count(), 2);
+        // Sibling jobs were not abandoned when one panicked.
+        assert_eq!(done.load(Ordering::SeqCst), 98);
+        // The pool is still usable afterwards.
+        pool.parallel_for(10, |_| {
+            done.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(done.load(Ordering::SeqCst), 108);
     }
 }

@@ -1,0 +1,134 @@
+//! Property tests over the public API: sketch-operator unbiasedness
+//! (`E‖Sx‖² ≈ ‖x‖²` averaged over seeds) and GEMM-variant cross-checks
+//! against a naive triple-loop oracle, including the small-matrix
+//! (`m < 8`) dispatch path of `matmul`.
+
+use panther::linalg::{matmul, matmul_nt, matmul_tn, rel_error, Mat};
+use panther::sketch::{CountSketch, GaussianSketch, Sketch, SparseSignSketch, SrhtSketch};
+use panther::util::prop::prop_check;
+
+/// Naive `O(mnk)` triple loop with f64 accumulation — the oracle.
+fn matmul_oracle(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows());
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    for i in 0..a.rows() {
+        for j in 0..b.cols() {
+            let mut acc = 0f64;
+            for p in 0..a.cols() {
+                acc += a.get(i, p) as f64 * b.get(p, j) as f64;
+            }
+            c.set(i, j, acc as f32);
+        }
+    }
+    c
+}
+
+#[test]
+fn property_gemm_variants_match_oracle_random_shapes() {
+    prop_check("gemm-oracle", 24, |g| {
+        let m = 1 + g.usize(0..48);
+        let k = 1 + g.usize(0..48);
+        let n = 1 + g.usize(0..48);
+        let a = Mat::randn(m, k, g.rng());
+        let b = Mat::randn(k, n, g.rng());
+        let oracle = matmul_oracle(&a, &b);
+        assert!(
+            rel_error(&matmul(&a, &b), &oracle) < 1e-5,
+            "matmul ({m},{k},{n})"
+        );
+        assert!(
+            rel_error(&matmul_tn(&a.transpose(), &b), &oracle) < 1e-5,
+            "matmul_tn ({m},{k},{n})"
+        );
+        assert!(
+            rel_error(&matmul_nt(&a, &b.transpose()), &oracle) < 1e-5,
+            "matmul_nt ({m},{k},{n})"
+        );
+    });
+}
+
+#[test]
+fn property_gemm_small_row_path_matches_oracle() {
+    // `matmul` dispatches m < 8 to the direct blocked kernel rather than the
+    // transpose+NT fast path — cover exactly that branch, with k·n large
+    // enough that only the row count keeps it off the fast path.
+    prop_check("gemm-small-m", 16, |g| {
+        let m = 1 + g.usize(0..7); // m ∈ [1, 7]
+        let k = 32 + g.usize(0..64);
+        let n = 32 + g.usize(0..64);
+        let a = Mat::randn(m, k, g.rng());
+        let b = Mat::randn(k, n, g.rng());
+        assert!(
+            rel_error(&matmul(&a, &b), &matmul_oracle(&a, &b)) < 1e-5,
+            "small-m matmul ({m},{k},{n})"
+        );
+    });
+}
+
+/// Squared column norm of column `j`.
+fn col_norm2(a: &Mat, j: usize) -> f64 {
+    (0..a.rows()).map(|i| (a.get(i, j) as f64).powi(2)).sum()
+}
+
+#[test]
+fn property_sketches_preserve_norms_in_expectation() {
+    // For each operator family: averaged over independent seeds,
+    // E‖Sx‖² / ‖x‖² → 1. Concentration at these trial counts keeps the
+    // ratio within a generous band; determinism in the property seed keeps
+    // the test stable run-to-run.
+    prop_check("sketch-unbiasedness", 3, |g| {
+        let m = 24 + g.usize(0..40);
+        let d = 12 + g.usize(0..8);
+        let x = Mat::randn(m, 1, g.rng());
+        let orig = col_norm2(&x, 0);
+        let trials = 64u64;
+        for family in 0..4usize {
+            let mut acc = 0f64;
+            for t in 0..trials {
+                let seed = 7_000 + family as u64 * 101 + t;
+                let op: Box<dyn Sketch> = match family {
+                    0 => Box::new(GaussianSketch::new(m, d, seed)),
+                    1 => Box::new(SparseSignSketch::new(m, d, 6, seed)),
+                    2 => Box::new(CountSketch::new(m, d, seed)),
+                    _ => Box::new(SrhtSketch::new(m, d, seed)),
+                };
+                assert_eq!(op.input_dim(), m);
+                assert_eq!(op.output_dim(), d);
+                acc += col_norm2(&op.apply(&x), 0);
+            }
+            let ratio = acc / trials as f64 / orig.max(1e-30);
+            assert!(
+                (0.6..1.4).contains(&ratio),
+                "family {family}: E‖Sx‖²/‖x‖² = {ratio} (m={m}, d={d})"
+            );
+        }
+    });
+}
+
+#[test]
+fn property_sketch_linearity() {
+    // Sketches are linear maps: S(αx + y) = αSx + Sy for every operator.
+    prop_check("sketch-linearity", 6, |g| {
+        let m = 16 + g.usize(0..32);
+        let d = 8;
+        let alpha = g.f32(-2.0, 2.0);
+        let x = Mat::randn(m, 2, g.rng());
+        let y = Mat::randn(m, 2, g.rng());
+        let ops: Vec<Box<dyn Sketch>> = vec![
+            Box::new(GaussianSketch::new(m, d, 3)),
+            Box::new(SparseSignSketch::new(m, d, 4, 3)),
+            Box::new(CountSketch::new(m, d, 3)),
+            Box::new(SrhtSketch::new(m, d, 3)),
+        ];
+        for op in &ops {
+            let lhs = op.apply(&x.scale(alpha).add(&y));
+            let rhs = op.apply(&x).scale(alpha).add(&op.apply(&y));
+            assert!(
+                rel_error(&lhs, &rhs) < 1e-3,
+                "operator {}x{} not linear",
+                op.output_dim(),
+                op.input_dim()
+            );
+        }
+    });
+}
