@@ -10,9 +10,9 @@
 
 use panther::linalg::Mat;
 use panther::nn::attention::{AttnWeights, KernelKind, MultiHeadAttention, RandMultiHeadAttention};
+use panther::nn::{ForwardCtx, Module};
 use panther::rng::Philox;
 use panther::util::bench::Table;
-use panther::util::memtrack::MemTracker;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -30,19 +30,20 @@ fn main() -> anyhow::Result<()> {
     let mut table = Table::new(&["seq len", "dense peak", "performer peak", "dense", "performer"]);
     for n in [256usize, 512, 1024, 2048, 4096, 8192] {
         let x = Mat::randn(n, d, &mut rng);
-        let run = |f: &dyn Fn(&MemTracker) -> Result<Mat, panther::util::memtrack::MemError>|
-         -> (String, String) {
-            let mem = MemTracker::with_budget(budget);
-            match f(&mem) {
+        // Both variants answer through the unified Module::forward — the
+        // budgeted ForwardCtx is what turns a would-be OOM into an "x".
+        let run = |f: &dyn Fn(&ForwardCtx) -> panther::Result<Mat>| -> (String, String) {
+            let ctx = ForwardCtx::with_budget(budget);
+            match f(&ctx) {
                 Ok(_) => (
-                    panther::util::human_bytes(mem.peak_bytes()),
+                    panther::util::human_bytes(ctx.mem().peak_bytes()),
                     "ok".to_string(),
                 ),
                 Err(_) => ("-".to_string(), "x (OOM)".to_string()),
             }
         };
-        let (dense_peak, dense_status) = run(&|mem| dense.forward(&x, mem));
-        let (perf_peak, perf_status) = run(&|mem| perf.forward(&x, mem));
+        let (dense_peak, dense_status) = run(&|ctx| dense.forward(&x, ctx));
+        let (perf_peak, perf_status) = run(&|ctx| perf.forward(&x, ctx));
         table.row(&[
             n.to_string(),
             dense_peak,

@@ -1,13 +1,17 @@
-//! Quickstart: the paper's Listing 1 — drop-in replacement of a dense
-//! linear layer with `SKLinear`, plus the cost model that explains when it
-//! wins.
+//! Quickstart: the paper's Listing 1 — drop-in replacement of dense layers
+//! with their sketched counterparts — expressed through the unified
+//! `Module` + `SketchPlan` API, plus the cost model that explains when
+//! sketching wins.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
 use panther::linalg::{rel_error, Mat};
-use panther::nn::{linear_cost, sketch_beats_dense, Linear, SKLinear};
+use panther::nn::{
+    linear_cost, sketch_beats_dense, ForwardCtx, LayerSelector, Linear, Model, Module, SKLinear,
+    SketchPlan,
+};
 use panther::rng::Philox;
 use panther::util::bench::{Bencher, Table};
 
@@ -15,24 +19,40 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Philox::seeded(0);
 
     // --- Listing 1: StandardModel vs PantherModel -------------------------
-    // Standard PyTorch model:    nn.Linear(2048, 2048)
+    // Standard PyTorch model:    nn.Linear(2048, 2048) in an FFN stack
     // Panther-optimized model:   pr.nn.SKLinear(2048, 2048, num_terms=1,
     //                                           low_rank=16)
+    // Here the swap is a SketchPlan applied to the registered model — the
+    // call-sites don't change because every layer answers Module::forward.
     let d = 2048;
     println!("== drop-in replacement (Listing 1) ==");
-    let dense = Linear::random(d, d, &mut rng);
-    let sk = SKLinear::from_dense(&dense, /*num_terms=*/ 1, /*low_rank=*/ 16, &mut rng);
+    let mut model = Model::new();
+    model.add("encoder.ffn.fc1", Linear::random(d, d, &mut rng))?;
+    model.add("encoder.ffn.fc2", Linear::random(d, d, &mut rng))?;
+    model.add("head.out", Linear::random(d, 10, &mut rng))?;
+    let dense_params = model.total_params();
+
+    // Reference output before compression (the Module API is the same for
+    // dense and sketched layers).
+    let x = Mat::randn(32, d, &mut rng);
+    let ctx = ForwardCtx::new().batch_hint(32);
+    let y_dense = model.get("encoder.ffn.fc1").unwrap().forward(&x, &ctx)?;
+
+    // Compress every FFN linear, leave the head dense.
+    let report = SketchPlan::new()
+        .select(LayerSelector::by_regex(r"ffn\.fc\d")?)
+        .with(/*num_terms=*/ 1, /*low_rank=*/ 16)
+        .seed(0)
+        .apply(&mut model)?;
+    print!("{report}");
     println!(
-        "dense params: {:>10}   sketched params: {:>9}  ({:.1}% of dense)",
-        dense.param_count(),
-        sk.param_count(),
-        sk.compression_ratio() * 100.0
+        "model: {dense_params} -> {} params; head.out stays {}",
+        model.total_params(),
+        model.get("head.out").unwrap().type_name()
     );
 
     // Same call-site, same shapes:
-    let x = Mat::randn(32, d, &mut rng);
-    let y_dense = dense.forward(&x);
-    let y_sk = sk.forward(&x);
+    let y_sk = model.get("encoder.ffn.fc1").unwrap().forward(&x, &ctx)?;
     assert_eq!(y_dense.shape(), y_sk.shape());
     println!(
         "output shapes match: {:?}; sketch relative deviation {:.3} (unbiased, variance ∝ 1/(l·k))",
@@ -42,6 +62,14 @@ fn main() -> anyhow::Result<()> {
 
     // --- Speed: measured, not just modeled --------------------------------
     println!("\n== measured forward latency (B=32, d=2048) ==");
+    let dense = Linear::random(d, d, &mut rng);
+    let sk = SKLinear::from_dense(&dense, /*num_terms=*/ 1, /*low_rank=*/ 16, &mut rng);
+    println!(
+        "dense params: {:>10}   sketched params: {:>9}  ({:.1}% of dense)",
+        dense.param_count(),
+        sk.param_count(),
+        sk.compression_ratio() * 100.0
+    );
     let bench = Bencher::quick();
     let t_dense = bench.run("dense", || dense.forward(&x));
     let t_sk = bench.run("sketched l=1 k=16", || sk.forward(&x));

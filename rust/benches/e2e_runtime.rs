@@ -84,6 +84,32 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     println!("{}", table.render());
+
+    // --- checkpoint serialization --------------------------------------------
+    // Chunked bulk IO (64 KiB little-endian chunks) rather than one 4-byte
+    // write per f32 — size and seconds reported so regressions on this
+    // path stay visible.
+    {
+        let state = ModelState::init(&mut rt, "bert_dense", 0.0)?;
+        let path = std::env::temp_dir().join("panther_e2e_bench.ckpt");
+        let t0 = std::time::Instant::now();
+        panther::train::checkpoint::save(&state, &path)?;
+        let t_save = t0.elapsed();
+        let bytes = std::fs::metadata(&path)?.len();
+        let t1 = std::time::Instant::now();
+        let restored = panther::train::checkpoint::load(&path)?;
+        let t_load = t1.elapsed();
+        println!("# Checkpoint (v2, name-keyed, bulk tensor IO)\n");
+        println!(
+            "{} written in {:.2?} ({:.0} MB/s), loaded in {:.2?}; {} named tensors\n",
+            panther::util::human_bytes(bytes),
+            t_save,
+            bytes as f64 / 1e6 / t_save.as_secs_f64().max(1e-9),
+            t_load,
+            restored.names.len()
+        );
+        std::fs::remove_file(&path).ok();
+    }
     drop(rt);
 
     // --- coordinator round-trip overhead -------------------------------------
@@ -117,7 +143,7 @@ fn main() -> anyhow::Result<()> {
     {
         println!("# Dynamic batcher: single-sequence MLM scoring throughput\n");
         let mut rt2 = Runtime::open(&artifacts)?;
-        let params = panther::train::ModelState::init(&mut rt2, "bert_dense", 0.0)?.params;
+        let state = panther::train::ModelState::init(&mut rt2, "bert_dense", 0.0)?;
         drop(rt2);
         fn mk_req(seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
             let seq = 64usize;
@@ -134,10 +160,9 @@ fn main() -> anyhow::Result<()> {
         }
         let n_requests = 64usize;
         // Batched path.
-        let batcher = panther::coordinator::DynamicBatcher::start(
+        let batcher = panther::coordinator::DynamicBatcher::start_from_state(
             server.handle(),
-            "bert_dense",
-            params,
+            &state,
             std::time::Duration::from_millis(20),
         )?;
         let t0 = std::time::Instant::now();

@@ -16,9 +16,9 @@ use panther::nn::attention::{
     AttnWeights, KernelKind, MultiHeadAttention, RandMultiHeadAttention,
 };
 use panther::nn::cost::{dense_attention_mem, performer_attention_mem};
+use panther::nn::{ForwardCtx, Module};
 use panther::rng::Philox;
 use panther::util::bench::Table;
-use panther::util::memtrack::MemTracker;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
@@ -47,22 +47,22 @@ fn main() {
         let dense = MultiHeadAttention::new(weights.clone());
         for &n in seqs {
             let x = Mat::randn(n, d, &mut rng);
-            let mem_d = MemTracker::with_budget(budget);
-            let dense_res = dense.forward(&x, &mem_d);
+            let ctx_d = ForwardCtx::with_budget(budget);
+            let dense_res = dense.forward(&x, &ctx_d);
             let (dense_peak, dense_status) = match dense_res {
                 Ok(_) => (
-                    panther::util::human_bytes(mem_d.peak_bytes()),
+                    panther::util::human_bytes(ctx_d.mem().peak_bytes()),
                     "ok".to_string(),
                 ),
                 Err(_) => ("-".into(), "x".to_string()),
             };
             for &m in features {
                 let perf = RandMultiHeadAttention::new(weights.clone(), m, KernelKind::Softmax, 3);
-                let mem_p = MemTracker::with_budget(budget);
-                let perf_res = perf.forward(&x, &mem_p);
+                let ctx_p = ForwardCtx::with_budget(budget);
+                let perf_res = perf.forward(&x, &ctx_p);
                 let (perf_peak, perf_status) = match perf_res {
                     Ok(_) => (
-                        panther::util::human_bytes(mem_p.peak_bytes()),
+                        panther::util::human_bytes(ctx_p.mem().peak_bytes()),
                         "ok".to_string(),
                     ),
                     Err(_) => ("-".into(), "x".to_string()),

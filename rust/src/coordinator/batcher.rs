@@ -165,6 +165,51 @@ impl DynamicBatcher {
         })
     }
 
+    /// Start a batcher straight from a trained (possibly
+    /// checkpoint-restored) [`crate::train::ModelState`]. States with real
+    /// names (checkpoint v2) are matched to the manifest's `param_names`
+    /// *by name* — they stay valid even if the manifest reorders
+    /// parameters, and any unresolvable name is an error rather than a
+    /// guess. Only genuinely positional states (no names, or the
+    /// synthesized `param.{i}` names a legacy v1 restore carries) fall
+    /// back to positional order, arity-checked by
+    /// [`DynamicBatcher::start`].
+    pub fn start_from_state(
+        runtime: RuntimeHandle,
+        state: &crate::train::ModelState,
+        max_wait: Duration,
+    ) -> Result<Self> {
+        let spec = runtime
+            .manifest()
+            .model(&state.model)
+            .with_context(|| format!("unknown model {}", state.model))?
+            .clone();
+        let positional = state.names.is_empty()
+            || state
+                .names
+                .iter()
+                .enumerate()
+                .all(|(i, n)| n == &format!("param.{i}"));
+        let params = if positional {
+            state.params.clone()
+        } else {
+            spec.param_names
+                .iter()
+                .map(|n| {
+                    state.param_named(n).cloned().ok_or_else(|| {
+                        anyhow!(
+                            "state for {} has no parameter named {n} — manifest and \
+                             checkpoint disagree",
+                            state.model
+                        )
+                    })
+                })
+                .collect::<Result<Vec<HostTensor>>>()?
+        };
+        let model = state.model.clone();
+        Self::start(runtime, &model, params, max_wait)
+    }
+
     pub fn handle(&self) -> BatcherHandle {
         self.handle.clone()
     }
@@ -255,7 +300,7 @@ mod tests {
     use crate::coordinator::RuntimeServer;
     use crate::train::ModelState;
 
-    fn setup() -> Option<(RuntimeServer, Vec<HostTensor>)> {
+    fn setup() -> Option<(RuntimeServer, ModelState)> {
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !dir.join("manifest.json").exists() {
             eprintln!("skipping: artifacts/ not built");
@@ -275,7 +320,7 @@ mod tests {
         let state = ModelState::init(&mut rt, "bert_dense", 0.0).unwrap();
         drop(rt);
         let server = RuntimeServer::start(dir).unwrap();
-        Some((server, state.params))
+        Some((server, state))
     }
 
     fn fake_request(seq: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
@@ -294,16 +339,13 @@ mod tests {
 
     #[test]
     fn concurrent_requests_all_answered() {
-        let Some((server, params)) = setup() else {
+        let Some((server, state)) = setup() else {
             return;
         };
-        let batcher = DynamicBatcher::start(
-            server.handle(),
-            "bert_dense",
-            params,
-            Duration::from_millis(30),
-        )
-        .unwrap();
+        // Exercise the name-keyed path: start straight from the state.
+        let batcher =
+            DynamicBatcher::start_from_state(server.handle(), &state, Duration::from_millis(30))
+                .unwrap();
         let seq = 64;
         let threads: Vec<_> = (0..10)
             .map(|i| {
@@ -325,13 +367,13 @@ mod tests {
 
     #[test]
     fn results_independent_of_batch_composition() {
-        let Some((server, params)) = setup() else {
+        let Some((server, state)) = setup() else {
             return;
         };
         let batcher = DynamicBatcher::start(
             server.handle(),
             "bert_dense",
-            params,
+            state.params,
             Duration::from_millis(5),
         )
         .unwrap();
@@ -361,13 +403,13 @@ mod tests {
 
     #[test]
     fn wrong_length_rejected() {
-        let Some((server, params)) = setup() else {
+        let Some((server, state)) = setup() else {
             return;
         };
         let batcher = DynamicBatcher::start(
             server.handle(),
             "bert_dense",
-            params,
+            state.params,
             Duration::from_millis(5),
         )
         .unwrap();

@@ -34,22 +34,40 @@
 //!
 //! ## Quickstart
 //!
+//! Every layer implements the [`nn::Module`] trait, and compression is a
+//! [`nn::SketchPlan`] — the paper's Listing-1 "swap `nn.Linear` for
+//! `pr.nn.SKLinear`" without changing any call-sites:
+//!
 //! ```
-//! use panther::nn::{Linear, SKLinear};
 //! use panther::linalg::Mat;
+//! use panther::nn::{ForwardCtx, LayerSelector, Linear, Model, Module, SketchPlan};
 //! use panther::rng::Philox;
 //!
+//! # fn main() -> panther::Result<()> {
 //! let mut rng = Philox::seeded(0);
-//! // A dense layer and its sketched drop-in replacement.
-//! let dense = Linear::random(128, 128, &mut rng);
-//! let sk = SKLinear::from_dense(&dense, /*num_terms=*/ 1, /*low_rank=*/ 16, &mut rng);
-//! assert!(sk.param_count() < dense.param_count());
+//! let mut model = Model::new();
+//! model.add("ffn.fc1", Linear::random(128, 128, &mut rng))?;
+//! model.add("ffn.fc2", Linear::random(128, 128, &mut rng))?;
+//! let dense_params = model.total_params();
+//!
+//! // Forward through the unified Module API (dense, for reference).
+//! let x = Mat::randn(8, 128, &mut rng);
+//! let ctx = ForwardCtx::new();
+//! let y_dense = model.get("ffn.fc1").unwrap().forward(&x, &ctx)?;
+//!
+//! // Compress both FFN linears with rank-16 sketches of their weights.
+//! let report = SketchPlan::new()
+//!     .select(LayerSelector::by_regex(r"ffn\.fc\d")?)
+//!     .with(/*num_terms=*/ 1, /*low_rank=*/ 16)
+//!     .seed(0)
+//!     .apply(&mut model)?;
+//! assert_eq!(report.converted.len(), 2);
+//! assert!(model.total_params() < dense_params);
 //!
 //! // Same call-site, same shapes.
-//! let x = Mat::randn(8, 128, &mut rng);
-//! let y_dense = dense.forward(&x);
-//! let y_sk = sk.forward(&x);
+//! let y_sk = model.get("ffn.fc1").unwrap().forward(&x, &ctx)?;
 //! assert_eq!(y_dense.shape(), y_sk.shape());
+//! # Ok(()) }
 //! ```
 
 // Dense numeric kernels index heavily by design; the iterator rewrites

@@ -116,6 +116,15 @@ impl Mat {
         self.data
     }
 
+    /// Reshape in place to `rows × cols`, growing or shrinking the backing
+    /// storage. Existing contents are NOT preserved meaningfully — callers
+    /// (e.g. scratch-buffer reuse) must overwrite every element they read.
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
     /// Explicit transpose (cache-blocked).
     pub fn transpose(&self) -> Mat {
         const B: usize = 32;

@@ -9,9 +9,32 @@
 //! tensor exactly like `nn.MultiheadAttention` does, the Performer path
 //! only ever holds `n × m` feature blocks and the `m × d_h` running state.
 
+use super::module::{ForwardCtx, Module, ParamMut, ParamRef};
+use super::plan::Sketchable;
 use crate::linalg::{matmul, Mat};
 use crate::rng::{Philox, Rng};
 use crate::util::memtrack::{MemError, MemTracker};
+
+/// Named views of the shared Q/K/V/output projections (both attention
+/// variants expose identical parameter state — the Performer's random
+/// features are fixed, not trained, so they are deliberately absent).
+fn attn_params(w: &AttnWeights) -> Vec<(String, ParamRef<'_>)> {
+    vec![
+        ("wq".to_string(), ParamRef::Mat(&w.wq)),
+        ("wk".to_string(), ParamRef::Mat(&w.wk)),
+        ("wv".to_string(), ParamRef::Mat(&w.wv)),
+        ("wo".to_string(), ParamRef::Mat(&w.wo)),
+    ]
+}
+
+fn attn_params_mut(w: &mut AttnWeights) -> Vec<(String, ParamMut<'_>)> {
+    vec![
+        ("wq".to_string(), ParamMut::Mat(&mut w.wq)),
+        ("wk".to_string(), ParamMut::Mat(&mut w.wk)),
+        ("wv".to_string(), ParamMut::Mat(&mut w.wv)),
+        ("wo".to_string(), ParamMut::Mat(&mut w.wo)),
+    ]
+}
 
 /// Random-feature kernel for the Performer (the paper benchmarks both).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -53,7 +76,9 @@ impl AttnWeights {
     }
 }
 
-/// Exact softmax multi-head attention (the `nn.MultiheadAttention` baseline).
+/// Exact softmax multi-head attention (the `nn.MultiheadAttention`
+/// baseline). Forward runs through the unified [`Module`] API.
+#[derive(Clone)]
 pub struct MultiHeadAttention {
     pub weights: AttnWeights,
 }
@@ -65,7 +90,7 @@ impl MultiHeadAttention {
 
     /// Self-attention forward on `x: n × d`, tracking every temporary in
     /// `mem`. Returns `n × d` or a budget error (the Fig. 3 "x").
-    pub fn forward(&self, x: &Mat, mem: &MemTracker) -> Result<Mat, MemError> {
+    fn forward_with(&self, x: &Mat, mem: &MemTracker) -> Result<Mat, MemError> {
         let w = &self.weights;
         let n = x.rows();
         let d = w.embed_dim;
@@ -117,8 +142,36 @@ impl MultiHeadAttention {
     }
 }
 
+impl Module for MultiHeadAttention {
+    fn type_name(&self) -> &'static str {
+        "MultiheadAttention"
+    }
+
+    fn forward(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<Mat> {
+        Ok(self.forward_with(x, ctx.mem())?)
+    }
+
+    fn params(&self) -> Vec<(String, ParamRef<'_>)> {
+        attn_params(&self.weights)
+    }
+
+    fn params_mut(&mut self) -> Vec<(String, ParamMut<'_>)> {
+        attn_params_mut(&mut self.weights)
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Module> {
+        Box::new(self.clone())
+    }
+
+    fn as_sketchable(&self) -> Option<&dyn Sketchable> {
+        Some(self)
+    }
+}
+
 /// Performer-style random-feature attention — Panther's
-/// `RandMultiHeadAttention`.
+/// `RandMultiHeadAttention`. Forward runs through the unified [`Module`]
+/// API.
+#[derive(Clone)]
 pub struct RandMultiHeadAttention {
     pub weights: AttnWeights,
     pub num_features: usize,
@@ -192,7 +245,7 @@ impl RandMultiHeadAttention {
     /// Linear-attention forward: `out = φ(Q)·(φ(K)ᵀV) / (φ(Q)·φ(K)ᵀ1)`.
     /// Never materializes an n×n matrix — peak extra memory is
     /// `O(n·m + m·d_h)` per head.
-    pub fn forward(&self, x: &Mat, mem: &MemTracker) -> Result<Mat, MemError> {
+    fn forward_with(&self, x: &Mat, mem: &MemTracker) -> Result<Mat, MemError> {
         let w = &self.weights;
         let n = x.rows();
         let d = w.embed_dim;
@@ -266,6 +319,28 @@ impl RandMultiHeadAttention {
             z: vec![vec![0f32; m]; h],
             tokens_seen: 0,
         }
+    }
+}
+
+impl Module for RandMultiHeadAttention {
+    fn type_name(&self) -> &'static str {
+        "RandMultiheadAttention"
+    }
+
+    fn forward(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<Mat> {
+        Ok(self.forward_with(x, ctx.mem())?)
+    }
+
+    fn params(&self) -> Vec<(String, ParamRef<'_>)> {
+        attn_params(&self.weights)
+    }
+
+    fn params_mut(&mut self) -> Vec<(String, ParamMut<'_>)> {
+        attn_params_mut(&mut self.weights)
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Module> {
+        Box::new(self.clone())
     }
 }
 
@@ -368,11 +443,11 @@ mod tests {
         let w = AttnWeights::random(16, 4, &mut rng);
         let mha = MultiHeadAttention::new(w);
         let x = Mat::randn(12, 16, &mut rng);
-        let mem = MemTracker::unlimited();
-        let y = mha.forward(&x, &mem).unwrap();
+        let ctx = ForwardCtx::new();
+        let y = mha.forward(&x, &ctx).unwrap();
         assert_eq!(y.shape(), (12, 16));
-        assert!(mem.peak_bytes() > 0);
-        assert_eq!(mem.live_bytes(), 0, "all temporaries released");
+        assert!(ctx.mem().peak_bytes() > 0);
+        assert_eq!(ctx.mem().live_bytes(), 0, "all temporaries released");
     }
 
     #[test]
@@ -383,10 +458,10 @@ mod tests {
         let w = AttnWeights::random(8, 1, &mut rng);
         let x = Mat::randn(10, 8, &mut rng).scale(0.3); // small norms: RF approx is accurate
         let dense = MultiHeadAttention::new(w.clone());
-        let mem = MemTracker::unlimited();
-        let y_exact = dense.forward(&x, &mem).unwrap();
+        let ctx = ForwardCtx::new();
+        let y_exact = dense.forward(&x, &ctx).unwrap();
         let perf = RandMultiHeadAttention::new(w, 2048, KernelKind::Softmax, 5);
-        let y_rand = perf.forward(&x, &mem).unwrap();
+        let y_rand = perf.forward(&x, &ctx).unwrap();
         let err = rel_error(&y_rand, &y_exact);
         assert!(err < 0.5, "performer deviates: rel {err}");
     }
@@ -397,17 +472,17 @@ mod tests {
         let w = AttnWeights::random(32, 4, &mut rng);
         let measure_dense = |n: usize| {
             let x = Mat::randn(n, 32, &mut Philox::seeded(1));
-            let mem = MemTracker::unlimited();
-            MultiHeadAttention::new(w.clone()).forward(&x, &mem).unwrap();
-            mem.peak_bytes()
+            let ctx = ForwardCtx::new();
+            MultiHeadAttention::new(w.clone()).forward(&x, &ctx).unwrap();
+            ctx.mem().peak_bytes()
         };
         let measure_perf = |n: usize| {
             let x = Mat::randn(n, 32, &mut Philox::seeded(1));
-            let mem = MemTracker::unlimited();
+            let ctx = ForwardCtx::new();
             RandMultiHeadAttention::new(w.clone(), 16, KernelKind::Softmax, 2)
-                .forward(&x, &mem)
+                .forward(&x, &ctx)
                 .unwrap();
-            mem.peak_bytes()
+            ctx.mem().peak_bytes()
         };
         // Dense grows ~4× when n doubles; performer ~2×.
         let (d1, d2) = (measure_dense(64), measure_dense(128));
@@ -427,12 +502,12 @@ mod tests {
         let n = 256;
         let x = Mat::randn(n, 32, &mut rng);
         let budget = 2 * 1024 * 1024; // 2 MiB
-        let mem_d = MemTracker::with_budget(budget);
-        let dense_res = MultiHeadAttention::new(w.clone()).forward(&x, &mem_d);
+        let ctx_d = ForwardCtx::with_budget(budget);
+        let dense_res = MultiHeadAttention::new(w.clone()).forward(&x, &ctx_d);
         assert!(dense_res.is_err(), "dense should exceed 2 MiB at n=256,h=8");
-        let mem_p = MemTracker::with_budget(budget);
+        let ctx_p = ForwardCtx::with_budget(budget);
         let perf_res =
-            RandMultiHeadAttention::new(w, 32, KernelKind::Softmax, 3).forward(&x, &mem_p);
+            RandMultiHeadAttention::new(w, 32, KernelKind::Softmax, 3).forward(&x, &ctx_p);
         assert!(perf_res.is_ok(), "performer must fit the same budget");
     }
 
@@ -511,9 +586,9 @@ mod tests {
         let mut rng = Philox::seeded(135);
         let w = AttnWeights::random(16, 2, &mut rng);
         let x = Mat::randn(20, 16, &mut rng);
-        let mem = MemTracker::unlimited();
+        let ctx = ForwardCtx::new();
         let y = RandMultiHeadAttention::new(w, 24, KernelKind::Relu, 7)
-            .forward(&x, &mem)
+            .forward(&x, &ctx)
             .unwrap();
         assert_eq!(y.shape(), (20, 16));
         assert!(y.data().iter().all(|v| v.is_finite()));

@@ -8,6 +8,8 @@
 //! Figure-2 experiment reduces to the same two-stage low-rank product with a
 //! patch-extraction preamble shared by both sides.
 
+use super::module::{ForwardCtx, Module, ParamMut, ParamRef};
+use super::plan::Sketchable;
 use crate::linalg::{matmul, Mat};
 use crate::rng::Rng;
 
@@ -35,13 +37,22 @@ impl ConvShape {
 /// Extract im2col patches from an input batch laid out `B × (C_in·H·W)`
 /// (channel-major rows). Output: `(B·H_out·W_out) × (C_in·kh·kw)`.
 pub fn im2col(x: &Mat, shape: &ConvShape) -> Mat {
+    let mut out = Mat::zeros(0, 0);
+    im2col_into(x, shape, &mut out);
+    out
+}
+
+/// [`im2col`] into a caller-provided matrix (resized in place), so repeated
+/// forwards through [`ForwardCtx::scratch_mat`] reuse one allocation for
+/// the largest conv temporary. Every element of `out` is overwritten.
+pub fn im2col_into(x: &Mat, shape: &ConvShape, out: &mut Mat) {
     let b = x.rows();
     let (c, h) = (shape.c_in, shape.image);
     assert_eq!(x.cols(), c * h * h, "input layout mismatch");
     let ho = shape.out_size();
     let k = shape.kernel;
     let pad = shape.padding as isize;
-    let mut out = Mat::zeros(b * ho * ho, shape.patch_dim());
+    out.resize(b * ho * ho, shape.patch_dim());
     for bi in 0..b {
         let img = x.row(bi);
         for oy in 0..ho {
@@ -66,7 +77,6 @@ pub fn im2col(x: &Mat, shape: &ConvShape) -> Mat {
             }
         }
     }
-    out
 }
 
 /// Dense convolution layer.
@@ -89,10 +99,6 @@ impl Conv2d {
         }
     }
 
-    pub fn param_count(&self) -> usize {
-        self.w_mat.len() + self.bias.len()
-    }
-
     /// Forward on `x: B × (C_in·H·W)` → `(B·H_out·W_out) × C_out`
     /// (callers reshape as needed; keeping the GEMM output layout avoids a
     /// transpose on the hot path).
@@ -110,6 +116,46 @@ impl Conv2d {
             }
         }
         y
+    }
+}
+
+impl Module for Conv2d {
+    fn type_name(&self) -> &'static str {
+        "Conv2d"
+    }
+
+    fn forward(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<Mat> {
+        let ho = self.shape.out_size();
+        let rows = x.rows() * ho * ho;
+        // The im2col patch matrix is charged by scratch_mat (and stays
+        // charged while it stays resident in the context); the GEMM output
+        // is a per-call transient.
+        let _act = ctx.mem().alloc((rows * self.shape.c_out * 4) as u64)?;
+        let mut cols = ctx.scratch_mat(rows, self.shape.patch_dim())?;
+        im2col_into(x, &self.shape, &mut cols);
+        Ok(self.forward_cols(&cols))
+    }
+
+    fn params(&self) -> Vec<(String, ParamRef<'_>)> {
+        vec![
+            ("weight".to_string(), ParamRef::Mat(&self.w_mat)),
+            ("bias".to_string(), ParamRef::Vec(&self.bias)),
+        ]
+    }
+
+    fn params_mut(&mut self) -> Vec<(String, ParamMut<'_>)> {
+        vec![
+            ("weight".to_string(), ParamMut::Mat(&mut self.w_mat)),
+            ("bias".to_string(), ParamMut::Vec(&mut self.bias)),
+        ]
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Module> {
+        Box::new(self.clone())
+    }
+
+    fn as_sketchable(&self) -> Option<&dyn Sketchable> {
+        Some(self)
     }
 }
 
@@ -175,11 +221,9 @@ impl SKConv2d {
         }
     }
 
-    pub fn param_count(&self) -> usize {
-        self.num_terms * self.low_rank * (self.shape.patch_dim() + self.shape.c_out)
-            + self.shape.c_out
-    }
-
+    /// Size relative to the dense layer it replaces. The stored parameter
+    /// count comes from the [`Module::param_count`] registry (closed form:
+    /// `l·r·(C_in·k² + C_out) + C_out`, cross-checked in the tests).
     pub fn compression_ratio(&self) -> f64 {
         self.param_count() as f64
             / (self.shape.patch_dim() * self.shape.c_out + self.shape.c_out) as f64
@@ -202,6 +246,38 @@ impl SKConv2d {
             }
         }
         y
+    }
+}
+
+impl Module for SKConv2d {
+    fn type_name(&self) -> &'static str {
+        "SKConv2d"
+    }
+
+    fn forward(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<Mat> {
+        let ho = self.shape.out_size();
+        let rows = x.rows() * ho * ho;
+        // im2col patches are charged by scratch_mat; the transients are the
+        // output plus one rows×r intermediate and one rows×C_out product
+        // alive per term.
+        let _act = ctx
+            .mem()
+            .alloc((rows * (2 * self.shape.c_out + self.low_rank) * 4) as u64)?;
+        let mut cols = ctx.scratch_mat(rows, self.shape.patch_dim())?;
+        im2col_into(x, &self.shape, &mut cols);
+        Ok(self.forward_cols(&cols))
+    }
+
+    fn params(&self) -> Vec<(String, ParamRef<'_>)> {
+        super::module::factored_params(&self.u, &self.v, &self.bias)
+    }
+
+    fn params_mut(&mut self) -> Vec<(String, ParamMut<'_>)> {
+        super::module::factored_params_mut(&mut self.u, &mut self.v, &mut self.bias)
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Module> {
+        Box::new(self.clone())
     }
 }
 

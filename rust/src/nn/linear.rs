@@ -18,6 +18,8 @@
 //! Forward cost: `2·l·k·(d_in+d_out)` FLOPs/row vs `2·d_in·d_out` dense —
 //! the Figure-1 crossover.
 
+use super::module::{ForwardCtx, Module, ParamMut, ParamRef};
+use super::plan::Sketchable;
 use crate::linalg::{matmul, Mat};
 use crate::rng::Rng;
 
@@ -53,10 +55,6 @@ impl Linear {
         self.weight.rows()
     }
 
-    pub fn param_count(&self) -> usize {
-        self.weight.len() + self.bias.len()
-    }
-
     /// `y = x·Wᵀ + b`, `x: B×d_in`.
     pub fn forward(&self, x: &Mat) -> Mat {
         assert_eq!(x.cols(), self.d_in());
@@ -68,6 +66,40 @@ impl Linear {
             }
         }
         y
+    }
+}
+
+impl Module for Linear {
+    fn type_name(&self) -> &'static str {
+        "Linear"
+    }
+
+    fn forward(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<Mat> {
+        // One transient activation: the B×d_out output.
+        let _act = ctx.mem().alloc((x.rows() * self.d_out() * 4) as u64)?;
+        Ok(Linear::forward(self, x))
+    }
+
+    fn params(&self) -> Vec<(String, ParamRef<'_>)> {
+        vec![
+            ("weight".to_string(), ParamRef::Mat(&self.weight)),
+            ("bias".to_string(), ParamRef::Vec(&self.bias)),
+        ]
+    }
+
+    fn params_mut(&mut self) -> Vec<(String, ParamMut<'_>)> {
+        vec![
+            ("weight".to_string(), ParamMut::Mat(&mut self.weight)),
+            ("bias".to_string(), ParamMut::Vec(&mut self.bias)),
+        ]
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Module> {
+        Box::new(self.clone())
+    }
+
+    fn as_sketchable(&self) -> Option<&dyn Sketchable> {
+        Some(self)
     }
 }
 
@@ -165,12 +197,9 @@ impl SKLinear {
         Self::assemble(d_in, d_out, num_terms, low_rank, u, v, dense.bias.clone())
     }
 
-    /// Stored parameters: `l·k·(d_in+d_out) + d_out`.
-    pub fn param_count(&self) -> usize {
-        self.num_terms * self.low_rank * (self.d_in + self.d_out) + self.d_out
-    }
-
-    /// Size relative to the dense layer it replaces.
+    /// Size relative to the dense layer it replaces. The stored parameter
+    /// count comes from the [`Module::param_count`] registry (closed form:
+    /// `l·k·(d_in+d_out) + d_out`, cross-checked in the tests).
     pub fn compression_ratio(&self) -> f64 {
         self.param_count() as f64 / (self.d_in * self.d_out + self.d_out) as f64
     }
@@ -201,6 +230,41 @@ impl SKLinear {
             w.axpy(1.0 / self.num_terms as f32, &matmul(uj, vj));
         }
         w
+    }
+}
+
+impl Module for SKLinear {
+    fn type_name(&self) -> &'static str {
+        "SKLinear"
+    }
+
+    fn forward(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<Mat> {
+        // Transients: the B×d_out output plus one B×k intermediate and one
+        // B×d_out per-term product alive at a time.
+        let b = x.rows();
+        let _act = ctx
+            .mem()
+            .alloc((b * (2 * self.d_out + self.low_rank) * 4) as u64)?;
+        Ok(SKLinear::forward(self, x))
+    }
+
+    fn params(&self) -> Vec<(String, ParamRef<'_>)> {
+        super::module::factored_params(&self.u, &self.v, &self.bias)
+    }
+
+    fn params_mut(&mut self) -> Vec<(String, ParamMut<'_>)> {
+        super::module::factored_params_mut(&mut self.u, &mut self.v, &mut self.bias)
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Module> {
+        Box::new(self.clone())
+    }
+
+    fn on_params_loaded(&mut self) {
+        // The NT-layout caches mirror u/v and go stale when the factors are
+        // rewritten through the named-parameter API.
+        self.u_t = self.u.iter().map(Mat::transpose).collect();
+        self.v_t = self.v.iter().map(Mat::transpose).collect();
     }
 }
 

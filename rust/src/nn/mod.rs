@@ -2,6 +2,14 @@
 //! replacements, mirroring Panther's `panther.nn` (`SKLinear`, `SKConv2d`,
 //! `RandMultiHeadAttention`).
 //!
+//! All six layer types implement the unified [`Module`] trait —
+//! `forward(x, ctx)` with a shared [`ForwardCtx`] (memory accounting +
+//! scratch + batch metadata), named parameter views, and a
+//! `state_dict`/`load_state_dict` named-tensor API. Model compression is a
+//! [`SketchPlan`]: select layers (type / regex / names), pick
+//! `(num_terms, low_rank)`, apply, and read the per-layer
+//! [`CompressionReport`].
+//!
 //! Two execution paths exist for each layer:
 //! - the **CPU reference forward** implemented here on [`crate::linalg`],
 //!   used by the figure benches (dense and sketched run on the *same*
@@ -10,16 +18,22 @@
 //!   into HLO artifacts and executed through [`crate::runtime`].
 //!
 //! [`cost`] holds the analytic parameter/FLOP/memory models, including the
-//! paper's benchmark-skip rule `2·l·k·(d_in+d_out) > d_in·d_out`.
+//! paper's benchmark-skip rule `2·l·k·(d_in+d_out) > d_in·d_out`; they are
+//! cross-checked against the [`Module::param_count`] registry in tests
+//! rather than serving as the source of truth.
 
 pub mod attention;
 pub mod conv;
 pub mod cost;
 pub mod linear;
 pub mod model;
+pub mod module;
+pub mod plan;
 
 pub use attention::{KernelKind, MultiHeadAttention, RandMultiHeadAttention};
 pub use conv::{Conv2d, ConvShape, SKConv2d};
 pub use cost::{conv_cost, linear_cost, sketch_beats_dense, LayerCost};
 pub use linear::{Linear, SKLinear};
-pub use model::{LayerKind, LayerSelector, Model, NamedLayer};
+pub use model::{LayerSelector, Model, NamedModule};
+pub use module::{ForwardCtx, Module, ParamMut, ParamRef, StateDict};
+pub use plan::{CompressionReport, LayerReport, SketchPlan, Sketchable, SkippedLayer};

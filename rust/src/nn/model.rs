@@ -1,134 +1,207 @@
-//! Model container: a flat registry of *named* layers, mirroring how
+//! Model container: a flat registry of *named* [`Module`]s, mirroring how
 //! `SKAutoTuner` navigates a `torch` module hierarchy ("given a torch-saved
 //! model provided with regex or specific layers to replace"). Layer names
 //! use dotted paths (`encoder.layer3.ffn.fc1`), and [`LayerSelector`]
 //! reproduces the paper's `LayerConfig(layer_names={"type": "Linear"})` /
 //! regex / explicit-list selection modes.
+//!
+//! Layers are stored behind the [`Module`] trait — the registry has no
+//! knowledge of concrete layer types, so new layers (and new sketched
+//! variants, via [`super::plan::SketchPlan`]) plug in without touching this
+//! file. Lookups go through a name → index map, so `get`/`replace` are
+//! O(1) and duplicate names are rejected with an error instead of a panic.
 
-use super::attention::{KernelKind, MultiHeadAttention, RandMultiHeadAttention};
-use super::conv::{Conv2d, SKConv2d};
-use super::linear::{Linear, SKLinear};
-use crate::rng::Philox;
-
-/// Any layer the model registry can hold.
-pub enum LayerKind {
-    Linear(Linear),
-    SKLinear(SKLinear),
-    Conv2d(Conv2d),
-    SKConv2d(SKConv2d),
-    Attention(MultiHeadAttention),
-    RandAttention(RandMultiHeadAttention),
-}
-
-impl LayerKind {
-    /// Type name as the selector sees it (matches the paper's `"Linear"`,
-    /// `"Conv2d"`, …).
-    pub fn type_name(&self) -> &'static str {
-        match self {
-            LayerKind::Linear(_) => "Linear",
-            LayerKind::SKLinear(_) => "SKLinear",
-            LayerKind::Conv2d(_) => "Conv2d",
-            LayerKind::SKConv2d(_) => "SKConv2d",
-            LayerKind::Attention(_) => "MultiheadAttention",
-            LayerKind::RandAttention(_) => "RandMultiheadAttention",
-        }
-    }
-
-    /// Stored parameter count.
-    pub fn param_count(&self) -> usize {
-        match self {
-            LayerKind::Linear(l) => l.param_count(),
-            LayerKind::SKLinear(l) => l.param_count(),
-            LayerKind::Conv2d(c) => c.param_count(),
-            LayerKind::SKConv2d(c) => c.param_count(),
-            LayerKind::Attention(a) => 4 * a.weights.embed_dim * a.weights.embed_dim,
-            LayerKind::RandAttention(a) => 4 * a.weights.embed_dim * a.weights.embed_dim,
-        }
-    }
-}
+use super::module::{Module, StateDict};
+use anyhow::{anyhow, ensure, Context, Result};
+use std::collections::HashMap;
 
 /// A named layer in the registry.
-pub struct NamedLayer {
+pub struct NamedModule {
     pub name: String,
-    pub layer: LayerKind,
+    pub module: Box<dyn Module>,
 }
 
-/// The model: ordered named layers (a flattened module tree).
+/// The model: ordered named layers (a flattened module tree) with an index
+/// for O(1) name lookups.
 #[derive(Default)]
 pub struct Model {
-    pub layers: Vec<NamedLayer>,
+    layers: Vec<NamedModule>,
+    index: HashMap<String, usize>,
 }
 
 impl Model {
     pub fn new() -> Self {
-        Model { layers: Vec::new() }
+        Model::default()
     }
 
-    pub fn add(&mut self, name: &str, layer: LayerKind) -> &mut Self {
-        assert!(
-            !self.layers.iter().any(|l| l.name == name),
+    /// Register a layer under `name`. Errors on duplicate names.
+    pub fn add<M: Module + 'static>(&mut self, name: &str, module: M) -> Result<&mut Self> {
+        self.add_boxed(name, Box::new(module))
+    }
+
+    /// [`Model::add`] for an already-boxed module (e.g. from
+    /// [`Module::boxed_clone`]).
+    pub fn add_boxed(&mut self, name: &str, module: Box<dyn Module>) -> Result<&mut Self> {
+        ensure!(
+            !self.index.contains_key(name),
             "duplicate layer name {name}"
         );
-        self.layers.push(NamedLayer {
+        self.index.insert(name.to_string(), self.layers.len());
+        self.layers.push(NamedModule {
             name: name.to_string(),
-            layer,
+            module,
         });
-        self
+        Ok(self)
     }
 
-    pub fn get(&self, name: &str) -> Option<&LayerKind> {
-        self.layers
-            .iter()
-            .find(|l| l.name == name)
-            .map(|l| &l.layer)
+    /// Look up a layer by name — O(1).
+    pub fn get(&self, name: &str) -> Option<&dyn Module> {
+        self.index
+            .get(name)
+            .map(|&i| self.layers[i].module.as_ref())
     }
 
+    /// Mutable lookup by name — O(1).
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut dyn Module> {
+        match self.index.get(name) {
+            Some(&i) => Some(self.layers[i].module.as_mut()),
+            None => None,
+        }
+    }
+
+    /// Swap the module stored under `name`, returning the old one. The
+    /// layer keeps its position and name — this is how
+    /// [`super::plan::SketchPlan`] installs sketched replacements.
+    pub fn replace(&mut self, name: &str, module: Box<dyn Module>) -> Result<Box<dyn Module>> {
+        let i = *self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow!("no layer named {name}"))?;
+        Ok(std::mem::replace(&mut self.layers[i].module, module))
+    }
+
+    /// Iterate layers in registration order.
+    pub fn iter(&self) -> impl Iterator<Item = &NamedModule> {
+        self.layers.iter()
+    }
+
+    /// Number of registered layers.
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Total stored parameter count, derived from each layer's
+    /// [`Module::params`] registry.
     pub fn total_params(&self) -> usize {
-        self.layers.iter().map(|l| l.layer.param_count()).sum()
+        self.layers.iter().map(|l| l.module.param_count()).sum()
     }
 
-    /// Names of layers matching a selector.
+    /// Names of layers matching a selector, in registration order.
     pub fn select(&self, sel: &LayerSelector) -> Vec<String> {
         self.layers
             .iter()
-            .filter(|l| sel.matches(&l.name, l.layer.type_name()))
+            .filter(|l| sel.matches(&l.name, l.module.type_name()))
             .map(|l| l.name.clone())
             .collect()
     }
 
-    /// Replace a dense layer with its sketched counterpart at `(l, k)`,
+    /// Replace one dense layer with its sketched counterpart at `(l, k)`,
     /// sketching trained weights (`copy_weights=True` semantics). Attention
-    /// layers interpret `k` as the random-feature count. No-op error if the
-    /// layer is already sketched or missing.
+    /// layers interpret `k` as the random-feature count. Thin convenience
+    /// over [`super::plan::SketchPlan`] — errors if the layer is missing or
+    /// not sketchable.
     pub fn sketchify(
         &mut self,
         name: &str,
         num_terms: usize,
         low_rank: usize,
         seed: u64,
-    ) -> anyhow::Result<()> {
-        let slot = self
-            .layers
-            .iter_mut()
-            .find(|l| l.name == name)
-            .ok_or_else(|| anyhow::anyhow!("no layer named {name}"))?;
-        let mut rng = Philox::seeded(seed);
-        let new = match &slot.layer {
-            LayerKind::Linear(l) => {
-                LayerKind::SKLinear(SKLinear::from_dense(l, num_terms, low_rank, &mut rng))
+    ) -> Result<()> {
+        let report = super::plan::SketchPlan::new()
+            .select(LayerSelector::by_names(&[name]))
+            .with(num_terms, low_rank)
+            .seed(seed)
+            .apply(self)?;
+        if let Some(s) = report.skipped.first() {
+            anyhow::bail!("layer {} ({}) is not sketchable", s.name, s.type_name);
+        }
+        Ok(())
+    }
+
+    /// Deep copy of the full layer registry (all weights cloned).
+    pub fn clone_model(&self) -> Model {
+        let mut m = Model::new();
+        for l in &self.layers {
+            m.add_boxed(&l.name, l.module.boxed_clone())
+                .expect("source model has unique names");
+        }
+        m
+    }
+
+    /// Snapshot every parameter of every layer as a flat name-keyed state
+    /// dict (`<layer path>.<param name>`, e.g. `encoder.fc1.weight`).
+    pub fn state_dict(&self) -> StateDict {
+        let mut sd = Vec::new();
+        for l in &self.layers {
+            for (pname, t) in l.module.state_dict() {
+                sd.push((format!("{}.{pname}", l.name), t));
             }
-            LayerKind::Conv2d(c) => {
-                LayerKind::SKConv2d(SKConv2d::from_dense(c, num_terms, low_rank, &mut rng))
+        }
+        sd
+    }
+
+    /// Load a full model snapshot produced by [`Model::state_dict`]. Keys
+    /// are matched to layers by longest layer-path prefix (layer names may
+    /// themselves contain dots); every layer must receive its complete
+    /// parameter set and unknown keys are an error. All-or-nothing: every
+    /// layer's slice is validated before the first weight is written, so a
+    /// failed load leaves the model untouched.
+    pub fn load_state_dict(&mut self, sd: &[(String, crate::runtime::HostTensor)]) -> Result<()> {
+        let mut per_layer: HashMap<String, StateDict> = HashMap::new();
+        for (key, t) in sd {
+            let mut best: Option<&str> = None;
+            for l in &self.layers {
+                let matches = key.len() > l.name.len() + 1
+                    && key.starts_with(l.name.as_str())
+                    && key.as_bytes()[l.name.len()] == b'.';
+                let longer = match best {
+                    None => true,
+                    Some(b) => l.name.len() > b.len(),
+                };
+                if matches && longer {
+                    best = Some(l.name.as_str());
+                }
             }
-            LayerKind::Attention(a) => LayerKind::RandAttention(RandMultiHeadAttention::new(
-                a.weights.clone(),
-                low_rank,
-                KernelKind::Softmax,
-                seed,
-            )),
-            other => anyhow::bail!("layer {name} ({}) is not sketchable", other.type_name()),
-        };
-        slot.layer = new;
+            let layer = best.ok_or_else(|| anyhow!("state dict key {key} matches no layer"))?;
+            let sub_key = key[layer.len() + 1..].to_string();
+            // Entries are cloned into per-layer dicts (transiently ~2× the
+            // state dict) — acceptable on this cold restore path in exchange
+            // for keeping the Module trait's owned-slice signature.
+            per_layer
+                .entry(layer.to_string())
+                .or_default()
+                .push((sub_key, t.clone()));
+        }
+        // Pre-validate every layer so no weight is written unless the whole
+        // load will succeed. Module::load_state_dict re-validates its own
+        // slice below — redundant but cheap (name/shape checks only), and it
+        // keeps the trait free of an unchecked write entry point.
+        for l in &self.layers {
+            let sub = per_layer.get(&l.name).map(|v| v.as_slice()).unwrap_or(&[]);
+            l.module
+                .validate_state_dict(sub)
+                .with_context(|| format!("validating layer {}", l.name))?;
+        }
+        for l in &mut self.layers {
+            let sub = per_layer.remove(&l.name).unwrap_or_default();
+            l.module
+                .load_state_dict(&sub)
+                .with_context(|| format!("loading layer {}", l.name))?;
+        }
         Ok(())
     }
 }
@@ -149,7 +222,7 @@ impl LayerSelector {
         LayerSelector::ByType(t.to_string())
     }
 
-    pub fn by_regex(pat: &str) -> anyhow::Result<Self> {
+    pub fn by_regex(pat: &str) -> Result<Self> {
         Ok(LayerSelector::ByRegex(crate::util::rex::Regex::new(pat)?))
     }
 
@@ -169,23 +242,21 @@ impl LayerSelector {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::attention::AttnWeights;
-    use crate::nn::conv::ConvShape;
+    use crate::nn::attention::{AttnWeights, MultiHeadAttention};
+    use crate::nn::conv::{Conv2d, ConvShape};
+    use crate::nn::linear::Linear;
+    use crate::rng::Philox;
 
     fn toy_model() -> Model {
         let mut rng = Philox::seeded(141);
         let mut m = Model::new();
-        m.add(
-            "encoder.fc1",
-            LayerKind::Linear(Linear::random(32, 64, &mut rng)),
-        );
-        m.add(
-            "encoder.fc2",
-            LayerKind::Linear(Linear::random(64, 32, &mut rng)),
-        );
+        m.add("encoder.fc1", Linear::random(32, 64, &mut rng))
+            .unwrap();
+        m.add("encoder.fc2", Linear::random(64, 32, &mut rng))
+            .unwrap();
         m.add(
             "encoder.conv",
-            LayerKind::Conv2d(Conv2d::random(
+            Conv2d::random(
                 ConvShape {
                     c_in: 3,
                     c_out: 8,
@@ -194,14 +265,14 @@ mod tests {
                     padding: 1,
                 },
                 &mut rng,
-            )),
-        );
+            ),
+        )
+        .unwrap();
         m.add(
             "encoder.attn",
-            LayerKind::Attention(MultiHeadAttention::new(AttnWeights::random(
-                16, 4, &mut rng,
-            ))),
-        );
+            MultiHeadAttention::new(AttnWeights::random(16, 4, &mut rng)),
+        )
+        .unwrap();
         m
     }
 
@@ -252,11 +323,79 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "duplicate layer name")]
-    fn duplicate_names_rejected() {
+    fn duplicate_names_rejected_with_error() {
         let mut rng = Philox::seeded(1);
         let mut m = Model::new();
-        m.add("x", LayerKind::Linear(Linear::random(2, 2, &mut rng)));
-        m.add("x", LayerKind::Linear(Linear::random(2, 2, &mut rng)));
+        m.add("x", Linear::random(2, 2, &mut rng)).unwrap();
+        let err = m.add("x", Linear::random(2, 2, &mut rng));
+        assert!(err.is_err());
+        // The registry is unchanged: one layer, still resolvable.
+        assert_eq!(m.len(), 1);
+        assert!(m.get("x").is_some());
+    }
+
+    #[test]
+    fn attention_param_count_matches_closed_form() {
+        // The registry-derived count must equal the old hand-maintained
+        // 4·d² formula (Q, K, V, output projections, no biases).
+        let m = toy_model();
+        let attn = m.get("encoder.attn").unwrap();
+        assert_eq!(attn.param_count(), 4 * 16 * 16);
+        // And the linear layer's count equals d_in·d_out + d_out.
+        let fc1 = m.get("encoder.fc1").unwrap();
+        assert_eq!(fc1.param_count(), 32 * 64 + 64);
+    }
+
+    #[test]
+    fn get_is_index_backed_and_replace_preserves_order() {
+        let mut m = toy_model();
+        assert!(m.get("nope").is_none());
+        let copy = m.get("encoder.fc1").unwrap().boxed_clone();
+        let old = m.replace("encoder.fc2", copy).unwrap();
+        assert_eq!(old.type_name(), "Linear");
+        // Order of names is unchanged after replace.
+        let names: Vec<&str> = m.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["encoder.fc1", "encoder.fc2", "encoder.conv", "encoder.attn"]
+        );
+        assert!(m.replace("nope", old).is_err());
+    }
+
+    #[test]
+    fn model_state_dict_keys_are_layer_prefixed() {
+        let m = toy_model();
+        let sd = m.state_dict();
+        let keys: Vec<&str> = sd.iter().map(|(k, _)| k.as_str()).collect();
+        assert!(keys.contains(&"encoder.fc1.weight"));
+        assert!(keys.contains(&"encoder.fc1.bias"));
+        assert!(keys.contains(&"encoder.attn.wq"));
+        // Total elements in the dict match the parameter count.
+        let total: usize = sd.iter().map(|(_, t)| t.len()).sum();
+        assert_eq!(total, m.total_params());
+    }
+
+    #[test]
+    fn model_load_state_dict_roundtrip_and_errors() {
+        let mut rng = Philox::seeded(142);
+        let src = toy_model();
+        let sd = src.state_dict();
+        let mut dst = toy_model();
+        // Different seed path: perturb dst so the load is observable.
+        dst.sketchify("encoder.fc1", 1, 4, 5).unwrap();
+        // Mismatched architecture: fc1 is now SKLinear, its params differ.
+        assert!(dst.load_state_dict(&sd).is_err());
+        let mut dst2 = {
+            let mut m = Model::new();
+            m.add("encoder.fc1", Linear::random(32, 64, &mut rng))
+                .unwrap();
+            m
+        };
+        // Unknown keys (the conv/attn entries) are an error.
+        assert!(dst2.load_state_dict(&sd).is_err());
+        // A clone of the architecture loads exactly.
+        let mut dst3 = src.clone_model();
+        dst3.load_state_dict(&sd).unwrap();
+        assert_eq!(dst3.state_dict(), sd);
     }
 }

@@ -1,0 +1,433 @@
+//! The unified layer interface: [`Module`].
+//!
+//! Panther's headline claim is *drop-in replacement* — `SKLinear` slots in
+//! wherever `Linear` was. Before this trait existed the six layer types had
+//! three different `forward` signatures (attention demanded a `MemTracker`,
+//! linear and conv took none) and parameter counts were hand-maintained
+//! closed-form expressions. [`Module`] unifies all of it:
+//!
+//! - `forward(&self, x, ctx)` with a shared [`ForwardCtx`] carrying the
+//!   memory tracker, a reusable scratch buffer, and batch metadata;
+//! - `params()` / `params_mut()` exposing *named* parameter views, from
+//!   which `param_count`, [`Module::state_dict`] and
+//!   [`Module::load_state_dict`] are derived — one source of truth;
+//! - `type_name()` for selector matching (the paper's
+//!   `LayerConfig(layer_names={"type": "Linear"})`).
+//!
+//! Sketching lives in the companion [`super::plan`] module: dense layers
+//! advertise a sketched replacement via [`Module::as_sketchable`], and
+//! [`super::plan::SketchPlan`] is the single compression path.
+
+use crate::linalg::Mat;
+use crate::runtime::HostTensor;
+use crate::util::memtrack::MemTracker;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::cell::{RefCell, RefMut};
+
+use super::plan::Sketchable;
+
+/// Name-keyed tensor state of a module or model. Keys are the names from
+/// [`Module::params`], dot-prefixed with the layer path at the model level
+/// (`encoder.fc1.weight`). This is also the in-memory shape of a checkpoint
+/// v2 payload, so `nn` layers and the runtime's
+/// [`crate::train::ModelState`] exchange weights through the same
+/// representation.
+pub type StateDict = Vec<(String, HostTensor)>;
+
+/// Shared per-call context for [`Module::forward`].
+///
+/// Bundles the three things a layer forward may need beyond its input:
+///
+/// - a [`MemTracker`] — every sizable temporary is accounted against it, so
+///   budgeted trackers turn would-be OOMs into clean errors (the Figure-3
+///   "x" markers);
+/// - a reusable scratch matrix — convolution borrows it for the im2col
+///   patch buffer, so repeated forwards don't re-allocate the largest
+///   temporary. Its retained capacity stays charged against the tracker
+///   for the context's lifetime (the buffer really is resident);
+/// - an advisory batch hint — metadata for schedulers and batching layers;
+///   forwards still size themselves from the actual input.
+pub struct ForwardCtx {
+    mem: MemTracker,
+    scratch: RefCell<Mat>,
+    /// Accounting for the scratch buffer's high-water capacity:
+    /// `(guard, accounted_bytes)`.
+    scratch_guard: RefCell<Option<(crate::util::memtrack::MemGuard, u64)>>,
+    batch_hint: Option<usize>,
+}
+
+impl ForwardCtx {
+    /// Context with unlimited memory accounting.
+    pub fn new() -> Self {
+        Self::with_tracker(MemTracker::unlimited())
+    }
+
+    /// Context whose allocations fail past `bytes` live bytes.
+    pub fn with_budget(bytes: u64) -> Self {
+        Self::with_tracker(MemTracker::with_budget(bytes))
+    }
+
+    /// Context around an existing tracker (the tracker handle is shared, so
+    /// the caller keeps visibility into `peak_bytes`/`live_bytes`).
+    pub fn with_tracker(mem: MemTracker) -> Self {
+        ForwardCtx {
+            mem,
+            scratch: RefCell::new(Mat::zeros(0, 0)),
+            scratch_guard: RefCell::new(None),
+            batch_hint: None,
+        }
+    }
+
+    /// Attach an advisory expected-batch-rows hint.
+    pub fn batch_hint(mut self, rows: usize) -> Self {
+        self.batch_hint = Some(rows);
+        self
+    }
+
+    /// The advisory batch hint, if any.
+    pub fn expected_batch(&self) -> Option<usize> {
+        self.batch_hint
+    }
+
+    /// The memory tracker all forwards account against.
+    pub fn mem(&self) -> &MemTracker {
+        &self.mem
+    }
+
+    /// Borrow the shared scratch matrix resized to `rows × cols`. Contents
+    /// are unspecified; the borrower must overwrite every element it reads.
+    /// Growth is charged against the tracker and the high-water capacity
+    /// stays charged for the context's lifetime — a budget error here is
+    /// the same clean OOM signal as any other tracked allocation. Panics if
+    /// the scratch is already borrowed (layers must not hold it across
+    /// nested forwards).
+    pub fn scratch_mat(
+        &self,
+        rows: usize,
+        cols: usize,
+    ) -> Result<RefMut<'_, Mat>, crate::util::memtrack::MemError> {
+        let needed = (rows * cols * std::mem::size_of::<f32>()) as u64;
+        {
+            let mut slot = self.scratch_guard.borrow_mut();
+            let accounted = match slot.as_ref() {
+                Some((_, bytes)) => *bytes,
+                None => 0,
+            };
+            if needed > accounted {
+                // Realloc: release the old charge, then charge the full new
+                // capacity. If the budget refuses, drop the buffer too so
+                // accounting and residency stay in agreement.
+                *slot = None;
+                match self.mem.alloc(needed) {
+                    Ok(guard) => *slot = Some((guard, needed)),
+                    Err(e) => {
+                        *self.scratch.borrow_mut() = Mat::zeros(0, 0);
+                        return Err(e);
+                    }
+                }
+            }
+        }
+        let mut s = self.scratch.borrow_mut();
+        s.resize(rows, cols);
+        Ok(s)
+    }
+}
+
+impl Default for ForwardCtx {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Immutable view of one named parameter tensor.
+pub enum ParamRef<'a> {
+    /// A matrix parameter (weights, sketch factors).
+    Mat(&'a Mat),
+    /// A vector parameter (biases).
+    Vec(&'a [f32]),
+}
+
+impl ParamRef<'_> {
+    /// Number of scalar elements.
+    pub fn len(&self) -> usize {
+        match self {
+            ParamRef::Mat(m) => m.len(),
+            ParamRef::Vec(v) => v.len(),
+        }
+    }
+
+    /// True when the parameter has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Logical shape (`[rows, cols]` for matrices, `[len]` for vectors).
+    pub fn shape(&self) -> Vec<usize> {
+        match self {
+            ParamRef::Mat(m) => vec![m.rows(), m.cols()],
+            ParamRef::Vec(v) => vec![v.len()],
+        }
+    }
+
+    /// Flat element slice.
+    pub fn data(&self) -> &[f32] {
+        match self {
+            ParamRef::Mat(m) => m.data(),
+            ParamRef::Vec(v) => v,
+        }
+    }
+
+    /// Copy into an owned shaped tensor.
+    pub fn to_tensor(&self) -> HostTensor {
+        HostTensor::new(&self.shape(), self.data().to_vec())
+    }
+}
+
+/// Mutable view of one named parameter tensor. Shape is fixed; only the
+/// element values may change.
+pub enum ParamMut<'a> {
+    /// A matrix parameter.
+    Mat(&'a mut Mat),
+    /// A vector parameter.
+    Vec(&'a mut [f32]),
+}
+
+impl ParamMut<'_> {
+    /// Number of scalar elements.
+    pub fn len(&self) -> usize {
+        match self {
+            ParamMut::Mat(m) => m.len(),
+            ParamMut::Vec(v) => v.len(),
+        }
+    }
+
+    /// True when the parameter has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Logical shape (`[rows, cols]` for matrices, `[len]` for vectors).
+    pub fn shape(&self) -> Vec<usize> {
+        match self {
+            ParamMut::Mat(m) => vec![m.rows(), m.cols()],
+            ParamMut::Vec(v) => vec![v.len()],
+        }
+    }
+
+    /// Flat mutable element slice.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        match self {
+            ParamMut::Mat(m) => m.data_mut(),
+            ParamMut::Vec(v) => &mut **v,
+        }
+    }
+}
+
+/// Named views over per-term sketch factors (`u.{j}`, `v.{j}`) plus
+/// `bias` — the shared parameter registry of `SKLinear` and `SKConv2d`,
+/// kept in one place so the state-dict key scheme cannot diverge.
+pub(crate) fn factored_params<'a>(
+    u: &'a [Mat],
+    v: &'a [Mat],
+    bias: &'a [f32],
+) -> Vec<(String, ParamRef<'a>)> {
+    let mut out = Vec::with_capacity(2 * u.len() + 1);
+    for (j, (uj, vj)) in u.iter().zip(v).enumerate() {
+        out.push((format!("u.{j}"), ParamRef::Mat(uj)));
+        out.push((format!("v.{j}"), ParamRef::Mat(vj)));
+    }
+    out.push(("bias".to_string(), ParamRef::Vec(bias)));
+    out
+}
+
+/// Mutable counterpart of [`factored_params`], same names and order.
+pub(crate) fn factored_params_mut<'a>(
+    u: &'a mut [Mat],
+    v: &'a mut [Mat],
+    bias: &'a mut [f32],
+) -> Vec<(String, ParamMut<'a>)> {
+    let mut out = Vec::with_capacity(2 * u.len() + 1);
+    for (j, (uj, vj)) in u.iter_mut().zip(v.iter_mut()).enumerate() {
+        out.push((format!("u.{j}"), ParamMut::Mat(uj)));
+        out.push((format!("v.{j}"), ParamMut::Mat(vj)));
+    }
+    out.push(("bias".to_string(), ParamMut::Vec(bias)));
+    out
+}
+
+/// The unified layer interface implemented by all six layer types
+/// (`Linear`, `SKLinear`, `Conv2d`, `SKConv2d`, `MultiHeadAttention`,
+/// `RandMultiHeadAttention`).
+pub trait Module: Send {
+    /// Type name as selectors see it (matches the paper's `"Linear"`,
+    /// `"Conv2d"`, …).
+    fn type_name(&self) -> &'static str;
+
+    /// Forward pass. Input rows are batch items (or patch rows for conv);
+    /// temporaries are accounted against `ctx.mem()`, so a budgeted context
+    /// yields an error instead of an OOM.
+    fn forward(&self, x: &Mat, ctx: &ForwardCtx) -> Result<Mat>;
+
+    /// Named views of every trained parameter, in a stable order. Fixed
+    /// (untrained) state — e.g. the Performer's random features — is *not*
+    /// a parameter and does not appear here.
+    fn params(&self) -> Vec<(String, ParamRef<'_>)>;
+
+    /// Mutable counterpart of [`Module::params`], same names and order.
+    ///
+    /// Contract: a caller that writes through these views must call
+    /// [`Module::on_params_loaded`] afterwards, so layers can refresh
+    /// derived state (e.g. `SKLinear`'s cached factor transposes — without
+    /// the refresh its forward would keep using the pre-update weights).
+    /// [`Module::load_state_dict`] does this automatically and is the
+    /// preferred bulk-update path.
+    fn params_mut(&mut self) -> Vec<(String, ParamMut<'_>)>;
+
+    /// Deep copy behind the trait (object-safe `Clone`).
+    fn boxed_clone(&self) -> Box<dyn Module>;
+
+    /// The sketched-replacement hook: dense layers return `Some(self)`,
+    /// already-sketched layers return `None`. [`super::plan::SketchPlan`]
+    /// is the only caller.
+    fn as_sketchable(&self) -> Option<&dyn Sketchable> {
+        None
+    }
+
+    /// Refresh state derived from the parameters (e.g. `SKLinear`'s cached
+    /// factor transposes). Idempotent; called automatically by
+    /// [`Module::load_state_dict`], and required after any direct write
+    /// through [`Module::params_mut`].
+    fn on_params_loaded(&mut self) {}
+
+    /// Stored trained-parameter count, derived from the [`Module::params`]
+    /// registry — never a hand-maintained formula.
+    fn param_count(&self) -> usize {
+        self.params().iter().map(|(_, p)| p.len()).sum()
+    }
+
+    /// Snapshot all parameters as named owned tensors.
+    fn state_dict(&self) -> StateDict {
+        self.params()
+            .into_iter()
+            .map(|(name, p)| {
+                let t = p.to_tensor();
+                (name, t)
+            })
+            .collect()
+    }
+
+    /// Check that `sd` is a complete, exactly-shaped snapshot for this
+    /// module: every parameter present, every shape matching, no duplicate
+    /// or unknown keys. Read-only — used by [`Module::load_state_dict`]
+    /// (and by model-level loads) to validate *before* the first write, so
+    /// a failed load never leaves weights half-applied.
+    fn validate_state_dict(&self, sd: &[(String, HostTensor)]) -> Result<()> {
+        let mut by_name = std::collections::HashMap::with_capacity(sd.len());
+        for (k, t) in sd {
+            if by_name.insert(k.as_str(), t).is_some() {
+                bail!("duplicate state dict key {k}");
+            }
+        }
+        for (name, p) in self.params() {
+            let t = by_name
+                .remove(name.as_str())
+                .ok_or_else(|| anyhow!("state dict missing parameter {name}"))?;
+            let want = p.shape();
+            ensure!(
+                t.shape() == want.as_slice(),
+                "shape mismatch for {name}: state dict {:?} vs layer {:?}",
+                t.shape(),
+                want
+            );
+        }
+        if !by_name.is_empty() {
+            let mut extra: Vec<&str> = by_name.keys().copied().collect();
+            extra.sort_unstable();
+            bail!("state dict has unknown keys {extra:?}");
+        }
+        Ok(())
+    }
+
+    /// Load a full parameter snapshot. Every parameter must be present with
+    /// a matching shape, and no unknown keys are tolerated (a loud failure
+    /// beats silently half-loaded weights). All-or-nothing at the module
+    /// level: validation runs before the first write.
+    fn load_state_dict(&mut self, sd: &[(String, HostTensor)]) -> Result<()> {
+        self.validate_state_dict(sd)?;
+        let by_name: std::collections::HashMap<&str, &HostTensor> =
+            sd.iter().map(|(k, t)| (k.as_str(), t)).collect();
+        for (name, mut p) in self.params_mut() {
+            let t = by_name[name.as_str()];
+            p.data_mut().copy_from_slice(t.data());
+        }
+        self.on_params_loaded();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Linear;
+    use crate::rng::Philox;
+
+    #[test]
+    fn forward_ctx_defaults_and_hints() {
+        let ctx = ForwardCtx::new().batch_hint(32);
+        assert_eq!(ctx.expected_batch(), Some(32));
+        assert_eq!(ctx.mem().live_bytes(), 0);
+        {
+            let s = ctx.scratch_mat(3, 5).unwrap();
+            assert_eq!(s.shape(), (3, 5));
+        }
+        // The scratch's high-water capacity stays charged...
+        assert_eq!(ctx.mem().live_bytes(), 3 * 5 * 4);
+        // ...and a smaller re-borrow reuses it without re-charging.
+        {
+            let s = ctx.scratch_mat(2, 2).unwrap();
+            assert_eq!(s.shape(), (2, 2));
+        }
+        assert_eq!(ctx.mem().live_bytes(), 3 * 5 * 4);
+    }
+
+    #[test]
+    fn scratch_growth_respects_budget() {
+        let ctx = ForwardCtx::with_budget(100);
+        assert!(ctx.scratch_mat(5, 5).is_ok()); // 100 B exactly
+        let err = ctx.scratch_mat(6, 5); // 120 B > budget
+        assert!(err.is_err());
+        // The failed grow released the old charge and buffer together.
+        assert_eq!(ctx.mem().live_bytes(), 0);
+        // A fitting request works again afterwards.
+        assert!(ctx.scratch_mat(4, 5).is_ok());
+        assert_eq!(ctx.mem().live_bytes(), 80);
+    }
+
+    #[test]
+    fn load_state_dict_rejects_bad_inputs() {
+        let mut rng = Philox::seeded(51);
+        let mut l = Linear::random(4, 3, &mut rng);
+        // Missing key.
+        assert!(l.load_state_dict(&[]).is_err());
+        // Unknown key.
+        let mut sd = l.state_dict();
+        sd.push(("ghost".to_string(), HostTensor::scalar(1.0)));
+        assert!(l.load_state_dict(&sd).is_err());
+        // Shape mismatch.
+        let mut sd = l.state_dict();
+        sd[0].1 = HostTensor::zeros(&[3, 3]);
+        assert!(l.load_state_dict(&sd).is_err());
+        // Pristine dict loads.
+        let sd = l.state_dict();
+        assert!(l.load_state_dict(&sd).is_ok());
+    }
+
+    #[test]
+    fn param_count_is_derived_from_registry() {
+        let mut rng = Philox::seeded(52);
+        let l = Linear::random(7, 5, &mut rng);
+        let from_views: usize = l.params().iter().map(|(_, p)| p.len()).sum();
+        assert_eq!(Module::param_count(&l), from_views);
+        assert_eq!(from_views, 7 * 5 + 5);
+    }
+}

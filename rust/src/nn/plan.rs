@@ -1,0 +1,480 @@
+//! The sketching subsystem: [`Sketchable`] + [`SketchPlan`].
+//!
+//! A [`SketchPlan`] is the *single* compression path of the crate — the
+//! paper's `SKAutoTuner(copy_weights=True).apply_best_params()` and the
+//! one-layer convenience [`super::Model::sketchify`] both go through it.
+//! A plan is a list of rules, each pairing a [`LayerSelector`] with the
+//! `(num_terms, low_rank)` to apply:
+//!
+//! ```
+//! use panther::nn::{LayerSelector, Linear, Model, SketchPlan};
+//! use panther::rng::Philox;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut rng = Philox::seeded(0);
+//! let mut model = Model::new();
+//! model.add("ffn.fc1", Linear::random(64, 64, &mut rng))?;
+//! model.add("ffn.fc2", Linear::random(64, 64, &mut rng))?;
+//! let report = SketchPlan::new()
+//!     .select(LayerSelector::by_regex(r"ffn\.fc\d")?)
+//!     .with(1, 8)
+//!     .seed(7)
+//!     .apply(&mut model)?;
+//! assert_eq!(report.converted.len(), 2);
+//! assert!(report.params_after < report.params_before);
+//! # Ok(()) }
+//! ```
+//!
+//! Which dense layer becomes which sketched layer is *not* decided by a
+//! `match` over an enum of layer types: each dense layer implements
+//! [`Sketchable`] and builds its own replacement, so new layer pairs plug
+//! in without touching this file.
+
+use super::attention::{KernelKind, MultiHeadAttention, RandMultiHeadAttention};
+use super::conv::{Conv2d, SKConv2d};
+use super::linear::{Linear, SKLinear};
+use super::model::{LayerSelector, Model};
+use super::module::Module;
+use crate::rng::Philox;
+use anyhow::{anyhow, ensure, Result};
+
+/// A dense layer that can build its sketched drop-in replacement.
+///
+/// `low_rank` is the per-term rank `k` for linear/conv layers and the
+/// random-feature count `m` for attention (which ignores `num_terms`) —
+/// the same convention the paper's `LayerConfig` uses.
+pub trait Sketchable {
+    /// Build the sketched replacement at `(num_terms, low_rank)`,
+    /// compressing the trained weights (`copy_weights=True` semantics).
+    fn sketchify(&self, num_terms: usize, low_rank: usize, seed: u64) -> Box<dyn Module>;
+}
+
+impl Sketchable for Linear {
+    fn sketchify(&self, num_terms: usize, low_rank: usize, seed: u64) -> Box<dyn Module> {
+        let mut rng = Philox::seeded(seed);
+        Box::new(SKLinear::from_dense(self, num_terms, low_rank, &mut rng))
+    }
+}
+
+impl Sketchable for Conv2d {
+    fn sketchify(&self, num_terms: usize, low_rank: usize, seed: u64) -> Box<dyn Module> {
+        let mut rng = Philox::seeded(seed);
+        Box::new(SKConv2d::from_dense(self, num_terms, low_rank, &mut rng))
+    }
+}
+
+impl Sketchable for MultiHeadAttention {
+    fn sketchify(&self, _num_terms: usize, low_rank: usize, seed: u64) -> Box<dyn Module> {
+        Box::new(RandMultiHeadAttention::new(
+            self.weights.clone(),
+            low_rank,
+            KernelKind::Softmax,
+            seed,
+        ))
+    }
+}
+
+/// One selector → `(num_terms, low_rank)` rule of a plan.
+struct Rule {
+    selector: LayerSelector,
+    params: Option<(usize, usize)>,
+}
+
+/// Builder for a model-compression pass.
+///
+/// Rules apply in insertion order; a layer converted by an earlier rule is
+/// no longer sketchable and lands in [`CompressionReport::skipped`] if a
+/// later rule matches it again. Per-layer randomness is derived
+/// deterministically from the plan seed and the layer *name*, so results
+/// do not depend on registry order.
+#[derive(Default)]
+pub struct SketchPlan {
+    rules: Vec<Rule>,
+    seed: u64,
+    /// First builder misuse seen, reported by `apply` (the builder methods
+    /// return `Self`, so they can't error in place).
+    misuse: Option<&'static str>,
+}
+
+impl SketchPlan {
+    /// Empty plan (seed 0).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a new rule for the layers matching `selector`. Follow with
+    /// [`SketchPlan::with`] to set the rule's `(num_terms, low_rank)`.
+    pub fn select(mut self, selector: LayerSelector) -> Self {
+        self.rules.push(Rule {
+            selector,
+            params: None,
+        });
+        self
+    }
+
+    /// Set `(num_terms, low_rank)` for the most recent
+    /// [`SketchPlan::select`] rule. Exactly one `with` per `select` —
+    /// anything else is reported as an error by [`SketchPlan::apply`].
+    pub fn with(mut self, num_terms: usize, low_rank: usize) -> Self {
+        match self.rules.last_mut() {
+            Some(rule) if rule.params.is_some() => {
+                self.misuse
+                    .get_or_insert("with(..) called twice for one select(..) rule");
+            }
+            Some(rule) => rule.params = Some((num_terms, low_rank)),
+            None => {
+                self.misuse
+                    .get_or_insert("with(..) called before any select(..) rule");
+            }
+        }
+        self
+    }
+
+    /// Base seed for the per-layer sketch randomness.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Apply every rule to `model`, replacing matched dense layers with
+    /// their sketched counterparts in place. Errors on a malformed plan or
+    /// a selector that matches nothing (a typo'd layer name should fail
+    /// loudly, not silently compress nothing). Every rule is validated and
+    /// resolved against the *pre-plan* model before the first replacement,
+    /// so a failing plan never half-compresses the model (the replaced
+    /// dense weights would be unrecoverable).
+    pub fn apply(&self, model: &mut Model) -> Result<CompressionReport> {
+        if let Some(misuse) = self.misuse {
+            anyhow::bail!("malformed SketchPlan: {misuse}");
+        }
+        ensure!(!self.rules.is_empty(), "SketchPlan has no rules");
+        let mut resolved = Vec::with_capacity(self.rules.len());
+        for (ri, rule) in self.rules.iter().enumerate() {
+            let (num_terms, low_rank) = rule.params.ok_or_else(|| {
+                anyhow!("SketchPlan rule {ri} has no (num_terms, low_rank); call .with(..) after .select(..)")
+            })?;
+            ensure!(
+                num_terms > 0 && low_rank > 0,
+                "SketchPlan rule {ri}: num_terms and low_rank must be positive"
+            );
+            let names = model.select(&rule.selector);
+            ensure!(!names.is_empty(), "SketchPlan rule {ri} matched no layers");
+            resolved.push((num_terms, low_rank, names));
+        }
+        let params_before = model.total_params();
+        let mut converted = Vec::new();
+        let mut skipped = Vec::new();
+        for (num_terms, low_rank, names) in resolved {
+            for name in names {
+                let outcome = {
+                    let module = model
+                        .get(&name)
+                        .ok_or_else(|| anyhow!("selected layer {name} disappeared"))?;
+                    let from = module.type_name();
+                    let before = module.param_count();
+                    match module.as_sketchable() {
+                        Some(dense) => {
+                            let seed = derive_seed(self.seed, &name);
+                            Some((dense.sketchify(num_terms, low_rank, seed), from, before))
+                        }
+                        None => {
+                            skipped.push(SkippedLayer {
+                                name: name.clone(),
+                                type_name: from.to_string(),
+                                reason: "not sketchable (already sketched?)".to_string(),
+                            });
+                            None
+                        }
+                    }
+                };
+                if let Some((replacement, from, before)) = outcome {
+                    let to = replacement.type_name().to_string();
+                    let after = replacement.param_count();
+                    model.replace(&name, replacement)?;
+                    converted.push(LayerReport {
+                        name,
+                        from: from.to_string(),
+                        to,
+                        params_before: before,
+                        params_after: after,
+                    });
+                }
+            }
+        }
+        Ok(CompressionReport {
+            converted,
+            skipped,
+            params_before,
+            params_after: model.total_params(),
+        })
+    }
+}
+
+/// Stable per-layer seed: FNV-1a over the layer name, mixed with the plan
+/// seed. Independent of registry order and of how many rules precede the
+/// layer's rule.
+fn derive_seed(base: u64, name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in name.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h ^ base
+}
+
+/// What happened to one converted layer.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    /// Dotted layer path.
+    pub name: String,
+    /// Type name before conversion (e.g. `Linear`).
+    pub from: String,
+    /// Type name after conversion (e.g. `SKLinear`).
+    pub to: String,
+    /// Stored parameters before conversion.
+    pub params_before: usize,
+    /// Stored parameters after conversion.
+    pub params_after: usize,
+}
+
+impl LayerReport {
+    /// Size of the sketched layer relative to the dense one.
+    pub fn ratio(&self) -> f64 {
+        self.params_after as f64 / self.params_before.max(1) as f64
+    }
+}
+
+/// A matched layer the plan could not convert.
+#[derive(Debug, Clone)]
+pub struct SkippedLayer {
+    /// Dotted layer path.
+    pub name: String,
+    /// The layer's type name.
+    pub type_name: String,
+    /// Why it was skipped.
+    pub reason: String,
+}
+
+/// Per-layer and whole-model outcome of [`SketchPlan::apply`].
+#[derive(Debug, Clone)]
+pub struct CompressionReport {
+    /// Layers replaced by their sketched counterparts, in conversion order.
+    pub converted: Vec<LayerReport>,
+    /// Layers matched by a rule but left untouched.
+    pub skipped: Vec<SkippedLayer>,
+    /// Whole-model parameter count before the plan ran.
+    pub params_before: usize,
+    /// Whole-model parameter count after.
+    pub params_after: usize,
+}
+
+impl CompressionReport {
+    /// Whole-model size after / before.
+    pub fn ratio(&self) -> f64 {
+        self.params_after as f64 / self.params_before.max(1) as f64
+    }
+
+    /// Parameters eliminated by the plan.
+    pub fn params_saved(&self) -> usize {
+        self.params_before.saturating_sub(self.params_after)
+    }
+}
+
+impl std::fmt::Display for CompressionReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "compression: {} -> {} params ({:.1}% of dense, {} layers converted, {} skipped)",
+            self.params_before,
+            self.params_after,
+            self.ratio() * 100.0,
+            self.converted.len(),
+            self.skipped.len()
+        )?;
+        for c in &self.converted {
+            writeln!(
+                f,
+                "  {:<32} {:>10} -> {:<10} {:>10} -> {:>8} params ({:.1}%)",
+                c.name,
+                c.from,
+                c.to,
+                c.params_before,
+                c.params_after,
+                c.ratio() * 100.0
+            )?;
+        }
+        for s in &self.skipped {
+            writeln!(f, "  {:<32} skipped ({}): {}", s.name, s.type_name, s.reason)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::attention::AttnWeights;
+    use crate::nn::conv::ConvShape;
+
+    fn toy_model() -> Model {
+        let mut rng = Philox::seeded(77);
+        let mut m = Model::new();
+        m.add("enc.ffn.fc1", Linear::random(32, 64, &mut rng)).unwrap();
+        m.add("enc.ffn.fc2", Linear::random(64, 32, &mut rng)).unwrap();
+        m.add(
+            "enc.conv",
+            Conv2d::random(
+                ConvShape {
+                    c_in: 3,
+                    c_out: 8,
+                    kernel: 3,
+                    image: 8,
+                    padding: 1,
+                },
+                &mut rng,
+            ),
+        )
+        .unwrap();
+        m.add(
+            "enc.attn",
+            MultiHeadAttention::new(AttnWeights::random(16, 4, &mut rng)),
+        )
+        .unwrap();
+        m
+    }
+
+    #[test]
+    fn plan_converts_matched_layers_and_reports() {
+        let mut m = toy_model();
+        let before = m.total_params();
+        let report = SketchPlan::new()
+            .select(LayerSelector::by_regex(r"ffn\.fc\d").unwrap())
+            .with(1, 4)
+            .seed(3)
+            .apply(&mut m)
+            .unwrap();
+        assert_eq!(report.converted.len(), 2);
+        assert!(report.skipped.is_empty());
+        assert_eq!(report.params_before, before);
+        assert_eq!(report.params_after, m.total_params());
+        assert!(report.params_after < report.params_before);
+        assert!(report.ratio() < 1.0);
+        assert_eq!(m.get("enc.ffn.fc1").unwrap().type_name(), "SKLinear");
+        assert_eq!(m.get("enc.ffn.fc2").unwrap().type_name(), "SKLinear");
+        assert_eq!(m.get("enc.conv").unwrap().type_name(), "Conv2d");
+        // The report renders without panicking and mentions the layers.
+        let text = format!("{report}");
+        assert!(text.contains("enc.ffn.fc1"));
+    }
+
+    #[test]
+    fn multi_rule_plan_with_per_rule_params() {
+        let mut m = toy_model();
+        let report = SketchPlan::new()
+            .select(LayerSelector::by_type("Linear"))
+            .with(2, 4)
+            .select(LayerSelector::by_type("Conv2d"))
+            .with(1, 6)
+            .select(LayerSelector::by_names(&["enc.attn"]))
+            .with(1, 32)
+            .apply(&mut m)
+            .unwrap();
+        assert_eq!(report.converted.len(), 4);
+        assert_eq!(m.get("enc.conv").unwrap().type_name(), "SKConv2d");
+        assert_eq!(
+            m.get("enc.attn").unwrap().type_name(),
+            "RandMultiheadAttention"
+        );
+    }
+
+    #[test]
+    fn resketching_is_skipped_not_fatal() {
+        let mut m = toy_model();
+        let sel = || LayerSelector::by_names(&["enc.ffn.fc1"]);
+        SketchPlan::new().select(sel()).with(1, 4).apply(&mut m).unwrap();
+        let report = SketchPlan::new()
+            .select(sel())
+            .with(1, 4)
+            .apply(&mut m)
+            .unwrap();
+        assert!(report.converted.is_empty());
+        assert_eq!(report.skipped.len(), 1);
+        assert_eq!(report.skipped[0].name, "enc.ffn.fc1");
+    }
+
+    #[test]
+    fn failing_plan_leaves_model_untouched() {
+        // A later rule's error must not leave earlier rules applied — the
+        // replaced dense weights would be gone.
+        let mut m = toy_model();
+        let before = m.total_params();
+        let err = SketchPlan::new()
+            .select(LayerSelector::by_type("Linear"))
+            .with(1, 4)
+            .select(LayerSelector::by_names(&["missing"]))
+            .with(1, 8)
+            .apply(&mut m);
+        assert!(err.is_err());
+        assert_eq!(m.total_params(), before);
+        assert_eq!(m.get("enc.ffn.fc1").unwrap().type_name(), "Linear");
+    }
+
+    #[test]
+    fn malformed_plans_error() {
+        let mut m = toy_model();
+        // No rules.
+        assert!(SketchPlan::new().apply(&mut m).is_err());
+        // with() before select().
+        assert!(SketchPlan::new().with(1, 4).apply(&mut m).is_err());
+        // Two with() for one select().
+        assert!(SketchPlan::new()
+            .select(LayerSelector::by_type("Linear"))
+            .with(1, 4)
+            .with(2, 8)
+            .apply(&mut m)
+            .is_err());
+        // select() without with().
+        assert!(SketchPlan::new()
+            .select(LayerSelector::by_type("Linear"))
+            .apply(&mut m)
+            .is_err());
+        // Selector matching nothing.
+        assert!(SketchPlan::new()
+            .select(LayerSelector::by_names(&["missing"]))
+            .with(1, 4)
+            .apply(&mut m)
+            .is_err());
+        // Zero rank.
+        assert!(SketchPlan::new()
+            .select(LayerSelector::by_type("Linear"))
+            .with(1, 0)
+            .apply(&mut m)
+            .is_err());
+    }
+
+    #[test]
+    fn per_layer_seeds_are_order_independent() {
+        // Same plan applied to two models that register layers in opposite
+        // order produces identical sketched weights per layer.
+        let mut rng = Philox::seeded(88);
+        let fc1 = Linear::random(16, 16, &mut rng);
+        let fc2 = Linear::random(16, 16, &mut rng);
+        let mut ma = Model::new();
+        ma.add("a.fc1", fc1.clone()).unwrap();
+        ma.add("a.fc2", fc2.clone()).unwrap();
+        let mut mb = Model::new();
+        mb.add("a.fc2", fc2).unwrap();
+        mb.add("a.fc1", fc1).unwrap();
+        let plan = || {
+            SketchPlan::new()
+                .select(LayerSelector::by_type("Linear"))
+                .with(1, 4)
+                .seed(9)
+        };
+        plan().apply(&mut ma).unwrap();
+        plan().apply(&mut mb).unwrap();
+        let sda = ma.get("a.fc1").unwrap().state_dict();
+        let sdb = mb.get("a.fc1").unwrap().state_dict();
+        assert_eq!(sda, sdb, "sketch must not depend on registry order");
+    }
+}

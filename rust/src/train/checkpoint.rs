@@ -1,49 +1,104 @@
 //! Checkpoints: serialize a [`super::ModelState`] to a simple binary file.
 //!
-//! Format (little-endian):
+//! Current format — **v2**, name-keyed (little-endian):
 //! ```text
-//! magic "PNTH" | version u32 | step u64 | model-name (u32 len + utf8)
-//! | n_params u32 | 3 groups (params, m, v) × n tensors:
-//!     rank u32 | dims u64 × rank | data f32 × prod(dims)
+//! magic "PNTH" | version u32 = 2 | step u64 | model-name (u32 len + utf8)
+//! | n_params u32 | n records:
+//!     param-name (u32 len + utf8) | rank u32 | dims u64 × rank
+//!     | param f32 × prod(dims) | m f32 × prod(dims) | v f32 × prod(dims)
 //! ```
+//! Tensor payloads are bulk-serialized as little-endian byte chunks
+//! (64 KiB staged per IO call — not one write per `f32`, and not a full
+//! per-tensor buffer that would double the largest tensor's memory).
+//!
+//! Legacy **v1** files (positional, three groups of shape-prefixed
+//! tensors) still load; their parameters get synthesized positional names
+//! `param.{i}` since v1 never stored names.
 
 use super::ModelState;
 use crate::runtime::HostTensor;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"PNTH";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
-/// Write a checkpoint.
+/// Write a checkpoint (always the current v2 format). The state is
+/// validated up front and the bytes go to a sibling temp file that is
+/// renamed into place only on success — a failed save never truncates an
+/// existing checkpoint at `path`.
 pub fn save(state: &ModelState, path: impl AsRef<Path>) -> Result<()> {
-    let f = std::fs::File::create(path.as_ref())
-        .with_context(|| format!("creating {:?}", path.as_ref()))?;
-    let mut w = BufWriter::new(f);
-    w.write_all(MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
-    w.write_all(&state.step.to_le_bytes())?;
-    let name = state.model.as_bytes();
-    w.write_all(&(name.len() as u32).to_le_bytes())?;
-    w.write_all(name)?;
-    w.write_all(&(state.params.len() as u32).to_le_bytes())?;
-    for group in [&state.params, &state.m, &state.v] {
-        for t in group.iter() {
-            w.write_all(&(t.shape().len() as u32).to_le_bytes())?;
-            for &d in t.shape() {
-                w.write_all(&(d as u64).to_le_bytes())?;
-            }
-            for &x in t.data() {
-                w.write_all(&x.to_le_bytes())?;
-            }
+    let path = path.as_ref();
+    let n = state.params.len();
+    ensure!(
+        state.m.len() == n && state.v.len() == n,
+        "param/moment arity mismatch: {n} params, {} m, {} v",
+        state.m.len(),
+        state.v.len()
+    );
+    ensure!(
+        state.names.is_empty() || state.names.len() == n,
+        "state has {} names for {n} params",
+        state.names.len()
+    );
+    for i in 0..n {
+        for group in [&state.m[i], &state.v[i]] {
+            ensure!(
+                group.shape() == state.params[i].shape(),
+                "moment shape {:?} != param shape {:?} at index {i}",
+                group.shape(),
+                state.params[i].shape()
+            );
         }
     }
-    w.flush()?;
+    // Per-process temp name so concurrent savers can't interleave into one
+    // temp file; fsync before the rename so a crash right after save()
+    // can't persist the rename ahead of the data blocks.
+    let mut tmp_name = path.as_os_str().to_owned();
+    tmp_name.push(format!(".{}.tmp", std::process::id()));
+    let tmp = std::path::PathBuf::from(tmp_name);
+    let f = std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+    let mut w = BufWriter::new(f);
+    let res = write_body(&mut w, state, n)
+        .and(w.flush().map_err(anyhow::Error::from))
+        .and(w.get_ref().sync_all().map_err(anyhow::Error::from));
+    drop(w);
+    if let Err(e) = res {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} into place"))?;
     Ok(())
 }
 
-/// Read a checkpoint.
+/// v2 payload after validation: header + n name/shape/param/m/v records.
+fn write_body(w: &mut impl Write, state: &ModelState, n: usize) -> Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&state.step.to_le_bytes())?;
+    write_str(w, &state.model)?;
+    w.write_all(&(n as u32).to_le_bytes())?;
+    for i in 0..n {
+        // Hand-built states may omit names; synthesize the same positional
+        // fallback v1 migration uses so round-trips stay name-stable.
+        match state.names.get(i) {
+            Some(name) => write_str(w, name)?,
+            None => write_str(w, &format!("param.{i}"))?,
+        }
+        let t = &state.params[i];
+        w.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for group in [&state.params[i], &state.m[i], &state.v[i]] {
+            write_f32s(w, group.data())?;
+        }
+    }
+    Ok(())
+}
+
+/// Read a checkpoint (v2, or legacy v1 with synthesized names).
 pub fn load(path: impl AsRef<Path>) -> Result<ModelState> {
     let f = std::fs::File::open(path.as_ref())
         .with_context(|| format!("opening {:?}", path.as_ref()))?;
@@ -54,32 +109,50 @@ pub fn load(path: impl AsRef<Path>) -> Result<ModelState> {
         bail!("not a panther checkpoint (bad magic)");
     }
     let version = read_u32(&mut r)?;
-    if version != VERSION {
-        bail!("unsupported checkpoint version {version}");
-    }
     let step = read_u64(&mut r)?;
-    let name_len = read_u32(&mut r)? as usize;
-    let mut name = vec![0u8; name_len];
-    r.read_exact(&mut name)?;
-    let model = String::from_utf8(name).context("bad model name")?;
+    let model = read_str(&mut r)?;
     let n = read_u32(&mut r)? as usize;
+    match version {
+        1 => load_v1_body(&mut r, model, step, n),
+        2 => load_v2_body(&mut r, model, step, n),
+        other => bail!("unsupported checkpoint version {other}"),
+    }
+}
+
+/// v2 body: n records of name | shape | param | m | v.
+fn load_v2_body(r: &mut impl Read, model: String, step: u64, n: usize) -> Result<ModelState> {
+    let mut names = Vec::with_capacity(n);
+    let mut params = Vec::with_capacity(n);
+    let mut m = Vec::with_capacity(n);
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        names.push(read_str(r)?);
+        let shape = read_shape(r)?;
+        let count: usize = shape.iter().product();
+        params.push(HostTensor::new(&shape, read_f32s(r, count)?));
+        m.push(HostTensor::new(&shape, read_f32s(r, count)?));
+        v.push(HostTensor::new(&shape, read_f32s(r, count)?));
+    }
+    Ok(ModelState {
+        model,
+        names,
+        params,
+        m,
+        v,
+        step,
+    })
+}
+
+/// Legacy v1 body: three groups (params, m, v) of shape-prefixed tensors,
+/// no names.
+fn load_v1_body(r: &mut impl Read, model: String, step: u64, n: usize) -> Result<ModelState> {
     let mut groups = Vec::with_capacity(3);
     for _ in 0..3 {
         let mut tensors = Vec::with_capacity(n);
         for _ in 0..n {
-            let rank = read_u32(&mut r)? as usize;
-            let mut shape = Vec::with_capacity(rank);
-            for _ in 0..rank {
-                shape.push(read_u64(&mut r)? as usize);
-            }
+            let shape = read_shape(r)?;
             let count: usize = shape.iter().product();
-            let mut data = vec![0f32; count];
-            let mut buf = [0u8; 4];
-            for x in &mut data {
-                r.read_exact(&mut buf)?;
-                *x = f32::from_le_bytes(buf);
-            }
-            tensors.push(HostTensor::new(&shape, data));
+            tensors.push(HostTensor::new(&shape, read_f32s(r, count)?));
         }
         groups.push(tensors);
     }
@@ -88,11 +161,73 @@ pub fn load(path: impl AsRef<Path>) -> Result<ModelState> {
     let params = groups.pop().unwrap();
     Ok(ModelState {
         model,
+        names: (0..n).map(|i| format!("param.{i}")).collect(),
         params,
         m,
         v,
         step,
     })
+}
+
+fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    let b = s.as_bytes();
+    w.write_all(&(b.len() as u32).to_le_bytes())?;
+    w.write_all(b)?;
+    Ok(())
+}
+
+fn read_str(r: &mut impl Read) -> Result<String> {
+    let len = read_u32(r)? as usize;
+    let mut b = vec![0u8; len];
+    r.read_exact(&mut b)?;
+    String::from_utf8(b).context("bad utf8 string in checkpoint")
+}
+
+fn read_shape(r: &mut impl Read) -> Result<Vec<usize>> {
+    let rank = read_u32(r)? as usize;
+    let mut shape = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        shape.push(read_u64(r)? as usize);
+    }
+    Ok(shape)
+}
+
+/// f32s staged per bulk-IO call: 64 KiB — large enough to amortize the
+/// write/read, small enough not to double the largest tensor's memory.
+const IO_CHUNK: usize = 16 * 1024;
+
+/// Bulk-serialize a tensor: whole little-endian chunks, one write each,
+/// O(1) extra memory.
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    let mut buf = Vec::with_capacity(IO_CHUNK.min(xs.len()) * 4);
+    for chunk in xs.chunks(IO_CHUNK) {
+        buf.clear();
+        for &x in chunk {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+/// Bulk-deserialize `n` f32s: chunked reads + in-memory decode, O(1) extra
+/// memory beyond the result.
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(n);
+    let mut buf = vec![0u8; IO_CHUNK.min(n.max(1)) * 4];
+    let mut remaining = n;
+    while remaining > 0 {
+        let take = IO_CHUNK.min(remaining);
+        let bytes = &mut buf[..take * 4];
+        r.read_exact(bytes)?;
+        out.extend(
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+        );
+        remaining -= take;
+    }
+    Ok(out)
 }
 
 fn read_u32(r: &mut impl Read) -> Result<u32> {
@@ -123,6 +258,7 @@ mod tests {
         let v = params.iter().map(|t| HostTensor::zeros(t.shape())).collect();
         ModelState {
             model: "toy_model".into(),
+            names: vec!["emb.w".into(), "head.b".into(), "temp".into()],
             params,
             m,
             v,
@@ -140,10 +276,42 @@ mod tests {
         let back = load(&path).unwrap();
         assert_eq!(back.model, "toy_model");
         assert_eq!(back.step, 42);
+        assert_eq!(back.names, state.names);
         assert_eq!(back.params.len(), 3);
         for (a, b) in back.params.iter().zip(&state.params) {
             assert_eq!(a, b);
         }
+        assert_eq!(back.param_named("head.b"), Some(&state.params[1]));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn nameless_state_gets_positional_names() {
+        let mut state = toy_state();
+        state.names.clear();
+        let dir = std::env::temp_dir().join("panther_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("nameless.ckpt");
+        save(&state, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.names, vec!["param.0", "param.1", "param.2"]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn failed_save_preserves_existing_checkpoint() {
+        let dir = std::env::temp_dir().join("panther_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("keep.ckpt");
+        let good = toy_state();
+        save(&good, &path).unwrap();
+        // A state with a mismatched moment shape must fail validation
+        // without touching the existing file.
+        let mut bad = toy_state();
+        bad.m[0] = HostTensor::zeros(&[1]);
+        assert!(save(&bad, &path).is_err());
+        let back = load(&path).unwrap();
+        assert_eq!(back.params, good.params);
         std::fs::remove_file(path).ok();
     }
 
@@ -154,6 +322,24 @@ mod tests {
         let path = dir.join("garbage.ckpt");
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_unknown_version() {
+        let dir = std::env::temp_dir().join("panther_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("future.ckpt");
+        let mut blob: Vec<u8> = Vec::new();
+        blob.extend_from_slice(b"PNTH");
+        blob.extend_from_slice(&9u32.to_le_bytes());
+        blob.extend_from_slice(&0u64.to_le_bytes());
+        blob.extend_from_slice(&1u32.to_le_bytes());
+        blob.push(b'x');
+        blob.extend_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&path, &blob).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("version"), "got: {err}");
         std::fs::remove_file(path).ok();
     }
 }

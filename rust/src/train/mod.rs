@@ -12,9 +12,15 @@ use crate::rng::Philox;
 use crate::runtime::{HostTensor, ModelSpec, Runtime};
 use anyhow::{bail, Context, Result};
 
-/// Host-side model state: params + Adam moments, in manifest order.
+/// Host-side model state: params + Adam moments, in manifest order, plus
+/// the manifest's parameter *names* — checkpoints (v2) and the serving path
+/// key tensors by name, the executable boundary stays positional.
 pub struct ModelState {
     pub model: String,
+    /// One name per entry of `params`/`m`/`v` (the manifest's
+    /// `param_names`). States restored from legacy v1 checkpoints carry
+    /// synthesized positional names (`param.0`, `param.1`, …).
+    pub names: Vec<String>,
     pub params: Vec<HostTensor>,
     pub m: Vec<HostTensor>,
     pub v: Vec<HostTensor>,
@@ -43,6 +49,7 @@ impl ModelState {
         let v: Vec<_> = it.collect();
         Ok(ModelState {
             model: model.to_string(),
+            names: spec.param_names.clone(),
             params,
             m,
             v,
@@ -59,6 +66,32 @@ impl ModelState {
     pub fn param<'a>(&'a self, spec: &ModelSpec, name: &str) -> Option<&'a HostTensor> {
         let idx = spec.param_names.iter().position(|n| n == name)?;
         self.params.get(idx)
+    }
+
+    /// Parameter tensor by its own stored name (no manifest needed).
+    pub fn param_named(&self, name: &str) -> Option<&HostTensor> {
+        let idx = self.names.iter().position(|n| n == name)?;
+        self.params.get(idx)
+    }
+
+    /// Name-keyed snapshot of the parameters — the same representation
+    /// [`crate::nn::Model::state_dict`] produces, so runtime states and
+    /// `nn` models exchange weights through one format. Params beyond the
+    /// stored names (hand-built nameless states) get the same synthesized
+    /// `param.{i}` keys checkpoint v2 writes for them.
+    pub fn state_dict(&self) -> crate::nn::StateDict {
+        self.params
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let name = self
+                    .names
+                    .get(i)
+                    .cloned()
+                    .unwrap_or_else(|| format!("param.{i}"));
+                (name, t.clone())
+            })
+            .collect()
     }
 }
 

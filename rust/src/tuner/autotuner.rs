@@ -17,11 +17,11 @@
 //! - `objective_fn` — what to optimize (minimize): latency, parameter
 //!   count, memory, ….
 
+use super::pruner::NoPruner;
 use super::sampler::Sampler;
 use super::space::{ParamAssignment, SearchSpace};
 use super::study::{Direction, Study};
-use super::pruner::NoPruner;
-use crate::nn::{LayerSelector, Model};
+use crate::nn::{LayerSelector, Model, SketchPlan};
 use anyhow::{Context, Result};
 
 /// How accuracy constrains the search.
@@ -159,11 +159,13 @@ where
         &self.matched
     }
 
-    /// Build a candidate model for an assignment (clones the dense base and
-    /// sketchifies the matched layers).
+    /// Build a candidate model for an assignment: clone the dense base and
+    /// compress the matched layers through a [`SketchPlan`] — the same
+    /// single path every other compression user takes.
     fn candidate(&self, params: &ParamAssignment, seed: u64) -> Result<Model> {
         let mut model = self.base.clone_model();
-        for (i, layer) in self.matched.iter().enumerate() {
+        let mut plan = SketchPlan::new().seed(seed);
+        for layer in &self.matched {
             let (terms_key, rank_key) = if self.config.separate {
                 (format!("{layer}::num_terms"), format!("{layer}::low_rank"))
             } else {
@@ -177,8 +179,20 @@ where
                 .get(&rank_key)
                 .and_then(|v| v.as_usize())
                 .context("missing low_rank")?;
-            model.sketchify(layer, l, k, seed ^ (i as u64) << 32)?;
+            plan = plan
+                .select(LayerSelector::by_names(&[layer.as_str()]))
+                .with(l, k);
         }
+        let report = plan.apply(&mut model)?;
+        anyhow::ensure!(
+            report.skipped.is_empty(),
+            "candidate left layers unconverted: {:?}",
+            report
+                .skipped
+                .iter()
+                .map(|s| s.name.as_str())
+                .collect::<Vec<_>>()
+        );
         Ok(model)
     }
 
@@ -241,43 +255,11 @@ where
     }
 }
 
-impl Model {
-    /// Clone the full layer registry (deep copy of all weights).
-    pub fn clone_model(&self) -> Model {
-        let mut m = Model::new();
-        for l in &self.layers {
-            m.add(&l.name, l.layer.clone_layer());
-        }
-        m
-    }
-}
-
-impl crate::nn::LayerKind {
-    fn clone_layer(&self) -> crate::nn::LayerKind {
-        use crate::nn::LayerKind::*;
-        match self {
-            Linear(l) => Linear(l.clone()),
-            SKLinear(l) => SKLinear(l.clone()),
-            Conv2d(c) => Conv2d(c.clone()),
-            SKConv2d(c) => SKConv2d(c.clone()),
-            Attention(a) => Attention(crate::nn::MultiHeadAttention {
-                weights: a.weights.clone(),
-            }),
-            RandAttention(a) => RandAttention(crate::nn::RandMultiHeadAttention::new(
-                a.weights.clone(),
-                a.num_features,
-                a.kernel,
-                0,
-            )),
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::linalg::Mat;
-    use crate::nn::{LayerKind, Linear};
+    use crate::nn::{ForwardCtx, Linear, Module};
     use crate::rng::Philox;
     use crate::tuner::sampler::{GridSampler, RandomSampler};
 
@@ -288,23 +270,19 @@ mod tests {
         let mut m = Model::new();
         // Layers must be large enough that rank-≤64 sketches actually
         // shrink them (the auto space caps low_rank at 64).
-        m.add("fc1", LayerKind::Linear(Linear::random(256, 256, &mut rng)));
-        m.add("fc2", LayerKind::Linear(Linear::random(256, 128, &mut rng)));
+        m.add("fc1", Linear::random(256, 256, &mut rng)).unwrap();
+        m.add("fc2", Linear::random(256, 128, &mut rng)).unwrap();
         let probe = Mat::randn(8, 256, &mut rng);
-        // Reference output of fc1 (we score fidelity on the first layer).
-        let reference = match m.get("fc1").unwrap() {
-            LayerKind::Linear(l) => l.forward(&probe),
-            _ => unreachable!(),
-        };
+        // Reference output of fc1 (we score fidelity on the first layer) —
+        // dense and sketched candidates answer through the same Module API.
+        let ctx = ForwardCtx::new();
+        let reference = m.get("fc1").unwrap().forward(&probe, &ctx).unwrap();
         (m, probe, reference)
     }
 
     fn fidelity(model: &Model, probe: &Mat, reference: &Mat) -> f64 {
-        let out = match model.get("fc1").unwrap() {
-            LayerKind::Linear(l) => l.forward(probe),
-            LayerKind::SKLinear(l) => l.forward(probe),
-            _ => unreachable!(),
-        };
+        let ctx = ForwardCtx::new();
+        let out = model.get("fc1").unwrap().forward(probe, &ctx).unwrap();
         // Higher is better: negative relative error.
         -crate::linalg::rel_error(&out, reference)
     }

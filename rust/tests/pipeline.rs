@@ -3,7 +3,7 @@
 
 use panther::decomp::{cqrrpt, rsvd, CqrrptOpts, RsvdOpts};
 use panther::linalg::{fro_norm, matmul, ortho_error, rel_error, Mat};
-use panther::nn::{LayerKind, LayerSelector, Linear, Model, SKLinear};
+use panther::nn::{ForwardCtx, LayerSelector, Linear, Model, Module, SKLinear};
 use panther::rng::Philox;
 use panther::sketch::{GaussianSketch, Sketch, SparseSignSketch};
 use panther::tuner::{AccuracyMode, GridSampler, SkAutoTuner, TuningConfig};
@@ -119,17 +119,23 @@ fn autotuner_compresses_multi_layer_model_under_constraint() {
         .iter()
         .enumerate()
     {
-        model.add(
-            &format!("encoder.layer{i}.fc"),
-            LayerKind::Linear(Linear::random(*din, *dout, &mut rng)),
-        );
+        model
+            .add(
+                &format!("encoder.layer{i}.fc"),
+                Linear::random(*din, *dout, &mut rng),
+            )
+            .unwrap();
     }
     let dense_params = model.total_params();
     let probe = Mat::randn(4, 256, &mut rng);
-    let reference = match model.get("encoder.layer0.fc").unwrap() {
-        LayerKind::Linear(l) => l.forward(&probe),
-        _ => unreachable!(),
-    };
+    // Dense reference and every candidate answer through the same Module
+    // API — no downcasting on layer type anywhere in the flow.
+    let ctx = ForwardCtx::new();
+    let reference = model
+        .get("encoder.layer0.fc")
+        .unwrap()
+        .forward(&probe, &ctx)
+        .unwrap();
     let mut tuner = SkAutoTuner::new(
         model,
         TuningConfig {
@@ -138,11 +144,12 @@ fn autotuner_compresses_multi_layer_model_under_constraint() {
             separate: false,
         },
         |m| {
-            let out = match m.get("encoder.layer0.fc").unwrap() {
-                LayerKind::Linear(l) => l.forward(&probe),
-                LayerKind::SKLinear(l) => l.forward(&probe),
-                _ => unreachable!(),
-            };
+            let ctx = ForwardCtx::new();
+            let out = m
+                .get("encoder.layer0.fc")
+                .unwrap()
+                .forward(&probe, &ctx)
+                .unwrap();
             -rel_error(&out, &reference)
         },
         AccuracyMode::AtLeast(-4.0),

@@ -1,0 +1,208 @@
+//! Serialization tests for the unified layer API: bit-exact
+//! `state_dict`/`load_state_dict` round-trips across all six layer types,
+//! checkpoint v2 round-trips, and legacy v1 checkpoint migration.
+
+use panther::linalg::Mat;
+use panther::nn::attention::{AttnWeights, KernelKind, MultiHeadAttention, RandMultiHeadAttention};
+use panther::nn::{Conv2d, ConvShape, ForwardCtx, Linear, Model, Module, SKConv2d, SKLinear};
+use panther::rng::Philox;
+use panther::runtime::HostTensor;
+use panther::train::{checkpoint, ModelState};
+use panther::util::prop::prop_check;
+
+/// Round-trip `layer` through its state dict into a zeroed clone and
+/// require bit-exact parameters AND a bit-exact forward (the latter
+/// catches stale derived state like `SKLinear`'s cached transposes).
+fn assert_bit_exact_roundtrip(layer: &dyn Module, x: &Mat) {
+    let sd = layer.state_dict();
+    let mut fresh = layer.boxed_clone();
+    for (_, mut p) in fresh.params_mut() {
+        p.data_mut().fill(0.0);
+    }
+    fresh.load_state_dict(&sd).unwrap();
+    let sd2 = fresh.state_dict();
+    assert_eq!(sd, sd2, "{}: state dict not bit-exact", layer.type_name());
+    let ctx = ForwardCtx::new();
+    let ya = layer.forward(x, &ctx).unwrap();
+    let yb = fresh.forward(x, &ctx).unwrap();
+    assert_eq!(
+        ya.data(),
+        yb.data(),
+        "{}: forward differs after load_state_dict",
+        layer.type_name()
+    );
+}
+
+#[test]
+fn state_dict_roundtrip_all_six_layer_types() {
+    let mut rng = Philox::seeded(901);
+    let x_lin = Mat::randn(4, 12, &mut rng);
+    assert_bit_exact_roundtrip(&Linear::random(12, 8, &mut rng), &x_lin);
+    assert_bit_exact_roundtrip(&SKLinear::random(12, 8, 2, 3, &mut rng), &x_lin);
+
+    let shape = ConvShape {
+        c_in: 2,
+        c_out: 3,
+        kernel: 3,
+        image: 6,
+        padding: 1,
+    };
+    let x_img = Mat::randn(2, 2 * 36, &mut rng);
+    assert_bit_exact_roundtrip(&Conv2d::random(shape, &mut rng), &x_img);
+    assert_bit_exact_roundtrip(&SKConv2d::random(shape, 2, 4, &mut rng), &x_img);
+
+    let x_tok = Mat::randn(6, 16, &mut rng);
+    assert_bit_exact_roundtrip(
+        &MultiHeadAttention::new(AttnWeights::random(16, 4, &mut rng)),
+        &x_tok,
+    );
+    assert_bit_exact_roundtrip(
+        &RandMultiHeadAttention::new(
+            AttnWeights::random(16, 4, &mut rng),
+            8,
+            KernelKind::Softmax,
+            3,
+        ),
+        &x_tok,
+    );
+}
+
+#[test]
+fn state_dict_roundtrip_property() {
+    prop_check("state-dict-roundtrip", 15, |g| {
+        let d_in = 1 + g.usize(0..16);
+        let d_out = 1 + g.usize(0..16);
+        let l = 1 + g.usize(0..3);
+        let k = 1 + g.usize(0..5);
+        let b = 1 + g.usize(0..4);
+        let x = Mat::randn(b, d_in, g.rng());
+        let sk = SKLinear::random(d_in, d_out, l, k, g.rng());
+        assert_bit_exact_roundtrip(&sk, &x);
+        let lin = Linear::random(d_in, d_out, g.rng());
+        assert_bit_exact_roundtrip(&lin, &x);
+    });
+}
+
+#[test]
+fn model_state_dict_survives_sketch_plan() {
+    // A sketched model's state dict round-trips through a freshly sketched
+    // clone of the same architecture.
+    let mut rng = Philox::seeded(902);
+    let mut m = Model::new();
+    m.add("ffn.fc1", Linear::random(24, 24, &mut rng)).unwrap();
+    m.add("ffn.fc2", Linear::random(24, 24, &mut rng)).unwrap();
+    m.sketchify("ffn.fc1", 1, 4, 7).unwrap();
+    let sd = m.state_dict();
+    let mut m2 = m.clone_model();
+    // Perturb, then restore.
+    for l in ["ffn.fc1", "ffn.fc2"] {
+        let module = m2.get_mut(l).unwrap();
+        for (_, mut p) in module.params_mut() {
+            p.data_mut().fill(0.5);
+        }
+        module.on_params_loaded();
+    }
+    assert_ne!(m2.state_dict(), sd);
+    m2.load_state_dict(&sd).unwrap();
+    assert_eq!(m2.state_dict(), sd);
+}
+
+fn toy_state() -> ModelState {
+    let mut rng = Philox::seeded(903);
+    let params = vec![
+        HostTensor::randn(&[3, 4], 1.0, &mut rng),
+        HostTensor::randn(&[5], 0.5, &mut rng),
+    ];
+    let m = params
+        .iter()
+        .map(|t| HostTensor::randn(t.shape(), 0.1, &mut rng))
+        .collect();
+    let v = params
+        .iter()
+        .map(|t| HostTensor::randn(t.shape(), 0.01, &mut rng))
+        .collect();
+    ModelState {
+        model: "toy".into(),
+        names: vec!["encoder.w".into(), "head.bias".into()],
+        params,
+        m,
+        v,
+        step: 7,
+    }
+}
+
+#[test]
+fn checkpoint_v2_roundtrip_is_bit_exact() {
+    let state = toy_state();
+    let dir = std::env::temp_dir().join("panther_state_dict_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("v2.ckpt");
+    checkpoint::save(&state, &path).unwrap();
+    let back = checkpoint::load(&path).unwrap();
+    assert_eq!(back.model, state.model);
+    assert_eq!(back.step, state.step);
+    assert_eq!(back.names, state.names);
+    assert_eq!(back.params, state.params);
+    assert_eq!(back.m, state.m);
+    assert_eq!(back.v, state.v);
+    // The name-keyed view matches too.
+    assert_eq!(back.state_dict(), state.state_dict());
+    std::fs::remove_file(path).ok();
+}
+
+/// Hand-craft a v1 blob (the legacy positional format: three groups of
+/// shape-prefixed tensors, no names) and verify the tensors land under the
+/// synthesized positional names with exact values.
+#[test]
+fn checkpoint_v1_files_still_load() {
+    let t0: Vec<f32> = vec![1.5, -2.25, 3.0, 0.125, 7.5, -0.5]; // shape [2,3]
+    let t1: Vec<f32> = vec![9.75]; // shape [1]
+    let mut blob: Vec<u8> = Vec::new();
+    blob.extend_from_slice(b"PNTH");
+    blob.extend_from_slice(&1u32.to_le_bytes()); // version 1
+    blob.extend_from_slice(&11u64.to_le_bytes()); // step
+    let name = b"legacy_model";
+    blob.extend_from_slice(&(name.len() as u32).to_le_bytes());
+    blob.extend_from_slice(name);
+    blob.extend_from_slice(&2u32.to_le_bytes()); // n_params
+    for group_scale in [1.0f32, 2.0, 3.0] {
+        // params, then m, then v — same shapes, distinguishable data.
+        blob.extend_from_slice(&2u32.to_le_bytes()); // rank
+        blob.extend_from_slice(&2u64.to_le_bytes());
+        blob.extend_from_slice(&3u64.to_le_bytes());
+        for x in &t0 {
+            blob.extend_from_slice(&(x * group_scale).to_le_bytes());
+        }
+        blob.extend_from_slice(&1u32.to_le_bytes()); // rank
+        blob.extend_from_slice(&1u64.to_le_bytes());
+        for x in &t1 {
+            blob.extend_from_slice(&(x * group_scale).to_le_bytes());
+        }
+    }
+    let dir = std::env::temp_dir().join("panther_state_dict_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("v1.ckpt");
+    std::fs::write(&path, &blob).unwrap();
+
+    let state = checkpoint::load(&path).unwrap();
+    assert_eq!(state.model, "legacy_model");
+    assert_eq!(state.step, 11);
+    assert_eq!(state.names, vec!["param.0", "param.1"]);
+    assert_eq!(state.params[0], HostTensor::new(&[2, 3], t0.clone()));
+    assert_eq!(state.params[1], HostTensor::new(&[1], t1.clone()));
+    let scaled = |xs: &[f32], s: f32| -> Vec<f32> { xs.iter().map(|x| x * s).collect() };
+    assert_eq!(state.m[0], HostTensor::new(&[2, 3], scaled(&t0, 2.0)));
+    assert_eq!(state.v[0], HostTensor::new(&[2, 3], scaled(&t0, 3.0)));
+    assert_eq!(state.m[1], HostTensor::new(&[1], scaled(&t1, 2.0)));
+    assert_eq!(state.v[1], HostTensor::new(&[1], scaled(&t1, 3.0)));
+    assert_eq!(state.param_named("param.1"), Some(&state.params[1]));
+
+    // Re-saving upgrades the file to v2 losslessly.
+    let path2 = dir.join("v1_resaved.ckpt");
+    checkpoint::save(&state, &path2).unwrap();
+    let back = checkpoint::load(&path2).unwrap();
+    assert_eq!(back.names, state.names);
+    assert_eq!(back.params, state.params);
+    std::fs::remove_file(path).ok();
+    std::fs::remove_file(path2).ok();
+}
