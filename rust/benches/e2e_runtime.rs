@@ -14,6 +14,53 @@ use panther::train::{BertTrainer, ModelState};
 use panther::util::bench::{Bencher, Table};
 
 fn main() -> anyhow::Result<()> {
+    // --- native Trainer step latency: dense vs sketched ---------------------
+    // The nn-side loss→backward→step loop needs no artifacts, so it runs
+    // (and is timed) unconditionally: what one fine-tune step costs on the
+    // dense stack vs the same stack after SketchPlan compression.
+    {
+        use panther::nn::{ForwardCtx, LayerSelector, Linear, Model, SketchPlan};
+        use panther::train::{Adam, Trainer};
+        println!("# Native Trainer (Module backward): ms/step dense vs sketched\n");
+        let bench = Bencher::quick();
+        let mut rng = Philox::seeded(17);
+        let (d, batch) = (512usize, 64usize);
+        let x = panther::linalg::Mat::randn(batch, d, &mut rng);
+        let build = |rng: &mut Philox| {
+            let mut m = Model::new();
+            m.add("ffn.fc1", Linear::random(d, d, rng)).unwrap();
+            m.add("ffn.fc2", Linear::random(d, d, rng)).unwrap();
+            m
+        };
+        let teacher = build(&mut rng);
+        let ctx = ForwardCtx::new().batch_hint(batch);
+        let y = teacher.forward(&x, &ctx)?;
+        let mut table = Table::new(&["model", "params", "train ms/step"]);
+        for sketched in [false, true] {
+            let mut model = build(&mut Philox::seeded(18));
+            let label = if sketched {
+                SketchPlan::new()
+                    .select(LayerSelector::by_regex(r"ffn\.fc\d")?)
+                    .with(1, 16)
+                    .seed(5)
+                    .apply(&mut model)?;
+                "mlp_sk_1_16"
+            } else {
+                "mlp_dense"
+            };
+            let params = model.total_params();
+            let mut tr = Trainer::new(Box::new(Adam::new(1e-3)));
+            tr.train_step(&mut model, &x, &y, &ctx)?; // warm (grad buffers)
+            let t = bench.run(label, || tr.train_step(&mut model, &x, &y, &ctx).unwrap());
+            table.row(&[
+                label.to_string(),
+                params.to_string(),
+                format!("{:.2}", t.mean_ms()),
+            ]);
+        }
+        println!("{}", table.render());
+    }
+
     let artifacts =
         std::env::var("PANTHER_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
     if !std::path::Path::new(&artifacts).join("manifest.json").exists() {

@@ -34,7 +34,17 @@ pub fn set_gemm_threads(n: usize) {
 
 fn pool() -> &'static ThreadPool {
     POOL.get_or_init(|| {
-        let n = GEMM_THREADS.load(Ordering::SeqCst);
+        let mut n = GEMM_THREADS.load(Ordering::SeqCst);
+        if n == 0 {
+            // Env override so whole test/bench runs can pin the kernel
+            // thread count without code changes (CI runs a
+            // PANTHER_GEMM_THREADS=1 lane to catch parallel/serial
+            // divergence).
+            n = std::env::var("PANTHER_GEMM_THREADS")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0);
+        }
         let n = if n == 0 {
             ThreadPool::default_size()
         } else {
@@ -65,7 +75,7 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
         return matmul_nt(a, &b.transpose());
     }
     let mut c = Mat::zeros(a.rows(), b.cols());
-    gemm_into(a, b, &mut c);
+    gemm_into(a, b, 1.0, &mut c);
     c
 }
 
@@ -183,30 +193,49 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
+/// The NT dot kernel: 8 independent f32 partial sums (keeps the FMA pipes
+/// full; a single accumulator serializes on the add latency), scalar tail.
+#[inline]
+fn nt_dot(arow: &[f32], brow: &[f32]) -> f32 {
+    let mut acc = [0f32; 8];
+    let chunks = arow.len() / 8 * 8;
+    let (ah, at) = arow.split_at(chunks);
+    let (bh, bt) = brow.split_at(chunks);
+    for (av, bv) in ah.chunks_exact(8).zip(bh.chunks_exact(8)) {
+        for p in 0..8 {
+            acc[p] += av[p] * bv[p];
+        }
+    }
+    let mut s = (acc[0] + acc[4]) + (acc[1] + acc[5]) + (acc[2] + acc[6]) + (acc[3] + acc[7]);
+    for (x, y) in at.iter().zip(bt) {
+        s += x * y;
+    }
+    s
+}
+
 /// One output row of the NT product: `crow[j] = arow · b.row(j)`.
 #[inline]
 fn nt_row(arow: &[f32], b: &Mat, crow: &mut [f32]) {
     for (j, cv) in crow.iter_mut().enumerate() {
-        let brow = b.row(j);
-        // 8 partial sums; the tail handled scalar.
-        let mut acc = [0f32; 8];
-        let chunks = arow.len() / 8 * 8;
-        let (ah, at) = arow.split_at(chunks);
-        let (bh, bt) = brow.split_at(chunks);
-        for (av, bv) in ah.chunks_exact(8).zip(bh.chunks_exact(8)) {
-            for p in 0..8 {
-                acc[p] += av[p] * bv[p];
-            }
-        }
-        let mut s = (acc[0] + acc[4]) + (acc[1] + acc[5]) + (acc[2] + acc[6]) + (acc[3] + acc[7]);
-        for (x, y) in at.iter().zip(bt) {
-            s += x * y;
-        }
-        *cv = s;
+        *cv = nt_dot(arow, b.row(j));
+    }
+}
+
+/// Accumulating variant: `crow[j] += alpha · (arow · b.row(j))`.
+#[inline]
+fn nt_row_accum(alpha: f32, arow: &[f32], b: &Mat, crow: &mut [f32]) {
+    for (j, cv) in crow.iter_mut().enumerate() {
+        *cv += alpha * nt_dot(arow, b.row(j));
     }
 }
 
 /// General `C = alpha·A·B + beta·C`.
+///
+/// The product accumulates `alpha·A·B` directly into `C` — no full m×n
+/// temporary is materialized (the old `matmul` + `axpy` route allocated
+/// one and traversed C twice). Kernel dispatch mirrors [`matmul`]: large
+/// products transpose B once and accumulate through the fast NT dot
+/// kernel; small ones run the blocked axpy kernel in place.
 pub fn gemm(alpha: f32, a: &Mat, b: &Mat, beta: f32, c: &mut Mat) {
     assert_eq!(a.cols(), b.rows());
     assert_eq!(c.rows(), a.rows());
@@ -219,12 +248,48 @@ pub fn gemm(alpha: f32, a: &Mat, b: &Mat, beta: f32, c: &mut Mat) {
     if alpha == 0.0 {
         return;
     }
-    let tmp = matmul(a, b);
-    c.axpy(alpha, &tmp);
+    let work = a.rows() * a.cols() * b.cols();
+    if a.rows() >= 8 && work >= 32 * 32 * 32 {
+        gemm_nt_accum(a, &b.transpose(), alpha, c);
+    } else {
+        gemm_into(a, b, alpha, c);
+    }
 }
 
-/// Core blocked kernel: `C += A · B`, parallel over row blocks.
-fn gemm_into(a: &Mat, b: &Mat, c: &mut Mat) {
+/// `C += alpha·A·Bᵀ` in the NT (dot-product) layout, parallel over row
+/// blocks — the same kernel [`matmul`] routes large products through,
+/// accumulating into C instead of materializing the product.
+fn gemm_nt_accum(a: &Mat, bt: &Mat, alpha: f32, c: &mut Mat) {
+    let m = a.rows();
+    let n = bt.rows();
+    let k = a.cols();
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let work = m * n * k;
+    if work < 64 * 64 * 64 {
+        for i in 0..m {
+            nt_row_accum(alpha, a.row(i), bt, c.row_mut(i));
+        }
+        return;
+    }
+    let cptr = SendPtr(c.data_mut().as_mut_ptr());
+    let cptr = &cptr;
+    let nblocks = m.div_ceil(MC);
+    pool().parallel_for(nblocks, move |ib| {
+        let i0 = ib * MC;
+        let i1 = ((ib + 1) * MC).min(m);
+        for i in i0..i1 {
+            // SAFETY: row i belongs to this worker's block; row blocks
+            // [i0, i1) are disjoint across ib, so no two live `&mut` alias.
+            let crow = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i * n), n) };
+            nt_row_accum(alpha, a.row(i), bt, crow);
+        }
+    });
+}
+
+/// Core blocked kernel: `C += alpha·A · B`, parallel over row blocks.
+fn gemm_into(a: &Mat, b: &Mat, alpha: f32, c: &mut Mat) {
     let m = a.rows();
     let k = a.cols();
     let n = b.cols();
@@ -237,7 +302,7 @@ fn gemm_into(a: &Mat, b: &Mat, c: &mut Mat) {
     if work < 64 * 64 * 64 || nblocks == 1 {
         let cbase = c.data_mut().as_mut_ptr();
         for ib in 0..nblocks {
-            gemm_rows_raw(a, b, cbase, ib * MC, ((ib + 1) * MC).min(m));
+            gemm_rows_raw(a, b, alpha, cbase, ib * MC, ((ib + 1) * MC).min(m));
         }
         return;
     }
@@ -248,15 +313,17 @@ fn gemm_into(a: &Mat, b: &Mat, c: &mut Mat) {
     pool().parallel_for(nblocks, move |ib| {
         let i0 = ib * MC;
         let i1 = ((ib + 1) * MC).min(m);
-        gemm_rows_raw(a, b, cptr.0, i0, i1);
+        gemm_rows_raw(a, b, alpha, cptr.0, i0, i1);
     });
 }
 
-/// `C[i0..i1, :] += A[i0..i1, :] · B` on raw C storage (row-major, n cols).
+/// `C[i0..i1, :] += alpha·A[i0..i1, :] · B` on raw C storage (row-major,
+/// n cols).
 ///
 /// Callers pass disjoint `[i0, i1)` row blocks per thread; the only `&mut`
-/// slices formed are over this block's own rows.
-fn gemm_rows_raw(a: &Mat, b: &Mat, cbase: *mut f32, i0: usize, i1: usize) {
+/// slices formed are over this block's own rows. `alpha` folds into the
+/// per-(i,p) scalar, so the inner kernel is unchanged.
+fn gemm_rows_raw(a: &Mat, b: &Mat, alpha: f32, cbase: *mut f32, i0: usize, i1: usize) {
     let k = a.cols();
     let n = b.cols();
     for p0 in (0..k).step_by(KC) {
@@ -267,7 +334,7 @@ fn gemm_rows_raw(a: &Mat, b: &Mat, cbase: *mut f32, i0: usize, i1: usize) {
             // block (row blocks partition C's rows).
             let crow = unsafe { std::slice::from_raw_parts_mut(cbase.add(i * n), n) };
             for p in p0..p1 {
-                let aip = arow[p];
+                let aip = alpha * arow[p];
                 if aip == 0.0 {
                     continue;
                 }
@@ -382,6 +449,41 @@ mod tests {
         gemm(2.0, &a, &b, 0.5, &mut c);
         let expect = matmul(&a, &b).scale(2.0).add(&Mat::filled(10, 8, 0.5));
         assert!(super::super::rel_error(&c, &expect) < 1e-5);
+    }
+
+    #[test]
+    fn gemm_alpha_beta_across_parallel_threshold() {
+        // (200, 300, 70): m spans several MC=64 row blocks and m·k·n
+        // clears the 64³ cutoff — the pooled NT accumulate path.
+        // (40, 50, 30): above the NT dispatch threshold but below the
+        // parallel cutoff — the serial NT accumulate path. (6, 50, 30):
+        // m < 8 — the blocked axpy kernel with alpha folded in. All must
+        // agree with the alpha·A·B + beta·C oracle built from naive parts.
+        let mut rng = Philox::seeded(11);
+        for &(m, k, n) in &[(200usize, 300usize, 70usize), (40, 50, 30), (6, 50, 30)] {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let c0 = Mat::randn(m, n, &mut rng);
+            let mut c = c0.clone();
+            gemm(1.5, &a, &b, -0.5, &mut c);
+            let expect = matmul_naive(&a, &b).scale(1.5).add(&c0.scale(-0.5));
+            assert!(
+                super::super::rel_error(&c, &expect) < 1e-4,
+                "({m},{k},{n}): rel {}",
+                super::super::rel_error(&c, &expect)
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_alpha_zero_only_scales_c() {
+        let mut rng = Philox::seeded(12);
+        let a = Mat::randn(6, 5, &mut rng);
+        let b = Mat::randn(5, 4, &mut rng);
+        let c0 = Mat::randn(6, 4, &mut rng);
+        let mut c = c0.clone();
+        gemm(0.0, &a, &b, 2.0, &mut c);
+        assert!(super::super::rel_error(&c, &c0.scale(2.0)) < 1e-6);
     }
 
     #[test]

@@ -9,11 +9,35 @@
 //! tensor exactly like `nn.MultiheadAttention` does, the Performer path
 //! only ever holds `n × m` feature blocks and the `m × d_h` running state.
 
-use super::module::{ForwardCtx, Module, ParamMut, ParamRef};
+use super::module::{Cache, ForwardCtx, GradStore, Module, ParamMut, ParamRef};
 use super::plan::Sketchable;
 use crate::linalg::{matmul, Mat};
 use crate::rng::{Philox, Rng};
-use crate::util::memtrack::{MemError, MemTracker};
+use crate::util::memtrack::{MemError, MemGuard, MemTracker};
+
+/// Shared backward tail of both attention variants: given per-head input
+/// gradients already assembled into `dq`/`dk`/`dv` (n×d, in *raw
+/// projection* space) and the cached input, accumulate the projection
+/// gradients and return `∂loss/∂x`.
+///
+/// `q = x·Wq` etc. ⇒ `dWq = xᵀ·dq`, `dx = dq·Wqᵀ + dk·Wkᵀ + dv·Wvᵀ`
+/// (the output-projection term is added by the caller).
+fn attn_proj_backward(
+    w: &AttnWeights,
+    grads: &mut GradStore,
+    x: &Mat,
+    dq: &Mat,
+    dk: &Mat,
+    dv: &Mat,
+) -> Mat {
+    grads.accum("wq", 1.0, crate::linalg::matmul_tn(x, dq).data());
+    grads.accum("wk", 1.0, crate::linalg::matmul_tn(x, dk).data());
+    grads.accum("wv", 1.0, crate::linalg::matmul_tn(x, dv).data());
+    let mut dx = crate::linalg::matmul_nt(dq, &w.wq);
+    dx.axpy(1.0, &crate::linalg::matmul_nt(dk, &w.wk));
+    dx.axpy(1.0, &crate::linalg::matmul_nt(dv, &w.wv));
+    dx
+}
 
 /// Named views of the shared Q/K/V/output projections (both attention
 /// variants expose identical parameter state — the Performer's random
@@ -81,35 +105,66 @@ impl AttnWeights {
 #[derive(Clone)]
 pub struct MultiHeadAttention {
     pub weights: AttnWeights,
+    grads: GradStore,
+}
+
+/// Activation cache of [`MultiHeadAttention::forward_train`]: input, raw
+/// projections, per-head softmax rows, and the pre-`Wo` head concat —
+/// the same `h·n·n` score memory the forward materializes.
+struct MhaCache {
+    x: Mat,
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    /// Per-head softmax probability matrices (n×n).
+    probs: Vec<Mat>,
+    /// Head outputs concatenated (n×d), before the output projection.
+    concat: Mat,
+    /// The forward's allocation guards — moved here instead of released,
+    /// so the cached activations stay charged against the tracker for
+    /// the cache's lifetime.
+    _guards: Vec<MemGuard>,
 }
 
 impl MultiHeadAttention {
     pub fn new(weights: AttnWeights) -> Self {
-        MultiHeadAttention { weights }
+        MultiHeadAttention {
+            weights,
+            grads: GradStore::default(),
+        }
     }
 
     /// Self-attention forward on `x: n × d`, tracking every temporary in
-    /// `mem`. Returns `n × d` or a budget error (the Fig. 3 "x").
-    fn forward_with(&self, x: &Mat, mem: &MemTracker) -> Result<Mat, MemError> {
+    /// `mem`. Returns `n × d` or a budget error (the Fig. 3 "x"). With
+    /// `want_cache`, also returns the activations backward needs.
+    fn forward_with(
+        &self,
+        x: &Mat,
+        mem: &MemTracker,
+        want_cache: bool,
+    ) -> Result<(Mat, Option<MhaCache>), MemError> {
         let w = &self.weights;
         let n = x.rows();
         let d = w.embed_dim;
         let h = w.num_heads;
         let dh = w.head_dim();
         assert_eq!(x.cols(), d);
-        // Projections (each n×d).
-        let _gq = mem.alloc((n * d * 4) as u64)?;
+        // Projections (each n×d). On the inference path the guards release
+        // on return; a training forward moves them into the cache so the
+        // retained activations stay accounted until backward.
+        let gq = mem.alloc((n * d * 4) as u64)?;
         let q = matmul(x, &w.wq);
-        let _gk = mem.alloc((n * d * 4) as u64)?;
+        let gk = mem.alloc((n * d * 4) as u64)?;
         let k = matmul(x, &w.wk);
-        let _gv = mem.alloc((n * d * 4) as u64)?;
+        let gv = mem.alloc((n * d * 4) as u64)?;
         let v = matmul(x, &w.wv);
         let mut out = Mat::zeros(n, d);
-        let _go = mem.alloc((n * d * 4) as u64)?;
+        let go = mem.alloc((n * d * 4) as u64)?;
         let scale = 1.0 / (dh as f32).sqrt();
         // The dense score matrix for ALL heads is what blows memory on GPUs;
         // PyTorch materializes (h, n, n) at once — we account the same.
-        let _gscores = mem.alloc((h * n * n * 4) as u64)?;
+        let gscores = mem.alloc((h * n * n * 4) as u64)?;
+        let mut probs = Vec::with_capacity(if want_cache { h } else { 0 });
         for head in 0..h {
             let c0 = head * dh;
             let qh = q.slice(0, n, c0, c0 + dh);
@@ -137,8 +192,21 @@ impl MultiHeadAttention {
             for i in 0..n {
                 out.row_mut(i)[c0..c0 + dh].copy_from_slice(oh.row(i));
             }
+            if want_cache {
+                probs.push(scores);
+            }
         }
-        Ok(matmul(&out, &w.wo))
+        let y = matmul(&out, &w.wo);
+        let cache = want_cache.then(|| MhaCache {
+            x: x.clone(),
+            q,
+            k,
+            v,
+            probs,
+            concat: out,
+            _guards: vec![gq, gk, gv, go, gscores],
+        });
+        Ok((y, cache))
     }
 }
 
@@ -148,7 +216,78 @@ impl Module for MultiHeadAttention {
     }
 
     fn forward(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<Mat> {
-        Ok(self.forward_with(x, ctx.mem())?)
+        Ok(self.forward_with(x, ctx.mem(), false)?.0)
+    }
+
+    fn forward_train(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<(Mat, Cache)> {
+        let (y, cache) = self.forward_with(x, ctx.mem(), true)?;
+        Ok((y, Cache::new(cache.expect("cache requested"))))
+    }
+
+    fn backward(&mut self, g: &Mat, cache: &Cache, ctx: &ForwardCtx) -> crate::Result<Mat> {
+        let c: &MhaCache = cache.downcast::<MhaCache>()?;
+        let w = &self.weights;
+        let n = c.x.rows();
+        let d = w.embed_dim;
+        let h = w.num_heads;
+        let dh = w.head_dim();
+        anyhow::ensure!(
+            g.shape() == (n, d),
+            "grad_out shape {:?} vs expected ({n}, {d})",
+            g.shape()
+        );
+        // Dominant transients: dq/dk/dv/dconcat (n×d each) plus one n×n
+        // score gradient per head alive at a time.
+        let _act = ctx.mem().alloc(((4 * n * d + n * n) * 4) as u64)?;
+        let scale = 1.0 / (dh as f32).sqrt();
+        // Output projection: y = concat·Wo.
+        let dwo = crate::linalg::matmul_tn(&c.concat, g); // d×d
+        let dconcat = crate::linalg::matmul_nt(g, &w.wo); // n×d
+        let mut dq = Mat::zeros(n, d);
+        let mut dk = Mat::zeros(n, d);
+        let mut dv = Mat::zeros(n, d);
+        for head in 0..h {
+            let c0 = head * dh;
+            let qh = c.q.slice(0, n, c0, c0 + dh);
+            let kh = c.k.slice(0, n, c0, c0 + dh);
+            let vh = c.v.slice(0, n, c0, c0 + dh);
+            let p = &c.probs[head];
+            let doh = dconcat.slice(0, n, c0, c0 + dh); // n×dh
+            // oh = P·Vh ⇒ dVh = Pᵀ·doh, dP = doh·Vhᵀ.
+            let dvh = crate::linalg::matmul_tn(p, &doh);
+            let mut ds = crate::linalg::matmul_nt(&doh, &vh); // dP, reused for dS
+            // Row-softmax backward: dS_ij = P_ij·(dP_ij − Σ_k dP_ik·P_ik).
+            for i in 0..n {
+                let dot: f64 = ds
+                    .row(i)
+                    .iter()
+                    .zip(p.row(i))
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum();
+                for (sv, &pv) in ds.row_mut(i).iter_mut().zip(p.row(i)) {
+                    *sv = pv * (*sv - dot as f32);
+                }
+            }
+            // S = scale·Qh·Khᵀ ⇒ dQh = scale·dS·Kh, dKh = scale·dSᵀ·Qh.
+            let dqh = matmul(&ds, &kh).scale(scale);
+            let dkh = crate::linalg::matmul_tn(&ds, &qh).scale(scale);
+            for i in 0..n {
+                dq.row_mut(i)[c0..c0 + dh].copy_from_slice(dqh.row(i));
+                dk.row_mut(i)[c0..c0 + dh].copy_from_slice(dkh.row(i));
+                dv.row_mut(i)[c0..c0 + dh].copy_from_slice(dvh.row(i));
+            }
+        }
+        let dx = attn_proj_backward(&self.weights, &mut self.grads, &c.x, &dq, &dk, &dv);
+        self.grads.accum("wo", 1.0, dwo.data());
+        Ok(dx)
+    }
+
+    fn grads(&self) -> Vec<(String, &[f32])> {
+        self.grads.views()
+    }
+
+    fn zero_grads(&mut self) {
+        self.grads.zero();
     }
 
     fn params(&self) -> Vec<(String, ParamRef<'_>)> {
@@ -178,6 +317,38 @@ pub struct RandMultiHeadAttention {
     pub kernel: KernelKind,
     /// Per-head random projection `ω: d_h × m` (orthogonal-ish gaussian).
     features: Vec<Mat>,
+    grads: GradStore,
+}
+
+/// Per-head slice of [`RandMhaCache`]: everything the linear-attention
+/// backward reuses — all `O(n·m + m·d_h)`, never `n×n`.
+struct PerfHead {
+    /// Scaled Q/K head slices (the feature-map inputs) and the V slice.
+    qh: Mat,
+    kh: Mat,
+    vh: Mat,
+    phi_q: Mat,
+    phi_k: Mat,
+    /// `φ(K)ᵀ·V` (m × d_h).
+    kv: Mat,
+    /// Normalizer `φ(K)ᵀ·1` (length m).
+    z: Vec<f32>,
+    /// Numerator `φ(Q)·kv` (n × d_h).
+    num: Mat,
+    /// Pre-clamp denominators `φ(Q)_i·z` — backward zeroes the normalizer
+    /// gradient where the forward's `max(·, 1e-9)` clamp was active.
+    den_raw: Vec<f32>,
+}
+
+/// Activation cache of [`RandMultiHeadAttention::forward_train`].
+struct RandMhaCache {
+    x: Mat,
+    /// Head outputs concatenated (n×d), before the output projection.
+    concat: Mat,
+    heads: Vec<PerfHead>,
+    /// The forward's allocation guards (projections + per-head state) —
+    /// kept charged for the cache's lifetime.
+    _guards: Vec<MemGuard>,
 }
 
 impl RandMultiHeadAttention {
@@ -192,6 +363,7 @@ impl RandMultiHeadAttention {
             num_features,
             kernel,
             features,
+            grads: GradStore::default(),
         }
     }
 
@@ -244,8 +416,14 @@ impl RandMultiHeadAttention {
 
     /// Linear-attention forward: `out = φ(Q)·(φ(K)ᵀV) / (φ(Q)·φ(K)ᵀ1)`.
     /// Never materializes an n×n matrix — peak extra memory is
-    /// `O(n·m + m·d_h)` per head.
-    fn forward_with(&self, x: &Mat, mem: &MemTracker) -> Result<Mat, MemError> {
+    /// `O(n·m + m·d_h)` per head. With `want_cache`, the per-head
+    /// temporaries are kept for backward instead of released.
+    fn forward_with(
+        &self,
+        x: &Mat,
+        mem: &MemTracker,
+        want_cache: bool,
+    ) -> Result<(Mat, Option<RandMhaCache>), MemError> {
         let w = &self.weights;
         let n = x.rows();
         let d = w.embed_dim;
@@ -253,19 +431,26 @@ impl RandMultiHeadAttention {
         let dh = w.head_dim();
         let m = self.num_features;
         assert_eq!(x.cols(), d);
-        let _gq = mem.alloc((n * d * 4) as u64)?;
+        let gq = mem.alloc((n * d * 4) as u64)?;
         let q = matmul(x, &w.wq);
-        let _gk = mem.alloc((n * d * 4) as u64)?;
+        let gk = mem.alloc((n * d * 4) as u64)?;
         let k = matmul(x, &w.wk);
-        let _gv = mem.alloc((n * d * 4) as u64)?;
+        let gv = mem.alloc((n * d * 4) as u64)?;
         let v = matmul(x, &w.wv);
         let mut out = Mat::zeros(n, d);
-        let _go = mem.alloc((n * d * 4) as u64)?;
+        let go = mem.alloc((n * d * 4) as u64)?;
         // Per-head temporaries: φ(Q), φ(K) (n×m each), KV state (m×dh),
-        // normalizer (m). Accounted per head, released before the next.
+        // normalizer (m). Released before the next head on the inference
+        // path; a training forward keeps every guard in the cache so the
+        // retained per-head state stays accounted until backward.
         let scale = 1.0 / (dh as f32).sqrt();
+        let mut heads = Vec::with_capacity(if want_cache { h } else { 0 });
+        let mut guards = vec![gq, gk, gv, go];
         for head in 0..h {
-            let _ghead = mem.alloc(((2 * n * m + m * dh + m) * 4) as u64)?;
+            let ghead = mem.alloc(((2 * n * m + m * dh + m) * 4) as u64)?;
+            if want_cache {
+                guards.push(ghead);
+            }
             let c0 = head * dh;
             let qh = q.slice(0, n, c0, c0 + dh).scale(scale);
             let kh = k.slice(0, n, c0, c0 + dh).scale(scale);
@@ -282,21 +467,85 @@ impl RandMultiHeadAttention {
                 }
             }
             let num = matmul(&phi_q, &kv); // n × dh
+            let mut den_raw = vec![0f32; n];
             for i in 0..n {
-                let denom: f32 = phi_q
+                let dot: f32 = phi_q
                     .row(i)
                     .iter()
                     .zip(&z)
                     .map(|(&a, &b)| a * b)
-                    .sum::<f32>()
-                    .max(1e-9);
+                    .sum::<f32>();
+                den_raw[i] = dot;
+                let denom = dot.max(1e-9);
                 let orow = &mut out.row_mut(i)[c0..c0 + dh];
                 for (o, &nv) in orow.iter_mut().zip(num.row(i)) {
                     *o = nv / denom;
                 }
             }
+            if want_cache {
+                heads.push(PerfHead {
+                    qh,
+                    kh,
+                    vh,
+                    phi_q,
+                    phi_k,
+                    kv,
+                    z,
+                    num,
+                    den_raw,
+                });
+            }
         }
-        Ok(matmul(&out, &w.wo))
+        let y = matmul(&out, &w.wo);
+        let cache = want_cache.then(|| RandMhaCache {
+            x: x.clone(),
+            concat: out,
+            heads,
+            _guards: guards,
+        });
+        Ok((y, cache))
+    }
+
+    /// Backward through the FAVOR+ feature map: given `∂loss/∂φ` and the
+    /// cached `φ` for the (scaled) head input `xh`, return `∂loss/∂xh`.
+    ///
+    /// Softmax features `φ = exp(ωᵀx − ‖x‖²/2 − c)/√m`: with `e = dφ⊙φ`,
+    /// `dx = e·ωᵀ − rowsum(e)·x`. The stabilizer `c` is treated as a
+    /// constant: the normalized attention output is exactly invariant to
+    /// it (it rescales numerator and denominator identically), so its true
+    /// gradient contribution is zero. ReLU features: the gradient passes
+    /// `ω` where `φ > 0`.
+    fn feature_map_backward(&self, dphi: &Mat, phi: &Mat, xh: &Mat, head: usize) -> Mat {
+        let m = self.num_features;
+        let s = 1.0 / (m as f32).sqrt();
+        let mut e = Mat::zeros(dphi.rows(), m);
+        match self.kernel {
+            KernelKind::Softmax => {
+                for i in 0..e.rows() {
+                    let (dr, pr) = (dphi.row(i), phi.row(i));
+                    for (j, ev) in e.row_mut(i).iter_mut().enumerate() {
+                        *ev = dr[j] * pr[j];
+                    }
+                }
+                let mut dxh = crate::linalg::matmul_nt(&e, &self.features[head]);
+                for i in 0..dxh.rows() {
+                    let rs: f32 = e.row(i).iter().sum();
+                    for (dv, &xv) in dxh.row_mut(i).iter_mut().zip(xh.row(i)) {
+                        *dv -= rs * xv;
+                    }
+                }
+                dxh
+            }
+            KernelKind::Relu => {
+                for i in 0..e.rows() {
+                    let (dr, pr) = (dphi.row(i), phi.row(i));
+                    for (j, ev) in e.row_mut(i).iter_mut().enumerate() {
+                        *ev = if pr[j] > 0.0 { dr[j] * s } else { 0.0 };
+                    }
+                }
+                crate::linalg::matmul_nt(&e, &self.features[head])
+            }
+        }
     }
 
     /// Extra parameters vs dense attention: the random features are fixed
@@ -328,7 +577,107 @@ impl Module for RandMultiHeadAttention {
     }
 
     fn forward(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<Mat> {
-        Ok(self.forward_with(x, ctx.mem())?)
+        Ok(self.forward_with(x, ctx.mem(), false)?.0)
+    }
+
+    fn forward_train(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<(Mat, Cache)> {
+        let (y, cache) = self.forward_with(x, ctx.mem(), true)?;
+        Ok((y, Cache::new(cache.expect("cache requested"))))
+    }
+
+    fn backward(&mut self, g: &Mat, cache: &Cache, ctx: &ForwardCtx) -> crate::Result<Mat> {
+        let c: &RandMhaCache = cache.downcast::<RandMhaCache>()?;
+        let w = &self.weights;
+        let n = c.x.rows();
+        let d = w.embed_dim;
+        let h = w.num_heads;
+        let dh = w.head_dim();
+        let m = self.num_features;
+        anyhow::ensure!(
+            g.shape() == (n, d),
+            "grad_out shape {:?} vs expected ({n}, {d})",
+            g.shape()
+        );
+        anyhow::ensure!(c.heads.len() == h, "cache head count mismatch");
+        // Dominant transients: dq/dk/dv/dconcat (n×d each) plus per-head
+        // dφ matrices (2·n×m) — still linear in n, like the forward.
+        let _act = ctx.mem().alloc(((4 * n * d + 2 * n * m) * 4) as u64)?;
+        let scale = 1.0 / (dh as f32).sqrt();
+        // Output projection: y = concat·Wo.
+        let dwo = crate::linalg::matmul_tn(&c.concat, g); // d×d
+        let dconcat = crate::linalg::matmul_nt(g, &w.wo); // n×d
+        let mut dq = Mat::zeros(n, d);
+        let mut dk = Mat::zeros(n, d);
+        let mut dv = Mat::zeros(n, d);
+        for head in 0..h {
+            let hc = &c.heads[head];
+            let c0 = head * dh;
+            let doh = dconcat.slice(0, n, c0, c0 + dh); // n×dh
+            // out_i = num_i / den_i with den = max(φq_i·z, 1e-9):
+            //   d_num_i = doh_i/den_i,
+            //   d_den_i = −(doh_i·num_i)/den_i²  (zero where the clamp hit).
+            let mut d_num = Mat::zeros(n, dh);
+            let mut d_den = vec![0f32; n];
+            for i in 0..n {
+                let den = hc.den_raw[i].max(1e-9);
+                for (dnv, &gv) in d_num.row_mut(i).iter_mut().zip(doh.row(i)) {
+                    *dnv = gv / den;
+                }
+                if hc.den_raw[i] > 1e-9 {
+                    let gn: f64 = doh
+                        .row(i)
+                        .iter()
+                        .zip(hc.num.row(i))
+                        .map(|(&a, &b)| a as f64 * b as f64)
+                        .sum();
+                    d_den[i] = -(gn / (den as f64 * den as f64)) as f32;
+                }
+            }
+            // num = φq·kv, den = φq·z:
+            //   dφq = d_num·kvᵀ + d_den⊗z,  d_kv = φqᵀ·d_num,  dz = φqᵀ·d_den.
+            let mut dphi_q = crate::linalg::matmul_nt(&d_num, &hc.kv); // n×m
+            for i in 0..n {
+                let dd = d_den[i];
+                for (pv, &zv) in dphi_q.row_mut(i).iter_mut().zip(&hc.z) {
+                    *pv += dd * zv;
+                }
+            }
+            let d_kv = crate::linalg::matmul_tn(&hc.phi_q, &d_num); // m×dh
+            let dz = hc.phi_q.matvec_t(&d_den); // m
+            // kv = φkᵀ·vh, z = φkᵀ·1:
+            //   dφk = vh·d_kvᵀ + 1⊗dz,  dvh = φk·d_kv.
+            let mut dphi_k = crate::linalg::matmul_nt(&hc.vh, &d_kv); // n×m
+            for i in 0..n {
+                for (pv, &zv) in dphi_k.row_mut(i).iter_mut().zip(&dz) {
+                    *pv += zv;
+                }
+            }
+            let dvh = matmul(&hc.phi_k, &d_kv); // n×dh
+            // Through the (fixed) random-feature maps to the scaled slices,
+            // then undo the 1/√dh scaling back to raw projection space.
+            let dqh = self.feature_map_backward(&dphi_q, &hc.phi_q, &hc.qh, head);
+            let dkh = self.feature_map_backward(&dphi_k, &hc.phi_k, &hc.kh, head);
+            for i in 0..n {
+                for (slot, &v) in dq.row_mut(i)[c0..c0 + dh].iter_mut().zip(dqh.row(i)) {
+                    *slot = v * scale;
+                }
+                for (slot, &v) in dk.row_mut(i)[c0..c0 + dh].iter_mut().zip(dkh.row(i)) {
+                    *slot = v * scale;
+                }
+                dv.row_mut(i)[c0..c0 + dh].copy_from_slice(dvh.row(i));
+            }
+        }
+        let dx = attn_proj_backward(&self.weights, &mut self.grads, &c.x, &dq, &dk, &dv);
+        self.grads.accum("wo", 1.0, dwo.data());
+        Ok(dx)
+    }
+
+    fn grads(&self) -> Vec<(String, &[f32])> {
+        self.grads.views()
+    }
+
+    fn zero_grads(&mut self) {
+        self.grads.zero();
     }
 
     fn params(&self) -> Vec<(String, ParamRef<'_>)> {

@@ -8,10 +8,11 @@
 //! Figure-2 experiment reduces to the same two-stage low-rank product with a
 //! patch-extraction preamble shared by both sides.
 
-use super::module::{ForwardCtx, Module, ParamMut, ParamRef};
+use super::module::{col_sums, Cache, ForwardCtx, GradStore, Module, ParamMut, ParamRef};
 use super::plan::Sketchable;
 use crate::linalg::{matmul, Mat};
 use crate::rng::Rng;
+use crate::util::memtrack::MemGuard;
 
 /// Shape bookkeeping for a (square-kernel, stride-1) convolution.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -79,6 +80,43 @@ pub fn im2col_into(x: &Mat, shape: &ConvShape, out: &mut Mat) {
     }
 }
 
+/// Adjoint of [`im2col`]: scatter-add per-patch-row gradients back onto
+/// the input layout. `cols_grad: (B·H_out·W_out) × (C_in·kh·kw)` →
+/// `B × (C_in·H·W)`. Every input pixel accumulates the contributions of
+/// all patches that read it (overlapping windows), padding positions are
+/// dropped — exactly the transpose of the gather `im2col` performs.
+pub fn col2im(cols_grad: &Mat, shape: &ConvShape, batch: usize) -> Mat {
+    let (c, h) = (shape.c_in, shape.image);
+    let ho = shape.out_size();
+    let k = shape.kernel;
+    let pad = shape.padding as isize;
+    assert_eq!(cols_grad.rows(), batch * ho * ho, "patch-row count mismatch");
+    assert_eq!(cols_grad.cols(), shape.patch_dim(), "patch width mismatch");
+    let mut x = Mat::zeros(batch, c * h * h);
+    for bi in 0..batch {
+        let img = x.row_mut(bi);
+        for oy in 0..ho {
+            for ox in 0..ho {
+                let grow = cols_grad.row((bi * ho + oy) * ho + ox);
+                let mut idx = 0;
+                for ci in 0..c {
+                    for ky in 0..k {
+                        let iy = oy as isize + ky as isize - pad;
+                        for kx in 0..k {
+                            let ix = ox as isize + kx as isize - pad;
+                            if iy >= 0 && iy < h as isize && ix >= 0 && ix < h as isize {
+                                img[ci * h * h + iy as usize * h + ix as usize] += grow[idx];
+                            }
+                            idx += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    x
+}
+
 /// Dense convolution layer.
 #[derive(Clone, Debug)]
 pub struct Conv2d {
@@ -86,6 +124,20 @@ pub struct Conv2d {
     /// Reshaped kernel: `(C_in·k²) × C_out`.
     pub w_mat: Mat,
     pub bias: Vec<f32>,
+    grads: GradStore,
+}
+
+/// Activation cache of the conv training forwards: the im2col patch
+/// matrix (owned — the inference path's shared scratch buffer cannot
+/// outlive the call) plus the batch size `col2im` needs to rebuild the
+/// input layout. `SKConv2d` additionally keeps the per-term `cols·U_j`.
+struct ConvCache {
+    cols: Mat,
+    batch: usize,
+    /// `cols·U_j` per term — empty for the dense layer.
+    cu: Vec<Mat>,
+    /// Keeps the cached bytes charged for the cache's lifetime.
+    _guard: MemGuard,
 }
 
 impl Conv2d {
@@ -96,6 +148,7 @@ impl Conv2d {
             shape,
             w_mat,
             bias: vec![0.0; shape.c_out],
+            grads: GradStore::default(),
         }
     }
 
@@ -136,6 +189,62 @@ impl Module for Conv2d {
         Ok(self.forward_cols(&cols))
     }
 
+    fn forward_train(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<(Mat, Cache)> {
+        let ho = self.shape.out_size();
+        let rows = x.rows() * ho * ho;
+        // Transient: the GEMM output. The patch matrix is owned by the
+        // cache (it must survive until backward), so its charge rides a
+        // guard inside the cache rather than the shared scratch.
+        let _act = ctx.mem().alloc((rows * self.shape.c_out * 4) as u64)?;
+        let guard = ctx
+            .mem()
+            .alloc((rows * self.shape.patch_dim() * 4) as u64)?;
+        let cols = im2col(x, &self.shape);
+        let y = self.forward_cols(&cols);
+        Ok((
+            y,
+            Cache::new(ConvCache {
+                cols,
+                batch: x.rows(),
+                cu: Vec::new(),
+                _guard: guard,
+            }),
+        ))
+    }
+
+    fn backward(&mut self, g: &Mat, cache: &Cache, ctx: &ForwardCtx) -> crate::Result<Mat> {
+        let c: &ConvCache = cache.downcast::<ConvCache>()?;
+        anyhow::ensure!(
+            g.shape() == (c.cols.rows(), self.shape.c_out),
+            "grad_out shape {:?} vs expected ({}, {})",
+            g.shape(),
+            c.cols.rows(),
+            self.shape.c_out
+        );
+        let pd = self.shape.patch_dim();
+        // Transients: dW (pd×C_out), dcols (rows×pd), dx (B×C_in·H²).
+        let _act = ctx.mem().alloc(
+            ((pd * self.shape.c_out + g.rows() * pd + c.batch * self.shape.c_in
+                * self.shape.image * self.shape.image)
+                * 4) as u64,
+        )?;
+        // y = cols·W + b  ⇒  dW = colsᵀ·g, db = colsum(g),
+        // dx = col2im(g·Wᵀ).
+        let dw = crate::linalg::matmul_tn(&c.cols, g);
+        self.grads.accum("weight", 1.0, dw.data());
+        self.grads.accum("bias", 1.0, &col_sums(g));
+        let dcols = crate::linalg::matmul_nt(g, &self.w_mat);
+        Ok(col2im(&dcols, &self.shape, c.batch))
+    }
+
+    fn grads(&self) -> Vec<(String, &[f32])> {
+        self.grads.views()
+    }
+
+    fn zero_grads(&mut self) {
+        self.grads.zero();
+    }
+
     fn params(&self) -> Vec<(String, ParamRef<'_>)> {
         vec![
             ("weight".to_string(), ParamRef::Mat(&self.w_mat)),
@@ -169,6 +278,7 @@ pub struct SKConv2d {
     pub u: Vec<Mat>,
     pub v: Vec<Mat>,
     pub bias: Vec<f32>,
+    grads: GradStore,
 }
 
 impl SKConv2d {
@@ -195,6 +305,7 @@ impl SKConv2d {
             u,
             v,
             bias: vec![0.0; shape.c_out],
+            grads: GradStore::default(),
         }
     }
 
@@ -218,6 +329,7 @@ impl SKConv2d {
             u,
             v,
             bias: dense.bias.clone(),
+            grads: GradStore::default(),
         }
     }
 
@@ -236,9 +348,12 @@ impl SKConv2d {
 
     pub fn forward_cols(&self, cols: &Mat) -> Mat {
         let mut y = Mat::zeros(cols.rows(), self.shape.c_out);
+        let inv_l = 1.0 / self.num_terms as f32;
         for (uj, vj) in self.u.iter().zip(&self.v) {
-            let t = matmul(&matmul(cols, uj), vj);
-            y.axpy(1.0 / self.num_terms as f32, &t);
+            // Accumulate each term's second stage in place — no rows×C_out
+            // temporary per term (the gemm kernel folds the 1/l scale in).
+            let cu = matmul(cols, uj); // rows×r
+            crate::linalg::gemm(inv_l, &cu, vj, 1.0, &mut y);
         }
         for i in 0..y.rows() {
             for (v, b) in y.row_mut(i).iter_mut().zip(&self.bias) {
@@ -258,14 +373,96 @@ impl Module for SKConv2d {
         let ho = self.shape.out_size();
         let rows = x.rows() * ho * ho;
         // im2col patches are charged by scratch_mat; the transients are the
-        // output plus one rows×r intermediate and one rows×C_out product
-        // alive per term.
+        // output plus one rows×r intermediate alive per term (the second
+        // stage accumulates in place via gemm).
         let _act = ctx
             .mem()
-            .alloc((rows * (2 * self.shape.c_out + self.low_rank) * 4) as u64)?;
+            .alloc((rows * (self.shape.c_out + self.low_rank) * 4) as u64)?;
         let mut cols = ctx.scratch_mat(rows, self.shape.patch_dim())?;
         im2col_into(x, &self.shape, &mut cols);
         Ok(self.forward_cols(&cols))
+    }
+
+    fn forward_train(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<(Mat, Cache)> {
+        let ho = self.shape.out_size();
+        let rows = x.rows() * ho * ho;
+        // Transient: the output (the per-term second stage accumulates in
+        // place via gemm). Cached (charged until the cache drops): patches
+        // plus l rows×r intermediates.
+        let _act = ctx.mem().alloc((rows * self.shape.c_out * 4) as u64)?;
+        let cached = rows * (self.shape.patch_dim() + self.num_terms * self.low_rank);
+        let guard = ctx.mem().alloc((cached * 4) as u64)?;
+        let cols = im2col(x, &self.shape);
+        let mut y = Mat::zeros(rows, self.shape.c_out);
+        let inv_l = 1.0 / self.num_terms as f32;
+        let mut cu_all = Vec::with_capacity(self.num_terms);
+        for (uj, vj) in self.u.iter().zip(&self.v) {
+            let cu = matmul(&cols, uj); // rows×r
+            crate::linalg::gemm(inv_l, &cu, vj, 1.0, &mut y);
+            cu_all.push(cu);
+        }
+        for i in 0..y.rows() {
+            for (vv, b) in y.row_mut(i).iter_mut().zip(&self.bias) {
+                *vv += b;
+            }
+        }
+        Ok((
+            y,
+            Cache::new(ConvCache {
+                cols,
+                batch: x.rows(),
+                cu: cu_all,
+                _guard: guard,
+            }),
+        ))
+    }
+
+    fn backward(&mut self, g: &Mat, cache: &Cache, ctx: &ForwardCtx) -> crate::Result<Mat> {
+        let c: &ConvCache = cache.downcast::<ConvCache>()?;
+        anyhow::ensure!(
+            c.cu.len() == self.num_terms,
+            "cache holds {} terms, layer has {}",
+            c.cu.len(),
+            self.num_terms
+        );
+        anyhow::ensure!(
+            g.shape() == (c.cols.rows(), self.shape.c_out),
+            "grad_out shape {:?} vs expected ({}, {})",
+            g.shape(),
+            c.cols.rows(),
+            self.shape.c_out
+        );
+        let pd = self.shape.patch_dim();
+        let rows = g.rows();
+        // Transients: per-term dU/dV/g·Vᵀ plus the running dcols and dx.
+        let _act = ctx.mem().alloc(
+            ((self.low_rank * (pd + self.shape.c_out + rows)
+                + rows * pd
+                + c.batch * self.shape.c_in * self.shape.image * self.shape.image)
+                * 4) as u64,
+        )?;
+        // Same two-stage low-rank product as SKLinear, on the patch matrix;
+        // the patch gradient then scatters back through col2im.
+        let inv_l = 1.0 / self.num_terms as f32;
+        let mut dcols = Mat::zeros(rows, pd);
+        for j in 0..self.num_terms {
+            let gv = crate::linalg::matmul_nt(g, &self.v[j]); // rows×r
+            let du = crate::linalg::matmul_tn(&c.cols, &gv); // pd×r
+            self.grads.accum(&format!("u.{j}"), inv_l, du.data());
+            let dv = crate::linalg::matmul_tn(&c.cu[j], g); // r×C_out
+            self.grads.accum(&format!("v.{j}"), inv_l, dv.data());
+            dcols.axpy(inv_l, &crate::linalg::matmul_nt(&gv, &self.u[j]));
+        }
+        self.grads.accum("bias", 1.0, &col_sums(g));
+        Ok(col2im(&dcols, &self.shape, c.batch))
+    }
+
+    fn grads(&self) -> Vec<(String, &[f32])> {
+        self.grads.views()
+    }
+
+    fn zero_grads(&mut self) {
+        self.grads.zero();
     }
 
     fn params(&self) -> Vec<(String, ParamRef<'_>)> {
@@ -314,6 +511,35 @@ mod tests {
         // Pixel (y,x) of channel c lands at row y*4+x, col c.
         assert_eq!(cols.get(5, 0), 5.0);
         assert_eq!(cols.get(5, 1), 21.0);
+    }
+
+    #[test]
+    fn col2im_is_the_adjoint_of_im2col() {
+        // ⟨im2col(x), C⟩ = ⟨x, col2im(C)⟩ for any x, C — the defining
+        // property of the transpose map the conv backward relies on.
+        let shape = small_shape();
+        let mut rng = Philox::seeded(124);
+        let b = 2;
+        let x = Mat::randn(b, shape.c_in * shape.image * shape.image, &mut rng);
+        let cols = im2col(&x, &shape);
+        let c = Mat::randn(cols.rows(), cols.cols(), &mut rng);
+        let back = col2im(&c, &shape, b);
+        let lhs: f64 = cols
+            .data()
+            .iter()
+            .zip(c.data())
+            .map(|(&a, &bb)| a as f64 * bb as f64)
+            .sum();
+        let rhs: f64 = x
+            .data()
+            .iter()
+            .zip(back.data())
+            .map(|(&a, &bb)| a as f64 * bb as f64)
+            .sum();
+        assert!(
+            (lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0),
+            "adjoint identity: {lhs} vs {rhs}"
+        );
     }
 
     #[test]

@@ -18,10 +18,11 @@
 //! Forward cost: `2·l·k·(d_in+d_out)` FLOPs/row vs `2·d_in·d_out` dense —
 //! the Figure-1 crossover.
 
-use super::module::{ForwardCtx, Module, ParamMut, ParamRef};
+use super::module::{col_sums, Cache, ForwardCtx, GradStore, Module, ParamMut, ParamRef};
 use super::plan::Sketchable;
 use crate::linalg::{matmul, Mat};
 use crate::rng::Rng;
+use crate::util::memtrack::MemGuard;
 
 /// Dense fully-connected layer, `y = x·Wᵀ + b` (PyTorch convention:
 /// `weight` is `d_out × d_in`).
@@ -29,12 +30,27 @@ use crate::rng::Rng;
 pub struct Linear {
     pub weight: Mat, // d_out × d_in
     pub bias: Vec<f32>,
+    grads: GradStore,
+}
+
+/// Activation cache of [`Linear::forward_train`]: just the input. The
+/// guard keeps the cached bytes charged against the tracker for as long
+/// as the cache lives, so budgeted training runs account the activations
+/// retained across the whole layer stack, not just one layer's
+/// transients.
+struct LinearCache {
+    x: Mat,
+    _guard: MemGuard,
 }
 
 impl Linear {
     pub fn new(weight: Mat, bias: Vec<f32>) -> Self {
         assert_eq!(weight.rows(), bias.len());
-        Linear { weight, bias }
+        Linear {
+            weight,
+            bias,
+            grads: GradStore::default(),
+        }
     }
 
     /// Kaiming-ish random init (for tests/benches).
@@ -44,6 +60,7 @@ impl Linear {
         Linear {
             weight,
             bias: vec![0.0; d_out],
+            grads: GradStore::default(),
         }
     }
 
@@ -78,6 +95,50 @@ impl Module for Linear {
         // One transient activation: the B×d_out output.
         let _act = ctx.mem().alloc((x.rows() * self.d_out() * 4) as u64)?;
         Ok(Linear::forward(self, x))
+    }
+
+    fn forward_train(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<(Mat, Cache)> {
+        // Transient: the B×d_out output. The cached input is charged on a
+        // guard that lives inside the cache (released when the cache
+        // drops, typically after backward).
+        let _act = ctx.mem().alloc((x.rows() * self.d_out() * 4) as u64)?;
+        let guard = ctx.mem().alloc((x.rows() * self.d_in() * 4) as u64)?;
+        let y = Linear::forward(self, x);
+        Ok((
+            y,
+            Cache::new(LinearCache {
+                x: x.clone(),
+                _guard: guard,
+            }),
+        ))
+    }
+
+    fn backward(&mut self, g: &Mat, cache: &Cache, ctx: &ForwardCtx) -> crate::Result<Mat> {
+        let c: &LinearCache = cache.downcast::<LinearCache>()?;
+        anyhow::ensure!(
+            g.shape() == (c.x.rows(), self.d_out()),
+            "grad_out shape {:?} vs expected ({}, {})",
+            g.shape(),
+            c.x.rows(),
+            self.d_out()
+        );
+        // Transients: dW (d_out×d_in) and dx (B×d_in).
+        let _act = ctx
+            .mem()
+            .alloc(((self.d_out() + g.rows()) * self.d_in() * 4) as u64)?;
+        // y = x·Wᵀ + b  ⇒  dW = gᵀ·x, db = colsum(g), dx = g·W.
+        let dw = crate::linalg::matmul_tn(g, &c.x);
+        self.grads.accum("weight", 1.0, dw.data());
+        self.grads.accum("bias", 1.0, &col_sums(g));
+        Ok(matmul(g, &self.weight))
+    }
+
+    fn grads(&self) -> Vec<(String, &[f32])> {
+        self.grads.views()
+    }
+
+    fn zero_grads(&mut self) {
+        self.grads.zero();
     }
 
     fn params(&self) -> Vec<(String, ParamRef<'_>)> {
@@ -123,6 +184,18 @@ pub struct SKLinear {
     /// parameter state.
     u_t: Vec<Mat>,
     v_t: Vec<Mat>,
+    grads: GradStore,
+}
+
+/// Activation cache of [`SKLinear::forward_train`]: the input plus the
+/// per-term `x·U_j` intermediates (`B × k` each — the tiny matrices the
+/// sketch exists to create, so caching them is far cheaper than a dense
+/// layer's activations).
+struct SKLinearCache {
+    x: Mat,
+    xu: Vec<Mat>,
+    /// Keeps the cached bytes charged for the cache's lifetime.
+    _guard: MemGuard,
 }
 
 impl SKLinear {
@@ -168,6 +241,7 @@ impl SKLinear {
             bias,
             u_t,
             v_t,
+            grads: GradStore::default(),
         }
     }
 
@@ -246,6 +320,83 @@ impl Module for SKLinear {
             .mem()
             .alloc((b * (2 * self.d_out + self.low_rank) * 4) as u64)?;
         Ok(SKLinear::forward(self, x))
+    }
+
+    fn forward_train(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<(Mat, Cache)> {
+        assert_eq!(x.cols(), self.d_in);
+        let b = x.rows();
+        // Transient: the output and one per-term B×d_out product. Cached
+        // (charged until the cache drops): the input plus l B×k
+        // intermediates.
+        let _act = ctx.mem().alloc((2 * b * self.d_out * 4) as u64)?;
+        let cached = b * (self.d_in + self.num_terms * self.low_rank);
+        let guard = ctx.mem().alloc((cached * 4) as u64)?;
+        let mut y = Mat::zeros(b, self.d_out);
+        let mut xu_all = Vec::with_capacity(self.num_terms);
+        for (ujt, vjt) in self.u_t.iter().zip(&self.v_t) {
+            let xu = crate::linalg::matmul_nt(x, ujt); // B×k
+            let t = crate::linalg::matmul_nt(&xu, vjt); // B×d_out
+            y.axpy(1.0 / self.num_terms as f32, &t);
+            xu_all.push(xu);
+        }
+        for i in 0..y.rows() {
+            for (vv, bb) in y.row_mut(i).iter_mut().zip(&self.bias) {
+                *vv += bb;
+            }
+        }
+        Ok((
+            y,
+            Cache::new(SKLinearCache {
+                x: x.clone(),
+                xu: xu_all,
+                _guard: guard,
+            }),
+        ))
+    }
+
+    fn backward(&mut self, g: &Mat, cache: &Cache, ctx: &ForwardCtx) -> crate::Result<Mat> {
+        let c: &SKLinearCache = cache.downcast::<SKLinearCache>()?;
+        let b = c.x.rows();
+        anyhow::ensure!(
+            c.xu.len() == self.num_terms,
+            "cache holds {} terms, layer has {}",
+            c.xu.len(),
+            self.num_terms
+        );
+        anyhow::ensure!(
+            g.shape() == (b, self.d_out),
+            "grad_out shape {:?} vs expected ({b}, {})",
+            g.shape(),
+            self.d_out
+        );
+        // Transients per term: dV (k×d_out), g·Vᵀ (B×k), dU (d_in×k), plus
+        // the running dx (B×d_in).
+        let _act = ctx.mem().alloc(
+            ((self.low_rank * (self.d_out + self.d_in + b) + b * self.d_in) * 4) as u64,
+        )?;
+        // y = (1/l)·Σ_j (x·U_j)·V_j + b: per term
+        //   dV_j = (1/l)·(x·U_j)ᵀ·g,  dU_j = (1/l)·xᵀ·(g·V_jᵀ),
+        // and dx sums (1/l)·(g·V_jᵀ)·U_jᵀ over terms.
+        let inv_l = 1.0 / self.num_terms as f32;
+        let mut dx = Mat::zeros(b, self.d_in);
+        for j in 0..self.num_terms {
+            let gv = crate::linalg::matmul_nt(g, &self.v[j]); // B×k
+            let du = crate::linalg::matmul_tn(&c.x, &gv); // d_in×k
+            self.grads.accum(&format!("u.{j}"), inv_l, du.data());
+            let dv = crate::linalg::matmul_tn(&c.xu[j], g); // k×d_out
+            self.grads.accum(&format!("v.{j}"), inv_l, dv.data());
+            dx.axpy(inv_l, &crate::linalg::matmul_nt(&gv, &self.u[j]));
+        }
+        self.grads.accum("bias", 1.0, &col_sums(g));
+        Ok(dx)
+    }
+
+    fn grads(&self) -> Vec<(String, &[f32])> {
+        self.grads.views()
+    }
+
+    fn zero_grads(&mut self) {
+        self.grads.zero();
     }
 
     fn params(&self) -> Vec<(String, ParamRef<'_>)> {

@@ -4,7 +4,10 @@
 //!
 //! All six layer types implement the unified [`Module`] trait —
 //! `forward(x, ctx)` with a shared [`ForwardCtx`] (memory accounting +
-//! scratch + batch metadata), named parameter views, and a
+//! scratch + batch metadata), a differentiable `forward_train`/`backward`
+//! pair with named gradient accumulation (trained by
+//! [`crate::train::Trainer`], locked down by the finite-difference suite
+//! in `tests/gradcheck.rs`), named parameter views, and a
 //! `state_dict`/`load_state_dict` named-tensor API. Model compression is a
 //! [`SketchPlan`]: select layers (type / regex / names), pick
 //! `(num_terms, low_rank)`, apply, and read the per-layer
@@ -30,10 +33,10 @@ pub mod model;
 pub mod module;
 pub mod plan;
 
-pub use attention::{KernelKind, MultiHeadAttention, RandMultiHeadAttention};
+pub use attention::{AttnWeights, KernelKind, MultiHeadAttention, RandMultiHeadAttention};
 pub use conv::{Conv2d, ConvShape, SKConv2d};
 pub use cost::{conv_cost, linear_cost, sketch_beats_dense, LayerCost};
 pub use linear::{Linear, SKLinear};
 pub use model::{LayerSelector, Model, NamedModule};
-pub use module::{ForwardCtx, Module, ParamMut, ParamRef, StateDict};
+pub use module::{Cache, ForwardCtx, GradStore, Module, ParamMut, ParamRef, StateDict};
 pub use plan::{CompressionReport, LayerReport, SketchPlan, Sketchable, SkippedLayer};

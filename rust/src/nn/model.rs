@@ -12,6 +12,7 @@
 //! O(1) and duplicate names are rejected with an error instead of a panic.
 
 use super::module::{Module, StateDict};
+use crate::linalg::Mat;
 use anyhow::{anyhow, ensure, Context, Result};
 use std::collections::HashMap;
 
@@ -83,6 +84,81 @@ impl Model {
     /// Iterate layers in registration order.
     pub fn iter(&self) -> impl Iterator<Item = &NamedModule> {
         self.layers.iter()
+    }
+
+    /// Mutable iteration in registration order (the optimizer's view).
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut NamedModule> {
+        self.layers.iter_mut()
+    }
+
+    /// Sequential inference forward: feed `x` through every layer in
+    /// registration order. The registry is a flattened module tree, so for
+    /// feed-forward stacks registration order *is* execution order; layer
+    /// output/input widths must chain (each layer asserts its own).
+    pub fn forward(&self, x: &Mat, ctx: &super::module::ForwardCtx) -> Result<Mat> {
+        let mut cur = x.clone();
+        for l in &self.layers {
+            cur = l
+                .module
+                .forward(&cur, ctx)
+                .with_context(|| format!("forward through layer {}", l.name))?;
+        }
+        Ok(cur)
+    }
+
+    /// Sequential training forward: like [`Model::forward`] but collects
+    /// one activation [`super::module::Cache`] per layer, in registration
+    /// order, for [`Model::backward`].
+    pub fn forward_train(
+        &self,
+        x: &Mat,
+        ctx: &super::module::ForwardCtx,
+    ) -> Result<(Mat, Vec<super::module::Cache>)> {
+        let mut cur = x.clone();
+        let mut caches = Vec::with_capacity(self.layers.len());
+        for l in &self.layers {
+            let (y, cache) = l
+                .module
+                .forward_train(&cur, ctx)
+                .with_context(|| format!("training forward through layer {}", l.name))?;
+            caches.push(cache);
+            cur = y;
+        }
+        Ok((cur, caches))
+    }
+
+    /// Sequential backward: walk the layers in reverse, handing each its
+    /// cache from the matching [`Model::forward_train`] call. Accumulates
+    /// per-parameter gradients inside every layer (read them via
+    /// [`Module::grads`]) and returns `∂loss/∂input`.
+    pub fn backward(
+        &mut self,
+        grad_out: &Mat,
+        caches: &[super::module::Cache],
+        ctx: &super::module::ForwardCtx,
+    ) -> Result<Mat> {
+        ensure!(
+            caches.len() == self.layers.len(),
+            "{} caches for {} layers — backward must consume the cache list \
+             of the matching forward_train",
+            caches.len(),
+            self.layers.len()
+        );
+        let mut g = grad_out.clone();
+        for (l, cache) in self.layers.iter_mut().zip(caches).rev() {
+            g = l
+                .module
+                .backward(&g, cache, ctx)
+                .with_context(|| format!("backward through layer {}", l.name))?;
+        }
+        Ok(g)
+    }
+
+    /// Zero every layer's accumulated gradients.
+    pub fn zero_grads(&mut self) {
+        for l in &mut self.layers {
+            l.module.zero_grads();
+        }
     }
 
     /// Number of registered layers.
@@ -360,6 +436,62 @@ mod tests {
             vec!["encoder.fc1", "encoder.fc2", "encoder.conv", "encoder.attn"]
         );
         assert!(m.replace("nope", old).is_err());
+    }
+
+    #[test]
+    fn sequential_forward_train_backward_roundtrip() {
+        let mut rng = Philox::seeded(143);
+        let mut m = Model::new();
+        m.add("fc1", Linear::random(6, 8, &mut rng)).unwrap();
+        m.add("fc2", Linear::random(8, 4, &mut rng)).unwrap();
+        let x = crate::linalg::Mat::randn(3, 6, &mut rng);
+        let ctx = super::super::module::ForwardCtx::new();
+        let y = m.forward(&x, &ctx).unwrap();
+        assert_eq!(y.shape(), (3, 4));
+        let (yt, caches) = m.forward_train(&x, &ctx).unwrap();
+        assert_eq!(yt.shape(), (3, 4));
+        assert_eq!(caches.len(), 2);
+        let g = crate::linalg::Mat::filled(3, 4, 1.0);
+        let gx = m.backward(&g, &caches, &ctx).unwrap();
+        assert_eq!(gx.shape(), (3, 6));
+        // Both layers accumulated gradients for every parameter.
+        for l in m.iter() {
+            assert_eq!(l.module.grads().len(), l.module.params().len());
+        }
+        // Cache-count mismatch is a loud error, not a panic.
+        assert!(m.backward(&g, &caches[..1], &ctx).is_err());
+        // zero_grads resets accumulation.
+        m.zero_grads();
+        for l in m.iter() {
+            for (_, gbuf) in l.module.grads() {
+                assert!(gbuf.iter().all(|&v| v == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn training_caches_stay_charged_until_dropped() {
+        // Inference releases each layer's transients before the next layer
+        // runs; training retains every layer's activation cache. A budget
+        // sized for one layer's transient (4 KiB per 32×32 f32 mat) must
+        // pass inference and reject the training forward, and the charge
+        // must persist exactly as long as the caches do.
+        let mut rng = Philox::seeded(144);
+        let mut m = Model::new();
+        m.add("fc1", Linear::random(32, 32, &mut rng)).unwrap();
+        m.add("fc2", Linear::random(32, 32, &mut rng)).unwrap();
+        let x = crate::linalg::Mat::randn(32, 32, &mut rng);
+        let ctx = super::super::module::ForwardCtx::with_budget(10_000);
+        assert!(m.forward(&x, &ctx).is_ok(), "inference fits the budget");
+        assert!(
+            m.forward_train(&x, &ctx).is_err(),
+            "training must account caches across the stack"
+        );
+        let ctx2 = super::super::module::ForwardCtx::with_budget(20_000);
+        let (_, caches) = m.forward_train(&x, &ctx2).unwrap();
+        assert!(ctx2.mem().live_bytes() >= 2 * 32 * 32 * 4);
+        drop(caches);
+        assert_eq!(ctx2.mem().live_bytes(), 0);
     }
 
     #[test]

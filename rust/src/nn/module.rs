@@ -8,6 +8,10 @@
 //!
 //! - `forward(&self, x, ctx)` with a shared [`ForwardCtx`] carrying the
 //!   memory tracker, a reusable scratch buffer, and batch metadata;
+//! - `forward_train(&self, x, ctx)` / `backward(&mut self, g, cache, ctx)`
+//!   — the differentiable path: an opt-in activation [`Cache`] (inference
+//!   forwards build none) and per-parameter gradient accumulation into a
+//!   [`GradStore`], exposed as named `grads()` views mirroring `params()`;
 //! - `params()` / `params_mut()` exposing *named* parameter views, from
 //!   which `param_count`, [`Module::state_dict`] and
 //!   [`Module::load_state_dict`] are derived — one source of truth;
@@ -22,9 +26,106 @@ use crate::linalg::Mat;
 use crate::runtime::HostTensor;
 use crate::util::memtrack::MemTracker;
 use anyhow::{anyhow, bail, ensure, Result};
+use std::any::Any;
 use std::cell::{RefCell, RefMut};
 
 use super::plan::Sketchable;
+
+/// Opaque per-call activation cache returned by [`Module::forward_train`]
+/// and consumed by [`Module::backward`]. Each layer stores whatever it
+/// needs to differentiate (inputs, intermediate products, softmax rows)
+/// behind a type-erased box, so the trait stays object-safe and inference
+/// forwards — which never build a cache — pay nothing.
+pub struct Cache(Box<dyn Any + Send>);
+
+impl Cache {
+    /// Wrap a layer-private cache value.
+    pub fn new<T: Any + Send>(value: T) -> Self {
+        Cache(Box::new(value))
+    }
+
+    /// Borrow the cache as the layer's concrete type. Errors (instead of
+    /// panicking) when a cache from a different layer is passed in — the
+    /// typical bug is zipping layer and cache lists misaligned.
+    pub fn downcast<T: Any>(&self) -> Result<&T> {
+        self.0
+            .downcast_ref::<T>()
+            .ok_or_else(|| anyhow!("backward got a cache built by a different layer type"))
+    }
+}
+
+/// Accumulated per-parameter gradients, name-keyed exactly like
+/// [`Module::params`]. Buffers are allocated lazily on the first
+/// [`GradStore::accum`] for a name, so layers that never train allocate
+/// nothing; repeated backwards accumulate (micro-batching), and
+/// [`GradStore::zero`] resets between optimizer steps without freeing.
+#[derive(Clone, Debug, Default)]
+pub struct GradStore {
+    bufs: Vec<(String, Vec<f32>)>,
+}
+
+impl GradStore {
+    /// `self[name] += alpha · delta`, allocating a zeroed buffer of
+    /// `delta.len()` on first use. Panics on a length mismatch with an
+    /// earlier accumulation under the same name (that is a layer bug, not
+    /// a user input).
+    pub fn accum(&mut self, name: &str, alpha: f32, delta: &[f32]) {
+        let idx = match self.bufs.iter().position(|(n, _)| n == name) {
+            Some(i) => i,
+            None => {
+                self.bufs.push((name.to_string(), vec![0.0; delta.len()]));
+                self.bufs.len() - 1
+            }
+        };
+        let buf = &mut self.bufs[idx].1;
+        assert_eq!(buf.len(), delta.len(), "gradient size changed for {name}");
+        for (b, &d) in buf.iter_mut().zip(delta) {
+            *b += alpha * d;
+        }
+    }
+
+    /// The accumulated gradient for `name`, if any backward has touched it.
+    pub fn get(&self, name: &str) -> Option<&[f32]> {
+        self.bufs
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, b)| b.as_slice())
+    }
+
+    /// Named flat views of every accumulated gradient, in first-touch
+    /// order (layers accumulate in their `params()` order, so the orders
+    /// coincide after one backward).
+    pub fn views(&self) -> Vec<(String, &[f32])> {
+        self.bufs
+            .iter()
+            .map(|(n, b)| (n.clone(), b.as_slice()))
+            .collect()
+    }
+
+    /// Reset every buffer to zero, keeping the allocations.
+    pub fn zero(&mut self) {
+        for (_, b) in &mut self.bufs {
+            b.fill(0.0);
+        }
+    }
+
+    /// True when no gradient has ever been accumulated.
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+}
+
+/// Per-column sums of `g` — the bias gradient shared by every layer whose
+/// forward broadcasts a bias over output rows.
+pub(crate) fn col_sums(g: &Mat) -> Vec<f32> {
+    let mut out = vec![0f64; g.cols()];
+    for i in 0..g.rows() {
+        for (o, &v) in out.iter_mut().zip(g.row(i)) {
+            *o += v as f64;
+        }
+    }
+    out.into_iter().map(|v| v as f32).collect()
+}
 
 /// Name-keyed tensor state of a module or model. Keys are the names from
 /// [`Module::params`], dot-prefixed with the layer path at the model level
@@ -268,6 +369,33 @@ pub trait Module: Send {
     /// yields an error instead of an OOM.
     fn forward(&self, x: &Mat, ctx: &ForwardCtx) -> Result<Mat>;
 
+    /// Training-mode forward: same output as [`Module::forward`] plus an
+    /// opaque activation [`Cache`] for the matching [`Module::backward`].
+    /// The cache is opt-in — plain `forward` never builds one, so
+    /// inference paths pay nothing for differentiability.
+    fn forward_train(&self, _x: &Mat, _ctx: &ForwardCtx) -> Result<(Mat, Cache)> {
+        bail!("{} does not implement a training forward", self.type_name())
+    }
+
+    /// Backward pass: given `∂loss/∂output` and the [`Cache`] from the
+    /// *same* `forward_train` call, accumulate `∂loss/∂param` into the
+    /// layer's gradient store (visible through [`Module::grads`]) and
+    /// return `∂loss/∂input`. Accumulates — callers zero via
+    /// [`Module::zero_grads`] between optimizer steps.
+    fn backward(&mut self, _grad_out: &Mat, _cache: &Cache, _ctx: &ForwardCtx) -> Result<Mat> {
+        bail!("{} does not implement backward", self.type_name())
+    }
+
+    /// Named flat views of the accumulated parameter gradients, mirroring
+    /// the [`Module::params`] registry names. Empty until the first
+    /// [`Module::backward`] (gradient buffers are lazy).
+    fn grads(&self) -> Vec<(String, &[f32])> {
+        Vec::new()
+    }
+
+    /// Zero every accumulated gradient (keeping the buffers).
+    fn zero_grads(&mut self) {}
+
     /// Named views of every trained parameter, in a stable order. Fixed
     /// (untrained) state — e.g. the Performer's random features — is *not*
     /// a parameter and does not appear here.
@@ -420,6 +548,65 @@ mod tests {
         // Pristine dict loads.
         let sd = l.state_dict();
         assert!(l.load_state_dict(&sd).is_ok());
+    }
+
+    #[test]
+    fn grad_store_accumulates_and_zeroes() {
+        let mut gs = GradStore::default();
+        assert!(gs.is_empty());
+        assert!(gs.get("w").is_none());
+        gs.accum("w", 1.0, &[1.0, 2.0]);
+        gs.accum("w", 0.5, &[2.0, 2.0]);
+        gs.accum("b", 2.0, &[3.0]);
+        assert_eq!(gs.get("w"), Some(&[2.0, 3.0][..]));
+        assert_eq!(gs.get("b"), Some(&[6.0][..]));
+        let names: Vec<String> = gs.views().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["w", "b"]);
+        gs.zero();
+        // Buffers survive zeroing (accumulation restarts from 0).
+        assert_eq!(gs.get("w"), Some(&[0.0, 0.0][..]));
+        assert!(!gs.is_empty());
+    }
+
+    #[test]
+    fn cache_downcast_rejects_wrong_type() {
+        struct A(#[allow(dead_code)] u32);
+        struct B;
+        let c = Cache::new(A(7));
+        assert!(c.downcast::<A>().is_ok());
+        assert!(c.downcast::<B>().is_err());
+    }
+
+    #[test]
+    fn default_module_impls_report_not_differentiable() {
+        // A minimal Module that only implements the required methods: the
+        // training API defaults must fail loudly, not silently.
+        struct Opaque;
+        impl Module for Opaque {
+            fn type_name(&self) -> &'static str {
+                "Opaque"
+            }
+            fn forward(&self, x: &Mat, _ctx: &ForwardCtx) -> Result<Mat> {
+                Ok(x.clone())
+            }
+            fn params(&self) -> Vec<(String, ParamRef<'_>)> {
+                vec![]
+            }
+            fn params_mut(&mut self) -> Vec<(String, ParamMut<'_>)> {
+                vec![]
+            }
+            fn boxed_clone(&self) -> Box<dyn Module> {
+                Box::new(Opaque)
+            }
+        }
+        let mut m = Opaque;
+        let ctx = ForwardCtx::new();
+        let x = Mat::zeros(1, 1);
+        assert!(m.forward_train(&x, &ctx).is_err());
+        let cache = Cache::new(());
+        assert!(m.backward(&x, &cache, &ctx).is_err());
+        assert!(m.grads().is_empty());
+        m.zero_grads(); // no-op, must not panic
     }
 
     #[test]

@@ -14,7 +14,20 @@
 //! Legacy **v1** files (positional, three groups of shape-prefixed
 //! tensors) still load; their parameters get synthesized positional names
 //! `param.{i}` since v1 never stored names.
+//!
+//! After the records, v2 files may carry an **optional optimizer
+//! section**:
+//! ```text
+//! "OPTS" | kind (u32 len + utf8) | n_hyper u32 | hyper f32 × n_hyper
+//! ```
+//! written by [`save_with_optimizer`] (the native
+//! [`super::Trainer`](super::trainer::Trainer) uses it to persist the
+//! optimizer identity and scalar state; the moments themselves ride in the
+//! per-record `m`/`v` slots). Readers that don't care ([`load`]) skip it;
+//! files without it load as `None` — both directions stay compatible, so
+//! the version stays 2.
 
+use super::optimizer::OptimMeta;
 use super::ModelState;
 use crate::runtime::HostTensor;
 use anyhow::{bail, ensure, Context, Result};
@@ -23,12 +36,23 @@ use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"PNTH";
 const VERSION: u32 = 2;
+const OPT_MAGIC: &[u8; 4] = b"OPTS";
 
 /// Write a checkpoint (always the current v2 format). The state is
 /// validated up front and the bytes go to a sibling temp file that is
 /// renamed into place only on success — a failed save never truncates an
 /// existing checkpoint at `path`.
 pub fn save(state: &ModelState, path: impl AsRef<Path>) -> Result<()> {
+    save_with_optimizer(state, None, path)
+}
+
+/// [`save`] plus an optional trailing optimizer section carrying the
+/// optimizer's identity and scalar state (Adam's step counter etc.).
+pub fn save_with_optimizer(
+    state: &ModelState,
+    opt: Option<&OptimMeta>,
+    path: impl AsRef<Path>,
+) -> Result<()> {
     let path = path.as_ref();
     let n = state.params.len();
     ensure!(
@@ -61,6 +85,10 @@ pub fn save(state: &ModelState, path: impl AsRef<Path>) -> Result<()> {
     let f = std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
     let mut w = BufWriter::new(f);
     let res = write_body(&mut w, state, n)
+        .and_then(|_| match opt {
+            Some(meta) => write_opt_section(&mut w, meta),
+            None => Ok(()),
+        })
         .and(w.flush().map_err(anyhow::Error::from))
         .and(w.get_ref().sync_all().map_err(anyhow::Error::from));
     drop(w);
@@ -98,8 +126,15 @@ fn write_body(w: &mut impl Write, state: &ModelState, n: usize) -> Result<()> {
     Ok(())
 }
 
-/// Read a checkpoint (v2, or legacy v1 with synthesized names).
+/// Read a checkpoint (v2, or legacy v1 with synthesized names), ignoring
+/// any trailing optimizer section.
 pub fn load(path: impl AsRef<Path>) -> Result<ModelState> {
+    Ok(load_with_optimizer(path)?.0)
+}
+
+/// [`load`] plus the optional optimizer section (`None` for files written
+/// by plain [`save`] and for legacy v1 checkpoints).
+pub fn load_with_optimizer(path: impl AsRef<Path>) -> Result<(ModelState, Option<OptimMeta>)> {
     let f = std::fs::File::open(path.as_ref())
         .with_context(|| format!("opening {:?}", path.as_ref()))?;
     let mut r = BufReader::new(f);
@@ -112,11 +147,52 @@ pub fn load(path: impl AsRef<Path>) -> Result<ModelState> {
     let step = read_u64(&mut r)?;
     let model = read_str(&mut r)?;
     let n = read_u32(&mut r)? as usize;
-    match version {
-        1 => load_v1_body(&mut r, model, step, n),
-        2 => load_v2_body(&mut r, model, step, n),
+    let state = match version {
+        1 => load_v1_body(&mut r, model, step, n)?,
+        2 => load_v2_body(&mut r, model, step, n)?,
         other => bail!("unsupported checkpoint version {other}"),
+    };
+    let opt = if version >= 2 {
+        read_opt_section(&mut r)?
+    } else {
+        None
+    };
+    Ok((state, opt))
+}
+
+/// Trailing optimizer section: marker | kind | hyperparameter list.
+fn write_opt_section(w: &mut impl Write, meta: &OptimMeta) -> Result<()> {
+    w.write_all(OPT_MAGIC)?;
+    write_str(w, &meta.kind)?;
+    w.write_all(&(meta.hyper.len() as u32).to_le_bytes())?;
+    write_f32s(w, &meta.hyper)?;
+    Ok(())
+}
+
+/// Read the optional optimizer section: clean EOF right after the records
+/// means "no section" (files written by plain [`save`]); anything else
+/// must be a complete, well-formed section.
+fn read_opt_section(r: &mut impl Read) -> Result<Option<OptimMeta>> {
+    let mut marker = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        let k = r.read(&mut marker[got..])?;
+        if k == 0 {
+            break;
+        }
+        got += k;
     }
+    if got == 0 {
+        return Ok(None);
+    }
+    ensure!(
+        got == 4 && &marker == OPT_MAGIC,
+        "trailing garbage after checkpoint records (expected optimizer section)"
+    );
+    let kind = read_str(r)?;
+    let n = read_u32(r)? as usize;
+    let hyper = read_f32s(r, n)?;
+    Ok(Some(OptimMeta { kind, hyper }))
 }
 
 /// v2 body: n records of name | shape | param | m | v.
@@ -312,6 +388,44 @@ mod tests {
         assert!(save(&bad, &path).is_err());
         let back = load(&path).unwrap();
         assert_eq!(back.params, good.params);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn optimizer_section_roundtrip_and_absence() {
+        let dir = std::env::temp_dir().join("panther_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // With a section: round-trips exactly.
+        let path = dir.join("with_opt.ckpt");
+        let meta = OptimMeta {
+            kind: "adam".to_string(),
+            hyper: vec![0.01, 0.9, 0.999, 1e-8, 42.0],
+        };
+        save_with_optimizer(&toy_state(), Some(&meta), &path).unwrap();
+        let (state, back) = load_with_optimizer(&path).unwrap();
+        assert_eq!(state.step, 42);
+        assert_eq!(back, Some(meta));
+        // Plain load ignores the section.
+        assert_eq!(load(&path).unwrap().names, state.names);
+        // Without a section: None, and plain save produces none.
+        let path2 = dir.join("without_opt.ckpt");
+        save(&toy_state(), &path2).unwrap();
+        let (_, none) = load_with_optimizer(&path2).unwrap();
+        assert_eq!(none, None);
+        std::fs::remove_file(path).ok();
+        std::fs::remove_file(path2).ok();
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let dir = std::env::temp_dir().join("panther_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trailing.ckpt");
+        save(&toy_state(), &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"JUNK");
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_with_optimizer(&path).is_err());
         std::fs::remove_file(path).ok();
     }
 

@@ -1,11 +1,26 @@
-//! Training driver: runs `init` / `train` / `eval` HLO artifacts end to end.
+//! Training drivers.
 //!
-//! The model state (parameters + Adam moments) lives host-side as
-//! [`HostTensor`]s in the manifest's canonical order; each step round-trips
-//! it through the `train` executable. Checkpoints serialize that state to a
-//! simple length-prefixed binary format.
+//! Two paths coexist:
+//!
+//! - the **artifact path** ([`BertTrainer`], [`ConvTrainer`]): replays
+//!   compiled `init`/`train`/`eval` HLO graphs positionally — the model
+//!   state (parameters + Adam moments) lives host-side as [`HostTensor`]s
+//!   in the manifest's canonical order;
+//! - the **native path** ([`Trainer`] + [`Optimizer`]): differentiates a
+//!   live [`crate::nn::Model`] through [`crate::nn::Module::backward`], so
+//!   any layer stack — including one compressed mid-flight by
+//!   [`crate::nn::SketchPlan`] — trains and fine-tunes without an AOT
+//!   artifact.
+//!
+//! Both serialize through [`checkpoint`] (v2, name-keyed; the native
+//! trainer adds the optional optimizer section so resumes are exact).
 
 pub mod checkpoint;
+pub mod optimizer;
+pub mod trainer;
+
+pub use optimizer::{optimizer_from_meta, Adam, OptimMeta, Optimizer, Sgd};
+pub use trainer::{mse_loss, mse_value, Trainer};
 
 use crate::data::{MaskedBatch, TextCorpus};
 use crate::rng::Philox;

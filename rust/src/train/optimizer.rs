@@ -1,0 +1,309 @@
+//! Optimizers over the native `nn` layer stack: named parameter/gradient
+//! pairs, not positional tensor lists.
+//!
+//! After [`crate::nn::Model::backward`] has accumulated gradients inside
+//! every layer, an [`Optimizer`] walks the registry and applies one update
+//! per named parameter (`<layer path>.<param name>` keys Adam's moments, so
+//! swapping a layer via `SketchPlan` simply starts fresh moments for the
+//! new parameter names). Updates go through `params_mut` followed by
+//! `on_params_loaded`, so layers with derived state (`SKLinear`'s cached
+//! factor transposes) stay consistent — the same contract every other
+//! parameter writer follows.
+
+use crate::nn::{Model, StateDict};
+use crate::runtime::HostTensor;
+use anyhow::{bail, ensure, Result};
+use std::collections::HashMap;
+
+/// Serializable optimizer identity + scalar state, stored in the optional
+/// optimizer section of a checkpoint (see [`super::checkpoint`]): the
+/// `kind` tag plus a flat list of hyperparameters/counters whose meaning
+/// is private to the optimizer. Tensor state (Adam's moments) rides in the
+/// checkpoint's per-parameter `m`/`v` slots instead.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptimMeta {
+    pub kind: String,
+    pub hyper: Vec<f32>,
+}
+
+/// An optimizer over every named (parameter, gradient) pair of a
+/// [`Model`]. Implementations must key any per-parameter state by the
+/// full dotted name so layer replacement and checkpoint resume compose.
+pub trait Optimizer: Send {
+    /// Apply one update from the gradients currently accumulated in
+    /// `model` (a no-op for layers whose gradients were never touched).
+    /// Does not zero gradients — the trainer owns that.
+    fn step(&mut self, model: &mut Model) -> Result<()>;
+
+    /// Identity + scalar state for checkpointing.
+    fn meta(&self) -> OptimMeta;
+
+    /// Per-parameter moment tensors for `sd`'s names/shapes, in order —
+    /// zeros for names this optimizer has no state for (and for stateless
+    /// optimizers entirely). Feeds the checkpoint's `m`/`v` slots.
+    fn export_moments(&self, sd: &StateDict) -> (Vec<HostTensor>, Vec<HostTensor>);
+
+    /// Restore per-parameter moments (inverse of
+    /// [`Optimizer::export_moments`]).
+    fn import_moments(
+        &mut self,
+        names: &[String],
+        m: &[HostTensor],
+        v: &[HostTensor],
+    ) -> Result<()>;
+}
+
+/// Rebuild an optimizer from its checkpointed [`OptimMeta`].
+pub fn optimizer_from_meta(meta: &OptimMeta) -> Result<Box<dyn Optimizer>> {
+    match meta.kind.as_str() {
+        "sgd" => {
+            ensure!(meta.hyper.len() == 1, "sgd meta wants [lr]");
+            Ok(Box::new(Sgd::new(meta.hyper[0])))
+        }
+        "adam" => {
+            ensure!(
+                meta.hyper.len() == 6,
+                "adam meta wants [lr, b1, b2, eps, t_lo, t_hi]"
+            );
+            let mut adam = Adam::new(meta.hyper[0]);
+            adam.beta1 = meta.hyper[1];
+            adam.beta2 = meta.hyper[2];
+            adam.eps = meta.hyper[3];
+            // The u64 step counter rides the f32 list as two raw bit
+            // patterns (an `as f32` cast would lose exactness past 2^24,
+            // breaking the resume-exactly contract on long fine-tunes).
+            adam.t = meta.hyper[4].to_bits() as u64 | ((meta.hyper[5].to_bits() as u64) << 32);
+            Ok(Box::new(adam))
+        }
+        other => bail!("unknown optimizer kind {other:?} in checkpoint"),
+    }
+}
+
+/// Collect each layer's gradients into owned per-name update buffers, then
+/// write `param -= f(name, grad)` through `params_mut` and refresh derived
+/// state. Shared by both optimizers — only `f` differs.
+fn apply_updates(
+    model: &mut Model,
+    mut update: impl FnMut(&str, &[f32]) -> Vec<f32>,
+) -> Result<()> {
+    for layer in model.iter_mut() {
+        let lname = layer.name.clone();
+        let updates: Vec<(String, Vec<f32>)> = layer
+            .module
+            .grads()
+            .into_iter()
+            .map(|(pname, g)| {
+                let full = format!("{lname}.{pname}");
+                (pname, update(&full, g))
+            })
+            .collect();
+        if updates.is_empty() {
+            continue;
+        }
+        for (pname, mut p) in layer.module.params_mut() {
+            if let Some((_, u)) = updates.iter().find(|(n, _)| *n == pname) {
+                let data = p.data_mut();
+                ensure!(
+                    data.len() == u.len(),
+                    "gradient length {} != parameter length {} for {lname}.{pname}",
+                    u.len(),
+                    data.len()
+                );
+                for (pv, &uv) in data.iter_mut().zip(u) {
+                    *pv -= uv;
+                }
+            }
+        }
+        layer.module.on_params_loaded();
+    }
+    Ok(())
+}
+
+/// Plain stochastic gradient descent: `θ ← θ − lr·g`. Stateless — resume
+/// only needs the learning rate.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Self {
+        Sgd { lr }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, model: &mut Model) -> Result<()> {
+        let lr = self.lr;
+        apply_updates(model, |_, g| g.iter().map(|&x| lr * x).collect())
+    }
+
+    fn meta(&self) -> OptimMeta {
+        OptimMeta {
+            kind: "sgd".to_string(),
+            hyper: vec![self.lr],
+        }
+    }
+
+    fn export_moments(&self, sd: &StateDict) -> (Vec<HostTensor>, Vec<HostTensor>) {
+        let zeros: Vec<HostTensor> = sd.iter().map(|(_, t)| HostTensor::zeros(t.shape())).collect();
+        (zeros.clone(), zeros)
+    }
+
+    fn import_moments(
+        &mut self,
+        _names: &[String],
+        _m: &[HostTensor],
+        _v: &[HostTensor],
+    ) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Adam (Kingma & Ba 2015) with bias correction. First/second moments are
+/// keyed by the full dotted parameter name; the step counter `t` is part
+/// of the persisted scalar state so a resumed fine-tune continues the
+/// bias-correction schedule exactly.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Steps taken (drives bias correction).
+    pub t: u64,
+    m: HashMap<String, Vec<f32>>,
+    v: HashMap<String, Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            m: HashMap::new(),
+            v: HashMap::new(),
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, model: &mut Model) -> Result<()> {
+        self.t += 1;
+        let (b1, b2, eps, lr) = (self.beta1, self.beta2, self.eps, self.lr);
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        let (ms, vs) = (&mut self.m, &mut self.v);
+        apply_updates(model, |full, g| {
+            let m = ms
+                .entry(full.to_string())
+                .or_insert_with(|| vec![0.0; g.len()]);
+            let v = vs
+                .entry(full.to_string())
+                .or_insert_with(|| vec![0.0; g.len()]);
+            let mut u = Vec::with_capacity(g.len());
+            for i in 0..g.len() {
+                m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+                v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+                let mhat = m[i] / bc1;
+                let vhat = v[i] / bc2;
+                u.push(lr * mhat / (vhat.sqrt() + eps));
+            }
+            u
+        })
+    }
+
+    fn meta(&self) -> OptimMeta {
+        // t is stored as two raw f32 bit patterns (see
+        // [`optimizer_from_meta`]) — the checkpoint serializes hyper
+        // values byte-exactly, so this round-trips any u64.
+        OptimMeta {
+            kind: "adam".to_string(),
+            hyper: vec![
+                self.lr,
+                self.beta1,
+                self.beta2,
+                self.eps,
+                f32::from_bits(self.t as u32),
+                f32::from_bits((self.t >> 32) as u32),
+            ],
+        }
+    }
+
+    fn export_moments(&self, sd: &StateDict) -> (Vec<HostTensor>, Vec<HostTensor>) {
+        let pick = |map: &HashMap<String, Vec<f32>>| -> Vec<HostTensor> {
+            sd.iter()
+                .map(|(name, t)| match map.get(name) {
+                    Some(buf) if buf.len() == t.len() => HostTensor::new(t.shape(), buf.clone()),
+                    _ => HostTensor::zeros(t.shape()),
+                })
+                .collect()
+        };
+        (pick(&self.m), pick(&self.v))
+    }
+
+    fn import_moments(
+        &mut self,
+        names: &[String],
+        m: &[HostTensor],
+        v: &[HostTensor],
+    ) -> Result<()> {
+        ensure!(
+            names.len() == m.len() && names.len() == v.len(),
+            "moment arity mismatch: {} names, {} m, {} v",
+            names.len(),
+            m.len(),
+            v.len()
+        );
+        for (i, name) in names.iter().enumerate() {
+            ensure!(
+                m[i].shape() == v[i].shape(),
+                "m/v shape mismatch for {name}"
+            );
+            self.m.insert(name.clone(), m[i].data().to_vec());
+            self.v.insert(name.clone(), v[i].data().to_vec());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_meta_roundtrips_large_step_counters_exactly() {
+        // Past 2^24 an `as f32` cast would round; the bit-pattern encoding
+        // must not.
+        // NB: compare through the bit encoding, not f32 equality (NaN bit
+        // patterns compare unequal as floats). Counters stay far below
+        // the range whose high word would encode as a NaN (~9e18 steps).
+        for t in [0u64, 1, 42, (1 << 24) + 1, (1 << 33) + 12_345] {
+            let mut adam = Adam::new(0.01);
+            adam.t = t;
+            let meta = adam.meta();
+            let back = optimizer_from_meta(&meta).unwrap();
+            let meta2 = back.meta();
+            assert_eq!(
+                meta2.hyper[4].to_bits() as u64 | ((meta2.hyper[5].to_bits() as u64) << 32),
+                t
+            );
+            assert_eq!(meta.hyper[..4], meta2.hyper[..4]);
+        }
+    }
+
+    #[test]
+    fn sgd_meta_roundtrip_and_unknown_kind_rejected() {
+        let sgd = Sgd::new(0.25);
+        let back = optimizer_from_meta(&sgd.meta()).unwrap();
+        assert_eq!(back.meta(), sgd.meta());
+        let bad = OptimMeta {
+            kind: "lion".to_string(),
+            hyper: vec![],
+        };
+        assert!(optimizer_from_meta(&bad).is_err());
+    }
+}

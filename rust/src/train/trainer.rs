@@ -1,0 +1,258 @@
+//! Native trainer: loss → backward → optimizer step over any
+//! [`crate::nn::Model`] — including one mid-compressed by
+//! [`crate::nn::SketchPlan`], which is the paper's headline training
+//! workload (sketchify a pretrained model, then fine-tune the factors).
+//!
+//! This is the `nn`-side counterpart of the artifact-driven
+//! [`super::BertTrainer`]/[`super::ConvTrainer`]: those replay compiled
+//! train graphs positionally; this one differentiates the live layer
+//! registry through [`crate::nn::Module::backward`], so *any* architecture
+//! expressible as a layer stack trains without an AOT artifact.
+//! Checkpoints reuse the v2 format — parameters in the `param` slots,
+//! optimizer moments in the `m`/`v` slots, optimizer identity in the
+//! optional trailing section — so fine-tuning resumes exactly.
+
+use super::checkpoint;
+use super::optimizer::{optimizer_from_meta, Optimizer};
+use crate::linalg::Mat;
+use crate::nn::{ForwardCtx, Model};
+use crate::runtime::HostTensor;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+/// Mean-squared-error loss: `L = mean((pred − target)²)` over all
+/// elements. Returns the scalar loss (f64-accumulated) and `∂L/∂pred`.
+pub fn mse_loss(pred: &Mat, target: &Mat) -> (f32, Mat) {
+    assert_eq!(pred.shape(), target.shape(), "loss shape mismatch");
+    let n = pred.len().max(1) as f64;
+    let mut loss = 0f64;
+    let mut grad = Mat::zeros(pred.rows(), pred.cols());
+    for i in 0..pred.rows() {
+        let (pr, tr) = (pred.row(i), target.row(i));
+        for (j, gv) in grad.row_mut(i).iter_mut().enumerate() {
+            let diff = pr[j] as f64 - tr[j] as f64;
+            loss += diff * diff;
+            *gv = (2.0 * diff / n) as f32;
+        }
+    }
+    ((loss / n) as f32, grad)
+}
+
+/// Loss-only variant of [`mse_loss`] for evaluation paths — no gradient
+/// matrix is allocated.
+pub fn mse_value(pred: &Mat, target: &Mat) -> f32 {
+    assert_eq!(pred.shape(), target.shape(), "loss shape mismatch");
+    let n = pred.len().max(1) as f64;
+    let loss: f64 = pred
+        .data()
+        .iter()
+        .zip(target.data())
+        .map(|(&p, &t)| (p as f64 - t as f64).powi(2))
+        .sum();
+    (loss / n) as f32
+}
+
+/// Runs `loss → backward → step` over a [`Model`] with any
+/// [`Optimizer`]. Holds the step counter so checkpoints resume the
+/// optimizer schedule (Adam bias correction) exactly.
+pub struct Trainer {
+    pub opt: Box<dyn Optimizer>,
+    /// Training steps taken (mirrors the checkpoint `step` field).
+    pub step: u64,
+}
+
+impl Trainer {
+    pub fn new(opt: Box<dyn Optimizer>) -> Self {
+        Trainer { opt, step: 0 }
+    }
+
+    /// One MSE training step on `(x, target)`: zero grads, training
+    /// forward, backward, optimizer update. Returns the pre-update loss.
+    pub fn train_step(
+        &mut self,
+        model: &mut Model,
+        x: &Mat,
+        target: &Mat,
+        ctx: &ForwardCtx,
+    ) -> Result<f32> {
+        model.zero_grads();
+        let (pred, caches) = model.forward_train(x, ctx)?;
+        ensure!(
+            pred.shape() == target.shape(),
+            "model output {:?} vs target {:?}",
+            pred.shape(),
+            target.shape()
+        );
+        let (loss, dloss) = mse_loss(&pred, target);
+        model.backward(&dloss, &caches, ctx)?;
+        self.opt.step(model)?;
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// MSE eval loss without touching gradients or parameters.
+    pub fn eval_loss(&self, model: &Model, x: &Mat, target: &Mat, ctx: &ForwardCtx) -> Result<f32> {
+        let pred = model.forward(x, ctx)?;
+        ensure!(
+            pred.shape() == target.shape(),
+            "model output {:?} vs target {:?}",
+            pred.shape(),
+            target.shape()
+        );
+        Ok(mse_value(&pred, target))
+    }
+
+    /// Checkpoint model parameters + optimizer moments + optimizer
+    /// identity (v2 file with the optional optimizer section). `tag` is
+    /// the checkpoint's model-name field.
+    pub fn save_checkpoint(&self, model: &Model, tag: &str, path: impl AsRef<Path>) -> Result<()> {
+        let sd = model.state_dict();
+        let (m, v) = self.opt.export_moments(&sd);
+        let (names, params): (Vec<String>, Vec<HostTensor>) = sd.into_iter().unzip();
+        let state = super::ModelState {
+            model: tag.to_string(),
+            names,
+            params,
+            m,
+            v,
+            step: self.step,
+        };
+        checkpoint::save_with_optimizer(&state, Some(&self.opt.meta()), path)
+    }
+
+    /// Restore a trainer (optimizer kind, scalar state, moments, step
+    /// counter) and `model`'s parameters from a checkpoint written by
+    /// [`Trainer::save_checkpoint`]. The model must already have the
+    /// matching architecture — the same contract as
+    /// [`Model::load_state_dict`].
+    pub fn resume(model: &mut Model, path: impl AsRef<Path>) -> Result<Trainer> {
+        let (state, meta) = checkpoint::load_with_optimizer(&path)?;
+        let meta = meta.with_context(|| {
+            format!(
+                "checkpoint {:?} has no optimizer section — was it written by Trainer::save_checkpoint?",
+                path.as_ref()
+            )
+        })?;
+        model
+            .load_state_dict(&state.state_dict())
+            .context("restoring model parameters")?;
+        let mut opt = optimizer_from_meta(&meta)?;
+        opt.import_moments(&state.names, &state.m, &state.v)
+            .context("restoring optimizer moments")?;
+        Ok(Trainer {
+            opt,
+            step: state.step,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Linear;
+    use crate::rng::Philox;
+    use crate::train::optimizer::{Adam, Sgd};
+
+    fn toy_model(seed: u64) -> Model {
+        let mut rng = Philox::seeded(seed);
+        let mut m = Model::new();
+        m.add("fc1", Linear::random(6, 10, &mut rng)).unwrap();
+        m.add("fc2", Linear::random(10, 4, &mut rng)).unwrap();
+        m
+    }
+
+    fn toy_batch(seed: u64) -> (Mat, Mat) {
+        let mut rng = Philox::seeded(seed);
+        let x = Mat::randn(16, 6, &mut rng);
+        let teacher = Linear::random(6, 4, &mut rng);
+        let y = teacher.forward(&x);
+        (x, y)
+    }
+
+    #[test]
+    fn sgd_reduces_mse_on_linear_regression() {
+        let mut model = toy_model(1);
+        let (x, y) = toy_batch(2);
+        let ctx = ForwardCtx::new();
+        let mut tr = Trainer::new(Box::new(Sgd::new(0.05)));
+        let first = tr.train_step(&mut model, &x, &y, &ctx).unwrap();
+        let mut last = first;
+        for _ in 0..30 {
+            last = tr.train_step(&mut model, &x, &y, &ctx).unwrap();
+        }
+        assert!(last < first * 0.5, "loss {first} -> {last}");
+        assert_eq!(tr.step, 31);
+    }
+
+    #[test]
+    fn adam_reduces_mse_and_checkpoint_resumes_exactly() {
+        let mut model = toy_model(3);
+        let (x, y) = toy_batch(4);
+        let ctx = ForwardCtx::new();
+        let mut tr = Trainer::new(Box::new(Adam::new(0.01)));
+        for _ in 0..5 {
+            tr.train_step(&mut model, &x, &y, &ctx).unwrap();
+        }
+        let dir = std::env::temp_dir().join("panther_trainer_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("resume.ckpt");
+        tr.save_checkpoint(&model, "toy", &path).unwrap();
+
+        // Branch A: keep training in-memory.
+        let mut model_a = model.clone_model();
+        let mut tr_a = Trainer {
+            opt: tr.opt,
+            step: tr.step,
+        };
+        let mut losses_a = Vec::new();
+        for _ in 0..5 {
+            losses_a.push(tr_a.train_step(&mut model_a, &x, &y, &ctx).unwrap());
+        }
+
+        // Branch B: resume from the checkpoint into a fresh model.
+        let mut model_b = toy_model(999); // same architecture, different init
+        let mut tr_b = Trainer::resume(&mut model_b, &path).unwrap();
+        assert_eq!(tr_b.step, 5);
+        let mut losses_b = Vec::new();
+        for _ in 0..5 {
+            losses_b.push(tr_b.train_step(&mut model_b, &x, &y, &ctx).unwrap());
+        }
+        // Deterministic math, identical state — identical loss curves.
+        assert_eq!(losses_a, losses_b, "resume must continue exactly");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn resume_without_optimizer_section_errors() {
+        let model = toy_model(5);
+        let sd = model.state_dict();
+        let (names, params): (Vec<String>, Vec<HostTensor>) = sd.into_iter().unzip();
+        let zeros: Vec<HostTensor> = params.iter().map(|t| HostTensor::zeros(t.shape())).collect();
+        let state = crate::train::ModelState {
+            model: "toy".into(),
+            names,
+            params,
+            m: zeros.clone(),
+            v: zeros,
+            step: 0,
+        };
+        let dir = std::env::temp_dir().join("panther_trainer_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("no_opt.ckpt");
+        checkpoint::save(&state, &path).unwrap();
+        let mut m2 = toy_model(5);
+        let err = Trainer::resume(&mut m2, &path);
+        assert!(err.is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn optimizer_step_skips_layers_without_grads() {
+        // A model that never ran backward: step must be a clean no-op.
+        let mut model = toy_model(6);
+        let before = model.state_dict();
+        let mut opt = Sgd::new(0.1);
+        opt.step(&mut model).unwrap();
+        assert_eq!(model.state_dict(), before);
+    }
+}
