@@ -11,9 +11,54 @@ use panther::data::TextCorpus;
 use panther::rng::Philox;
 use panther::runtime::{HostTensor, Runtime};
 use panther::train::{BertTrainer, ModelState};
-use panther::util::bench::{Bencher, Table};
+use panther::util::bench::{Bencher, JsonReport, Table};
 
 fn main() -> anyhow::Result<()> {
+    let mut report = JsonReport::new("e2e", panther::linalg::gemm_threads());
+    // --- attention + conv forward ms/step ------------------------------------
+    // The layer-level hot paths the packed/batched kernel work targets:
+    // dense + Performer attention and dense + sketched conv forwards at a
+    // BERT-ish shape, no artifacts needed. Recorded in BENCH_e2e.json so
+    // kernel regressions on these paths are diffable across PRs.
+    {
+        use panther::nn::attention::{
+            AttnWeights, KernelKind, MultiHeadAttention, RandMultiHeadAttention,
+        };
+        use panther::nn::conv::{Conv2d, ConvShape, SKConv2d};
+        use panther::nn::{ForwardCtx, Module};
+        println!("# Module forward ms/step (attention + conv hot paths)\n");
+        let bench = Bencher::quick();
+        let mut rng = Philox::seeded(23);
+        let (n, d, h, m) = (512usize, 256usize, 8usize, 128usize);
+        let x = panther::linalg::Mat::randn(n, d, &mut rng);
+        let ctx = ForwardCtx::new();
+        let mut table = Table::new(&["layer", "shape", "fwd ms"]);
+        let w = AttnWeights::random(d, h, &mut rng);
+        let mha = MultiHeadAttention::new(w.clone());
+        let t = bench.run("mha fwd", || mha.forward(&x, &ctx).unwrap());
+        let shape = format!("n={n} d={d} h={h}");
+        table.row(&["MultiHeadAttention".into(), shape.clone(), format!("{:.3}", t.mean_ms())]);
+        report.entry("attention_fwd", &shape, t.mean_ms(), None);
+        let perf = RandMultiHeadAttention::new(w, m, KernelKind::Softmax, 5);
+        let t = bench.run("performer fwd", || perf.forward(&x, &ctx).unwrap());
+        let shape = format!("n={n} d={d} h={h} m={m}");
+        table.row(&["RandMultiHeadAttention".into(), shape.clone(), format!("{:.3}", t.mean_ms())]);
+        report.entry("performer_fwd", &shape, t.mean_ms(), None);
+        let cshape = ConvShape { c_in: 32, c_out: 128, kernel: 3, image: 32, padding: 1 };
+        let xc_cols = cshape.c_in * cshape.image * cshape.image;
+        let xc = panther::linalg::Mat::randn(4, xc_cols, &mut rng);
+        let conv = Conv2d::random(cshape, &mut rng);
+        let t = bench.run("conv fwd", || Module::forward(&conv, &xc, &ctx).unwrap());
+        let shape = "B=4 32->128 k3 im32".to_string();
+        table.row(&["Conv2d".into(), shape.clone(), format!("{:.3}", t.mean_ms())]);
+        report.entry("conv_fwd", &shape, t.mean_ms(), None);
+        let skconv = SKConv2d::random(cshape, 2, 8, &mut rng);
+        let t = bench.run("skconv fwd", || Module::forward(&skconv, &xc, &ctx).unwrap());
+        table.row(&["SKConv2d l=2 r=8".into(), shape.clone(), format!("{:.3}", t.mean_ms())]);
+        report.entry("skconv_fwd", &shape, t.mean_ms(), None);
+        println!("{}", table.render());
+    }
+
     // --- native Trainer step latency: dense vs sketched ---------------------
     // The nn-side loss→backward→step loop needs no artifacts, so it runs
     // (and is timed) unconditionally: what one fine-tune step costs on the
@@ -57,8 +102,22 @@ fn main() -> anyhow::Result<()> {
                 params.to_string(),
                 format!("{:.2}", t.mean_ms()),
             ]);
+            report.entry(
+                &format!("trainer_{label}"),
+                &format!("batch={batch} d={d}"),
+                t.mean_ms(),
+                None,
+            );
         }
         println!("{}", table.render());
+    }
+
+    // The JSON report covers the artifact-free sections above, so the bench
+    // smoke lane (no PJRT, no prebuilt artifacts) still seeds the perf
+    // trajectory.
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_e2e.json: {e}"),
     }
 
     let artifacts =

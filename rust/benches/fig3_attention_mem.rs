@@ -36,11 +36,27 @@ fn main() {
     let features: &[usize] = if quick { &[128] } else { &[64, 128, 256] };
 
     println!("# Figure 3: peak forward memory, Performer vs dense MHA (embed {d}, softmax kernel)");
-    println!("# budget {} — rows marked 'x' exceed it (the paper's OOM markers)\n",
-        panther::util::human_bytes(budget));
+    println!(
+        "# budget {} — rows marked 'x' exceed it (the paper's OOM markers)",
+        panther::util::human_bytes(budget)
+    );
+    println!(
+        "# fwd ms: wall time of the measured forward call (single sample — the\n\
+         # memory accounting is the figure; ms rows feed the perf trajectory)\n"
+    );
     let mut rng = Philox::seeded(11);
     let mut table = Table::new(&[
-        "seq", "heads", "m", "dense peak", "dense", "performer peak", "performer", "model dense", "model perf",
+        "seq",
+        "heads",
+        "m",
+        "dense peak",
+        "dense ms",
+        "dense",
+        "performer peak",
+        "perf ms",
+        "performer",
+        "model dense",
+        "model perf",
     ]);
     for &h in heads {
         let weights = AttnWeights::random(d, h, &mut rng);
@@ -48,32 +64,40 @@ fn main() {
         for &n in seqs {
             let x = Mat::randn(n, d, &mut rng);
             let ctx_d = ForwardCtx::with_budget(budget);
+            let t0 = std::time::Instant::now();
             let dense_res = dense.forward(&x, &ctx_d);
-            let (dense_peak, dense_status) = match dense_res {
+            let dense_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let (dense_peak, dense_ms_s, dense_status) = match dense_res {
                 Ok(_) => (
                     panther::util::human_bytes(ctx_d.mem().peak_bytes()),
+                    format!("{dense_ms:.1}"),
                     "ok".to_string(),
                 ),
-                Err(_) => ("-".into(), "x".to_string()),
+                Err(_) => ("-".into(), "-".into(), "x".to_string()),
             };
             for &m in features {
                 let perf = RandMultiHeadAttention::new(weights.clone(), m, KernelKind::Softmax, 3);
                 let ctx_p = ForwardCtx::with_budget(budget);
+                let t0 = std::time::Instant::now();
                 let perf_res = perf.forward(&x, &ctx_p);
-                let (perf_peak, perf_status) = match perf_res {
+                let perf_ms = t0.elapsed().as_secs_f64() * 1e3;
+                let (perf_peak, perf_ms_s, perf_status) = match perf_res {
                     Ok(_) => (
                         panther::util::human_bytes(ctx_p.mem().peak_bytes()),
+                        format!("{perf_ms:.1}"),
                         "ok".to_string(),
                     ),
-                    Err(_) => ("-".into(), "x".to_string()),
+                    Err(_) => ("-".into(), "-".into(), "x".to_string()),
                 };
                 table.row(&[
                     n.to_string(),
                     h.to_string(),
                     m.to_string(),
                     dense_peak.clone(),
+                    dense_ms_s.clone(),
                     dense_status.clone(),
                     perf_peak,
+                    perf_ms_s,
                     perf_status,
                     panther::util::human_bytes(dense_attention_mem(n, d, h)),
                     panther::util::human_bytes(performer_attention_mem(n, d, h, m)),

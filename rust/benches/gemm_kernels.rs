@@ -1,0 +1,124 @@
+//! GEMM kernel benchmark: the packed-panel microkernel across the shapes
+//! the crate actually runs (square dense products, skinny sketch factors,
+//! attention-head batches), with GFLOP/s and a machine-readable
+//! `BENCH_gemm.json` report at the repo root — the perf baseline every
+//! later kernel PR is diffed against.
+//!
+//! `--quick` shrinks shapes for the CI smoke lane; `PANTHER_BENCH_DIR`
+//! redirects the JSON output.
+
+use panther::linalg::{gemm, gemm_batch, gemm_threads, matmul, matmul_tn, Mat, MatMut, MatRef};
+use panther::rng::Philox;
+use panther::util::bench::{Bencher, JsonReport, Table};
+
+fn gflops(m: usize, k: usize, n: usize, ms: f64) -> f64 {
+    (2.0 * m as f64 * k as f64 * n as f64) / (ms / 1e3) / 1e9
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let bench = if quick {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+    let threads = gemm_threads();
+    let mut report = JsonReport::new("gemm", threads);
+    println!("# GEMM kernels (packed-panel microkernel, {threads} threads)\n");
+
+    // --- single products -----------------------------------------------------
+    let shapes: &[(usize, usize, usize)] = if quick {
+        &[(64, 64, 64), (96, 256, 40)]
+    } else {
+        &[
+            (256, 256, 256),
+            (512, 512, 512),
+            (1024, 1024, 1024),
+            (2048, 512, 64),  // sketch first stage: tall×skinny
+            (2048, 64, 512),  // sketch second stage: low-rank×wide
+            (130, 300, 70),   // ragged tiles (MR/NR/MC/NC edges)
+        ]
+    };
+    let mut rng = Philox::seeded(99);
+    let mut table = Table::new(&["op", "shape", "ms", "GFLOP/s"]);
+    for &(m, k, n) in shapes {
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let t = bench.run(&format!("matmul {m}x{k}x{n}"), || matmul(&a, &b));
+        let shape = format!("{m}x{k}x{n}");
+        let g = gflops(m, k, n, t.mean_ms());
+        table.row(&[
+            "matmul".into(),
+            shape.clone(),
+            format!("{:.3}", t.mean_ms()),
+            format!("{g:.2}"),
+        ]);
+        report.entry("matmul", &shape, t.mean_ms(), Some(g));
+
+        let mut c = Mat::zeros(m, n);
+        let t = bench.run(&format!("gemm accum {shape}"), || {
+            gemm(0.5, &a, &b, 1.0, &mut c);
+        });
+        let g = gflops(m, k, n, t.mean_ms());
+        table.row(&[
+            "gemm(alpha,beta)".into(),
+            shape.clone(),
+            format!("{:.3}", t.mean_ms()),
+            format!("{g:.2}"),
+        ]);
+        report.entry("gemm_accum", &shape, t.mean_ms(), Some(g));
+    }
+
+    // --- Gram/TN shape -------------------------------------------------------
+    {
+        let (k, m) = if quick { (256, 64) } else { (2048, 256) };
+        let a = Mat::randn(k, m, &mut rng);
+        let t = bench.run("matmul_tn gram", || matmul_tn(&a, &a));
+        let shape = format!("{m}x{k}x{m} (AtA)");
+        let g = gflops(m, k, m, t.mean_ms());
+        table.row(&[
+            "matmul_tn".into(),
+            shape.clone(),
+            format!("{:.3}", t.mean_ms()),
+            format!("{g:.2}"),
+        ]);
+        report.entry("matmul_tn", &shape, t.mean_ms(), Some(g));
+    }
+
+    // --- batched per-head attention shape ------------------------------------
+    // h independent (n×dh)·(dh×n) score products over strided column views
+    // of shared projections — one gemm_batch call, the attention hot shape.
+    {
+        let (n, d, h) = if quick { (128, 64, 8) } else { (512, 512, 8) };
+        let dh = d / h;
+        let q = Mat::randn(n, d, &mut rng);
+        let k = Mat::randn(n, d, &mut rng);
+        let mut scores: Vec<Mat> = (0..h).map(|_| Mat::zeros(n, n)).collect();
+        let t = bench.run("gemm_batch heads", || {
+            let a: Vec<MatRef> = (0..h)
+                .map(|i| q.view().col_range(i * dh, (i + 1) * dh))
+                .collect();
+            let b: Vec<MatRef> = (0..h)
+                .map(|i| k.view().col_range(i * dh, (i + 1) * dh).t())
+                .collect();
+            let mut c: Vec<MatMut> = scores.iter_mut().map(|s| s.view_mut()).collect();
+            gemm_batch(1.0, &a, &b, 0.0, &mut c);
+        });
+        let shape = format!("{h}x({n}x{dh}x{n})");
+        let g = gflops(n, dh, n, t.mean_ms() / h as f64);
+        table.row(&[
+            "gemm_batch".into(),
+            shape.clone(),
+            format!("{:.3}", t.mean_ms()),
+            format!("{g:.2}"),
+        ]);
+        report.entry("gemm_batch_heads", &shape, t.mean_ms(), Some(g));
+    }
+
+    println!("{}", table.render());
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_gemm.json: {e}"),
+    }
+    println!("gemm_kernels done");
+}

@@ -1,22 +1,83 @@
-//! Blocked, multi-threaded GEMM.
+//! Blocked, multi-threaded GEMM built on a packed-panel microkernel.
 //!
-//! This is the dense baseline every figure bench compares against, so it is
-//! the one routine we tune hard (see EXPERIMENTS.md §Perf): i-k-j loop order
-//! over a packed B panel, 4-wide j unrolling for the autovectorizer, L2-size
-//! blocking, and row-block parallelism over a shared thread pool.
+//! This is the dense baseline every figure bench compares against *and*
+//! the substrate under every sketched op, so it is the one routine we tune
+//! hard (see EXPERIMENTS.md §Perf). The layout follows the classic
+//! BLIS/RandLAPACK recipe:
+//!
+//! - operands are **packed once per call** into panel buffers — A into
+//!   MR-row panels, B into NR-column panels, both k-major — so the inner
+//!   kernel reads two contiguous streams regardless of the caller's
+//!   layout. Transposed operands and strided column slices (per-head
+//!   views) resolve at packing time for free: no `B.transpose()` is ever
+//!   materialized and no head slice is copied;
+//! - the inner loop is a register-blocked **MR×NR = 8×4 microkernel**
+//!   holding 32 independent f32 accumulators (breadth hides the FMA
+//!   latency), flushed with fused `alpha·acc` store/accumulate every KC
+//!   k-steps;
+//! - work is parallelized over **(row-block × col-block) tiles** of C on
+//!   the shared [`ThreadPool`]. Tiles never split the k dimension, so
+//!   every C element accumulates its k terms in the same ascending order
+//!   at any thread count — parallel results are bit-identical to serial.
+//!   (The k-major order itself differs from the pre-packing kernel's and
+//!   from a naive triple loop only in rounding; tests pin rel err ≤ 1e-5
+//!   against an f64 oracle.)
+//! - pack buffers come from a small process-wide pool, so steady-state
+//!   calls allocate nothing.
+//!
+//! [`gemm_batch`] runs many independent problems through one dispatch:
+//! packing is amortized per item and the tile set of *all* items feeds a
+//! single `parallel_for`, which is how the per-head attention math gets
+//! head-level parallelism and panel reuse in one call.
 
-use super::Mat;
+use super::mat::{Mat, MatMut, MatRef};
 use crate::util::threadpool::ThreadPool;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Mutex, OnceLock};
 
-/// Row-block size (tuned; see EXPERIMENTS.md §Perf).
+/// Microkernel rows: 8 rows of C per register block.
+const MR: usize = 8;
+/// Microkernel cols: 4 cols of C per register block.
+const NR: usize = 4;
+/// Parallel tile height (rows of C per task); a multiple of MR.
 const MC: usize = 64;
-/// Depth-block size.
+/// Parallel tile width (cols of C per task); a multiple of NR.
+const NC: usize = 128;
+/// Depth block: accumulators are flushed to C every KC k-steps, keeping
+/// the live A/B panel slices L2-resident through the tile sweep.
 const KC: usize = 256;
+/// `m·k·n` below this, packing overhead beats its payoff — small products
+/// stay on the direct kernels.
+const PACK_MIN_WORK: usize = 32 * 32 * 32;
+/// `m·k·n` below this, tile dispatch stays serial (pool overhead).
+const PAR_MIN_WORK: usize = 64 * 64 * 64;
+/// Retained pack buffers (two per concurrent GEMM call in steady state).
+const PACK_POOL_MAX: usize = 8;
 
 static POOL: OnceLock<ThreadPool> = OnceLock::new();
 static GEMM_THREADS: AtomicUsize = AtomicUsize::new(0); // 0 = default
+
+/// Reusable packing storage shared by every GEMM call in the process:
+/// buffers are taken at call start and returned at call end, so the
+/// steady-state hot path performs no heap allocation. Packing overwrites
+/// every slot (including panel padding), so recycled contents never leak
+/// into results.
+static PACK_POOL: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
+
+fn take_pack_buf(len: usize) -> Vec<f32> {
+    let mut buf = crate::util::lock_ignore_poison(&PACK_POOL)
+        .pop()
+        .unwrap_or_default();
+    buf.resize(len, 0.0);
+    buf
+}
+
+fn give_pack_buf(buf: Vec<f32>) {
+    let mut pool = crate::util::lock_ignore_poison(&PACK_POOL);
+    if pool.len() < PACK_POOL_MAX {
+        pool.push(buf);
+    }
+}
 
 /// Raw pointer to C's storage shared with pooled workers. Each call site
 /// partitions C into disjoint ranges and every worker materializes `&mut`
@@ -26,40 +87,323 @@ struct SendPtr(*mut f32);
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 
-/// Configure GEMM parallelism (takes effect before first use; after that the
-/// pool is fixed — call early in `main`). 1 disables threading.
-pub fn set_gemm_threads(n: usize) {
-    GEMM_THREADS.store(n, Ordering::SeqCst);
+/// Error from [`set_gemm_threads`]: the kernel pool was already
+/// initialized (by an earlier GEMM call) with a different worker count,
+/// so the request cannot take effect.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GemmPoolError {
+    /// The worker count that was requested.
+    pub requested: usize,
+    /// The worker count the pool is already running with.
+    pub active: usize,
+}
+
+impl std::fmt::Display for GemmPoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "set_gemm_threads({}) after the kernel pool started with {} workers — \
+             call it before the first matmul/gemm (or set PANTHER_GEMM_THREADS)",
+            self.requested, self.active
+        )
+    }
+}
+
+impl std::error::Error for GemmPoolError {}
+
+/// Configure GEMM parallelism. **Init-order contract:** the worker pool is
+/// created lazily by the first multi-threaded product and is fixed for the
+/// process lifetime, so this must be called early in `main`, before any
+/// GEMM runs. A call after the pool exists returns [`GemmPoolError`]
+/// (instead of the former silent no-op) unless the request resolves to
+/// the active worker count. `Err` means the request did not take effect;
+/// the knob behind it is never re-read once the pool exists. `1` disables
+/// threading; `0` restores the default (`PANTHER_GEMM_THREADS` env
+/// override, else machine size).
+pub fn set_gemm_threads(n: usize) -> Result<(), GemmPoolError> {
+    // What this request resolves to at init time.
+    let want = if n == 0 { default_threads() } else { n.max(1) };
+    if POOL.get().is_none() {
+        GEMM_THREADS.store(n, Ordering::SeqCst);
+    }
+    // Check (again) after the store: if a first GEMM raced on another
+    // thread and initialized the pool meanwhile, the store may have come
+    // too late — report that instead of returning a false Ok. (An init
+    // still in flight that read the old value and completes after this
+    // check is not detectable from here; configure before spawning
+    // kernel-using threads, as the contract above says.)
+    match POOL.get() {
+        None => Ok(()),
+        Some(p) if p.num_workers() == want => {
+            GEMM_THREADS.store(n, Ordering::SeqCst);
+            Ok(())
+        }
+        Some(p) => Err(GemmPoolError {
+            requested: n,
+            active: p.num_workers(),
+        }),
+    }
+}
+
+/// The number of kernel workers in effect (initializes the pool if this is
+/// the first query) — what bench reports record as `threads`.
+pub fn gemm_threads() -> usize {
+    pool().num_workers()
+}
+
+/// The worker count an unconfigured (`n = 0`) request resolves to: the
+/// `PANTHER_GEMM_THREADS` env override (so whole test/bench runs can pin
+/// the kernel thread count without code changes — CI runs a thread
+/// matrix to catch parallel/serial divergence), else the machine size.
+fn default_threads() -> usize {
+    std::env::var("PANTHER_GEMM_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&v| v != 0)
+        .unwrap_or_else(ThreadPool::default_size)
 }
 
 fn pool() -> &'static ThreadPool {
     POOL.get_or_init(|| {
-        let mut n = GEMM_THREADS.load(Ordering::SeqCst);
-        if n == 0 {
-            // Env override so whole test/bench runs can pin the kernel
-            // thread count without code changes (CI runs a
-            // PANTHER_GEMM_THREADS=1 lane to catch parallel/serial
-            // divergence).
-            n = std::env::var("PANTHER_GEMM_THREADS")
-                .ok()
-                .and_then(|v| v.parse().ok())
-                .unwrap_or(0);
-        }
-        let n = if n == 0 {
-            ThreadPool::default_size()
-        } else {
-            n
-        };
+        let n = GEMM_THREADS.load(Ordering::SeqCst);
+        let n = if n == 0 { default_threads() } else { n };
         ThreadPool::new(n)
     })
 }
 
+// ---------------------------------------------------------------------------
+// Packing
+// ---------------------------------------------------------------------------
+
+/// Pack an m×k operand view into MR-row panels: panel `pi` holds rows
+/// `[pi·MR, pi·MR+MR)` k-major — `buf[pi·MR·k + p·MR + i] = A[pi·MR+i, p]`
+/// — zero-padded past the last row so the microkernel never branches on m.
+/// Strided/transposed views gather here, which is where the old per-call
+/// `B.transpose()` cost went.
+fn pack_a(a: &MatRef, buf: &mut [f32]) {
+    let (m, k) = (a.rows(), a.cols());
+    for pi in 0..m.div_ceil(MR) {
+        let i0 = pi * MR;
+        let live = MR.min(m - i0);
+        let panel = &mut buf[pi * MR * k..(pi + 1) * MR * k];
+        if a.rs == 1 && live == MR {
+            // Unit row stride (a transposed row-major view): the MR lanes
+            // of each k-step are contiguous in the source — straight copy,
+            // no per-element bounds-checked gather.
+            for p in 0..k {
+                let src = a.off + i0 + p * a.cs;
+                panel[p * MR..p * MR + MR].copy_from_slice(&a.data[src..src + MR]);
+            }
+            continue;
+        }
+        for p in 0..k {
+            let dst = &mut panel[p * MR..p * MR + MR];
+            for (i, d) in dst.iter_mut().enumerate().take(live) {
+                *d = a.get(i0 + i, p);
+            }
+            for d in dst.iter_mut().skip(live) {
+                *d = 0.0;
+            }
+        }
+    }
+}
+
+/// Pack a k×n operand view into NR-column panels: panel `pj` holds columns
+/// `[pj·NR, pj·NR+NR)` k-major — `buf[pj·NR·k + p·NR + j] = B[p, pj·NR+j]`
+/// — zero-padded past the last column.
+fn pack_b(b: &MatRef, buf: &mut [f32]) {
+    let (k, n) = (b.rows(), b.cols());
+    for pj in 0..n.div_ceil(NR) {
+        let j0 = pj * NR;
+        let live = NR.min(n - j0);
+        let panel = &mut buf[pj * NR * k..(pj + 1) * NR * k];
+        if b.cs == 1 && live == NR {
+            // Unit column stride (the common non-transposed case): each
+            // k-step's NR lanes are contiguous in the source row —
+            // straight copy instead of a bounds-checked gather.
+            for p in 0..k {
+                let src = b.off + p * b.rs + j0;
+                panel[p * NR..p * NR + NR].copy_from_slice(&b.data[src..src + NR]);
+            }
+            continue;
+        }
+        for p in 0..k {
+            let dst = &mut panel[p * NR..p * NR + NR];
+            for (j, d) in dst.iter_mut().enumerate().take(live) {
+                *d = b.get(p, j0 + j);
+            }
+            for d in dst.iter_mut().skip(live) {
+                *d = 0.0;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Microkernel + tiles
+// ---------------------------------------------------------------------------
+
+/// One MR×NR block of C from packed panels: `acc = Σ_p a[:,p]⊗b[p,:]` over
+/// `kc` steps, then `C = alpha·acc` (`store`) or `C += alpha·acc`. The 32
+/// independent accumulators keep the FMA pipes full; rows/cols beyond
+/// `mr`/`nr` are computed against the pack's zero padding and simply not
+/// written.
+///
+/// SAFETY: caller guarantees `cptr` addresses an `mr × nr` block with row
+/// stride `rs` inside live C storage that it exclusively owns.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+unsafe fn micro_kernel(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    alpha: f32,
+    cptr: *mut f32,
+    rs: usize,
+    mr: usize,
+    nr: usize,
+    store: bool,
+) {
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    let mut acc = [[0f32; NR]; MR];
+    for p in 0..kc {
+        // Fixed-size array views let the optimizer drop bounds checks and
+        // vectorize the NR lane loop.
+        let av: &[f32; MR] = ap[p * MR..p * MR + MR].try_into().unwrap();
+        let bv: &[f32; NR] = bp[p * NR..p * NR + NR].try_into().unwrap();
+        for (ai, arow) in acc.iter_mut().enumerate() {
+            let a = av[ai];
+            for (c, &b) in arow.iter_mut().zip(bv) {
+                *c += a * b;
+            }
+        }
+    }
+    for (i, arow) in acc.iter().enumerate().take(mr) {
+        let crow = std::slice::from_raw_parts_mut(cptr.add(i * rs), nr);
+        if store {
+            for (c, &a) in crow.iter_mut().zip(arow) {
+                *c = alpha * a;
+            }
+        } else {
+            for (c, &a) in crow.iter_mut().zip(arow) {
+                *c += alpha * a;
+            }
+        }
+    }
+}
+
+/// One (row-block × col-block) tile of C from fully packed operands.
+/// `store` semantics apply to the first KC block only — later k blocks
+/// always accumulate. Loop order keeps the current B panel slice (≤ KC·NR
+/// floats) L1-resident across the row sweep.
+#[allow(clippy::too_many_arguments)]
+fn tile_job(
+    tile: usize,
+    col_tiles: usize,
+    alpha: f32,
+    ap: &[f32],
+    bp: &[f32],
+    overwrite: bool,
+    c: &MatMut,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let (ib, jb) = (tile / col_tiles, tile % col_tiles);
+    let (i_lo, i_hi) = (ib * MC, (ib * MC + MC).min(m));
+    let (j_lo, j_hi) = (jb * NC, (jb * NC + NC).min(n));
+    let mut pc = 0;
+    while pc < k {
+        let kc = KC.min(k - pc);
+        let store = overwrite && pc == 0;
+        let mut jr = j_lo;
+        while jr < j_hi {
+            let nr = NR.min(j_hi - jr);
+            let bpanel = &bp[(jr / NR) * NR * k + pc * NR..][..kc * NR];
+            let mut ir = i_lo;
+            while ir < i_hi {
+                let mr = MR.min(i_hi - ir);
+                let apanel = &ap[(ir / MR) * MR * k + pc * MR..][..kc * MR];
+                // SAFETY: tiles partition C's rows and columns, so the
+                // mr×nr block at (ir, jr) is exclusively this task's; the
+                // pointer stays inside C (ir < m, jr < n).
+                unsafe {
+                    micro_kernel(
+                        kc,
+                        apanel,
+                        bpanel,
+                        alpha,
+                        c.ptr.add(ir * c.rs + jr),
+                        c.rs,
+                        mr,
+                        nr,
+                        store,
+                    )
+                };
+                ir += MR;
+            }
+            jr += NR;
+        }
+        pc += kc;
+    }
+}
+
+/// `C ← alpha·A·B (+ C)` through the packed microkernel. With `overwrite`,
+/// C's prior contents are never read (beta = 0 semantics — safe on
+/// uninitialized/recycled buffers); otherwise the product accumulates
+/// (the caller has already applied beta).
+fn packed_gemm(alpha: f32, a: MatRef, b: MatRef, overwrite: bool, c: &mut MatMut) {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    debug_assert_eq!(b.rows(), k);
+    debug_assert_eq!((c.rows(), c.cols()), (m, n));
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if overwrite {
+            c.fill(0.0);
+        }
+        return;
+    }
+    let mut ap = take_pack_buf(m.div_ceil(MR) * MR * k);
+    let mut bp = take_pack_buf(n.div_ceil(NR) * NR * k);
+    pack_a(&a, &mut ap);
+    pack_b(&b, &mut bp);
+    let col_tiles = n.div_ceil(NC);
+    let tiles = m.div_ceil(MC) * col_tiles;
+    if tiles == 1 || m * k * n < PAR_MIN_WORK {
+        for t in 0..tiles {
+            tile_job(t, col_tiles, alpha, &ap, &bp, overwrite, c, m, k, n);
+        }
+    } else {
+        let cref = &*c;
+        let (apr, bpr) = (&ap[..], &bp[..]);
+        pool().parallel_for(tiles, move |t| {
+            tile_job(t, col_tiles, alpha, apr, bpr, overwrite, cref, m, k, n);
+        });
+    }
+    give_pack_buf(ap);
+    give_pack_buf(bp);
+}
+
+/// True when the packed kernel is worth dispatching for an m×k·k×n
+/// product (enough row reuse to amortize packing, enough work to matter).
+#[inline]
+fn use_packed(m: usize, k: usize, n: usize) -> bool {
+    m >= MR && m * k * n >= PACK_MIN_WORK
+}
+
+// ---------------------------------------------------------------------------
+// Public single-product entry points
+// ---------------------------------------------------------------------------
+
 /// `C = A · B`.
 ///
-/// Large products are routed through an explicit transpose of `B` and the
-/// NT dot kernel: the O(k·n) transpose is amortized over O(m·k·n) MACs and
-/// the dot kernel sustains ~3.5× the axpy kernel's throughput on this CPU
-/// (no store traffic in the inner loop) — see EXPERIMENTS.md §Perf #3.
+/// Large products run the packed-panel microkernel (B is packed into
+/// column panels directly from its natural layout — the former per-call
+/// `B.transpose()` materialization is gone); small ones run the direct
+/// blocked axpy kernel, whose overhead-free start wins under the packing
+/// threshold.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(
         a.cols(),
@@ -68,14 +412,13 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
         a.shape(),
         b.shape()
     );
-    let work = a.rows() * a.cols() * b.cols();
-    // Transpose pays off once the GEMM dominates the O(k·n) reshuffle;
-    // m ≥ 8 rows of reuse is the observed break-even.
-    if a.rows() >= 8 && work >= 32 * 32 * 32 {
-        return matmul_nt(a, &b.transpose());
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    if use_packed(m, k, n) {
+        packed_gemm(1.0, a.view(), b.view(), true, &mut c.view_mut());
+    } else {
+        gemm_into(a, b, 1.0, &mut c);
     }
-    let mut c = Mat::zeros(a.rows(), b.cols());
-    gemm_into(a, b, 1.0, &mut c);
     c
 }
 
@@ -106,7 +449,7 @@ pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
     let col_strips = n.div_ceil(JB);
     let row_blocks = m.div_ceil(RB);
     let ntiles = col_strips * row_blocks;
-    if work < 64 * 64 * 64 || ntiles == 1 {
+    if work < PAR_MIN_WORK || ntiles == 1 {
         tn_tile(a, b, c.data_mut().as_mut_ptr(), (0, m), (0, n), n);
         return c;
     }
@@ -156,40 +499,23 @@ fn tn_tile(
 
 /// `C = A · Bᵀ` without materializing the transpose.
 ///
-/// NT is the dot-product layout (both operand rows contiguous), so the
-/// kernel is 8 independent f32 partial sums per dot (keeps the FMA pipes
-/// full; a single accumulator serializes on the add latency) with row-block
-/// parallelism. This is the dense `Linear::forward` path the figure benches
-/// compare against — see EXPERIMENTS.md §Perf for the before/after.
+/// Large products go through the packed kernel (the transposed operand is
+/// resolved by the packing gather); small ones run the NT dot kernel —
+/// both operand rows contiguous, 8 independent partial sums per dot.
 pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols(), b.cols(), "matmul_nt shape mismatch");
-    let m = a.rows();
-    let n = b.rows();
-    let k = a.cols();
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
     let mut c = Mat::zeros(m, n);
     if m == 0 || n == 0 {
         return c;
     }
-    let work = m * n * k;
-    if work < 64 * 64 * 64 {
+    if use_packed(m, k, n) {
+        packed_gemm(1.0, a.view(), b.view().t(), true, &mut c.view_mut());
+    } else {
         for i in 0..m {
             nt_row(a.row(i), b, c.row_mut(i));
         }
-        return c;
     }
-    let cptr = SendPtr(c.data_mut().as_mut_ptr());
-    let cptr = &cptr;
-    let nblocks = m.div_ceil(MC);
-    pool().parallel_for(nblocks, move |ib| {
-        let i0 = ib * MC;
-        let i1 = ((ib + 1) * MC).min(m);
-        for i in i0..i1 {
-            // SAFETY: row i belongs to this worker's block; row blocks
-            // [i0, i1) are disjoint across ib, so no two live `&mut` alias.
-            let crow = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i * n), n) };
-            nt_row(a.row(i), b, crow);
-        }
-    });
     c
 }
 
@@ -221,74 +547,221 @@ fn nt_row(arow: &[f32], b: &Mat, crow: &mut [f32]) {
     }
 }
 
-/// Accumulating variant: `crow[j] += alpha · (arow · b.row(j))`.
-#[inline]
-fn nt_row_accum(alpha: f32, arow: &[f32], b: &Mat, crow: &mut [f32]) {
-    for (j, cv) in crow.iter_mut().enumerate() {
-        *cv += alpha * nt_dot(arow, b.row(j));
-    }
-}
-
 /// General `C = alpha·A·B + beta·C`.
 ///
-/// The product accumulates `alpha·A·B` directly into `C` — no full m×n
-/// temporary is materialized (the old `matmul` + `axpy` route allocated
-/// one and traversed C twice). Kernel dispatch mirrors [`matmul`]: large
-/// products transpose B once and accumulate through the fast NT dot
-/// kernel; small ones run the blocked axpy kernel in place.
+/// `alpha·A·B` accumulates directly into `C` — no m×n temporary. With
+/// `beta == 0` the packed kernel's store path writes C outright (prior
+/// contents, e.g. a recycled workspace buffer, are never read). Kernel
+/// dispatch mirrors [`matmul`].
 pub fn gemm(alpha: f32, a: &Mat, b: &Mat, beta: f32, c: &mut Mat) {
     assert_eq!(a.cols(), b.rows());
     assert_eq!(c.rows(), a.rows());
     assert_eq!(c.cols(), b.cols());
-    if beta != 1.0 {
-        for v in c.data_mut() {
-            *v *= beta;
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    if alpha == 0.0 || !use_packed(m, k, n) {
+        if beta == 0.0 {
+            // Never *read* C under beta = 0 (0·NaN would leak recycled
+            // workspace garbage) — overwrite outright.
+            c.data_mut().fill(0.0);
+        } else if beta != 1.0 {
+            for v in c.data_mut() {
+                *v *= beta;
+            }
+        }
+        if alpha != 0.0 {
+            gemm_into(a, b, alpha, c);
+        }
+        return;
+    }
+    if beta == 0.0 {
+        packed_gemm(alpha, a.view(), b.view(), true, &mut c.view_mut());
+    } else {
+        if beta != 1.0 {
+            for v in c.data_mut() {
+                *v *= beta;
+            }
+        }
+        packed_gemm(alpha, a.view(), b.view(), false, &mut c.view_mut());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batched API
+// ---------------------------------------------------------------------------
+
+/// Strided batched GEMM: `C_i = alpha·A_i·B_i + beta·C_i` for every item.
+///
+/// Operands are [`MatRef`] views, so the common batch shapes are free to
+/// describe: per-head column slices of one shared projection
+/// (`q.view().col_range(c0, c1)`), transposed factors (`.t()`), and
+/// per-head output bands of one shared matrix ([`Mat::col_bands_mut`]).
+/// Items may have heterogeneous shapes.
+///
+/// Every item is packed once, then the tiles of *all* items are dispatched
+/// through a single `parallel_for` — head-level parallelism and panel
+/// reuse compose instead of running h sequential products. Like [`gemm`],
+/// `beta == 0` means C is written without ever being read, and k is never
+/// split across workers, so results are thread-count independent.
+pub fn gemm_batch(alpha: f32, a: &[MatRef], b: &[MatRef], beta: f32, c: &mut [MatMut]) {
+    assert_eq!(a.len(), b.len(), "gemm_batch: operand count mismatch");
+    assert_eq!(a.len(), c.len(), "gemm_batch: output count mismatch");
+    for i in 0..a.len() {
+        assert_eq!(
+            a[i].cols(),
+            b[i].rows(),
+            "gemm_batch item {i}: inner dims {} vs {}",
+            a[i].cols(),
+            b[i].rows()
+        );
+        assert_eq!(
+            (c[i].rows(), c[i].cols()),
+            (a[i].rows(), b[i].cols()),
+            "gemm_batch item {i}: output shape"
+        );
+    }
+    if beta != 0.0 && beta != 1.0 {
+        for ci in c.iter_mut() {
+            ci.scale(beta);
         }
     }
     if alpha == 0.0 {
+        if beta == 0.0 {
+            for ci in c.iter_mut() {
+                ci.fill(0.0);
+            }
+        }
         return;
     }
-    let work = a.rows() * a.cols() * b.cols();
-    if a.rows() >= 8 && work >= 32 * 32 * 32 {
-        gemm_nt_accum(a, &b.transpose(), alpha, c);
+    let overwrite = beta == 0.0;
+    // Per-item geometry + pack-buffer layout (prefix offsets into two
+    // shared buffers, one take/give round-trip each).
+    struct Item {
+        m: usize,
+        k: usize,
+        n: usize,
+        col_tiles: usize,
+        ap: (usize, usize),
+        bp: (usize, usize),
+    }
+    let mut items = Vec::with_capacity(a.len());
+    let (mut ap_len, mut bp_len) = (0usize, 0usize);
+    let (mut tiles_total, mut work_total) = (0usize, 0usize);
+    let mut tile_off = Vec::with_capacity(a.len() + 1);
+    for i in 0..a.len() {
+        let (m, k, n) = (a[i].rows(), a[i].cols(), b[i].cols());
+        if k == 0 && overwrite {
+            c[i].fill(0.0);
+        }
+        let mut degenerate = m == 0 || n == 0 || k == 0;
+        if !degenerate && m * k * n < PACK_MIN_WORK {
+            // Sub-threshold item: packing overhead beats its payoff (the
+            // same break-even the single-product entry points honor) —
+            // run the direct strided kernel right here, serially, and
+            // give the item no pack range or tiles.
+            small_item(alpha, &a[i], &b[i], overwrite, &c[i]);
+            degenerate = true;
+        }
+        let (asz, bsz) = if degenerate {
+            (0, 0)
+        } else {
+            (m.div_ceil(MR) * MR * k, n.div_ceil(NR) * NR * k)
+        };
+        let col_tiles = n.div_ceil(NC);
+        let tiles = if degenerate {
+            0
+        } else {
+            m.div_ceil(MC) * col_tiles
+        };
+        tile_off.push(tiles_total);
+        items.push(Item {
+            m,
+            k,
+            n,
+            col_tiles,
+            ap: (ap_len, ap_len + asz),
+            bp: (bp_len, bp_len + bsz),
+        });
+        ap_len += asz;
+        bp_len += bsz;
+        tiles_total += tiles;
+        work_total += m * k * n;
+    }
+    tile_off.push(tiles_total);
+    if tiles_total == 0 {
+        return;
+    }
+    let mut ap_buf = take_pack_buf(ap_len);
+    let mut bp_buf = take_pack_buf(bp_len);
+    for (i, it) in items.iter().enumerate() {
+        if it.ap.1 > it.ap.0 {
+            pack_a(&a[i], &mut ap_buf[it.ap.0..it.ap.1]);
+            pack_b(&b[i], &mut bp_buf[it.bp.0..it.bp.1]);
+        }
+    }
+    let c_views: &[MatMut] = c;
+    let run = |t: usize| {
+        // The item owning global tile t (tile_off is sorted ascending).
+        let i = tile_off.partition_point(|&o| o <= t) - 1;
+        let it = &items[i];
+        tile_job(
+            t - tile_off[i],
+            it.col_tiles,
+            alpha,
+            &ap_buf[it.ap.0..it.ap.1],
+            &bp_buf[it.bp.0..it.bp.1],
+            overwrite,
+            &c_views[i],
+            it.m,
+            it.k,
+            it.n,
+        );
+    };
+    if tiles_total == 1 || work_total < PAR_MIN_WORK {
+        for t in 0..tiles_total {
+            run(t);
+        }
     } else {
-        gemm_into(a, b, alpha, c);
+        pool().parallel_for(tiles_total, run);
+    }
+    give_pack_buf(ap_buf);
+    give_pack_buf(bp_buf);
+}
+
+// ---------------------------------------------------------------------------
+// Small-product kernels
+// ---------------------------------------------------------------------------
+
+/// Direct strided kernel for sub-threshold [`gemm_batch`] items:
+/// `C_i = alpha·A·B (+ C_i)` straight off the views, i-k-j order with a
+/// contiguous C row as the accumulate target — no packing, no dispatch.
+/// With `overwrite` the row is zero-filled first (C's prior contents are
+/// never read, matching the packed store path's contract).
+fn small_item(alpha: f32, a: &MatRef, b: &MatRef, overwrite: bool, c: &MatMut) {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    for i in 0..m {
+        // SAFETY: rows of a MatMut are exclusively owned `cols`-element
+        // spans at stride `rs` (constructor invariant); this loop touches
+        // each row once from one thread.
+        let crow = unsafe { std::slice::from_raw_parts_mut(c.ptr.add(i * c.rs), n) };
+        if overwrite {
+            crow.fill(0.0);
+        }
+        for p in 0..k {
+            let av = alpha * a.get(i, p);
+            if av == 0.0 {
+                continue;
+            }
+            for (j, cv) in crow.iter_mut().enumerate() {
+                *cv += av * b.get(p, j);
+            }
+        }
     }
 }
 
-/// `C += alpha·A·Bᵀ` in the NT (dot-product) layout, parallel over row
-/// blocks — the same kernel [`matmul`] routes large products through,
-/// accumulating into C instead of materializing the product.
-fn gemm_nt_accum(a: &Mat, bt: &Mat, alpha: f32, c: &mut Mat) {
-    let m = a.rows();
-    let n = bt.rows();
-    let k = a.cols();
-    if m == 0 || n == 0 || k == 0 {
-        return;
-    }
-    let work = m * n * k;
-    if work < 64 * 64 * 64 {
-        for i in 0..m {
-            nt_row_accum(alpha, a.row(i), bt, c.row_mut(i));
-        }
-        return;
-    }
-    let cptr = SendPtr(c.data_mut().as_mut_ptr());
-    let cptr = &cptr;
-    let nblocks = m.div_ceil(MC);
-    pool().parallel_for(nblocks, move |ib| {
-        let i0 = ib * MC;
-        let i1 = ((ib + 1) * MC).min(m);
-        for i in i0..i1 {
-            // SAFETY: row i belongs to this worker's block; row blocks
-            // [i0, i1) are disjoint across ib, so no two live `&mut` alias.
-            let crow = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i * n), n) };
-            nt_row_accum(alpha, a.row(i), bt, crow);
-        }
-    });
-}
-
-/// Core blocked kernel: `C += alpha·A · B`, parallel over row blocks.
+/// Direct blocked kernel for products under the packing threshold:
+/// `C += alpha·A·B`, i-k-j order with KC depth blocking and a 4-wide
+/// unrolled axpy inner loop. Serial — under the threshold, dispatch
+/// overhead exceeds the work.
 fn gemm_into(a: &Mat, b: &Mat, alpha: f32, c: &mut Mat) {
     let m = a.rows();
     let k = a.cols();
@@ -296,42 +769,13 @@ fn gemm_into(a: &Mat, b: &Mat, alpha: f32, c: &mut Mat) {
     if m == 0 || n == 0 || k == 0 {
         return;
     }
-    let nblocks = m.div_ceil(MC);
-    // Small problems: stay serial to avoid pool overhead.
-    let work = m * n * k;
-    if work < 64 * 64 * 64 || nblocks == 1 {
-        let cbase = c.data_mut().as_mut_ptr();
-        for ib in 0..nblocks {
-            gemm_rows_raw(a, b, alpha, cbase, ib * MC, ((ib + 1) * MC).min(m));
-        }
-        return;
-    }
-    // Each worker writes a disjoint row range of C (the pool joins before
-    // we return).
-    let cptr = SendPtr(c.data_mut().as_mut_ptr());
-    let cptr = &cptr;
-    pool().parallel_for(nblocks, move |ib| {
-        let i0 = ib * MC;
-        let i1 = ((ib + 1) * MC).min(m);
-        gemm_rows_raw(a, b, alpha, cptr.0, i0, i1);
-    });
-}
-
-/// `C[i0..i1, :] += alpha·A[i0..i1, :] · B` on raw C storage (row-major,
-/// n cols).
-///
-/// Callers pass disjoint `[i0, i1)` row blocks per thread; the only `&mut`
-/// slices formed are over this block's own rows. `alpha` folds into the
-/// per-(i,p) scalar, so the inner kernel is unchanged.
-fn gemm_rows_raw(a: &Mat, b: &Mat, alpha: f32, cbase: *mut f32, i0: usize, i1: usize) {
-    let k = a.cols();
-    let n = b.cols();
+    let cbase = c.data_mut().as_mut_ptr();
     for p0 in (0..k).step_by(KC) {
         let p1 = (p0 + KC).min(k);
-        for i in i0..i1 {
+        for i in 0..m {
             let arow = a.row(i);
-            // SAFETY: row i lies in [i0, i1), owned exclusively by this
-            // block (row blocks partition C's rows).
+            // SAFETY: row i of C, borrowed one at a time; `a` and `b` are
+            // distinct allocations from `c` (no aliasing).
             let crow = unsafe { std::slice::from_raw_parts_mut(cbase.add(i * n), n) };
             for p in p0..p1 {
                 let aip = alpha * arow[p];
@@ -391,10 +835,29 @@ mod tests {
     #[test]
     fn matches_naive_blocked_sizes() {
         let mut rng = Philox::seeded(5);
-        // Cross the MC/KC block boundaries.
+        // Cross the MC/KC/NC block boundaries and leave MR/NR tails.
         let a = Mat::randn(130, 300, &mut rng);
         let b = Mat::randn(300, 70, &mut rng);
         assert!(super::super::rel_error(&matmul(&a, &b), &matmul_naive(&a, &b)) < 1e-5);
+    }
+
+    #[test]
+    fn packed_kernel_edge_tails_match_naive() {
+        // Shapes chosen to sit just above the packing threshold with every
+        // kind of ragged edge: rows not divisible by MR, cols not by NR,
+        // k crossing a KC boundary.
+        let mut rng = Philox::seeded(21);
+        for &(m, k, n) in &[
+            (9usize, 500usize, 9usize),
+            (8, 257, 17),
+            (65, 64, 129),
+            (127, 300, 5),
+        ] {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let err = super::super::rel_error(&matmul(&a, &b), &matmul_naive(&a, &b));
+            assert!(err < 1e-5, "({m},{k},{n}): rel {err}");
+        }
     }
 
     #[test]
@@ -429,6 +892,30 @@ mod tests {
     }
 
     #[test]
+    fn packed_parallel_tiles_bit_identical_to_serial() {
+        // k is never split across tiles, so the packed kernel must produce
+        // the same bits from the pooled tile sweep as from a serial one.
+        let mut rng = Philox::seeded(22);
+        let (m, k, n) = (130, 96, 150);
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let par = matmul(&a, &b); // above PAR_MIN_WORK → pooled tiles
+        let mut ser = Mat::zeros(m, n);
+        let mut ap = vec![0.0; m.div_ceil(MR) * MR * k];
+        let mut bp = vec![0.0; n.div_ceil(NR) * NR * k];
+        pack_a(&a.view(), &mut ap);
+        pack_b(&b.view(), &mut bp);
+        let col_tiles = n.div_ceil(NC);
+        {
+            let cv = &mut ser.view_mut();
+            for t in 0..m.div_ceil(MC) * col_tiles {
+                tile_job(t, col_tiles, 1.0, &ap, &bp, true, cv, m, k, n);
+            }
+        }
+        assert_eq!(par.data(), ser.data(), "tile dispatch changed the bits");
+    }
+
+    #[test]
     fn tn_skinny_gram_shape_parallel_path_correct() {
         // Gram-matrix shape: huge k, few columns — row blocks carry the
         // parallelism. 40 output rows × 40 cols, k = 700 → work above the
@@ -453,12 +940,11 @@ mod tests {
 
     #[test]
     fn gemm_alpha_beta_across_parallel_threshold() {
-        // (200, 300, 70): m spans several MC=64 row blocks and m·k·n
-        // clears the 64³ cutoff — the pooled NT accumulate path.
-        // (40, 50, 30): above the NT dispatch threshold but below the
-        // parallel cutoff — the serial NT accumulate path. (6, 50, 30):
-        // m < 8 — the blocked axpy kernel with alpha folded in. All must
-        // agree with the alpha·A·B + beta·C oracle built from naive parts.
+        // (200, 300, 70): m·k·n clears PAR_MIN_WORK — the pooled packed
+        // path. (40, 50, 30): above the packing threshold but below the
+        // parallel cutoff — the serial packed path. (6, 50, 30): m < 8 —
+        // the direct axpy kernel with alpha folded in. All must agree with
+        // the alpha·A·B + beta·C oracle built from naive parts.
         let mut rng = Philox::seeded(11);
         for &(m, k, n) in &[(200usize, 300usize, 70usize), (40, 50, 30), (6, 50, 30)] {
             let a = Mat::randn(m, k, &mut rng);
@@ -476,6 +962,21 @@ mod tests {
     }
 
     #[test]
+    fn gemm_beta_zero_never_reads_c() {
+        // beta = 0 must fully overwrite even NaN garbage — the contract
+        // workspace-recycled buffers rely on. Both dispatch paths.
+        let mut rng = Philox::seeded(13);
+        for &(m, k, n) in &[(40usize, 60usize, 50usize), (4, 5, 6)] {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let mut c = Mat::filled(m, n, f32::NAN);
+            gemm(1.0, &a, &b, 0.0, &mut c);
+            let err = super::super::rel_error(&c, &matmul_naive(&a, &b));
+            assert!(err < 1e-5, "({m},{k},{n}): rel {err}");
+        }
+    }
+
+    #[test]
     fn gemm_alpha_zero_only_scales_c() {
         let mut rng = Philox::seeded(12);
         let a = Mat::randn(6, 5, &mut rng);
@@ -484,6 +985,102 @@ mod tests {
         let mut c = c0.clone();
         gemm(0.0, &a, &b, 2.0, &mut c);
         assert!(super::super::rel_error(&c, &c0.scale(2.0)) < 1e-6);
+    }
+
+    #[test]
+    fn gemm_batch_matches_per_item_products() {
+        // Heterogeneous shapes, shared-storage views, transposed operands,
+        // and column-band outputs — the attention shapes.
+        let mut rng = Philox::seeded(14);
+        let (n, d, h) = (48usize, 32usize, 4usize);
+        let dh = d / h;
+        let q = Mat::randn(n, d, &mut rng);
+        let k = Mat::randn(n, d, &mut rng);
+        // Per-head scores: Qh · Khᵀ into independent Mats.
+        let mut scores: Vec<Mat> = (0..h).map(|_| Mat::filled(n, n, f32::NAN)).collect();
+        {
+            let a: Vec<MatRef> = (0..h)
+                .map(|i| q.view().col_range(i * dh, (i + 1) * dh))
+                .collect();
+            let b: Vec<MatRef> = (0..h)
+                .map(|i| k.view().col_range(i * dh, (i + 1) * dh).t())
+                .collect();
+            let mut c: Vec<MatMut> = scores.iter_mut().map(|s| s.view_mut()).collect();
+            gemm_batch(0.5, &a, &b, 0.0, &mut c);
+        }
+        for (i, s) in scores.iter().enumerate() {
+            let qh = q.slice(0, n, i * dh, (i + 1) * dh);
+            let kh = k.slice(0, n, i * dh, (i + 1) * dh);
+            let want = matmul_naive(&qh, &kh.transpose()).scale(0.5);
+            let err = super::super::rel_error(s, &want);
+            assert!(err < 1e-5, "head {i}: rel {err}");
+        }
+        // Scores · Vh into column bands of one shared output.
+        let v = Mat::randn(n, d, &mut rng);
+        let mut out = Mat::zeros(n, d);
+        {
+            let a: Vec<MatRef> = scores.iter().map(|s| s.view()).collect();
+            let b: Vec<MatRef> = (0..h)
+                .map(|i| v.view().col_range(i * dh, (i + 1) * dh))
+                .collect();
+            let mut c = out.col_bands_mut(dh);
+            gemm_batch(1.0, &a, &b, 0.0, &mut c);
+        }
+        for i in 0..h {
+            let vh = v.slice(0, n, i * dh, (i + 1) * dh);
+            let want = matmul_naive(&scores[i], &vh);
+            let got = out.slice(0, n, i * dh, (i + 1) * dh);
+            let err = super::super::rel_error(&got, &want);
+            assert!(err < 1e-5, "band {i}: rel {err}");
+        }
+    }
+
+    #[test]
+    fn gemm_batch_beta_and_degenerate_items() {
+        let mut rng = Philox::seeded(15);
+        let a0 = Mat::randn(5, 7, &mut rng);
+        let b0 = Mat::randn(7, 3, &mut rng);
+        let c0_init = Mat::randn(5, 3, &mut rng);
+        let mut c0 = c0_init.clone();
+        // A k = 0 item under beta = 0 must come out zero-filled.
+        let a1 = Mat::zeros(4, 0);
+        let b1 = Mat::zeros(0, 2);
+        let mut c1 = Mat::filled(4, 2, 7.0);
+        {
+            let a = [a0.view(), a1.view()];
+            let b = [b0.view(), b1.view()];
+            let mut c = [c0.view_mut(), c1.view_mut()];
+            gemm_batch(2.0, &a, &b, 0.0, &mut c);
+        }
+        let want = matmul_naive(&a0, &b0).scale(2.0);
+        assert!(super::super::rel_error(&c0, &want) < 1e-5);
+        assert!(c1.data().iter().all(|&v| v == 0.0));
+        // beta = 1 accumulates; beta = -1 negates then accumulates.
+        let mut c2 = c0_init.clone();
+        {
+            let a = [a0.view()];
+            let b = [b0.view()];
+            let mut c = [c2.view_mut()];
+            gemm_batch(1.0, &a, &b, -1.0, &mut c);
+        }
+        let want2 = matmul_naive(&a0, &b0).add(&c0_init.scale(-1.0));
+        assert!(super::super::rel_error(&c2, &want2) < 1e-4);
+    }
+
+    #[test]
+    fn set_gemm_threads_errors_after_pool_init() {
+        // Force pool creation, then a conflicting late call must fail and
+        // a matching one must be accepted.
+        let active = gemm_threads();
+        let err = set_gemm_threads(active + 1).expect_err("late resize must error");
+        assert_eq!(err.active, active);
+        assert_eq!(err.requested, active + 1);
+        assert!(err.to_string().contains("set_gemm_threads"));
+        assert!(set_gemm_threads(active).is_ok());
+        // 0 = "the default": accepted post-init iff the pool already runs
+        // at the resolved default size (true here — nothing reconfigured
+        // the knob before the pool first initialized).
+        assert_eq!(set_gemm_threads(0).is_ok(), active == default_threads());
     }
 
     #[test]

@@ -1,6 +1,9 @@
-//! Row-major dense f32 matrix.
+//! Row-major dense f32 matrix, plus the borrowed strided views
+//! ([`MatRef`], [`MatMut`]) the packed GEMM kernel and its batched API
+//! operate on.
 
 use crate::rng::{fill_normal, Rng};
+use std::marker::PhantomData;
 
 /// Dense row-major matrix of f32. The storage layout matches what the PJRT
 /// runtime exchanges with HLO executables, so host↔device copies are flat
@@ -259,6 +262,174 @@ impl Mat {
     pub fn max_abs(&self) -> f32 {
         self.data.iter().fold(0f32, |m, &x| m.max(x.abs()))
     }
+
+    /// Read-only strided view of the whole matrix (see [`MatRef`]).
+    pub fn view(&self) -> MatRef<'_> {
+        MatRef {
+            data: &self.data,
+            rows: self.rows,
+            cols: self.cols,
+            rs: self.cols,
+            cs: 1,
+            off: 0,
+        }
+    }
+
+    /// Mutable view of the whole matrix (see [`MatMut`]).
+    pub fn view_mut(&mut self) -> MatMut<'_> {
+        MatMut {
+            ptr: self.data.as_mut_ptr(),
+            rows: self.rows,
+            cols: self.cols,
+            rs: self.cols,
+            _life: PhantomData,
+        }
+    }
+
+    /// Split into `cols/width` disjoint column bands of equal `width` —
+    /// the per-head output views of the batched attention math. Requires
+    /// `cols % width == 0`. The bands partition the storage element-wise,
+    /// so they may be written concurrently from different workers.
+    pub fn col_bands_mut(&mut self, width: usize) -> Vec<MatMut<'_>> {
+        assert!(
+            width > 0 && self.cols % width == 0,
+            "col_bands_mut: {} cols not divisible by band width {width}",
+            self.cols
+        );
+        let (rows, rs) = (self.rows, self.cols);
+        let base = self.data.as_mut_ptr();
+        (0..self.cols / width)
+            .map(|b| MatMut {
+                // SAFETY: band offsets stay inside the allocation whenever
+                // any row exists; with zero rows no offset is formed (and
+                // no element will ever be addressed through the view).
+                ptr: if rows == 0 {
+                    base
+                } else {
+                    unsafe { base.add(b * width) }
+                },
+                rows,
+                cols: width,
+                rs,
+                _life: PhantomData,
+            })
+            .collect()
+    }
+}
+
+/// Borrowed read-only strided view of f32 matrix storage — the operand
+/// type of the packed GEMM ([`crate::linalg::gemm_batch`]). Generalized
+/// (row, col) strides make a transposed operand ([`MatRef::t`]) or a
+/// per-head column slice ([`MatRef::col_range`]) a free re-description of
+/// the same storage: the GEMM packing resolves the layout, so callers
+/// never materialize a transpose or copy a head slice.
+#[derive(Clone, Copy, Debug)]
+pub struct MatRef<'a> {
+    pub(crate) data: &'a [f32],
+    pub(crate) rows: usize,
+    pub(crate) cols: usize,
+    /// Row stride (elements between vertically adjacent entries).
+    pub(crate) rs: usize,
+    /// Column stride (elements between horizontally adjacent entries).
+    pub(crate) cs: usize,
+    /// Offset of element (0, 0) into `data`.
+    pub(crate) off: usize,
+}
+
+impl<'a> MatRef<'a> {
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Element (i, j).
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[self.off + i * self.rs + j * self.cs]
+    }
+
+    /// Transposed view — free (swaps shape and strides).
+    pub fn t(mut self) -> MatRef<'a> {
+        std::mem::swap(&mut self.rows, &mut self.cols);
+        std::mem::swap(&mut self.rs, &mut self.cs);
+        self
+    }
+
+    /// View of columns `[c0, c1)` — free (offsets the base).
+    pub fn col_range(mut self, c0: usize, c1: usize) -> MatRef<'a> {
+        assert!(c0 <= c1 && c1 <= self.cols, "col_range out of bounds");
+        self.off += c0 * self.cs;
+        self.cols = c1 - c0;
+        self
+    }
+
+    /// View of rows `[r0, r1)` — free (offsets the base).
+    pub fn row_range(mut self, r0: usize, r1: usize) -> MatRef<'a> {
+        assert!(r0 <= r1 && r1 <= self.rows, "row_range out of bounds");
+        self.off += r0 * self.rs;
+        self.rows = r1 - r0;
+        self
+    }
+}
+
+/// Mutable strided view of f32 matrix storage: rows are strided, columns
+/// contiguous — the exact shape the GEMM microkernel writes. Constructed
+/// only through [`Mat::view_mut`] / [`Mat::col_bands_mut`], which
+/// guarantee element-disjoint ownership, so disjoint views may be written
+/// concurrently from pool workers (hence the manual `Send`/`Sync`).
+#[derive(Debug)]
+pub struct MatMut<'a> {
+    pub(crate) ptr: *mut f32,
+    pub(crate) rows: usize,
+    pub(crate) cols: usize,
+    /// Row stride (elements between vertically adjacent entries).
+    pub(crate) rs: usize,
+    pub(crate) _life: PhantomData<&'a mut f32>,
+}
+
+// SAFETY: a MatMut owns its elements exclusively (constructor invariant),
+// and the GEMM kernels partition each view into disjoint tiles before
+// touching it from multiple workers.
+unsafe impl Send for MatMut<'_> {}
+unsafe impl Sync for MatMut<'_> {}
+
+impl MatMut<'_> {
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Mutable slice of row `i`.
+    #[inline]
+    pub(crate) fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        // SAFETY: the view exclusively owns its elements and `i` is in
+        // bounds; rows are `cols` contiguous elements at stride `rs`.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(i * self.rs), self.cols) }
+    }
+
+    /// Multiply every element by `s` (the batched GEMM's beta pre-pass).
+    pub(crate) fn scale(&mut self, s: f32) {
+        for i in 0..self.rows {
+            for v in self.row_mut(i) {
+                *v *= s;
+            }
+        }
+    }
+
+    /// Set every element to `v`.
+    pub(crate) fn fill(&mut self, v: f32) {
+        for i in 0..self.rows {
+            self.row_mut(i).fill(v);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -331,5 +502,35 @@ mod tests {
     #[should_panic]
     fn from_vec_shape_mismatch_panics() {
         let _ = Mat::from_vec(2, 2, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn views_transpose_and_slice_without_copying() {
+        let a = Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f32);
+        let v = a.view();
+        assert_eq!(v.get(1, 2), a.get(1, 2));
+        let t = v.t();
+        assert_eq!((t.rows(), t.cols()), (4, 3));
+        assert_eq!(t.get(2, 1), a.get(1, 2));
+        let c = v.col_range(1, 3);
+        assert_eq!((c.rows(), c.cols()), (3, 2));
+        assert_eq!(c.get(2, 0), a.get(2, 1));
+        let r = v.row_range(1, 3).col_range(2, 4).t();
+        assert_eq!(r.get(0, 1), a.get(2, 2));
+    }
+
+    #[test]
+    fn col_bands_partition_and_write_disjointly() {
+        let mut a = Mat::zeros(2, 6);
+        {
+            let mut bands = a.col_bands_mut(2);
+            assert_eq!(bands.len(), 3);
+            for (bi, band) in bands.iter_mut().enumerate() {
+                band.fill(bi as f32 + 1.0);
+            }
+            bands[1].scale(10.0);
+        }
+        assert_eq!(a.row(0), &[1.0, 1.0, 20.0, 20.0, 3.0, 3.0]);
+        assert_eq!(a.row(1), &[1.0, 1.0, 20.0, 20.0, 3.0, 3.0]);
     }
 }

@@ -16,8 +16,11 @@ mod svd;
 mod tri;
 
 pub use chol::{cholesky_lower, CholError};
-pub use gemm::{gemm, matmul, matmul_tn, matmul_nt, set_gemm_threads};
-pub use mat::Mat;
+pub use gemm::{
+    gemm, gemm_batch, gemm_threads, matmul, matmul_nt, matmul_tn, set_gemm_threads,
+    GemmPoolError,
+};
+pub use mat::{Mat, MatMut, MatRef};
 pub use qr::{qr_cp, qr_thin, QrCp};
 pub use svd::{svd_jacobi, Svd};
 pub use tri::{solve_triu, solve_triu_right, inv_triu};

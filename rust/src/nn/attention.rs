@@ -2,18 +2,34 @@
 //! `RandMultiHeadAttention` (Performer FAVOR+ linear attention,
 //! Choromanski et al. 2022 — the paper's [3]).
 //!
-//! Both forwards route every temporary through a [`MemTracker`], so the
+//! Both forwards route every temporary through a
+//! [`MemTracker`](crate::util::memtrack::MemTracker), so the
 //! Figure-3 experiment (peak forward memory vs sequence length, with "x"
 //! markers where the dense implementation exceeds the device budget) is
 //! measured, not modeled: the dense path materializes the `h × n × n` score
 //! tensor exactly like `nn.MultiheadAttention` does, the Performer path
-//! only ever holds `n × m` feature blocks and the `m × d_h` running state.
+//! only ever holds `O(h·(n·m + m·d_h))` feature/state blocks.
+//!
+//! **Per-head math is batched.** The per-head products of both variants —
+//! dense scores `Q_h·K_hᵀ`, `P_h·V_h`, the Performer's feature projections
+//! and `φ(K)ᵀV`/`φ(Q)·KV` chain, and the whole backward dP/dS/dQ/dK/dV
+//! chain — run as *one* [`crate::linalg::gemm_batch`] call per stage over
+//! strided head views (`Mat::view().col_range(..)`, `Mat::col_bands_mut`)
+//! instead of h sequential matmuls, so head-level parallelism and GEMM
+//! panel reuse compose and no head slice is ever copied. Scratch blocks
+//! (score matrices, feature maps, projection-space gradients) come from
+//! the shared [`Workspace`] arena in [`ForwardCtx`], so steady-state
+//! inference forwards and backward's transients allocate nothing on the
+//! hot path (training forwards detach their buffers into the activation
+//! cache, which owns — and eventually frees — them).
 
-use super::module::{Cache, ForwardCtx, GradStore, Module, ParamMut, ParamRef};
+use super::module::{
+    Cache, ForwardCtx, GradStore, Module, ParamMut, ParamRef, Workspace, WsMat,
+};
 use super::plan::Sketchable;
-use crate::linalg::{matmul, Mat};
+use crate::linalg::{gemm, gemm_batch, matmul, Mat, MatMut, MatRef};
 use crate::rng::{Philox, Rng};
-use crate::util::memtrack::{MemError, MemGuard, MemTracker};
+use crate::util::memtrack::{MemError, MemGuard};
 
 /// Shared backward tail of both attention variants: given per-head input
 /// gradients already assembled into `dq`/`dk`/`dv` (n×d, in *raw
@@ -21,21 +37,40 @@ use crate::util::memtrack::{MemError, MemGuard, MemTracker};
 /// gradients and return `∂loss/∂x`.
 ///
 /// `q = x·Wq` etc. ⇒ `dWq = xᵀ·dq`, `dx = dq·Wqᵀ + dk·Wkᵀ + dv·Wvᵀ`
-/// (the output-projection term is added by the caller).
+/// (the output-projection term is added by the caller). The three weight
+/// gradients run as one 3-item batched dispatch into d×d workspace
+/// blocks; `dx` accumulates in place sequentially (a shared accumulate
+/// target cannot batch) — no per-term temporaries either way.
 fn attn_proj_backward(
     w: &AttnWeights,
     grads: &mut GradStore,
+    ws: &Workspace,
     x: &Mat,
     dq: &Mat,
     dk: &Mat,
     dv: &Mat,
 ) -> Mat {
-    grads.accum("wq", 1.0, crate::linalg::matmul_tn(x, dq).data());
-    grads.accum("wk", 1.0, crate::linalg::matmul_tn(x, dk).data());
-    grads.accum("wv", 1.0, crate::linalg::matmul_tn(x, dv).data());
-    let mut dx = crate::linalg::matmul_nt(dq, &w.wq);
-    dx.axpy(1.0, &crate::linalg::matmul_nt(dk, &w.wk));
-    dx.axpy(1.0, &crate::linalg::matmul_nt(dv, &w.wv));
+    let d = w.embed_dim;
+    let n = x.rows();
+    let mut dwq = ws.take(d, d);
+    let mut dwk = ws.take(d, d);
+    let mut dwv = ws.take(d, d);
+    {
+        let a = [x.view().t(), x.view().t(), x.view().t()];
+        let b = [dq.view(), dk.view(), dv.view()];
+        let mut c = [dwq.view_mut(), dwk.view_mut(), dwv.view_mut()];
+        gemm_batch(1.0, &a, &b, 0.0, &mut c);
+    }
+    grads.accum("wq", 1.0, dwq.data());
+    grads.accum("wk", 1.0, dwk.data());
+    grads.accum("wv", 1.0, dwv.data());
+    let mut dx = Mat::zeros(n, d);
+    for (dproj, wmat) in [(dq, &w.wq), (dk, &w.wk), (dv, &w.wv)] {
+        let a = [dproj.view()];
+        let b = [wmat.view().t()];
+        let mut c = [dx.view_mut()];
+        gemm_batch(1.0, &a, &b, 1.0, &mut c);
+    }
     dx
 }
 
@@ -135,14 +170,17 @@ impl MultiHeadAttention {
     }
 
     /// Self-attention forward on `x: n × d`, tracking every temporary in
-    /// `mem`. Returns `n × d` or a budget error (the Fig. 3 "x"). With
-    /// `want_cache`, also returns the activations backward needs.
+    /// `ctx.mem()`. Returns `n × d` or a budget error (the Fig. 3 "x").
+    /// With `want_cache`, also returns the activations backward needs —
+    /// otherwise every scratch block returns to the context's workspace.
     fn forward_with(
         &self,
         x: &Mat,
-        mem: &MemTracker,
+        ctx: &ForwardCtx,
         want_cache: bool,
     ) -> Result<(Mat, Option<MhaCache>), MemError> {
+        let mem = ctx.mem();
+        let ws = ctx.workspace();
         let w = &self.weights;
         let n = x.rows();
         let d = w.embed_dim;
@@ -153,30 +191,39 @@ impl MultiHeadAttention {
         // on return; a training forward moves them into the cache so the
         // retained activations stay accounted until backward.
         let gq = mem.alloc((n * d * 4) as u64)?;
-        let q = matmul(x, &w.wq);
+        let mut q = ws.take(n, d);
+        gemm(1.0, x, &w.wq, 0.0, &mut q);
         let gk = mem.alloc((n * d * 4) as u64)?;
-        let k = matmul(x, &w.wk);
+        let mut k = ws.take(n, d);
+        gemm(1.0, x, &w.wk, 0.0, &mut k);
         let gv = mem.alloc((n * d * 4) as u64)?;
-        let v = matmul(x, &w.wv);
-        let mut out = Mat::zeros(n, d);
+        let mut v = ws.take(n, d);
+        gemm(1.0, x, &w.wv, 0.0, &mut v);
         let go = mem.alloc((n * d * 4) as u64)?;
+        let mut out = ws.take(n, d);
         let scale = 1.0 / (dh as f32).sqrt();
-        // The dense score matrix for ALL heads is what blows memory on GPUs;
-        // PyTorch materializes (h, n, n) at once — we account the same.
+        // The dense score tensor for ALL heads is what blows memory on
+        // GPUs; PyTorch materializes (h, n, n) at once — we account (and
+        // now also compute) the same: one batched product over strided
+        // per-head views, with the 1/√dh scale folded into alpha.
         let gscores = mem.alloc((h * n * n * 4) as u64)?;
-        let mut probs = Vec::with_capacity(if want_cache { h } else { 0 });
-        for head in 0..h {
-            let c0 = head * dh;
-            let qh = q.slice(0, n, c0, c0 + dh);
-            let kh = k.slice(0, n, c0, c0 + dh);
-            let vh = v.slice(0, n, c0, c0 + dh);
-            // scores = Qh·Khᵀ · scale, then row-softmax.
-            let mut scores = crate::linalg::matmul_nt(&qh, &kh);
+        let mut scores: Vec<WsMat> = (0..h).map(|_| ws.take(n, n)).collect();
+        {
+            let a: Vec<MatRef> = (0..h)
+                .map(|i| q.view().col_range(i * dh, (i + 1) * dh))
+                .collect();
+            let b: Vec<MatRef> = (0..h)
+                .map(|i| k.view().col_range(i * dh, (i + 1) * dh).t())
+                .collect();
+            let mut c: Vec<MatMut> = scores.iter_mut().map(|s| s.view_mut()).collect();
+            gemm_batch(scale, &a, &b, 0.0, &mut c);
+        }
+        // Row softmax per head.
+        for s in scores.iter_mut() {
             for i in 0..n {
-                let row = scores.row_mut(i);
+                let row = s.row_mut(i);
                 let mut mx = f32::NEG_INFINITY;
-                for v in row.iter_mut() {
-                    *v *= scale;
+                for v in row.iter() {
                     mx = mx.max(*v);
                 }
                 let mut sum = 0f32;
@@ -188,24 +235,31 @@ impl MultiHeadAttention {
                     *v /= sum;
                 }
             }
-            let oh = matmul(&scores, &vh); // n × dh
-            for i in 0..n {
-                out.row_mut(i)[c0..c0 + dh].copy_from_slice(oh.row(i));
-            }
-            if want_cache {
-                probs.push(scores);
-            }
+        }
+        // Head outputs P_h·V_h straight into disjoint column bands of the
+        // concat matrix — batched, no per-head copy-out.
+        {
+            let a: Vec<MatRef> = scores.iter().map(|s| s.view()).collect();
+            let b: Vec<MatRef> = (0..h)
+                .map(|i| v.view().col_range(i * dh, (i + 1) * dh))
+                .collect();
+            let mut c = out.col_bands_mut(dh);
+            gemm_batch(1.0, &a, &b, 0.0, &mut c);
         }
         let y = matmul(&out, &w.wo);
-        let cache = want_cache.then(|| MhaCache {
-            x: x.clone(),
-            q,
-            k,
-            v,
-            probs,
-            concat: out,
-            _guards: vec![gq, gk, gv, go, gscores],
-        });
+        let cache = if want_cache {
+            Some(MhaCache {
+                x: x.clone(),
+                q: q.detach(),
+                k: k.detach(),
+                v: v.detach(),
+                probs: scores.into_iter().map(WsMat::detach).collect(),
+                concat: out.detach(),
+                _guards: vec![gq, gk, gv, go, gscores],
+            })
+        } else {
+            None
+        };
         Ok((y, cache))
     }
 }
@@ -216,11 +270,11 @@ impl Module for MultiHeadAttention {
     }
 
     fn forward(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<Mat> {
-        Ok(self.forward_with(x, ctx.mem(), false)?.0)
+        Ok(self.forward_with(x, ctx, false)?.0)
     }
 
     fn forward_train(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<(Mat, Cache)> {
-        let (y, cache) = self.forward_with(x, ctx.mem(), true)?;
+        let (y, cache) = self.forward_with(x, ctx, true)?;
         Ok((y, Cache::new(cache.expect("cache requested"))))
     }
 
@@ -236,49 +290,87 @@ impl Module for MultiHeadAttention {
             "grad_out shape {:?} vs expected ({n}, {d})",
             g.shape()
         );
-        // Dominant transients: dq/dk/dv/dconcat (n×d each) plus one n×n
-        // score gradient per head alive at a time.
-        let _act = ctx.mem().alloc(((4 * n * d + n * n) * 4) as u64)?;
+        // Dominant transients: dq/dk/dv/dconcat (n×d each) plus the h n×n
+        // score-gradient blocks the batched dP→dS chain keeps alive at
+        // once (the old serial path held one head's block at a time; the
+        // batch trades that slack for head-parallel products).
+        let _act = ctx.mem().alloc(((4 * n * d + h * n * n) * 4) as u64)?;
+        let ws = ctx.workspace();
         let scale = 1.0 / (dh as f32).sqrt();
-        // Output projection: y = concat·Wo.
-        let dwo = crate::linalg::matmul_tn(&c.concat, g); // d×d
-        let dconcat = crate::linalg::matmul_nt(g, &w.wo); // n×d
-        let mut dq = Mat::zeros(n, d);
-        let mut dk = Mat::zeros(n, d);
-        let mut dv = Mat::zeros(n, d);
-        for head in 0..h {
-            let c0 = head * dh;
-            let qh = c.q.slice(0, n, c0, c0 + dh);
-            let kh = c.k.slice(0, n, c0, c0 + dh);
-            let vh = c.v.slice(0, n, c0, c0 + dh);
-            let p = &c.probs[head];
-            let doh = dconcat.slice(0, n, c0, c0 + dh); // n×dh
-            // oh = P·Vh ⇒ dVh = Pᵀ·doh, dP = doh·Vhᵀ.
-            let dvh = crate::linalg::matmul_tn(p, &doh);
-            let mut ds = crate::linalg::matmul_nt(&doh, &vh); // dP, reused for dS
-            // Row-softmax backward: dS_ij = P_ij·(dP_ij − Σ_k dP_ik·P_ik).
+        // Output projection: y = concat·Wo ⇒ dWo = concatᵀ·g, dconcat = g·Woᵀ.
+        {
+            let mut dwo = ws.take(d, d);
+            let a = [c.concat.view().t()];
+            let b = [g.view()];
+            let mut cb = [dwo.view_mut()];
+            gemm_batch(1.0, &a, &b, 0.0, &mut cb);
+            self.grads.accum("wo", 1.0, dwo.data());
+        }
+        let mut dconcat = ws.take(n, d);
+        {
+            let a = [g.view()];
+            let b = [w.wo.view().t()];
+            let mut cb = [dconcat.view_mut()];
+            gemm_batch(1.0, &a, &b, 0.0, &mut cb);
+        }
+        let mut dq = ws.take(n, d);
+        let mut dk = ws.take(n, d);
+        let mut dv = ws.take(n, d);
+        // oh = P·Vh ⇒ dVh = Pᵀ·doh — batched into dv's column bands.
+        {
+            let a: Vec<MatRef> = c.probs.iter().map(|p| p.view().t()).collect();
+            let b: Vec<MatRef> = (0..h)
+                .map(|i| dconcat.view().col_range(i * dh, (i + 1) * dh))
+                .collect();
+            let mut cb = dv.col_bands_mut(dh);
+            gemm_batch(1.0, &a, &b, 0.0, &mut cb);
+        }
+        // dP = doh·Vhᵀ per head (reused in place for dS below).
+        let mut ds: Vec<WsMat> = (0..h).map(|_| ws.take(n, n)).collect();
+        {
+            let a: Vec<MatRef> = (0..h)
+                .map(|i| dconcat.view().col_range(i * dh, (i + 1) * dh))
+                .collect();
+            let b: Vec<MatRef> = (0..h)
+                .map(|i| c.v.view().col_range(i * dh, (i + 1) * dh).t())
+                .collect();
+            let mut cb: Vec<MatMut> = ds.iter_mut().map(|s| s.view_mut()).collect();
+            gemm_batch(1.0, &a, &b, 0.0, &mut cb);
+        }
+        // Row-softmax backward: dS_ij = P_ij·(dP_ij − Σ_k dP_ik·P_ik).
+        for (dsh, p) in ds.iter_mut().zip(&c.probs) {
             for i in 0..n {
-                let dot: f64 = ds
+                let dot: f64 = dsh
                     .row(i)
                     .iter()
                     .zip(p.row(i))
                     .map(|(&a, &b)| a as f64 * b as f64)
                     .sum();
-                for (sv, &pv) in ds.row_mut(i).iter_mut().zip(p.row(i)) {
+                for (sv, &pv) in dsh.row_mut(i).iter_mut().zip(p.row(i)) {
                     *sv = pv * (*sv - dot as f32);
                 }
             }
-            // S = scale·Qh·Khᵀ ⇒ dQh = scale·dS·Kh, dKh = scale·dSᵀ·Qh.
-            let dqh = matmul(&ds, &kh).scale(scale);
-            let dkh = crate::linalg::matmul_tn(&ds, &qh).scale(scale);
-            for i in 0..n {
-                dq.row_mut(i)[c0..c0 + dh].copy_from_slice(dqh.row(i));
-                dk.row_mut(i)[c0..c0 + dh].copy_from_slice(dkh.row(i));
-                dv.row_mut(i)[c0..c0 + dh].copy_from_slice(dvh.row(i));
-            }
         }
-        let dx = attn_proj_backward(&self.weights, &mut self.grads, &c.x, &dq, &dk, &dv);
-        self.grads.accum("wo", 1.0, dwo.data());
+        // S = scale·Qh·Khᵀ ⇒ dQh = scale·dS·Kh, dKh = scale·dSᵀ·Qh —
+        // batched into dq/dk column bands with the scale folded into alpha.
+        {
+            let a: Vec<MatRef> = ds.iter().map(|s| s.view()).collect();
+            let b: Vec<MatRef> = (0..h)
+                .map(|i| c.k.view().col_range(i * dh, (i + 1) * dh))
+                .collect();
+            let mut cb = dq.col_bands_mut(dh);
+            gemm_batch(scale, &a, &b, 0.0, &mut cb);
+        }
+        {
+            let a: Vec<MatRef> = ds.iter().map(|s| s.view().t()).collect();
+            let b: Vec<MatRef> = (0..h)
+                .map(|i| c.q.view().col_range(i * dh, (i + 1) * dh))
+                .collect();
+            let mut cb = dk.col_bands_mut(dh);
+            gemm_batch(scale, &a, &b, 0.0, &mut cb);
+        }
+        drop(ds); // n×n blocks back to the arena before the projection GEMMs
+        let dx = attn_proj_backward(&self.weights, &mut self.grads, ws, &c.x, &dq, &dk, &dv);
         Ok(dx)
     }
 
@@ -288,6 +380,10 @@ impl Module for MultiHeadAttention {
 
     fn zero_grads(&mut self) {
         self.grads.zero();
+    }
+
+    fn scale_grads(&mut self, s: f32) {
+        self.grads.scale(s);
     }
 
     fn params(&self) -> Vec<(String, ParamRef<'_>)> {
@@ -321,12 +417,10 @@ pub struct RandMultiHeadAttention {
 }
 
 /// Per-head slice of [`RandMhaCache`]: everything the linear-attention
-/// backward reuses — all `O(n·m + m·d_h)`, never `n×n`.
+/// backward reuses — all `O(n·m + m·d_h)`, never `n×n`. The feature-map
+/// *inputs* live in the cache-level `qs`/`ks`/`v` matrices (head slices
+/// are column views, not copies).
 struct PerfHead {
-    /// Scaled Q/K head slices (the feature-map inputs) and the V slice.
-    qh: Mat,
-    kh: Mat,
-    vh: Mat,
     phi_q: Mat,
     phi_k: Mat,
     /// `φ(K)ᵀ·V` (m × d_h).
@@ -343,12 +437,119 @@ struct PerfHead {
 /// Activation cache of [`RandMultiHeadAttention::forward_train`].
 struct RandMhaCache {
     x: Mat,
+    /// Q/K projections pre-scaled by 1/√dh (the feature-map inputs) and
+    /// the raw V projection; per-head slices are column views into these.
+    qs: Mat,
+    ks: Mat,
+    v: Mat,
     /// Head outputs concatenated (n×d), before the output projection.
     concat: Mat,
     heads: Vec<PerfHead>,
     /// The forward's allocation guards (projections + per-head state) —
     /// kept charged for the cache's lifetime.
     _guards: Vec<MemGuard>,
+}
+
+/// Overwrite a random-feature projection block `proj = x_h·ω_h` with the
+/// FAVOR+ feature map φ — the ONE copy of the formula, shared by the
+/// batched forward and the streaming decode path. Softmax kernel:
+/// `φ = exp(proj − ‖x‖²/2 − c)/√m` (positive, with a *scalar* stabilizer
+/// `c`, shared by all rows — a per-row stabilizer would reweight keys and
+/// bias the attention estimate); ReLU kernel: `φ = max(proj, 0)/√m`.
+/// `xs` holds the scaled inputs; the head's slice is columns
+/// `[c0, c0+dh)`. `stab`: `None` = the block's max (batch path);
+/// streaming passes `Some(0.0)` — the stabilizer must be constant across
+/// time steps or the accumulated KV state mixes inconsistently-scaled
+/// features.
+fn phi_in_place(
+    kernel: KernelKind,
+    proj: &mut Mat,
+    xs: &Mat,
+    c0: usize,
+    dh: usize,
+    stab: Option<f32>,
+) {
+    let s = 1.0 / (proj.cols() as f32).sqrt();
+    match kernel {
+        KernelKind::Softmax => {
+            let c = stab.unwrap_or_else(|| {
+                proj.data()
+                    .iter()
+                    .cloned()
+                    .fold(f32::NEG_INFINITY, f32::max)
+            });
+            for i in 0..proj.rows() {
+                let sq: f32 = xs.row(i)[c0..c0 + dh].iter().map(|&v| v * v).sum::<f32>() / 2.0;
+                for o in proj.row_mut(i) {
+                    *o = (*o - sq - c).exp() * s;
+                }
+            }
+        }
+        KernelKind::Relu => {
+            for v in proj.data_mut() {
+                *v = v.max(0.0) * s;
+            }
+        }
+    }
+}
+
+/// Shared tail of the FAVOR+ backward for one projection side (q or k):
+/// convert `dφ` to `e` in place (softmax features `φ = exp(ωᵀx − ‖x‖²/2
+/// − c)/√m` give `e = dφ⊙φ`; ReLU features give `e = s·dφ` where
+/// `φ > 0`), run the batched `e·ωᵀ` products into `dst`'s head bands with
+/// the 1/√dh return-to-raw-projection-space factor folded into alpha, and
+/// apply the softmax kernel's `−rowsum(e)·x` term. The stabilizer `c` is
+/// treated as a constant: the normalized attention output is exactly
+/// invariant to it (it rescales numerator and denominator identically),
+/// so its true gradient contribution is zero.
+#[allow(clippy::too_many_arguments)]
+fn favor_feature_backward(
+    kernel: KernelKind,
+    features: &[Mat],
+    dphi: &mut [WsMat],
+    phis: &[&Mat],
+    xs: &Mat,
+    scale: f32,
+    dh: usize,
+    dst: &mut Mat,
+) {
+    let n = xs.rows();
+    match kernel {
+        KernelKind::Softmax => {
+            for (e, phi) in dphi.iter_mut().zip(phis) {
+                for (ev, &pv) in e.data_mut().iter_mut().zip(phi.data()) {
+                    *ev *= pv;
+                }
+            }
+        }
+        KernelKind::Relu => {
+            let s = 1.0 / (features[0].cols() as f32).sqrt();
+            for (e, phi) in dphi.iter_mut().zip(phis) {
+                for (ev, &pv) in e.data_mut().iter_mut().zip(phi.data()) {
+                    *ev = if pv > 0.0 { *ev * s } else { 0.0 };
+                }
+            }
+        }
+    }
+    {
+        let a: Vec<MatRef> = dphi.iter().map(|e| e.view()).collect();
+        let b: Vec<MatRef> = features.iter().map(|f| f.view().t()).collect();
+        let mut c = dst.col_bands_mut(dh);
+        gemm_batch(scale, &a, &b, 0.0, &mut c);
+    }
+    if matches!(kernel, KernelKind::Softmax) {
+        for (head, e) in dphi.iter().enumerate() {
+            let c0 = head * dh;
+            for i in 0..n {
+                let rs: f32 = e.row(i).iter().sum();
+                let xrow = &xs.row(i)[c0..c0 + dh];
+                let drow = &mut dst.row_mut(i)[c0..c0 + dh];
+                for (dv, &xv) in drow.iter_mut().zip(xrow) {
+                    *dv -= scale * rs * xv;
+                }
+            }
+        }
+    }
 }
 
 impl RandMultiHeadAttention {
@@ -367,63 +568,35 @@ impl RandMultiHeadAttention {
         }
     }
 
-    /// FAVOR+ feature map. Softmax: `φ(x) = exp(ωᵀx − ‖x‖²/2 − c)/√m`
-    /// (positive, with a *scalar* stabilizer `c` shared by all rows — a
-    /// per-row stabilizer would reweight keys and bias the attention
-    /// estimate); ReLU: `max(ωᵀx, 0)/√m`.
-    fn feature_map(&self, xh: &Mat, head: usize) -> Mat {
-        self.feature_map_with_stab(xh, head, None)
+    /// Feature map over a standalone head input (the streaming decode
+    /// path and tests; the batch forward applies [`phi_in_place`] to
+    /// whole projection blocks — same single formula either way).
+    fn feature_map_with_stab(&self, xh: &Mat, head: usize, stab: Option<f32>) -> Mat {
+        let mut phi = matmul(xh, &self.features[head]); // n × m
+        phi_in_place(self.kernel, &mut phi, xh, 0, xh.cols(), stab);
+        phi
     }
 
-    /// Feature map with an explicit stabilizer. `None` = the block's global
-    /// max (batch path). Streaming passes `Some(0.0)`: the stabilizer must
-    /// be *constant across time steps* or the accumulated KV state mixes
-    /// inconsistently-scaled features.
-    fn feature_map_with_stab(&self, xh: &Mat, head: usize, stab: Option<f32>) -> Mat {
-        let m = self.num_features;
-        let proj = matmul(xh, &self.features[head]); // n × m
-        let mut phi = Mat::zeros(xh.rows(), m);
-        let scale = 1.0 / (m as f32).sqrt();
-        match self.kernel {
-            KernelKind::Softmax => {
-                let mx = stab.unwrap_or_else(|| {
-                    proj.data()
-                        .iter()
-                        .cloned()
-                        .fold(f32::NEG_INFINITY, f32::max)
-                });
-                for i in 0..xh.rows() {
-                    let sq: f32 = xh.row(i).iter().map(|&v| v * v).sum::<f32>() / 2.0;
-                    let prow = proj.row(i);
-                    let out = phi.row_mut(i);
-                    for (o, &p) in out.iter_mut().zip(prow) {
-                        *o = (p - sq - mx).exp() * scale;
-                    }
-                }
-            }
-            KernelKind::Relu => {
-                for i in 0..xh.rows() {
-                    let prow = proj.row(i);
-                    let out = phi.row_mut(i);
-                    for (o, &p) in out.iter_mut().zip(prow) {
-                        *o = p.max(0.0) * scale;
-                    }
-                }
-            }
-        }
-        phi
+    /// Extra parameters vs dense attention: the random features are fixed
+    /// (not trained), so the parameter count is identical to dense MHA.
+    pub fn feature_state_bytes(&self) -> u64 {
+        (self.weights.num_heads * self.weights.head_dim() * self.num_features * 4) as u64
     }
 
     /// Linear-attention forward: `out = φ(Q)·(φ(K)ᵀV) / (φ(Q)·φ(K)ᵀ1)`.
     /// Never materializes an n×n matrix — peak extra memory is
-    /// `O(n·m + m·d_h)` per head. With `want_cache`, the per-head
-    /// temporaries are kept for backward instead of released.
+    /// `O(h·(n·m + m·d_h))` with every head's state alive at once for the
+    /// batched products (still linear in n). With `want_cache`, the
+    /// per-head blocks are detached into the cache for backward instead
+    /// of returning to the workspace.
     fn forward_with(
         &self,
         x: &Mat,
-        mem: &MemTracker,
+        ctx: &ForwardCtx,
         want_cache: bool,
     ) -> Result<(Mat, Option<RandMhaCache>), MemError> {
+        let mem = ctx.mem();
+        let ws = ctx.workspace();
         let w = &self.weights;
         let n = x.rows();
         let d = w.embed_dim;
@@ -431,127 +604,135 @@ impl RandMultiHeadAttention {
         let dh = w.head_dim();
         let m = self.num_features;
         assert_eq!(x.cols(), d);
-        let gq = mem.alloc((n * d * 4) as u64)?;
-        let q = matmul(x, &w.wq);
-        let gk = mem.alloc((n * d * 4) as u64)?;
-        let k = matmul(x, &w.wk);
-        let gv = mem.alloc((n * d * 4) as u64)?;
-        let v = matmul(x, &w.wv);
-        let mut out = Mat::zeros(n, d);
-        let go = mem.alloc((n * d * 4) as u64)?;
-        // Per-head temporaries: φ(Q), φ(K) (n×m each), KV state (m×dh),
-        // normalizer (m). Released before the next head on the inference
-        // path; a training forward keeps every guard in the cache so the
-        // retained per-head state stays accounted until backward.
         let scale = 1.0 / (dh as f32).sqrt();
-        let mut heads = Vec::with_capacity(if want_cache { h } else { 0 });
-        let mut guards = vec![gq, gk, gv, go];
-        for head in 0..h {
-            let ghead = mem.alloc(((2 * n * m + m * dh + m) * 4) as u64)?;
-            if want_cache {
-                guards.push(ghead);
+        let gq = mem.alloc((n * d * 4) as u64)?;
+        let mut qs = ws.take(n, d);
+        gemm(1.0, x, &w.wq, 0.0, &mut qs);
+        let gk = mem.alloc((n * d * 4) as u64)?;
+        let mut ks = ws.take(n, d);
+        gemm(1.0, x, &w.wk, 0.0, &mut ks);
+        let gv = mem.alloc((n * d * 4) as u64)?;
+        let mut v = ws.take(n, d);
+        gemm(1.0, x, &w.wv, 0.0, &mut v);
+        // The feature maps read 1/√dh-scaled Q/K; scaling the whole block
+        // once replaces the old per-head slice+scale copies.
+        for val in qs.data_mut() {
+            *val *= scale;
+        }
+        for val in ks.data_mut() {
+            *val *= scale;
+        }
+        let go = mem.alloc((n * d * 4) as u64)?;
+        let mut out = ws.take(n, d);
+        // Per-head state for the batched products, all heads alive at
+        // once: φ(Q), φ(K) (n×m each), KV state (m×dh), normalizer (m).
+        // Inference returns every block to the workspace on exit; a
+        // training forward moves this guard into the cache so the
+        // retained state stays accounted until backward.
+        let ghead = mem.alloc((h * (2 * n * m + m * dh + m) * 4) as u64)?;
+        // Feature projections x_h·ω_h for both sides — batched — then the
+        // elementwise feature map in place.
+        let mut phi_q: Vec<WsMat> = (0..h).map(|_| ws.take(n, m)).collect();
+        let mut phi_k: Vec<WsMat> = (0..h).map(|_| ws.take(n, m)).collect();
+        for (phis, xs) in [(&mut phi_q, &qs), (&mut phi_k, &ks)] {
+            {
+                let a: Vec<MatRef> = (0..h)
+                    .map(|i| xs.view().col_range(i * dh, (i + 1) * dh))
+                    .collect();
+                let b: Vec<MatRef> = self.features.iter().map(|f| f.view()).collect();
+                let mut c: Vec<MatMut> = phis.iter_mut().map(|p| p.view_mut()).collect();
+                gemm_batch(1.0, &a, &b, 0.0, &mut c);
             }
-            let c0 = head * dh;
-            let qh = q.slice(0, n, c0, c0 + dh).scale(scale);
-            let kh = k.slice(0, n, c0, c0 + dh).scale(scale);
-            let vh = v.slice(0, n, c0, c0 + dh);
-            let phi_q = self.feature_map(&qh, head); // n × m
-            let phi_k = self.feature_map(&kh, head); // n × m
-            // KV state: φ(K)ᵀ·V (m × dh) — the O(1)-in-n state.
-            let kv = crate::linalg::matmul_tn(&phi_k, &vh);
-            // Normalizer: z = φ(K)ᵀ·1 (length m).
-            let mut z = vec![0f32; m];
-            for i in 0..n {
-                for (zj, &pj) in z.iter_mut().zip(phi_k.row(i)) {
-                    *zj += pj;
+            for (head, p) in phis.iter_mut().enumerate() {
+                phi_in_place(self.kernel, p, xs, head * dh, dh, None);
+            }
+        }
+        // KV state: φ(K)ᵀ·V (m × dh) — the O(1)-in-n state — batched.
+        let mut kv: Vec<WsMat> = (0..h).map(|_| ws.take(m, dh)).collect();
+        {
+            let a: Vec<MatRef> = phi_k.iter().map(|p| p.view().t()).collect();
+            let b: Vec<MatRef> = (0..h)
+                .map(|i| v.view().col_range(i * dh, (i + 1) * dh))
+                .collect();
+            let mut c: Vec<MatMut> = kv.iter_mut().map(|s| s.view_mut()).collect();
+            gemm_batch(1.0, &a, &b, 0.0, &mut c);
+        }
+        // Normalizers: z = φ(K)ᵀ·1 (length m) per head.
+        let z: Vec<Vec<f32>> = phi_k
+            .iter()
+            .map(|pk| {
+                let mut zv = vec![0f32; m];
+                for i in 0..n {
+                    for (zj, &pj) in zv.iter_mut().zip(pk.row(i)) {
+                        *zj += pj;
+                    }
                 }
-            }
-            let num = matmul(&phi_q, &kv); // n × dh
-            let mut den_raw = vec![0f32; n];
+                zv
+            })
+            .collect();
+        // Numerators: φ(Q)·kv (n × dh) — batched.
+        let mut num: Vec<WsMat> = (0..h).map(|_| ws.take(n, dh)).collect();
+        {
+            let a: Vec<MatRef> = phi_q.iter().map(|p| p.view()).collect();
+            let b: Vec<MatRef> = kv.iter().map(|s| s.view()).collect();
+            let mut c: Vec<MatMut> = num.iter_mut().map(|s| s.view_mut()).collect();
+            gemm_batch(1.0, &a, &b, 0.0, &mut c);
+        }
+        // out rows: num / max(φ(Q)·z, 1e-9) per head.
+        let mut den_raw: Vec<Vec<f32>> = Vec::with_capacity(h);
+        for head in 0..h {
+            let c0 = head * dh;
+            let pq = &phi_q[head];
+            let mut dr = vec![0f32; n];
             for i in 0..n {
-                let dot: f32 = phi_q
+                let dot: f32 = pq
                     .row(i)
                     .iter()
-                    .zip(&z)
+                    .zip(&z[head])
                     .map(|(&a, &b)| a * b)
                     .sum::<f32>();
-                den_raw[i] = dot;
+                dr[i] = dot;
                 let denom = dot.max(1e-9);
                 let orow = &mut out.row_mut(i)[c0..c0 + dh];
-                for (o, &nv) in orow.iter_mut().zip(num.row(i)) {
+                for (o, &nv) in orow.iter_mut().zip(num[head].row(i)) {
                     *o = nv / denom;
                 }
             }
-            if want_cache {
-                heads.push(PerfHead {
-                    qh,
-                    kh,
-                    vh,
-                    phi_q,
-                    phi_k,
-                    kv,
-                    z,
-                    num,
-                    den_raw,
-                });
-            }
+            den_raw.push(dr);
         }
         let y = matmul(&out, &w.wo);
-        let cache = want_cache.then(|| RandMhaCache {
-            x: x.clone(),
-            concat: out,
-            heads,
-            _guards: guards,
-        });
+        let cache = if want_cache {
+            let mut heads = Vec::with_capacity(h);
+            let iter = phi_q
+                .into_iter()
+                .zip(phi_k)
+                .zip(kv)
+                .zip(num)
+                .zip(z)
+                .zip(den_raw);
+            for (((((pq, pk), kvh), numh), zh), drh) in iter {
+                heads.push(PerfHead {
+                    phi_q: pq.detach(),
+                    phi_k: pk.detach(),
+                    kv: kvh.detach(),
+                    z: zh,
+                    num: numh.detach(),
+                    den_raw: drh,
+                });
+            }
+            Some(RandMhaCache {
+                x: x.clone(),
+                qs: qs.detach(),
+                ks: ks.detach(),
+                v: v.detach(),
+                concat: out.detach(),
+                heads,
+                _guards: vec![gq, gk, gv, go, ghead],
+            })
+        } else {
+            None
+        };
         Ok((y, cache))
-    }
-
-    /// Backward through the FAVOR+ feature map: given `∂loss/∂φ` and the
-    /// cached `φ` for the (scaled) head input `xh`, return `∂loss/∂xh`.
-    ///
-    /// Softmax features `φ = exp(ωᵀx − ‖x‖²/2 − c)/√m`: with `e = dφ⊙φ`,
-    /// `dx = e·ωᵀ − rowsum(e)·x`. The stabilizer `c` is treated as a
-    /// constant: the normalized attention output is exactly invariant to
-    /// it (it rescales numerator and denominator identically), so its true
-    /// gradient contribution is zero. ReLU features: the gradient passes
-    /// `ω` where `φ > 0`.
-    fn feature_map_backward(&self, dphi: &Mat, phi: &Mat, xh: &Mat, head: usize) -> Mat {
-        let m = self.num_features;
-        let s = 1.0 / (m as f32).sqrt();
-        let mut e = Mat::zeros(dphi.rows(), m);
-        match self.kernel {
-            KernelKind::Softmax => {
-                for i in 0..e.rows() {
-                    let (dr, pr) = (dphi.row(i), phi.row(i));
-                    for (j, ev) in e.row_mut(i).iter_mut().enumerate() {
-                        *ev = dr[j] * pr[j];
-                    }
-                }
-                let mut dxh = crate::linalg::matmul_nt(&e, &self.features[head]);
-                for i in 0..dxh.rows() {
-                    let rs: f32 = e.row(i).iter().sum();
-                    for (dv, &xv) in dxh.row_mut(i).iter_mut().zip(xh.row(i)) {
-                        *dv -= rs * xv;
-                    }
-                }
-                dxh
-            }
-            KernelKind::Relu => {
-                for i in 0..e.rows() {
-                    let (dr, pr) = (dphi.row(i), phi.row(i));
-                    for (j, ev) in e.row_mut(i).iter_mut().enumerate() {
-                        *ev = if pr[j] > 0.0 { dr[j] * s } else { 0.0 };
-                    }
-                }
-                crate::linalg::matmul_nt(&e, &self.features[head])
-            }
-        }
-    }
-
-    /// Extra parameters vs dense attention: the random features are fixed
-    /// (not trained), so the parameter count is identical to dense MHA.
-    pub fn feature_state_bytes(&self) -> u64 {
-        (self.weights.num_heads * self.weights.head_dim() * self.num_features * 4) as u64
     }
 
     /// Start an autoregressive decode session. Performer's linear attention
@@ -577,11 +758,11 @@ impl Module for RandMultiHeadAttention {
     }
 
     fn forward(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<Mat> {
-        Ok(self.forward_with(x, ctx.mem(), false)?.0)
+        Ok(self.forward_with(x, ctx, false)?.0)
     }
 
     fn forward_train(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<(Mat, Cache)> {
-        let (y, cache) = self.forward_with(x, ctx.mem(), true)?;
+        let (y, cache) = self.forward_with(x, ctx, true)?;
         Ok((y, Cache::new(cache.expect("cache requested"))))
     }
 
@@ -599,76 +780,143 @@ impl Module for RandMultiHeadAttention {
             g.shape()
         );
         anyhow::ensure!(c.heads.len() == h, "cache head count mismatch");
-        // Dominant transients: dq/dk/dv/dconcat (n×d each) plus per-head
-        // dφ matrices (2·n×m) — still linear in n, like the forward.
-        let _act = ctx.mem().alloc(((4 * n * d + 2 * n * m) * 4) as u64)?;
+        // Dominant transients: dq/dk/dv/dconcat (n×d each) plus all heads'
+        // dφ blocks (2·n×m each, alive at once for the batched chain) —
+        // still linear in n, like the forward.
+        let _act = ctx.mem().alloc(((4 * n * d + h * 2 * n * m) * 4) as u64)?;
+        let ws = ctx.workspace();
         let scale = 1.0 / (dh as f32).sqrt();
-        // Output projection: y = concat·Wo.
-        let dwo = crate::linalg::matmul_tn(&c.concat, g); // d×d
-        let dconcat = crate::linalg::matmul_nt(g, &w.wo); // n×d
-        let mut dq = Mat::zeros(n, d);
-        let mut dk = Mat::zeros(n, d);
-        let mut dv = Mat::zeros(n, d);
+        // Output projection: y = concat·Wo ⇒ dWo = concatᵀ·g, dconcat = g·Woᵀ.
+        {
+            let mut dwo = ws.take(d, d);
+            let a = [c.concat.view().t()];
+            let b = [g.view()];
+            let mut cb = [dwo.view_mut()];
+            gemm_batch(1.0, &a, &b, 0.0, &mut cb);
+            self.grads.accum("wo", 1.0, dwo.data());
+        }
+        let mut dconcat = ws.take(n, d);
+        {
+            let a = [g.view()];
+            let b = [w.wo.view().t()];
+            let mut cb = [dconcat.view_mut()];
+            gemm_batch(1.0, &a, &b, 0.0, &mut cb);
+        }
+        let mut dq = ws.take(n, d);
+        let mut dk = ws.take(n, d);
+        let mut dv = ws.take(n, d);
+        // out_i = num_i / den_i with den = max(φq_i·z, 1e-9):
+        //   d_num_i = doh_i/den_i,
+        //   d_den_i = −(doh_i·num_i)/den_i²  (zero where the clamp hit).
+        let mut d_num: Vec<WsMat> = (0..h).map(|_| ws.take(n, dh)).collect();
+        let mut d_den: Vec<Vec<f32>> = vec![vec![0f32; n]; h];
         for head in 0..h {
             let hc = &c.heads[head];
             let c0 = head * dh;
-            let doh = dconcat.slice(0, n, c0, c0 + dh); // n×dh
-            // out_i = num_i / den_i with den = max(φq_i·z, 1e-9):
-            //   d_num_i = doh_i/den_i,
-            //   d_den_i = −(doh_i·num_i)/den_i²  (zero where the clamp hit).
-            let mut d_num = Mat::zeros(n, dh);
-            let mut d_den = vec![0f32; n];
+            let dn = &mut d_num[head];
+            let dd = &mut d_den[head];
             for i in 0..n {
+                let doh_row = &dconcat.row(i)[c0..c0 + dh];
                 let den = hc.den_raw[i].max(1e-9);
-                for (dnv, &gv) in d_num.row_mut(i).iter_mut().zip(doh.row(i)) {
+                for (dnv, &gv) in dn.row_mut(i).iter_mut().zip(doh_row) {
                     *dnv = gv / den;
                 }
                 if hc.den_raw[i] > 1e-9 {
-                    let gn: f64 = doh
-                        .row(i)
+                    let gn: f64 = doh_row
                         .iter()
                         .zip(hc.num.row(i))
                         .map(|(&a, &b)| a as f64 * b as f64)
                         .sum();
-                    d_den[i] = -(gn / (den as f64 * den as f64)) as f32;
+                    dd[i] = -(gn / (den as f64 * den as f64)) as f32;
                 }
             }
-            // num = φq·kv, den = φq·z:
-            //   dφq = d_num·kvᵀ + d_den⊗z,  d_kv = φqᵀ·d_num,  dz = φqᵀ·d_den.
-            let mut dphi_q = crate::linalg::matmul_nt(&d_num, &hc.kv); // n×m
+        }
+        // num = φq·kv, den = φq·z:
+        //   dφq = d_num·kvᵀ + d_den⊗z,  d_kv = φqᵀ·d_num,  dz = φqᵀ·d_den.
+        let mut dphi_q: Vec<WsMat> = (0..h).map(|_| ws.take(n, m)).collect();
+        {
+            let a: Vec<MatRef> = d_num.iter().map(|s| s.view()).collect();
+            let b: Vec<MatRef> = c.heads.iter().map(|hc| hc.kv.view().t()).collect();
+            let mut cb: Vec<MatMut> = dphi_q.iter_mut().map(|s| s.view_mut()).collect();
+            gemm_batch(1.0, &a, &b, 0.0, &mut cb);
+        }
+        for head in 0..h {
+            let hc = &c.heads[head];
             for i in 0..n {
-                let dd = d_den[i];
-                for (pv, &zv) in dphi_q.row_mut(i).iter_mut().zip(&hc.z) {
-                    *pv += dd * zv;
+                let ddv = d_den[head][i];
+                for (pv, &zv) in dphi_q[head].row_mut(i).iter_mut().zip(&hc.z) {
+                    *pv += ddv * zv;
                 }
             }
-            let d_kv = crate::linalg::matmul_tn(&hc.phi_q, &d_num); // m×dh
-            let dz = hc.phi_q.matvec_t(&d_den); // m
-            // kv = φkᵀ·vh, z = φkᵀ·1:
-            //   dφk = vh·d_kvᵀ + 1⊗dz,  dvh = φk·d_kv.
-            let mut dphi_k = crate::linalg::matmul_nt(&hc.vh, &d_kv); // n×m
+        }
+        let mut d_kv: Vec<WsMat> = (0..h).map(|_| ws.take(m, dh)).collect();
+        {
+            let a: Vec<MatRef> = c.heads.iter().map(|hc| hc.phi_q.view().t()).collect();
+            let b: Vec<MatRef> = d_num.iter().map(|s| s.view()).collect();
+            let mut cb: Vec<MatMut> = d_kv.iter_mut().map(|s| s.view_mut()).collect();
+            gemm_batch(1.0, &a, &b, 0.0, &mut cb);
+        }
+        let dz: Vec<Vec<f32>> = (0..h)
+            .map(|head| c.heads[head].phi_q.matvec_t(&d_den[head]))
+            .collect();
+        // kv = φkᵀ·vh, z = φkᵀ·1:
+        //   dφk = vh·d_kvᵀ + 1⊗dz,  dvh = φk·d_kv.
+        let mut dphi_k: Vec<WsMat> = (0..h).map(|_| ws.take(n, m)).collect();
+        {
+            let a: Vec<MatRef> = (0..h)
+                .map(|i| c.v.view().col_range(i * dh, (i + 1) * dh))
+                .collect();
+            let b: Vec<MatRef> = d_kv.iter().map(|s| s.view().t()).collect();
+            let mut cb: Vec<MatMut> = dphi_k.iter_mut().map(|s| s.view_mut()).collect();
+            gemm_batch(1.0, &a, &b, 0.0, &mut cb);
+        }
+        for head in 0..h {
             for i in 0..n {
-                for (pv, &zv) in dphi_k.row_mut(i).iter_mut().zip(&dz) {
+                for (pv, &zv) in dphi_k[head].row_mut(i).iter_mut().zip(&dz[head]) {
                     *pv += zv;
                 }
             }
-            let dvh = matmul(&hc.phi_k, &d_kv); // n×dh
-            // Through the (fixed) random-feature maps to the scaled slices,
-            // then undo the 1/√dh scaling back to raw projection space.
-            let dqh = self.feature_map_backward(&dphi_q, &hc.phi_q, &hc.qh, head);
-            let dkh = self.feature_map_backward(&dphi_k, &hc.phi_k, &hc.kh, head);
-            for i in 0..n {
-                for (slot, &v) in dq.row_mut(i)[c0..c0 + dh].iter_mut().zip(dqh.row(i)) {
-                    *slot = v * scale;
-                }
-                for (slot, &v) in dk.row_mut(i)[c0..c0 + dh].iter_mut().zip(dkh.row(i)) {
-                    *slot = v * scale;
-                }
-                dv.row_mut(i)[c0..c0 + dh].copy_from_slice(dvh.row(i));
-            }
         }
-        let dx = attn_proj_backward(&self.weights, &mut self.grads, &c.x, &dq, &dk, &dv);
-        self.grads.accum("wo", 1.0, dwo.data());
+        // dVh = φk·d_kv — batched straight into dv's column bands.
+        {
+            let a: Vec<MatRef> = c.heads.iter().map(|hc| hc.phi_k.view()).collect();
+            let b: Vec<MatRef> = d_kv.iter().map(|s| s.view()).collect();
+            let mut cb = dv.col_bands_mut(dh);
+            gemm_batch(1.0, &a, &b, 0.0, &mut cb);
+        }
+        drop(d_num);
+        drop(d_kv);
+        // Through the (fixed) random-feature maps back to raw projection
+        // space (the 1/√dh undo is folded into the batched alpha).
+        {
+            let phis: Vec<&Mat> = c.heads.iter().map(|hc| &hc.phi_q).collect();
+            favor_feature_backward(
+                self.kernel,
+                &self.features,
+                &mut dphi_q,
+                &phis,
+                &c.qs,
+                scale,
+                dh,
+                &mut dq,
+            );
+        }
+        {
+            let phis: Vec<&Mat> = c.heads.iter().map(|hc| &hc.phi_k).collect();
+            favor_feature_backward(
+                self.kernel,
+                &self.features,
+                &mut dphi_k,
+                &phis,
+                &c.ks,
+                scale,
+                dh,
+                &mut dk,
+            );
+        }
+        drop(dphi_q);
+        drop(dphi_k);
+        let dx = attn_proj_backward(&self.weights, &mut self.grads, ws, &c.x, &dq, &dk, &dv);
         Ok(dx)
     }
 
@@ -678,6 +926,10 @@ impl Module for RandMultiHeadAttention {
 
     fn zero_grads(&mut self) {
         self.grads.zero();
+    }
+
+    fn scale_grads(&mut self, s: f32) {
+        self.grads.scale(s);
     }
 
     fn params(&self) -> Vec<(String, ParamRef<'_>)> {
@@ -797,6 +1049,8 @@ mod tests {
         assert_eq!(y.shape(), (12, 16));
         assert!(ctx.mem().peak_bytes() > 0);
         assert_eq!(ctx.mem().live_bytes(), 0, "all temporaries released");
+        // Inference scratch returned to the arena for the next call.
+        assert!(ctx.workspace().pooled() > 0);
     }
 
     #[test]
@@ -858,6 +1112,29 @@ mod tests {
         let perf_res =
             RandMultiHeadAttention::new(w, 32, KernelKind::Softmax, 3).forward(&x, &ctx_p);
         assert!(perf_res.is_ok(), "performer must fit the same budget");
+    }
+
+    #[test]
+    fn repeated_inference_forwards_reuse_workspace_buffers() {
+        // Steady state: the second forward draws every scratch block from
+        // the arena the first one filled, so the pooled count stops
+        // growing — the allocation-free hot path, observable.
+        let mut rng = Philox::seeded(138);
+        let w = AttnWeights::random(32, 4, &mut rng);
+        let mha = MultiHeadAttention::new(w.clone());
+        let perf = RandMultiHeadAttention::new(w, 16, KernelKind::Softmax, 2);
+        let x = Mat::randn(40, 32, &mut rng);
+        let ctx = ForwardCtx::new();
+        let y1 = mha.forward(&x, &ctx).unwrap();
+        let after_first = ctx.workspace().pooled();
+        let y2 = mha.forward(&x, &ctx).unwrap();
+        assert_eq!(after_first, ctx.workspace().pooled(), "no new buffers");
+        assert_eq!(y1.data(), y2.data(), "reuse must not change results");
+        let p1 = perf.forward(&x, &ctx).unwrap();
+        let after_perf = ctx.workspace().pooled();
+        let p2 = perf.forward(&x, &ctx).unwrap();
+        assert_eq!(after_perf, ctx.workspace().pooled(), "no new buffers");
+        assert_eq!(p1.data(), p2.data(), "reuse must not change results");
     }
 
     #[test]

@@ -245,6 +245,10 @@ impl Module for Conv2d {
         self.grads.zero();
     }
 
+    fn scale_grads(&mut self, s: f32) {
+        self.grads.scale(s);
+    }
+
     fn params(&self) -> Vec<(String, ParamRef<'_>)> {
         vec![
             ("weight".to_string(), ParamRef::Mat(&self.w_mat)),
@@ -348,18 +352,14 @@ impl SKConv2d {
 
     pub fn forward_cols(&self, cols: &Mat) -> Mat {
         let mut y = Mat::zeros(cols.rows(), self.shape.c_out);
-        let inv_l = 1.0 / self.num_terms as f32;
-        for (uj, vj) in self.u.iter().zip(&self.v) {
-            // Accumulate each term's second stage in place — no rows×C_out
-            // temporary per term (the gemm kernel folds the 1/l scale in).
-            let cu = matmul(cols, uj); // rows×r
-            crate::linalg::gemm(inv_l, &cu, vj, 1.0, &mut y);
-        }
-        for i in 0..y.rows() {
-            for (v, b) in y.row_mut(i).iter_mut().zip(&self.bias) {
-                *v += b;
-            }
-        }
+        super::module::sketched_product_into(
+            cols,
+            &self.u,
+            &self.v,
+            &self.bias,
+            &mut Mat::zeros(0, 0),
+            &mut y,
+        );
         y
     }
 }
@@ -373,14 +373,17 @@ impl Module for SKConv2d {
         let ho = self.shape.out_size();
         let rows = x.rows() * ho * ho;
         // im2col patches are charged by scratch_mat; the transients are the
-        // output plus one rows×r intermediate alive per term (the second
-        // stage accumulates in place via gemm).
+        // output plus one rows×r intermediate (workspace-recycled across
+        // terms and calls; the second stage accumulates in place via gemm).
         let _act = ctx
             .mem()
             .alloc((rows * (self.shape.c_out + self.low_rank) * 4) as u64)?;
         let mut cols = ctx.scratch_mat(rows, self.shape.patch_dim())?;
         im2col_into(x, &self.shape, &mut cols);
-        Ok(self.forward_cols(&cols))
+        let mut y = Mat::zeros(rows, self.shape.c_out);
+        let mut cu = ctx.workspace().take(rows, self.low_rank);
+        super::module::sketched_product_into(&cols, &self.u, &self.v, &self.bias, &mut cu, &mut y);
+        Ok(y)
     }
 
     fn forward_train(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<(Mat, Cache)> {
@@ -463,6 +466,10 @@ impl Module for SKConv2d {
 
     fn zero_grads(&mut self) {
         self.grads.zero();
+    }
+
+    fn scale_grads(&mut self, s: f32) {
+        self.grads.scale(s);
     }
 
     fn params(&self) -> Vec<(String, ParamRef<'_>)> {

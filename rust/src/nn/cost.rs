@@ -77,11 +77,12 @@ pub fn dense_attention_mem(n: usize, d: usize, h: usize) -> u64 {
 }
 
 /// Peak forward activation memory for Performer linear attention with `m`
-/// random features: two n×m feature blocks, the m×d_h state, four n×d
-/// projections.
+/// random features: per head two n×m feature blocks, the m×d_h state and
+/// the length-m normalizer — all h heads alive at once for the batched
+/// per-head products — plus four n×d projections. Still linear in n.
 pub fn performer_attention_mem(n: usize, d: usize, h: usize, m: usize) -> u64 {
     let dh = d / h;
-    ((2 * n * m + m * dh + m + 4 * n * d) * 4) as u64
+    ((h * (2 * n * m + m * dh + m) + 4 * n * d) * 4) as u64
 }
 
 #[cfg(test)]

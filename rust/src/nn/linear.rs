@@ -20,7 +20,7 @@
 
 use super::module::{col_sums, Cache, ForwardCtx, GradStore, Module, ParamMut, ParamRef};
 use super::plan::Sketchable;
-use crate::linalg::{matmul, Mat};
+use crate::linalg::{gemm, matmul, Mat};
 use crate::rng::Rng;
 use crate::util::memtrack::MemGuard;
 
@@ -141,6 +141,10 @@ impl Module for Linear {
         self.grads.zero();
     }
 
+    fn scale_grads(&mut self, s: f32) {
+        self.grads.scale(s);
+    }
+
     fn params(&self) -> Vec<(String, ParamRef<'_>)> {
         vec![
             ("weight".to_string(), ParamRef::Mat(&self.weight)),
@@ -178,12 +182,6 @@ pub struct SKLinear {
     /// Per-term right factors `V_j: k × d_out`.
     pub v: Vec<Mat>,
     pub bias: Vec<f32>,
-    /// Cached transposes (`U_jᵀ: k × d_in`, `V_jᵀ: d_out × k`) so both GEMM
-    /// stages run in the fast dot-product (NT) layout — see EXPERIMENTS.md
-    /// §Perf. Kept in sync by the constructors; not part of the public
-    /// parameter state.
-    u_t: Vec<Mat>,
-    v_t: Vec<Mat>,
     grads: GradStore,
 }
 
@@ -229,8 +227,6 @@ impl SKLinear {
         v: Vec<Mat>,
         bias: Vec<f32>,
     ) -> Self {
-        let u_t = u.iter().map(Mat::transpose).collect();
-        let v_t = v.iter().map(Mat::transpose).collect();
         SKLinear {
             d_in,
             d_out,
@@ -239,8 +235,6 @@ impl SKLinear {
             u,
             v,
             bias,
-            u_t,
-            v_t,
             grads: GradStore::default(),
         }
     }
@@ -278,21 +272,22 @@ impl SKLinear {
         self.param_count() as f64 / (self.d_in * self.d_out + self.d_out) as f64
     }
 
-    /// `y = (1/l)·Σ_j (x·U_j)·V_j + b`. Both stages run in NT (dot-product)
-    /// layout against the cached transposes.
+    /// `y = (1/l)·Σ_j (x·U_j)·V_j + b`. The packed GEMM kernel resolves
+    /// operand layout at packing time, so no factor transposes are cached
+    /// (the pre-packing kernel kept `U_jᵀ`/`V_jᵀ` copies in sync just to
+    /// stay in its fast dot layout); the second stage accumulates in
+    /// place with the 1/l scale folded in — no B×d_out temporary.
     pub fn forward(&self, x: &Mat) -> Mat {
         assert_eq!(x.cols(), self.d_in);
         let mut y = Mat::zeros(x.rows(), self.d_out);
-        for (ujt, vjt) in self.u_t.iter().zip(&self.v_t) {
-            let xu = crate::linalg::matmul_nt(x, ujt); // B×k — the tiny intermediate
-            let t = crate::linalg::matmul_nt(&xu, vjt); // B×d_out
-            y.axpy(1.0 / self.num_terms as f32, &t);
-        }
-        for i in 0..y.rows() {
-            for (vv, b) in y.row_mut(i).iter_mut().zip(&self.bias) {
-                *vv += b;
-            }
-        }
+        super::module::sketched_product_into(
+            x,
+            &self.u,
+            &self.v,
+            &self.bias,
+            &mut Mat::zeros(0, 0),
+            &mut y,
+        );
         y
     }
 
@@ -313,30 +308,34 @@ impl Module for SKLinear {
     }
 
     fn forward(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<Mat> {
-        // Transients: the B×d_out output plus one B×k intermediate and one
-        // B×d_out per-term product alive at a time.
+        assert_eq!(x.cols(), self.d_in);
+        // Transients: the B×d_out output plus one B×k intermediate
+        // (workspace-recycled across terms and calls).
         let b = x.rows();
         let _act = ctx
             .mem()
-            .alloc((b * (2 * self.d_out + self.low_rank) * 4) as u64)?;
-        Ok(SKLinear::forward(self, x))
+            .alloc((b * (self.d_out + self.low_rank) * 4) as u64)?;
+        let mut y = Mat::zeros(b, self.d_out);
+        let mut xu = ctx.workspace().take(b, self.low_rank);
+        super::module::sketched_product_into(x, &self.u, &self.v, &self.bias, &mut xu, &mut y);
+        Ok(y)
     }
 
     fn forward_train(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<(Mat, Cache)> {
         assert_eq!(x.cols(), self.d_in);
         let b = x.rows();
-        // Transient: the output and one per-term B×d_out product. Cached
-        // (charged until the cache drops): the input plus l B×k
-        // intermediates.
-        let _act = ctx.mem().alloc((2 * b * self.d_out * 4) as u64)?;
+        // Transient: the output (the per-term second stage accumulates in
+        // place via gemm). Cached (charged until the cache drops): the
+        // input plus l B×k intermediates.
+        let _act = ctx.mem().alloc((b * self.d_out * 4) as u64)?;
         let cached = b * (self.d_in + self.num_terms * self.low_rank);
         let guard = ctx.mem().alloc((cached * 4) as u64)?;
         let mut y = Mat::zeros(b, self.d_out);
+        let inv_l = 1.0 / self.num_terms as f32;
         let mut xu_all = Vec::with_capacity(self.num_terms);
-        for (ujt, vjt) in self.u_t.iter().zip(&self.v_t) {
-            let xu = crate::linalg::matmul_nt(x, ujt); // B×k
-            let t = crate::linalg::matmul_nt(&xu, vjt); // B×d_out
-            y.axpy(1.0 / self.num_terms as f32, &t);
+        for (uj, vj) in self.u.iter().zip(&self.v) {
+            let xu = matmul(x, uj); // B×k, cached for backward
+            gemm(inv_l, &xu, vj, 1.0, &mut y);
             xu_all.push(xu);
         }
         for i in 0..y.rows() {
@@ -399,6 +398,10 @@ impl Module for SKLinear {
         self.grads.zero();
     }
 
+    fn scale_grads(&mut self, s: f32) {
+        self.grads.scale(s);
+    }
+
     fn params(&self) -> Vec<(String, ParamRef<'_>)> {
         super::module::factored_params(&self.u, &self.v, &self.bias)
     }
@@ -409,13 +412,6 @@ impl Module for SKLinear {
 
     fn boxed_clone(&self) -> Box<dyn Module> {
         Box::new(self.clone())
-    }
-
-    fn on_params_loaded(&mut self) {
-        // The NT-layout caches mirror u/v and go stale when the factors are
-        // rewritten through the named-parameter API.
-        self.u_t = self.u.iter().map(Mat::transpose).collect();
-        self.v_t = self.v.iter().map(Mat::transpose).collect();
     }
 }
 

@@ -38,5 +38,7 @@ pub use conv::{Conv2d, ConvShape, SKConv2d};
 pub use cost::{conv_cost, linear_cost, sketch_beats_dense, LayerCost};
 pub use linear::{Linear, SKLinear};
 pub use model::{LayerSelector, Model, NamedModule};
-pub use module::{Cache, ForwardCtx, GradStore, Module, ParamMut, ParamRef, StateDict};
+pub use module::{
+    Cache, ForwardCtx, GradStore, Module, ParamMut, ParamRef, StateDict, Workspace, WsMat,
+};
 pub use plan::{CompressionReport, LayerReport, SketchPlan, Sketchable, SkippedLayer};

@@ -161,6 +161,29 @@ impl Model {
         }
     }
 
+    /// Global L2 norm over every accumulated gradient of every layer
+    /// (f64-accumulated) — the quantity global-norm clipping compares
+    /// against its threshold. Zero when no backward has run.
+    pub fn grad_norm(&self) -> f64 {
+        let mut sq = 0f64;
+        for l in &self.layers {
+            for (_, g) in l.module.grads() {
+                for &v in g {
+                    sq += v as f64 * v as f64;
+                }
+            }
+        }
+        sq.sqrt()
+    }
+
+    /// Multiply every layer's accumulated gradients by `s` (see
+    /// [`crate::train::clip_grad_norm`]).
+    pub fn scale_grads(&mut self, s: f32) {
+        for l in &mut self.layers {
+            l.module.scale_grads(s);
+        }
+    }
+
     /// Number of registered layers.
     pub fn len(&self) -> usize {
         self.layers.len()

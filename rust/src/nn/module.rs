@@ -109,9 +109,143 @@ impl GradStore {
         }
     }
 
+    /// Multiply every accumulated gradient by `s` — the layer-level half
+    /// of global-norm gradient clipping (see
+    /// [`crate::train::clip_grad_norm`]).
+    pub fn scale(&mut self, s: f32) {
+        for (_, b) in &mut self.bufs {
+            for v in b.iter_mut() {
+                *v *= s;
+            }
+        }
+    }
+
     /// True when no gradient has ever been accumulated.
     pub fn is_empty(&self) -> bool {
         self.bufs.is_empty()
+    }
+}
+
+/// A reusable arena of f32 scratch matrices for the forward/backward hot
+/// paths: per-head score blocks, feature maps, projection-space gradient
+/// accumulators — everything that used to be a fresh `Mat` per call.
+/// Buffers are [`Workspace::take`]n with unspecified contents (the GEMM
+/// `beta = 0` store path never reads its output, so recycled storage is
+/// safe) and return to the arena when their [`WsMat`] guard drops:
+/// steady-state *inference* forwards and the transient scratch of
+/// *backward* allocate nothing. Training forwards are the exception —
+/// they [`WsMat::detach`] their buffers into the activation cache, whose
+/// teardown frees them (caches drop far from any workspace handle), so a
+/// training step still allocates its cache.
+///
+/// The arena is a perf cache, not an accounting object: layers keep
+/// charging their *logical* activation footprint against the
+/// [`MemTracker`] exactly as before, so the Figure-3 memory numbers are
+/// unchanged by buffer reuse.
+#[derive(Default)]
+pub struct Workspace {
+    pool: RefCell<Vec<Mat>>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Workspace::default()
+    }
+
+    /// Borrow a `rows × cols` matrix from the arena. **Contents are
+    /// unspecified** — the borrower must overwrite every element it reads
+    /// (GEMM's `beta = 0` path and `copy_from_slice` both qualify).
+    pub fn take(&self, rows: usize, cols: usize) -> WsMat<'_> {
+        let mut m = self.pool.borrow_mut().pop().unwrap_or_else(|| Mat::zeros(0, 0));
+        m.resize(rows, cols);
+        WsMat {
+            ws: self,
+            mat: Some(m),
+        }
+    }
+
+    /// Like [`Workspace::take`], but zero-filled (for accumulation loops
+    /// that read before the first full overwrite).
+    pub fn take_zeroed(&self, rows: usize, cols: usize) -> WsMat<'_> {
+        let mut m = self.take(rows, cols);
+        m.data_mut().fill(0.0);
+        m
+    }
+
+    /// Return a matrix to the arena (the non-guard path — used when a
+    /// buffer was [`WsMat::detach`]ed or built elsewhere).
+    pub fn give(&self, m: Mat) {
+        self.pool.borrow_mut().push(m);
+    }
+
+    /// Buffers currently resident in the arena (diagnostics/tests).
+    pub fn pooled(&self) -> usize {
+        self.pool.borrow().len()
+    }
+}
+
+/// Guard over a [`Workspace`]-owned matrix: derefs to [`Mat`], returns the
+/// buffer to the arena on drop. [`WsMat::detach`] converts to a plain
+/// owned `Mat` (for activation caches that outlive the call).
+pub struct WsMat<'ws> {
+    ws: &'ws Workspace,
+    mat: Option<Mat>,
+}
+
+impl WsMat<'_> {
+    /// Keep the buffer: it leaves the arena for good (or until a later
+    /// [`Workspace::give`]).
+    pub fn detach(mut self) -> Mat {
+        self.mat.take().expect("WsMat holds a Mat until dropped")
+    }
+}
+
+impl std::ops::Deref for WsMat<'_> {
+    type Target = Mat;
+    fn deref(&self) -> &Mat {
+        self.mat.as_ref().expect("WsMat holds a Mat until dropped")
+    }
+}
+
+impl std::ops::DerefMut for WsMat<'_> {
+    fn deref_mut(&mut self) -> &mut Mat {
+        self.mat.as_mut().expect("WsMat holds a Mat until dropped")
+    }
+}
+
+impl Drop for WsMat<'_> {
+    fn drop(&mut self) {
+        if let Some(m) = self.mat.take() {
+            self.ws.pool.borrow_mut().push(m);
+        }
+    }
+}
+
+/// Shared two-stage sketched forward: `y = (1/l)·Σ_j (x·U_j)·V_j + bias`.
+/// The B×k intermediate is recycled across terms in `xu` (a workspace or
+/// fresh buffer — resized here, contents overwritten by the `beta = 0`
+/// first stage); the second stage accumulates into `y`, which must start
+/// zeroed. One body for `SKLinear` and `SKConv2d`'s inference paths, so
+/// the sketch math cannot drift between layers (the training forwards
+/// differ structurally — they cache every per-term intermediate).
+pub(crate) fn sketched_product_into(
+    x: &Mat,
+    u: &[Mat],
+    v: &[Mat],
+    bias: &[f32],
+    xu: &mut Mat,
+    y: &mut Mat,
+) {
+    let inv_l = 1.0 / u.len() as f32;
+    for (uj, vj) in u.iter().zip(v) {
+        xu.resize(x.rows(), uj.cols());
+        crate::linalg::gemm(1.0, x, uj, 0.0, xu);
+        crate::linalg::gemm(inv_l, xu, vj, 1.0, y);
+    }
+    for i in 0..y.rows() {
+        for (vv, b) in y.row_mut(i).iter_mut().zip(bias) {
+            *vv += b;
+        }
     }
 }
 
@@ -154,6 +288,9 @@ pub struct ForwardCtx {
     /// Accounting for the scratch buffer's high-water capacity:
     /// `(guard, accounted_bytes)`.
     scratch_guard: RefCell<Option<(crate::util::memtrack::MemGuard, u64)>>,
+    /// Reusable scratch arena for the attention/conv hot paths (see
+    /// [`Workspace`]).
+    ws: Workspace,
     batch_hint: Option<usize>,
 }
 
@@ -175,8 +312,17 @@ impl ForwardCtx {
             mem,
             scratch: RefCell::new(Mat::zeros(0, 0)),
             scratch_guard: RefCell::new(None),
+            ws: Workspace::new(),
             batch_hint: None,
         }
+    }
+
+    /// The reusable scratch arena shared by every forward/backward through
+    /// this context. Buffer reuse is invisible to the memory accounting —
+    /// layers still charge logical activation sizes against
+    /// [`ForwardCtx::mem`].
+    pub fn workspace(&self) -> &Workspace {
+        &self.ws
     }
 
     /// Attach an advisory expected-batch-rows hint.
@@ -396,6 +542,22 @@ pub trait Module: Send {
     /// Zero every accumulated gradient (keeping the buffers).
     fn zero_grads(&mut self) {}
 
+    /// Multiply every accumulated gradient by `s` — the hook global-norm
+    /// gradient clipping ([`crate::train::clip_grad_norm`]) applies
+    /// between backward and the optimizer step. Layers backed by a
+    /// [`GradStore`] forward to [`GradStore::scale`]. The default is only
+    /// valid for modules whose [`Module::grads`] is empty — a module that
+    /// accumulates gradients but inherits it would be silently skipped by
+    /// clipping, so the default panics in that case instead.
+    fn scale_grads(&mut self, _s: f32) {
+        assert!(
+            self.grads().is_empty(),
+            "{} accumulates gradients but does not implement scale_grads — \
+             global-norm clipping would silently skip it",
+            self.type_name()
+        );
+    }
+
     /// Named views of every trained parameter, in a stable order. Fixed
     /// (untrained) state — e.g. the Performer's random features — is *not*
     /// a parameter and does not appear here.
@@ -404,9 +566,11 @@ pub trait Module: Send {
     /// Mutable counterpart of [`Module::params`], same names and order.
     ///
     /// Contract: a caller that writes through these views must call
-    /// [`Module::on_params_loaded`] afterwards, so layers can refresh
-    /// derived state (e.g. `SKLinear`'s cached factor transposes — without
-    /// the refresh its forward would keep using the pre-update weights).
+    /// [`Module::on_params_loaded`] afterwards, so layers with state
+    /// derived from their parameters can refresh it (none of the six
+    /// built-in layers currently cache derived state — the packed GEMM
+    /// kernel made `SKLinear`'s factor-transpose caches obsolete — but
+    /// the contract keeps third-party layers correct).
     /// [`Module::load_state_dict`] does this automatically and is the
     /// preferred bulk-update path.
     fn params_mut(&mut self) -> Vec<(String, ParamMut<'_>)>;
@@ -421,10 +585,9 @@ pub trait Module: Send {
         None
     }
 
-    /// Refresh state derived from the parameters (e.g. `SKLinear`'s cached
-    /// factor transposes). Idempotent; called automatically by
-    /// [`Module::load_state_dict`], and required after any direct write
-    /// through [`Module::params_mut`].
+    /// Refresh state derived from the parameters. Idempotent; called
+    /// automatically by [`Module::load_state_dict`], and required after
+    /// any direct write through [`Module::params_mut`].
     fn on_params_loaded(&mut self) {}
 
     /// Stored trained-parameter count, derived from the [`Module::params`]
@@ -569,6 +732,41 @@ mod tests {
     }
 
     #[test]
+    fn grad_store_scale() {
+        let mut gs = GradStore::default();
+        gs.accum("w", 1.0, &[2.0, -4.0]);
+        gs.scale(0.5);
+        assert_eq!(gs.get("w"), Some(&[1.0, -2.0][..]));
+    }
+
+    #[test]
+    fn workspace_recycles_buffers_and_detach_keeps_them() {
+        let ws = Workspace::new();
+        {
+            let a = ws.take(3, 4);
+            assert_eq!(a.shape(), (3, 4));
+            let b = ws.take_zeroed(2, 2);
+            assert!(b.data().iter().all(|&v| v == 0.0));
+        } // both return to the arena
+        assert_eq!(ws.pooled(), 2);
+        {
+            let c = ws.take(5, 5); // reuses a pooled buffer
+            assert_eq!(ws.pooled(), 1);
+            let owned = c.detach(); // leaves the arena for good
+            assert_eq!(owned.shape(), (5, 5));
+        }
+        assert_eq!(ws.pooled(), 1);
+        ws.give(Mat::zeros(1, 1));
+        assert_eq!(ws.pooled(), 2);
+        // The context exposes one shared arena.
+        let ctx = ForwardCtx::new();
+        {
+            let _s = ctx.workspace().take(4, 4);
+        }
+        assert_eq!(ctx.workspace().pooled(), 1);
+    }
+
+    #[test]
     fn cache_downcast_rejects_wrong_type() {
         struct A(#[allow(dead_code)] u32);
         struct B;
@@ -607,6 +805,7 @@ mod tests {
         assert!(m.backward(&x, &cache, &ctx).is_err());
         assert!(m.grads().is_empty());
         m.zero_grads(); // no-op, must not panic
+        m.scale_grads(0.5); // grads empty → the default is a valid no-op
     }
 
     #[test]

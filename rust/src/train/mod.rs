@@ -20,7 +20,7 @@ pub mod optimizer;
 pub mod trainer;
 
 pub use optimizer::{optimizer_from_meta, Adam, OptimMeta, Optimizer, Sgd};
-pub use trainer::{mse_loss, mse_value, Trainer};
+pub use trainer::{clip_grad_norm, mse_loss, mse_value, Trainer};
 
 use crate::data::{MaskedBatch, TextCorpus};
 use crate::rng::Philox;

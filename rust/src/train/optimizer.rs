@@ -6,9 +6,8 @@
 //! per named parameter (`<layer path>.<param name>` keys Adam's moments, so
 //! swapping a layer via `SketchPlan` simply starts fresh moments for the
 //! new parameter names). Updates go through `params_mut` followed by
-//! `on_params_loaded`, so layers with derived state (`SKLinear`'s cached
-//! factor transposes) stay consistent — the same contract every other
-//! parameter writer follows.
+//! `on_params_loaded`, so layers with parameter-derived state stay
+//! consistent — the same contract every other parameter writer follows.
 
 use crate::nn::{Model, StateDict};
 use crate::runtime::HostTensor;

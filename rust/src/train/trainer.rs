@@ -52,6 +52,28 @@ pub fn mse_value(pred: &Mat, target: &Mat) -> f32 {
     (loss / n) as f32
 }
 
+/// Global-norm gradient clipping: if the L2 norm over *all* accumulated
+/// gradients exceeds `max_norm`, every gradient is scaled by
+/// `max_norm / norm` so the global norm lands exactly on the threshold
+/// (PyTorch's `clip_grad_norm_` semantics). Call between
+/// [`Model::backward`] and [`Optimizer::step`]. Returns the pre-clip norm;
+/// non-finite norms (an already-exploded backward) zero the gradients
+/// outright — `zero_grads`, not a scale by 0, since `0·Inf = NaN` would
+/// smuggle the very NaNs into the optimizer moments this guard exists to
+/// stop.
+pub fn clip_grad_norm(model: &mut Model, max_norm: f32) -> f64 {
+    assert!(max_norm > 0.0, "clip_grad_norm wants a positive threshold");
+    let norm = model.grad_norm();
+    if !norm.is_finite() {
+        model.zero_grads();
+        return norm;
+    }
+    if norm > max_norm as f64 {
+        model.scale_grads((max_norm as f64 / norm) as f32);
+    }
+    norm
+}
+
 /// Runs `loss → backward → step` over a [`Model`] with any
 /// [`Optimizer`]. Holds the step counter so checkpoints resume the
 /// optimizer schedule (Adam bias correction) exactly.
@@ -59,15 +81,32 @@ pub struct Trainer {
     pub opt: Box<dyn Optimizer>,
     /// Training steps taken (mirrors the checkpoint `step` field).
     pub step: u64,
+    /// Global-norm gradient-clip threshold applied between backward and
+    /// the optimizer step; `None` disables clipping. A hyperparameter
+    /// knob, not training state — it is not persisted in checkpoints, so
+    /// re-set it after [`Trainer::resume`].
+    pub clip_norm: Option<f32>,
 }
 
 impl Trainer {
     pub fn new(opt: Box<dyn Optimizer>) -> Self {
-        Trainer { opt, step: 0 }
+        Trainer {
+            opt,
+            step: 0,
+            clip_norm: None,
+        }
+    }
+
+    /// Enable global-norm gradient clipping at `max_norm`.
+    pub fn with_clip_norm(mut self, max_norm: f32) -> Self {
+        assert!(max_norm > 0.0, "clip norm must be positive");
+        self.clip_norm = Some(max_norm);
+        self
     }
 
     /// One MSE training step on `(x, target)`: zero grads, training
-    /// forward, backward, optimizer update. Returns the pre-update loss.
+    /// forward, backward, optional global-norm clip, optimizer update.
+    /// Returns the pre-update loss.
     pub fn train_step(
         &mut self,
         model: &mut Model,
@@ -85,6 +124,9 @@ impl Trainer {
         );
         let (loss, dloss) = mse_loss(&pred, target);
         model.backward(&dloss, &caches, ctx)?;
+        if let Some(max_norm) = self.clip_norm {
+            clip_grad_norm(model, max_norm);
+        }
         self.opt.step(model)?;
         self.step += 1;
         Ok(loss)
@@ -124,7 +166,9 @@ impl Trainer {
     /// counter) and `model`'s parameters from a checkpoint written by
     /// [`Trainer::save_checkpoint`]. The model must already have the
     /// matching architecture — the same contract as
-    /// [`Model::load_state_dict`].
+    /// [`Model::load_state_dict`]. `clip_norm` is a knob, not state: it
+    /// resumes as `None`; re-apply [`Trainer::with_clip_norm`] if the run
+    /// used clipping.
     pub fn resume(model: &mut Model, path: impl AsRef<Path>) -> Result<Trainer> {
         let (state, meta) = checkpoint::load_with_optimizer(&path)?;
         let meta = meta.with_context(|| {
@@ -142,6 +186,7 @@ impl Trainer {
         Ok(Trainer {
             opt,
             step: state.step,
+            clip_norm: None,
         })
     }
 }
@@ -203,6 +248,7 @@ mod tests {
         let mut tr_a = Trainer {
             opt: tr.opt,
             step: tr.step,
+            clip_norm: None,
         };
         let mut losses_a = Vec::new();
         for _ in 0..5 {
@@ -244,6 +290,130 @@ mod tests {
         let err = Trainer::resume(&mut m2, &path);
         assert!(err.is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn clip_grad_norm_caps_a_crafted_exploding_gradient() {
+        // A teacher/student mismatch scaled by 1e3 explodes the MSE
+        // gradient; the clip must land the global norm exactly on the
+        // threshold, scaling every layer's gradients uniformly.
+        let mut model = toy_model(7);
+        for layer in model.iter_mut() {
+            for (_, mut p) in layer.module.params_mut() {
+                for v in p.data_mut() {
+                    *v *= 1e3;
+                }
+            }
+            layer.module.on_params_loaded();
+        }
+        let (x, y) = toy_batch(8);
+        let ctx = ForwardCtx::new();
+        let (pred, caches) = model.forward_train(&x, &ctx).unwrap();
+        let (_, dloss) = mse_loss(&pred, &y);
+        model.backward(&dloss, &caches, &ctx).unwrap();
+        let max_norm = 1.0f32;
+        let pre = model.grad_norm();
+        assert!(pre > 100.0, "gradient should explode, norm {pre}");
+        // Per-parameter snapshot to verify uniform scaling.
+        let before: Vec<Vec<f32>> = model
+            .iter()
+            .flat_map(|l| l.module.grads().into_iter().map(|(_, g)| g.to_vec()))
+            .collect();
+        let reported = clip_grad_norm(&mut model, max_norm);
+        assert_eq!(reported, pre, "returns the pre-clip norm");
+        let post = model.grad_norm();
+        assert!(
+            (post - max_norm as f64).abs() < 1e-3,
+            "clipped norm {post} != {max_norm}"
+        );
+        let after: Vec<Vec<f32>> = model
+            .iter()
+            .flat_map(|l| l.module.grads().into_iter().map(|(_, g)| g.to_vec()))
+            .collect();
+        let s = (max_norm as f64 / pre) as f32;
+        for (b, a) in before.iter().zip(&after) {
+            for (bv, av) in b.iter().zip(a) {
+                assert!((bv * s - av).abs() <= 1e-6 * bv.abs().max(1.0));
+            }
+        }
+        // Under the threshold: a no-op.
+        let small = clip_grad_norm(&mut model, 10.0);
+        assert!((small - post).abs() < 1e-9);
+        assert_eq!(model.grad_norm(), post);
+    }
+
+    #[test]
+    fn clip_grad_norm_zeroes_non_finite_gradients() {
+        // Weights large enough to overflow f32 in the forward: the
+        // gradients come back Inf/NaN, the norm is non-finite, and the
+        // guard must *zero* them (a scale by 0 would keep NaNs: 0·Inf).
+        let mut model = toy_model(11);
+        for layer in model.iter_mut() {
+            for (_, mut p) in layer.module.params_mut() {
+                for v in p.data_mut() {
+                    *v *= 1e20;
+                }
+            }
+            layer.module.on_params_loaded();
+        }
+        let (x, y) = toy_batch(12);
+        let ctx = ForwardCtx::new();
+        let (pred, caches) = model.forward_train(&x, &ctx).unwrap();
+        assert!(
+            pred.data().iter().any(|v| !v.is_finite()),
+            "forward should overflow (guards the test)"
+        );
+        let (_, dloss) = mse_loss(&pred, &y);
+        model.backward(&dloss, &caches, &ctx).unwrap();
+        let norm = clip_grad_norm(&mut model, 1.0);
+        assert!(!norm.is_finite(), "norm should report the explosion");
+        for l in model.iter() {
+            for (_, g) in l.module.grads() {
+                assert!(g.iter().all(|&v| v == 0.0), "grads zeroed, not NaN");
+            }
+        }
+    }
+
+    #[test]
+    fn trainer_clip_knob_keeps_exploding_sgd_finite() {
+        // Without clipping, SGD at lr=0.5 on the 1e3-scaled model blows up
+        // within a few steps; with a global-norm clip the updates stay
+        // bounded and every loss remains finite.
+        let build_exploded = || {
+            let mut m = toy_model(9);
+            for layer in m.iter_mut() {
+                for (_, mut p) in layer.module.params_mut() {
+                    for v in p.data_mut() {
+                        *v *= 1e3;
+                    }
+                }
+                layer.module.on_params_loaded();
+            }
+            m
+        };
+        let (x, y) = toy_batch(10);
+        let ctx = ForwardCtx::new();
+        let mut unclipped = build_exploded();
+        let mut tr_u = Trainer::new(Box::new(Sgd::new(0.5)));
+        let mut diverged = false;
+        for _ in 0..8 {
+            let loss = tr_u.train_step(&mut unclipped, &x, &y, &ctx).unwrap();
+            if !loss.is_finite() {
+                diverged = true;
+                break;
+            }
+        }
+        assert!(diverged, "unclipped run should diverge (guards the test)");
+        let mut clipped = build_exploded();
+        let mut tr_c = Trainer::new(Box::new(Sgd::new(0.5))).with_clip_norm(1.0);
+        assert_eq!(tr_c.clip_norm, Some(1.0));
+        for _ in 0..8 {
+            let loss = tr_c.train_step(&mut clipped, &x, &y, &ctx).unwrap();
+            assert!(loss.is_finite(), "clipped run must stay finite");
+        }
+        for (_, t) in clipped.state_dict() {
+            assert!(t.data().iter().all(|v| v.is_finite()));
+        }
     }
 
     #[test]

@@ -1,8 +1,12 @@
 //! Criterion-style micro-benchmark statistics (criterion itself is not
 //! available offline). Provides warm-up, adaptive sample counts, robust
-//! statistics, and a stable one-line report format that the figure benches
-//! and EXPERIMENTS.md rely on.
+//! statistics, a stable one-line report format that the figure benches
+//! and EXPERIMENTS.md rely on, and [`JsonReport`] — the machine-readable
+//! `BENCH_*.json` emitter that seeds the perf trajectory every later
+//! performance PR is judged against.
 
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark: robust timing statistics over N samples.
@@ -138,6 +142,79 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Machine-readable bench results: one entry per (op, shape) with the
+/// measured milliseconds, optional GFLOP/s, and the kernel thread count —
+/// written as `BENCH_<name>.json` at the repo root so perf regressions
+/// are diffable across PRs (`gemm_kernels` writes `BENCH_gemm.json`,
+/// `e2e_runtime` writes `BENCH_e2e.json`).
+pub struct JsonReport {
+    bench: String,
+    threads: usize,
+    entries: Vec<Json>,
+}
+
+impl JsonReport {
+    /// New report for bench `name`, recording `threads` kernel workers
+    /// (pass [`crate::linalg::gemm_threads()`]).
+    pub fn new(name: &str, threads: usize) -> Self {
+        JsonReport {
+            bench: name.to_string(),
+            threads,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Record one measurement. `gflops` is `2·m·k·n / seconds / 1e9` for
+    /// GEMM-shaped ops, `None` where a FLOP rate is meaningless.
+    pub fn entry(&mut self, op: &str, shape: &str, ms: f64, gflops: Option<f64>) {
+        let mut e = Json::obj();
+        e.set("op", op).set("shape", shape).set("ms", ms);
+        if let Some(g) = gflops {
+            e.set("gflops", g);
+        }
+        self.entries.push(e);
+    }
+
+    /// Serialized report document.
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+        doc.set("bench", self.bench.as_str())
+            .set("threads", self.threads)
+            .set("entries", Json::Arr(self.entries.clone()));
+        doc
+    }
+
+    /// Write `BENCH_<name>.json` into the bench output directory:
+    /// `$PANTHER_BENCH_DIR` if set, else the nearest ancestor of the
+    /// current directory containing `.git` (the repo root — benches run
+    /// from `rust/`), else the current directory. Returns the path
+    /// written.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = match std::env::var_os("PANTHER_BENCH_DIR") {
+            Some(d) => PathBuf::from(d),
+            None => repo_root_or_cwd(),
+        };
+        let path = dir.join(format!("BENCH_{}.json", self.bench));
+        std::fs::write(&path, self.to_json().to_pretty() + "\n")?;
+        Ok(path)
+    }
+}
+
+/// Nearest ancestor of the current directory containing `.git`, else `.`.
+fn repo_root_or_cwd() -> PathBuf {
+    let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    let mut dir: &Path = &cwd;
+    loop {
+        if dir.join(".git").exists() {
+            return dir.to_path_buf();
+        }
+        match dir.parent() {
+            Some(p) => dir = p,
+            None => return cwd.clone(),
+        }
+    }
+}
+
 /// A simple table printer for bench suites: aligned columns, markdown-ish.
 pub struct Table {
     headers: Vec<String>,
@@ -217,6 +294,36 @@ mod tests {
         assert_eq!(s.mean, Duration::from_millis(2));
         assert_eq!(s.min, Duration::from_millis(1));
         assert_eq!(s.max, Duration::from_millis(3));
+    }
+
+    #[test]
+    fn json_report_roundtrips_through_the_parser() {
+        let mut r = JsonReport::new("unit", 4);
+        r.entry("gemm", "64x64x64", 0.123, Some(4.26));
+        r.entry("attention_fwd", "n=128 d=64 h=8", 1.5, None);
+        let doc = Json::parse(&r.to_json().to_pretty()).unwrap();
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("unit"));
+        assert_eq!(doc.get("threads").and_then(Json::as_usize), Some(4));
+        let entries = doc.get("entries").and_then(Json::as_arr).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].get("op").and_then(Json::as_str), Some("gemm"));
+        assert!(entries[0].get("gflops").and_then(Json::as_f64).unwrap() > 4.0);
+        assert!(entries[1].get("gflops").is_none());
+    }
+
+    #[test]
+    fn json_report_writes_to_env_dir() {
+        let dir = std::env::temp_dir().join("panther_bench_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // Write explicitly against the temp dir rather than the env var
+        // (tests run in parallel; mutating the process env would race).
+        let mut r = JsonReport::new("smoke", 1);
+        r.entry("noop", "-", 0.0, None);
+        let path = dir.join("BENCH_smoke.json");
+        std::fs::write(&path, r.to_json().to_pretty()).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("bench").and_then(Json::as_str), Some("smoke"));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -98,12 +98,27 @@ impl ThreadPool {
         self.shared.panics.load(Ordering::SeqCst)
     }
 
-    /// Run `f(i)` for `i in 0..n` across scoped worker threads and wait.
-    /// `f` must be `Sync` since multiple workers call it concurrently.
-    /// (Scoped threads rather than the shared queue: jobs may borrow `f`
-    /// and local data, which `execute`'s `'static` bound cannot express.)
+    /// Run `f(i)` for `i in 0..n` across the pool's **persistent workers**
+    /// and wait. `f` must be `Sync` since multiple workers call it
+    /// concurrently. This is the GEMM tile dispatch path, so per-call
+    /// overhead matters: helper jobs run on the long-lived queue workers
+    /// (no thread spawns per call — the former implementation spawned up
+    /// to `num_workers` scoped threads per invocation), and the calling
+    /// thread participates in the index loop itself, so the call makes
+    /// forward progress even when every queue worker is busy.
     ///
-    /// Panics in `f` are caught on the worker, counted in the pool's panic
+    /// Contract: `f` must be **leaf work** — it must not call
+    /// `parallel_for` on this same pool. (A nested call still drains its
+    /// own indices via caller participation, but if every worker blocked
+    /// waiting on queued helpers simultaneously, the queue would starve.
+    /// All in-crate callers are plain tile loops.)
+    ///
+    /// Borrowed closures cross the `'static` bound of the job queue
+    /// through a raw pointer to a stack-owned dispatch context; this is
+    /// sound because the caller blocks until every helper job has signaled
+    /// completion before the context drops.
+    ///
+    /// Panics in `f` are caught per index, counted in the pool's panic
     /// counter, and re-raised as a single panic on the calling thread after
     /// every index has been attempted — so sibling work completes, no worker
     /// dies mid-queue, and no mutex held by the caller is poisoned from a
@@ -112,63 +127,98 @@ impl ThreadPool {
         if n == 0 {
             return;
         }
-        // Keep the first panic's payload so the re-raised panic names the
-        // actual cause, not just a count.
-        let first_cause: Mutex<Option<String>> = Mutex::new(None);
-        let run_caught = |i: usize| -> bool {
-            match catch_unwind(AssertUnwindSafe(|| f(i))) {
-                Ok(()) => false,
-                Err(payload) => {
-                    let msg = payload
-                        .downcast_ref::<String>()
-                        .cloned()
-                        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
-                        .unwrap_or_else(|| "<non-string panic>".to_string());
-                    let mut slot = first_cause
-                        .lock()
-                        .unwrap_or_else(std::sync::PoisonError::into_inner);
-                    slot.get_or_insert(msg);
-                    true
-                }
-            }
+        // Helper jobs beyond the caller's own lane.
+        let helpers = self.num_workers().min(n).saturating_sub(1);
+        let ctx = ForCtx {
+            f: &f,
+            n,
+            next: AtomicUsize::new(0),
+            panics: AtomicUsize::new(0),
+            first_cause: Mutex::new(None),
+            remaining: Mutex::new(helpers),
+            done: Condvar::new(),
         };
-        let workers = self.num_workers().min(n);
-        let mut new_panics = 0usize;
-        if workers <= 1 {
-            for i in 0..n {
-                if run_caught(i) {
-                    new_panics += 1;
-                }
+        if helpers > 0 {
+            let addr = &ctx as *const ForCtx as usize;
+            for _ in 0..helpers {
+                self.execute(move || {
+                    // SAFETY: the caller below blocks until `remaining`
+                    // reaches zero, so the context (and the borrowed
+                    // closure inside it) outlives every dereference — the
+                    // 'static in the cast is lifetime erasure, upheld by
+                    // that blocking; `finish` touches nothing after its
+                    // decrement.
+                    let ctx = unsafe { &*(addr as *const ForCtx<'static>) };
+                    ctx.work();
+                    ctx.finish();
+                });
             }
-        } else {
-            let next = AtomicUsize::new(0);
-            let panicked = AtomicUsize::new(0);
-            std::thread::scope(|scope| {
-                for _ in 0..workers {
-                    scope.spawn(|| loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
-                        }
-                        if run_caught(i) {
-                            panicked.fetch_add(1, Ordering::SeqCst);
-                        }
-                    });
-                }
-            });
-            new_panics = panicked.load(Ordering::SeqCst);
         }
+        ctx.work();
+        if helpers > 0 {
+            let mut rem = crate::util::lock_ignore_poison(&ctx.remaining);
+            while *rem > 0 {
+                rem = ctx
+                    .done
+                    .wait(rem)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+        }
+        let new_panics = ctx.panics.load(Ordering::SeqCst);
         if new_panics > 0 {
             let total = self.shared.panics.fetch_add(new_panics, Ordering::SeqCst) + new_panics;
-            let cause = first_cause
-                .lock()
-                .unwrap_or_else(std::sync::PoisonError::into_inner)
+            let cause = crate::util::lock_ignore_poison(&ctx.first_cause)
                 .take()
                 .unwrap_or_default();
             panic!(
                 "parallel_for: {new_panics} of {n} jobs panicked \
                  (pool panic_count now {total}); first cause: {cause}"
             );
+        }
+    }
+}
+
+/// Stack-owned dispatch state shared between a `parallel_for` caller and
+/// its helper jobs on the persistent workers (see the safety note there).
+struct ForCtx<'a> {
+    f: &'a (dyn Fn(usize) + Sync),
+    n: usize,
+    next: AtomicUsize,
+    panics: AtomicUsize,
+    /// First panic payload, so the re-raised panic names the actual cause.
+    first_cause: Mutex<Option<String>>,
+    remaining: Mutex<usize>,
+    done: Condvar,
+}
+
+impl ForCtx<'_> {
+    /// Drain indices from the shared counter until the range is exhausted,
+    /// catching (and recording) panics per index.
+    fn work(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                break;
+            }
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| (self.f)(i))) {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".to_string());
+                crate::util::lock_ignore_poison(&self.first_cause).get_or_insert(msg);
+                self.panics.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+    }
+
+    /// Helper-job epilogue: signal the caller. Must be the job's last
+    /// touch of `self` (the caller may free the context right after).
+    fn finish(&self) {
+        let mut rem = crate::util::lock_ignore_poison(&self.remaining);
+        *rem -= 1;
+        if *rem == 0 {
+            self.done.notify_all();
         }
     }
 }
@@ -250,6 +300,30 @@ mod tests {
     fn wait_idle_on_empty_pool_returns() {
         let pool = ThreadPool::new(2);
         pool.wait_idle();
+    }
+
+    #[test]
+    fn parallel_for_concurrent_callers_share_the_workers() {
+        // Several threads dispatching onto one pool at once: every index of
+        // every call must run exactly once (each call has its own dispatch
+        // context; the queue interleaves their helper jobs).
+        let pool = Arc::new(ThreadPool::new(4));
+        let total = Arc::new(AtomicU64::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let p = Arc::clone(&pool);
+                let t = Arc::clone(&total);
+                thread::spawn(move || {
+                    p.parallel_for(250, |_| {
+                        t.fetch_add(1, Ordering::SeqCst);
+                    })
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 1000);
     }
 
     #[test]

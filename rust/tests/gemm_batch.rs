@@ -1,0 +1,198 @@
+//! Oracle suite for the packed-panel GEMM rewrite: every public kernel
+//! entry point (`matmul`, `matmul_nt`, `matmul_tn`, `gemm`, `gemm_batch`)
+//! against a serial f64 naive oracle, across shapes spanning the `m < 8`
+//! small path, the packing-threshold boundary (`m·k·n = 32³` with
+//! `m ≥ 8`), non-divisible MR/NR/MC/NC/KC tile edges, and strided /
+//! transposed batch views.
+//!
+//! Thread-count independence: k is never split across workers, so results
+//! are identical at any pool size — CI runs this suite under a
+//! `PANTHER_GEMM_THREADS={1,4}` matrix (the pool is process-global and
+//! fixed after first use, so the comparison across counts lives in CI,
+//! not in-process).
+
+use panther::linalg::{
+    gemm, gemm_batch, matmul, matmul_nt, matmul_tn, rel_error, Mat, MatMut, MatRef,
+};
+use panther::rng::Philox;
+use panther::util::prop::prop_check;
+
+/// f64-accumulated naive oracle.
+fn oracle(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    for i in 0..a.rows() {
+        for j in 0..b.cols() {
+            let mut acc = 0f64;
+            for p in 0..a.cols() {
+                acc += a.get(i, p) as f64 * b.get(p, j) as f64;
+            }
+            c.set(i, j, acc as f32);
+        }
+    }
+    c
+}
+
+#[test]
+fn pack_threshold_boundary_shapes() {
+    // 8×32×128 = 32768 sits exactly on the packing threshold; one element
+    // less in any dimension takes the direct kernel. Both sides of the
+    // boundary must agree with the oracle (the dispatch choice is a perf
+    // decision, never a results decision).
+    let mut rng = Philox::seeded(41);
+    for &(m, k, n) in &[
+        (8usize, 32usize, 128usize), // exactly 32³, packed
+        (8, 32, 127),                // just below, direct kernel
+        (7, 64, 128),                // m < 8: always the direct kernel
+        (8, 1, 4096),                // k = 1 packed edge
+        (9, 4096, 1),                // n = 1: single NR panel, 3 lanes padding
+    ] {
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let err = rel_error(&matmul(&a, &b), &oracle(&a, &b));
+        assert!(err < 1e-5, "({m},{k},{n}): rel {err}");
+    }
+}
+
+#[test]
+fn tile_edge_shapes_all_variants() {
+    // Shapes that leave ragged MR/NR microkernel tails and partial MC/NC
+    // tiles, with k crossing KC. Checked through all three layout
+    // variants so the packing gathers (normal, transposed) are covered.
+    let mut rng = Philox::seeded(42);
+    for &(m, k, n) in &[
+        (65usize, 257usize, 129usize),
+        (128, 300, 132),
+        (200, 64, 70),
+        (13, 513, 9),
+    ] {
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let want = oracle(&a, &b);
+        assert!(rel_error(&matmul(&a, &b), &want) < 1e-5, "matmul ({m},{k},{n})");
+        assert!(
+            rel_error(&matmul_nt(&a, &b.transpose()), &want) < 1e-5,
+            "matmul_nt ({m},{k},{n})"
+        );
+        assert!(
+            rel_error(&matmul_tn(&a.transpose(), &b), &want) < 1e-5,
+            "matmul_tn ({m},{k},{n})"
+        );
+    }
+}
+
+#[test]
+fn gemm_batch_matches_per_item_oracle_heterogeneous() {
+    // Items of different shapes in one call, including one below and one
+    // above the parallel threshold, plus transposed operands.
+    let mut rng = Philox::seeded(43);
+    let dims = [(5usize, 7usize, 3usize), (64, 96, 80), (9, 200, 33)];
+    let mats: Vec<(Mat, Mat)> = dims
+        .iter()
+        .map(|&(m, k, n)| (Mat::randn(m, k, &mut rng), Mat::randn(n, k, &mut rng)))
+        .collect();
+    let mut outs: Vec<Mat> = dims
+        .iter()
+        .map(|&(m, _, n)| Mat::filled(m, n, f32::NAN))
+        .collect();
+    {
+        let a: Vec<MatRef> = mats.iter().map(|(a, _)| a.view()).collect();
+        // B stored transposed; the view's .t() restores the logical k×n.
+        let b: Vec<MatRef> = mats.iter().map(|(_, bt)| bt.view().t()).collect();
+        let mut c: Vec<MatMut> = outs.iter_mut().map(|o| o.view_mut()).collect();
+        gemm_batch(1.25, &a, &b, 0.0, &mut c);
+    }
+    for (i, ((a, bt), got)) in mats.iter().zip(&outs).enumerate() {
+        let want = oracle(a, &bt.transpose()).scale(1.25);
+        let err = rel_error(got, &want);
+        assert!(err < 1e-5, "item {i}: rel {err}");
+    }
+}
+
+#[test]
+fn gemm_batch_column_views_equal_sliced_products() {
+    // Per-head column views of shared storage vs materialized slices —
+    // the attention access pattern, at a shape with ragged n×dh bands.
+    let mut rng = Philox::seeded(44);
+    let (n, d, h) = (70usize, 48usize, 4usize);
+    let dh = d / h;
+    let q = Mat::randn(n, d, &mut rng);
+    let k = Mat::randn(n, d, &mut rng);
+    let mut out = Mat::zeros(n, d);
+    let mut scores: Vec<Mat> = (0..h).map(|_| Mat::zeros(n, n)).collect();
+    {
+        let a: Vec<MatRef> = (0..h)
+            .map(|i| q.view().col_range(i * dh, (i + 1) * dh))
+            .collect();
+        let b: Vec<MatRef> = (0..h)
+            .map(|i| k.view().col_range(i * dh, (i + 1) * dh).t())
+            .collect();
+        let mut c: Vec<MatMut> = scores.iter_mut().map(|s| s.view_mut()).collect();
+        gemm_batch(1.0, &a, &b, 0.0, &mut c);
+    }
+    {
+        let a: Vec<MatRef> = scores.iter().map(|s| s.view()).collect();
+        let b: Vec<MatRef> = (0..h)
+            .map(|i| k.view().col_range(i * dh, (i + 1) * dh))
+            .collect();
+        let mut c = out.col_bands_mut(dh);
+        gemm_batch(1.0, &a, &b, 0.0, &mut c);
+    }
+    for i in 0..h {
+        let qh = q.slice(0, n, i * dh, (i + 1) * dh);
+        let kh = k.slice(0, n, i * dh, (i + 1) * dh);
+        let s_want = oracle(&qh, &kh.transpose());
+        assert!(rel_error(&scores[i], &s_want) < 1e-5, "scores head {i}");
+        let o_want = oracle(&s_want, &kh);
+        let got = out.slice(0, n, i * dh, (i + 1) * dh);
+        assert!(rel_error(&got, &o_want) < 1e-4, "band head {i}");
+    }
+}
+
+#[test]
+fn property_packed_kernel_matches_oracle_random_shapes() {
+    // Random shapes biased to straddle the dispatch boundaries (m around
+    // MR, work around 32³ and 64³), random alpha/beta. Runs identically
+    // under PANTHER_GEMM_THREADS=1 and the default pool — CI's thread
+    // matrix executes both; rel err ≤ 1e-5 against the f64 oracle either
+    // way.
+    prop_check("packed-gemm-oracle", 24, |g| {
+        let m = 1 + g.usize(0..80);
+        let k = 1 + g.usize(0..300);
+        let n = 1 + g.usize(0..150);
+        let a = Mat::randn(m, k, g.rng());
+        let b = Mat::randn(k, n, g.rng());
+        let want = oracle(&a, &b);
+        assert!(
+            rel_error(&matmul(&a, &b), &want) < 1e-5,
+            "matmul ({m},{k},{n})"
+        );
+        let alpha = *g.choose(&[1.0f32, 0.5, -2.0]);
+        let beta = *g.choose(&[0.0f32, 1.0, -0.5]);
+        let c0 = Mat::randn(m, n, g.rng());
+        let mut c = c0.clone();
+        gemm(alpha, &a, &b, beta, &mut c);
+        let want_ab = want.scale(alpha).add(&c0.scale(beta));
+        // beta-scaled C adds cancellation noise; loosen slightly.
+        assert!(
+            rel_error(&c, &want_ab) < 1e-4,
+            "gemm ({m},{k},{n}) a={alpha} b={beta}"
+        );
+    });
+}
+
+#[test]
+fn empty_and_degenerate_batches() {
+    // Zero items, zero-k items, zero-row items — all defined, no panics.
+    let mut c: Vec<MatMut> = Vec::new();
+    gemm_batch(1.0, &[], &[], 0.0, &mut c);
+    let a = Mat::zeros(0, 4);
+    let b = Mat::zeros(4, 3);
+    let mut o = Mat::zeros(0, 3);
+    {
+        let av = [a.view()];
+        let bv = [b.view()];
+        let mut cv = [o.view_mut()];
+        gemm_batch(1.0, &av, &bv, 0.0, &mut cv);
+    }
+    assert_eq!(o.shape(), (0, 3));
+}
