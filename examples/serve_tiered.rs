@@ -1,0 +1,156 @@
+//! Tiered serving walk-through: pretrain a small nonlinear MLP with a
+//! warmup+cosine LR schedule, checkpoint it, sketchify a copy, register
+//! **dense** and **sketched** quality tiers of the same service under one
+//! memory budget, and hammer both from concurrent client threads.
+//!
+//! This is the paper's pitch end to end: the compressed model is a
+//! drop-in *tier* — same request shape, same serving contract (batched
+//! results bit-identical to single-row forwards at the configured cap) —
+//! and its smaller footprint buys admitted workers under the shared
+//! budget.
+//!
+//! Run with: `cargo run --release --example serve_tiered`
+
+use panther::linalg::Mat;
+use panther::nn::{Activation, ForwardCtx, LayerSelector, Linear, Model, SketchPlan};
+use panther::rng::Philox;
+use panther::serve::{ModelServer, TierConfig};
+use panther::train::{Adam, LrSchedule, ScheduledOpt, Trainer};
+use std::time::{Duration, Instant};
+
+const D_IN: usize = 32;
+const D_HID: usize = 64;
+const D_OUT: usize = 8;
+
+fn build_model(seed: u64) -> Model {
+    let mut rng = Philox::seeded(seed);
+    let mut m = Model::new();
+    m.add("fc1", Linear::random(D_IN, D_HID, &mut rng)).unwrap();
+    m.add("act", Activation::gelu()).unwrap();
+    m.add("fc2", Linear::random(D_HID, D_OUT, &mut rng)).unwrap();
+    m
+}
+
+fn main() -> panther::Result<()> {
+    // --- 1. pretrain (warmup + cosine schedule) ------------------------------
+    let mut rng = Philox::seeded(11);
+    let mut model = build_model(1);
+    let teacher = build_model(99);
+    let ctx = ForwardCtx::new();
+    let x = Mat::randn(64, D_IN, &mut rng);
+    let target = teacher.forward(&x, &ctx)?;
+    let schedule = LrSchedule::WarmupCosine {
+        warmup: 20,
+        total: 200,
+        floor: 0.05,
+    };
+    let mut trainer = Trainer::new(Box::new(ScheduledOpt::new(
+        Box::new(Adam::new(5e-3)),
+        schedule,
+    )));
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for step in 0..200 {
+        last = trainer.train_step(&mut model, &x, &target, &ctx)?;
+        if step == 0 {
+            first = last;
+        }
+    }
+    println!("pretrain: loss {first:.4} -> {last:.4} over 200 scheduled steps");
+
+    // --- 2. checkpoint, then load-for-serving --------------------------------
+    let dir = std::env::temp_dir().join("panther_serve_tiered");
+    std::fs::create_dir_all(&dir)?;
+    let ckpt = dir.join("mlp.ckpt");
+    trainer.save_checkpoint(&model, "mlp", &ckpt)?;
+
+    // --- 3. sketchify a copy: the cheap tier ---------------------------------
+    let mut sk = model.clone_model();
+    let report = SketchPlan::new()
+        .select(LayerSelector::by_type("Linear"))
+        .with(/*num_terms=*/ 1, /*low_rank=*/ 8)
+        .seed(3)
+        .apply(&mut sk)?;
+    println!(
+        "sketchified {} layers: {} -> {} params",
+        report.converted.len(),
+        report.params_before,
+        report.params_after
+    );
+
+    // --- 4. register both tiers under one memory budget ----------------------
+    let base = TierConfig {
+        max_batch: 4,
+        max_wait: Duration::from_micros(300),
+        queue_cap: 512,
+        workers: 4,
+        ..TierConfig::default()
+    };
+    // Probe the dense footprint on a throwaway server (its workers would
+    // otherwise idle through the whole demo), then budget both real tiers
+    // identically.
+    let dense_probe = {
+        let mut probe_srv = ModelServer::new();
+        let info = probe_srv.register_tier("probe", model.clone_model(), D_IN, base.clone())?;
+        probe_srv.shutdown();
+        info
+    };
+    let budget = dense_probe.weight_bytes + 2 * dense_probe.peak_batch_bytes;
+    let mut server = ModelServer::new();
+    let cfg = TierConfig {
+        mem_budget: Some(budget),
+        ..base
+    };
+    let dense_info =
+        server.register_tier_from_checkpoint("dense", build_model(777), D_IN, &ckpt, cfg.clone())?;
+    let sk_info = server.register_tier("sketched", sk, D_IN, cfg)?;
+    for info in [&dense_info, &sk_info] {
+        println!(
+            "tier {:<9} weights {:>9} peak/batch {:>9} workers {} bit-identical {}",
+            info.name,
+            panther::util::human_bytes(info.weight_bytes),
+            panther::util::human_bytes(info.peak_batch_bytes),
+            info.workers,
+            info.bit_identical_to_unbatched,
+        );
+    }
+    println!(
+        "shared budget {}: sketched tier admits {}x the dense workers",
+        panther::util::human_bytes(budget),
+        sk_info.workers as f64 / dense_info.workers as f64
+    );
+
+    // --- 5. concurrent clients hammer both tiers -----------------------------
+    let clients = 8;
+    let per_client = 200;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let h = server.handle();
+            std::thread::spawn(move || {
+                let row = Mat::randn(1, D_IN, &mut Philox::seeded(500 + c)).into_vec();
+                let tier = if c % 2 == 0 { "dense" } else { "sketched" };
+                for _ in 0..per_client {
+                    h.infer(tier, &row).expect("request failed");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed();
+    let total = clients * per_client;
+    println!(
+        "\n{total} requests from {clients} clients in {} ({:.0} req/s)\n",
+        panther::util::human_duration(wall),
+        total as f64 / wall.as_secs_f64()
+    );
+    println!("{}", server.metrics().report());
+
+    // --- 6. graceful drain ---------------------------------------------------
+    server.shutdown();
+    std::fs::remove_file(&ckpt).ok();
+    println!("drained and shut down cleanly");
+    Ok(())
+}

@@ -1,0 +1,195 @@
+//! Serving throughput bench: requests/s vs. batch cap, and dense vs.
+//! sketched tier capacity at a fixed memory budget — the `panther::serve`
+//! acceptance numbers, emitted machine-readably as `BENCH_serve.json` at
+//! the repo root (the CI serve-smoke lane regenerates and parses it).
+//!
+//! Protocol:
+//!
+//! - **throughput vs. cap**: one MLP tier per batch cap in {1, 2, 4, 8,
+//!   16}; a fixed pool of client threads hammers `infer` in a closed loop
+//!   for a fixed request count; requests/s and the realized batch
+//!   occupancy are reported. Caps beyond the client count cannot fill —
+//!   occupancy in the report tells that story honestly.
+//! - **tier capacity**: the dense model and its rank-16 `SketchPlan`
+//!   compression register under the *same* memory budget (weights +
+//!   workers × probe-measured per-batch activations must fit). The
+//!   compressed tier's smaller footprint admits more workers — the
+//!   paper's ~75 % memory saving expressed as serving capacity — and both
+//!   tiers' requests/s are measured under the same client load.
+//!
+//! `--quick` shrinks request counts for the CI smoke lane;
+//! `PANTHER_BENCH_DIR` redirects the JSON output.
+
+use panther::linalg::{gemm_threads, Mat};
+use panther::nn::{Activation, LayerSelector, Linear, Model, SketchPlan};
+use panther::rng::Philox;
+use panther::serve::{ModelServer, TierConfig};
+use panther::util::bench::{JsonReport, Table};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const D_IN: usize = 96;
+const D_HIDDEN: usize = 128;
+const D_OUT: usize = 32;
+
+fn dense_model(seed: u64) -> Model {
+    let mut rng = Philox::seeded(seed);
+    let mut m = Model::new();
+    m.add("fc1", Linear::random(D_IN, D_HIDDEN, &mut rng)).unwrap();
+    m.add("act1", Activation::gelu()).unwrap();
+    m.add("fc2", Linear::random(D_HIDDEN, D_HIDDEN, &mut rng)).unwrap();
+    m.add("act2", Activation::relu()).unwrap();
+    m.add("fc3", Linear::random(D_HIDDEN, D_OUT, &mut rng)).unwrap();
+    m
+}
+
+fn sketched_model(seed: u64) -> Model {
+    let mut m = dense_model(seed);
+    SketchPlan::new()
+        .select(LayerSelector::by_type("Linear"))
+        .with(1, 16)
+        .seed(7)
+        .apply(&mut m)
+        .unwrap();
+    m
+}
+
+/// Closed-loop load: `clients` threads each fire `per_client` blocking
+/// requests at `tier`; returns (wall, total requests).
+fn hammer(server: &ModelServer, tier: &str, clients: usize, per_client: usize) -> (Duration, u64) {
+    let rows: Arc<Vec<Vec<f32>>> = Arc::new(
+        (0..clients)
+            .map(|i| Mat::randn(1, D_IN, &mut Philox::seeded(7000 + i as u64)).into_vec())
+            .collect(),
+    );
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let h = server.handle();
+            let tier = tier.to_string();
+            let rows = Arc::clone(&rows);
+            std::thread::spawn(move || {
+                for _ in 0..per_client {
+                    h.infer(&tier, &rows[c]).expect("serve request failed");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    (t0.elapsed(), (clients * per_client) as u64)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let threads = gemm_threads();
+    let mut report = JsonReport::new("serve", threads);
+    let (clients, per_client) = if quick { (8, 40) } else { (16, 400) };
+    println!("# serve throughput ({threads} GEMM threads, {clients} clients)\n");
+
+    // --- requests/s vs. batch cap -------------------------------------------
+    let mut table = Table::new(&["cap", "req/s", "mean occupancy", "p50", "p99"]);
+    for cap in [1usize, 2, 4, 8, 16] {
+        let mut server = ModelServer::new();
+        server
+            .register_tier(
+                "mlp",
+                dense_model(1),
+                D_IN,
+                TierConfig {
+                    max_batch: cap,
+                    max_wait: Duration::from_micros(200),
+                    queue_cap: 1024,
+                    workers: 2,
+                    ..TierConfig::default()
+                },
+            )
+            .expect("register");
+        let (wall, n) = hammer(&server, "mlp", clients, per_client);
+        let tm = server.metrics().tier("mlp").unwrap();
+        let rps = n as f64 / wall.as_secs_f64();
+        table.row(&[
+            cap.to_string(),
+            format!("{rps:.0}"),
+            format!("{:.2}", tm.mean_occupancy()),
+            panther::util::human_duration(tm.latency_p50()),
+            panther::util::human_duration(tm.latency_p99()),
+        ]);
+        report.entry_with(
+            "throughput",
+            &format!("cap={cap} clients={clients}"),
+            wall.as_secs_f64() * 1e3,
+            &[
+                ("rps", rps),
+                ("occupancy", tm.mean_occupancy()),
+                ("p50_us", tm.latency_p50().as_secs_f64() * 1e6),
+                ("p99_us", tm.latency_p99().as_secs_f64() * 1e6),
+            ],
+        );
+        server.shutdown();
+    }
+    println!("{}", table.render());
+
+    // --- dense vs. sketched capacity at a fixed memory budget ---------------
+    // Learn the dense footprint, then set one budget that pinches it.
+    let mut probe_srv = ModelServer::new();
+    let dense_free = probe_srv
+        .register_tier("probe", dense_model(1), D_IN, TierConfig::default())
+        .expect("probe");
+    probe_srv.shutdown();
+    let budget = dense_free.weight_bytes + 2 * dense_free.peak_batch_bytes;
+
+    let mut table = Table::new(&[
+        "tier", "weights", "peak/batch", "workers admitted", "req/s",
+    ]);
+    let mut server = ModelServer::new();
+    for (tier, model) in [
+        ("dense", dense_model(1)),
+        ("sketched", sketched_model(1)),
+    ] {
+        let info = server
+            .register_tier(
+                tier,
+                model,
+                D_IN,
+                TierConfig {
+                    max_batch: 8,
+                    max_wait: Duration::from_micros(200),
+                    queue_cap: 1024,
+                    workers: 8,
+                    mem_budget: Some(budget),
+                    ..TierConfig::default()
+                },
+            )
+            .expect("register tier");
+        let (wall, n) = hammer(&server, tier, clients, per_client);
+        let rps = n as f64 / wall.as_secs_f64();
+        table.row(&[
+            tier.into(),
+            panther::util::human_bytes(info.weight_bytes),
+            panther::util::human_bytes(info.peak_batch_bytes),
+            info.workers.to_string(),
+            format!("{rps:.0}"),
+        ]);
+        report.entry_with(
+            "tier_capacity",
+            &format!("{tier} budget={budget}B"),
+            wall.as_secs_f64() * 1e3,
+            &[
+                ("rps", rps),
+                ("workers", info.workers as f64),
+                ("weight_bytes", info.weight_bytes as f64),
+                ("peak_batch_bytes", info.peak_batch_bytes as f64),
+            ],
+        );
+    }
+    server.shutdown();
+    println!("(shared budget: {})", panther::util::human_bytes(budget));
+    println!("{}", table.render());
+
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+}

@@ -10,6 +10,13 @@
 //!
 //! Throughput scales ~B× over one-request-per-execution at full occupancy;
 //! the occupancy histogram is exported for the e2e bench.
+//!
+//! This batcher is welded to the artifact runtime and the MLM-scoring
+//! request shape; [`crate::serve`] generalizes the same
+//! queue/coalesce/pad/route loop to *any* native [`crate::nn::Module`]
+//! model, with tiered routing and admission control on top. The
+//! occupancy statistics here share their histogram type
+//! ([`crate::util::stats::OccupancyHist`]) with the serve-side tiers.
 
 use super::RuntimeHandle;
 use crate::runtime::HostTensor;
@@ -60,53 +67,36 @@ impl BatcherHandle {
     }
 }
 
-/// Occupancy + latency statistics.
+/// Occupancy statistics, backed by the shared
+/// [`crate::util::stats::OccupancyHist`] the serve-side tiers record too
+/// (this used to be a private duplicate histogram).
 #[derive(Default)]
 pub struct BatcherStats {
-    inner: Mutex<StatsInner>,
-}
-
-#[derive(Default)]
-struct StatsInner {
-    batches: u64,
-    requests: u64,
-    /// Histogram over occupancy (index = rows used − 1).
-    occupancy: Vec<u64>,
+    inner: Mutex<crate::util::stats::OccupancyHist>,
 }
 
 impl BatcherStats {
     /// Poison-tolerant lock: a panic on a scoring thread must not turn
     /// every later stats read into an `unwrap` panic cascade.
-    fn locked(&self) -> std::sync::MutexGuard<'_, StatsInner> {
+    fn locked(&self) -> std::sync::MutexGuard<'_, crate::util::stats::OccupancyHist> {
         crate::util::lock_ignore_poison(&self.inner)
     }
 
     fn record(&self, used: usize, capacity: usize) {
-        let mut s = self.locked();
-        s.batches += 1;
-        s.requests += used as u64;
-        if s.occupancy.len() < capacity {
-            s.occupancy.resize(capacity, 0);
-        }
-        s.occupancy[used - 1] += 1;
+        self.locked().record(used, capacity);
     }
 
     pub fn batches(&self) -> u64 {
-        self.locked().batches
+        self.locked().batches()
     }
 
     pub fn requests(&self) -> u64 {
-        self.locked().requests
+        self.locked().requests()
     }
 
     /// Mean rows per executed batch.
     pub fn mean_occupancy(&self) -> f64 {
-        let s = self.locked();
-        if s.batches == 0 {
-            0.0
-        } else {
-            s.requests as f64 / s.batches as f64
-        }
+        self.locked().mean()
     }
 }
 

@@ -23,9 +23,10 @@
 //!   and the PJRT client behind the non-default `pjrt` cargo feature), the
 //!   [`tuner`] (the paper's `SKAutoTuner`), the [`coordinator`] that
 //!   schedules tuning trials and evaluation batches, the [`train`] driver,
-//!   and a pure-Rust RandNLA substrate ([`linalg`], [`sketch`], [`decomp`],
-//!   [`nn`]) used by the benchmark harness and the host-side decomposition
-//!   API.
+//!   the [`serve`] subsystem (generic dynamic batching + tiered
+//!   dense/sketched routing over native models), and a pure-Rust RandNLA
+//!   substrate ([`linalg`], [`sketch`], [`decomp`], [`nn`]) used by the
+//!   benchmark harness and the host-side decomposition API.
 //!
 //! Python is never on the request path: the default build executes the
 //! committed reference artifacts (`rust/artifacts/manifest.json`) with no
@@ -81,6 +82,7 @@ pub mod linalg;
 pub mod nn;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod sketch;
 pub mod train;
 pub mod tuner;

@@ -1,0 +1,220 @@
+//! Elementwise activation layers: ReLU and GELU behind the [`Module`]
+//! trait.
+//!
+//! The layer registry was linear-only between sketched ops — every
+//! expressible stack was affine end-to-end, so "fine-tune a compressed
+//! model" could only ever relearn a linear map. A parameter-free
+//! activation [`Module`] closes that (ROADMAP item): served and trained
+//! stacks get nonlinearities through the same registry, selectors, and
+//! checkpoint machinery as every other layer (an activation simply
+//! contributes no state-dict entries).
+//!
+//! Both activations are row-wise (in fact element-wise), so stacks using
+//! them stay row-independent — exactly what the [`crate::serve`] batcher's
+//! registration probe requires.
+
+use super::module::{Cache, ForwardCtx, Module, ParamMut, ParamRef};
+use crate::linalg::Mat;
+use crate::util::memtrack::MemGuard;
+
+/// Which nonlinearity an [`Activation`] applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActKind {
+    /// `max(x, 0)`.
+    Relu,
+    /// GELU, tanh approximation (Hendrycks & Gimpel 2016):
+    /// `0.5·x·(1 + tanh(√(2/π)·(x + 0.044715·x³)))`.
+    Gelu,
+}
+
+/// `√(2/π)` — the GELU tanh-approximation constant.
+#[allow(clippy::excessive_precision)]
+const GELU_C: f32 = 0.797_884_560_8;
+/// The cubic coefficient of the GELU tanh approximation.
+const GELU_A: f32 = 0.044_715;
+
+/// A parameter-free elementwise activation layer.
+#[derive(Debug, Clone)]
+pub struct Activation {
+    pub kind: ActKind,
+}
+
+/// Activation cache of [`Activation::forward_train`]: the input (the
+/// derivative is evaluated at x), charged against the tracker for the
+/// cache's lifetime like every other layer's retained activations.
+struct ActCache {
+    x: Mat,
+    _guard: MemGuard,
+}
+
+impl Activation {
+    pub fn relu() -> Self {
+        Activation {
+            kind: ActKind::Relu,
+        }
+    }
+
+    pub fn gelu() -> Self {
+        Activation {
+            kind: ActKind::Gelu,
+        }
+    }
+
+    #[inline]
+    fn apply(&self, v: f32) -> f32 {
+        match self.kind {
+            ActKind::Relu => v.max(0.0),
+            ActKind::Gelu => {
+                let u = GELU_C * (v + GELU_A * v * v * v);
+                0.5 * v * (1.0 + u.tanh())
+            }
+        }
+    }
+
+    /// `d act(v) / dv`.
+    #[inline]
+    fn derivative(&self, v: f32) -> f32 {
+        match self.kind {
+            ActKind::Relu => {
+                if v > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            ActKind::Gelu => {
+                // f = 0.5·v·(1 + tanh u), u = c·(v + a·v³):
+                // f' = 0.5·(1 + tanh u) + 0.5·v·(1 − tanh²u)·c·(1 + 3a·v²).
+                let u = GELU_C * (v + GELU_A * v * v * v);
+                let t = u.tanh();
+                0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * v * v)
+            }
+        }
+    }
+
+    fn forward_mat(&self, x: &Mat) -> Mat {
+        let data = x.data().iter().map(|&v| self.apply(v)).collect();
+        Mat::from_vec(x.rows(), x.cols(), data)
+    }
+}
+
+impl Module for Activation {
+    fn type_name(&self) -> &'static str {
+        match self.kind {
+            ActKind::Relu => "ReLU",
+            ActKind::Gelu => "GELU",
+        }
+    }
+
+    fn forward(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<Mat> {
+        // One transient: the same-shaped output.
+        let _act = ctx.mem().alloc((x.len() * 4) as u64)?;
+        Ok(self.forward_mat(x))
+    }
+
+    fn forward_train(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<(Mat, Cache)> {
+        let _act = ctx.mem().alloc((x.len() * 4) as u64)?;
+        let guard = ctx.mem().alloc((x.len() * 4) as u64)?;
+        Ok((
+            self.forward_mat(x),
+            Cache::new(ActCache {
+                x: x.clone(),
+                _guard: guard,
+            }),
+        ))
+    }
+
+    fn backward(&mut self, g: &Mat, cache: &Cache, ctx: &ForwardCtx) -> crate::Result<Mat> {
+        let c: &ActCache = cache.downcast::<ActCache>()?;
+        anyhow::ensure!(
+            g.shape() == c.x.shape(),
+            "grad_out shape {:?} vs cached input {:?}",
+            g.shape(),
+            c.x.shape()
+        );
+        let _act = ctx.mem().alloc((g.len() * 4) as u64)?;
+        let data = g
+            .data()
+            .iter()
+            .zip(c.x.data())
+            .map(|(&gv, &xv)| gv * self.derivative(xv))
+            .collect();
+        Ok(Mat::from_vec(g.rows(), g.cols(), data))
+    }
+
+    // No parameters: grads()/zero_grads()/scale_grads() defaults are
+    // correct no-ops, and the layer contributes nothing to a state dict.
+    fn params(&self) -> Vec<(String, ParamRef<'_>)> {
+        Vec::new()
+    }
+
+    fn params_mut(&mut self) -> Vec<(String, ParamMut<'_>)> {
+        Vec::new()
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Module> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Philox;
+
+    #[test]
+    fn relu_clamps_and_gelu_brackets() {
+        let x = Mat::from_vec(1, 4, vec![-2.0, -0.5, 0.5, 2.0]);
+        let ctx = ForwardCtx::new();
+        let r = Activation::relu().forward(&x, &ctx).unwrap();
+        assert_eq!(r.row(0), &[0.0, 0.0, 0.5, 2.0]);
+        let g = Activation::gelu().forward(&x, &ctx).unwrap();
+        // GELU is sandwiched between 0 and x for x > 0, and in [x, 0] for
+        // x < 0; known values: gelu(2) ≈ 1.9546, gelu(-0.5) ≈ -0.1543.
+        assert!((g.row(0)[3] - 1.9546).abs() < 1e-3, "{}", g.row(0)[3]);
+        assert!((g.row(0)[1] + 0.1543).abs() < 1e-3, "{}", g.row(0)[1]);
+        assert!((Activation::gelu().apply(0.0)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn backward_masks_relu_and_matches_gelu_slope() {
+        let x = Mat::from_vec(1, 3, vec![-1.0, 0.5, 2.0]);
+        let ctx = ForwardCtx::new();
+        let mut relu = Activation::relu();
+        let (_, cache) = relu.forward_train(&x, &ctx).unwrap();
+        let g = Mat::filled(1, 3, 1.0);
+        let dx = relu.backward(&g, &cache, &ctx).unwrap();
+        assert_eq!(dx.row(0), &[0.0, 1.0, 1.0]);
+        // GELU slope at a few points vs central differences (f64-free
+        // spot check; the full-rigor check lives in tests/gradcheck.rs).
+        let gelu = Activation::gelu();
+        for &v in &[-1.5f32, -0.3, 0.0, 0.7, 2.5] {
+            let eps = 1e-3f32;
+            let fd = (gelu.apply(v + eps) - gelu.apply(v - eps)) / (2.0 * eps);
+            let an = gelu.derivative(v);
+            assert!((fd - an).abs() < 1e-3, "v={v}: fd {fd} vs analytic {an}");
+        }
+    }
+
+    #[test]
+    fn module_plumbing_no_params_and_tracked_memory() {
+        let mut rng = Philox::seeded(7);
+        let act = Activation::gelu();
+        assert_eq!(act.type_name(), "GELU");
+        assert_eq!(act.param_count(), 0);
+        assert!(act.state_dict().is_empty());
+        let x = Mat::randn(4, 8, &mut rng);
+        let ctx = ForwardCtx::new();
+        act.forward(&x, &ctx).unwrap();
+        assert_eq!(ctx.mem().live_bytes(), 0, "transients released");
+        assert!(ctx.mem().peak_bytes() >= (4 * 8 * 4) as u64);
+        // Training keeps the cached input charged until the cache drops.
+        let (_, cache) = act.forward_train(&x, &ctx).unwrap();
+        assert!(ctx.mem().live_bytes() >= (4 * 8 * 4) as u64);
+        drop(cache);
+        assert_eq!(ctx.mem().live_bytes(), 0);
+        // Budget errors surface cleanly.
+        let tiny = ForwardCtx::with_budget(16);
+        assert!(act.forward(&x, &tiny).is_err());
+    }
+}

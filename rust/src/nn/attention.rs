@@ -140,6 +140,9 @@ impl AttnWeights {
 #[derive(Clone)]
 pub struct MultiHeadAttention {
     pub weights: AttnWeights,
+    /// Head-group chunk size for the inference forward (0 = all heads at
+    /// once) — see [`Module::set_head_group`].
+    head_group: usize,
     grads: GradStore,
 }
 
@@ -165,8 +168,21 @@ impl MultiHeadAttention {
     pub fn new(weights: AttnWeights) -> Self {
         MultiHeadAttention {
             weights,
+            head_group: 0,
             grads: GradStore::default(),
         }
+    }
+
+    /// Builder form of [`Module::set_head_group`].
+    pub fn with_head_group(mut self, heads: usize) -> Self {
+        self.head_group = heads;
+        self
+    }
+
+    /// Effective chunk size (shared definition: 0 → all heads, else
+    /// clamped to `[1, num_heads]`).
+    fn head_group_size(&self) -> usize {
+        super::module::effective_head_group(self.head_group, self.weights.num_heads)
     }
 
     /// Self-attention forward on `x: n × d`, tracking every temporary in
@@ -202,49 +218,69 @@ impl MultiHeadAttention {
         let go = mem.alloc((n * d * 4) as u64)?;
         let mut out = ws.take(n, d);
         let scale = 1.0 / (dh as f32).sqrt();
-        // The dense score tensor for ALL heads is what blows memory on
-        // GPUs; PyTorch materializes (h, n, n) at once — we account (and
-        // now also compute) the same: one batched product over strided
-        // per-head views, with the 1/√dh scale folded into alpha.
-        let gscores = mem.alloc((h * n * n * 4) as u64)?;
-        let mut scores: Vec<WsMat> = (0..h).map(|_| ws.take(n, n)).collect();
+        // The dense score tensor is what blows memory on GPUs; PyTorch
+        // materializes (h, n, n) at once. By default we account (and
+        // compute) the same — batched products over strided per-head
+        // views, 1/√dh folded into alpha — but the head-group knob bounds
+        // the live scores to `group` heads at a time on the inference
+        // path, trading some batching breadth for an (h/group)× smaller
+        // peak. Chunking never changes results: each head's products and
+        // softmax are computed independently either way. Training
+        // forwards always run un-chunked — the cache must retain every
+        // head's probabilities regardless, so chunking would not lower
+        // the peak.
+        let group = if want_cache { h } else { self.head_group_size() };
+        let gscores = mem.alloc((group * n * n * 4) as u64)?;
+        let mut probs: Vec<Mat> = Vec::new();
         {
-            let a: Vec<MatRef> = (0..h)
-                .map(|i| q.view().col_range(i * dh, (i + 1) * dh))
-                .collect();
-            let b: Vec<MatRef> = (0..h)
-                .map(|i| k.view().col_range(i * dh, (i + 1) * dh).t())
-                .collect();
-            let mut c: Vec<MatMut> = scores.iter_mut().map(|s| s.view_mut()).collect();
-            gemm_batch(scale, &a, &b, 0.0, &mut c);
-        }
-        // Row softmax per head.
-        for s in scores.iter_mut() {
-            for i in 0..n {
-                let row = s.row_mut(i);
-                let mut mx = f32::NEG_INFINITY;
-                for v in row.iter() {
-                    mx = mx.max(*v);
+            let mut bands = out.col_bands_mut(dh);
+            let mut h0 = 0;
+            while h0 < h {
+                let h1 = (h0 + group).min(h);
+                let mut scores: Vec<WsMat> = (h0..h1).map(|_| ws.take(n, n)).collect();
+                {
+                    let a: Vec<MatRef> = (h0..h1)
+                        .map(|i| q.view().col_range(i * dh, (i + 1) * dh))
+                        .collect();
+                    let b: Vec<MatRef> = (h0..h1)
+                        .map(|i| k.view().col_range(i * dh, (i + 1) * dh).t())
+                        .collect();
+                    let mut c: Vec<MatMut> = scores.iter_mut().map(|s| s.view_mut()).collect();
+                    gemm_batch(scale, &a, &b, 0.0, &mut c);
                 }
-                let mut sum = 0f32;
-                for v in row.iter_mut() {
-                    *v = (*v - mx).exp();
-                    sum += *v;
+                // Row softmax per head.
+                for s in scores.iter_mut() {
+                    for i in 0..n {
+                        let row = s.row_mut(i);
+                        let mut mx = f32::NEG_INFINITY;
+                        for v in row.iter() {
+                            mx = mx.max(*v);
+                        }
+                        let mut sum = 0f32;
+                        for v in row.iter_mut() {
+                            *v = (*v - mx).exp();
+                            sum += *v;
+                        }
+                        for v in row.iter_mut() {
+                            *v /= sum;
+                        }
+                    }
                 }
-                for v in row.iter_mut() {
-                    *v /= sum;
+                // Head outputs P_h·V_h straight into disjoint column
+                // bands of the concat matrix — batched, no per-head
+                // copy-out.
+                {
+                    let a: Vec<MatRef> = scores.iter().map(|s| s.view()).collect();
+                    let b: Vec<MatRef> = (h0..h1)
+                        .map(|i| v.view().col_range(i * dh, (i + 1) * dh))
+                        .collect();
+                    gemm_batch(1.0, &a, &b, 0.0, &mut bands[h0..h1]);
                 }
+                if want_cache {
+                    probs.extend(scores.into_iter().map(WsMat::detach));
+                }
+                h0 = h1;
             }
-        }
-        // Head outputs P_h·V_h straight into disjoint column bands of the
-        // concat matrix — batched, no per-head copy-out.
-        {
-            let a: Vec<MatRef> = scores.iter().map(|s| s.view()).collect();
-            let b: Vec<MatRef> = (0..h)
-                .map(|i| v.view().col_range(i * dh, (i + 1) * dh))
-                .collect();
-            let mut c = out.col_bands_mut(dh);
-            gemm_batch(1.0, &a, &b, 0.0, &mut c);
         }
         let y = matmul(&out, &w.wo);
         let cache = if want_cache {
@@ -253,7 +289,7 @@ impl MultiHeadAttention {
                 q: q.detach(),
                 k: k.detach(),
                 v: v.detach(),
-                probs: scores.into_iter().map(WsMat::detach).collect(),
+                probs,
                 concat: out.detach(),
                 _guards: vec![gq, gk, gv, go, gscores],
             })
@@ -398,6 +434,10 @@ impl Module for MultiHeadAttention {
         Box::new(self.clone())
     }
 
+    fn set_head_group(&mut self, heads: usize) {
+        self.head_group = heads;
+    }
+
     fn as_sketchable(&self) -> Option<&dyn Sketchable> {
         Some(self)
     }
@@ -413,6 +453,9 @@ pub struct RandMultiHeadAttention {
     pub kernel: KernelKind,
     /// Per-head random projection `ω: d_h × m` (orthogonal-ish gaussian).
     features: Vec<Mat>,
+    /// Head-group chunk size for the inference forward (0 = all heads at
+    /// once) — see [`Module::set_head_group`].
+    head_group: usize,
     grads: GradStore,
 }
 
@@ -564,8 +607,21 @@ impl RandMultiHeadAttention {
             num_features,
             kernel,
             features,
+            head_group: 0,
             grads: GradStore::default(),
         }
+    }
+
+    /// Builder form of [`Module::set_head_group`].
+    pub fn with_head_group(mut self, heads: usize) -> Self {
+        self.head_group = heads;
+        self
+    }
+
+    /// Effective chunk size (shared definition: 0 → all heads, else
+    /// clamped to `[1, num_heads]`).
+    fn head_group_size(&self) -> usize {
+        super::module::effective_head_group(self.head_group, self.weights.num_heads)
     }
 
     /// Feature map over a standalone head input (the streaming decode
@@ -624,102 +680,118 @@ impl RandMultiHeadAttention {
         }
         let go = mem.alloc((n * d * 4) as u64)?;
         let mut out = ws.take(n, d);
-        // Per-head state for the batched products, all heads alive at
-        // once: φ(Q), φ(K) (n×m each), KV state (m×dh), normalizer (m).
-        // Inference returns every block to the workspace on exit; a
-        // training forward moves this guard into the cache so the
+        // Per-head state for the batched products — φ(Q), φ(K) (n×m
+        // each), KV state (m×dh), normalizer (m) — alive for `group`
+        // heads at a time. The default keeps all h heads live (maximum
+        // batching breadth); the head-group knob bounds the documented ×h
+        // on the Performer's O(n) footprint on the inference path without
+        // changing results (per-head chains are independent). Training
+        // forwards always run un-chunked: the cache retains every head's
+        // state anyway. Inference returns every block to the workspace on
+        // exit; a training forward moves this guard into the cache so the
         // retained state stays accounted until backward.
-        let ghead = mem.alloc((h * (2 * n * m + m * dh + m) * 4) as u64)?;
-        // Feature projections x_h·ω_h for both sides — batched — then the
-        // elementwise feature map in place.
-        let mut phi_q: Vec<WsMat> = (0..h).map(|_| ws.take(n, m)).collect();
-        let mut phi_k: Vec<WsMat> = (0..h).map(|_| ws.take(n, m)).collect();
-        for (phis, xs) in [(&mut phi_q, &qs), (&mut phi_k, &ks)] {
+        let group = if want_cache { h } else { self.head_group_size() };
+        let ghead = mem.alloc((group as u64) * ((2 * n * m + m * dh + m) * 4) as u64)?;
+        let mut heads_cache: Vec<PerfHead> = Vec::new();
+        let mut h0 = 0;
+        while h0 < h {
+            let h1 = (h0 + group).min(h);
+            let cg = h1 - h0;
+            // Feature projections x_h·ω_h for both sides — batched — then
+            // the elementwise feature map in place.
+            let mut phi_q: Vec<WsMat> = (0..cg).map(|_| ws.take(n, m)).collect();
+            let mut phi_k: Vec<WsMat> = (0..cg).map(|_| ws.take(n, m)).collect();
+            for (phis, xs) in [(&mut phi_q, &qs), (&mut phi_k, &ks)] {
+                {
+                    let a: Vec<MatRef> = (h0..h1)
+                        .map(|i| xs.view().col_range(i * dh, (i + 1) * dh))
+                        .collect();
+                    let b: Vec<MatRef> =
+                        self.features[h0..h1].iter().map(|f| f.view()).collect();
+                    let mut c: Vec<MatMut> = phis.iter_mut().map(|p| p.view_mut()).collect();
+                    gemm_batch(1.0, &a, &b, 0.0, &mut c);
+                }
+                for (idx, p) in phis.iter_mut().enumerate() {
+                    phi_in_place(self.kernel, p, xs, (h0 + idx) * dh, dh, None);
+                }
+            }
+            // KV state: φ(K)ᵀ·V (m × dh) — the O(1)-in-n state — batched.
+            let mut kv: Vec<WsMat> = (0..cg).map(|_| ws.take(m, dh)).collect();
             {
-                let a: Vec<MatRef> = (0..h)
-                    .map(|i| xs.view().col_range(i * dh, (i + 1) * dh))
+                let a: Vec<MatRef> = phi_k.iter().map(|p| p.view().t()).collect();
+                let b: Vec<MatRef> = (h0..h1)
+                    .map(|i| v.view().col_range(i * dh, (i + 1) * dh))
                     .collect();
-                let b: Vec<MatRef> = self.features.iter().map(|f| f.view()).collect();
-                let mut c: Vec<MatMut> = phis.iter_mut().map(|p| p.view_mut()).collect();
+                let mut c: Vec<MatMut> = kv.iter_mut().map(|s| s.view_mut()).collect();
                 gemm_batch(1.0, &a, &b, 0.0, &mut c);
             }
-            for (head, p) in phis.iter_mut().enumerate() {
-                phi_in_place(self.kernel, p, xs, head * dh, dh, None);
-            }
-        }
-        // KV state: φ(K)ᵀ·V (m × dh) — the O(1)-in-n state — batched.
-        let mut kv: Vec<WsMat> = (0..h).map(|_| ws.take(m, dh)).collect();
-        {
-            let a: Vec<MatRef> = phi_k.iter().map(|p| p.view().t()).collect();
-            let b: Vec<MatRef> = (0..h)
-                .map(|i| v.view().col_range(i * dh, (i + 1) * dh))
+            // Normalizers: z = φ(K)ᵀ·1 (length m) per head.
+            let z: Vec<Vec<f32>> = phi_k
+                .iter()
+                .map(|pk| {
+                    let mut zv = vec![0f32; m];
+                    for i in 0..n {
+                        for (zj, &pj) in zv.iter_mut().zip(pk.row(i)) {
+                            *zj += pj;
+                        }
+                    }
+                    zv
+                })
                 .collect();
-            let mut c: Vec<MatMut> = kv.iter_mut().map(|s| s.view_mut()).collect();
-            gemm_batch(1.0, &a, &b, 0.0, &mut c);
-        }
-        // Normalizers: z = φ(K)ᵀ·1 (length m) per head.
-        let z: Vec<Vec<f32>> = phi_k
-            .iter()
-            .map(|pk| {
-                let mut zv = vec![0f32; m];
+            // Numerators: φ(Q)·kv (n × dh) — batched.
+            let mut num: Vec<WsMat> = (0..cg).map(|_| ws.take(n, dh)).collect();
+            {
+                let a: Vec<MatRef> = phi_q.iter().map(|p| p.view()).collect();
+                let b: Vec<MatRef> = kv.iter().map(|s| s.view()).collect();
+                let mut c: Vec<MatMut> = num.iter_mut().map(|s| s.view_mut()).collect();
+                gemm_batch(1.0, &a, &b, 0.0, &mut c);
+            }
+            // out rows: num / max(φ(Q)·z, 1e-9) per head.
+            let mut den_raw: Vec<Vec<f32>> = Vec::with_capacity(cg);
+            for idx in 0..cg {
+                let c0 = (h0 + idx) * dh;
+                let pq = &phi_q[idx];
+                let mut dr = vec![0f32; n];
                 for i in 0..n {
-                    for (zj, &pj) in zv.iter_mut().zip(pk.row(i)) {
-                        *zj += pj;
+                    let dot: f32 = pq
+                        .row(i)
+                        .iter()
+                        .zip(&z[idx])
+                        .map(|(&a, &b)| a * b)
+                        .sum::<f32>();
+                    dr[i] = dot;
+                    let denom = dot.max(1e-9);
+                    let orow = &mut out.row_mut(i)[c0..c0 + dh];
+                    for (o, &nv) in orow.iter_mut().zip(num[idx].row(i)) {
+                        *o = nv / denom;
                     }
                 }
-                zv
-            })
-            .collect();
-        // Numerators: φ(Q)·kv (n × dh) — batched.
-        let mut num: Vec<WsMat> = (0..h).map(|_| ws.take(n, dh)).collect();
-        {
-            let a: Vec<MatRef> = phi_q.iter().map(|p| p.view()).collect();
-            let b: Vec<MatRef> = kv.iter().map(|s| s.view()).collect();
-            let mut c: Vec<MatMut> = num.iter_mut().map(|s| s.view_mut()).collect();
-            gemm_batch(1.0, &a, &b, 0.0, &mut c);
-        }
-        // out rows: num / max(φ(Q)·z, 1e-9) per head.
-        let mut den_raw: Vec<Vec<f32>> = Vec::with_capacity(h);
-        for head in 0..h {
-            let c0 = head * dh;
-            let pq = &phi_q[head];
-            let mut dr = vec![0f32; n];
-            for i in 0..n {
-                let dot: f32 = pq
-                    .row(i)
-                    .iter()
-                    .zip(&z[head])
-                    .map(|(&a, &b)| a * b)
-                    .sum::<f32>();
-                dr[i] = dot;
-                let denom = dot.max(1e-9);
-                let orow = &mut out.row_mut(i)[c0..c0 + dh];
-                for (o, &nv) in orow.iter_mut().zip(num[head].row(i)) {
-                    *o = nv / denom;
+                den_raw.push(dr);
+            }
+            if want_cache {
+                let iter = phi_q
+                    .into_iter()
+                    .zip(phi_k)
+                    .zip(kv)
+                    .zip(num)
+                    .zip(z)
+                    .zip(den_raw);
+                for (((((pq, pk), kvh), numh), zh), drh) in iter {
+                    heads_cache.push(PerfHead {
+                        phi_q: pq.detach(),
+                        phi_k: pk.detach(),
+                        kv: kvh.detach(),
+                        z: zh,
+                        num: numh.detach(),
+                        den_raw: drh,
+                    });
                 }
             }
-            den_raw.push(dr);
+            h0 = h1;
         }
         let y = matmul(&out, &w.wo);
         let cache = if want_cache {
-            let mut heads = Vec::with_capacity(h);
-            let iter = phi_q
-                .into_iter()
-                .zip(phi_k)
-                .zip(kv)
-                .zip(num)
-                .zip(z)
-                .zip(den_raw);
-            for (((((pq, pk), kvh), numh), zh), drh) in iter {
-                heads.push(PerfHead {
-                    phi_q: pq.detach(),
-                    phi_k: pk.detach(),
-                    kv: kvh.detach(),
-                    z: zh,
-                    num: numh.detach(),
-                    den_raw: drh,
-                });
-            }
+            let heads = heads_cache;
             Some(RandMhaCache {
                 x: x.clone(),
                 qs: qs.detach(),
@@ -943,6 +1015,10 @@ impl Module for RandMultiHeadAttention {
     fn boxed_clone(&self) -> Box<dyn Module> {
         Box::new(self.clone())
     }
+
+    fn set_head_group(&mut self, heads: usize) {
+        self.head_group = heads;
+    }
 }
 
 /// Streaming decode state for [`RandMultiHeadAttention`].
@@ -1135,6 +1211,80 @@ mod tests {
         let p2 = perf.forward(&x, &ctx).unwrap();
         assert_eq!(after_perf, ctx.workspace().pooled(), "no new buffers");
         assert_eq!(p1.data(), p2.data(), "reuse must not change results");
+    }
+
+    #[test]
+    fn head_group_chunking_is_bitwise_invisible() {
+        // Chunking only bounds how many heads' scratch is alive at once —
+        // per-head products are independent in gemm_batch, so any group
+        // size must reproduce the all-heads result bit for bit, including
+        // a group that does not divide h.
+        let mut rng = Philox::seeded(139);
+        let w = AttnWeights::random(32, 4, &mut rng);
+        let x = Mat::randn(24, 32, &mut rng);
+        let ctx = ForwardCtx::new();
+        let full_dense = MultiHeadAttention::new(w.clone()).forward(&x, &ctx).unwrap();
+        let full_perf = RandMultiHeadAttention::new(w.clone(), 16, KernelKind::Softmax, 4)
+            .forward(&x, &ctx)
+            .unwrap();
+        for g in [1usize, 2, 3, 4, 99] {
+            let dense = MultiHeadAttention::new(w.clone()).with_head_group(g);
+            assert_eq!(
+                dense.forward(&x, &ctx).unwrap().data(),
+                full_dense.data(),
+                "dense, group {g}"
+            );
+            let perf = RandMultiHeadAttention::new(w.clone(), 16, KernelKind::Softmax, 4)
+                .with_head_group(g);
+            assert_eq!(
+                perf.forward(&x, &ctx).unwrap().data(),
+                full_perf.data(),
+                "performer, group {g}"
+            );
+        }
+        // The knob is also reachable through the Module trait (the serve
+        // tier config applies it model-wide), and training forwards are
+        // unaffected by it (they run un-chunked by design).
+        let mut dense: Box<dyn Module> = Box::new(MultiHeadAttention::new(w.clone()));
+        dense.set_head_group(2);
+        assert_eq!(dense.forward(&x, &ctx).unwrap().data(), full_dense.data());
+        let chunked = MultiHeadAttention::new(w).with_head_group(1);
+        let (yt, _cache) = chunked.forward_train(&x, &ctx).unwrap();
+        assert_eq!(yt.data(), full_dense.data());
+    }
+
+    #[test]
+    fn head_group_chunking_bounds_peak_memory() {
+        // A budget the all-heads forward exceeds but the chunked one
+        // fits: the serving-tier scenario the knob exists for.
+        let mut rng = Philox::seeded(140);
+        let w = AttnWeights::random(32, 8, &mut rng);
+        let n = 128;
+        let x = Mat::randn(n, 32, &mut rng);
+        // Dense peak ≈ 4·n·d + group·n·n floats; with n=128, d=32 that is
+        // 64 KiB + group·64 KiB. Budget 320 KiB: all 8 heads (576 KiB)
+        // exceed it, groups of 2 (192 KiB) fit.
+        let budget = 320 * 1024;
+        let full = MultiHeadAttention::new(w.clone());
+        assert!(full.forward(&x, &ForwardCtx::with_budget(budget)).is_err());
+        let chunked = MultiHeadAttention::new(w.clone()).with_head_group(2);
+        let y = chunked
+            .forward(&x, &ForwardCtx::with_budget(budget))
+            .unwrap();
+        assert_eq!(y.shape(), (n, 32));
+        // Performer: per-head state is (2·n·m + m·dh + m) floats; with
+        // m=64 that is ~65 KiB per head. Budget 200 KiB: 8 heads at once
+        // (~522 KiB + 64 KiB projections) exceed it, one head at a time
+        // fits.
+        let budget = 200 * 1024;
+        let full = RandMultiHeadAttention::new(w.clone(), 64, KernelKind::Softmax, 5);
+        assert!(full.forward(&x, &ForwardCtx::with_budget(budget)).is_err());
+        let chunked =
+            RandMultiHeadAttention::new(w, 64, KernelKind::Softmax, 5).with_head_group(1);
+        let y = chunked
+            .forward(&x, &ForwardCtx::with_budget(budget))
+            .unwrap();
+        assert_eq!(y.shape(), (n, 32));
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! Neural-network layer library: dense layers and their RandNLA drop-in
 //! replacements, mirroring Panther's `panther.nn` (`SKLinear`, `SKConv2d`,
-//! `RandMultiHeadAttention`).
+//! `RandMultiHeadAttention`), plus parameter-free [`Activation`] layers
+//! (ReLU/GELU) so stacks are not linear-only between sketched ops.
 //!
-//! All six layer types implement the unified [`Module`] trait —
+//! All layer types implement the unified [`Module`] trait —
 //! `forward(x, ctx)` with a shared [`ForwardCtx`] (memory accounting +
 //! scratch + batch metadata), a differentiable `forward_train`/`backward`
 //! pair with named gradient accumulation (trained by
@@ -25,6 +26,7 @@
 //! cross-checked against the [`Module::param_count`] registry in tests
 //! rather than serving as the source of truth.
 
+pub mod activation;
 pub mod attention;
 pub mod conv;
 pub mod cost;
@@ -33,6 +35,7 @@ pub mod model;
 pub mod module;
 pub mod plan;
 
+pub use activation::{ActKind, Activation};
 pub use attention::{AttnWeights, KernelKind, MultiHeadAttention, RandMultiHeadAttention};
 pub use conv::{Conv2d, ConvShape, SKConv2d};
 pub use cost::{conv_cost, linear_cost, sketch_beats_dense, LayerCost};

@@ -106,6 +106,62 @@ impl Model {
         Ok(cur)
     }
 
+    /// Batched row-stacking entry point: stacks `rows` (all the same
+    /// width) into one matrix, zero-pads it to at least `pad_to` rows,
+    /// runs a single sequential [`Model::forward`], and returns one result
+    /// row per input row (padding rows are computed and discarded). This
+    /// is the public form of the serving contract; the `serve` worker loop
+    /// runs a buffer-reusing twin of the same stack/pad/unstack sequence
+    /// (validated once per tier by the registration probe), so it stays
+    /// allocation-free in steady state.
+    ///
+    /// Padding to a *fixed* row count is what makes batched serving
+    /// reproducible: the GEMM substrate picks kernels from the product
+    /// shape, so executing every batch at one shape makes each row's
+    /// result a pure function of that row alone — bit-identical across
+    /// batch compositions for row-independent stacks (each output row
+    /// depends only on its input row; attention couples rows and is the
+    /// documented exception). With `pad_to` below the GEMM microkernel
+    /// height (8), results are additionally bit-identical to the
+    /// single-row `forward` of each row.
+    pub fn forward_rows(
+        &self,
+        rows: &[&[f32]],
+        pad_to: usize,
+        ctx: &super::module::ForwardCtx,
+    ) -> Result<Vec<Vec<f32>>> {
+        ensure!(!rows.is_empty(), "forward_rows needs at least one row");
+        let d = rows[0].len();
+        ensure!(d > 0, "forward_rows needs non-empty rows");
+        let b = rows.len().max(pad_to);
+        let mut x = Mat::zeros(b, d);
+        for (i, r) in rows.iter().enumerate() {
+            ensure!(
+                r.len() == d,
+                "row {i} has width {}, expected {d}",
+                r.len()
+            );
+            x.row_mut(i).copy_from_slice(r);
+        }
+        let y = self.forward(&x, ctx)?;
+        ensure!(
+            y.rows() == b,
+            "model mapped {b} rows to {} — row routing needs one output row \
+             per input row",
+            y.rows()
+        );
+        Ok(rows.iter().enumerate().map(|(i, _)| y.row(i).to_vec()).collect())
+    }
+
+    /// Apply the per-layer peak-memory knob model-wide (see
+    /// [`Module::set_head_group`]); layers without partitionable state
+    /// ignore it.
+    pub fn set_head_group(&mut self, heads: usize) {
+        for l in &mut self.layers {
+            l.module.set_head_group(heads);
+        }
+    }
+
     /// Sequential training forward: like [`Model::forward`] but collects
     /// one activation [`super::module::Cache`] per layer, in registration
     /// order, for [`Model::backward`].
@@ -490,6 +546,35 @@ mod tests {
                 assert!(gbuf.iter().all(|&v| v == 0.0));
             }
         }
+    }
+
+    #[test]
+    fn forward_rows_matches_single_row_forwards_bitwise() {
+        let mut rng = Philox::seeded(145);
+        let mut m = Model::new();
+        m.add("fc1", Linear::random(6, 8, &mut rng)).unwrap();
+        m.add("fc2", Linear::random(8, 4, &mut rng)).unwrap();
+        let ctx = super::super::module::ForwardCtx::new();
+        let rows: Vec<Vec<f32>> = (0..3)
+            .map(|i| {
+                crate::linalg::Mat::randn(1, 6, &mut Philox::seeded(500 + i)).into_vec()
+            })
+            .collect();
+        let row_refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        // Pad below the GEMM microkernel height: bit-identical to the
+        // single-row forward of each row, padding rows discarded.
+        let out = m.forward_rows(&row_refs, 4, &ctx).unwrap();
+        assert_eq!(out.len(), 3);
+        for (r, got) in rows.iter().zip(&out) {
+            let solo = m
+                .forward(&crate::linalg::Mat::from_vec(1, 6, r.clone()), &ctx)
+                .unwrap();
+            assert_eq!(got.as_slice(), solo.row(0), "row result must be exact");
+        }
+        // Mismatched widths and empty input are loud errors.
+        assert!(m.forward_rows(&[], 4, &ctx).is_err());
+        let bad: Vec<&[f32]> = vec![&rows[0], &rows[1][..3]];
+        assert!(m.forward_rows(&bad, 4, &ctx).is_err());
     }
 
     #[test]

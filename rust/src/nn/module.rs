@@ -249,6 +249,18 @@ pub(crate) fn sketched_product_into(
     }
 }
 
+/// Resolve a head-group knob against a layer's head count: `0` means
+/// "all at once", anything else clamps to `[1, heads]` — the one
+/// definition both attention variants share (see
+/// [`Module::set_head_group`]).
+pub(crate) fn effective_head_group(knob: usize, heads: usize) -> usize {
+    if knob == 0 {
+        heads
+    } else {
+        knob.clamp(1, heads)
+    }
+}
+
 /// Per-column sums of `g` — the bias gradient shared by every layer whose
 /// forward broadcasts a bias over output rows.
 pub(crate) fn col_sums(g: &Mat) -> Vec<f32> {
@@ -502,10 +514,15 @@ pub(crate) fn factored_params_mut<'a>(
     out
 }
 
-/// The unified layer interface implemented by all six layer types
+/// The unified layer interface implemented by all seven layer types
 /// (`Linear`, `SKLinear`, `Conv2d`, `SKConv2d`, `MultiHeadAttention`,
-/// `RandMultiHeadAttention`).
-pub trait Module: Send {
+/// `RandMultiHeadAttention`, `Activation`).
+///
+/// `Send + Sync` because a layer's shared state is plain data — all
+/// mutability during `forward` lives in the caller-owned [`ForwardCtx`] —
+/// so one model instance can serve concurrent inference workers behind an
+/// `Arc` (the [`crate::serve`] subsystem relies on this).
+pub trait Module: Send + Sync {
     /// Type name as selectors see it (matches the paper's `"Linear"`,
     /// `"Conv2d"`, …).
     fn type_name(&self) -> &'static str;
@@ -589,6 +606,16 @@ pub trait Module: Send {
     /// automatically by [`Module::load_state_dict`], and required after
     /// any direct write through [`Module::params_mut`].
     fn on_params_loaded(&mut self) {}
+
+    /// Peak-memory knob for layers with per-head (or otherwise
+    /// partitionable) transient state: process at most `heads` partitions'
+    /// scratch at once on the inference path, trading a little batching
+    /// win for a bounded footprint. `0` restores the default (everything
+    /// at once). Results must be unaffected — only peak memory changes.
+    /// Layers without such state ignore it (the default); the serving
+    /// tier config forwards it model-wide so a worker's per-request peak
+    /// fits the tier's memory budget.
+    fn set_head_group(&mut self, _heads: usize) {}
 
     /// Stored trained-parameter count, derived from the [`Module::params`]
     /// registry — never a hand-maintained formula.

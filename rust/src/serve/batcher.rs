@@ -1,0 +1,406 @@
+//! The generic dynamic batcher under every serving tier: a bounded request
+//! queue plus the worker loop that coalesces single-row requests into
+//! padded row-stacked batches.
+//!
+//! This generalizes what [`crate::coordinator::DynamicBatcher`] does for
+//! the fixed-shape artifact runtime to *any* native [`Model`]: requests
+//! queue (bounded — backpressure, not unbounded growth), a worker takes
+//! the first request, waits at most `max_wait` for up to `max_batch − 1`
+//! more (classic size-or-timeout coalescing), pads the stack to exactly
+//! `max_batch` rows with zeros, runs **one** `Model::forward`, and routes
+//! each live row's result back to its caller.
+//!
+//! **Why pad to the full cap.** The GEMM substrate picks its kernel from
+//! the product shape, so executing every batch at one fixed row count
+//! pins the kernel path: a request's result is a pure function of its own
+//! row and the tier's cap — bit-identical across arrival orders and batch
+//! compositions. Registration additionally probes that padding rows never
+//! leak into live rows (see [`super::router`]), which is what rules out
+//! row-coupled layers like attention at caps > 1.
+
+use super::metrics::TierMetrics;
+use super::ServeError;
+use crate::linalg::Mat;
+use crate::nn::{ForwardCtx, Model};
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// One queued inference request: a single feature row plus its reply
+/// channel and enqueue time (end-to-end latency is measured from here).
+pub(crate) struct ServeRequest {
+    pub(crate) row: Vec<f32>,
+    pub(crate) reply: mpsc::Sender<Result<Vec<f32>, ServeError>>,
+    pub(crate) enqueued: Instant,
+}
+
+struct QueueInner {
+    deque: VecDeque<ServeRequest>,
+    closed: bool,
+}
+
+/// Bounded MPMC request queue with blocking and non-blocking admission —
+/// the backpressure boundary of a tier. Closing the queue stops new
+/// admissions; already-queued requests drain (workers keep pulling until
+/// the queue is empty, then exit).
+pub(crate) struct TierQueue {
+    inner: Mutex<QueueInner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+    metrics: Arc<TierMetrics>,
+}
+
+impl TierQueue {
+    pub(crate) fn new(cap: usize, metrics: Arc<TierMetrics>) -> Self {
+        TierQueue {
+            inner: Mutex::new(QueueInner {
+                deque: VecDeque::with_capacity(cap),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+            metrics,
+        }
+    }
+
+    fn locked(&self) -> MutexGuard<'_, QueueInner> {
+        crate::util::lock_ignore_poison(&self.inner)
+    }
+
+    fn wait<'a>(
+        &self,
+        cv: &Condvar,
+        guard: MutexGuard<'a, QueueInner>,
+    ) -> MutexGuard<'a, QueueInner> {
+        cv.wait(guard)
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Enqueue, blocking while the queue is at capacity. Errors once the
+    /// tier is shutting down (also when shutdown happens mid-wait).
+    pub(crate) fn submit(&self, req: ServeRequest) -> Result<(), ServeError> {
+        let mut g = self.locked();
+        loop {
+            if g.closed {
+                return Err(ServeError::ShuttingDown);
+            }
+            if g.deque.len() < self.cap {
+                break;
+            }
+            g = self.wait(&self.not_full, g);
+        }
+        g.deque.push_back(req);
+        self.metrics.depth_add(1);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Enqueue without blocking: a full queue is an immediate
+    /// [`ServeError::QueueFull`] — the admission-control path.
+    pub(crate) fn try_submit(&self, req: ServeRequest) -> Result<(), ServeError> {
+        let mut g = self.locked();
+        if g.closed {
+            return Err(ServeError::ShuttingDown);
+        }
+        if g.deque.len() >= self.cap {
+            self.metrics.record_rejected();
+            return Err(ServeError::QueueFull);
+        }
+        g.deque.push_back(req);
+        self.metrics.depth_add(1);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Pull the next batch: block for the first request, then coalesce up
+    /// to `max_batch` within `max_wait` of the first pull. Returns `None`
+    /// when the queue is closed *and* fully drained — the worker-exit
+    /// signal. During a drain (closed, non-empty) batches keep forming
+    /// from whatever is queued, without waiting for more.
+    pub(crate) fn next_batch(
+        &self,
+        max_batch: usize,
+        max_wait: Duration,
+    ) -> Option<Vec<ServeRequest>> {
+        let mut g = self.locked();
+        loop {
+            if !g.deque.is_empty() {
+                break;
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.wait(&self.not_empty, g);
+        }
+        let mut batch = Vec::with_capacity(max_batch);
+        batch.push(g.deque.pop_front().expect("non-empty"));
+        // `None` = un-representable deadline (e.g. `max_wait =
+        // Duration::MAX`, a natural "always wait for a full batch"):
+        // coalesce without a timeout instead of panicking on Instant
+        // overflow.
+        let deadline = Instant::now().checked_add(max_wait);
+        while batch.len() < max_batch {
+            if let Some(req) = g.deque.pop_front() {
+                batch.push(req);
+                continue;
+            }
+            if g.closed {
+                break;
+            }
+            match deadline {
+                None => {
+                    g = self.wait(&self.not_empty, g);
+                }
+                Some(dl) => {
+                    let now = Instant::now();
+                    if now >= dl {
+                        break;
+                    }
+                    let (guard, timeout) = self
+                        .not_empty
+                        .wait_timeout(g, dl - now)
+                        .unwrap_or_else(std::sync::PoisonError::into_inner);
+                    g = guard;
+                    if timeout.timed_out() && g.deque.is_empty() {
+                        break;
+                    }
+                }
+            }
+        }
+        self.metrics.depth_sub(batch.len());
+        drop(g);
+        // Every pop freed queue slots; wake all blocked submitters (they
+        // re-check capacity under the lock).
+        self.not_full.notify_all();
+        Some(batch)
+    }
+
+    /// Stop admissions and wake everyone: blocked submitters error out,
+    /// idle workers drain and exit.
+    pub(crate) fn close(&self) {
+        self.locked().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Requests currently queued.
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.locked().deque.len()
+    }
+}
+
+/// The per-worker batch-execution loop. Each worker owns a warm
+/// [`ForwardCtx`] (its [`crate::nn::Workspace`] arena makes steady-state
+/// inference forwards allocation-free) and one reusable `max_batch × d_in`
+/// input matrix; the GEMM work inside `Model::forward` lands on the
+/// process-wide kernel pool shared by all tiers.
+///
+/// This is the buffer-reusing twin of [`Model::forward_rows`] (same
+/// stack/pad-to-cap/unstack contract, validated once at registration by
+/// the probe): the public entry point allocates per call, the worker must
+/// not.
+///
+/// A panicking forward is caught per batch (the same worker-panic
+/// containment policy as [`crate::util::threadpool::ThreadPool`]): the
+/// batch's callers get a typed [`ServeError::Exec`] instead of a hang,
+/// the warm context is discarded (its scratch state may be mid-borrow),
+/// and the worker keeps serving.
+pub(crate) fn worker_loop(
+    model: Arc<Model>,
+    queue: Arc<TierQueue>,
+    max_batch: usize,
+    max_wait: Duration,
+    in_dim: usize,
+    metrics: Arc<TierMetrics>,
+) {
+    let mut ctx = ForwardCtx::new().batch_hint(max_batch);
+    let mut x = Mat::zeros(max_batch, in_dim);
+    while let Some(batch) = queue.next_batch(max_batch, max_wait) {
+        let used = batch.len();
+        // Live rows in 0..used, padding rows zeroed (previous batch's rows
+        // past `used` must not linger — zero the whole tail).
+        for (i, req) in batch.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(&req.row);
+        }
+        for i in used..max_batch {
+            x.row_mut(i).fill(0.0);
+        }
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            model.forward(&x, &ctx)
+        }));
+        // All metrics for a batch are recorded BEFORE any reply is sent:
+        // a client that unblocks from `infer` must already see its own
+        // request accounted (tests read counters right after replies).
+        match result {
+            // The probe pinned rows-out == rows-in at registration; check
+            // it in release too — row routing must never misattribute.
+            Ok(Ok(y)) if y.rows() == max_batch => {
+                for req in &batch {
+                    metrics.record_latency(req.enqueued.elapsed());
+                }
+                metrics.record_batch(used, max_batch);
+                for (i, req) in batch.into_iter().enumerate() {
+                    let _ = req.reply.send(Ok(y.row(i).to_vec()));
+                }
+            }
+            Ok(Ok(y)) => {
+                let msg = format!(
+                    "model mapped {max_batch} rows to {} — cannot route rows",
+                    y.rows()
+                );
+                fail_batch(batch, &metrics, max_batch, msg);
+            }
+            Ok(Err(e)) => fail_batch(batch, &metrics, max_batch, format!("{e:#}")),
+            Err(payload) => {
+                let cause = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".to_string());
+                // The context may hold wedged RefCell borrows from the
+                // unwound forward — start fresh.
+                ctx = ForwardCtx::new().batch_hint(max_batch);
+                fail_batch(batch, &metrics, max_batch, format!("forward panicked: {cause}"));
+            }
+        }
+    }
+}
+
+/// Answer every request of a failed batch with [`ServeError::Exec`],
+/// recording all counters first (same reply-after-accounting order as the
+/// success path).
+fn fail_batch(batch: Vec<ServeRequest>, metrics: &TierMetrics, max_batch: usize, msg: String) {
+    metrics.record_error(batch.len() as u64);
+    for req in &batch {
+        metrics.record_latency(req.enqueued.elapsed());
+    }
+    metrics.record_batch(batch.len(), max_batch);
+    for req in batch {
+        let _ = req.reply.send(Err(ServeError::Exec(msg.clone())));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    fn req(v: f32) -> (ServeRequest, mpsc::Receiver<Result<Vec<f32>, ServeError>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            ServeRequest {
+                row: vec![v],
+                reply: tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    fn queue(cap: usize) -> Arc<TierQueue> {
+        Arc::new(TierQueue::new(cap, Arc::new(TierMetrics::default())))
+    }
+
+    #[test]
+    fn try_submit_rejects_when_full_and_recovers() {
+        let q = queue(2);
+        let (r1, _rx1) = req(1.0);
+        let (r2, _rx2) = req(2.0);
+        let (r3, _rx3) = req(3.0);
+        q.try_submit(r1).unwrap();
+        q.try_submit(r2).unwrap();
+        // Admission control: full queue is an immediate typed error.
+        let err = q.try_submit(r3).unwrap_err();
+        assert_eq!(err, ServeError::QueueFull);
+        assert_eq!(q.metrics.rejected(), 1);
+        assert_eq!(q.metrics.queue_depth(), 2);
+        // Draining a batch frees capacity again.
+        let batch = q.next_batch(2, Duration::from_millis(1)).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(q.metrics.queue_depth(), 0);
+        let (r4, _rx4) = req(4.0);
+        q.try_submit(r4).unwrap();
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn blocking_submit_waits_for_capacity() {
+        let q = queue(1);
+        let (r1, _rx1) = req(1.0);
+        q.submit(r1).unwrap();
+        let unblocked = Arc::new(AtomicBool::new(false));
+        let (q2, flag) = (Arc::clone(&q), Arc::clone(&unblocked));
+        let h = std::thread::spawn(move || {
+            let (r2, _rx2) = req(2.0);
+            q2.submit(r2).unwrap(); // blocks until the batch below drains
+            flag.store(true, Ordering::SeqCst);
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!unblocked.load(Ordering::SeqCst), "submit must backpressure");
+        let b = q.next_batch(1, Duration::from_millis(1)).unwrap();
+        assert_eq!(b.len(), 1);
+        h.join().unwrap();
+        assert!(unblocked.load(Ordering::SeqCst));
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn coalesces_up_to_cap_and_times_out() {
+        let q = queue(16);
+        for v in 0..5 {
+            let (r, _rx) = req(v as f32);
+            q.submit(r).unwrap();
+        }
+        // Cap 4: first batch takes exactly 4 without waiting.
+        let b1 = q.next_batch(4, Duration::from_millis(50)).unwrap();
+        assert_eq!(b1.len(), 4);
+        // One left: the wait budget elapses and the ragged batch ships.
+        let t0 = Instant::now();
+        let b2 = q.next_batch(4, Duration::from_millis(20)).unwrap();
+        assert_eq!(b2.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(15), "honored max_wait");
+        // FIFO order preserved across batches.
+        assert_eq!(b1[0].row, vec![0.0]);
+        assert_eq!(b2[0].row, vec![4.0]);
+    }
+
+    #[test]
+    fn close_drains_then_signals_exit() {
+        let q = queue(8);
+        let mut rxs = Vec::new();
+        for v in 0..3 {
+            let (r, rx) = req(v as f32);
+            q.submit(r).unwrap();
+            rxs.push(rx);
+        }
+        q.close();
+        // New admissions fail on both paths.
+        let (r, _rx) = req(9.0);
+        assert_eq!(q.submit(r).unwrap_err(), ServeError::ShuttingDown);
+        let (r, _rx) = req(9.0);
+        assert_eq!(q.try_submit(r).unwrap_err(), ServeError::ShuttingDown);
+        // Drain: queued requests still come out (without waiting on the
+        // coalescing clock), then None.
+        let t0 = Instant::now();
+        let b = q.next_batch(8, Duration::from_secs(10)).unwrap();
+        assert_eq!(b.len(), 3);
+        assert!(t0.elapsed() < Duration::from_secs(1), "drain must not wait");
+        assert!(q.next_batch(8, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn close_wakes_blocked_worker() {
+        let q = queue(4);
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.next_batch(4, Duration::from_millis(5)));
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        // The blocked worker wakes and sees the exit signal.
+        assert!(h.join().unwrap().is_none());
+    }
+}

@@ -1,0 +1,213 @@
+//! Serving metrics: per-tier queue depth, batch-occupancy histogram, and
+//! latency percentiles.
+//!
+//! Reuses the [`crate::util::stats`] histogram shapes that
+//! `coordinator::batcher` records (one [`OccupancyHist`] per batching
+//! queue) and follows the same interior-mutability pattern as
+//! [`crate::coordinator::CoordinatorMetrics`]: workers write through
+//! `&self`, anyone reads, locks are poison-tolerant so a panicking worker
+//! cannot cascade into panics on every later read.
+
+use crate::util::stats::{DurationHist, OccupancyHist};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Live counters for one tier. Shared (`Arc`) between the tier's queue,
+/// its workers, and the server-level [`Metrics`] registry.
+#[derive(Default)]
+pub struct TierMetrics {
+    /// Requests enqueued but not yet picked into a batch.
+    depth: AtomicUsize,
+    /// Requests turned away by admission control (`try_submit` on a full
+    /// queue).
+    rejected: AtomicU64,
+    /// Requests answered with an execution error.
+    errors: AtomicU64,
+    occupancy: Mutex<OccupancyHist>,
+    /// End-to-end latency (enqueue → reply), queue wait included.
+    latency: Mutex<DurationHist>,
+}
+
+impl TierMetrics {
+    fn occ(&self) -> MutexGuard<'_, OccupancyHist> {
+        crate::util::lock_ignore_poison(&self.occupancy)
+    }
+
+    fn lat(&self) -> MutexGuard<'_, DurationHist> {
+        crate::util::lock_ignore_poison(&self.latency)
+    }
+
+    pub(crate) fn depth_add(&self, n: usize) {
+        self.depth.fetch_add(n, Ordering::SeqCst);
+    }
+
+    pub(crate) fn depth_sub(&self, n: usize) {
+        self.depth.fetch_sub(n, Ordering::SeqCst);
+    }
+
+    pub(crate) fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn record_error(&self, n: u64) {
+        self.errors.fetch_add(n, Ordering::SeqCst);
+    }
+
+    pub(crate) fn record_batch(&self, used: usize, capacity: usize) {
+        self.occ().record(used, capacity);
+    }
+
+    pub(crate) fn record_latency(&self, d: Duration) {
+        self.lat().record(d);
+    }
+
+    /// Requests currently queued (submitted, not yet batched).
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::SeqCst)
+    }
+
+    /// Requests rejected by admission control.
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::SeqCst)
+    }
+
+    /// Requests answered with an execution error.
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::SeqCst)
+    }
+
+    /// Batches executed.
+    pub fn batches(&self) -> u64 {
+        self.occ().batches()
+    }
+
+    /// Requests that completed through an executed batch.
+    pub fn requests(&self) -> u64 {
+        self.occ().requests()
+    }
+
+    /// Mean live rows per executed batch.
+    pub fn mean_occupancy(&self) -> f64 {
+        self.occ().mean()
+    }
+
+    /// Snapshot of the occupancy histogram (index = rows used − 1).
+    pub fn occupancy_buckets(&self) -> Vec<u64> {
+        self.occ().buckets().to_vec()
+    }
+
+    /// Median end-to-end latency (approximate; see
+    /// [`DurationHist::quantile`]).
+    pub fn latency_p50(&self) -> Duration {
+        self.lat().p50()
+    }
+
+    /// 99th-percentile end-to-end latency (approximate).
+    pub fn latency_p99(&self) -> Duration {
+        self.lat().p99()
+    }
+
+    /// Mean end-to-end latency (exact).
+    pub fn latency_mean(&self) -> Duration {
+        self.lat().mean()
+    }
+}
+
+/// Server-wide metrics registry: one [`TierMetrics`] per registered tier.
+#[derive(Default)]
+pub struct Metrics {
+    tiers: Mutex<HashMap<String, Arc<TierMetrics>>>,
+}
+
+impl Metrics {
+    fn locked(&self) -> MutexGuard<'_, HashMap<String, Arc<TierMetrics>>> {
+        crate::util::lock_ignore_poison(&self.tiers)
+    }
+
+    /// Register (or fetch) the counters for `tier`.
+    pub(crate) fn tier_entry(&self, tier: &str) -> Arc<TierMetrics> {
+        Arc::clone(
+            self.locked()
+                .entry(tier.to_string())
+                .or_insert_with(|| Arc::new(TierMetrics::default())),
+        )
+    }
+
+    /// Drop a tier's counters (registration rollback — a tier that never
+    /// went live must not leave a ghost row in the report).
+    pub(crate) fn remove_tier(&self, tier: &str) {
+        self.locked().remove(tier);
+    }
+
+    /// Counters for `tier`, if registered.
+    pub fn tier(&self, tier: &str) -> Option<Arc<TierMetrics>> {
+        self.locked().get(tier).cloned()
+    }
+
+    /// Completed requests summed over all tiers.
+    pub fn total_requests(&self) -> u64 {
+        self.locked().values().map(|t| t.requests()).sum()
+    }
+
+    /// Render a per-tier summary table (example epilogues, `serve` demos).
+    pub fn report(&self) -> String {
+        let map = self.locked();
+        let mut names: Vec<&String> = map.keys().collect();
+        names.sort();
+        let mut t = crate::util::bench::Table::new(&[
+            "tier", "requests", "batches", "occ", "depth", "p50", "p99", "rejected", "errors",
+        ]);
+        for n in names {
+            let m = &map[n];
+            t.row(&[
+                n.clone(),
+                m.requests().to_string(),
+                m.batches().to_string(),
+                format!("{:.2}", m.mean_occupancy()),
+                m.queue_depth().to_string(),
+                crate::util::human_duration(m.latency_p50()),
+                crate::util::human_duration(m.latency_p99()),
+                m.rejected().to_string(),
+                m.errors().to_string(),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_counters_aggregate() {
+        let m = Metrics::default();
+        let t = m.tier_entry("dense");
+        t.depth_add(3);
+        t.depth_sub(2);
+        t.record_batch(2, 4);
+        t.record_batch(4, 4);
+        t.record_latency(Duration::from_millis(2));
+        t.record_latency(Duration::from_millis(8));
+        t.record_rejected();
+        t.record_error(2);
+        assert_eq!(t.queue_depth(), 1);
+        assert_eq!(t.batches(), 2);
+        assert_eq!(t.requests(), 6);
+        assert!((t.mean_occupancy() - 3.0).abs() < 1e-12);
+        assert_eq!(t.occupancy_buckets(), vec![0, 1, 0, 1]);
+        assert!(t.latency_p50() <= t.latency_p99());
+        assert!(t.latency_p99() <= Duration::from_millis(8));
+        assert_eq!(t.rejected(), 1);
+        assert_eq!(t.errors(), 2);
+        assert_eq!(m.total_requests(), 6);
+        // Same entry handed back on re-registration.
+        let t2 = m.tier_entry("dense");
+        assert_eq!(t2.batches(), 2);
+        assert!(m.tier("nope").is_none());
+        let rep = m.report();
+        assert!(rep.contains("| dense"), "{rep}");
+    }
+}

@@ -1,0 +1,558 @@
+//! `panther::serve` — native model serving: generic dynamic batching over
+//! any [`Model`], tiered dense/sketched routing, bounded-queue
+//! backpressure, and graceful drain.
+//!
+//! The [`crate::coordinator`] serves exactly one workload (MLM scoring
+//! through the fixed-shape artifact runtime); this subsystem serves *any*
+//! native layer stack behind the [`crate::nn::Module`] API — which is
+//! where the paper's "drop-in compressed layers" claim meets production:
+//! a `SketchPlan`-compressed model is registered as a cheaper **tier** of
+//! the same service, and its smaller footprint (the paper's memory
+//! saving) becomes admission-controlled serving *capacity*.
+//!
+//! ## Shape
+//!
+//! - [`ModelServer`] owns one or more checkpoint-loadable [`Model`]s, each
+//!   registered as a named tier ([`ModelServer::register_tier`] /
+//!   [`ModelServer::register_tier_from_checkpoint`]).
+//! - Each tier runs a bounded request queue (backpressure: blocking
+//!   [`ServeHandle::infer`] or fail-fast [`ServeHandle::try_infer`]) and a
+//!   pool of inference workers, each with its own warm
+//!   [`crate::nn::ForwardCtx`]/`Workspace` arena; the GEMM tiles of every
+//!   worker land on the process-wide kernel thread pool.
+//! - Workers coalesce single-row requests into **padded row-stacked
+//!   batches** (max-batch/max-wait policy) and run one `Model::forward`
+//!   per batch. Every batch is padded to exactly `max_batch` rows, which
+//!   pins the GEMM kernel path: a request's result is bit-identical
+//!   across arrival orders and batch compositions, and registration
+//!   *probes* (bitwise) that co-rows and padding never leak into a live
+//!   row — see [`router`] for the exact guarantees.
+//! - [`Metrics`] tracks queue depth, a batch-occupancy histogram, and
+//!   p50/p99 end-to-end latency per tier, reusing the
+//!   [`crate::util::stats`] shapes the coordinator's batcher records.
+//! - [`ModelServer::shutdown`] drains: admissions stop with a typed
+//!   error, queued requests still get answers, workers exit, threads
+//!   join. Dropping the server does the same.
+//!
+//! ```
+//! use panther::linalg::Mat;
+//! use panther::nn::{Linear, Model};
+//! use panther::rng::Philox;
+//! use panther::serve::{ModelServer, TierConfig};
+//!
+//! # fn main() -> panther::Result<()> {
+//! let mut rng = Philox::seeded(0);
+//! let mut model = Model::new();
+//! model.add("fc", Linear::random(16, 4, &mut rng))?;
+//! let mut server = ModelServer::new();
+//! server.register_tier("dense", model, 16, TierConfig::default())?;
+//! let y = server.handle().infer("dense", &[0.1; 16])?;
+//! assert_eq!(y.len(), 4);
+//! server.shutdown();
+//! # Ok(()) }
+//! ```
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+
+pub use metrics::{Metrics, TierMetrics};
+
+use crate::nn::Model;
+use batcher::{worker_loop, ServeRequest, TierQueue};
+use router::{probe_model, Router, Tier};
+use std::path::Path;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Typed serving errors — admission control ([`ServeError::QueueFull`],
+/// [`ServeError::ShuttingDown`]) must be distinguishable from execution
+/// failures, so this is an enum rather than an `anyhow` blob. Converts
+/// into [`anyhow::Error`] via `std::error::Error` for callers on the
+/// crate-wide [`crate::Result`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// No tier registered under this name.
+    UnknownTier(String),
+    /// A tier with this name already exists.
+    DuplicateTier(String),
+    /// The request row does not match the tier's input width.
+    BadInput(String),
+    /// Admission control: the tier's bounded queue is at capacity
+    /// (non-blocking path only — blocking submits wait instead).
+    QueueFull,
+    /// The server is draining; no new requests are admitted.
+    ShuttingDown,
+    /// The reply channel died before an answer arrived (a worker panic).
+    Disconnected,
+    /// The model's forward failed while executing the batch.
+    Exec(String),
+    /// Registration probe: the model couples batch rows (attention-style
+    /// layers), so row-batched serving would corrupt results.
+    RowCoupled(String),
+    /// Registration probe failed to run the model.
+    Probe(String),
+    /// A tier worker thread could not be spawned (registration is rolled
+    /// back — no partial tier is left behind).
+    Spawn(String),
+    /// The tier's memory budget cannot fit the model plus at least one
+    /// worker's batch footprint.
+    Budget(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::UnknownTier(t) => write!(f, "no tier named {t:?}"),
+            ServeError::DuplicateTier(t) => write!(f, "tier {t:?} already registered"),
+            ServeError::BadInput(m) => write!(f, "bad request: {m}"),
+            ServeError::QueueFull => write!(f, "tier queue full (admission rejected)"),
+            ServeError::ShuttingDown => write!(f, "server is shutting down"),
+            ServeError::Disconnected => write!(f, "reply channel disconnected"),
+            ServeError::Exec(m) => write!(f, "batch execution failed: {m}"),
+            ServeError::RowCoupled(m) => write!(f, "model not row-batchable: {m}"),
+            ServeError::Probe(m) => write!(f, "registration probe failed: {m}"),
+            ServeError::Spawn(m) => write!(f, "spawning tier worker failed: {m}"),
+            ServeError::Budget(m) => write!(f, "memory budget too small: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Per-tier serving policy.
+#[derive(Debug, Clone)]
+pub struct TierConfig {
+    /// Batch cap — every executed batch is padded to exactly this many
+    /// rows (the fixed-shape policy that makes results composition
+    /// invariant). Caps below 8 (the GEMM microkernel height) additionally
+    /// keep row results bit-identical to unbatched single-row forwards for
+    /// row-wise stacks; [`TierInfo::bit_identical_to_unbatched`] records
+    /// what the probe measured.
+    pub max_batch: usize,
+    /// How long a worker waits for co-riders after the first request of a
+    /// batch arrives.
+    pub max_wait: Duration,
+    /// Bounded queue length — the backpressure boundary.
+    pub queue_cap: usize,
+    /// Requested worker threads (may be reduced by `mem_budget`).
+    pub workers: usize,
+    /// Optional tier memory budget in bytes: weights + per-worker
+    /// peak-batch activations must fit, and the admitted worker count is
+    /// `(budget − weights) / peak_batch_bytes`, capped at `workers`. This
+    /// is where a sketched tier's smaller footprint turns into capacity.
+    pub mem_budget: Option<u64>,
+    /// Bound attention head-state memory: forwarded to
+    /// [`crate::nn::Module::set_head_group`] on every layer before the
+    /// probe, so the measured per-batch footprint (and therefore the
+    /// budget admission) reflects it.
+    pub head_group: Option<usize>,
+}
+
+impl Default for TierConfig {
+    fn default() -> Self {
+        TierConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 256,
+            workers: 2,
+            mem_budget: None,
+            head_group: None,
+        }
+    }
+}
+
+/// What registration admitted and measured for a tier.
+#[derive(Debug, Clone)]
+pub struct TierInfo {
+    pub name: String,
+    /// Request row width.
+    pub in_dim: usize,
+    /// Result row width.
+    pub out_dim: usize,
+    /// Batch cap (every batch executes padded to this).
+    pub max_batch: usize,
+    /// Admitted worker threads (≤ the requested count under a budget).
+    pub workers: usize,
+    /// Stored parameter bytes of the tier's model.
+    pub weight_bytes: u64,
+    /// Probe-measured peak activation bytes of one padded batch.
+    pub peak_batch_bytes: u64,
+    /// Whether the cap-padded forward reproduced the unbatched single-row
+    /// forward bit-for-bit in the probe (see [`router`] docs).
+    pub bit_identical_to_unbatched: bool,
+}
+
+/// The serving front end: tier registry + worker pools + metrics.
+pub struct ModelServer {
+    router: Arc<Router>,
+    metrics: Arc<Metrics>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    closed: bool,
+}
+
+impl Default for ModelServer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ModelServer {
+    pub fn new() -> Self {
+        ModelServer {
+            router: Arc::new(Router::default()),
+            metrics: Arc::new(Metrics::default()),
+            workers: Vec::new(),
+            closed: false,
+        }
+    }
+
+    /// Register `model` as tier `name`, serving rows of width `in_dim`.
+    /// Runs the registration probe (row independence, footprint), applies
+    /// the memory-budget admission, and spawns the tier's workers. The
+    /// model is shared read-only by all of them.
+    pub fn register_tier(
+        &mut self,
+        name: &str,
+        mut model: Model,
+        in_dim: usize,
+        cfg: TierConfig,
+    ) -> Result<TierInfo, ServeError> {
+        if self.closed {
+            return Err(ServeError::ShuttingDown);
+        }
+        if in_dim == 0 || cfg.max_batch == 0 || cfg.queue_cap == 0 || cfg.workers == 0 {
+            return Err(ServeError::BadInput(
+                "in_dim, max_batch, queue_cap and workers must be positive".into(),
+            ));
+        }
+        // Duplicate check up front (registration holds &mut self, so this
+        // cannot race): nothing below runs for a name that would collide.
+        if self.router.get(name).is_ok() {
+            return Err(ServeError::DuplicateTier(name.to_string()));
+        }
+        if let Some(g) = cfg.head_group {
+            model.set_head_group(g);
+        }
+        let probe = probe_model(&model, in_dim, cfg.max_batch)?;
+        let weight_bytes = (model.total_params() * 4) as u64;
+        let workers = match cfg.mem_budget {
+            None => cfg.workers,
+            Some(budget) => {
+                let avail = budget.checked_sub(weight_bytes).unwrap_or(0);
+                let fit = (avail / probe.peak_batch_bytes.max(1)) as usize;
+                let admitted = fit.min(cfg.workers);
+                if admitted == 0 {
+                    return Err(ServeError::Budget(format!(
+                        "budget {budget} B < {weight_bytes} B weights + \
+                         {} B per-batch activations",
+                        probe.peak_batch_bytes
+                    )));
+                }
+                admitted
+            }
+        };
+        let info = TierInfo {
+            name: name.to_string(),
+            in_dim,
+            out_dim: probe.out_dim,
+            max_batch: cfg.max_batch,
+            workers,
+            weight_bytes,
+            peak_batch_bytes: probe.peak_batch_bytes,
+            bit_identical_to_unbatched: probe.bit_identical_to_unbatched,
+        };
+        let tier_metrics = self.metrics.tier_entry(name);
+        let queue = Arc::new(TierQueue::new(cfg.queue_cap, Arc::clone(&tier_metrics)));
+        // Spawn the full worker pool BEFORE the tier becomes routable: a
+        // mid-pool spawn failure must not leave a live worker-less tier
+        // whose queue would admit requests nobody drains. On failure the
+        // (unreachable) queue is closed, already-spawned workers drain out
+        // and join, and no tier is registered.
+        let model = Arc::new(model);
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (m, q, tm) = (Arc::clone(&model), Arc::clone(&queue), Arc::clone(&tier_metrics));
+            let (cap, wait) = (cfg.max_batch, cfg.max_wait);
+            let spawned = std::thread::Builder::new()
+                .name(format!("panther-serve-{name}-{i}"))
+                .spawn(move || worker_loop(m, q, cap, wait, in_dim, tm));
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    queue.close();
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    self.metrics.remove_tier(name);
+                    return Err(ServeError::Spawn(e.to_string()));
+                }
+            }
+        }
+        let inserted = self.router.insert(
+            name,
+            Tier {
+                queue: Arc::clone(&queue),
+                info: info.clone(),
+            },
+        );
+        if let Err(e) = inserted {
+            // Unreachable given the up-front duplicate check, but never
+            // leak a spawned pool: close, join, report.
+            queue.close();
+            for h in handles {
+                let _ = h.join();
+            }
+            self.metrics.remove_tier(name);
+            return Err(e);
+        }
+        self.workers.extend(handles);
+        Ok(info)
+    }
+
+    /// [`ModelServer::register_tier`] with weights restored from a
+    /// checkpoint (v1 or v2): `arch` provides the architecture, the
+    /// checkpoint the parameters — the same contract as
+    /// [`Model::load_state_dict`].
+    pub fn register_tier_from_checkpoint(
+        &mut self,
+        name: &str,
+        mut arch: Model,
+        in_dim: usize,
+        path: impl AsRef<Path>,
+        cfg: TierConfig,
+    ) -> crate::Result<TierInfo> {
+        let state = crate::train::checkpoint::load(path)?;
+        arch.load_state_dict(&state.state_dict())?;
+        Ok(self.register_tier(name, arch, in_dim, cfg)?)
+    }
+
+    /// Cloneable client handle.
+    pub fn handle(&self) -> ServeHandle {
+        ServeHandle {
+            router: Arc::clone(&self.router),
+        }
+    }
+
+    /// The server-wide metrics registry.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Registered tier names, sorted.
+    pub fn tiers(&self) -> Vec<String> {
+        self.router.names()
+    }
+
+    /// What registration admitted for `name`.
+    pub fn tier_info(&self, name: &str) -> Option<TierInfo> {
+        self.router.get(name).ok().map(|t| t.info.clone())
+    }
+
+    /// Graceful drain: stop admissions (subsequent submits get
+    /// [`ServeError::ShuttingDown`]), answer everything already queued,
+    /// then join every worker thread. Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        self.closed = true;
+        self.router.close_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ModelServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Cloneable client handle: route a request to a tier, blocking
+/// ([`ServeHandle::infer`]), fail-fast ([`ServeHandle::try_infer`]), or
+/// asynchronously ([`ServeHandle::submit`] + [`PendingReply::wait`]).
+#[derive(Clone)]
+pub struct ServeHandle {
+    router: Arc<Router>,
+}
+
+impl ServeHandle {
+    #[allow(clippy::type_complexity)]
+    fn request(
+        &self,
+        tier: &str,
+        row: &[f32],
+    ) -> Result<(Arc<Tier>, ServeRequest, PendingReply), ServeError> {
+        let t = self.router.get(tier)?;
+        if row.len() != t.info.in_dim {
+            return Err(ServeError::BadInput(format!(
+                "tier {tier:?} serves rows of width {}, got {}",
+                t.info.in_dim,
+                row.len()
+            )));
+        }
+        let (tx, rx) = mpsc::channel();
+        let req = ServeRequest {
+            row: row.to_vec(),
+            reply: tx,
+            enqueued: Instant::now(),
+        };
+        Ok((t, req, PendingReply { rx }))
+    }
+
+    /// Enqueue a request, blocking while the tier queue is full. The
+    /// reply arrives when the batch it joins completes.
+    pub fn submit(&self, tier: &str, row: &[f32]) -> Result<PendingReply, ServeError> {
+        let (t, req, pending) = self.request(tier, row)?;
+        t.queue.submit(req)?;
+        Ok(pending)
+    }
+
+    /// [`ServeHandle::submit`] without blocking: a full queue is an
+    /// immediate [`ServeError::QueueFull`].
+    pub fn try_submit(&self, tier: &str, row: &[f32]) -> Result<PendingReply, ServeError> {
+        let (t, req, pending) = self.request(tier, row)?;
+        t.queue.try_submit(req)?;
+        Ok(pending)
+    }
+
+    /// Score one row (blocks until its batch completes).
+    pub fn infer(&self, tier: &str, row: &[f32]) -> Result<Vec<f32>, ServeError> {
+        self.submit(tier, row)?.wait()
+    }
+
+    /// [`ServeHandle::infer`] with fail-fast admission.
+    pub fn try_infer(&self, tier: &str, row: &[f32]) -> Result<Vec<f32>, ServeError> {
+        self.try_submit(tier, row)?.wait()
+    }
+}
+
+/// An in-flight request; [`PendingReply::wait`] blocks for the result.
+pub struct PendingReply {
+    rx: mpsc::Receiver<Result<Vec<f32>, ServeError>>,
+}
+
+impl PendingReply {
+    /// Block until the request's batch completes.
+    pub fn wait(self) -> Result<Vec<f32>, ServeError> {
+        self.rx.recv().map_err(|_| ServeError::Disconnected)?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Linear;
+    use crate::rng::Philox;
+
+    fn mlp(seed: u64) -> Model {
+        let mut rng = Philox::seeded(seed);
+        let mut m = Model::new();
+        m.add("fc1", Linear::random(8, 16, &mut rng)).unwrap();
+        m.add("fc2", Linear::random(16, 4, &mut rng)).unwrap();
+        m
+    }
+
+    #[test]
+    fn register_serve_shutdown_roundtrip() {
+        let mut server = ModelServer::new();
+        let info = server
+            .register_tier("dense", mlp(1), 8, TierConfig::default())
+            .unwrap();
+        assert_eq!(info.out_dim, 4);
+        assert_eq!(info.workers, 2);
+        assert!(info.bit_identical_to_unbatched);
+        assert_eq!(server.tiers(), vec!["dense"]);
+        let h = server.handle();
+        let y = h.infer("dense", &[0.5; 8]).unwrap();
+        assert_eq!(y.len(), 4);
+        // Unknown tier and wrong width are typed errors.
+        assert!(matches!(
+            h.infer("nope", &[0.0; 8]),
+            Err(ServeError::UnknownTier(_))
+        ));
+        assert!(matches!(
+            h.infer("dense", &[0.0; 3]),
+            Err(ServeError::BadInput(_))
+        ));
+        server.shutdown();
+        assert_eq!(h.infer("dense", &[0.5; 8]), Err(ServeError::ShuttingDown));
+        // Idempotent.
+        server.shutdown();
+    }
+
+    #[test]
+    fn duplicate_and_degenerate_registrations_rejected() {
+        let mut server = ModelServer::new();
+        server
+            .register_tier("t", mlp(2), 8, TierConfig::default())
+            .unwrap();
+        assert!(matches!(
+            server.register_tier("t", mlp(2), 8, TierConfig::default()),
+            Err(ServeError::DuplicateTier(_))
+        ));
+        let bad = TierConfig {
+            workers: 0,
+            ..TierConfig::default()
+        };
+        assert!(matches!(
+            server.register_tier("z", mlp(2), 8, bad),
+            Err(ServeError::BadInput(_))
+        ));
+    }
+
+    #[test]
+    fn memory_budget_admits_fewer_workers_or_rejects() {
+        let mut server = ModelServer::new();
+        // Probe first to learn the real numbers, then budget exactly one
+        // worker's worth.
+        let free = server
+            .register_tier("probe", mlp(3), 8, TierConfig::default())
+            .unwrap();
+        let one_worker = free.weight_bytes + free.peak_batch_bytes;
+        let cfg = TierConfig {
+            workers: 4,
+            mem_budget: Some(one_worker),
+            ..TierConfig::default()
+        };
+        let info = server.register_tier("budgeted", mlp(3), 8, cfg).unwrap();
+        assert_eq!(info.workers, 1, "budget fits exactly one worker");
+        // A budget smaller than the weights alone is a clean error.
+        let cfg = TierConfig {
+            mem_budget: Some(free.weight_bytes / 2),
+            ..TierConfig::default()
+        };
+        assert!(matches!(
+            server.register_tier("tiny", mlp(3), 8, cfg),
+            Err(ServeError::Budget(_))
+        ));
+    }
+
+    #[test]
+    fn checkpoint_registration_serves_trained_weights() {
+        use crate::train::{Adam, Trainer};
+        let mut model = mlp(4);
+        let mut rng = Philox::seeded(5);
+        let x = crate::linalg::Mat::randn(16, 8, &mut rng);
+        let target = crate::linalg::Mat::randn(16, 4, &mut rng);
+        let ctx = crate::nn::ForwardCtx::new();
+        let mut tr = Trainer::new(Box::new(Adam::new(0.01)));
+        for _ in 0..3 {
+            tr.train_step(&mut model, &x, &target, &ctx).unwrap();
+        }
+        let dir = std::env::temp_dir().join("panther_serve_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tier.ckpt");
+        tr.save_checkpoint(&model, "mlp", &path).unwrap();
+
+        let mut server = ModelServer::new();
+        server
+            .register_tier_from_checkpoint("dense", mlp(999), 8, &path, TierConfig::default())
+            .unwrap();
+        let row: Vec<f32> = x.row(0).to_vec();
+        let got = server.handle().infer("dense", &row).unwrap();
+        // The served result is the trained model's single-row forward.
+        let want = model.forward(&crate::linalg::Mat::from_vec(1, 8, row), &ctx).unwrap();
+        assert_eq!(got.as_slice(), want.row(0));
+        std::fs::remove_file(&path).ok();
+    }
+}

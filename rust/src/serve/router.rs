@@ -1,0 +1,202 @@
+//! Tier registry + registration-time model vetting.
+//!
+//! A [`super::ModelServer`] serves several *quality tiers* of the same
+//! workload — e.g. a dense model next to its `SketchPlan`-compressed
+//! variant — each behind its own bounded queue and worker pool. The
+//! router is the name → tier map requests are routed by.
+//!
+//! Registration **probes** the model before a single request is accepted:
+//!
+//! 1. *Row independence* — a probe row is forwarded padded-alone and
+//!    padded among random co-rows at the tier's batch cap; the two row
+//!    results must match **bit-for-bit**, otherwise batching would let
+//!    co-riders (and the zero padding) leak into results. This is what
+//!    rejects row-coupled layers (attention mixes sequence rows) at caps
+//!    above 1, with a clean error instead of silent corruption.
+//! 2. *Footprint* — the padded-batch forward runs under a
+//!    [`MemTracker`], so the tier knows its peak per-batch activation
+//!    bytes; together with the stored weight bytes this drives the
+//!    memory-budget admission in [`super::ModelServer::register_tier`]
+//!    (smaller sketched models ⇒ more workers per byte — the paper's
+//!    memory saving turned into serving capacity).
+//! 3. *Unbatched equivalence* — whether the cap-padded forward is
+//!    additionally bit-identical to the plain single-row
+//!    `Module::forward`. True whenever cap and shapes keep every product
+//!    on the same GEMM kernel (always at caps below the microkernel
+//!    height of 8); recorded in [`super::TierInfo`] so callers know which
+//!    guarantee they hold.
+
+use super::batcher::TierQueue;
+use super::{ServeError, TierInfo};
+use crate::linalg::Mat;
+use crate::nn::{ForwardCtx, Model};
+use crate::rng::Philox;
+use crate::util::memtrack::MemTracker;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// One registered tier: the model replicaset behind a queue.
+pub(crate) struct Tier {
+    pub(crate) queue: Arc<TierQueue>,
+    pub(crate) info: TierInfo,
+}
+
+/// Name → tier map shared between the server and its client handles.
+#[derive(Default)]
+pub(crate) struct Router {
+    tiers: Mutex<HashMap<String, Arc<Tier>>>,
+}
+
+impl Router {
+    fn locked(&self) -> MutexGuard<'_, HashMap<String, Arc<Tier>>> {
+        crate::util::lock_ignore_poison(&self.tiers)
+    }
+
+    pub(crate) fn insert(&self, name: &str, tier: Tier) -> Result<(), ServeError> {
+        let mut map = self.locked();
+        if map.contains_key(name) {
+            return Err(ServeError::DuplicateTier(name.to_string()));
+        }
+        map.insert(name.to_string(), Arc::new(tier));
+        Ok(())
+    }
+
+    pub(crate) fn get(&self, name: &str) -> Result<Arc<Tier>, ServeError> {
+        self.locked()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| ServeError::UnknownTier(name.to_string()))
+    }
+
+    /// Registered tier names, sorted.
+    pub(crate) fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.locked().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Close every tier queue (stops admissions; queued work drains).
+    pub(crate) fn close_all(&self) {
+        for tier in self.locked().values() {
+            tier.queue.close();
+        }
+    }
+}
+
+/// Registration probe results (see the module docs).
+pub(crate) struct ProbeReport {
+    pub(crate) out_dim: usize,
+    pub(crate) peak_batch_bytes: u64,
+    pub(crate) bit_identical_to_unbatched: bool,
+}
+
+/// Seed for the probe rows — fixed, so registration is deterministic.
+const PROBE_SEED: u64 = 0x5e21e;
+
+/// Vet `model` for row-batched serving at `max_batch` (see module docs).
+pub(crate) fn probe_model(
+    model: &Model,
+    in_dim: usize,
+    max_batch: usize,
+) -> Result<ProbeReport, ServeError> {
+    let mut rng = Philox::seeded(PROBE_SEED);
+    let probe = Mat::randn(1, in_dim, &mut rng).scale(0.5);
+    let fail = |e: anyhow::Error| ServeError::Probe(format!("{e:#}"));
+    // Plain single-row forward — the unbatched baseline.
+    let solo = model.forward(&probe, &ForwardCtx::new()).map_err(fail)?;
+    if solo.rows() != 1 {
+        return Err(ServeError::Probe(format!(
+            "model maps 1 input row to {} output rows — row-routed serving \
+             needs one result row per request row",
+            solo.rows()
+        )));
+    }
+    // Padded alone at the cap, under a tracker: the per-batch footprint.
+    // Both padded forwards go through `Model::forward_rows` — the public
+    // form of the stack/pad/unstack contract the worker loop's
+    // buffer-reusing twin implements — so the probe validates the very
+    // sequence it vouches for (incl. the rows-out == rows-in check).
+    let tracker = MemTracker::unlimited();
+    let ctx1 = ForwardCtx::with_tracker(tracker.clone()).batch_hint(max_batch);
+    let alone = model
+        .forward_rows(&[probe.row(0)], max_batch, &ctx1)
+        .map_err(fail)?;
+    // Padded among random co-rows: co-riders must not leak into row 0.
+    let co = Mat::randn(max_batch, in_dim, &mut rng).scale(0.5);
+    let mut rows: Vec<&[f32]> = vec![probe.row(0)];
+    for i in 1..max_batch {
+        rows.push(co.row(i));
+    }
+    let mixed = model
+        .forward_rows(&rows, max_batch, &ForwardCtx::new().batch_hint(max_batch))
+        .map_err(fail)?;
+    if alone[0] != mixed[0] {
+        return Err(ServeError::RowCoupled(format!(
+            "a row's result changed with its batch co-rows at cap {max_batch} \
+             — the model couples rows (attention-style layers cannot be \
+             row-batched; serve them at max_batch = 1)"
+        )));
+    }
+    Ok(ProbeReport {
+        out_dim: alone[0].len(),
+        peak_batch_bytes: tracker.peak_bytes(),
+        bit_identical_to_unbatched: alone[0].as_slice() == solo.row(0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{AttnWeights, Linear, MultiHeadAttention};
+
+    #[test]
+    fn probe_accepts_row_independent_and_rejects_coupled() {
+        let mut rng = Philox::seeded(9);
+        let mut mlp = Model::new();
+        mlp.add("fc", Linear::random(8, 4, &mut rng)).unwrap();
+        let rep = probe_model(&mlp, 8, 4).unwrap();
+        assert_eq!(rep.out_dim, 4);
+        assert!(rep.peak_batch_bytes > 0);
+        // Cap 4 keeps every product on the small kernels: the padded
+        // forward is bit-identical to the unbatched one.
+        assert!(rep.bit_identical_to_unbatched);
+
+        let mut attn = Model::new();
+        attn.add(
+            "attn",
+            MultiHeadAttention::new(AttnWeights::random(8, 2, &mut rng)),
+        )
+        .unwrap();
+        let err = probe_model(&attn, 8, 4).unwrap_err();
+        assert!(matches!(err, ServeError::RowCoupled(_)), "{err}");
+        // At cap 1 a whole "row = the entire request" model is fine.
+        assert!(probe_model(&attn, 8, 1).is_ok());
+    }
+
+    #[test]
+    fn router_insert_get_duplicate() {
+        use crate::serve::metrics::TierMetrics;
+        let r = Router::default();
+        let mk = || Tier {
+            queue: Arc::new(TierQueue::new(4, Arc::new(TierMetrics::default()))),
+            info: TierInfo {
+                name: "a".into(),
+                in_dim: 2,
+                out_dim: 2,
+                max_batch: 4,
+                workers: 1,
+                weight_bytes: 0,
+                peak_batch_bytes: 0,
+                bit_identical_to_unbatched: true,
+            },
+        };
+        r.insert("a", mk()).unwrap();
+        assert!(matches!(
+            r.insert("a", mk()),
+            Err(ServeError::DuplicateTier(_))
+        ));
+        assert!(r.get("a").is_ok());
+        assert!(matches!(r.get("b"), Err(ServeError::UnknownTier(_))));
+        assert_eq!(r.names(), vec!["a"]);
+    }
+}

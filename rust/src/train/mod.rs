@@ -17,9 +17,11 @@
 
 pub mod checkpoint;
 pub mod optimizer;
+pub mod schedule;
 pub mod trainer;
 
 pub use optimizer::{optimizer_from_meta, Adam, OptimMeta, Optimizer, Sgd};
+pub use schedule::{LrSchedule, ScheduledOpt};
 pub use trainer::{clip_grad_norm, mse_loss, mse_value, Trainer};
 
 use crate::data::{MaskedBatch, TextCorpus};

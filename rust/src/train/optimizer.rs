@@ -37,6 +37,18 @@ pub trait Optimizer: Send {
     /// Identity + scalar state for checkpointing.
     fn meta(&self) -> OptimMeta;
 
+    /// The learning rate the next [`Optimizer::step`] will apply (for a
+    /// schedule-wrapped optimizer this is the *scheduled* rate, not the
+    /// base).
+    fn lr(&self) -> f32;
+
+    /// Set the learning rate — the hook
+    /// [`super::schedule::ScheduledOpt`] drives before every step.
+    /// Stateful optimizers keep their accumulated state (Adam's moments
+    /// and counter are untouched); only the step size changes. On a
+    /// schedule wrapper this re-bases the curve.
+    fn set_lr(&mut self, lr: f32);
+
     /// Per-parameter moment tensors for `sd`'s names/shapes, in order —
     /// zeros for names this optimizer has no state for (and for stateless
     /// optimizers entirely). Feeds the checkpoint's `m`/`v` slots.
@@ -54,6 +66,10 @@ pub trait Optimizer: Send {
 
 /// Rebuild an optimizer from its checkpointed [`OptimMeta`].
 pub fn optimizer_from_meta(meta: &OptimMeta) -> Result<Box<dyn Optimizer>> {
+    if let Some(inner_kind) = meta.kind.strip_prefix("sched:") {
+        let sched = super::schedule::ScheduledOpt::from_meta_parts(inner_kind, &meta.hyper)?;
+        return Ok(Box::new(sched));
+    }
     match meta.kind.as_str() {
         "sgd" => {
             ensure!(meta.hyper.len() == 1, "sgd meta wants [lr]");
@@ -144,6 +160,14 @@ impl Optimizer for Sgd {
         }
     }
 
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
     fn export_moments(&self, sd: &StateDict) -> (Vec<HostTensor>, Vec<HostTensor>) {
         let zeros: Vec<HostTensor> = sd.iter().map(|(_, t)| HostTensor::zeros(t.shape())).collect();
         (zeros.clone(), zeros)
@@ -230,6 +254,14 @@ impl Optimizer for Adam {
                 f32::from_bits((self.t >> 32) as u32),
             ],
         }
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
     }
 
     fn export_moments(&self, sd: &StateDict) -> (Vec<HostTensor>, Vec<HostTensor>) {

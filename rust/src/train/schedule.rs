@@ -1,0 +1,433 @@
+//! Learning-rate schedules over any [`Optimizer`] (ROADMAP item).
+//!
+//! [`ScheduledOpt`] wraps an inner optimizer and, before every step, sets
+//! its learning rate to `base_lr · schedule.factor(t)` — warmup ramps,
+//! cosine decay, and stepwise drops compose with SGD and Adam without
+//! either side knowing about the other. The wrapper's scalar state (the
+//! schedule's shape, the base rate, and the step counter) rides in the
+//! checkpoint's optimizer section next to the inner optimizer's own
+//! scalars, so a resumed fine-tune continues the schedule *exactly* —
+//! the same resume-bit-exactness contract the plain optimizers already
+//! honor (u64 counters are bit-pattern-encoded, never `as f32` rounded).
+
+use super::optimizer::{OptimMeta, Optimizer};
+use crate::nn::{Model, StateDict};
+use crate::runtime::HostTensor;
+use anyhow::{bail, ensure, Result};
+
+/// Encode a u64 counter as two exact f32 bit patterns (the same trick
+/// Adam's step counter uses — `as f32` would round past 2²⁴).
+pub(crate) fn u64_to_f32s(v: u64) -> [f32; 2] {
+    [f32::from_bits(v as u32), f32::from_bits((v >> 32) as u32)]
+}
+
+/// Inverse of [`u64_to_f32s`].
+pub(crate) fn f32s_to_u64(lo: f32, hi: f32) -> u64 {
+    lo.to_bits() as u64 | ((hi.to_bits() as u64) << 32)
+}
+
+/// The learning-rate multiplier curve. `factor(t)` is applied to the base
+/// rate before step `t` (0-indexed: the first `Optimizer::step` sees
+/// `factor(0)`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LrSchedule {
+    /// `factor = 1` — a transparent wrapper (useful to thread the
+    /// schedule machinery through code paths unconditionally).
+    Constant,
+    /// Linear ramp `(t+1)/steps` over the first `steps` steps, then 1.
+    Warmup { steps: u64 },
+    /// Linear warmup to 1, then cosine decay to `floor` at `total` steps
+    /// (and `floor` beyond) — the standard fine-tuning schedule.
+    WarmupCosine { warmup: u64, total: u64, floor: f32 },
+    /// `gamma^(t / every)` — multiplicative drop every `every` steps.
+    Step { every: u64, gamma: f32 },
+}
+
+impl LrSchedule {
+    /// The multiplier on the base learning rate at step `t` (0-indexed).
+    pub fn factor(&self, t: u64) -> f32 {
+        match *self {
+            LrSchedule::Constant => 1.0,
+            LrSchedule::Warmup { steps } => {
+                if steps == 0 || t >= steps {
+                    1.0
+                } else {
+                    (t + 1) as f32 / steps as f32
+                }
+            }
+            LrSchedule::WarmupCosine {
+                warmup,
+                total,
+                floor,
+            } => {
+                if warmup > 0 && t < warmup {
+                    return (t + 1) as f32 / warmup as f32;
+                }
+                let span = total.saturating_sub(warmup).max(1);
+                let p = ((t - warmup) as f64 / span as f64).min(1.0);
+                let cos = 0.5 * (1.0 + (std::f64::consts::PI * p).cos());
+                floor + (1.0 - floor) * cos as f32
+            }
+            LrSchedule::Step { every, gamma } => {
+                let k = if every == 0 { 0 } else { t / every };
+                gamma.powi(k.min(i32::MAX as u64) as i32)
+            }
+        }
+    }
+
+    /// Schedule → scalar list for the checkpoint's optimizer section:
+    /// a kind tag, then the shape parameters (u64s bit-encoded).
+    fn encode(&self) -> Vec<f32> {
+        match *self {
+            LrSchedule::Constant => vec![0.0],
+            LrSchedule::Warmup { steps } => {
+                let s = u64_to_f32s(steps);
+                vec![1.0, s[0], s[1]]
+            }
+            LrSchedule::WarmupCosine {
+                warmup,
+                total,
+                floor,
+            } => {
+                let w = u64_to_f32s(warmup);
+                let n = u64_to_f32s(total);
+                vec![2.0, w[0], w[1], n[0], n[1], floor]
+            }
+            LrSchedule::Step { every, gamma } => {
+                let e = u64_to_f32s(every);
+                vec![3.0, e[0], e[1], gamma]
+            }
+        }
+    }
+
+    /// Inverse of [`LrSchedule::encode`]: parse a schedule off the front
+    /// of `hyper`, returning it and the scalars consumed.
+    fn decode(hyper: &[f32]) -> Result<(LrSchedule, usize)> {
+        ensure!(!hyper.is_empty(), "empty schedule section");
+        match hyper[0] as i64 {
+            0 => Ok((LrSchedule::Constant, 1)),
+            1 => {
+                ensure!(hyper.len() >= 3, "warmup schedule wants 2 scalars");
+                Ok((
+                    LrSchedule::Warmup {
+                        steps: f32s_to_u64(hyper[1], hyper[2]),
+                    },
+                    3,
+                ))
+            }
+            2 => {
+                ensure!(hyper.len() >= 6, "cosine schedule wants 5 scalars");
+                Ok((
+                    LrSchedule::WarmupCosine {
+                        warmup: f32s_to_u64(hyper[1], hyper[2]),
+                        total: f32s_to_u64(hyper[3], hyper[4]),
+                        floor: hyper[5],
+                    },
+                    6,
+                ))
+            }
+            3 => {
+                ensure!(hyper.len() >= 4, "step schedule wants 3 scalars");
+                Ok((
+                    LrSchedule::Step {
+                        every: f32s_to_u64(hyper[1], hyper[2]),
+                        gamma: hyper[3],
+                    },
+                    4,
+                ))
+            }
+            other => bail!("unknown LR schedule tag {other} in checkpoint"),
+        }
+    }
+}
+
+/// An [`Optimizer`] that drives its inner optimizer's learning rate along
+/// an [`LrSchedule`]. The base rate is captured from the inner optimizer
+/// at construction; the wrapper owns the schedule step counter (which
+/// counts *its own* steps, so a wrapper added mid-run starts its curve at
+/// the hand-off).
+pub struct ScheduledOpt {
+    inner: Box<dyn Optimizer>,
+    schedule: LrSchedule,
+    base_lr: f32,
+    /// Scheduled steps taken.
+    t: u64,
+}
+
+impl ScheduledOpt {
+    pub fn new(inner: Box<dyn Optimizer>, schedule: LrSchedule) -> Self {
+        let base_lr = inner.lr();
+        ScheduledOpt {
+            inner,
+            schedule,
+            base_lr,
+            t: 0,
+        }
+    }
+
+    /// Rebuild from the checkpoint scalars (see [`ScheduledOpt::meta`]).
+    pub(crate) fn from_meta_parts(inner_kind: &str, hyper: &[f32]) -> Result<Self> {
+        let (schedule, used) = LrSchedule::decode(hyper)?;
+        ensure!(
+            hyper.len() >= used + 3,
+            "scheduled-optimizer section truncated"
+        );
+        let base_lr = hyper[used];
+        let t = f32s_to_u64(hyper[used + 1], hyper[used + 2]);
+        let inner_meta = OptimMeta {
+            kind: inner_kind.to_string(),
+            hyper: hyper[used + 3..].to_vec(),
+        };
+        let inner = super::optimizer::optimizer_from_meta(&inner_meta)?;
+        Ok(ScheduledOpt {
+            inner,
+            schedule,
+            base_lr,
+            t,
+        })
+    }
+
+    /// The learning rate the *next* step will run at.
+    pub fn current_lr(&self) -> f32 {
+        self.base_lr * self.schedule.factor(self.t)
+    }
+
+    /// Scheduled steps taken so far.
+    pub fn steps(&self) -> u64 {
+        self.t
+    }
+
+    /// The wrapped schedule.
+    pub fn schedule(&self) -> &LrSchedule {
+        &self.schedule
+    }
+}
+
+impl Optimizer for ScheduledOpt {
+    fn step(&mut self, model: &mut Model) -> Result<()> {
+        let lr = self.base_lr * self.schedule.factor(self.t);
+        self.inner.set_lr(lr);
+        // Count the step only once the inner update succeeded — a failed
+        // step must not consume a point on the schedule curve (a retry
+        // should see the same factor).
+        self.inner.step(model)?;
+        self.t += 1;
+        Ok(())
+    }
+
+    /// `kind = "sched:<inner kind>"`, `hyper = schedule shape ‖ base_lr ‖
+    /// t (bit-encoded) ‖ inner hyper` — one flat scalar list, because the
+    /// checkpoint optimizer section is a kind plus f32s by design.
+    fn meta(&self) -> OptimMeta {
+        let inner = self.inner.meta();
+        let mut hyper = self.schedule.encode();
+        hyper.push(self.base_lr);
+        hyper.extend(u64_to_f32s(self.t));
+        hyper.extend(inner.hyper);
+        OptimMeta {
+            kind: format!("sched:{}", inner.kind),
+            hyper,
+        }
+    }
+
+    /// The rate the next step will actually apply (base × factor) — the
+    /// trait's "current learning rate" contract, not the base rate.
+    fn lr(&self) -> f32 {
+        self.current_lr()
+    }
+
+    /// Re-bases the schedule: the curve keeps its shape around the new
+    /// base rate.
+    fn set_lr(&mut self, lr: f32) {
+        self.base_lr = lr;
+    }
+
+    fn export_moments(&self, sd: &StateDict) -> (Vec<HostTensor>, Vec<HostTensor>) {
+        self.inner.export_moments(sd)
+    }
+
+    fn import_moments(
+        &mut self,
+        names: &[String],
+        m: &[HostTensor],
+        v: &[HostTensor],
+    ) -> Result<()> {
+        self.inner.import_moments(names, m, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::nn::{ForwardCtx, Linear, Model};
+    use crate::rng::Philox;
+    use crate::train::optimizer::{optimizer_from_meta, Adam, Sgd};
+    use crate::train::Trainer;
+
+    #[test]
+    fn factor_curves() {
+        let w = LrSchedule::Warmup { steps: 4 };
+        assert_eq!(w.factor(0), 0.25);
+        assert_eq!(w.factor(3), 1.0);
+        assert_eq!(w.factor(100), 1.0);
+        let c = LrSchedule::WarmupCosine {
+            warmup: 2,
+            total: 10,
+            floor: 0.1,
+        };
+        assert_eq!(c.factor(0), 0.5);
+        assert_eq!(c.factor(1), 1.0);
+        // Right after warmup: cosine starts at 1.
+        assert!((c.factor(2) - 1.0).abs() < 1e-6);
+        // Midpoint of the decay span (t−warmup = 4 of 8): halfway down.
+        assert!((c.factor(6) - 0.55).abs() < 1e-6, "{}", c.factor(6));
+        // End and beyond: pinned at the floor.
+        assert!((c.factor(10) - 0.1).abs() < 1e-6);
+        assert!((c.factor(1000) - 0.1).abs() < 1e-6);
+        let s = LrSchedule::Step {
+            every: 3,
+            gamma: 0.5,
+        };
+        assert_eq!(s.factor(0), 1.0);
+        assert_eq!(s.factor(2), 1.0);
+        assert_eq!(s.factor(3), 0.5);
+        assert_eq!(s.factor(8), 0.25);
+        assert_eq!(LrSchedule::Constant.factor(7), 1.0);
+    }
+
+    #[test]
+    fn scheduled_sgd_applies_the_curve_exactly() {
+        // One 1-parameter-ish model: watch the actual update magnitudes.
+        let mut rng = Philox::seeded(31);
+        let mut model = Model::new();
+        model.add("fc", Linear::random(2, 1, &mut rng)).unwrap();
+        let ctx = ForwardCtx::new();
+        let x = Mat::filled(1, 2, 1.0);
+        let y = Mat::filled(1, 1, 10.0);
+        let opt = ScheduledOpt::new(Box::new(Sgd::new(0.1)), LrSchedule::Warmup { steps: 2 });
+        assert_eq!(opt.current_lr(), 0.05, "first step ramps at 1/2");
+        let mut tr = Trainer::new(Box::new(opt));
+        // Step 1 at lr 0.05, step 2 at 0.1: gradients differ, but the
+        // per-step weight delta must equal lr·grad for the scheduled lr.
+        for expect_lr in [0.05f32, 0.1, 0.1] {
+            let before = model.state_dict();
+            tr.train_step(&mut model, &x, &y, &ctx).unwrap();
+            let after = model.state_dict();
+            let grad: Vec<f32> = model
+                .get("fc")
+                .unwrap()
+                .grads()
+                .into_iter()
+                .flat_map(|(_, g)| g.to_vec())
+                .collect();
+            let delta: Vec<f32> = before
+                .iter()
+                .zip(&after)
+                .flat_map(|((_, b), (_, a))| {
+                    b.data()
+                        .iter()
+                        .zip(a.data())
+                        .map(|(&bv, &av)| bv - av)
+                        .collect::<Vec<f32>>()
+                })
+                .collect();
+            for (d, g) in delta.iter().zip(&grad) {
+                assert!(
+                    (d - expect_lr * g).abs() <= 1e-6 * g.abs().max(1.0),
+                    "delta {d} vs lr·grad {}",
+                    expect_lr * g
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn meta_roundtrips_all_schedules_exactly() {
+        for sched in [
+            LrSchedule::Constant,
+            LrSchedule::Warmup { steps: 1000 },
+            LrSchedule::WarmupCosine {
+                warmup: (1 << 33) + 7, // exercises the bit encoding
+                total: (1 << 34) + 11,
+                floor: 0.05,
+            },
+            LrSchedule::Step {
+                every: 250,
+                gamma: 0.3,
+            },
+        ] {
+            let mut opt = ScheduledOpt::new(Box::new(Adam::new(0.02)), sched.clone());
+            opt.t = 12_345;
+            let meta = opt.meta();
+            assert!(meta.kind.starts_with("sched:adam"), "{}", meta.kind);
+            let back = optimizer_from_meta(&meta).unwrap();
+            assert_eq!(back.meta(), meta, "roundtrip for {sched:?}");
+        }
+        // Unknown inner kind and bad tag both fail loudly.
+        assert!(optimizer_from_meta(&OptimMeta {
+            kind: "sched:lion".into(),
+            hyper: vec![0.0, 0.1, 0.0, 0.0],
+        })
+        .is_err());
+        assert!(optimizer_from_meta(&OptimMeta {
+            kind: "sched:sgd".into(),
+            hyper: vec![9.0],
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn scheduled_checkpoint_resumes_mid_warmup_exactly() {
+        // Save mid-warmup, resume, and require bit-equal loss curves —
+        // the schedule counter and base rate must survive the round-trip.
+        let build = || {
+            let mut rng = Philox::seeded(33);
+            let mut m = Model::new();
+            m.add("fc1", Linear::random(6, 10, &mut rng)).unwrap();
+            m.add("fc2", Linear::random(10, 4, &mut rng)).unwrap();
+            m
+        };
+        let (x, y) = {
+            let mut rng = Philox::seeded(34);
+            let x = Mat::randn(16, 6, &mut rng);
+            let teacher = Linear::random(6, 4, &mut rng);
+            let y = teacher.forward(&x);
+            (x, y)
+        };
+        let ctx = ForwardCtx::new();
+        let sched = LrSchedule::WarmupCosine {
+            warmup: 6,
+            total: 20,
+            floor: 0.1,
+        };
+        let mut model = build();
+        let mut tr = Trainer::new(Box::new(ScheduledOpt::new(
+            Box::new(Adam::new(0.01)),
+            sched,
+        )));
+        for _ in 0..4 {
+            tr.train_step(&mut model, &x, &y, &ctx).unwrap();
+        }
+        let dir = std::env::temp_dir().join("panther_sched_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("warmup.ckpt");
+        tr.save_checkpoint(&model, "sched", &path).unwrap();
+
+        // Branch A: keep going in memory.
+        let mut model_a = model.clone_model();
+        let mut tr_a = tr;
+        let losses_a: Vec<f32> = (0..6)
+            .map(|_| tr_a.train_step(&mut model_a, &x, &y, &ctx).unwrap())
+            .collect();
+        // Branch B: resume from disk into a fresh architecture.
+        let mut model_b = build();
+        let mut tr_b = Trainer::resume(&mut model_b, &path).unwrap();
+        assert_eq!(tr_b.step, 4);
+        let losses_b: Vec<f32> = (0..6)
+            .map(|_| tr_b.train_step(&mut model_b, &x, &y, &ctx).unwrap())
+            .collect();
+        assert_eq!(losses_a, losses_b, "schedule must resume exactly");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -167,10 +167,23 @@ impl JsonReport {
     /// Record one measurement. `gflops` is `2·m·k·n / seconds / 1e9` for
     /// GEMM-shaped ops, `None` where a FLOP rate is meaningless.
     pub fn entry(&mut self, op: &str, shape: &str, ms: f64, gflops: Option<f64>) {
+        self.entry_with(op, shape, ms, &[]);
+        if let Some(g) = gflops {
+            if let Some(e) = self.entries.last_mut() {
+                e.set("gflops", g);
+            }
+        }
+    }
+
+    /// [`JsonReport::entry`] plus arbitrary extra numeric fields (e.g.
+    /// the serve bench's `rps`, admitted `workers`, memory bytes) —
+    /// measurements that aren't a milliseconds-or-GFLOP/s shape still
+    /// belong in the machine-readable trajectory.
+    pub fn entry_with(&mut self, op: &str, shape: &str, ms: f64, extra: &[(&str, f64)]) {
         let mut e = Json::obj();
         e.set("op", op).set("shape", shape).set("ms", ms);
-        if let Some(g) = gflops {
-            e.set("gflops", g);
+        for (k, v) in extra {
+            e.set(k, *v);
         }
         self.entries.push(e);
     }
@@ -301,14 +314,17 @@ mod tests {
         let mut r = JsonReport::new("unit", 4);
         r.entry("gemm", "64x64x64", 0.123, Some(4.26));
         r.entry("attention_fwd", "n=128 d=64 h=8", 1.5, None);
+        r.entry_with("throughput", "cap=8", 0.9, &[("rps", 1234.5), ("workers", 3.0)]);
         let doc = Json::parse(&r.to_json().to_pretty()).unwrap();
         assert_eq!(doc.get("bench").and_then(Json::as_str), Some("unit"));
         assert_eq!(doc.get("threads").and_then(Json::as_usize), Some(4));
         let entries = doc.get("entries").and_then(Json::as_arr).unwrap();
-        assert_eq!(entries.len(), 2);
+        assert_eq!(entries.len(), 3);
         assert_eq!(entries[0].get("op").and_then(Json::as_str), Some("gemm"));
         assert!(entries[0].get("gflops").and_then(Json::as_f64).unwrap() > 4.0);
         assert!(entries[1].get("gflops").is_none());
+        assert_eq!(entries[2].get("rps").and_then(Json::as_f64), Some(1234.5));
+        assert_eq!(entries[2].get("workers").and_then(Json::as_usize), Some(3));
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub mod log;
 pub mod memtrack;
 pub mod prop;
 pub mod rex;
+pub mod stats;
 pub mod threadpool;
 
 /// Poison-tolerant mutex lock: recover the guard when a panicking thread

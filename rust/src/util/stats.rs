@@ -1,0 +1,240 @@
+//! Shared serving-statistics primitives: batch-occupancy and latency
+//! histograms.
+//!
+//! These started life inside `coordinator::batcher` (occupancy) and the
+//! coordinator metrics (latency aggregates); the [`crate::serve`]
+//! subsystem needs the same shapes per tier, so the reusable pieces live
+//! here and both callers build on them instead of duplicating the
+//! counters. Everything is plain data — callers wrap in a `Mutex` (the
+//! same interior-mutability pattern `CoordinatorMetrics` uses).
+
+use std::time::Duration;
+
+/// Histogram over batch occupancy: how many executed batches carried
+/// 1, 2, …, capacity live rows. The mean occupancy is the ×-speedup a
+/// dynamic batcher actually realizes over one-request-per-execution.
+#[derive(Clone, Debug, Default)]
+pub struct OccupancyHist {
+    batches: u64,
+    requests: u64,
+    /// Index = rows used − 1.
+    buckets: Vec<u64>,
+}
+
+impl OccupancyHist {
+    /// Record one executed batch with `used` live rows out of `capacity`.
+    /// `used` must be in `1..=capacity`.
+    pub fn record(&mut self, used: usize, capacity: usize) {
+        assert!(
+            (1..=capacity).contains(&used),
+            "occupancy {used}/{capacity}"
+        );
+        self.batches += 1;
+        self.requests += used as u64;
+        if self.buckets.len() < capacity {
+            self.buckets.resize(capacity, 0);
+        }
+        self.buckets[used - 1] += 1;
+    }
+
+    /// Batches executed.
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    /// Live rows summed over all batches.
+    pub fn requests(&self) -> u64 {
+        self.requests
+    }
+
+    /// Mean live rows per executed batch (0 before the first batch).
+    pub fn mean(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+
+    /// The raw buckets (index = rows used − 1), sized to the largest
+    /// capacity seen.
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+}
+
+/// Bucket count of [`DurationHist`]: values 0–7 ns exact, then 4
+/// sub-buckets per power of two up to `u64::MAX` ns.
+const DURATION_BUCKETS: usize = 8 + 61 * 4;
+
+/// Log-bucketed latency histogram with ~19 % bucket resolution
+/// (4 sub-buckets per octave): O(1) record, O(buckets) quantiles, fixed
+/// memory — the shape a long-lived serving process needs (storing raw
+/// samples would grow without bound).
+#[derive(Clone, Debug)]
+pub struct DurationHist {
+    count: u64,
+    total: Duration,
+    max: Duration,
+    buckets: Box<[u64; DURATION_BUCKETS]>,
+}
+
+impl Default for DurationHist {
+    fn default() -> Self {
+        DurationHist {
+            count: 0,
+            total: Duration::ZERO,
+            max: Duration::ZERO,
+            buckets: Box::new([0; DURATION_BUCKETS]),
+        }
+    }
+}
+
+/// Bucket index for a nanosecond value: exact below 8, then
+/// `(exponent, top-2 fraction bits)`.
+fn bucket_of(ns: u64) -> usize {
+    if ns < 8 {
+        return ns as usize;
+    }
+    let e = 63 - ns.leading_zeros() as usize; // floor(log2), ≥ 3
+    let frac = ((ns >> (e - 2)) & 3) as usize;
+    8 + (e - 3) * 4 + frac
+}
+
+/// Lower edge (in ns) of bucket `idx` — what quantiles report.
+fn bucket_floor(idx: usize) -> u64 {
+    if idx < 8 {
+        return idx as u64;
+    }
+    let e = 3 + (idx - 8) / 4;
+    let frac = ((idx - 8) % 4) as u64;
+    (1u64 << e) + frac * (1u64 << (e - 2))
+}
+
+impl DurationHist {
+    /// Record one sample.
+    pub fn record(&mut self, d: Duration) {
+        self.count += 1;
+        self.total += d;
+        self.max = self.max.max(d);
+        let ns = u64::try_from(d.as_nanos()).unwrap_or(u64::MAX);
+        self.buckets[bucket_of(ns)] += 1;
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean over all samples (exact — tracked outside the buckets).
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            self.total / u32::try_from(self.count).unwrap_or(u32::MAX)
+        }
+    }
+
+    /// Largest sample (exact).
+    pub fn max(&self) -> Duration {
+        self.max
+    }
+
+    /// Approximate quantile `q ∈ [0, 1]`: the lower edge of the first
+    /// bucket whose cumulative count reaches `q·count` (within the ~19 %
+    /// bucket resolution). Zero before the first sample.
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (idx, &b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= target {
+                return Duration::from_nanos(bucket_floor(idx));
+            }
+        }
+        self.max
+    }
+
+    /// Median (approximate; see [`DurationHist::quantile`]).
+    pub fn p50(&self) -> Duration {
+        self.quantile(0.50)
+    }
+
+    /// 99th percentile (approximate; see [`DurationHist::quantile`]).
+    pub fn p99(&self) -> Duration {
+        self.quantile(0.99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_records_and_means() {
+        let mut h = OccupancyHist::default();
+        assert_eq!(h.mean(), 0.0);
+        h.record(1, 4);
+        h.record(4, 4);
+        h.record(4, 4);
+        assert_eq!(h.batches(), 3);
+        assert_eq!(h.requests(), 9);
+        assert!((h.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(h.buckets(), &[1, 0, 0, 2]);
+        // A larger capacity grows the bucket vector in place.
+        h.record(6, 8);
+        assert_eq!(h.buckets().len(), 8);
+        assert_eq!(h.buckets()[5], 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn occupancy_rejects_zero_used() {
+        OccupancyHist::default().record(0, 4);
+    }
+
+    #[test]
+    fn duration_buckets_are_monotone_and_invertible() {
+        // Probe values across every exponent (plus sub-bucket offsets and
+        // edge cases), in ascending ns order: bucket indices must be
+        // non-decreasing and each bucket's floor must not exceed its
+        // members.
+        let mut vals: Vec<u64> = vec![1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 1_000_000, u64::MAX];
+        for e in 0..60u32 {
+            for off in [0u64, 1, 3] {
+                vals.push((1u64 << e) + off * (1u64 << e.saturating_sub(2)));
+            }
+        }
+        vals.sort_unstable();
+        let mut prev = 0;
+        for &ns in &vals {
+            let idx = bucket_of(ns);
+            assert!(idx >= prev, "bucket order at {ns}");
+            assert!(idx < DURATION_BUCKETS);
+            // The floor of a value's bucket never exceeds the value.
+            assert!(bucket_floor(idx) <= ns, "floor({idx}) vs {ns}");
+            prev = idx;
+        }
+    }
+
+    #[test]
+    fn duration_quantiles_order_and_bound() {
+        let mut h = DurationHist::default();
+        assert_eq!(h.p50(), Duration::ZERO);
+        for ms in [1u64, 2, 3, 4, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.max(), Duration::from_millis(100));
+        let (p50, p99) = (h.p50(), h.p99());
+        assert!(p50 <= p99, "{p50:?} vs {p99:?}");
+        // p50 lands in the bucket of the 3 ms sample: within 19 % below.
+        assert!(p50 >= Duration::from_micros(2400) && p50 <= Duration::from_millis(3));
+        // p99 lands in the 100 ms bucket.
+        assert!(p99 >= Duration::from_millis(80) && p99 <= Duration::from_millis(100));
+        assert!(h.mean() >= Duration::from_millis(22));
+    }
+}

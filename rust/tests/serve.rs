@@ -1,0 +1,428 @@
+//! Integration tests for `panther::serve`: the batched-equals-sequential
+//! oracle, concurrent-client stress, padding hygiene, drain-on-shutdown
+//! semantics, and the tiered dense/sketched routing path.
+//!
+//! The oracle tests run the strong contract: with batch caps below the
+//! GEMM microkernel height (8), every served result must equal the plain
+//! single-row `Module::forward` of its request row **bit for bit**, for
+//! any arrival order, occupancy, and padding — including the ragged final
+//! batch case.
+
+use panther::linalg::Mat;
+use panther::nn::{Activation, ForwardCtx, LayerSelector, Linear, Model, SketchPlan};
+use panther::rng::Philox;
+use panther::serve::{ModelServer, ServeError, TierConfig};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A nonlinear row-independent stack: Linear → GELU → Linear, with a
+/// nonzero bias so padding rows produce *nonzero* outputs — if a padded
+/// row ever leaked into a live row, the bitwise oracle would see it.
+fn mlp(seed: u64, d_in: usize, d_out: usize) -> Model {
+    let mut rng = Philox::seeded(seed);
+    let mut m = Model::new();
+    let mut fc1 = Linear::random(d_in, 12, &mut rng);
+    for b in fc1.bias.iter_mut() {
+        *b = 0.3;
+    }
+    m.add("fc1", fc1).unwrap();
+    m.add("act", Activation::gelu()).unwrap();
+    let mut fc2 = Linear::random(12, d_out, &mut rng);
+    for b in fc2.bias.iter_mut() {
+        *b = -0.2;
+    }
+    m.add("fc2", fc2).unwrap();
+    m
+}
+
+/// The sketched variant of the same stack.
+fn sketched(seed: u64, d_in: usize, d_out: usize) -> Model {
+    let mut m = mlp(seed, d_in, d_out);
+    SketchPlan::new()
+        .select(LayerSelector::by_type("Linear"))
+        .with(1, 4)
+        .seed(17)
+        .apply(&mut m)
+        .unwrap();
+    m
+}
+
+fn request_rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| Mat::randn(1, d, &mut Philox::seeded(seed + i as u64)).into_vec())
+        .collect()
+}
+
+/// The oracle baseline: the unbatched single-row forward.
+fn solo_forward(model: &Model, row: &[f32]) -> Vec<f32> {
+    let ctx = ForwardCtx::new();
+    model
+        .forward(&Mat::from_vec(1, row.len(), row.to_vec()), &ctx)
+        .unwrap()
+        .row(0)
+        .to_vec()
+}
+
+#[test]
+fn batched_results_bit_identical_to_single_row_forward() {
+    // Caps 1 and 4, concurrent submission (arbitrary arrival order and
+    // batch composition), plus a ragged final batch — every reply must be
+    // the exact single-row forward.
+    let d = 10;
+    for (cap, n_requests) in [(1usize, 5usize), (4, 12), (4, 6 /* ragged */)] {
+        let model = mlp(42, d, 5);
+        let expected: Vec<Vec<f32>> = request_rows(n_requests, d, 900)
+            .iter()
+            .map(|r| solo_forward(&model, r))
+            .collect();
+        let mut server = ModelServer::new();
+        let info = server
+            .register_tier(
+                "t",
+                model,
+                d,
+                TierConfig {
+                    max_batch: cap,
+                    max_wait: Duration::from_millis(2),
+                    workers: 2,
+                    ..TierConfig::default()
+                },
+            )
+            .unwrap();
+        assert!(
+            info.bit_identical_to_unbatched,
+            "cap {cap} must stay under the packed-kernel boundary"
+        );
+        let rows = request_rows(n_requests, d, 900);
+        let handles: Vec<_> = rows
+            .into_iter()
+            .map(|row| {
+                let h = server.handle();
+                std::thread::spawn(move || h.infer("t", &row).unwrap())
+            })
+            .collect();
+        for (want, got) in expected.iter().zip(handles.into_iter().map(|t| t.join().unwrap())) {
+            assert_eq!(&got, want, "cap {cap}: served row must be bit-exact");
+        }
+        server.shutdown();
+    }
+}
+
+#[test]
+fn sketched_tier_is_bit_identical_too() {
+    // The compressed tier honors the same contract — the drop-in claim,
+    // end to end through the server.
+    let d = 10;
+    let model = sketched(43, d, 5);
+    let rows = request_rows(8, d, 1700);
+    let expected: Vec<Vec<f32>> = rows.iter().map(|r| solo_forward(&model, r)).collect();
+    let mut server = ModelServer::new();
+    server
+        .register_tier(
+            "sk",
+            model,
+            d,
+            TierConfig {
+                max_batch: 4,
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    let h = server.handle();
+    for (row, want) in rows.iter().zip(&expected) {
+        assert_eq!(&h.infer("sk", row).unwrap(), want);
+    }
+}
+
+#[test]
+fn concurrent_client_stress_all_replies_correct_and_accounted() {
+    // N client threads × M requests each, two tiers competing for the
+    // same GEMM pool: every reply correct (bitwise vs the oracle), every
+    // request accounted exactly once in the tier metrics.
+    let d = 16;
+    let (n_threads, m_requests) = (8usize, 25usize);
+    let dense = mlp(44, d, 6);
+    let sk = sketched(44, d, 6);
+    let mut server = ModelServer::new();
+    let cfg = TierConfig {
+        max_batch: 4,
+        max_wait: Duration::from_micros(500),
+        queue_cap: 512,
+        workers: 3,
+        ..TierConfig::default()
+    };
+    server.register_tier("dense", dense, d, cfg.clone()).unwrap();
+    server.register_tier("sketched", sk, d, cfg).unwrap();
+    // Oracles, recomputed on fresh copies (the server owns its models).
+    let oracle_dense = Arc::new(mlp(44, d, 6));
+    let oracle_sk = Arc::new(sketched(44, d, 6));
+    let handles: Vec<_> = (0..n_threads)
+        .map(|t| {
+            let h = server.handle();
+            let (od, os) = (Arc::clone(&oracle_dense), Arc::clone(&oracle_sk));
+            std::thread::spawn(move || {
+                for i in 0..m_requests {
+                    let seed = 3000 + (t * m_requests + i) as u64;
+                    let row = Mat::randn(1, d, &mut Philox::seeded(seed)).into_vec();
+                    let (tier, oracle) = if (t + i) % 2 == 0 {
+                        ("dense", &od)
+                    } else {
+                        ("sketched", &os)
+                    };
+                    let got = h.infer(tier, &row).unwrap();
+                    assert_eq!(got, solo_forward(oracle, &row), "tier {tier} seed {seed}");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let metrics = server.metrics();
+    let total = n_threads as u64 * m_requests as u64;
+    assert_eq!(metrics.total_requests(), total, "every request accounted");
+    for tier in ["dense", "sketched"] {
+        let tm = metrics.tier(tier).unwrap();
+        assert_eq!(tm.requests(), total / 2);
+        assert_eq!(tm.errors(), 0);
+        assert_eq!(tm.rejected(), 0);
+        assert_eq!(tm.queue_depth(), 0, "queue fully drained");
+        // Histogram buckets sum to the batch count.
+        let hist = tm.occupancy_buckets();
+        assert_eq!(hist.iter().sum::<u64>(), tm.batches());
+        assert!(tm.latency_p50() <= tm.latency_p99());
+        assert!(tm.latency_p99() > Duration::ZERO);
+    }
+}
+
+#[test]
+fn padding_rows_never_leak_into_real_rows() {
+    // A single request in a cap-4 batch rides with three all-zero padding
+    // rows whose outputs are nonzero (bias ≠ 0) — the reply must still be
+    // the solo result, and the batch must be recorded at occupancy 1.
+    let d = 10;
+    let model = mlp(45, d, 5);
+    let row = request_rows(1, d, 2500).pop().unwrap();
+    let want = solo_forward(&model, &row);
+    // Guard: padding rows really do produce nonzero outputs (if they were
+    // zero, this test could not detect a leak).
+    let zeros = vec![0.0; d];
+    let pad_out = solo_forward(&model, &zeros);
+    assert!(pad_out.iter().any(|&v| v != 0.0), "bias must move padding");
+    let mut server = ModelServer::new();
+    server
+        .register_tier(
+            "t",
+            model,
+            d,
+            TierConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(100),
+                workers: 1,
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    let got = server.handle().infer("t", &row).unwrap();
+    assert_eq!(got, want);
+    let tm = server.metrics().tier("t").unwrap();
+    assert_eq!(tm.batches(), 1);
+    assert_eq!(tm.occupancy_buckets()[0], 1, "solo request → occupancy 1");
+}
+
+#[test]
+fn shutdown_drains_queued_requests_then_rejects() {
+    // Queue 12 requests asynchronously, shut down immediately: every
+    // already-admitted request still gets a correct answer (drain), and
+    // submissions after shutdown get the typed error.
+    let d = 10;
+    let model = mlp(46, d, 5);
+    let rows = request_rows(12, d, 4000);
+    let expected: Vec<Vec<f32>> = rows.iter().map(|r| solo_forward(&model, r)).collect();
+    let mut server = ModelServer::new();
+    server
+        .register_tier(
+            "t",
+            model,
+            d,
+            TierConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 64,
+                workers: 1,
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    let h = server.handle();
+    let pending: Vec<_> = rows
+        .iter()
+        .map(|row| h.submit("t", row).unwrap())
+        .collect();
+    server.shutdown(); // blocks until workers drained + joined
+    for (p, want) in pending.into_iter().zip(&expected) {
+        assert_eq!(&p.wait().unwrap(), want, "queued request answered on drain");
+    }
+    assert_eq!(h.infer("t", &rows[0]), Err(ServeError::ShuttingDown));
+    assert_eq!(
+        h.try_infer("t", &rows[0]),
+        Err(ServeError::ShuttingDown)
+    );
+}
+
+#[test]
+fn worker_panic_is_contained_and_tier_keeps_serving() {
+    // A forward that panics on a poisoned input: the batch's caller gets
+    // a typed Exec error (not a hang), and the worker survives to serve
+    // later requests — the same containment policy as the GEMM pool.
+    struct Trap;
+    impl panther::nn::Module for Trap {
+        fn type_name(&self) -> &'static str {
+            "Trap"
+        }
+        fn forward(&self, x: &Mat, _ctx: &ForwardCtx) -> panther::Result<Mat> {
+            if x.data().iter().any(|&v| v == 666.0) {
+                panic!("trap sprung");
+            }
+            Ok(x.clone())
+        }
+        fn params(&self) -> Vec<(String, panther::nn::ParamRef<'_>)> {
+            Vec::new()
+        }
+        fn params_mut(&mut self) -> Vec<(String, panther::nn::ParamMut<'_>)> {
+            Vec::new()
+        }
+        fn boxed_clone(&self) -> Box<dyn panther::nn::Module> {
+            Box::new(Trap)
+        }
+    }
+    let mut m = Model::new();
+    m.add("trap", Trap).unwrap();
+    let mut server = ModelServer::new();
+    server
+        .register_tier(
+            "t",
+            m,
+            4,
+            TierConfig {
+                max_batch: 1,
+                workers: 1,
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    let h = server.handle();
+    assert_eq!(
+        h.infer("t", &[1.0, 2.0, 3.0, 4.0]).unwrap(),
+        vec![1.0, 2.0, 3.0, 4.0]
+    );
+    let err = h.infer("t", &[666.0, 0.0, 0.0, 0.0]).unwrap_err();
+    assert!(matches!(err, ServeError::Exec(_)), "{err}");
+    // The worker survived the panic and keeps serving.
+    assert_eq!(
+        h.infer("t", &[5.0, 0.0, 0.0, 1.0]).unwrap(),
+        vec![5.0, 0.0, 0.0, 1.0]
+    );
+    let tm = server.metrics().tier("t").unwrap();
+    assert_eq!(tm.errors(), 1);
+    assert_eq!(tm.requests(), 3);
+}
+
+#[test]
+fn row_coupled_models_are_rejected_at_registration() {
+    use panther::nn::{AttnWeights, MultiHeadAttention};
+    let mut rng = Philox::seeded(47);
+    let mut m = Model::new();
+    m.add(
+        "attn",
+        MultiHeadAttention::new(AttnWeights::random(16, 4, &mut rng)),
+    )
+    .unwrap();
+    let mut server = ModelServer::new();
+    let err = server
+        .register_tier("attn", m, 16, TierConfig::default())
+        .unwrap_err();
+    assert!(matches!(err, ServeError::RowCoupled(_)), "{err}");
+}
+
+#[test]
+fn tier_head_group_knob_is_applied_and_results_unchanged() {
+    use panther::nn::{AttnWeights, MultiHeadAttention};
+    // An attention model served at cap 1 (each request is a whole
+    // single-row "sequence"): the tier's head_group knob must lower the
+    // probe-measured peak without changing results.
+    let d = 32;
+    let mut rng = Philox::seeded(48);
+    let w = AttnWeights::random(d, 8, &mut rng);
+    let build = || {
+        let mut m = Model::new();
+        m.add("attn", MultiHeadAttention::new(w.clone())).unwrap();
+        m
+    };
+    let base_cfg = TierConfig {
+        max_batch: 1,
+        workers: 1,
+        ..TierConfig::default()
+    };
+    let mut server = ModelServer::new();
+    let info_full = server
+        .register_tier("full", build(), d, base_cfg.clone())
+        .unwrap();
+    let info_chunked = server
+        .register_tier(
+            "chunked",
+            build(),
+            d,
+            TierConfig {
+                head_group: Some(1),
+                ..base_cfg
+            },
+        )
+        .unwrap();
+    assert!(
+        info_chunked.peak_batch_bytes < info_full.peak_batch_bytes,
+        "head grouping must shrink the probed peak ({} vs {})",
+        info_chunked.peak_batch_bytes,
+        info_full.peak_batch_bytes
+    );
+    let row = request_rows(1, d, 5000).pop().unwrap();
+    let h = server.handle();
+    assert_eq!(
+        h.infer("full", &row).unwrap(),
+        h.infer("chunked", &row).unwrap(),
+        "chunking is bitwise invisible"
+    );
+}
+
+#[test]
+fn sketched_tier_fits_more_workers_in_the_same_budget() {
+    // The capacity story in one assert: at a fixed memory budget, the
+    // compressed tier admits at least as many workers as the dense tier —
+    // and strictly more when the budget pinches the dense one.
+    let d = 64;
+    let dense = mlp(49, d, 64);
+    let sk = sketched(49, d, 64);
+    let mut server = ModelServer::new();
+    // Learn the dense footprint, then budget it down to ~1 worker.
+    let free = server
+        .register_tier("probe", mlp(49, d, 64), d, TierConfig::default())
+        .unwrap();
+    let budget = free.weight_bytes + 2 * free.peak_batch_bytes;
+    let cfg = |b| TierConfig {
+        workers: 8,
+        mem_budget: Some(b),
+        ..TierConfig::default()
+    };
+    let dense_info = server.register_tier("dense", dense, d, cfg(budget)).unwrap();
+    let sk_info = server.register_tier("sk", sk, d, cfg(budget)).unwrap();
+    assert!(
+        sk_info.weight_bytes < dense_info.weight_bytes,
+        "sketching must shrink the weights"
+    );
+    assert!(
+        sk_info.workers > dense_info.workers,
+        "smaller tier must admit more workers ({} vs {})",
+        sk_info.workers,
+        dense_info.workers
+    );
+}
