@@ -16,14 +16,24 @@
 //!   compressed tier's smaller footprint admits more workers — the
 //!   paper's ~75 % memory saving expressed as serving capacity — and both
 //!   tiers' requests/s are measured under the same client load.
+//! - **sequence tiers**: a dense-attention stack and a Performer stack
+//!   with the *same* projection weights register as sequence tiers under
+//!   one memory budget; clients submit variable-length sequences through
+//!   the continuous batcher. Reported per tier: tokens/s and the
+//!   admission cap `max_seq_len` the budget fit bought — the Performer's
+//!   linear activation growth admits strictly longer sequences than the
+//!   dense tier's quadratic one.
 //!
 //! `--quick` shrinks request counts for the CI smoke lane;
 //! `PANTHER_BENCH_DIR` redirects the JSON output.
 
 use panther::linalg::{gemm_threads, Mat};
-use panther::nn::{Activation, LayerSelector, Linear, Model, SketchPlan};
+use panther::nn::{
+    Activation, AttnWeights, KernelKind, LayerSelector, Linear, Model, MultiHeadAttention,
+    RandMultiHeadAttention, SketchPlan,
+};
 use panther::rng::Philox;
-use panther::serve::{ModelServer, TierConfig};
+use panther::serve::{ModelServer, SeqTierConfig, TierConfig};
 use panther::util::bench::{JsonReport, Table};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -31,6 +41,8 @@ use std::time::{Duration, Instant};
 const D_IN: usize = 96;
 const D_HIDDEN: usize = 128;
 const D_OUT: usize = 32;
+/// Embedding width of the sequence-tier attention stacks.
+const D_SEQ: usize = 32;
 
 fn dense_model(seed: u64) -> Model {
     let mut rng = Philox::seeded(seed);
@@ -79,6 +91,48 @@ fn hammer(server: &ModelServer, tier: &str, clients: usize, per_client: usize) -
         h.join().unwrap();
     }
     (t0.elapsed(), (clients * per_client) as u64)
+}
+
+/// Closed-loop variable-length sequence load: `clients` threads each
+/// submit `per_client` sequences with lengths cycling over a mixed
+/// pattern capped by the tier's admitted maximum; returns (wall, total
+/// tokens executed).
+fn hammer_seq(
+    server: &ModelServer,
+    tier: &str,
+    clients: usize,
+    per_client: usize,
+    max_len: usize,
+) -> (Duration, u64) {
+    // Mixed short/medium/long lengths, clamped to the admission cap (the
+    // cap itself is part of the workload: longer sequences are exactly
+    // what the Performer tier exists to admit).
+    let pattern: Vec<usize> = [8usize, 24, 64, 16, 128, 48]
+        .iter()
+        .map(|&l| l.min(max_len).max(1))
+        .collect();
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let h = server.handle();
+            let tier = tier.to_string();
+            let pattern = pattern.clone();
+            std::thread::spawn(move || {
+                let mut tokens = 0u64;
+                for i in 0..per_client {
+                    let len = pattern[(c + i) % pattern.len()];
+                    let seed = 9000 + (c * per_client + i) as u64;
+                    let x = Mat::randn(len, D_SEQ, &mut Philox::seeded(seed)).scale(0.5);
+                    let y = h.infer_seq(&tier, &x).expect("seq request failed");
+                    assert_eq!(y.rows(), len);
+                    tokens += len as u64;
+                }
+                tokens
+            })
+        })
+        .collect();
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    (t0.elapsed(), total)
 }
 
 fn main() {
@@ -186,6 +240,71 @@ fn main() {
     }
     server.shutdown();
     println!("(shared budget: {})", panther::util::human_bytes(budget));
+    println!("{}", table.render());
+
+    // --- sequence tiers: tokens/s and admitted length under one budget ------
+    // Same projection weights in both stacks; one budget. The dense
+    // tier's peak grows ~quadratically in sequence length, the
+    // Performer's linearly — the fit turns that into different admitted
+    // maximum lengths, and the variable-length workload into different
+    // token throughput.
+    let seq_budget: u64 = 5_000_000;
+    let attn_w = AttnWeights::random(D_SEQ, 4, &mut Philox::seeded(11));
+    let dense_seq = {
+        let mut m = Model::new();
+        m.add("attn", MultiHeadAttention::new(attn_w.clone())).unwrap();
+        m
+    };
+    let perf_seq = {
+        let mut m = Model::new();
+        m.add(
+            "attn",
+            RandMultiHeadAttention::new(attn_w.clone(), 32, KernelKind::Softmax, 13),
+        )
+        .unwrap();
+        m
+    };
+    let seq_cfg = SeqTierConfig {
+        max_tokens: 4096,
+        max_wait: Duration::from_micros(200),
+        queue_cap: 256,
+        workers: 2,
+        mem_budget: Some(seq_budget),
+        probe_len: 32,
+        ..SeqTierConfig::default()
+    };
+    let mut table = Table::new(&["tier", "max seq len", "tokens/s", "seqs", "mean step occ"]);
+    let mut server = ModelServer::new();
+    let seq_clients = if quick { 4 } else { 8 };
+    let seqs_per_client = if quick { 6 } else { 40 };
+    for (tier, model) in [("attn_dense", dense_seq), ("attn_performer", perf_seq)] {
+        let info = server
+            .register_seq_tier(tier, model, D_SEQ, seq_cfg.clone())
+            .expect("register seq tier");
+        let (wall, tokens) = hammer_seq(&server, tier, seq_clients, seqs_per_client, info.max_seq_len);
+        let tm = server.metrics().tier(tier).unwrap();
+        let tps = tokens as f64 / wall.as_secs_f64();
+        table.row(&[
+            tier.into(),
+            info.max_seq_len.to_string(),
+            format!("{tps:.0}"),
+            (seq_clients * seqs_per_client).to_string(),
+            format!("{:.2}", tm.mean_occupancy()),
+        ]);
+        report.entry_with(
+            "seq_tier",
+            &format!("{tier} budget={seq_budget}B"),
+            wall.as_secs_f64() * 1e3,
+            &[
+                ("tokens_per_s", tps),
+                ("max_seq_len", info.max_seq_len as f64),
+                ("weight_bytes", info.weight_bytes as f64),
+                ("seq_stable", if info.seq_stable { 1.0 } else { 0.0 }),
+            ],
+        );
+    }
+    server.shutdown();
+    println!("(sequence budget: {})", panther::util::human_bytes(seq_budget));
     println!("{}", table.render());
 
     match report.write() {

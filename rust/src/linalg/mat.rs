@@ -397,13 +397,31 @@ pub struct MatMut<'a> {
 unsafe impl Send for MatMut<'_> {}
 unsafe impl Sync for MatMut<'_> {}
 
-impl MatMut<'_> {
+impl<'a> MatMut<'a> {
     pub fn rows(&self) -> usize {
         self.rows
     }
 
     pub fn cols(&self) -> usize {
         self.cols
+    }
+
+    /// Narrow the view to rows `[r0, r1)` — free (offsets the base). Takes
+    /// the view by value so element-disjoint ownership is preserved: the
+    /// narrowed view *replaces* its parent rather than aliasing it. This is
+    /// how the sequence-aware attention path writes one sequence's row block
+    /// of a per-head column band ([`Mat::col_bands_mut`]) per GEMM item.
+    pub fn row_range(mut self, r0: usize, r1: usize) -> MatMut<'a> {
+        assert!(r0 <= r1 && r1 <= self.rows, "row_range out of bounds");
+        if r1 > r0 && r0 > 0 {
+            // SAFETY: the narrowed view is non-empty, so row r0 exists and
+            // the offset stays inside the owned storage. (For an empty
+            // narrowing no offset is formed — the base pointer of a banded
+            // view plus r0·rs could land past the allocation.)
+            self.ptr = unsafe { self.ptr.add(r0 * self.rs) };
+        }
+        self.rows = r1 - r0;
+        self
     }
 
     /// Mutable slice of row `i`.
@@ -532,5 +550,33 @@ mod tests {
         }
         assert_eq!(a.row(0), &[1.0, 1.0, 20.0, 20.0, 3.0, 3.0]);
         assert_eq!(a.row(1), &[1.0, 1.0, 20.0, 20.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn mat_mut_row_range_narrows_bands() {
+        let mut a = Mat::zeros(4, 6);
+        {
+            let bands = a.col_bands_mut(2);
+            for (bi, band) in bands.into_iter().enumerate() {
+                // Write only rows [1, 3) of each band.
+                let mut mid = band.row_range(1, 3);
+                assert_eq!((mid.rows(), mid.cols()), (2, 2));
+                mid.fill(bi as f32 + 1.0);
+            }
+        }
+        for i in 0..4 {
+            let expect = if (1..3).contains(&i) {
+                vec![1.0, 1.0, 2.0, 2.0, 3.0, 3.0]
+            } else {
+                vec![0.0; 6]
+            };
+            assert_eq!(a.row(i), &expect[..], "row {i}");
+        }
+        // Empty narrowing at the end of a band is well-formed.
+        let bands = a.col_bands_mut(2);
+        for band in bands {
+            let empty = band.row_range(4, 4);
+            assert_eq!(empty.rows(), 0);
+        }
     }
 }

@@ -22,6 +22,26 @@
 //! inference forwards and backward's transients allocate nothing on the
 //! hot path (training forwards detach their buffers into the activation
 //! cache, which owns — and eventually frees — them).
+//!
+//! **Both variants are sequence-aware.** When the [`ForwardCtx`] carries a
+//! [`SeqBatch`](super::module::SeqBatch), every cross-row product is
+//! restricted to one sequence's rows via exact-length `row_range` views:
+//! a softmax row only ever sees its own sequence's keys, and the FAVOR+
+//! `φ(K)ᵀV`/normalizer sums only run over valid positions — pad rows get
+//! *structurally* zero attention weight (no −∞ biasing, no epsilon leak)
+//! and zero output. With no `SeqBatch` (or one full-length sequence) the
+//! per-sequence views span every row and the exact same batched products
+//! execute, so the masked path is bitwise-identical to the unmasked one.
+//!
+//! **The dense training backward is tiled and recomputing.** The forward
+//! caches only per-row softmax statistics (max, exp-sum) instead of the
+//! `h·n×n` probability tensor; backward reconstructs probabilities one
+//! `n×T` key tile at a time from cached Q/K and the stats, using the
+//! row-dot identity `Σ_j dP_ij·P_ij = Σ_c dO_ic·O_ic` (valid because
+//! `O = P·V`) to finish the softmax backward without a second pass. Peak
+//! backward activation is O(h·n·T), not O(h·n²) — same asymptotics as
+//! FlashAttention's backward, built from the same `gemm_batch` stages as
+//! the forward.
 
 use super::module::{
     Cache, ForwardCtx, GradStore, Module, ParamMut, ParamRef, Workspace, WsMat,
@@ -30,6 +50,29 @@ use super::plan::Sketchable;
 use crate::linalg::{gemm, gemm_batch, matmul, Mat, MatMut, MatRef};
 use crate::rng::{Philox, Rng};
 use crate::util::memtrack::{MemError, MemGuard};
+
+/// Default key-tile width of the dense attention backward (see
+/// [`MultiHeadAttention::with_backward_tile`]): matches the GEMM's KC
+/// blocking so a probability tile's K panel stays L2-resident.
+pub const ATTN_BWD_TILE: usize = 64;
+
+/// Zero the rows a sequence batch leaves uncovered (padding rows), so pad
+/// positions of an attention output are exactly zero. Segments arrive
+/// sorted and disjoint ([`super::module::SeqBatch::segments`]); with full
+/// coverage this touches nothing.
+fn zero_pad_rows(out: &mut Mat, segs: &[(usize, usize)]) {
+    let n = out.rows();
+    let mut next = 0usize;
+    for &(off, len) in segs {
+        for r in next..off {
+            out.row_mut(r).fill(0.0);
+        }
+        next = off + len;
+    }
+    for r in next..n {
+        out.row_mut(r).fill(0.0);
+    }
+}
 
 /// Shared backward tail of both attention variants: given per-head input
 /// gradients already assembled into `dq`/`dk`/`dv` (n×d, in *raw
@@ -143,21 +186,31 @@ pub struct MultiHeadAttention {
     /// Head-group chunk size for the inference forward (0 = all heads at
     /// once) — see [`Module::set_head_group`].
     head_group: usize,
+    /// Key-tile width of the recomputing backward (0 = [`ATTN_BWD_TILE`])
+    /// — see [`MultiHeadAttention::with_backward_tile`].
+    bwd_tile: usize,
     grads: GradStore,
 }
 
 /// Activation cache of [`MultiHeadAttention::forward_train`]: input, raw
-/// projections, per-head softmax rows, and the pre-`Wo` head concat —
-/// the same `h·n·n` score memory the forward materializes.
+/// projections, per-head softmax *row statistics*, and the pre-`Wo` head
+/// concat. The `h·n×n` probability tensor is deliberately absent — the
+/// tiled backward reconstructs each probability tile from Q/K and the
+/// stats, so the cache is O(h·n), not O(h·n²).
 struct MhaCache {
     x: Mat,
     q: Mat,
     k: Mat,
     v: Mat,
-    /// Per-head softmax probability matrices (n×n).
-    probs: Vec<Mat>,
+    /// Per-head, per-row softmax statistics `(max, exp_sum)`:
+    /// `stats[head][row]`. Rows are absolute (pad rows hold zeros and are
+    /// never read).
+    stats: Vec<Vec<(f32, f32)>>,
     /// Head outputs concatenated (n×d), before the output projection.
     concat: Mat,
+    /// The sequence segments the forward ran under (single full-length
+    /// segment when no [`super::module::SeqBatch`] was installed).
+    segs: Vec<(usize, usize)>,
     /// The forward's allocation guards — moved here instead of released,
     /// so the cached activations stay charged against the tracker for
     /// the cache's lifetime.
@@ -169,6 +222,7 @@ impl MultiHeadAttention {
         MultiHeadAttention {
             weights,
             head_group: 0,
+            bwd_tile: 0,
             grads: GradStore::default(),
         }
     }
@@ -177,6 +231,26 @@ impl MultiHeadAttention {
     pub fn with_head_group(mut self, heads: usize) -> Self {
         self.head_group = heads;
         self
+    }
+
+    /// Set the key-tile width `T` of the recomputing backward (0 restores
+    /// [`ATTN_BWD_TILE`]). Peak backward activation scales with `T`
+    /// (O(h·n·T) probability/score tiles), not with n² — smaller tiles
+    /// trade GEMM batching breadth for a lower training peak. Tiling
+    /// never changes which gradient is computed, only how many key
+    /// columns are in flight at once.
+    pub fn with_backward_tile(mut self, tile: usize) -> Self {
+        self.bwd_tile = tile;
+        self
+    }
+
+    /// Effective backward key-tile width.
+    fn backward_tile(&self) -> usize {
+        if self.bwd_tile == 0 {
+            ATTN_BWD_TILE
+        } else {
+            self.bwd_tile
+        }
     }
 
     /// Effective chunk size (shared definition: 0 → all heads, else
@@ -206,6 +280,8 @@ impl MultiHeadAttention {
         // Projections (each n×d). On the inference path the guards release
         // on return; a training forward moves them into the cache so the
         // retained activations stay accounted until backward.
+        let segs = ctx.segments_for(n);
+        let max_len = segs.iter().map(|&(_, l)| l).max().unwrap_or(0);
         let gq = mem.alloc((n * d * 4) as u64)?;
         let mut q = ws.take(n, d);
         gemm(1.0, x, &w.wq, 0.0, &mut q);
@@ -226,31 +302,57 @@ impl MultiHeadAttention {
         // path, trading some batching breadth for an (h/group)× smaller
         // peak. Chunking never changes results: each head's products and
         // softmax are computed independently either way. Training
-        // forwards always run un-chunked — the cache must retain every
-        // head's probabilities regardless, so chunking would not lower
-        // the peak.
-        let group = if want_cache { h } else { self.head_group_size() };
-        let gscores = mem.alloc((group * n * n * 4) as u64)?;
-        let mut probs: Vec<Mat> = Vec::new();
-        {
-            let mut bands = out.col_bands_mut(dh);
+        // forwards run one head at a time: since the cache retains only
+        // O(n) row statistics (not the probabilities), chunking now
+        // *does* bound the training-forward peak to one n×n block.
+        //
+        // With a sequence batch, every cross-row product below runs per
+        // segment over exact-length row views — scores are len×len, so a
+        // row's softmax never sees another sequence's keys and pad
+        // positions carry exactly zero weight. One full-length segment
+        // makes every view a no-op re-description of the full matrices:
+        // the identical batched products execute, bitwise.
+        let group = if want_cache { 1 } else { self.head_group_size() };
+        let gscores = mem.alloc((group * max_len * max_len * 4) as u64)?;
+        let mut stats: Vec<Vec<(f32, f32)>> = if want_cache {
+            vec![vec![(0f32, 0f32); n]; h]
+        } else {
+            Vec::new()
+        };
+        let gstats = if want_cache {
+            Some(mem.alloc((h * n * 8) as u64)?)
+        } else {
+            None
+        };
+        zero_pad_rows(&mut out, &segs);
+        for &(off, len) in &segs {
             let mut h0 = 0;
             while h0 < h {
                 let h1 = (h0 + group).min(h);
-                let mut scores: Vec<WsMat> = (h0..h1).map(|_| ws.take(n, n)).collect();
+                let mut scores: Vec<WsMat> = (h0..h1).map(|_| ws.take(len, len)).collect();
                 {
                     let a: Vec<MatRef> = (h0..h1)
-                        .map(|i| q.view().col_range(i * dh, (i + 1) * dh))
+                        .map(|i| {
+                            q.view()
+                                .row_range(off, off + len)
+                                .col_range(i * dh, (i + 1) * dh)
+                        })
                         .collect();
                     let b: Vec<MatRef> = (h0..h1)
-                        .map(|i| k.view().col_range(i * dh, (i + 1) * dh).t())
+                        .map(|i| {
+                            k.view()
+                                .row_range(off, off + len)
+                                .col_range(i * dh, (i + 1) * dh)
+                                .t()
+                        })
                         .collect();
                     let mut c: Vec<MatMut> = scores.iter_mut().map(|s| s.view_mut()).collect();
                     gemm_batch(scale, &a, &b, 0.0, &mut c);
                 }
-                // Row softmax per head.
-                for s in scores.iter_mut() {
-                    for i in 0..n {
+                // Row softmax per head, recording (max, exp-sum) per row
+                // for the recomputing backward.
+                for (idx, s) in scores.iter_mut().enumerate() {
+                    for i in 0..len {
                         let row = s.row_mut(i);
                         let mut mx = f32::NEG_INFINITY;
                         for v in row.iter() {
@@ -264,34 +366,49 @@ impl MultiHeadAttention {
                         for v in row.iter_mut() {
                             *v /= sum;
                         }
+                        if want_cache {
+                            stats[h0 + idx][off + i] = (mx, sum);
+                        }
                     }
                 }
                 // Head outputs P_h·V_h straight into disjoint column
-                // bands of the concat matrix — batched, no per-head
-                // copy-out.
+                // bands of the concat matrix (narrowed to this segment's
+                // rows) — batched, no per-head copy-out.
                 {
                     let a: Vec<MatRef> = scores.iter().map(|s| s.view()).collect();
                     let b: Vec<MatRef> = (h0..h1)
-                        .map(|i| v.view().col_range(i * dh, (i + 1) * dh))
+                        .map(|i| {
+                            v.view()
+                                .row_range(off, off + len)
+                                .col_range(i * dh, (i + 1) * dh)
+                        })
                         .collect();
-                    gemm_batch(1.0, &a, &b, 0.0, &mut bands[h0..h1]);
-                }
-                if want_cache {
-                    probs.extend(scores.into_iter().map(WsMat::detach));
+                    let mut c: Vec<MatMut> = out
+                        .col_bands_mut(dh)
+                        .into_iter()
+                        .skip(h0)
+                        .take(h1 - h0)
+                        .map(|band| band.row_range(off, off + len))
+                        .collect();
+                    gemm_batch(1.0, &a, &b, 0.0, &mut c);
                 }
                 h0 = h1;
             }
         }
+        drop(gscores);
         let y = matmul(&out, &w.wo);
         let cache = if want_cache {
+            let mut guards = vec![gq, gk, gv, go];
+            guards.extend(gstats);
             Some(MhaCache {
                 x: x.clone(),
                 q: q.detach(),
                 k: k.detach(),
                 v: v.detach(),
-                probs,
+                stats,
                 concat: out.detach(),
-                _guards: vec![gq, gk, gv, go, gscores],
+                segs,
+                _guards: guards,
             })
         } else {
             None
@@ -326,11 +443,16 @@ impl Module for MultiHeadAttention {
             "grad_out shape {:?} vs expected ({n}, {d})",
             g.shape()
         );
-        // Dominant transients: dq/dk/dv/dconcat (n×d each) plus the h n×n
-        // score-gradient blocks the batched dP→dS chain keeps alive at
-        // once (the old serial path held one head's block at a time; the
-        // batch trades that slack for head-parallel products).
-        let _act = ctx.mem().alloc(((4 * n * d + h * n * n) * 4) as u64)?;
+        let max_len = c.segs.iter().map(|&(_, l)| l).max().unwrap_or(0);
+        let tile = self.backward_tile().min(max_len.max(1));
+        // Dominant transients: dq/dk/dv/dconcat (n×d each) plus the tiled
+        // probability/score-gradient blocks — h len×T pairs for the tile
+        // in flight and the T×d dK/dV staging blocks. The h·n×n term of
+        // the materializing backward is gone; the peak scales with the
+        // tile width, not n².
+        let _act = ctx
+            .mem()
+            .alloc(((4 * n * d + 2 * h * max_len * tile + 2 * tile * d) * 4) as u64)?;
         let ws = ctx.workspace();
         let scale = 1.0 / (dh as f32).sqrt();
         // Output projection: y = concat·Wo ⇒ dWo = concatᵀ·g, dconcat = g·Woᵀ.
@@ -349,63 +471,163 @@ impl Module for MultiHeadAttention {
             let mut cb = [dconcat.view_mut()];
             gemm_batch(1.0, &a, &b, 0.0, &mut cb);
         }
-        let mut dq = ws.take(n, d);
-        let mut dk = ws.take(n, d);
-        let mut dv = ws.take(n, d);
-        // oh = P·Vh ⇒ dVh = Pᵀ·doh — batched into dv's column bands.
-        {
-            let a: Vec<MatRef> = c.probs.iter().map(|p| p.view().t()).collect();
-            let b: Vec<MatRef> = (0..h)
-                .map(|i| dconcat.view().col_range(i * dh, (i + 1) * dh))
+        // dq accumulates across key tiles (beta = 1); dk/dv rows are
+        // written exactly once per tile. Zeroed so pad rows contribute
+        // nothing downstream.
+        let mut dq = ws.take_zeroed(n, d);
+        let mut dk = ws.take_zeroed(n, d);
+        let mut dv = ws.take_zeroed(n, d);
+        for &(off, len) in &c.segs {
+            // Softmax row-dot per head via the output identity:
+            //   D_i = Σ_j dP_ij·P_ij = Σ_c doh_ic·oh_ic   (oh = P·Vh),
+            // computed from the cached concat in f64 — one O(n·d) pass
+            // replaces the per-tile accumulation a two-pass scheme needs.
+            let dvals: Vec<Vec<f32>> = (0..h)
+                .map(|head| {
+                    let c0 = head * dh;
+                    (0..len)
+                        .map(|i| {
+                            let r = off + i;
+                            dconcat.row(r)[c0..c0 + dh]
+                                .iter()
+                                .zip(&c.concat.row(r)[c0..c0 + dh])
+                                .map(|(&a, &b)| a as f64 * b as f64)
+                                .sum::<f64>() as f32
+                        })
+                        .collect()
+                })
                 .collect();
-            let mut cb = dv.col_bands_mut(dh);
-            gemm_batch(1.0, &a, &b, 0.0, &mut cb);
-        }
-        // dP = doh·Vhᵀ per head (reused in place for dS below).
-        let mut ds: Vec<WsMat> = (0..h).map(|_| ws.take(n, n)).collect();
-        {
-            let a: Vec<MatRef> = (0..h)
-                .map(|i| dconcat.view().col_range(i * dh, (i + 1) * dh))
-                .collect();
-            let b: Vec<MatRef> = (0..h)
-                .map(|i| c.v.view().col_range(i * dh, (i + 1) * dh).t())
-                .collect();
-            let mut cb: Vec<MatMut> = ds.iter_mut().map(|s| s.view_mut()).collect();
-            gemm_batch(1.0, &a, &b, 0.0, &mut cb);
-        }
-        // Row-softmax backward: dS_ij = P_ij·(dP_ij − Σ_k dP_ik·P_ik).
-        for (dsh, p) in ds.iter_mut().zip(&c.probs) {
-            for i in 0..n {
-                let dot: f64 = dsh
-                    .row(i)
-                    .iter()
-                    .zip(p.row(i))
-                    .map(|(&a, &b)| a as f64 * b as f64)
-                    .sum();
-                for (sv, &pv) in dsh.row_mut(i).iter_mut().zip(p.row(i)) {
-                    *sv = pv * (*sv - dot as f32);
+            let mut t0 = 0;
+            while t0 < len {
+                let t1 = (t0 + tile).min(len);
+                let tw = t1 - t0;
+                // Recompute the probability tile: S = scale·Q_h·K_h[t]ᵀ,
+                // then P = exp(S − m_i)/s_i from the cached row stats.
+                let mut pt: Vec<WsMat> = (0..h).map(|_| ws.take(len, tw)).collect();
+                {
+                    let a: Vec<MatRef> = (0..h)
+                        .map(|i| {
+                            c.q.view()
+                                .row_range(off, off + len)
+                                .col_range(i * dh, (i + 1) * dh)
+                        })
+                        .collect();
+                    let b: Vec<MatRef> = (0..h)
+                        .map(|i| {
+                            c.k.view()
+                                .row_range(off + t0, off + t1)
+                                .col_range(i * dh, (i + 1) * dh)
+                                .t()
+                        })
+                        .collect();
+                    let mut cb: Vec<MatMut> = pt.iter_mut().map(|s| s.view_mut()).collect();
+                    gemm_batch(scale, &a, &b, 0.0, &mut cb);
                 }
+                for (head, p) in pt.iter_mut().enumerate() {
+                    for i in 0..len {
+                        let (mx, sum) = c.stats[head][off + i];
+                        for v in p.row_mut(i) {
+                            *v = (*v - mx).exp() / sum;
+                        }
+                    }
+                }
+                // dVh[t] = P_tᵀ·doh — batched into a T×d staging block's
+                // head bands, then row-copied into dv (a MatMut column
+                // band can narrow rows, but dv's tile rows live in every
+                // band, so a single contiguous copy per row is simpler
+                // and touches each element once).
+                {
+                    let mut dvt = ws.take(tw, d);
+                    {
+                        let a: Vec<MatRef> = pt.iter().map(|s| s.view().t()).collect();
+                        let b: Vec<MatRef> = (0..h)
+                            .map(|i| {
+                                dconcat
+                                    .view()
+                                    .row_range(off, off + len)
+                                    .col_range(i * dh, (i + 1) * dh)
+                            })
+                            .collect();
+                        let mut cb = dvt.col_bands_mut(dh);
+                        gemm_batch(1.0, &a, &b, 0.0, &mut cb);
+                    }
+                    for r in 0..tw {
+                        dv.row_mut(off + t0 + r).copy_from_slice(dvt.row(r));
+                    }
+                }
+                // dP tile = doh·Vh[t]ᵀ (reused in place for dS below).
+                let mut dst: Vec<WsMat> = (0..h).map(|_| ws.take(len, tw)).collect();
+                {
+                    let a: Vec<MatRef> = (0..h)
+                        .map(|i| {
+                            dconcat
+                                .view()
+                                .row_range(off, off + len)
+                                .col_range(i * dh, (i + 1) * dh)
+                        })
+                        .collect();
+                    let b: Vec<MatRef> = (0..h)
+                        .map(|i| {
+                            c.v.view()
+                                .row_range(off + t0, off + t1)
+                                .col_range(i * dh, (i + 1) * dh)
+                                .t()
+                        })
+                        .collect();
+                    let mut cb: Vec<MatMut> = dst.iter_mut().map(|s| s.view_mut()).collect();
+                    gemm_batch(1.0, &a, &b, 0.0, &mut cb);
+                }
+                // Row-softmax backward on the tile:
+                // dS_ij = P_ij·(dP_ij − D_i).
+                for head in 0..h {
+                    let p = &pt[head];
+                    let dsh = &mut dst[head];
+                    for i in 0..len {
+                        let di = dvals[head][i];
+                        for (sv, &pv) in dsh.row_mut(i).iter_mut().zip(p.row(i)) {
+                            *sv = pv * (*sv - di);
+                        }
+                    }
+                }
+                // S = scale·Qh·Khᵀ ⇒ dQh += scale·dS·Kh[t] (accumulated
+                // across tiles), dKh[t] = scale·dSᵀ·Qh (staged + copied).
+                {
+                    let a: Vec<MatRef> = dst.iter().map(|s| s.view()).collect();
+                    let b: Vec<MatRef> = (0..h)
+                        .map(|i| {
+                            c.k.view()
+                                .row_range(off + t0, off + t1)
+                                .col_range(i * dh, (i + 1) * dh)
+                        })
+                        .collect();
+                    let mut cb: Vec<MatMut> = dq
+                        .col_bands_mut(dh)
+                        .into_iter()
+                        .map(|band| band.row_range(off, off + len))
+                        .collect();
+                    gemm_batch(scale, &a, &b, 1.0, &mut cb);
+                }
+                {
+                    let mut dkt = ws.take(tw, d);
+                    {
+                        let a: Vec<MatRef> = dst.iter().map(|s| s.view().t()).collect();
+                        let b: Vec<MatRef> = (0..h)
+                            .map(|i| {
+                                c.q.view()
+                                    .row_range(off, off + len)
+                                    .col_range(i * dh, (i + 1) * dh)
+                            })
+                            .collect();
+                        let mut cb = dkt.col_bands_mut(dh);
+                        gemm_batch(scale, &a, &b, 0.0, &mut cb);
+                    }
+                    for r in 0..tw {
+                        dk.row_mut(off + t0 + r).copy_from_slice(dkt.row(r));
+                    }
+                }
+                t0 = t1;
             }
         }
-        // S = scale·Qh·Khᵀ ⇒ dQh = scale·dS·Kh, dKh = scale·dSᵀ·Qh —
-        // batched into dq/dk column bands with the scale folded into alpha.
-        {
-            let a: Vec<MatRef> = ds.iter().map(|s| s.view()).collect();
-            let b: Vec<MatRef> = (0..h)
-                .map(|i| c.k.view().col_range(i * dh, (i + 1) * dh))
-                .collect();
-            let mut cb = dq.col_bands_mut(dh);
-            gemm_batch(scale, &a, &b, 0.0, &mut cb);
-        }
-        {
-            let a: Vec<MatRef> = ds.iter().map(|s| s.view().t()).collect();
-            let b: Vec<MatRef> = (0..h)
-                .map(|i| c.q.view().col_range(i * dh, (i + 1) * dh))
-                .collect();
-            let mut cb = dk.col_bands_mut(dh);
-            gemm_batch(scale, &a, &b, 0.0, &mut cb);
-        }
-        drop(ds); // n×n blocks back to the arena before the projection GEMMs
         let dx = attn_proj_backward(&self.weights, &mut self.grads, ws, &c.x, &dq, &dk, &dv);
         Ok(dx)
     }
@@ -436,6 +658,10 @@ impl Module for MultiHeadAttention {
 
     fn set_head_group(&mut self, heads: usize) {
         self.head_group = heads;
+    }
+
+    fn is_sequence_aware(&self) -> bool {
+        true
     }
 
     fn as_sketchable(&self) -> Option<&dyn Sketchable> {
@@ -487,7 +713,11 @@ struct RandMhaCache {
     v: Mat,
     /// Head outputs concatenated (n×d), before the output projection.
     concat: Mat,
+    /// Per-(segment, head) state, segment-major: entry `si*h + head`
+    /// (matrix rows are segment-local). One segment with no `SeqBatch`.
     heads: Vec<PerfHead>,
+    /// The sequence segments the forward ran under.
+    segs: Vec<(usize, usize)>,
     /// The forward's allocation guards (projections + per-head state) —
     /// kept charged for the cache's lifetime.
     _guards: Vec<MemGuard>,
@@ -500,14 +730,16 @@ struct RandMhaCache {
 /// `c`, shared by all rows — a per-row stabilizer would reweight keys and
 /// bias the attention estimate); ReLU kernel: `φ = max(proj, 0)/√m`.
 /// `xs` holds the scaled inputs; the head's slice is columns
-/// `[c0, c0+dh)`. `stab`: `None` = the block's max (batch path);
-/// streaming passes `Some(0.0)` — the stabilizer must be constant across
-/// time steps or the accumulated KV state mixes inconsistently-scaled
-/// features.
+/// `[c0, c0+dh)` and `proj` row `i` corresponds to `xs` row `row0 + i`
+/// (segment-local feature blocks pass their sequence's row offset).
+/// `stab`: `None` = the block's max (batch path); streaming passes
+/// `Some(0.0)` — the stabilizer must be constant across time steps or
+/// the accumulated KV state mixes inconsistently-scaled features.
 fn phi_in_place(
     kernel: KernelKind,
     proj: &mut Mat,
     xs: &Mat,
+    row0: usize,
     c0: usize,
     dh: usize,
     stab: Option<f32>,
@@ -522,7 +754,8 @@ fn phi_in_place(
                     .fold(f32::NEG_INFINITY, f32::max)
             });
             for i in 0..proj.rows() {
-                let sq: f32 = xs.row(i)[c0..c0 + dh].iter().map(|&v| v * v).sum::<f32>() / 2.0;
+                let sq: f32 =
+                    xs.row(row0 + i)[c0..c0 + dh].iter().map(|&v| v * v).sum::<f32>() / 2.0;
                 for o in proj.row_mut(i) {
                     *o = (*o - sq - c).exp() * s;
                 }
@@ -544,7 +777,9 @@ fn phi_in_place(
 /// apply the softmax kernel's `−rowsum(e)·x` term. The stabilizer `c` is
 /// treated as a constant: the normalized attention output is exactly
 /// invariant to it (it rescales numerator and denominator identically),
-/// so its true gradient contribution is zero.
+/// so its true gradient contribution is zero. `dphi`/`phis` rows are
+/// segment-local; `off` is the segment's first row in `xs`/`dst` (0 when
+/// the whole batch is one sequence).
 #[allow(clippy::too_many_arguments)]
 fn favor_feature_backward(
     kernel: KernelKind,
@@ -554,9 +789,10 @@ fn favor_feature_backward(
     xs: &Mat,
     scale: f32,
     dh: usize,
+    off: usize,
     dst: &mut Mat,
 ) {
-    let n = xs.rows();
+    let len = dphi.first().map_or(0, |e| e.rows());
     match kernel {
         KernelKind::Softmax => {
             for (e, phi) in dphi.iter_mut().zip(phis) {
@@ -577,16 +813,20 @@ fn favor_feature_backward(
     {
         let a: Vec<MatRef> = dphi.iter().map(|e| e.view()).collect();
         let b: Vec<MatRef> = features.iter().map(|f| f.view().t()).collect();
-        let mut c = dst.col_bands_mut(dh);
+        let mut c: Vec<MatMut> = dst
+            .col_bands_mut(dh)
+            .into_iter()
+            .map(|band| band.row_range(off, off + len))
+            .collect();
         gemm_batch(scale, &a, &b, 0.0, &mut c);
     }
     if matches!(kernel, KernelKind::Softmax) {
         for (head, e) in dphi.iter().enumerate() {
             let c0 = head * dh;
-            for i in 0..n {
+            for i in 0..len {
                 let rs: f32 = e.row(i).iter().sum();
-                let xrow = &xs.row(i)[c0..c0 + dh];
-                let drow = &mut dst.row_mut(i)[c0..c0 + dh];
+                let xrow = &xs.row(off + i)[c0..c0 + dh];
+                let drow = &mut dst.row_mut(off + i)[c0..c0 + dh];
                 for (dv, &xv) in drow.iter_mut().zip(xrow) {
                     *dv -= scale * rs * xv;
                 }
@@ -629,7 +869,7 @@ impl RandMultiHeadAttention {
     /// whole projection blocks — same single formula either way).
     fn feature_map_with_stab(&self, xh: &Mat, head: usize, stab: Option<f32>) -> Mat {
         let mut phi = matmul(xh, &self.features[head]); // n × m
-        phi_in_place(self.kernel, &mut phi, xh, 0, xh.cols(), stab);
+        phi_in_place(self.kernel, &mut phi, xh, 0, 0, xh.cols(), stab);
         phi
     }
 
@@ -660,6 +900,7 @@ impl RandMultiHeadAttention {
         let dh = w.head_dim();
         let m = self.num_features;
         assert_eq!(x.cols(), d);
+        let segs = ctx.segments_for(n);
         let scale = 1.0 / (dh as f32).sqrt();
         let gq = mem.alloc((n * d * 4) as u64)?;
         let mut qs = ws.take(n, d);
@@ -680,114 +921,136 @@ impl RandMultiHeadAttention {
         }
         let go = mem.alloc((n * d * 4) as u64)?;
         let mut out = ws.take(n, d);
-        // Per-head state for the batched products — φ(Q), φ(K) (n×m
+        zero_pad_rows(&mut out, &segs);
+        // Per-head state for the batched products — φ(Q), φ(K) (len×m
         // each), KV state (m×dh), normalizer (m) — alive for `group`
-        // heads at a time. The default keeps all h heads live (maximum
-        // batching breadth); the head-group knob bounds the documented ×h
-        // on the Performer's O(n) footprint on the inference path without
-        // changing results (per-head chains are independent). Training
-        // forwards always run un-chunked: the cache retains every head's
-        // state anyway. Inference returns every block to the workspace on
-        // exit; a training forward moves this guard into the cache so the
-        // retained state stays accounted until backward.
+        // heads at a time, one sequence segment at a time. The default
+        // keeps all h heads live (maximum batching breadth); the
+        // head-group knob bounds the documented ×h on the Performer's
+        // O(n) footprint on the inference path without changing results
+        // (per-head chains are independent). Training forwards always run
+        // un-chunked: the cache retains every head's state anyway.
+        // Inference returns every block to the workspace (and its
+        // accounting) per segment; a training forward moves each
+        // segment's guard into the cache so the retained state stays
+        // accounted until backward. Restricting the φ(K)ᵀ·V and
+        // normalizer sums to a segment's rows is exactly the FAVOR+
+        // masking: a pad position contributes nothing to any denominator.
         let group = if want_cache { h } else { self.head_group_size() };
-        let ghead = mem.alloc((group as u64) * ((2 * n * m + m * dh + m) * 4) as u64)?;
         let mut heads_cache: Vec<PerfHead> = Vec::new();
-        let mut h0 = 0;
-        while h0 < h {
-            let h1 = (h0 + group).min(h);
-            let cg = h1 - h0;
-            // Feature projections x_h·ω_h for both sides — batched — then
-            // the elementwise feature map in place.
-            let mut phi_q: Vec<WsMat> = (0..cg).map(|_| ws.take(n, m)).collect();
-            let mut phi_k: Vec<WsMat> = (0..cg).map(|_| ws.take(n, m)).collect();
-            for (phis, xs) in [(&mut phi_q, &qs), (&mut phi_k, &ks)] {
+        let mut cache_guards: Vec<MemGuard> = vec![gq, gk, gv, go];
+        for &(off, len) in &segs {
+            let ghead =
+                mem.alloc((group as u64) * ((2 * len * m + m * dh + m) * 4) as u64)?;
+            let mut h0 = 0;
+            while h0 < h {
+                let h1 = (h0 + group).min(h);
+                let cg = h1 - h0;
+                // Feature projections x_h·ω_h for both sides — batched —
+                // then the elementwise feature map in place.
+                let mut phi_q: Vec<WsMat> = (0..cg).map(|_| ws.take(len, m)).collect();
+                let mut phi_k: Vec<WsMat> = (0..cg).map(|_| ws.take(len, m)).collect();
+                for (phis, xs) in [(&mut phi_q, &qs), (&mut phi_k, &ks)] {
+                    {
+                        let a: Vec<MatRef> = (h0..h1)
+                            .map(|i| {
+                                xs.view()
+                                    .row_range(off, off + len)
+                                    .col_range(i * dh, (i + 1) * dh)
+                            })
+                            .collect();
+                        let b: Vec<MatRef> =
+                            self.features[h0..h1].iter().map(|f| f.view()).collect();
+                        let mut c: Vec<MatMut> = phis.iter_mut().map(|p| p.view_mut()).collect();
+                        gemm_batch(1.0, &a, &b, 0.0, &mut c);
+                    }
+                    for (idx, p) in phis.iter_mut().enumerate() {
+                        phi_in_place(self.kernel, p, xs, off, (h0 + idx) * dh, dh, None);
+                    }
+                }
+                // KV state: φ(K)ᵀ·V (m × dh) — the O(1)-in-n state —
+                // batched over the segment's rows only.
+                let mut kv: Vec<WsMat> = (0..cg).map(|_| ws.take(m, dh)).collect();
                 {
-                    let a: Vec<MatRef> = (h0..h1)
-                        .map(|i| xs.view().col_range(i * dh, (i + 1) * dh))
+                    let a: Vec<MatRef> = phi_k.iter().map(|p| p.view().t()).collect();
+                    let b: Vec<MatRef> = (h0..h1)
+                        .map(|i| {
+                            v.view()
+                                .row_range(off, off + len)
+                                .col_range(i * dh, (i + 1) * dh)
+                        })
                         .collect();
-                    let b: Vec<MatRef> =
-                        self.features[h0..h1].iter().map(|f| f.view()).collect();
-                    let mut c: Vec<MatMut> = phis.iter_mut().map(|p| p.view_mut()).collect();
+                    let mut c: Vec<MatMut> = kv.iter_mut().map(|s| s.view_mut()).collect();
                     gemm_batch(1.0, &a, &b, 0.0, &mut c);
                 }
-                for (idx, p) in phis.iter_mut().enumerate() {
-                    phi_in_place(self.kernel, p, xs, (h0 + idx) * dh, dh, None);
-                }
-            }
-            // KV state: φ(K)ᵀ·V (m × dh) — the O(1)-in-n state — batched.
-            let mut kv: Vec<WsMat> = (0..cg).map(|_| ws.take(m, dh)).collect();
-            {
-                let a: Vec<MatRef> = phi_k.iter().map(|p| p.view().t()).collect();
-                let b: Vec<MatRef> = (h0..h1)
-                    .map(|i| v.view().col_range(i * dh, (i + 1) * dh))
+                // Normalizers: z = φ(K)ᵀ·1 (length m) per head — valid
+                // positions only, so pad keys never inflate a denominator.
+                let z: Vec<Vec<f32>> = phi_k
+                    .iter()
+                    .map(|pk| {
+                        let mut zv = vec![0f32; m];
+                        for i in 0..len {
+                            for (zj, &pj) in zv.iter_mut().zip(pk.row(i)) {
+                                *zj += pj;
+                            }
+                        }
+                        zv
+                    })
                     .collect();
-                let mut c: Vec<MatMut> = kv.iter_mut().map(|s| s.view_mut()).collect();
-                gemm_batch(1.0, &a, &b, 0.0, &mut c);
-            }
-            // Normalizers: z = φ(K)ᵀ·1 (length m) per head.
-            let z: Vec<Vec<f32>> = phi_k
-                .iter()
-                .map(|pk| {
-                    let mut zv = vec![0f32; m];
-                    for i in 0..n {
-                        for (zj, &pj) in zv.iter_mut().zip(pk.row(i)) {
-                            *zj += pj;
+                // Numerators: φ(Q)·kv (len × dh) — batched.
+                let mut num: Vec<WsMat> = (0..cg).map(|_| ws.take(len, dh)).collect();
+                {
+                    let a: Vec<MatRef> = phi_q.iter().map(|p| p.view()).collect();
+                    let b: Vec<MatRef> = kv.iter().map(|s| s.view()).collect();
+                    let mut c: Vec<MatMut> = num.iter_mut().map(|s| s.view_mut()).collect();
+                    gemm_batch(1.0, &a, &b, 0.0, &mut c);
+                }
+                // out rows: num / max(φ(Q)·z, 1e-9) per head.
+                let mut den_raw: Vec<Vec<f32>> = Vec::with_capacity(cg);
+                for idx in 0..cg {
+                    let c0 = (h0 + idx) * dh;
+                    let pq = &phi_q[idx];
+                    let mut dr = vec![0f32; len];
+                    for i in 0..len {
+                        let dot: f32 = pq
+                            .row(i)
+                            .iter()
+                            .zip(&z[idx])
+                            .map(|(&a, &b)| a * b)
+                            .sum::<f32>();
+                        dr[i] = dot;
+                        let denom = dot.max(1e-9);
+                        let orow = &mut out.row_mut(off + i)[c0..c0 + dh];
+                        for (o, &nv) in orow.iter_mut().zip(num[idx].row(i)) {
+                            *o = nv / denom;
                         }
                     }
-                    zv
-                })
-                .collect();
-            // Numerators: φ(Q)·kv (n × dh) — batched.
-            let mut num: Vec<WsMat> = (0..cg).map(|_| ws.take(n, dh)).collect();
-            {
-                let a: Vec<MatRef> = phi_q.iter().map(|p| p.view()).collect();
-                let b: Vec<MatRef> = kv.iter().map(|s| s.view()).collect();
-                let mut c: Vec<MatMut> = num.iter_mut().map(|s| s.view_mut()).collect();
-                gemm_batch(1.0, &a, &b, 0.0, &mut c);
-            }
-            // out rows: num / max(φ(Q)·z, 1e-9) per head.
-            let mut den_raw: Vec<Vec<f32>> = Vec::with_capacity(cg);
-            for idx in 0..cg {
-                let c0 = (h0 + idx) * dh;
-                let pq = &phi_q[idx];
-                let mut dr = vec![0f32; n];
-                for i in 0..n {
-                    let dot: f32 = pq
-                        .row(i)
-                        .iter()
-                        .zip(&z[idx])
-                        .map(|(&a, &b)| a * b)
-                        .sum::<f32>();
-                    dr[i] = dot;
-                    let denom = dot.max(1e-9);
-                    let orow = &mut out.row_mut(i)[c0..c0 + dh];
-                    for (o, &nv) in orow.iter_mut().zip(num[idx].row(i)) {
-                        *o = nv / denom;
+                    den_raw.push(dr);
+                }
+                if want_cache {
+                    let iter = phi_q
+                        .into_iter()
+                        .zip(phi_k)
+                        .zip(kv)
+                        .zip(num)
+                        .zip(z)
+                        .zip(den_raw);
+                    for (((((pq, pk), kvh), numh), zh), drh) in iter {
+                        heads_cache.push(PerfHead {
+                            phi_q: pq.detach(),
+                            phi_k: pk.detach(),
+                            kv: kvh.detach(),
+                            z: zh,
+                            num: numh.detach(),
+                            den_raw: drh,
+                        });
                     }
                 }
-                den_raw.push(dr);
+                h0 = h1;
             }
             if want_cache {
-                let iter = phi_q
-                    .into_iter()
-                    .zip(phi_k)
-                    .zip(kv)
-                    .zip(num)
-                    .zip(z)
-                    .zip(den_raw);
-                for (((((pq, pk), kvh), numh), zh), drh) in iter {
-                    heads_cache.push(PerfHead {
-                        phi_q: pq.detach(),
-                        phi_k: pk.detach(),
-                        kv: kvh.detach(),
-                        z: zh,
-                        num: numh.detach(),
-                        den_raw: drh,
-                    });
-                }
+                cache_guards.push(ghead);
             }
-            h0 = h1;
         }
         let y = matmul(&out, &w.wo);
         let cache = if want_cache {
@@ -799,7 +1062,8 @@ impl RandMultiHeadAttention {
                 v: v.detach(),
                 concat: out.detach(),
                 heads,
-                _guards: vec![gq, gk, gv, go, ghead],
+                segs,
+                _guards: cache_guards,
             })
         } else {
             None
@@ -851,11 +1115,17 @@ impl Module for RandMultiHeadAttention {
             "grad_out shape {:?} vs expected ({n}, {d})",
             g.shape()
         );
-        anyhow::ensure!(c.heads.len() == h, "cache head count mismatch");
-        // Dominant transients: dq/dk/dv/dconcat (n×d each) plus all heads'
-        // dφ blocks (2·n×m each, alive at once for the batched chain) —
-        // still linear in n, like the forward.
-        let _act = ctx.mem().alloc(((4 * n * d + h * 2 * n * m) * 4) as u64)?;
+        anyhow::ensure!(
+            c.heads.len() == c.segs.len() * h,
+            "cache head count mismatch"
+        );
+        let max_len = c.segs.iter().map(|&(_, l)| l).max().unwrap_or(0);
+        // Dominant transients: dq/dk/dv/dconcat (n×d each) plus one
+        // segment's dφ blocks (2·len×m per head, alive at once for the
+        // batched chain) — still linear in n, like the forward.
+        let _act = ctx
+            .mem()
+            .alloc(((4 * n * d + h * 2 * max_len * m) * 4) as u64)?;
         let ws = ctx.workspace();
         let scale = 1.0 / (dh as f32).sqrt();
         // Output projection: y = concat·Wo ⇒ dWo = concatᵀ·g, dconcat = g·Woᵀ.
@@ -874,120 +1144,134 @@ impl Module for RandMultiHeadAttention {
             let mut cb = [dconcat.view_mut()];
             gemm_batch(1.0, &a, &b, 0.0, &mut cb);
         }
-        let mut dq = ws.take(n, d);
-        let mut dk = ws.take(n, d);
-        let mut dv = ws.take(n, d);
-        // out_i = num_i / den_i with den = max(φq_i·z, 1e-9):
-        //   d_num_i = doh_i/den_i,
-        //   d_den_i = −(doh_i·num_i)/den_i²  (zero where the clamp hit).
-        let mut d_num: Vec<WsMat> = (0..h).map(|_| ws.take(n, dh)).collect();
-        let mut d_den: Vec<Vec<f32>> = vec![vec![0f32; n]; h];
-        for head in 0..h {
-            let hc = &c.heads[head];
-            let c0 = head * dh;
-            let dn = &mut d_num[head];
-            let dd = &mut d_den[head];
-            for i in 0..n {
-                let doh_row = &dconcat.row(i)[c0..c0 + dh];
-                let den = hc.den_raw[i].max(1e-9);
-                for (dnv, &gv) in dn.row_mut(i).iter_mut().zip(doh_row) {
-                    *dnv = gv / den;
-                }
-                if hc.den_raw[i] > 1e-9 {
-                    let gn: f64 = doh_row
-                        .iter()
-                        .zip(hc.num.row(i))
-                        .map(|(&a, &b)| a as f64 * b as f64)
-                        .sum();
-                    dd[i] = -(gn / (den as f64 * den as f64)) as f32;
-                }
-            }
-        }
-        // num = φq·kv, den = φq·z:
-        //   dφq = d_num·kvᵀ + d_den⊗z,  d_kv = φqᵀ·d_num,  dz = φqᵀ·d_den.
-        let mut dphi_q: Vec<WsMat> = (0..h).map(|_| ws.take(n, m)).collect();
-        {
-            let a: Vec<MatRef> = d_num.iter().map(|s| s.view()).collect();
-            let b: Vec<MatRef> = c.heads.iter().map(|hc| hc.kv.view().t()).collect();
-            let mut cb: Vec<MatMut> = dphi_q.iter_mut().map(|s| s.view_mut()).collect();
-            gemm_batch(1.0, &a, &b, 0.0, &mut cb);
-        }
-        for head in 0..h {
-            let hc = &c.heads[head];
-            for i in 0..n {
-                let ddv = d_den[head][i];
-                for (pv, &zv) in dphi_q[head].row_mut(i).iter_mut().zip(&hc.z) {
-                    *pv += ddv * zv;
+        // Zeroed so pad rows (never written by any segment) stay zero.
+        let mut dq = ws.take_zeroed(n, d);
+        let mut dk = ws.take_zeroed(n, d);
+        let mut dv = ws.take_zeroed(n, d);
+        for (si, &(off, len)) in c.segs.iter().enumerate() {
+            let heads = &c.heads[si * h..(si + 1) * h];
+            // out_i = num_i / den_i with den = max(φq_i·z, 1e-9):
+            //   d_num_i = doh_i/den_i,
+            //   d_den_i = −(doh_i·num_i)/den_i²  (zero where the clamp hit).
+            let mut d_num: Vec<WsMat> = (0..h).map(|_| ws.take(len, dh)).collect();
+            let mut d_den: Vec<Vec<f32>> = vec![vec![0f32; len]; h];
+            for head in 0..h {
+                let hc = &heads[head];
+                let c0 = head * dh;
+                let dn = &mut d_num[head];
+                let dd = &mut d_den[head];
+                for i in 0..len {
+                    let doh_row = &dconcat.row(off + i)[c0..c0 + dh];
+                    let den = hc.den_raw[i].max(1e-9);
+                    for (dnv, &gv) in dn.row_mut(i).iter_mut().zip(doh_row) {
+                        *dnv = gv / den;
+                    }
+                    if hc.den_raw[i] > 1e-9 {
+                        let gn: f64 = doh_row
+                            .iter()
+                            .zip(hc.num.row(i))
+                            .map(|(&a, &b)| a as f64 * b as f64)
+                            .sum();
+                        dd[i] = -(gn / (den as f64 * den as f64)) as f32;
+                    }
                 }
             }
-        }
-        let mut d_kv: Vec<WsMat> = (0..h).map(|_| ws.take(m, dh)).collect();
-        {
-            let a: Vec<MatRef> = c.heads.iter().map(|hc| hc.phi_q.view().t()).collect();
-            let b: Vec<MatRef> = d_num.iter().map(|s| s.view()).collect();
-            let mut cb: Vec<MatMut> = d_kv.iter_mut().map(|s| s.view_mut()).collect();
-            gemm_batch(1.0, &a, &b, 0.0, &mut cb);
-        }
-        let dz: Vec<Vec<f32>> = (0..h)
-            .map(|head| c.heads[head].phi_q.matvec_t(&d_den[head]))
-            .collect();
-        // kv = φkᵀ·vh, z = φkᵀ·1:
-        //   dφk = vh·d_kvᵀ + 1⊗dz,  dvh = φk·d_kv.
-        let mut dphi_k: Vec<WsMat> = (0..h).map(|_| ws.take(n, m)).collect();
-        {
-            let a: Vec<MatRef> = (0..h)
-                .map(|i| c.v.view().col_range(i * dh, (i + 1) * dh))
+            // num = φq·kv, den = φq·z:
+            //   dφq = d_num·kvᵀ + d_den⊗z,  d_kv = φqᵀ·d_num,  dz = φqᵀ·d_den.
+            let mut dphi_q: Vec<WsMat> = (0..h).map(|_| ws.take(len, m)).collect();
+            {
+                let a: Vec<MatRef> = d_num.iter().map(|s| s.view()).collect();
+                let b: Vec<MatRef> = heads.iter().map(|hc| hc.kv.view().t()).collect();
+                let mut cb: Vec<MatMut> = dphi_q.iter_mut().map(|s| s.view_mut()).collect();
+                gemm_batch(1.0, &a, &b, 0.0, &mut cb);
+            }
+            for head in 0..h {
+                let hc = &heads[head];
+                for i in 0..len {
+                    let ddv = d_den[head][i];
+                    for (pv, &zv) in dphi_q[head].row_mut(i).iter_mut().zip(&hc.z) {
+                        *pv += ddv * zv;
+                    }
+                }
+            }
+            let mut d_kv: Vec<WsMat> = (0..h).map(|_| ws.take(m, dh)).collect();
+            {
+                let a: Vec<MatRef> = heads.iter().map(|hc| hc.phi_q.view().t()).collect();
+                let b: Vec<MatRef> = d_num.iter().map(|s| s.view()).collect();
+                let mut cb: Vec<MatMut> = d_kv.iter_mut().map(|s| s.view_mut()).collect();
+                gemm_batch(1.0, &a, &b, 0.0, &mut cb);
+            }
+            let dz: Vec<Vec<f32>> = (0..h)
+                .map(|head| heads[head].phi_q.matvec_t(&d_den[head]))
                 .collect();
-            let b: Vec<MatRef> = d_kv.iter().map(|s| s.view().t()).collect();
-            let mut cb: Vec<MatMut> = dphi_k.iter_mut().map(|s| s.view_mut()).collect();
-            gemm_batch(1.0, &a, &b, 0.0, &mut cb);
-        }
-        for head in 0..h {
-            for i in 0..n {
-                for (pv, &zv) in dphi_k[head].row_mut(i).iter_mut().zip(&dz[head]) {
-                    *pv += zv;
+            // kv = φkᵀ·vh, z = φkᵀ·1:
+            //   dφk = vh·d_kvᵀ + 1⊗dz,  dvh = φk·d_kv.
+            let mut dphi_k: Vec<WsMat> = (0..h).map(|_| ws.take(len, m)).collect();
+            {
+                let a: Vec<MatRef> = (0..h)
+                    .map(|i| {
+                        c.v.view()
+                            .row_range(off, off + len)
+                            .col_range(i * dh, (i + 1) * dh)
+                    })
+                    .collect();
+                let b: Vec<MatRef> = d_kv.iter().map(|s| s.view().t()).collect();
+                let mut cb: Vec<MatMut> = dphi_k.iter_mut().map(|s| s.view_mut()).collect();
+                gemm_batch(1.0, &a, &b, 0.0, &mut cb);
+            }
+            for head in 0..h {
+                for i in 0..len {
+                    for (pv, &zv) in dphi_k[head].row_mut(i).iter_mut().zip(&dz[head]) {
+                        *pv += zv;
+                    }
                 }
             }
+            // dVh = φk·d_kv — batched straight into dv's column bands
+            // (narrowed to this segment's rows).
+            {
+                let a: Vec<MatRef> = heads.iter().map(|hc| hc.phi_k.view()).collect();
+                let b: Vec<MatRef> = d_kv.iter().map(|s| s.view()).collect();
+                let mut cb: Vec<MatMut> = dv
+                    .col_bands_mut(dh)
+                    .into_iter()
+                    .map(|band| band.row_range(off, off + len))
+                    .collect();
+                gemm_batch(1.0, &a, &b, 0.0, &mut cb);
+            }
+            drop(d_num);
+            drop(d_kv);
+            // Through the (fixed) random-feature maps back to raw
+            // projection space (the 1/√dh undo is folded into the batched
+            // alpha).
+            {
+                let phis: Vec<&Mat> = heads.iter().map(|hc| &hc.phi_q).collect();
+                favor_feature_backward(
+                    self.kernel,
+                    &self.features,
+                    &mut dphi_q,
+                    &phis,
+                    &c.qs,
+                    scale,
+                    dh,
+                    off,
+                    &mut dq,
+                );
+            }
+            {
+                let phis: Vec<&Mat> = heads.iter().map(|hc| &hc.phi_k).collect();
+                favor_feature_backward(
+                    self.kernel,
+                    &self.features,
+                    &mut dphi_k,
+                    &phis,
+                    &c.ks,
+                    scale,
+                    dh,
+                    off,
+                    &mut dk,
+                );
+            }
         }
-        // dVh = φk·d_kv — batched straight into dv's column bands.
-        {
-            let a: Vec<MatRef> = c.heads.iter().map(|hc| hc.phi_k.view()).collect();
-            let b: Vec<MatRef> = d_kv.iter().map(|s| s.view()).collect();
-            let mut cb = dv.col_bands_mut(dh);
-            gemm_batch(1.0, &a, &b, 0.0, &mut cb);
-        }
-        drop(d_num);
-        drop(d_kv);
-        // Through the (fixed) random-feature maps back to raw projection
-        // space (the 1/√dh undo is folded into the batched alpha).
-        {
-            let phis: Vec<&Mat> = c.heads.iter().map(|hc| &hc.phi_q).collect();
-            favor_feature_backward(
-                self.kernel,
-                &self.features,
-                &mut dphi_q,
-                &phis,
-                &c.qs,
-                scale,
-                dh,
-                &mut dq,
-            );
-        }
-        {
-            let phis: Vec<&Mat> = c.heads.iter().map(|hc| &hc.phi_k).collect();
-            favor_feature_backward(
-                self.kernel,
-                &self.features,
-                &mut dphi_k,
-                &phis,
-                &c.ks,
-                scale,
-                dh,
-                &mut dk,
-            );
-        }
-        drop(dphi_q);
-        drop(dphi_k);
         let dx = attn_proj_backward(&self.weights, &mut self.grads, ws, &c.x, &dq, &dk, &dv);
         Ok(dx)
     }
@@ -1018,6 +1302,10 @@ impl Module for RandMultiHeadAttention {
 
     fn set_head_group(&mut self, heads: usize) {
         self.head_group = heads;
+    }
+
+    fn is_sequence_aware(&self) -> bool {
+        true
     }
 }
 

@@ -10,7 +10,7 @@
 
 use super::module::{col_sums, Cache, ForwardCtx, GradStore, Module, ParamMut, ParamRef};
 use super::plan::Sketchable;
-use crate::linalg::{matmul, Mat};
+use crate::linalg::{gemm_batch, matmul, Mat, MatMut, MatRef};
 use crate::rng::Rng;
 use crate::util::memtrack::MemGuard;
 
@@ -437,24 +437,58 @@ impl Module for SKConv2d {
         );
         let pd = self.shape.patch_dim();
         let rows = g.rows();
-        // Transients: per-term dU/dV/g·Vᵀ plus the running dcols and dx.
+        let l = self.num_terms;
+        // Transients: all per-term gv/dU/dV blocks are alive at once now
+        // that each stage runs as one batched dispatch, plus the running
+        // dcols and dx.
         let _act = ctx.mem().alloc(
-            ((self.low_rank * (pd + self.shape.c_out + rows)
+            ((l * self.low_rank * (rows + pd + self.shape.c_out)
                 + rows * pd
                 + c.batch * self.shape.c_in * self.shape.image * self.shape.image)
                 * 4) as u64,
         )?;
         // Same two-stage low-rank product as SKLinear, on the patch matrix;
-        // the patch gradient then scatters back through col2im.
-        let inv_l = 1.0 / self.num_terms as f32;
+        // each per-term stage runs as ONE gemm_batch over all l terms
+        // (independent problems, one parallel dispatch) instead of l
+        // sequential GEMMs. The patch gradient then scatters back through
+        // col2im.
+        let inv_l = 1.0 / l as f32;
+        let ws = ctx.workspace();
+        // Stage 1: gv_j = g·V_jᵀ (rows×r), all terms batched.
+        let mut gv: Vec<_> = (0..l).map(|_| ws.take(rows, self.low_rank)).collect();
+        {
+            let a: Vec<MatRef> = (0..l).map(|_| g.view()).collect();
+            let b: Vec<MatRef> = self.v.iter().map(|vj| vj.view().t()).collect();
+            let mut cb: Vec<MatMut> = gv.iter_mut().map(|m| m.view_mut()).collect();
+            gemm_batch(1.0, &a, &b, 0.0, &mut cb);
+        }
+        // Stage 2: dU_j = colsᵀ·gv_j (pd×r), all terms batched.
+        let mut du: Vec<_> = (0..l).map(|_| ws.take(pd, self.low_rank)).collect();
+        {
+            let a: Vec<MatRef> = (0..l).map(|_| c.cols.view().t()).collect();
+            let b: Vec<MatRef> = gv.iter().map(|m| m.view()).collect();
+            let mut cb: Vec<MatMut> = du.iter_mut().map(|m| m.view_mut()).collect();
+            gemm_batch(1.0, &a, &b, 0.0, &mut cb);
+        }
+        // Stage 3: dV_j = cu_jᵀ·g (r×C_out), all terms batched.
+        let mut dvs: Vec<_> = (0..l)
+            .map(|_| ws.take(self.low_rank, self.shape.c_out))
+            .collect();
+        {
+            let a: Vec<MatRef> = c.cu.iter().map(|m| m.view().t()).collect();
+            let b: Vec<MatRef> = (0..l).map(|_| g.view()).collect();
+            let mut cb: Vec<MatMut> = dvs.iter_mut().map(|m| m.view_mut()).collect();
+            gemm_batch(1.0, &a, &b, 0.0, &mut cb);
+        }
+        for j in 0..l {
+            self.grads.accum(&format!("u.{j}"), inv_l, du[j].data());
+            self.grads.accum(&format!("v.{j}"), inv_l, dvs[j].data());
+        }
+        // dcols accumulates every term into one buffer — the outputs alias,
+        // so this stage stays sequential (beta = 1 accumulation).
         let mut dcols = Mat::zeros(rows, pd);
-        for j in 0..self.num_terms {
-            let gv = crate::linalg::matmul_nt(g, &self.v[j]); // rows×r
-            let du = crate::linalg::matmul_tn(&c.cols, &gv); // pd×r
-            self.grads.accum(&format!("u.{j}"), inv_l, du.data());
-            let dv = crate::linalg::matmul_tn(&c.cu[j], g); // r×C_out
-            self.grads.accum(&format!("v.{j}"), inv_l, dv.data());
-            dcols.axpy(inv_l, &crate::linalg::matmul_nt(&gv, &self.u[j]));
+        for j in 0..l {
+            crate::linalg::gemm(inv_l, &gv[j], &self.u[j], 1.0, &mut dcols);
         }
         self.grads.accum("bias", 1.0, &col_sums(g));
         Ok(col2im(&dcols, &self.shape, c.batch))

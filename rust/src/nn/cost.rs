@@ -85,6 +85,61 @@ pub fn performer_attention_mem(n: usize, d: usize, h: usize, m: usize) -> u64 {
     ((h * (2 * n * m + m * dh + m) + 4 * n * d) * 4) as u64
 }
 
+/// Peak *backward* activation memory (bytes) for the tiled recomputing
+/// dense-attention backward with key-tile width `tile`: four n×d gradient
+/// blocks, one probability + one score-gradient tile (h·n×T each) and the
+/// T×d dK/dV staging blocks. Linear in n for fixed T — the h·n² term of a
+/// materializing backward is gone.
+pub fn dense_attention_bwd_mem(n: usize, d: usize, h: usize, tile: usize) -> u64 {
+    ((4 * n * d + 2 * h * n * tile + 2 * tile * d) * 4) as u64
+}
+
+/// Largest sequence length that fits a serving-tier memory budget, from
+/// two peak-memory probe measurements. Fits the quadratic model
+/// `peak(n) ≈ α·n² + β·n` through `(n0, peak0)` and `(2·n0, peak1)`
+/// (α = (peak1 − 2·peak0)/(2·n0²), β from the first point, both clamped
+/// at zero) and returns the largest `n` with
+/// `fixed_bytes + peak(n) ≤ budget`, or 0 when even n = 1 does not fit.
+/// Dense attention measures α > 0 and gets a √budget-ish cap; Performer
+/// measures α ≈ 0 and its cap scales linearly in the remaining budget —
+/// the admission asymmetry the serve layer advertises per tier.
+pub fn max_len_under_budget(n0: usize, peak0: u64, peak1: u64, fixed_bytes: u64, budget: u64) -> usize {
+    assert!(n0 > 0, "probe length must be positive");
+    if budget == 0 {
+        // Unlimited budget: no admission cap from memory.
+        return usize::MAX;
+    }
+    let n0f = n0 as f64;
+    let alpha = ((peak1 as f64 - 2.0 * peak0 as f64) / (2.0 * n0f * n0f)).max(0.0);
+    let beta = ((peak0 as f64 - alpha * n0f * n0f) / n0f).max(0.0);
+    let fits = |n: usize| -> bool {
+        let nf = n as f64;
+        fixed_bytes as f64 + alpha * nf * nf + beta * nf <= budget as f64
+    };
+    if !fits(1) {
+        return 0;
+    }
+    // Exponential search for an upper bound, then binary search. Capped
+    // at 2^32 rows — beyond any real admission limit.
+    let mut hi = 1usize;
+    while hi < (1usize << 32) && fits(hi) {
+        hi <<= 1;
+    }
+    if fits(hi) {
+        return hi;
+    }
+    let mut lo = hi >> 1; // fits
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if fits(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,5 +186,33 @@ mod tests {
         // At long n dense must exceed performer; at tiny n it may not.
         let (n, d, h, m) = (4096, 512, 8, 128);
         assert!(dense_attention_mem(n, d, h) > performer_attention_mem(n, d, h, m));
+    }
+
+    #[test]
+    fn tiled_backward_memory_linear_in_n() {
+        let (d, h, t) = (512, 8, 64);
+        let m1 = dense_attention_bwd_mem(1024, d, h, t);
+        let m2 = dense_attention_bwd_mem(2048, d, h, t);
+        // Doubling n roughly doubles the tiled backward's peak...
+        assert!((m2 as f64 / m1 as f64) < 2.1);
+        // ...and it stays far below the materializing h·n² footprint.
+        assert!(m2 < dense_attention_mem(2048, d, h));
+    }
+
+    #[test]
+    fn max_len_fit_recovers_quadratic_and_linear() {
+        // Synthetic quadratic profile peak(n) = 8n² + 100n.
+        let peak = |n: u64| 8 * n * n + 100 * n;
+        let cap = max_len_under_budget(32, peak(32), peak(64), 0, peak(500));
+        assert!((495..=505).contains(&cap), "quadratic cap {cap}");
+        // Linear profile peak(n) = 1000n: cap scales with budget.
+        let cap_lin = max_len_under_budget(32, 32_000, 64_000, 0, 1_000_000);
+        assert!((995..=1000).contains(&cap_lin), "linear cap {cap_lin}");
+        // Fixed bytes eat into the budget.
+        let with_fixed = max_len_under_budget(32, 32_000, 64_000, 500_000, 1_000_000);
+        assert!(with_fixed < cap_lin);
+        // Unlimited budget → no cap; impossible budget → 0.
+        assert_eq!(max_len_under_budget(32, 1, 2, 0, 0), usize::MAX);
+        assert_eq!(max_len_under_budget(32, 32_000, 64_000, 0, 500), 0);
     }
 }

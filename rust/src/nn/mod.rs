@@ -21,6 +21,14 @@
 //! - the **AOT path**: the same math compiled from the Pallas/JAX layers
 //!   into HLO artifacts and executed through [`crate::runtime`].
 //!
+//! Batches of variable-length sequences are first-class: a [`SeqBatch`]
+//! installed on the [`ForwardCtx`] tells sequence-aware layers (the
+//! attention variants) how the input rows decompose into sequences, and
+//! pad positions are masked *structurally* — excluded from every softmax
+//! row and FAVOR+ normalizer by exact-length views, never by −∞ biasing.
+//! Row-wise layers ignore the batch (the default
+//! [`Module::is_sequence_aware`] adapter), so mixed stacks work unchanged.
+//!
 //! [`cost`] holds the analytic parameter/FLOP/memory models, including the
 //! paper's benchmark-skip rule `2·l·k·(d_in+d_out) > d_in·d_out`; they are
 //! cross-checked against the [`Module::param_count`] registry in tests
@@ -36,12 +44,15 @@ pub mod module;
 pub mod plan;
 
 pub use activation::{ActKind, Activation};
-pub use attention::{AttnWeights, KernelKind, MultiHeadAttention, RandMultiHeadAttention};
+pub use attention::{
+    AttnWeights, KernelKind, MultiHeadAttention, RandMultiHeadAttention, ATTN_BWD_TILE,
+};
 pub use conv::{Conv2d, ConvShape, SKConv2d};
 pub use cost::{conv_cost, linear_cost, sketch_beats_dense, LayerCost};
 pub use linear::{Linear, SKLinear};
 pub use model::{LayerSelector, Model, NamedModule};
 pub use module::{
-    Cache, ForwardCtx, GradStore, Module, ParamMut, ParamRef, StateDict, Workspace, WsMat,
+    Cache, ForwardCtx, GradStore, Module, ParamMut, ParamRef, SeqBatch, StateDict, Workspace,
+    WsMat,
 };
 pub use plan::{CompressionReport, LayerReport, SketchPlan, Sketchable, SkippedLayer};

@@ -153,6 +153,32 @@ impl Model {
         Ok(rows.iter().enumerate().map(|(i, _)| y.row(i).to_vec()).collect())
     }
 
+    /// Sequence-batched inference forward: install `seq` on the context,
+    /// run the sequential [`Model::forward`], restore the previous batch.
+    /// `x` must hold exactly `seq.total_rows()` rows in the batch's
+    /// packed/padded layout; sequence-aware layers (attention) mask pad
+    /// positions structurally, row-wise layers are unaffected. The
+    /// restore runs even when the forward errors, so a shared warm
+    /// context never leaks a stale sequence batch into later calls.
+    pub fn forward_seq(
+        &self,
+        x: &Mat,
+        seq: &super::module::SeqBatch,
+        ctx: &super::module::ForwardCtx,
+    ) -> Result<Mat> {
+        ensure!(
+            x.rows() == seq.total_rows(),
+            "input has {} rows, sequence batch describes {}",
+            x.rows(),
+            seq.total_rows()
+        );
+        let prev = ctx.seq_batch();
+        ctx.set_seq_batch(Some(seq.clone()));
+        let out = self.forward(x, ctx);
+        ctx.set_seq_batch(prev);
+        out
+    }
+
     /// Apply the per-layer peak-memory knob model-wide (see
     /// [`Module::set_head_group`]); layers without partitionable state
     /// ignore it.

@@ -273,6 +273,147 @@ pub(crate) fn col_sums(g: &Mat) -> Vec<f32> {
     out.into_iter().map(|v| v as f32).collect()
 }
 
+/// A batch of variable-length sequences sharing one row-stacked matrix.
+///
+/// The nn layer's unit of batching used to be the *row*; attention made
+/// that a lie (its rows couple), so sequences are now first-class: a
+/// `SeqBatch` describes how the rows of a forward input decompose into
+/// sequences, in one of two layouts:
+///
+/// - **packed** ([`SeqBatch::packed`]): sequences are concatenated
+///   back-to-back — row block `i` starts where block `i−1` ended and
+///   there are no padding rows. This is the serving layout (no wasted
+///   rows).
+/// - **padded** ([`SeqBatch::padded`]): every sequence owns a fixed
+///   `stride` of rows, of which the first `len` are valid and the rest
+///   are padding. This is the training layout (rectangular `B × L` MLM
+///   batches flattened row-major); [`SeqBatch::token_mask`] derives the
+///   per-row validity mask the masked losses consume.
+///
+/// Sequence-aware layers ([`Module::is_sequence_aware`]) read the batch
+/// from [`ForwardCtx::seq_batch`] and restrict their cross-row math to
+/// each sequence's valid rows — pad positions are excluded *structurally*
+/// (they never enter a softmax row or a FAVOR+ kv/z sum), which is exact
+/// masking: a pad key's attention probability is identically zero. All
+/// other layers are row-wise and ignore the batch — the default adapter
+/// is the identity, so `Linear`/`SKLinear`/conv/activation semantics are
+/// untouched. A full-length batch is bitwise-identical to running with no
+/// `SeqBatch` at all (the per-sequence views then span every row).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SeqBatch {
+    lens: Vec<usize>,
+    /// `Some(stride)` for the padded layout, `None` for packed.
+    stride: Option<usize>,
+}
+
+impl SeqBatch {
+    /// Packed layout: sequences of the given lengths concatenated with no
+    /// padding rows. Errors on an empty batch or a zero-length sequence.
+    pub fn packed(lens: Vec<usize>) -> Result<Self> {
+        ensure!(!lens.is_empty(), "SeqBatch needs at least one sequence");
+        ensure!(
+            lens.iter().all(|&l| l > 0),
+            "SeqBatch sequence lengths must be positive"
+        );
+        Ok(SeqBatch { lens, stride: None })
+    }
+
+    /// Padded layout: each sequence owns `stride` rows, the first `len`
+    /// valid. Errors on an empty batch, a zero length, or `len > stride`.
+    pub fn padded(lens: Vec<usize>, stride: usize) -> Result<Self> {
+        ensure!(!lens.is_empty(), "SeqBatch needs at least one sequence");
+        ensure!(
+            lens.iter().all(|&l| l > 0 && l <= stride),
+            "SeqBatch lengths must be in 1..=stride ({stride})"
+        );
+        Ok(SeqBatch {
+            lens,
+            stride: Some(stride),
+        })
+    }
+
+    /// One full-length sequence of `n` rows — the shape every pre-sequence
+    /// caller implicitly meant.
+    pub fn single(n: usize) -> Self {
+        SeqBatch {
+            lens: vec![n],
+            stride: None,
+        }
+    }
+
+    /// Number of sequences in the batch.
+    pub fn num_seqs(&self) -> usize {
+        self.lens.len()
+    }
+
+    /// Per-sequence valid lengths.
+    pub fn lens(&self) -> &[usize] {
+        &self.lens
+    }
+
+    /// Longest valid length in the batch.
+    pub fn max_len(&self) -> usize {
+        self.lens.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Valid (non-pad) rows over all sequences.
+    pub fn total_tokens(&self) -> usize {
+        self.lens.iter().sum()
+    }
+
+    /// Rows of the matrix this batch describes (padding included).
+    pub fn total_rows(&self) -> usize {
+        match self.stride {
+            Some(s) => s * self.lens.len(),
+            None => self.total_tokens(),
+        }
+    }
+
+    /// True when no row is padding (every sequence fills its slot).
+    pub fn is_full(&self) -> bool {
+        match self.stride {
+            Some(s) => self.lens.iter().all(|&l| l == s),
+            None => true,
+        }
+    }
+
+    /// `(row_offset, valid_len)` of every sequence, in order.
+    pub fn segments(&self) -> Vec<(usize, usize)> {
+        match self.stride {
+            Some(s) => self
+                .lens
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| (i * s, l))
+                .collect(),
+            None => {
+                let mut off = 0;
+                self.lens
+                    .iter()
+                    .map(|&l| {
+                        let o = off;
+                        off += l;
+                        (o, l)
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Per-row validity mask over [`SeqBatch::total_rows`] rows: `1.0` for
+    /// valid positions, `0.0` for padding — the mask shape
+    /// [`crate::train::masked_xent_loss`] consumes.
+    pub fn token_mask(&self) -> Vec<f32> {
+        let mut mask = vec![0.0; self.total_rows()];
+        for (off, len) in self.segments() {
+            for m in &mut mask[off..off + len] {
+                *m = 1.0;
+            }
+        }
+        mask
+    }
+}
+
 /// Name-keyed tensor state of a module or model. Keys are the names from
 /// [`Module::params`], dot-prefixed with the layer path at the model level
 /// (`encoder.fc1.weight`). This is also the in-memory shape of a checkpoint
@@ -304,6 +445,10 @@ pub struct ForwardCtx {
     /// [`Workspace`]).
     ws: Workspace,
     batch_hint: Option<usize>,
+    /// Sequence decomposition of the current forward's rows, if any (see
+    /// [`SeqBatch`]). Interior-mutable so long-lived warm contexts (serve
+    /// workers) can swap it per step without rebuilding the workspace.
+    seq: RefCell<Option<SeqBatch>>,
 }
 
 impl ForwardCtx {
@@ -326,6 +471,7 @@ impl ForwardCtx {
             scratch_guard: RefCell::new(None),
             ws: Workspace::new(),
             batch_hint: None,
+            seq: RefCell::new(None),
         }
     }
 
@@ -346,6 +492,48 @@ impl ForwardCtx {
     /// The advisory batch hint, if any.
     pub fn expected_batch(&self) -> Option<usize> {
         self.batch_hint
+    }
+
+    /// Attach a sequence decomposition at construction time (builder form
+    /// of [`ForwardCtx::set_seq_batch`]).
+    pub fn with_seq(self, sb: SeqBatch) -> Self {
+        *self.seq.borrow_mut() = Some(sb);
+        self
+    }
+
+    /// Install (or clear, with `None`) the sequence decomposition that
+    /// sequence-aware layers read during the next forward/backward.
+    /// Interior-mutable so a warm per-worker context can be re-pointed at a
+    /// new batch each serving step.
+    pub fn set_seq_batch(&self, sb: Option<SeqBatch>) {
+        *self.seq.borrow_mut() = sb;
+    }
+
+    /// The current sequence decomposition, if one is installed.
+    pub fn seq_batch(&self) -> Option<SeqBatch> {
+        self.seq.borrow().clone()
+    }
+
+    /// The `(row_offset, valid_len)` segments a sequence-aware layer should
+    /// restrict its cross-row math to, for an input of `rows` rows. With no
+    /// [`SeqBatch`] installed this is the single full-length segment
+    /// `[(0, rows)]` — the pre-sequence semantics. Panics if an installed
+    /// batch does not describe exactly `rows` rows (a shape bug, like any
+    /// other dimension mismatch).
+    pub fn segments_for(&self, rows: usize) -> Vec<(usize, usize)> {
+        match self.seq.borrow().as_ref() {
+            None => vec![(0, rows)],
+            Some(sb) => {
+                assert_eq!(
+                    sb.total_rows(),
+                    rows,
+                    "SeqBatch describes {} rows but the forward input has {}",
+                    sb.total_rows(),
+                    rows
+                );
+                sb.segments()
+            }
+        }
     }
 
     /// The memory tracker all forwards account against.
@@ -617,6 +805,17 @@ pub trait Module: Send + Sync {
     /// fits the tier's memory budget.
     fn set_head_group(&mut self, _heads: usize) {}
 
+    /// True for layers whose math couples rows within a sequence and which
+    /// therefore consult [`ForwardCtx::seq_batch`] (the attention
+    /// variants). The default — `false` — is the row-wise adapter: a layer
+    /// that treats every row independently is already correct under any
+    /// sequence decomposition and can ignore the batch entirely, which is
+    /// why `Linear`/`SKLinear`/conv/activation needed no changes for the
+    /// sequence-native path.
+    fn is_sequence_aware(&self) -> bool {
+        false
+    }
+
     /// Stored trained-parameter count, derived from the [`Module::params`]
     /// registry — never a hand-maintained formula.
     fn param_count(&self) -> usize {
@@ -842,5 +1041,66 @@ mod tests {
         let from_views: usize = l.params().iter().map(|(_, p)| p.len()).sum();
         assert_eq!(Module::param_count(&l), from_views);
         assert_eq!(from_views, 7 * 5 + 5);
+    }
+
+    #[test]
+    fn seq_batch_packed_layout() {
+        let sb = SeqBatch::packed(vec![3, 1, 4]).unwrap();
+        assert_eq!(sb.num_seqs(), 3);
+        assert_eq!(sb.lens(), &[3, 1, 4]);
+        assert_eq!(sb.max_len(), 4);
+        assert_eq!(sb.total_tokens(), 8);
+        assert_eq!(sb.total_rows(), 8, "packed: no pad rows");
+        assert!(sb.is_full());
+        assert_eq!(sb.segments(), vec![(0, 3), (3, 1), (4, 4)]);
+        assert_eq!(sb.token_mask(), vec![1.0; 8]);
+        // Degenerate batches are rejected.
+        assert!(SeqBatch::packed(vec![]).is_err());
+        assert!(SeqBatch::packed(vec![2, 0]).is_err());
+    }
+
+    #[test]
+    fn seq_batch_padded_layout() {
+        let sb = SeqBatch::padded(vec![3, 2], 4).unwrap();
+        assert_eq!(sb.total_tokens(), 5);
+        assert_eq!(sb.total_rows(), 8, "2 sequences x stride 4");
+        assert!(!sb.is_full());
+        assert_eq!(sb.segments(), vec![(0, 3), (4, 2)]);
+        assert_eq!(
+            sb.token_mask(),
+            vec![1.0, 1.0, 1.0, 0.0, 1.0, 1.0, 0.0, 0.0]
+        );
+        // Full-stride lengths make a padded batch equivalent to packed.
+        let full = SeqBatch::padded(vec![4, 4], 4).unwrap();
+        assert!(full.is_full());
+        assert_eq!(full.segments(), SeqBatch::packed(vec![4, 4]).unwrap().segments());
+        // Lengths beyond the stride are rejected.
+        assert!(SeqBatch::padded(vec![5], 4).is_err());
+        assert!(SeqBatch::padded(vec![0], 4).is_err());
+    }
+
+    #[test]
+    fn forward_ctx_threads_seq_batch_to_segments() {
+        let ctx = ForwardCtx::new();
+        // No batch installed: one full-length segment, any row count.
+        assert_eq!(ctx.segments_for(6), vec![(0, 6)]);
+        assert!(ctx.seq_batch().is_none());
+        let sb = SeqBatch::packed(vec![2, 3]).unwrap();
+        let ctx = ctx.with_seq(sb.clone());
+        assert_eq!(ctx.segments_for(5), vec![(0, 2), (2, 3)]);
+        assert_eq!(ctx.seq_batch().unwrap().lens(), sb.lens());
+        // Interior mutability: warm contexts swap batches between steps.
+        ctx.set_seq_batch(Some(SeqBatch::single(7)));
+        assert_eq!(ctx.segments_for(7), vec![(0, 7)]);
+        ctx.set_seq_batch(None);
+        assert!(ctx.seq_batch().is_none());
+        assert_eq!(ctx.segments_for(9), vec![(0, 9)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "SeqBatch describes")]
+    fn segments_for_panics_on_row_mismatch() {
+        let ctx = ForwardCtx::new().with_seq(SeqBatch::packed(vec![2, 3]).unwrap());
+        ctx.segments_for(6);
     }
 }

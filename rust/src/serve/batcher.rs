@@ -19,12 +19,20 @@
 //! row-coupled layers like attention at caps > 1.
 
 use super::metrics::TierMetrics;
+use super::transform::OutputTransform;
 use super::ServeError;
 use crate::linalg::Mat;
-use crate::nn::{ForwardCtx, Model};
+use crate::nn::{ForwardCtx, Model, SeqBatch};
 use std::collections::VecDeque;
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
+
+/// How much of a batch's budget one queued request consumes. Row requests
+/// all weigh 1 (the budget is the batch cap); sequence requests weigh
+/// their token count (the budget is the tier's per-step token budget).
+pub(crate) trait BatchItem {
+    fn weight(&self) -> usize;
+}
 
 /// One queued inference request: a single feature row plus its reply
 /// channel and enqueue time (end-to-end latency is measured from here).
@@ -34,24 +42,49 @@ pub(crate) struct ServeRequest {
     pub(crate) enqueued: Instant,
 }
 
-struct QueueInner {
-    deque: VecDeque<ServeRequest>,
+impl BatchItem for ServeRequest {
+    fn weight(&self) -> usize {
+        1
+    }
+}
+
+/// One queued *sequence* request: a whole `len × in_dim` token matrix.
+/// The reply is the transformed per-token output matrix.
+pub(crate) struct SeqServeRequest {
+    pub(crate) tokens: Mat,
+    pub(crate) reply: mpsc::Sender<Result<Mat, ServeError>>,
+    pub(crate) enqueued: Instant,
+}
+
+impl BatchItem for SeqServeRequest {
+    fn weight(&self) -> usize {
+        self.tokens.rows()
+    }
+}
+
+struct QueueInner<R> {
+    deque: VecDeque<R>,
     closed: bool,
 }
 
 /// Bounded MPMC request queue with blocking and non-blocking admission —
 /// the backpressure boundary of a tier. Closing the queue stops new
 /// admissions; already-queued requests drain (workers keep pulling until
-/// the queue is empty, then exit).
-pub(crate) struct TierQueue {
-    inner: Mutex<QueueInner>,
+/// the queue is empty, then exit). Generic over the request kind: row
+/// tiers queue [`ServeRequest`]s, sequence tiers queue
+/// [`SeqServeRequest`]s; batch formation is weight-budgeted through
+/// [`BatchItem`], which makes the row batcher (weight 1, budget =
+/// `max_batch`) and the continuous sequence batcher (weight = tokens,
+/// budget = `max_tokens`) the same admission loop.
+pub(crate) struct TierQueue<R: BatchItem> {
+    inner: Mutex<QueueInner<R>>,
     not_empty: Condvar,
     not_full: Condvar,
     cap: usize,
     metrics: Arc<TierMetrics>,
 }
 
-impl TierQueue {
+impl<R: BatchItem> TierQueue<R> {
     pub(crate) fn new(cap: usize, metrics: Arc<TierMetrics>) -> Self {
         TierQueue {
             inner: Mutex::new(QueueInner {
@@ -65,22 +98,22 @@ impl TierQueue {
         }
     }
 
-    fn locked(&self) -> MutexGuard<'_, QueueInner> {
+    fn locked(&self) -> MutexGuard<'_, QueueInner<R>> {
         crate::util::lock_ignore_poison(&self.inner)
     }
 
     fn wait<'a>(
         &self,
         cv: &Condvar,
-        guard: MutexGuard<'a, QueueInner>,
-    ) -> MutexGuard<'a, QueueInner> {
+        guard: MutexGuard<'a, QueueInner<R>>,
+    ) -> MutexGuard<'a, QueueInner<R>> {
         cv.wait(guard)
             .unwrap_or_else(std::sync::PoisonError::into_inner)
     }
 
     /// Enqueue, blocking while the queue is at capacity. Errors once the
     /// tier is shutting down (also when shutdown happens mid-wait).
-    pub(crate) fn submit(&self, req: ServeRequest) -> Result<(), ServeError> {
+    pub(crate) fn submit(&self, req: R) -> Result<(), ServeError> {
         let mut g = self.locked();
         loop {
             if g.closed {
@@ -100,7 +133,7 @@ impl TierQueue {
 
     /// Enqueue without blocking: a full queue is an immediate
     /// [`ServeError::QueueFull`] — the admission-control path.
-    pub(crate) fn try_submit(&self, req: ServeRequest) -> Result<(), ServeError> {
+    pub(crate) fn try_submit(&self, req: R) -> Result<(), ServeError> {
         let mut g = self.locked();
         if g.closed {
             return Err(ServeError::ShuttingDown);
@@ -116,16 +149,16 @@ impl TierQueue {
         Ok(())
     }
 
-    /// Pull the next batch: block for the first request, then coalesce up
-    /// to `max_batch` within `max_wait` of the first pull. Returns `None`
-    /// when the queue is closed *and* fully drained — the worker-exit
-    /// signal. During a drain (closed, non-empty) batches keep forming
-    /// from whatever is queued, without waiting for more.
-    pub(crate) fn next_batch(
-        &self,
-        max_batch: usize,
-        max_wait: Duration,
-    ) -> Option<Vec<ServeRequest>> {
+    /// Pull the next batch: block for the first request, then coalesce
+    /// more FIFO requests while their summed [`BatchItem::weight`] fits
+    /// `max_weight`, waiting at most `max_wait` after the first pull. A
+    /// front request that does not fit the remaining budget stays queued
+    /// for the *next* step — the admit/retire boundary of the continuous
+    /// sequence batcher. Returns `None` when the queue is closed *and*
+    /// fully drained — the worker-exit signal. During a drain (closed,
+    /// non-empty) batches keep forming from whatever is queued, without
+    /// waiting for more.
+    pub(crate) fn next_batch(&self, max_weight: usize, max_wait: Duration) -> Option<Vec<R>> {
         let mut g = self.locked();
         loop {
             if !g.deque.is_empty() {
@@ -136,17 +169,31 @@ impl TierQueue {
             }
             g = self.wait(&self.not_empty, g);
         }
-        let mut batch = Vec::with_capacity(max_batch);
-        batch.push(g.deque.pop_front().expect("non-empty"));
+        let mut batch = Vec::new();
+        // The head request ships unconditionally (admission already
+        // bounded single-request weight), so an over-budget head cannot
+        // wedge the queue.
+        let first = g.deque.pop_front().expect("non-empty");
+        let mut weight = first.weight();
+        batch.push(first);
         // `None` = un-representable deadline (e.g. `max_wait =
         // Duration::MAX`, a natural "always wait for a full batch"):
         // coalesce without a timeout instead of panicking on Instant
         // overflow.
         let deadline = Instant::now().checked_add(max_wait);
-        while batch.len() < max_batch {
-            if let Some(req) = g.deque.pop_front() {
+        loop {
+            while let Some(front) = g.deque.front() {
+                if weight + front.weight() > max_weight {
+                    break;
+                }
+                let req = g.deque.pop_front().expect("front exists");
+                weight += req.weight();
                 batch.push(req);
-                continue;
+            }
+            // Budget exhausted, or a queued head that must wait for the
+            // next step: ship what we have.
+            if weight >= max_weight || !g.deque.is_empty() {
+                break;
             }
             if g.closed {
                 break;
@@ -212,10 +259,11 @@ impl TierQueue {
 /// and the worker keeps serving.
 pub(crate) fn worker_loop(
     model: Arc<Model>,
-    queue: Arc<TierQueue>,
+    queue: Arc<TierQueue<ServeRequest>>,
     max_batch: usize,
     max_wait: Duration,
     in_dim: usize,
+    transform: OutputTransform,
     metrics: Arc<TierMetrics>,
 ) {
     let mut ctx = ForwardCtx::new().batch_hint(max_batch);
@@ -244,8 +292,15 @@ pub(crate) fn worker_loop(
                     metrics.record_latency(req.enqueued.elapsed());
                 }
                 metrics.record_batch(used, max_batch);
+                // Raw mode skips the transform allocation entirely — the
+                // reply rows are views into the batch output.
+                let decoded = match transform {
+                    OutputTransform::Raw => None,
+                    t => Some(t.apply(&y)),
+                };
+                let rows = decoded.as_ref().unwrap_or(&y);
                 for (i, req) in batch.into_iter().enumerate() {
-                    let _ = req.reply.send(Ok(y.row(i).to_vec()));
+                    let _ = req.reply.send(Ok(rows.row(i).to_vec()));
                 }
             }
             Ok(Ok(y)) => {
@@ -285,6 +340,105 @@ fn fail_batch(batch: Vec<ServeRequest>, metrics: &TierMetrics, max_batch: usize,
     }
 }
 
+/// The continuous sequence batcher: each step admits queued sequences
+/// FIFO up to the tier's `max_tokens` budget, packs them into one
+/// variable-row matrix with a [`SeqBatch`] descriptor, runs **one**
+/// masked `Model::forward_seq`, and retires every admitted sequence with
+/// its own result slice (transformed per tier). A sequence that does not
+/// fit the current step's remaining budget simply rides the next step —
+/// admission and retirement are per step, so long and short sequences
+/// share the tier without head-of-line blocking beyond one step.
+///
+/// Panic containment matches [`worker_loop`]: a panicking forward fails
+/// only its own step's sequences and the warm context is replaced
+/// (`forward_seq` restores the context's sequence batch even on error,
+/// so the ctx is only discarded on a panic).
+pub(crate) fn seq_worker_loop(
+    model: Arc<Model>,
+    queue: Arc<TierQueue<SeqServeRequest>>,
+    max_tokens: usize,
+    max_wait: Duration,
+    in_dim: usize,
+    transform: OutputTransform,
+    metrics: Arc<TierMetrics>,
+) {
+    let mut ctx = ForwardCtx::new();
+    while let Some(batch) = queue.next_batch(max_tokens, max_wait) {
+        let lens: Vec<usize> = batch.iter().map(|r| r.tokens.rows()).collect();
+        let total: usize = lens.iter().sum();
+        let mut x = Mat::zeros(total, in_dim);
+        let mut off = 0;
+        for req in &batch {
+            for i in 0..req.tokens.rows() {
+                x.row_mut(off + i).copy_from_slice(req.tokens.row(i));
+            }
+            off += req.tokens.rows();
+        }
+        let sb = match SeqBatch::packed(lens.clone()) {
+            Ok(sb) => sb,
+            Err(e) => {
+                fail_seq_batch(batch, &metrics, format!("{e:#}"));
+                continue;
+            }
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            model.forward_seq(&x, &sb, &ctx)
+        }));
+        match result {
+            Ok(Ok(y)) if y.rows() == total => {
+                for req in &batch {
+                    metrics.record_latency(req.enqueued.elapsed());
+                }
+                metrics.record_batch(batch.len(), batch.len());
+                metrics.record_tokens(total as u64);
+                let mut off = 0;
+                for (req, &len) in batch.into_iter().zip(&lens) {
+                    let mut slice = Mat::zeros(len, y.cols());
+                    for i in 0..len {
+                        slice.row_mut(i).copy_from_slice(y.row(off + i));
+                    }
+                    off += len;
+                    let out = match transform {
+                        OutputTransform::Raw => slice,
+                        t => t.apply(&slice),
+                    };
+                    let _ = req.reply.send(Ok(out));
+                }
+            }
+            Ok(Ok(y)) => {
+                let msg = format!(
+                    "model mapped {total} packed token rows to {} — cannot \
+                     route sequence slices",
+                    y.rows()
+                );
+                fail_seq_batch(batch, &metrics, msg);
+            }
+            Ok(Err(e)) => fail_seq_batch(batch, &metrics, format!("{e:#}")),
+            Err(payload) => {
+                let cause = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".to_string());
+                ctx = ForwardCtx::new();
+                fail_seq_batch(batch, &metrics, format!("forward panicked: {cause}"));
+            }
+        }
+    }
+}
+
+/// [`fail_batch`] for sequence steps.
+fn fail_seq_batch(batch: Vec<SeqServeRequest>, metrics: &TierMetrics, msg: String) {
+    metrics.record_error(batch.len() as u64);
+    for req in &batch {
+        metrics.record_latency(req.enqueued.elapsed());
+    }
+    metrics.record_batch(batch.len(), batch.len().max(1));
+    for req in batch {
+        let _ = req.reply.send(Err(ServeError::Exec(msg.clone())));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -302,8 +456,20 @@ mod tests {
         )
     }
 
-    fn queue(cap: usize) -> Arc<TierQueue> {
+    fn queue(cap: usize) -> Arc<TierQueue<ServeRequest>> {
         Arc::new(TierQueue::new(cap, Arc::new(TierMetrics::default())))
+    }
+
+    fn seq_req(len: usize) -> (SeqServeRequest, mpsc::Receiver<Result<Mat, ServeError>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            SeqServeRequest {
+                tokens: Mat::zeros(len, 1),
+                reply: tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
     }
 
     #[test]
@@ -367,6 +533,36 @@ mod tests {
         // FIFO order preserved across batches.
         assert_eq!(b1[0].row, vec![0.0]);
         assert_eq!(b2[0].row, vec![4.0]);
+    }
+
+    #[test]
+    fn token_budget_coalescing_defers_oversized_heads() {
+        // Sequences of 6, 3, 4, 2 tokens against a 10-token step budget:
+        // step 1 admits 6+3 (4 would overflow), step 2 admits 4+2. The
+        // deferred head is NOT skipped over — FIFO order is preserved,
+        // it just rides the next step.
+        let q: Arc<TierQueue<SeqServeRequest>> =
+            Arc::new(TierQueue::new(16, Arc::new(TierMetrics::default())));
+        for len in [6usize, 3, 4, 2] {
+            let (r, _rx) = seq_req(len);
+            q.submit(r).unwrap();
+        }
+        let step1 = q.next_batch(10, Duration::from_millis(5)).unwrap();
+        assert_eq!(
+            step1.iter().map(|r| r.weight()).collect::<Vec<_>>(),
+            vec![6, 3]
+        );
+        let step2 = q.next_batch(10, Duration::from_millis(5)).unwrap();
+        assert_eq!(
+            step2.iter().map(|r| r.weight()).collect::<Vec<_>>(),
+            vec![4, 2]
+        );
+        // An over-budget head still ships alone instead of wedging.
+        let (big, _rx) = seq_req(99);
+        q.submit(big).unwrap();
+        let step3 = q.next_batch(10, Duration::from_millis(5)).unwrap();
+        assert_eq!(step3.len(), 1);
+        assert_eq!(step3[0].weight(), 99);
     }
 
     #[test]

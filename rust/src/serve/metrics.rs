@@ -25,6 +25,9 @@ pub struct TierMetrics {
     rejected: AtomicU64,
     /// Requests answered with an execution error.
     errors: AtomicU64,
+    /// Token rows executed through packed sequence steps (sequence tiers
+    /// only — row tiers leave this at zero).
+    tokens: AtomicU64,
     occupancy: Mutex<OccupancyHist>,
     /// End-to-end latency (enqueue → reply), queue wait included.
     latency: Mutex<DurationHist>,
@@ -59,6 +62,10 @@ impl TierMetrics {
         self.occ().record(used, capacity);
     }
 
+    pub(crate) fn record_tokens(&self, n: u64) {
+        self.tokens.fetch_add(n, Ordering::SeqCst);
+    }
+
     pub(crate) fn record_latency(&self, d: Duration) {
         self.lat().record(d);
     }
@@ -76,6 +83,11 @@ impl TierMetrics {
     /// Requests answered with an execution error.
     pub fn errors(&self) -> u64 {
         self.errors.load(Ordering::SeqCst)
+    }
+
+    /// Token rows executed through packed sequence steps.
+    pub fn tokens(&self) -> u64 {
+        self.tokens.load(Ordering::SeqCst)
     }
 
     /// Batches executed.
@@ -157,7 +169,8 @@ impl Metrics {
         let mut names: Vec<&String> = map.keys().collect();
         names.sort();
         let mut t = crate::util::bench::Table::new(&[
-            "tier", "requests", "batches", "occ", "depth", "p50", "p99", "rejected", "errors",
+            "tier", "requests", "batches", "occ", "tokens", "depth", "p50", "p99", "rejected",
+            "errors",
         ]);
         for n in names {
             let m = &map[n];
@@ -166,6 +179,7 @@ impl Metrics {
                 m.requests().to_string(),
                 m.batches().to_string(),
                 format!("{:.2}", m.mean_occupancy()),
+                m.tokens().to_string(),
                 m.queue_depth().to_string(),
                 crate::util::human_duration(m.latency_p50()),
                 crate::util::human_duration(m.latency_p99()),
@@ -193,6 +207,8 @@ mod tests {
         t.record_latency(Duration::from_millis(8));
         t.record_rejected();
         t.record_error(2);
+        t.record_tokens(48);
+        assert_eq!(t.tokens(), 48);
         assert_eq!(t.queue_depth(), 1);
         assert_eq!(t.batches(), 2);
         assert_eq!(t.requests(), 6);

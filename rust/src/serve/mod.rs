@@ -27,6 +27,23 @@
 //!   across arrival orders and batch compositions, and registration
 //!   *probes* (bitwise) that co-rows and padding never leak into a live
 //!   row — see [`router`] for the exact guarantees.
+//! - **Sequence tiers** ([`ModelServer::register_seq_tier`]) serve whole
+//!   variable-length sequences through attention-bearing stacks that row
+//!   tiers must reject as `RowCoupled`. Workers run a **continuous
+//!   batcher**: each step packs queued sequences FIFO into one
+//!   [`crate::nn::SeqBatch`]-masked forward while their summed lengths
+//!   fit the tier's token budget — sequences are admitted and retired at
+//!   every step boundary, never held for stragglers. A memory budget on
+//!   a sequence tier buys *length*, not workers: registration probes
+//!   peak activations at two lengths, fits `α·n² + β·n`
+//!   ([`crate::nn::cost::max_len_under_budget`]), and advertises the
+//!   largest admitted sequence as [`SeqTierInfo::max_seq_len`] — where a
+//!   Performer tier (α ≈ 0) admits strictly longer sequences than a
+//!   dense-attention tier (α > 0) under the same budget.
+//! - Tiers can decode server-side before replying
+//!   ([`OutputTransform`]): row-wise softmax, or a top-k `(index,
+//!   logprob)` shortlist that shrinks vocab-wide logit rows to `2·k`
+//!   floats.
 //! - [`Metrics`] tracks queue depth, a batch-occupancy histogram, and
 //!   p50/p99 end-to-end latency per tier, reusing the
 //!   [`crate::util::stats`] shapes the coordinator's batcher records.
@@ -55,12 +72,15 @@
 pub mod batcher;
 pub mod metrics;
 pub mod router;
+pub mod transform;
 
 pub use metrics::{Metrics, TierMetrics};
+pub use transform::OutputTransform;
 
+use crate::linalg::Mat;
 use crate::nn::Model;
-use batcher::{worker_loop, ServeRequest, TierQueue};
-use router::{probe_model, Router, Tier};
+use batcher::{seq_worker_loop, worker_loop, SeqServeRequest, ServeRequest, TierQueue};
+use router::{probe_model, probe_seq_model, Router, Tier};
 use std::path::Path;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
@@ -98,6 +118,10 @@ pub enum ServeError {
     /// The tier's memory budget cannot fit the model plus at least one
     /// worker's batch footprint.
     Budget(String),
+    /// A sequence request exceeds the tier's admitted maximum length
+    /// (the memory-fit/token-budget cap in
+    /// [`SeqTierInfo::max_seq_len`]).
+    SeqTooLong { len: usize, max: usize },
 }
 
 impl std::fmt::Display for ServeError {
@@ -114,6 +138,11 @@ impl std::fmt::Display for ServeError {
             ServeError::Probe(m) => write!(f, "registration probe failed: {m}"),
             ServeError::Spawn(m) => write!(f, "spawning tier worker failed: {m}"),
             ServeError::Budget(m) => write!(f, "memory budget too small: {m}"),
+            ServeError::SeqTooLong { len, max } => write!(
+                f,
+                "sequence of {len} tokens exceeds the tier's admitted \
+                 maximum of {max}"
+            ),
         }
     }
 }
@@ -147,6 +176,9 @@ pub struct TierConfig {
     /// probe, so the measured per-batch footprint (and therefore the
     /// budget admission) reflects it.
     pub head_group: Option<usize>,
+    /// Server-side decode applied to each result row before it is
+    /// replied (see [`OutputTransform`]); `Raw` is a zero-copy no-op.
+    pub transform: OutputTransform,
 }
 
 impl Default for TierConfig {
@@ -158,6 +190,57 @@ impl Default for TierConfig {
             workers: 2,
             mem_budget: None,
             head_group: None,
+            transform: OutputTransform::Raw,
+        }
+    }
+}
+
+/// Per-tier policy for **sequence** serving: whole variable-length
+/// sequences in, one result row per token out, packed per step by the
+/// continuous batcher.
+#[derive(Debug, Clone)]
+pub struct SeqTierConfig {
+    /// Per-step packed token budget: each batcher step admits queued
+    /// sequences FIFO while their summed lengths fit this many rows.
+    /// Also an upper bound on the admitted per-sequence length.
+    pub max_tokens: usize,
+    /// How long a step waits for co-sequences after its first admit.
+    pub max_wait: Duration,
+    /// Bounded queue length (in sequences) — the backpressure boundary.
+    pub queue_cap: usize,
+    /// Worker threads, each running its own continuous-batching loop.
+    pub workers: usize,
+    /// Optional tier memory budget in bytes. For sequence tiers the
+    /// budget buys *length*, not worker count: registration probes peak
+    /// activation bytes at two sequence lengths, fits the
+    /// `α·n² + β·n` model ([`crate::nn::cost::max_len_under_budget`]),
+    /// and admits only sequences whose predicted peak (plus weights)
+    /// fits. A Performer tier measures α ≈ 0 and advertises a far longer
+    /// [`SeqTierInfo::max_seq_len`] than a dense-attention tier under
+    /// the *same* budget — the paper's linear-attention memory claim
+    /// turned into admission capacity.
+    pub mem_budget: Option<u64>,
+    /// Forwarded to [`crate::nn::Module::set_head_group`] before the
+    /// probe, as for row tiers.
+    pub head_group: Option<usize>,
+    /// Server-side decode applied per token row of each sequence reply.
+    pub transform: OutputTransform,
+    /// Probe sequence length `n0` for the admission fit (measured at
+    /// `n0` and `2·n0`).
+    pub probe_len: usize,
+}
+
+impl Default for SeqTierConfig {
+    fn default() -> Self {
+        SeqTierConfig {
+            max_tokens: 256,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 64,
+            workers: 2,
+            mem_budget: None,
+            head_group: None,
+            transform: OutputTransform::Raw,
+            probe_len: 16,
         }
     }
 }
@@ -181,6 +264,35 @@ pub struct TierInfo {
     /// Whether the cap-padded forward reproduced the unbatched single-row
     /// forward bit-for-bit in the probe (see [`router`] docs).
     pub bit_identical_to_unbatched: bool,
+}
+
+/// What registration admitted and measured for a **sequence** tier.
+#[derive(Debug, Clone)]
+pub struct SeqTierInfo {
+    pub name: String,
+    /// Token row width.
+    pub in_dim: usize,
+    /// Reply row width per token (after the tier's
+    /// [`OutputTransform`]).
+    pub out_dim: usize,
+    /// Per-step packed token budget of the continuous batcher.
+    pub max_tokens: usize,
+    /// Admitted worker threads.
+    pub workers: usize,
+    /// Stored parameter bytes of the tier's model.
+    pub weight_bytes: u64,
+    /// Longest single sequence this tier admits: `max_tokens` capped by
+    /// the memory-budget fit ([`crate::nn::cost::max_len_under_budget`]
+    /// over the two probe measurements). Under the same budget a
+    /// Performer tier's cap strictly exceeds a dense-attention tier's —
+    /// linear vs quadratic activation growth.
+    pub max_seq_len: usize,
+    /// Whether the registration probe reproduced a solo sequence
+    /// bit-for-bit when packed behind a co-sequence. Attention mixes
+    /// within a sequence by design but never across [`crate::nn::SeqBatch`]
+    /// segments; this records what the probe measured at the tier's
+    /// probe length.
+    pub seq_stable: bool,
 }
 
 /// The serving front end: tier registry + worker pools + metrics.
@@ -235,6 +347,9 @@ impl ModelServer {
             model.set_head_group(g);
         }
         let probe = probe_model(&model, in_dim, cfg.max_batch)?;
+        if let Err(m) = cfg.transform.validate(probe.out_dim) {
+            return Err(ServeError::BadInput(m));
+        }
         let weight_bytes = (model.total_params() * 4) as u64;
         let workers = match cfg.mem_budget {
             None => cfg.workers,
@@ -255,7 +370,7 @@ impl ModelServer {
         let info = TierInfo {
             name: name.to_string(),
             in_dim,
-            out_dim: probe.out_dim,
+            out_dim: cfg.transform.out_width(probe.out_dim),
             max_batch: cfg.max_batch,
             workers,
             weight_bytes,
@@ -273,10 +388,10 @@ impl ModelServer {
         let mut handles = Vec::with_capacity(workers);
         for i in 0..workers {
             let (m, q, tm) = (Arc::clone(&model), Arc::clone(&queue), Arc::clone(&tier_metrics));
-            let (cap, wait) = (cfg.max_batch, cfg.max_wait);
+            let (cap, wait, tf) = (cfg.max_batch, cfg.max_wait, cfg.transform);
             let spawned = std::thread::Builder::new()
                 .name(format!("panther-serve-{name}-{i}"))
-                .spawn(move || worker_loop(m, q, cap, wait, in_dim, tm));
+                .spawn(move || worker_loop(m, q, cap, wait, in_dim, tf, tm));
             match spawned {
                 Ok(h) => handles.push(h),
                 Err(e) => {
@@ -291,7 +406,7 @@ impl ModelServer {
         }
         let inserted = self.router.insert(
             name,
-            Tier {
+            Tier::Row {
                 queue: Arc::clone(&queue),
                 info: info.clone(),
             },
@@ -327,6 +442,130 @@ impl ModelServer {
         Ok(self.register_tier(name, arch, in_dim, cfg)?)
     }
 
+    /// Register `model` as **sequence** tier `name`: whole variable-length
+    /// sequences (an `n × in_dim` token matrix each) in, one result row
+    /// per token out. Workers run a continuous batcher — each step packs
+    /// queued sequences FIFO into one [`crate::nn::SeqBatch`]-masked
+    /// forward while their summed lengths fit `cfg.max_tokens`, so
+    /// admission and retirement happen at every step boundary rather than
+    /// per fixed batch.
+    ///
+    /// Unlike [`ModelServer::register_tier`], row-coupling (attention) is
+    /// *expected* here — masking confines mixing to within each sequence,
+    /// and the probe records cross-segment bitwise stability in
+    /// [`SeqTierInfo::seq_stable`] instead of rejecting. A memory budget
+    /// buys *length*: the probe measures peak activation bytes at
+    /// `cfg.probe_len` and `2·probe_len`, fits `α·n² + β·n`, and
+    /// [`SeqTierInfo::max_seq_len`] is the largest admitted length
+    /// (requests beyond it get [`ServeError::SeqTooLong`]).
+    pub fn register_seq_tier(
+        &mut self,
+        name: &str,
+        mut model: Model,
+        in_dim: usize,
+        cfg: SeqTierConfig,
+    ) -> Result<SeqTierInfo, ServeError> {
+        if self.closed {
+            return Err(ServeError::ShuttingDown);
+        }
+        if in_dim == 0
+            || cfg.max_tokens == 0
+            || cfg.queue_cap == 0
+            || cfg.workers == 0
+            || cfg.probe_len == 0
+        {
+            return Err(ServeError::BadInput(
+                "in_dim, max_tokens, queue_cap, workers and probe_len must be positive".into(),
+            ));
+        }
+        if self.router.get(name).is_ok() {
+            return Err(ServeError::DuplicateTier(name.to_string()));
+        }
+        if let Some(g) = cfg.head_group {
+            model.set_head_group(g);
+        }
+        let probe = probe_seq_model(&model, in_dim, cfg.probe_len)?;
+        if let Err(m) = cfg.transform.validate(probe.out_dim) {
+            return Err(ServeError::BadInput(m));
+        }
+        let weight_bytes = (model.total_params() * 4) as u64;
+        let max_seq_len = match cfg.mem_budget {
+            None => cfg.max_tokens,
+            Some(budget) => {
+                let fit = crate::nn::cost::max_len_under_budget(
+                    cfg.probe_len,
+                    probe.peak0,
+                    probe.peak1,
+                    weight_bytes,
+                    budget,
+                );
+                if fit == 0 {
+                    return Err(ServeError::Budget(format!(
+                        "budget {budget} B < {weight_bytes} B weights + the \
+                         peak activations of even a 1-token sequence \
+                         (probe: {} B at n={}, {} B at n={})",
+                        probe.peak0,
+                        cfg.probe_len,
+                        probe.peak1,
+                        2 * cfg.probe_len
+                    )));
+                }
+                fit.min(cfg.max_tokens)
+            }
+        };
+        let info = SeqTierInfo {
+            name: name.to_string(),
+            in_dim,
+            out_dim: cfg.transform.out_width(probe.out_dim),
+            max_tokens: cfg.max_tokens,
+            workers: cfg.workers,
+            weight_bytes,
+            max_seq_len,
+            seq_stable: probe.seq_stable,
+        };
+        let tier_metrics = self.metrics.tier_entry(name);
+        let queue = Arc::new(TierQueue::new(cfg.queue_cap, Arc::clone(&tier_metrics)));
+        // Same all-or-nothing spawn discipline as register_tier: the tier
+        // only becomes routable once its whole worker pool is live.
+        let model = Arc::new(model);
+        let mut handles = Vec::with_capacity(cfg.workers);
+        for i in 0..cfg.workers {
+            let (m, q, tm) = (Arc::clone(&model), Arc::clone(&queue), Arc::clone(&tier_metrics));
+            let (toks, wait, tf) = (cfg.max_tokens, cfg.max_wait, cfg.transform);
+            let spawned = std::thread::Builder::new()
+                .name(format!("panther-serve-{name}-{i}"))
+                .spawn(move || seq_worker_loop(m, q, toks, wait, in_dim, tf, tm));
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    queue.close();
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    self.metrics.remove_tier(name);
+                    return Err(ServeError::Spawn(e.to_string()));
+                }
+            }
+        }
+        let inserted = self.router.insert(
+            name,
+            Tier::Seq {
+                queue: Arc::clone(&queue),
+                info: info.clone(),
+            },
+        );
+        if let Err(e) = inserted {
+            queue.close();
+            for h in handles {
+                let _ = h.join();
+            }
+            self.metrics.remove_tier(name);
+            return Err(e);
+        }
+        self.workers.extend(handles);
+        Ok(info)
+    }
+
     /// Cloneable client handle.
     pub fn handle(&self) -> ServeHandle {
         ServeHandle {
@@ -344,9 +583,22 @@ impl ModelServer {
         self.router.names()
     }
 
-    /// What registration admitted for `name`.
+    /// What registration admitted for row tier `name` (`None` for
+    /// unknown names and for sequence tiers — see
+    /// [`ModelServer::seq_tier_info`]).
     pub fn tier_info(&self, name: &str) -> Option<TierInfo> {
-        self.router.get(name).ok().map(|t| t.info.clone())
+        match self.router.get(name).ok().as_deref() {
+            Some(Tier::Row { info, .. }) => Some(info.clone()),
+            _ => None,
+        }
+    }
+
+    /// What registration admitted for sequence tier `name`.
+    pub fn seq_tier_info(&self, name: &str) -> Option<SeqTierInfo> {
+        match self.router.get(name).ok().as_deref() {
+            Some(Tier::Seq { info, .. }) => Some(info.clone()),
+            _ => None,
+        }
     }
 
     /// Graceful drain: stop admissions (subsequent submits get
@@ -381,12 +633,20 @@ impl ServeHandle {
         &self,
         tier: &str,
         row: &[f32],
-    ) -> Result<(Arc<Tier>, ServeRequest, PendingReply), ServeError> {
+    ) -> Result<(Arc<TierQueue<ServeRequest>>, ServeRequest, PendingReply), ServeError> {
         let t = self.router.get(tier)?;
-        if row.len() != t.info.in_dim {
+        let (queue, info) = match &*t {
+            Tier::Row { queue, info } => (Arc::clone(queue), info),
+            Tier::Seq { .. } => {
+                return Err(ServeError::BadInput(format!(
+                    "tier {tier:?} serves sequences — use infer_seq/submit_seq"
+                )))
+            }
+        };
+        if row.len() != info.in_dim {
             return Err(ServeError::BadInput(format!(
                 "tier {tier:?} serves rows of width {}, got {}",
-                t.info.in_dim,
+                info.in_dim,
                 row.len()
             )));
         }
@@ -396,22 +656,63 @@ impl ServeHandle {
             reply: tx,
             enqueued: Instant::now(),
         };
-        Ok((t, req, PendingReply { rx }))
+        Ok((queue, req, PendingReply { rx }))
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn seq_request(
+        &self,
+        tier: &str,
+        tokens: &Mat,
+    ) -> Result<(Arc<TierQueue<SeqServeRequest>>, SeqServeRequest, PendingSeqReply), ServeError>
+    {
+        let t = self.router.get(tier)?;
+        let (queue, info) = match &*t {
+            Tier::Seq { queue, info } => (Arc::clone(queue), info),
+            Tier::Row { .. } => {
+                return Err(ServeError::BadInput(format!(
+                    "tier {tier:?} serves single rows — use infer/submit"
+                )))
+            }
+        };
+        if tokens.cols() != info.in_dim {
+            return Err(ServeError::BadInput(format!(
+                "tier {tier:?} serves token rows of width {}, got {}",
+                info.in_dim,
+                tokens.cols()
+            )));
+        }
+        if tokens.rows() == 0 {
+            return Err(ServeError::BadInput("empty sequence".into()));
+        }
+        if tokens.rows() > info.max_seq_len {
+            return Err(ServeError::SeqTooLong {
+                len: tokens.rows(),
+                max: info.max_seq_len,
+            });
+        }
+        let (tx, rx) = mpsc::channel();
+        let req = SeqServeRequest {
+            tokens: tokens.clone(),
+            reply: tx,
+            enqueued: Instant::now(),
+        };
+        Ok((queue, req, PendingSeqReply { rx }))
     }
 
     /// Enqueue a request, blocking while the tier queue is full. The
     /// reply arrives when the batch it joins completes.
     pub fn submit(&self, tier: &str, row: &[f32]) -> Result<PendingReply, ServeError> {
-        let (t, req, pending) = self.request(tier, row)?;
-        t.queue.submit(req)?;
+        let (queue, req, pending) = self.request(tier, row)?;
+        queue.submit(req)?;
         Ok(pending)
     }
 
     /// [`ServeHandle::submit`] without blocking: a full queue is an
     /// immediate [`ServeError::QueueFull`].
     pub fn try_submit(&self, tier: &str, row: &[f32]) -> Result<PendingReply, ServeError> {
-        let (t, req, pending) = self.request(tier, row)?;
-        t.queue.try_submit(req)?;
+        let (queue, req, pending) = self.request(tier, row)?;
+        queue.try_submit(req)?;
         Ok(pending)
     }
 
@@ -424,6 +725,36 @@ impl ServeHandle {
     pub fn try_infer(&self, tier: &str, row: &[f32]) -> Result<Vec<f32>, ServeError> {
         self.try_submit(tier, row)?.wait()
     }
+
+    /// Enqueue a whole sequence (an `n × in_dim` token matrix) on a
+    /// sequence tier, blocking while its queue is full. Length admission
+    /// is checked here ([`ServeError::SeqTooLong`] beyond
+    /// [`SeqTierInfo::max_seq_len`]); the reply is the per-token result
+    /// matrix for exactly this sequence, independent of which co-sequences
+    /// the continuous batcher packed alongside it.
+    pub fn submit_seq(&self, tier: &str, tokens: &Mat) -> Result<PendingSeqReply, ServeError> {
+        let (queue, req, pending) = self.seq_request(tier, tokens)?;
+        queue.submit(req)?;
+        Ok(pending)
+    }
+
+    /// [`ServeHandle::submit_seq`] without blocking: a full queue is an
+    /// immediate [`ServeError::QueueFull`].
+    pub fn try_submit_seq(&self, tier: &str, tokens: &Mat) -> Result<PendingSeqReply, ServeError> {
+        let (queue, req, pending) = self.seq_request(tier, tokens)?;
+        queue.try_submit(req)?;
+        Ok(pending)
+    }
+
+    /// Score one sequence (blocks until its batcher step completes).
+    pub fn infer_seq(&self, tier: &str, tokens: &Mat) -> Result<Mat, ServeError> {
+        self.submit_seq(tier, tokens)?.wait()
+    }
+
+    /// [`ServeHandle::infer_seq`] with fail-fast admission.
+    pub fn try_infer_seq(&self, tier: &str, tokens: &Mat) -> Result<Mat, ServeError> {
+        self.try_submit_seq(tier, tokens)?.wait()
+    }
 }
 
 /// An in-flight request; [`PendingReply::wait`] blocks for the result.
@@ -434,6 +765,19 @@ pub struct PendingReply {
 impl PendingReply {
     /// Block until the request's batch completes.
     pub fn wait(self) -> Result<Vec<f32>, ServeError> {
+        self.rx.recv().map_err(|_| ServeError::Disconnected)?
+    }
+}
+
+/// An in-flight sequence request; [`PendingSeqReply::wait`] blocks for
+/// the per-token result matrix.
+pub struct PendingSeqReply {
+    rx: mpsc::Receiver<Result<Mat, ServeError>>,
+}
+
+impl PendingSeqReply {
+    /// Block until the sequence's batcher step completes.
+    pub fn wait(self) -> Result<Mat, ServeError> {
         self.rx.recv().map_err(|_| ServeError::Disconnected)?
     }
 }
@@ -554,5 +898,91 @@ mod tests {
         let want = model.forward(&crate::linalg::Mat::from_vec(1, 8, row), &ctx).unwrap();
         assert_eq!(got.as_slice(), want.row(0));
         std::fs::remove_file(&path).ok();
+    }
+
+    fn attn_model(seed: u64) -> Model {
+        use crate::nn::{AttnWeights, MultiHeadAttention};
+        let mut rng = Philox::seeded(seed);
+        let mut m = Model::new();
+        m.add("attn", MultiHeadAttention::new(AttnWeights::random(8, 2, &mut rng)))
+            .unwrap();
+        m.add("head", Linear::random(8, 4, &mut rng)).unwrap();
+        m
+    }
+
+    #[test]
+    fn seq_tier_serves_attention_and_enforces_length() {
+        use crate::nn::{ForwardCtx, SeqBatch};
+        let mut server = ModelServer::new();
+        let cfg = SeqTierConfig {
+            max_tokens: 24,
+            probe_len: 6,
+            ..SeqTierConfig::default()
+        };
+        let info = server.register_seq_tier("seq", attn_model(7), 8, cfg).unwrap();
+        assert_eq!(info.out_dim, 4);
+        assert_eq!(info.max_seq_len, 24, "no budget: cap is the token budget");
+        assert_eq!(server.seq_tier_info("seq").unwrap().max_seq_len, 24);
+        assert!(server.tier_info("seq").is_none(), "not a row tier");
+        let h = server.handle();
+        let mut rng = Philox::seeded(8);
+        let x = Mat::randn(5, 8, &mut rng);
+        let got = h.infer_seq("seq", &x).unwrap();
+        // The served sequence result is the standalone masked forward.
+        let want = attn_model(7)
+            .forward_seq(&x, &SeqBatch::single(5), &ForwardCtx::new())
+            .unwrap();
+        assert_eq!(got.data(), want.data());
+        // Length admission and shape validation are typed errors.
+        let long = Mat::zeros(25, 8);
+        assert!(matches!(
+            h.infer_seq("seq", &long),
+            Err(ServeError::SeqTooLong { len: 25, max: 24 })
+        ));
+        assert!(matches!(
+            h.infer_seq("seq", &Mat::zeros(3, 5)),
+            Err(ServeError::BadInput(_))
+        ));
+        assert!(matches!(
+            h.infer_seq("seq", &Mat::zeros(0, 8)),
+            Err(ServeError::BadInput(_))
+        ));
+        // Row API on a sequence tier (and vice versa) is a typed error.
+        assert!(matches!(h.infer("seq", &[0.0; 8]), Err(ServeError::BadInput(_))));
+        server.register_tier("row", mlp(1), 8, TierConfig::default()).unwrap();
+        assert!(matches!(
+            h.infer_seq("row", &Mat::zeros(2, 8)),
+            Err(ServeError::BadInput(_))
+        ));
+        server.shutdown();
+        assert!(matches!(
+            h.infer_seq("seq", &Mat::zeros(2, 8)),
+            Err(ServeError::ShuttingDown)
+        ));
+    }
+
+    #[test]
+    fn transforms_decode_server_side() {
+        let mut server = ModelServer::new();
+        let cfg = TierConfig {
+            transform: OutputTransform::TopK(2),
+            ..TierConfig::default()
+        };
+        let info = server.register_tier("topk", mlp(9), 8, cfg).unwrap();
+        assert_eq!(info.out_dim, 4, "2·k floats per row");
+        let y = server.handle().infer("topk", &[0.3; 8]).unwrap();
+        assert_eq!(y.len(), 4);
+        // Replies are (index, logprob) pairs: indices in range, logprobs ≤ 0.
+        assert!((y[0] as usize) < 4 && (y[2] as usize) < 4);
+        assert!(y[1] <= 0.0 && y[3] <= y[1]);
+        // TopK wider than the model's output is rejected at registration.
+        let bad = TierConfig {
+            transform: OutputTransform::TopK(99),
+            ..TierConfig::default()
+        };
+        assert!(matches!(
+            server.register_tier("wide", mlp(9), 8, bad),
+            Err(ServeError::BadInput(_))
+        ));
     }
 }

@@ -26,19 +26,38 @@
 //!    height of 8); recorded in [`super::TierInfo`] so callers know which
 //!    guarantee they hold.
 
-use super::batcher::TierQueue;
-use super::{ServeError, TierInfo};
+use super::batcher::{SeqServeRequest, ServeRequest, TierQueue};
+use super::{SeqTierInfo, ServeError, TierInfo};
 use crate::linalg::Mat;
-use crate::nn::{ForwardCtx, Model};
+use crate::nn::{ForwardCtx, Model, SeqBatch};
 use crate::rng::Philox;
 use crate::util::memtrack::MemTracker;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, MutexGuard};
 
-/// One registered tier: the model replicaset behind a queue.
-pub(crate) struct Tier {
-    pub(crate) queue: Arc<TierQueue>,
-    pub(crate) info: TierInfo,
+/// One registered tier: the model replicaset behind its queue. Row tiers
+/// batch single-row requests to a fixed cap; sequence tiers pack
+/// variable-length sequences under a per-step token budget. The two
+/// request protocols are type-separated end to end — routing a row call
+/// at a sequence tier (or vice versa) is a typed error, not a reshape.
+pub(crate) enum Tier {
+    Row {
+        queue: Arc<TierQueue<ServeRequest>>,
+        info: TierInfo,
+    },
+    Seq {
+        queue: Arc<TierQueue<SeqServeRequest>>,
+        info: SeqTierInfo,
+    },
+}
+
+impl Tier {
+    fn close(&self) {
+        match self {
+            Tier::Row { queue, .. } => queue.close(),
+            Tier::Seq { queue, .. } => queue.close(),
+        }
+    }
 }
 
 /// Name → tier map shared between the server and its client handles.
@@ -78,7 +97,7 @@ impl Router {
     /// Close every tier queue (stops admissions; queued work drains).
     pub(crate) fn close_all(&self) {
         for tier in self.locked().values() {
-            tier.queue.close();
+            tier.close();
         }
     }
 }
@@ -144,6 +163,74 @@ pub(crate) fn probe_model(
     })
 }
 
+/// Sequence-tier probe results: peak activation bytes at two sequence
+/// lengths (`n0`, `2·n0`) — the two points
+/// [`crate::nn::cost::max_len_under_budget`] fits its admission model
+/// through — plus whether a packed co-sequence is bitwise invisible.
+pub(crate) struct SeqProbeReport {
+    pub(crate) out_dim: usize,
+    /// Peak activation bytes of a single length-`n0` sequence forward.
+    pub(crate) peak0: u64,
+    /// Peak activation bytes of a single length-`2·n0` sequence forward.
+    pub(crate) peak1: u64,
+    /// Whether the probe sequence's packed-with-a-co-sequence result was
+    /// bit-identical to its packed-alone result. Unlike the row probe
+    /// this does NOT reject on mismatch — sequence tiers exist precisely
+    /// to serve row-coupled (attention) stacks, whose masking makes
+    /// co-sequences *structurally* invisible; the flag records whether
+    /// the GEMM kernel path also kept them *bitwise* invisible at the
+    /// probe shapes.
+    pub(crate) seq_stable: bool,
+}
+
+/// Vet `model` for packed-sequence serving and measure the two peak
+/// points of the admission fit (see module docs and [`SeqProbeReport`]).
+pub(crate) fn probe_seq_model(
+    model: &Model,
+    in_dim: usize,
+    n0: usize,
+) -> Result<SeqProbeReport, ServeError> {
+    let mut rng = Philox::seeded(PROBE_SEED);
+    let probe = Mat::randn(n0, in_dim, &mut rng).scale(0.5);
+    let fail = |e: anyhow::Error| ServeError::Probe(format!("{e:#}"));
+    let tr0 = MemTracker::unlimited();
+    let ctx0 = ForwardCtx::with_tracker(tr0.clone());
+    let solo = model
+        .forward_seq(&probe, &SeqBatch::single(n0), &ctx0)
+        .map_err(fail)?;
+    if solo.rows() != n0 {
+        return Err(ServeError::Probe(format!(
+            "model maps a {n0}-token sequence to {} output rows — \
+             sequence serving needs one result row per token",
+            solo.rows()
+        )));
+    }
+    let long = Mat::randn(2 * n0, in_dim, &mut rng).scale(0.5);
+    let tr1 = MemTracker::unlimited();
+    let ctx1 = ForwardCtx::with_tracker(tr1.clone());
+    model
+        .forward_seq(&long, &SeqBatch::single(2 * n0), &ctx1)
+        .map_err(fail)?;
+    // Pack the probe sequence BEHIND a random co-sequence (offset ≠ 0 is
+    // the harder case for kernel-path stability) and compare its slice
+    // against the packed-alone result, bit for bit.
+    let co = Mat::randn(n0, in_dim, &mut rng).scale(0.5);
+    let mut x = Mat::zeros(2 * n0, in_dim);
+    for i in 0..n0 {
+        x.row_mut(i).copy_from_slice(co.row(i));
+        x.row_mut(n0 + i).copy_from_slice(probe.row(i));
+    }
+    let sb = SeqBatch::packed(vec![n0, n0]).map_err(fail)?;
+    let packed = model.forward_seq(&x, &sb, &ForwardCtx::new()).map_err(fail)?;
+    let seq_stable = (0..n0).all(|i| packed.row(n0 + i) == solo.row(i));
+    Ok(SeqProbeReport {
+        out_dim: solo.cols(),
+        peak0: tr0.peak_bytes(),
+        peak1: tr1.peak_bytes(),
+        seq_stable,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,10 +261,32 @@ mod tests {
     }
 
     #[test]
+    fn seq_probe_measures_two_points_and_stability() {
+        let mut rng = Philox::seeded(11);
+        let mut attn = Model::new();
+        attn.add(
+            "attn",
+            MultiHeadAttention::new(AttnWeights::random(8, 2, &mut rng)),
+        )
+        .unwrap();
+        // The row probe rejects this model; the seq probe admits it.
+        assert!(matches!(
+            probe_model(&attn, 8, 4).unwrap_err(),
+            ServeError::RowCoupled(_)
+        ));
+        let rep = probe_seq_model(&attn, 8, 8).unwrap();
+        assert_eq!(rep.out_dim, 8);
+        assert!(rep.peak1 > rep.peak0, "longer sequence, bigger peak");
+        // Small shapes stay below the GEMM packing threshold, where
+        // per-segment masking is bitwise exact.
+        assert!(rep.seq_stable, "co-sequence leaked into the probe result");
+    }
+
+    #[test]
     fn router_insert_get_duplicate() {
         use crate::serve::metrics::TierMetrics;
         let r = Router::default();
-        let mk = || Tier {
+        let mk = || Tier::Row {
             queue: Arc::new(TierQueue::new(4, Arc::new(TierMetrics::default()))),
             info: TierInfo {
                 name: "a".into(),

@@ -1,0 +1,159 @@
+//! Server-side output transforms: the decode step that turns raw model
+//! rows into what the client actually wants — probabilities or a compact
+//! top-k shortlist — applied per tier inside the worker loop, after the
+//! batched forward and before each row is routed back to its caller.
+//!
+//! Doing this server-side matters for sequence tiers: a token-level
+//! top-k over a vocab-wide logit row shrinks the reply from `vocab`
+//! floats to `2·k`, so the decode cost is paid once in the worker (on
+//! rows that are already hot in cache) instead of shipping full logit
+//! matrices to every client. All reductions accumulate in f64, matching
+//! the crate-wide numeric policy.
+
+use crate::linalg::Mat;
+
+/// What a tier's workers do to each raw output row before replying.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutputTransform {
+    /// Ship raw model rows (logits) unchanged — the default, and the only
+    /// mode with a zero-copy worker fast path.
+    Raw,
+    /// Row-wise softmax: each reply row sums to 1. Width unchanged.
+    Softmax,
+    /// Per-row top-k decode: each reply row is `k` `(index, logprob)`
+    /// pairs flattened to `2·k` floats — `[idx_0, lp_0, idx_1, lp_1, …]`,
+    /// sorted by descending logit, ties broken toward the lower index.
+    TopK(usize),
+}
+
+impl OutputTransform {
+    /// Reply-row width for a raw model width of `raw` columns.
+    pub fn out_width(&self, raw: usize) -> usize {
+        match self {
+            OutputTransform::Raw | OutputTransform::Softmax => raw,
+            OutputTransform::TopK(k) => 2 * k,
+        }
+    }
+
+    /// Whether this transform is usable on rows of `raw` columns.
+    /// `TopK(0)` and `k > raw` are rejected at tier registration, not at
+    /// request time.
+    pub fn validate(&self, raw: usize) -> Result<(), String> {
+        match self {
+            OutputTransform::Raw | OutputTransform::Softmax => Ok(()),
+            OutputTransform::TopK(0) => Err("TopK(0) selects nothing".into()),
+            OutputTransform::TopK(k) if *k > raw => Err(format!(
+                "TopK({k}) over rows of width {raw} — k must be ≤ the \
+                 model's output width"
+            )),
+            OutputTransform::TopK(_) => Ok(()),
+        }
+    }
+
+    /// Apply the transform row-wise. [`OutputTransform::Raw`] clones; the
+    /// worker loops skip the call entirely in that mode.
+    pub fn apply(&self, y: &Mat) -> Mat {
+        match self {
+            OutputTransform::Raw => y.clone(),
+            OutputTransform::Softmax => {
+                let mut out = Mat::zeros(y.rows(), y.cols());
+                for i in 0..y.rows() {
+                    softmax_row_into(y.row(i), out.row_mut(i));
+                }
+                out
+            }
+            OutputTransform::TopK(k) => {
+                let mut out = Mat::zeros(y.rows(), 2 * k);
+                let mut order: Vec<usize> = Vec::with_capacity(y.cols());
+                for i in 0..y.rows() {
+                    let row = y.row(i);
+                    let (mx, lse) = log_sum_exp(row);
+                    order.clear();
+                    order.extend(0..row.len());
+                    // Full sort keeps the output deterministic (stable
+                    // index tie-break) — reply rows must be a pure
+                    // function of the logit row.
+                    order.sort_by(|&a, &b| {
+                        row[b].partial_cmp(&row[a]).unwrap_or(std::cmp::Ordering::Equal)
+                            .then(a.cmp(&b))
+                    });
+                    let orow = out.row_mut(i);
+                    for (slot, &j) in order.iter().take(*k).enumerate() {
+                        orow[2 * slot] = j as f32;
+                        orow[2 * slot + 1] = ((row[j] as f64 - mx) - lse) as f32;
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+/// `(max, ln Σ exp(x − max))` of a row, f64-accumulated.
+fn log_sum_exp(row: &[f32]) -> (f64, f64) {
+    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let s: f64 = row.iter().map(|&v| (v as f64 - mx).exp()).sum();
+    (mx, s.ln())
+}
+
+fn softmax_row_into(row: &[f32], out: &mut [f32]) {
+    let (mx, lse) = log_sum_exp(row);
+    for (o, &v) in out.iter_mut().zip(row) {
+        *o = ((v as f64 - mx) - lse).exp() as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Philox;
+
+    #[test]
+    fn widths_and_validation() {
+        assert_eq!(OutputTransform::Raw.out_width(7), 7);
+        assert_eq!(OutputTransform::Softmax.out_width(7), 7);
+        assert_eq!(OutputTransform::TopK(3).out_width(7), 6);
+        assert!(OutputTransform::TopK(0).validate(7).is_err());
+        assert!(OutputTransform::TopK(8).validate(7).is_err());
+        assert!(OutputTransform::TopK(7).validate(7).is_ok());
+        assert!(OutputTransform::Softmax.validate(1).is_ok());
+    }
+
+    #[test]
+    fn softmax_rows_normalize_and_order_preserves() {
+        let mut rng = Philox::seeded(61);
+        let y = Mat::randn(5, 9, &mut rng);
+        let p = OutputTransform::Softmax.apply(&y);
+        assert_eq!(p.shape(), y.shape());
+        for i in 0..5 {
+            let s: f64 = p.row(i).iter().map(|&v| v as f64).sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+            // Monotone: argmax of logits is argmax of probabilities.
+            let am = |r: &[f32]| {
+                r.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            };
+            assert_eq!(am(y.row(i)), am(p.row(i)));
+        }
+    }
+
+    #[test]
+    fn topk_picks_the_right_indices_with_logprobs() {
+        let y = Mat::from_vec(1, 4, vec![0.5, 3.0, -1.0, 3.0]);
+        let t = OutputTransform::TopK(2).apply(&y);
+        assert_eq!(t.shape(), (1, 4));
+        let r = t.row(0);
+        // Tied 3.0s: lower index wins slot 0.
+        assert_eq!(r[0], 1.0);
+        assert_eq!(r[2], 3.0);
+        assert_eq!(r[1], r[3], "equal logits, equal logprobs");
+        // logprob matches an independent softmax of the same row.
+        let p = OutputTransform::Softmax.apply(&y);
+        assert!((r[1] - p.row(0)[1].ln()).abs() < 1e-5);
+        // Raw is the identity.
+        assert_eq!(OutputTransform::Raw.apply(&y).data(), y.data());
+    }
+}

@@ -22,7 +22,9 @@ pub mod trainer;
 
 pub use optimizer::{optimizer_from_meta, Adam, OptimMeta, Optimizer, Sgd};
 pub use schedule::{LrSchedule, ScheduledOpt};
-pub use trainer::{clip_grad_norm, mse_loss, mse_value, Trainer};
+pub use trainer::{
+    clip_grad_norm, masked_xent_loss, masked_xent_value, mse_loss, mse_value, Trainer,
+};
 
 use crate::data::{MaskedBatch, TextCorpus};
 use crate::rng::Philox;

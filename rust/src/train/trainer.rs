@@ -52,6 +52,67 @@ pub fn mse_value(pred: &Mat, target: &Mat) -> f32 {
     (loss / n) as f32
 }
 
+/// Token-level masked softmax cross-entropy — the BERT MLM loss. `logits`
+/// is `rows × vocab`, `targets[i]` the target class of row `i`, and
+/// `mask[i]` the per-row weight: 0 excludes a row (pad positions,
+/// un-masked tokens), any positive weight includes it. Loss is the
+/// weighted mean of per-row `−log softmax(logits_i)[targets_i]` over
+/// included rows (f64 log-sum-exp accumulation); the gradient of an
+/// included row is `mask_i·(softmax(logits_i) − onehot_i)/Σmask`, and
+/// excluded rows get exactly zero gradient — which is what lets the
+/// sequence-aware backward ignore pad rows structurally.
+/// `mask` can come straight from
+/// [`crate::nn::SeqBatch::token_mask`](crate::nn::SeqBatch).
+pub fn masked_xent_loss(logits: &Mat, targets: &[usize], mask: &[f32]) -> (f32, Mat) {
+    let (rows, vocab) = logits.shape();
+    assert_eq!(targets.len(), rows, "targets/rows mismatch");
+    assert_eq!(mask.len(), rows, "mask/rows mismatch");
+    let denom: f64 = mask.iter().map(|&m| m as f64).sum::<f64>().max(1e-12);
+    let mut loss = 0f64;
+    let mut grad = Mat::zeros(rows, vocab);
+    for i in 0..rows {
+        let mi = mask[i] as f64;
+        if mi == 0.0 {
+            continue;
+        }
+        let t = targets[i];
+        assert!(t < vocab, "target {t} out of vocab {vocab} at row {i}");
+        let row = logits.row(i);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let lse: f64 = row.iter().map(|&v| (v as f64 - mx).exp()).sum::<f64>().ln() + mx;
+        loss += mi * (lse - row[t] as f64);
+        let g = grad.row_mut(i);
+        let w = mi / denom;
+        for (j, gv) in g.iter_mut().enumerate() {
+            let p = (row[j] as f64 - lse).exp();
+            *gv = (w * (p - if j == t { 1.0 } else { 0.0 })) as f32;
+        }
+    }
+    ((loss / denom) as f32, grad)
+}
+
+/// Loss-only variant of [`masked_xent_loss`] for evaluation paths.
+pub fn masked_xent_value(logits: &Mat, targets: &[usize], mask: &[f32]) -> f32 {
+    let (rows, vocab) = logits.shape();
+    assert_eq!(targets.len(), rows, "targets/rows mismatch");
+    assert_eq!(mask.len(), rows, "mask/rows mismatch");
+    let denom: f64 = mask.iter().map(|&m| m as f64).sum::<f64>().max(1e-12);
+    let mut loss = 0f64;
+    for i in 0..rows {
+        let mi = mask[i] as f64;
+        if mi == 0.0 {
+            continue;
+        }
+        let t = targets[i];
+        assert!(t < vocab, "target {t} out of vocab {vocab} at row {i}");
+        let row = logits.row(i);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let lse: f64 = row.iter().map(|&v| (v as f64 - mx).exp()).sum::<f64>().ln() + mx;
+        loss += mi * (lse - row[t] as f64);
+    }
+    (loss / denom) as f32
+}
+
 /// Global-norm gradient clipping: if the L2 norm over *all* accumulated
 /// gradients exceeds `max_norm`, every gradient is scaled by
 /// `max_norm / norm` so the global norm lands exactly on the threshold
@@ -123,6 +184,39 @@ impl Trainer {
             target.shape()
         );
         let (loss, dloss) = mse_loss(&pred, target);
+        model.backward(&dloss, &caches, ctx)?;
+        if let Some(max_norm) = self.clip_norm {
+            clip_grad_norm(model, max_norm);
+        }
+        self.opt.step(model)?;
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// One masked-cross-entropy training step — the token-level MLM
+    /// objective. `x` is the packed/padded token-feature matrix, `targets`
+    /// one class per row, `mask` the per-row weights (use
+    /// [`crate::nn::SeqBatch::token_mask`] for padded batches, and install
+    /// the same `SeqBatch` on `ctx` so the attention layers mask
+    /// structurally). Returns the pre-update loss.
+    pub fn train_step_masked_ce(
+        &mut self,
+        model: &mut Model,
+        x: &Mat,
+        targets: &[usize],
+        mask: &[f32],
+        ctx: &ForwardCtx,
+    ) -> Result<f32> {
+        model.zero_grads();
+        let (logits, caches) = model.forward_train(x, ctx)?;
+        ensure!(
+            logits.rows() == targets.len() && logits.rows() == mask.len(),
+            "model output rows {} vs {} targets / {} mask entries",
+            logits.rows(),
+            targets.len(),
+            mask.len()
+        );
+        let (loss, dloss) = masked_xent_loss(&logits, targets, mask);
         model.backward(&dloss, &caches, ctx)?;
         if let Some(max_norm) = self.clip_norm {
             clip_grad_norm(model, max_norm);
@@ -414,6 +508,84 @@ mod tests {
         for (_, t) in clipped.state_dict() {
             assert!(t.data().iter().all(|v| v.is_finite()));
         }
+    }
+
+    #[test]
+    fn masked_xent_gradient_matches_finite_differences() {
+        // f64 central differences on the analytic gradient, row by row,
+        // including a zero-mask row (must have exactly zero gradient) and
+        // a non-uniform weight.
+        let mut rng = Philox::seeded(42);
+        let logits = Mat::randn(4, 7, &mut rng);
+        let targets = [2usize, 5, 0, 3];
+        let mask = [1.0f32, 0.0, 2.0, 1.0];
+        let (loss, grad) = masked_xent_loss(&logits, &targets, &mask);
+        assert_eq!(loss, masked_xent_value(&logits, &targets, &mask));
+        assert!(grad.row(1).iter().all(|&g| g == 0.0), "pad row grad != 0");
+        let eps = 1e-3f32;
+        for i in 0..4 {
+            for j in 0..7 {
+                let mut lp = logits.clone();
+                lp.row_mut(i)[j] += eps;
+                let mut lm = logits.clone();
+                lm.row_mut(i)[j] -= eps;
+                let fd = (masked_xent_value(&lp, &targets, &mask) as f64
+                    - masked_xent_value(&lm, &targets, &mask) as f64)
+                    / (2.0 * eps as f64);
+                let an = grad.row(i)[j] as f64;
+                assert!(
+                    (fd - an).abs() <= 1e-4 + 1e-3 * an.abs(),
+                    "grad[{i}][{j}]: fd {fd} vs analytic {an}"
+                );
+            }
+        }
+        // Included-row gradients sum to ~0 per row (softmax minus onehot).
+        for i in [0usize, 2, 3] {
+            let s: f64 = grad.row(i).iter().map(|&g| g as f64).sum();
+            assert!(s.abs() < 1e-6, "row {i} grad sum {s}");
+        }
+    }
+
+    #[test]
+    fn masked_xent_ignores_pad_rows_entirely() {
+        // Perturbing an excluded row's logits must not move the loss.
+        let mut rng = Philox::seeded(43);
+        let mut logits = Mat::randn(3, 5, &mut rng);
+        let targets = [1usize, 4, 2];
+        let mask = [1.0f32, 0.0, 1.0];
+        let base = masked_xent_value(&logits, &targets, &mask);
+        for v in logits.row_mut(1) {
+            *v += 100.0;
+        }
+        assert_eq!(base, masked_xent_value(&logits, &targets, &mask));
+        // All-zero mask: loss is 0 (denom clamp), grad is all-zero.
+        let (l0, g0) = masked_xent_loss(&logits, &targets, &[0.0; 3]);
+        assert_eq!(l0, 0.0);
+        assert!(g0.data().iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn masked_ce_training_reduces_loss_on_toy_classification() {
+        let mut model = toy_model(21);
+        let mut rng = Philox::seeded(22);
+        let x = Mat::randn(16, 6, &mut rng);
+        // Fixed random labels over the 4 output classes; every other row
+        // masked out, as an MLM batch would.
+        let targets: Vec<usize> = (0..16).map(|i| (i * 7 + 3) % 4).collect();
+        let mask: Vec<f32> = (0..16).map(|i| if i % 2 == 0 { 1.0 } else { 0.0 }).collect();
+        let ctx = ForwardCtx::new();
+        let mut tr = Trainer::new(Box::new(Adam::new(0.02)));
+        let first = tr
+            .train_step_masked_ce(&mut model, &x, &targets, &mask, &ctx)
+            .unwrap();
+        let mut last = first;
+        for _ in 0..40 {
+            last = tr
+                .train_step_masked_ce(&mut model, &x, &targets, &mask, &ctx)
+                .unwrap();
+        }
+        assert!(last < first * 0.5, "CE loss {first} -> {last}");
+        assert_eq!(tr.step, 41);
     }
 
     #[test]

@@ -394,6 +394,199 @@ fn tier_head_group_knob_is_applied_and_results_unchanged() {
     );
 }
 
+/// An attention stack for sequence tiers, at dims small enough that GEMM
+/// stays on the unpacked kernel path — the precondition for the bitwise
+/// continuous-batching oracle.
+fn attn_stack(seed: u64) -> Model {
+    use panther::nn::{AttnWeights, MultiHeadAttention};
+    let mut rng = Philox::seeded(seed);
+    let mut m = Model::new();
+    m.add("attn", MultiHeadAttention::new(AttnWeights::random(8, 2, &mut rng)))
+        .unwrap();
+    let mut head = Linear::random(8, 4, &mut rng);
+    for b in head.bias.iter_mut() {
+        *b = 0.25;
+    }
+    m.add("head", head).unwrap();
+    m
+}
+
+/// The sequence oracle: the standalone masked forward of one sequence.
+fn solo_seq_forward(model: &Model, x: &Mat) -> Mat {
+    use panther::nn::SeqBatch;
+    model
+        .forward_seq(x, &SeqBatch::single(x.rows()), &ForwardCtx::new())
+        .unwrap()
+}
+
+#[test]
+fn continuous_batcher_is_bitwise_invariant_to_arrival_interleaving() {
+    use panther::serve::SeqTierConfig;
+    // Six sequences of mixed lengths served through a single-worker
+    // continuous batcher with a 12-token step budget: across three
+    // different submission orders (and therefore different step
+    // compositions — [3,5,2] packs differently from [6,1,4]...), every
+    // sequence's reply must equal its standalone masked forward bit for
+    // bit. Attention makes rows *within* a sequence couple, so any
+    // cross-sequence leak in the packed step would be loud.
+    let lens = [3usize, 5, 2, 4, 6, 1];
+    let seqs: Vec<Mat> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| Mat::randn(l, 8, &mut Philox::seeded(6000 + i as u64)).scale(0.5))
+        .collect();
+    let oracle_model = attn_stack(71);
+    let expected: Vec<Mat> = seqs.iter().map(|x| solo_seq_forward(&oracle_model, x)).collect();
+    let orders: [&[usize]; 3] = [&[0, 1, 2, 3, 4, 5], &[5, 4, 3, 2, 1, 0], &[2, 5, 0, 4, 1, 3]];
+    for order in orders {
+        let mut server = ModelServer::new();
+        server
+            .register_seq_tier(
+                "seq",
+                attn_stack(71),
+                8,
+                SeqTierConfig {
+                    max_tokens: 12,
+                    max_wait: Duration::from_millis(2),
+                    workers: 1,
+                    ..SeqTierConfig::default()
+                },
+            )
+            .unwrap();
+        let pending: Vec<_> = order
+            .iter()
+            .map(|&i| (i, server.handle().submit_seq("seq", &seqs[i]).unwrap()))
+            .collect();
+        for (i, p) in pending {
+            let got = p.wait().unwrap();
+            assert_eq!(got.shape(), expected[i].shape());
+            assert_eq!(
+                got.data(),
+                expected[i].data(),
+                "order {order:?}: sequence {i} diverged from its standalone forward"
+            );
+        }
+        // Token accounting: every valid token executed exactly once.
+        let tm = server.metrics().tier("seq").unwrap();
+        assert_eq!(tm.tokens(), lens.iter().sum::<usize>() as u64);
+        assert_eq!(tm.requests(), lens.len() as u64);
+        server.shutdown();
+    }
+}
+
+#[test]
+fn performer_seq_tier_admits_longer_sequences_than_dense_under_same_budget() {
+    use panther::nn::{AttnWeights, KernelKind, RandMultiHeadAttention};
+    use panther::serve::SeqTierConfig;
+    // The paper's linear-attention memory claim as admission capacity:
+    // same projection weights, same byte budget — the dense tier's
+    // quadratic score tensor caps its admitted length at ~√budget, the
+    // Performer's linear feature state caps much later.
+    let mut rng = Philox::seeded(73);
+    let w = AttnWeights::random(8, 2, &mut rng);
+    let dense = {
+        use panther::nn::MultiHeadAttention;
+        let mut m = Model::new();
+        m.add("attn", MultiHeadAttention::new(w.clone())).unwrap();
+        m
+    };
+    let performer = {
+        let mut m = Model::new();
+        m.add(
+            "attn",
+            RandMultiHeadAttention::new(w.clone(), 16, KernelKind::Softmax, 91),
+        )
+        .unwrap();
+        m
+    };
+    let mut server = ModelServer::new();
+    let cfg = SeqTierConfig {
+        max_tokens: 100_000, // out of the way: the budget decides
+        mem_budget: Some(200_000),
+        probe_len: 32,
+        workers: 1,
+        ..SeqTierConfig::default()
+    };
+    let dense_info = server.register_seq_tier("dense", dense, 8, cfg.clone()).unwrap();
+    let perf_info = server.register_seq_tier("perf", performer, 8, cfg).unwrap();
+    assert!(dense_info.max_seq_len > 0);
+    assert!(
+        dense_info.max_seq_len < dense_info.max_tokens,
+        "budget must actually pinch the dense tier"
+    );
+    assert!(
+        perf_info.max_seq_len > dense_info.max_seq_len,
+        "Performer must admit longer sequences than dense under the same \
+         budget ({} vs {})",
+        perf_info.max_seq_len,
+        dense_info.max_seq_len
+    );
+    // The advertised cap is enforced, and an admitted length serves.
+    let h = server.handle();
+    let over = Mat::zeros(dense_info.max_seq_len + 1, 8);
+    assert!(matches!(
+        h.infer_seq("dense", &over),
+        Err(ServeError::SeqTooLong { .. })
+    ));
+    let ok = Mat::randn(8, 8, &mut Philox::seeded(74)).scale(0.5);
+    assert_eq!(h.infer_seq("dense", &ok).unwrap().rows(), 8);
+    assert_eq!(h.infer_seq("perf", &ok).unwrap().rows(), 8);
+}
+
+#[test]
+fn seq_tier_transforms_decode_per_token() {
+    use panther::serve::{OutputTransform, SeqTierConfig};
+    let x = Mat::randn(5, 8, &mut Philox::seeded(75)).scale(0.5);
+    let raw = solo_seq_forward(&attn_stack(76), &x);
+    let mut server = ModelServer::new();
+    server
+        .register_seq_tier(
+            "soft",
+            attn_stack(76),
+            8,
+            SeqTierConfig {
+                transform: OutputTransform::Softmax,
+                ..SeqTierConfig::default()
+            },
+        )
+        .unwrap();
+    server
+        .register_seq_tier(
+            "topk",
+            attn_stack(76),
+            8,
+            SeqTierConfig {
+                transform: OutputTransform::TopK(2),
+                ..SeqTierConfig::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(server.seq_tier_info("soft").unwrap().out_dim, 4);
+    assert_eq!(server.seq_tier_info("topk").unwrap().out_dim, 4, "2·k");
+    let h = server.handle();
+    let soft = h.infer_seq("soft", &x).unwrap();
+    assert_eq!(soft.shape(), (5, 4));
+    for i in 0..5 {
+        let s: f64 = soft.row(i).iter().map(|&v| v as f64).sum();
+        assert!((s - 1.0).abs() < 1e-5, "token {i} softmax sums to {s}");
+    }
+    let topk = h.infer_seq("topk", &x).unwrap();
+    assert_eq!(topk.shape(), (5, 4));
+    for i in 0..5 {
+        let r = topk.row(i);
+        // Slot 0 carries the argmax of the raw logit row.
+        let am = raw
+            .row(i)
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(r[0] as usize, am, "token {i} top-1 index");
+        assert!(r[1] >= r[3], "token {i} logprobs must be descending");
+    }
+}
+
 #[test]
 fn sketched_tier_fits_more_workers_in_the_same_budget() {
     // The capacity story in one assert: at a fixed memory budget, the
