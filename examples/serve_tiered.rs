@@ -1,7 +1,9 @@
 //! Tiered serving walk-through: pretrain a small nonlinear MLP with a
 //! warmup+cosine LR schedule, checkpoint it, sketchify a copy, register
 //! **dense** and **sketched** quality tiers of the same service under one
-//! memory budget, and hammer both from concurrent client threads.
+//! memory budget, hammer both from concurrent client threads, then route
+//! by SLO through a dense/sketched [`Cascade`] — deadline-aware admission
+//! with overload shedding and a speculative two-phase reply.
 //!
 //! This is the paper's pitch end to end: the compressed model is a
 //! drop-in *tier* — same request shape, same serving contract (batched
@@ -14,7 +16,7 @@
 use panther::linalg::Mat;
 use panther::nn::{Activation, ForwardCtx, LayerSelector, Linear, Model, SketchPlan};
 use panther::rng::Philox;
-use panther::serve::{ModelServer, TierConfig};
+use panther::serve::{Cascade, ModelServer, Slo, TierConfig, Upgrade};
 use panther::train::{Adam, LrSchedule, ScheduledOpt, Trainer};
 use std::time::{Duration, Instant};
 
@@ -148,7 +150,48 @@ fn main() -> panther::Result<()> {
     );
     println!("{}", server.metrics().report());
 
-    // --- 6. graceful drain ---------------------------------------------------
+    // --- 6. SLO cascade: deadline routing + speculative upgrades -------------
+    // The same two tiers become a quality ladder: each request carries a
+    // deadline (and optionally a quality floor), the estimator predicts
+    // each tier's completion time from the live sensors, and overload on
+    // the dense tier sheds down the ladder instead of rejecting.
+    let cascade = Cascade::new(&server, &[("dense", 1.0), ("sketched", 0.6)])?;
+    let row = Mat::randn(1, D_IN, &mut Philox::seeded(42)).into_vec();
+    println!(
+        "predicted completion: dense {}, sketched {}",
+        panther::util::human_duration(cascade.predict("dense").unwrap()),
+        panther::util::human_duration(cascade.predict("sketched").unwrap()),
+    );
+    let routed = cascade.submit(&row, &Slo::new(Duration::from_millis(50)))?;
+    println!(
+        "50ms deadline -> tier {:?} at quality {} (shed: {})",
+        routed.tier, routed.quality, routed.shed
+    );
+    routed.wait()?;
+    // An impossible contract is a *typed* reject, not a hang or a shrug:
+    // a 1µs deadline with a quality floor only the dense tier clears.
+    let strict = Slo::new(Duration::from_micros(1)).with_min_quality(0.9);
+    match cascade.submit(&row, &strict) {
+        Err(e) => println!("1µs deadline  -> {e}"),
+        Ok(r) => println!("1µs deadline  -> unexpectedly served by {:?}", r.tier),
+    }
+    // Speculative mode: answer now from the cheap tier, upgrade to the
+    // dense answer when its verification lands.
+    let spec = cascade.speculate(&row)?;
+    let (first, upgrade) = spec.first();
+    let fast = first?;
+    match upgrade.upgraded() {
+        Upgrade::Upgraded(dense_row) => println!(
+            "speculative: fast answer from sketched ({} floats), dense upgrade \
+             arrived (first logit {:+.4} -> {:+.4})",
+            fast.len(),
+            fast[0],
+            dense_row[0]
+        ),
+        Upgrade::Revoked(e) => println!("speculative: upgrade revoked ({e})"),
+    }
+
+    // --- 7. graceful drain ---------------------------------------------------
     server.shutdown();
     std::fs::remove_file(&ckpt).ok();
     println!("drained and shut down cleanly");

@@ -23,6 +23,16 @@
 //!   admission cap `max_seq_len` the budget fit bought — the Performer's
 //!   linear activation growth admits strictly longer sequences than the
 //!   dense tier's quadratic one.
+//! - **SLO overload**: a dense tier with a *fixed, throttled* per-batch
+//!   service time (so its capacity is known exactly, not hoped for) is
+//!   hammered past that capacity. Phase one measures what the dense tier
+//!   alone does under fail-fast admission: the reject rate. Phase two
+//!   routes the same load through a dense/sketched [`Cascade`] with a
+//!   per-request deadline: shed rate, fraction served within deadline,
+//!   and tail latency under overload. Phase three measures the
+//!   speculative two-phase path's upgrade/revoke split. All three land
+//!   in `BENCH_serve.json` (`op = "overload"`) plus one `tier_snapshot`
+//!   entry per tier — the machine-diffable overload record.
 //!
 //! `--quick` shrinks request counts for the CI smoke lane;
 //! `PANTHER_BENCH_DIR` redirects the JSON output.
@@ -33,7 +43,7 @@ use panther::nn::{
     RandMultiHeadAttention, SketchPlan,
 };
 use panther::rng::Philox;
-use panther::serve::{ModelServer, SeqTierConfig, TierConfig};
+use panther::serve::{Cascade, ModelServer, SeqTierConfig, ServeError, Slo, TierConfig, Upgrade};
 use panther::util::bench::{JsonReport, Table};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -52,6 +62,44 @@ fn dense_model(seed: u64) -> Model {
     m.add("fc2", Linear::random(D_HIDDEN, D_HIDDEN, &mut rng)).unwrap();
     m.add("act2", Activation::relu()).unwrap();
     m.add("fc3", Linear::random(D_HIDDEN, D_OUT, &mut rng)).unwrap();
+    m
+}
+
+/// Per-batch service-time throttle for the overload section: sleeps a
+/// fixed time, then passes rows through unchanged. Elementwise (row
+/// independent), so the registration probe admits it — and the sleep
+/// makes the tier's capacity an arithmetic fact (`workers / service`
+/// batches per second) instead of a machine-speed accident.
+#[derive(Clone)]
+struct Throttle(Duration);
+
+impl panther::nn::Module for Throttle {
+    fn type_name(&self) -> &'static str {
+        "Throttle"
+    }
+    fn forward(&self, x: &Mat, _ctx: &panther::nn::ForwardCtx) -> panther::Result<Mat> {
+        std::thread::sleep(self.0);
+        Ok(x.clone())
+    }
+    fn params(&self) -> Vec<(String, panther::nn::ParamRef<'_>)> {
+        Vec::new()
+    }
+    fn params_mut(&mut self) -> Vec<(String, panther::nn::ParamMut<'_>)> {
+        Vec::new()
+    }
+    fn boxed_clone(&self) -> Box<dyn panther::nn::Module> {
+        Box::new(self.clone())
+    }
+}
+
+/// The overload section's "expensive" tier: a throttled linear head with
+/// the same request/reply shape as [`sketched_model`], so the two can
+/// share a cascade ladder.
+fn throttled_dense(seed: u64, service: Duration) -> Model {
+    let mut rng = Philox::seeded(seed);
+    let mut m = Model::new();
+    m.add("throttle", Throttle(service)).unwrap();
+    m.add("head", Linear::random(D_IN, D_OUT, &mut rng)).unwrap();
     m
 }
 
@@ -281,7 +329,8 @@ fn main() {
         let info = server
             .register_seq_tier(tier, model, D_SEQ, seq_cfg.clone())
             .expect("register seq tier");
-        let (wall, tokens) = hammer_seq(&server, tier, seq_clients, seqs_per_client, info.max_seq_len);
+        let len = info.max_seq_len;
+        let (wall, tokens) = hammer_seq(&server, tier, seq_clients, seqs_per_client, len);
         let tm = server.metrics().tier(tier).unwrap();
         let tps = tokens as f64 / wall.as_secs_f64();
         table.row(&[
@@ -306,6 +355,197 @@ fn main() {
     server.shutdown();
     println!("(sequence budget: {})", panther::util::human_bytes(seq_budget));
     println!("{}", table.render());
+
+    // --- SLO cascade under synthetic overload -------------------------------
+    // Dense capacity is throttled to exactly 1 batch / SERVICE / worker
+    // (one worker, batch cap 1, queue of 4), and the client pool offers
+    // far more than that — the overload is constructed, not incidental.
+    const SERVICE: Duration = Duration::from_millis(3);
+    const DEADLINE: Duration = Duration::from_millis(8);
+    let per_client_ov = if quick { 30 } else { 120 };
+    let mut server = ModelServer::new();
+    server
+        .register_tier(
+            "overdense",
+            throttled_dense(1, SERVICE),
+            D_IN,
+            TierConfig {
+                max_batch: 1,
+                max_wait: Duration::from_micros(200),
+                queue_cap: 4,
+                workers: 1,
+                ..TierConfig::default()
+            },
+        )
+        .expect("register overdense");
+    server
+        .register_tier(
+            "sketched_ov",
+            sketched_model(1),
+            D_IN,
+            TierConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(200),
+                queue_cap: 1024,
+                workers: 2,
+                ..TierConfig::default()
+            },
+        )
+        .expect("register sketched_ov");
+    let rows: Arc<Vec<Vec<f32>>> = Arc::new(
+        (0..clients)
+            .map(|i| Mat::randn(1, D_IN, &mut Philox::seeded(7700 + i as u64)).into_vec())
+            .collect(),
+    );
+
+    // Phase one: the dense tier alone under fail-fast admission — what
+    // fraction of the offered load it must reject.
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let h = server.handle();
+            let rows = Arc::clone(&rows);
+            std::thread::spawn(move || {
+                let mut rejected = 0u64;
+                for _ in 0..per_client_ov {
+                    match h.try_infer("overdense", &rows[c]) {
+                        Ok(_) => {}
+                        Err(ServeError::QueueFull) => rejected += 1,
+                        Err(e) => panic!("overload phase failed: {e}"),
+                    }
+                }
+                rejected
+            })
+        })
+        .collect();
+    let rejected: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let alone_wall = t0.elapsed();
+    let offered = (clients * per_client_ov) as u64;
+    let reject_rate = rejected as f64 / offered as f64;
+    report.entry_with(
+        "overload",
+        "dense_alone",
+        alone_wall.as_secs_f64() * 1e3,
+        &[
+            ("offered", offered as f64),
+            ("reject_rate", reject_rate),
+            ("rps", (offered - rejected) as f64 / alone_wall.as_secs_f64()),
+        ],
+    );
+
+    // Phase two: the same offered load through the cascade, every request
+    // carrying a deadline. Sheds replace rejects; the report records how
+    // many made the deadline and the tail latency under overload.
+    let ladder = [("overdense", 1.0), ("sketched_ov", 0.6)];
+    let cascade = Arc::new(Cascade::new(&server, &ladder).expect("cascade"));
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let cascade = Arc::clone(&cascade);
+            let rows = Arc::clone(&rows);
+            std::thread::spawn(move || {
+                let (mut served, mut shed, mut within) = (0u64, 0u64, 0u64);
+                let mut lat_us: Vec<f64> = Vec::with_capacity(per_client_ov);
+                for _ in 0..per_client_ov {
+                    let t = Instant::now();
+                    let routed = cascade
+                        .submit(&rows[c], &Slo::new(DEADLINE))
+                        .expect("cascade admission");
+                    let was_shed = routed.shed;
+                    routed.wait().expect("cascade reply");
+                    let e = t.elapsed();
+                    served += 1;
+                    shed += was_shed as u64;
+                    within += (e <= DEADLINE) as u64;
+                    lat_us.push(e.as_secs_f64() * 1e6);
+                }
+                (served, shed, within, lat_us)
+            })
+        })
+        .collect();
+    let (mut served, mut shed, mut within) = (0u64, 0u64, 0u64);
+    let mut lat_us: Vec<f64> = Vec::new();
+    for h in handles {
+        let (s, sh, w, l) = h.join().unwrap();
+        served += s;
+        shed += sh;
+        within += w;
+        lat_us.extend(l);
+    }
+    let cascade_wall = t0.elapsed();
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p99_us = lat_us[((lat_us.len() as f64 * 0.99).ceil() as usize - 1).min(lat_us.len() - 1)];
+    let shed_rate = shed as f64 / served as f64;
+    let within_deadline = within as f64 / served as f64;
+    report.entry_with(
+        "overload",
+        &format!("cascade deadline={}ms", DEADLINE.as_millis()),
+        cascade_wall.as_secs_f64() * 1e3,
+        &[
+            ("shed_rate", shed_rate),
+            ("within_deadline", within_deadline),
+            ("p99_us", p99_us),
+            ("rps", served as f64 / cascade_wall.as_secs_f64()),
+        ],
+    );
+
+    // Phase three: the speculative two-phase path. Every request answers
+    // immediately from the sketched tier; the dense verify leg either
+    // upgrades or is revoked (fail-fast under the same overload).
+    let spec_n = if quick { 24 } else { 96 };
+    let t0 = Instant::now();
+    let mut upgrade_handles = Vec::with_capacity(spec_n);
+    for i in 0..spec_n {
+        let spec = cascade.speculate(&rows[i % clients]).expect("speculate");
+        let (first, handle) = spec.first();
+        first.expect("fast reply");
+        upgrade_handles.push(handle);
+    }
+    let mut upgrades = 0u64;
+    for handle in upgrade_handles {
+        match handle.upgraded() {
+            Upgrade::Upgraded(_) => upgrades += 1,
+            Upgrade::Revoked(_) => {}
+        }
+    }
+    let spec_wall = t0.elapsed();
+    report.entry_with(
+        "overload",
+        "speculative",
+        spec_wall.as_secs_f64() * 1e3,
+        &[
+            ("speculated", spec_n as f64),
+            ("upgrade_rate", upgrades as f64 / spec_n as f64),
+            ("revoke_rate", (spec_n as u64 - upgrades) as f64 / spec_n as f64),
+        ],
+    );
+
+    let mut table = Table::new(&["phase", "outcome"]);
+    table.row(&[
+        "dense alone".into(),
+        format!("{:.0}% rejected", 100.0 * reject_rate),
+    ]);
+    table.row(&[
+        "cascade".into(),
+        format!(
+            "{:.0}% shed, {:.0}% within {}ms, p99 {:.1}ms",
+            100.0 * shed_rate,
+            100.0 * within_deadline,
+            DEADLINE.as_millis(),
+            p99_us / 1e3
+        ),
+    ]);
+    table.row(&[
+        "speculative".into(),
+        format!("{upgrades}/{spec_n} upgraded"),
+    ]);
+    println!("(overload: dense throttled to {SERVICE:?}/batch, 1 worker)");
+    println!("{}", table.render());
+
+    // The frozen per-tier counters (sheds, speculative, upgrades,
+    // revoked, windowed tails) ride along as machine-diffable entries.
+    server.metrics_snapshot().report_into(&mut report);
+    server.shutdown();
 
     match report.write() {
         Ok(path) => println!("wrote {}", path.display()),

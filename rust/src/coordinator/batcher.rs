@@ -98,6 +98,22 @@ impl BatcherStats {
     pub fn mean_occupancy(&self) -> f64 {
         self.locked().mean()
     }
+
+    /// Snapshot of the underlying occupancy histogram (the live stats
+    /// keep recording).
+    pub fn snapshot(&self) -> crate::util::stats::OccupancyHist {
+        self.locked().clone()
+    }
+
+    /// Fold another batcher's occupancy into this one
+    /// ([`crate::util::stats::OccupancyHist::merge`]) — the aggregate
+    /// view when a process runs several batchers (one per served
+    /// model). Snapshots `other` first, so the two locks are never held
+    /// together.
+    pub fn merge_from(&self, other: &BatcherStats) {
+        let o = other.snapshot();
+        self.locked().merge(&o);
+    }
 }
 
 /// The batcher service. Dropping it stops the worker thread.
@@ -289,6 +305,27 @@ mod tests {
     use super::*;
     use crate::coordinator::RuntimeServer;
     use crate::train::ModelState;
+
+    #[test]
+    fn batcher_stats_merge_aggregates() {
+        // Two batchers' stats folded into an aggregate view — the
+        // multi-model process shape. No runtime needed: BatcherStats is
+        // plain accounting.
+        let a = BatcherStats::default();
+        let b = BatcherStats::default();
+        a.record(3, 4);
+        a.record(4, 4);
+        b.record(1, 8);
+        let agg = BatcherStats::default();
+        agg.merge_from(&a);
+        agg.merge_from(&b);
+        assert_eq!(agg.batches(), 3);
+        assert_eq!(agg.requests(), 8);
+        assert_eq!(agg.snapshot().buckets(), &[1, 0, 1, 1, 0, 0, 0, 0]);
+        // The sources keep recording independently.
+        a.record(2, 4);
+        assert_eq!(agg.batches(), 3, "snapshot semantics: no live link");
+    }
 
     fn setup() -> Option<(RuntimeServer, ModelState)> {
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");

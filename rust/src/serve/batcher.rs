@@ -278,9 +278,14 @@ pub(crate) fn worker_loop(
         for i in used..max_batch {
             x.row_mut(i).fill(0.0);
         }
+        let t_exec = Instant::now();
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             model.forward(&x, &ctx)
         }));
+        // Per-batch service time (queue wait excluded) — the sensor the
+        // SLO admission estimator divides queue depth by. Failed batches
+        // count too: they held the worker just as long.
+        metrics.record_exec(t_exec.elapsed());
         // All metrics for a batch are recorded BEFORE any reply is sent:
         // a client that unblocks from `infer` must already see its own
         // request accounted (tests read counters right after replies).
@@ -381,9 +386,11 @@ pub(crate) fn seq_worker_loop(
                 continue;
             }
         };
+        let t_exec = Instant::now();
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             model.forward_seq(&x, &sb, &ctx)
         }));
+        metrics.record_exec(t_exec.elapsed());
         match result {
             Ok(Ok(y)) if y.rows() == total => {
                 for req in &batch {

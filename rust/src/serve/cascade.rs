@@ -1,0 +1,394 @@
+//! The speculative dense/sketched cascade: SLO-routed admission over a
+//! quality ladder of row tiers, overload shedding, and two-phase
+//! speculative replies.
+//!
+//! A [`Cascade`] sits *in front of* existing [`super::ModelServer`] row
+//! tiers — it owns no queues and no workers, it only decides (via
+//! [`super::slo`]) which tier's queue each request joins, reading the
+//! live sensors every tier already records ([`super::TierMetrics`]).
+//! Tiers keep serving explicitly-named traffic through
+//! [`super::ServeHandle`] at the same time; cascade routing is an
+//! overlay, not a takeover.
+//!
+//! Two admission modes:
+//!
+//! - [`Cascade::submit`] / [`Cascade::infer`] — deadline-aware routing:
+//!   the best-quality tier whose predicted completion meets the
+//!   request's [`Slo`] gets it; overload sheds down the ladder (counted
+//!   as a quality downgrade on the tier shed *from*); a request no tier
+//!   can serve in time gets a typed [`ServeError::SloInfeasible`].
+//! - [`Cascade::speculate`] — answer fast, verify asynchronously: the
+//!   request is submitted to the cheapest tier *and* the best tier at
+//!   once. [`SpecReply::first`] blocks only for the cheap answer and
+//!   hands back an [`UpgradeHandle`]; [`UpgradeHandle::upgraded`] later
+//!   yields the best tier's answer ([`Upgrade::Upgraded`]) or a typed
+//!   revocation ([`Upgrade::Revoked`]) if the verify leg failed, was
+//!   never admitted, or the server drained first. Dropping the handle
+//!   without consuming it counts as an explicit revocation — the
+//!   accounting invariant `speculative == upgrades + revoked` holds on
+//!   every path, so shutdown can prove no speculative work was orphaned.
+
+use super::batcher::{ServeRequest, TierQueue};
+use super::metrics::TierMetrics;
+use super::router::Tier;
+use super::slo::{admit, predict_latency, Decision, Slo, TierLoad};
+use super::{ModelServer, PendingReply, ServeError, TierInfo};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// One rung of the quality ladder: a registered row tier plus the
+/// quality score the cascade ranks it by.
+struct Rung {
+    name: String,
+    quality: f32,
+    queue: Arc<TierQueue<ServeRequest>>,
+    info: TierInfo,
+    metrics: Arc<TierMetrics>,
+}
+
+/// SLO router over a ladder of row tiers, ordered best quality first.
+/// Cheap to construct and immutable — build one per ladder and share it
+/// across client threads (it is `Send + Sync`).
+pub struct Cascade {
+    rungs: Vec<Rung>,
+}
+
+impl Cascade {
+    /// Build a cascade over `ladder` — `(tier name, quality)` pairs of
+    /// row tiers already registered on `server`. Tiers are ranked by
+    /// descending quality; ties break toward the earlier ladder entry.
+    ///
+    /// All tiers must be row tiers with identical `in_dim` and `out_dim`
+    /// (a shed or a speculative upgrade substitutes one tier's answer
+    /// for another's, so the reply shape must not depend on routing),
+    /// qualities must be finite, and names must be distinct.
+    pub fn new(server: &ModelServer, ladder: &[(&str, f32)]) -> Result<Cascade, ServeError> {
+        if ladder.is_empty() {
+            return Err(ServeError::BadInput("empty cascade ladder".into()));
+        }
+        let mut rungs = Vec::with_capacity(ladder.len());
+        for &(name, quality) in ladder {
+            if !quality.is_finite() {
+                return Err(ServeError::BadInput(format!(
+                    "tier {name:?}: quality {quality} is not finite"
+                )));
+            }
+            if rungs.iter().any(|r: &Rung| r.name == name) {
+                return Err(ServeError::BadInput(format!(
+                    "tier {name:?} appears twice in the ladder"
+                )));
+            }
+            let tier = server.router.get(name)?;
+            let (queue, info) = match &*tier {
+                Tier::Row { queue, info } => (Arc::clone(queue), info.clone()),
+                Tier::Seq { .. } => {
+                    return Err(ServeError::BadInput(format!(
+                        "tier {name:?} serves sequences — cascades route \
+                         single-row requests"
+                    )))
+                }
+            };
+            let metrics = server.metrics.tier_entry(name);
+            rungs.push(Rung {
+                name: name.to_string(),
+                quality,
+                queue,
+                info,
+                metrics,
+            });
+        }
+        let (d0, o0) = (rungs[0].info.in_dim, rungs[0].info.out_dim);
+        for r in &rungs[1..] {
+            if r.info.in_dim != d0 || r.info.out_dim != o0 {
+                return Err(ServeError::BadInput(format!(
+                    "tier {:?} is {}→{} but tier {:?} is {}→{} — cascade \
+                     tiers must share request and reply shapes",
+                    rungs[0].name, d0, o0, r.name, r.info.in_dim, r.info.out_dim
+                )));
+            }
+        }
+        // Best quality first; stable sort keeps ladder order on ties.
+        rungs.sort_by(|a, b| b.quality.partial_cmp(&a.quality).expect("finite"));
+        Ok(Cascade { rungs })
+    }
+
+    /// The ladder as `(name, quality)`, best quality first.
+    pub fn tiers(&self) -> Vec<(String, f32)> {
+        let entry = |r: &Rung| (r.name.clone(), r.quality);
+        self.rungs.iter().map(entry).collect()
+    }
+
+    /// Request row width (identical across the ladder).
+    pub fn in_dim(&self) -> usize {
+        self.rungs[0].info.in_dim
+    }
+
+    /// Live sensor reading for rung `i` — what the estimator sees.
+    fn load(&self, i: usize) -> TierLoad {
+        let r = &self.rungs[i];
+        TierLoad {
+            queue_depth: r.metrics.queue_depth(),
+            mean_occupancy: r.metrics.mean_occupancy(),
+            exec_p50: r.metrics.windowed_exec().p50(),
+            max_batch: r.info.max_batch,
+            max_wait: r.info.max_wait,
+            workers: r.info.workers,
+        }
+    }
+
+    /// Predicted completion time of a request admitted to tier `name`
+    /// right now (`None` for names outside the ladder) — the exact
+    /// number [`Cascade::submit`] compares against deadlines, exposed
+    /// for observability.
+    pub fn predict(&self, name: &str) -> Option<Duration> {
+        let i = self.rungs.iter().position(|r| r.name == name)?;
+        Some(predict_latency(&self.load(i)))
+    }
+
+    fn check_width(&self, row: &[f32]) -> Result<(), ServeError> {
+        if row.len() != self.in_dim() {
+            return Err(ServeError::BadInput(format!(
+                "cascade serves rows of width {}, got {}",
+                self.in_dim(),
+                row.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Route one request by its SLO (the policy in [`super::slo`]):
+    /// best-quality eligible tier whose prediction meets the deadline;
+    /// a full queue falls through to the next rung (the prediction was
+    /// stale — shed anyway rather than reject). Returns the in-flight
+    /// [`Routed`] reply, or [`ServeError::SloInfeasible`] when no
+    /// eligible tier can make the deadline.
+    pub fn submit(&self, row: &[f32], slo: &Slo) -> Result<Routed, ServeError> {
+        self.check_width(row)?;
+        // The best eligible rung in the full ladder: routing anywhere
+        // below it is the recorded quality downgrade, and rejects are
+        // charged to it (the tier the request *wanted*; a floor above
+        // the whole ladder charges the top rung).
+        let first_eligible = self.rungs.iter().position(|r| r.quality >= slo.min_quality);
+        // (original rung index, (quality, predicted)) — rungs that turn
+        // out QueueFull are removed before re-running the policy, so the
+        // loop strictly shrinks the candidate set and must terminate.
+        let mut candidates: Vec<(usize, (f32, Duration))> = (0..self.rungs.len())
+            .map(|i| (i, (self.rungs[i].quality, predict_latency(&self.load(i)))))
+            .collect();
+        loop {
+            let ladder: Vec<(f32, Duration)> = candidates.iter().map(|c| c.1).collect();
+            match admit(slo, &ladder) {
+                Decision::Infeasible { best_predicted } => {
+                    self.rungs[first_eligible.unwrap_or(0)].metrics.record_slo_reject();
+                    return Err(ServeError::SloInfeasible {
+                        deadline: slo.deadline,
+                        best_predicted,
+                    });
+                }
+                Decision::Route { index, .. } => {
+                    let orig = candidates[index].0;
+                    let rung = &self.rungs[orig];
+                    let (tx, rx) = mpsc::channel();
+                    let req = ServeRequest {
+                        row: row.to_vec(),
+                        reply: tx,
+                        enqueued: Instant::now(),
+                    };
+                    match rung.queue.try_submit(req) {
+                        Ok(()) => {
+                            // Shed = routed below the best eligible rung
+                            // of the FULL ladder — including when that
+                            // rung dropped out as QueueFull (overload is
+                            // exactly the downgrade worth counting).
+                            let shed = first_eligible.is_some_and(|f| f != orig);
+                            if shed {
+                                let f = first_eligible.expect("shed implies eligible");
+                                self.rungs[f].metrics.record_shed();
+                            }
+                            return Ok(Routed {
+                                tier: rung.name.clone(),
+                                quality: rung.quality,
+                                shed,
+                                pending: PendingReply { rx },
+                            });
+                        }
+                        Err(ServeError::QueueFull) => {
+                            candidates.remove(index);
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+            }
+        }
+    }
+
+    /// [`Cascade::submit`] + wait: route by SLO and block for the reply.
+    pub fn infer(&self, row: &[f32], slo: &Slo) -> Result<Vec<f32>, ServeError> {
+        self.submit(row, slo)?.wait()
+    }
+
+    /// Speculative mode: submit `row` to the cheapest rung (the fast
+    /// answer) *and* to the best rung (the asynchronous verification).
+    /// Needs a ladder of at least two tiers. The cheap leg uses blocking
+    /// admission — the caller asked for an answer; the verify leg uses
+    /// fail-fast admission — under overload the upgrade is revoked
+    /// immediately instead of adding load, and the revocation is
+    /// recorded (`speculative == upgrades + revoked` always).
+    pub fn speculate(&self, row: &[f32]) -> Result<SpecReply, ServeError> {
+        self.check_width(row)?;
+        if self.rungs.len() < 2 {
+            return Err(ServeError::BadInput(
+                "speculative mode needs at least two tiers (fast + verify)".into(),
+            ));
+        }
+        let fast = &self.rungs[self.rungs.len() - 1];
+        let best = &self.rungs[0];
+        // Fast leg first: if the server is draining, fail the whole call
+        // before any speculative accounting opens.
+        let (tx, rx) = mpsc::channel();
+        let freq = ServeRequest {
+            row: row.to_vec(),
+            reply: tx,
+            enqueued: Instant::now(),
+        };
+        fast.queue.submit(freq)?;
+        let first = PendingReply { rx };
+        // Verify leg: every attempt is counted as speculative work, and
+        // every failure path immediately closes the books as revoked.
+        best.metrics.record_speculative();
+        let (vtx, vrx) = mpsc::channel();
+        let vreq = ServeRequest {
+            row: row.to_vec(),
+            reply: vtx,
+            enqueued: Instant::now(),
+        };
+        let state = match best.queue.try_submit(vreq) {
+            Ok(()) => UpgradeState::Pending(PendingReply { rx: vrx }),
+            Err(e) => {
+                best.metrics.record_revoked();
+                UpgradeState::Revoked(e)
+            }
+        };
+        Ok(SpecReply {
+            fast_tier: fast.name.clone(),
+            verify_tier: best.name.clone(),
+            first,
+            upgrade: UpgradeHandle {
+                tier: best.name.clone(),
+                state,
+                metrics: Arc::clone(&best.metrics),
+            },
+        })
+    }
+}
+
+/// An SLO-routed in-flight request: which tier took it, at what quality,
+/// and whether that was a shed (a downgrade below the best eligible
+/// tier).
+pub struct Routed {
+    /// Name of the tier serving the request.
+    pub tier: String,
+    /// That tier's quality score.
+    pub quality: f32,
+    /// Whether routing downgraded below the best eligible tier.
+    pub shed: bool,
+    pending: PendingReply,
+}
+
+impl Routed {
+    /// Block until the request's batch completes.
+    pub fn wait(self) -> Result<Vec<f32>, ServeError> {
+        self.pending.wait()
+    }
+}
+
+enum UpgradeState {
+    /// Verification in flight.
+    Pending(PendingReply),
+    /// Verification will never arrive; the error says why.
+    Revoked(ServeError),
+    /// [`UpgradeHandle::upgraded`] already settled the books.
+    Consumed,
+}
+
+/// The second phase of a speculative reply. Exactly one of three things
+/// happens to it, and each is recorded on the verify tier's metrics:
+///
+/// - [`UpgradeHandle::upgraded`] returns [`Upgrade::Upgraded`] — counted
+///   as an upgrade;
+/// - [`UpgradeHandle::upgraded`] returns [`Upgrade::Revoked`] (verify
+///   leg rejected, failed, or drained) — counted as revoked;
+/// - the handle is dropped unconsumed — counted as revoked (the caller
+///   walked away; any still-queued verify work drains normally into a
+///   dead channel).
+pub struct UpgradeHandle {
+    tier: String,
+    state: UpgradeState,
+    metrics: Arc<TierMetrics>,
+}
+
+impl UpgradeHandle {
+    /// The tier verification runs on.
+    pub fn tier(&self) -> &str {
+        &self.tier
+    }
+
+    /// Block for the verification outcome. A drained server yields
+    /// [`Upgrade::Revoked`] with the shutdown/disconnect error — queued
+    /// upgrades are answered by the drain, never silently dropped.
+    pub fn upgraded(mut self) -> Upgrade {
+        match std::mem::replace(&mut self.state, UpgradeState::Consumed) {
+            UpgradeState::Pending(p) => match p.wait() {
+                Ok(v) => {
+                    self.metrics.record_upgrade();
+                    Upgrade::Upgraded(v)
+                }
+                Err(e) => {
+                    self.metrics.record_revoked();
+                    Upgrade::Revoked(e)
+                }
+            },
+            UpgradeState::Revoked(e) => Upgrade::Revoked(e),
+            UpgradeState::Consumed => unreachable!("upgraded consumes self"),
+        }
+    }
+}
+
+impl Drop for UpgradeHandle {
+    fn drop(&mut self) {
+        if matches!(self.state, UpgradeState::Pending(_)) {
+            // Abandoned before the outcome: close the books as revoked.
+            self.metrics.record_revoked();
+            self.state = UpgradeState::Consumed;
+        }
+    }
+}
+
+/// Outcome of a speculative verification.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Upgrade {
+    /// The best tier's answer, delivered.
+    Upgraded(Vec<f32>),
+    /// No upgrade will come; the error says why (queue full at
+    /// speculation time, execution failure, or server drain).
+    Revoked(ServeError),
+}
+
+/// A two-phase speculative reply: the fast tier's answer now, the best
+/// tier's later.
+pub struct SpecReply {
+    /// Tier serving the immediate answer (cheapest rung).
+    pub fast_tier: String,
+    /// Tier verifying asynchronously (best rung).
+    pub verify_tier: String,
+    first: PendingReply,
+    upgrade: UpgradeHandle,
+}
+
+impl SpecReply {
+    /// Block for the fast answer; the [`UpgradeHandle`] delivers (or
+    /// revokes) the verification later.
+    pub fn first(self) -> (Result<Vec<f32>, ServeError>, UpgradeHandle) {
+        (self.first.wait(), self.upgrade)
+    }
+}

@@ -1,5 +1,5 @@
-//! Serving metrics: per-tier queue depth, batch-occupancy histogram, and
-//! latency percentiles.
+//! Serving metrics: per-tier queue depth, batch-occupancy histogram,
+//! latency percentiles, and the SLO-controller sensors.
 //!
 //! Reuses the [`crate::util::stats`] histogram shapes that
 //! `coordinator::batcher` records (one [`OccupancyHist`] per batching
@@ -7,15 +7,86 @@
 //! [`crate::coordinator::CoordinatorMetrics`]: workers write through
 //! `&self`, anyone reads, locks are poison-tolerant so a panicking worker
 //! cannot cascade into panics on every later read.
+//!
+//! Two kinds of time histograms coexist per tier:
+//!
+//! - **cumulative** ([`DurationHist`]) — the long-run record examples and
+//!   benches report;
+//! - **windowed** ([`WindowedHist`] behind a wall-clock rotation) — the
+//!   sensor the [`crate::serve::slo`] admission controller reads, where
+//!   an idle hour must not let stale history steer routing. The window
+//!   covers the last [`WINDOW_EPOCHS`]`×`[`WINDOW_EPOCH`] of samples.
+//!
+//! The whole registry serializes as one machine-readable shape through
+//! [`Metrics::snapshot`], which benches emit into `BENCH_serve.json` via
+//! [`crate::util::bench::JsonReport`] — CI and humans consume the same
+//! struct.
 
-use crate::util::stats::{DurationHist, OccupancyHist};
+use crate::util::json::Json;
+use crate::util::stats::{DurationHist, OccupancyHist, WindowedHist};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// Epochs in each windowed sensor histogram.
+pub const WINDOW_EPOCHS: usize = 8;
+/// Wall-clock length of one window epoch; the full sliding window spans
+/// `WINDOW_EPOCHS × WINDOW_EPOCH` = 2 s.
+pub const WINDOW_EPOCH: Duration = Duration::from_millis(250);
+
+/// A [`WindowedHist`] rotated on wall time: every access first retires
+/// the epochs the clock has moved past, so reads never see samples older
+/// than the window span (plus one epoch of quantization).
+struct RotatingWindow {
+    hist: WindowedHist,
+    /// Start of the epoch currently recording.
+    started: Instant,
+}
+
+impl Default for RotatingWindow {
+    fn default() -> Self {
+        RotatingWindow {
+            hist: WindowedHist::new(WINDOW_EPOCHS),
+            started: Instant::now(),
+        }
+    }
+}
+
+impl RotatingWindow {
+    /// Retire elapsed epochs. Bounded at one full ring — after a long
+    /// idle stretch the window is simply empty, not rotated thousands of
+    /// times.
+    fn tick(&mut self) {
+        let elapsed = self.started.elapsed();
+        if elapsed < WINDOW_EPOCH {
+            return;
+        }
+        let steps = (elapsed.as_nanos() / WINDOW_EPOCH.as_nanos()) as usize;
+        for _ in 0..steps.min(self.hist.epochs()) {
+            self.hist.rotate();
+        }
+        // Re-anchor on the epoch grid so quantization does not drift.
+        self.started += WINDOW_EPOCH * steps.min(u32::MAX as usize) as u32;
+        if self.started.elapsed() >= WINDOW_EPOCH {
+            self.started = Instant::now();
+        }
+    }
+
+    fn record(&mut self, d: Duration) {
+        self.tick();
+        self.hist.record(d);
+    }
+
+    fn snapshot(&mut self) -> DurationHist {
+        self.tick();
+        self.hist.snapshot()
+    }
+}
 
 /// Live counters for one tier. Shared (`Arc`) between the tier's queue,
-/// its workers, and the server-level [`Metrics`] registry.
+/// its workers, the server-level [`Metrics`] registry, and any
+/// [`crate::serve::Cascade`] routing over the tier.
 #[derive(Default)]
 pub struct TierMetrics {
     /// Requests enqueued but not yet picked into a batch.
@@ -28,9 +99,30 @@ pub struct TierMetrics {
     /// Token rows executed through packed sequence steps (sequence tiers
     /// only — row tiers leave this at zero).
     tokens: AtomicU64,
+    /// Requests that named this tier as their best eligible quality but
+    /// were routed to a cheaper tier by the SLO cascade (the recorded
+    /// quality downgrade).
+    sheds: AtomicU64,
+    /// Speculative verification requests issued against this tier.
+    speculative: AtomicU64,
+    /// Speculative upgrades this tier delivered to a caller.
+    upgrades: AtomicU64,
+    /// Speculative upgrades revoked instead of delivered (submit failed,
+    /// execution error, or the caller abandoned the handle).
+    revoked: AtomicU64,
+    /// Requests rejected as `SloInfeasible` with this tier as their best
+    /// eligible quality — not even a downgrade could meet the deadline.
+    slo_rejects: AtomicU64,
     occupancy: Mutex<OccupancyHist>,
     /// End-to-end latency (enqueue → reply), queue wait included.
     latency: Mutex<DurationHist>,
+    /// Per-batch model execution time (forward only, no queue wait) —
+    /// the service-time sensor of the admission estimator.
+    exec: Mutex<DurationHist>,
+    /// Windowed twin of `latency`.
+    latency_win: Mutex<RotatingWindow>,
+    /// Windowed twin of `exec`.
+    exec_win: Mutex<RotatingWindow>,
 }
 
 impl TierMetrics {
@@ -40,6 +132,10 @@ impl TierMetrics {
 
     fn lat(&self) -> MutexGuard<'_, DurationHist> {
         crate::util::lock_ignore_poison(&self.latency)
+    }
+
+    fn exe(&self) -> MutexGuard<'_, DurationHist> {
+        crate::util::lock_ignore_poison(&self.exec)
     }
 
     pub(crate) fn depth_add(&self, n: usize) {
@@ -68,6 +164,32 @@ impl TierMetrics {
 
     pub(crate) fn record_latency(&self, d: Duration) {
         self.lat().record(d);
+        crate::util::lock_ignore_poison(&self.latency_win).record(d);
+    }
+
+    pub(crate) fn record_exec(&self, d: Duration) {
+        self.exe().record(d);
+        crate::util::lock_ignore_poison(&self.exec_win).record(d);
+    }
+
+    pub(crate) fn record_shed(&self) {
+        self.sheds.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn record_speculative(&self) {
+        self.speculative.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn record_upgrade(&self) {
+        self.upgrades.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn record_revoked(&self) {
+        self.revoked.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn record_slo_reject(&self) {
+        self.slo_rejects.fetch_add(1, Ordering::SeqCst);
     }
 
     /// Requests currently queued (submitted, not yet batched).
@@ -88,6 +210,33 @@ impl TierMetrics {
     /// Token rows executed through packed sequence steps.
     pub fn tokens(&self) -> u64 {
         self.tokens.load(Ordering::SeqCst)
+    }
+
+    /// Requests shed away from this tier by the SLO cascade (counted
+    /// quality downgrades).
+    pub fn sheds(&self) -> u64 {
+        self.sheds.load(Ordering::SeqCst)
+    }
+
+    /// Speculative verification requests issued against this tier.
+    pub fn speculative(&self) -> u64 {
+        self.speculative.load(Ordering::SeqCst)
+    }
+
+    /// Speculative upgrades delivered by this tier.
+    pub fn upgrades(&self) -> u64 {
+        self.upgrades.load(Ordering::SeqCst)
+    }
+
+    /// Speculative upgrades revoked instead of delivered.
+    pub fn revoked(&self) -> u64 {
+        self.revoked.load(Ordering::SeqCst)
+    }
+
+    /// Requests rejected as SLO-infeasible with this tier as their best
+    /// eligible quality.
+    pub fn slo_rejects(&self) -> u64 {
+        self.slo_rejects.load(Ordering::SeqCst)
     }
 
     /// Batches executed.
@@ -124,6 +273,141 @@ impl TierMetrics {
     /// Mean end-to-end latency (exact).
     pub fn latency_mean(&self) -> Duration {
         self.lat().mean()
+    }
+
+    /// Median per-batch execution time (cumulative).
+    pub fn exec_p50(&self) -> Duration {
+        self.exe().p50()
+    }
+
+    /// 99th-percentile per-batch execution time (cumulative).
+    pub fn exec_p99(&self) -> Duration {
+        self.exe().p99()
+    }
+
+    /// Sliding-window snapshot of end-to-end latency — empty after the
+    /// tier has been idle for the window span.
+    pub fn windowed_latency(&self) -> DurationHist {
+        crate::util::lock_ignore_poison(&self.latency_win).snapshot()
+    }
+
+    /// Sliding-window snapshot of per-batch execution time — the
+    /// service-time sensor of [`crate::serve::slo::predict_latency`].
+    pub fn windowed_exec(&self) -> DurationHist {
+        crate::util::lock_ignore_poison(&self.exec_win).snapshot()
+    }
+}
+
+/// One tier's counters frozen at a point in time — the machine-readable
+/// shape behind [`Metrics::snapshot`]. Times are microseconds (f64) so
+/// the struct serializes losslessly through [`Json`]'s f64 numbers.
+#[derive(Debug, Clone)]
+pub struct TierSnapshot {
+    pub tier: String,
+    pub queue_depth: usize,
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_occupancy: f64,
+    pub tokens: u64,
+    /// Cumulative end-to-end latency percentiles, µs.
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// Sliding-window end-to-end latency percentiles, µs (0 when idle
+    /// past the window span).
+    pub win_p50_us: f64,
+    pub win_p99_us: f64,
+    /// Sliding-window sample count backing the windowed percentiles.
+    pub win_samples: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    pub sheds: u64,
+    pub speculative: u64,
+    pub upgrades: u64,
+    pub revoked: u64,
+    pub slo_rejects: u64,
+}
+
+fn us(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e6
+}
+
+impl TierSnapshot {
+    fn from_tier(name: &str, m: &TierMetrics) -> TierSnapshot {
+        let win = m.windowed_latency();
+        TierSnapshot {
+            tier: name.to_string(),
+            queue_depth: m.queue_depth(),
+            requests: m.requests(),
+            batches: m.batches(),
+            mean_occupancy: m.mean_occupancy(),
+            tokens: m.tokens(),
+            p50_us: us(m.latency_p50()),
+            p99_us: us(m.latency_p99()),
+            win_p50_us: us(win.p50()),
+            win_p99_us: us(win.p99()),
+            win_samples: win.count(),
+            rejected: m.rejected(),
+            errors: m.errors(),
+            sheds: m.sheds(),
+            speculative: m.speculative(),
+            upgrades: m.upgrades(),
+            revoked: m.revoked(),
+            slo_rejects: m.slo_rejects(),
+        }
+    }
+
+    /// Serialize as one JSON object (all counters as numbers).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("tier", self.tier.as_str())
+            .set("queue_depth", self.queue_depth)
+            .set("requests", self.requests as f64)
+            .set("batches", self.batches as f64)
+            .set("mean_occupancy", self.mean_occupancy)
+            .set("tokens", self.tokens as f64)
+            .set("p50_us", self.p50_us)
+            .set("p99_us", self.p99_us)
+            .set("win_p50_us", self.win_p50_us)
+            .set("win_p99_us", self.win_p99_us)
+            .set("win_samples", self.win_samples as f64)
+            .set("rejected", self.rejected as f64)
+            .set("errors", self.errors as f64)
+            .set("sheds", self.sheds as f64)
+            .set("speculative", self.speculative as f64)
+            .set("upgrades", self.upgrades as f64)
+            .set("revoked", self.revoked as f64)
+            .set("slo_rejects", self.slo_rejects as f64);
+        o
+    }
+}
+
+/// The whole registry frozen at a point in time, one [`TierSnapshot`]
+/// per tier, sorted by tier name.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub tiers: Vec<TierSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Serialize as `{"tiers": [...]}`.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set(
+            "tiers",
+            Json::Arr(self.tiers.iter().map(TierSnapshot::to_json).collect()),
+        );
+        o
+    }
+
+    /// Emit one `op = "tier_snapshot"` entry per tier into a bench
+    /// report — benches and the CI overload-smoke lane consume the same
+    /// shape `BENCH_serve.json` carries everywhere else.
+    pub fn report_into(&self, report: &mut crate::util::bench::JsonReport) {
+        for t in &self.tiers {
+            let mut e = t.to_json();
+            e.set("op", "tier_snapshot").set("shape", t.tier.as_str());
+            report.push_entry(e);
+        }
     }
 }
 
@@ -163,28 +447,43 @@ impl Metrics {
         self.locked().values().map(|t| t.requests()).sum()
     }
 
-    /// Render a per-tier summary table (example epilogues, `serve` demos).
-    pub fn report(&self) -> String {
+    /// Freeze every tier's counters into one JSON-serializable struct
+    /// (sorted by tier name) — the single shape examples, benches, and
+    /// CI read.
+    pub fn snapshot(&self) -> MetricsSnapshot {
         let map = self.locked();
         let mut names: Vec<&String> = map.keys().collect();
         names.sort();
+        MetricsSnapshot {
+            tiers: names
+                .into_iter()
+                .map(|n| TierSnapshot::from_tier(n, &map[n]))
+                .collect(),
+        }
+    }
+
+    /// Render a per-tier summary table (example epilogues, `serve` demos).
+    pub fn report(&self) -> String {
+        let snap = self.snapshot();
         let mut t = crate::util::bench::Table::new(&[
             "tier", "requests", "batches", "occ", "tokens", "depth", "p50", "p99", "rejected",
-            "errors",
+            "errors", "sheds", "upgrades", "slo_rej",
         ]);
-        for n in names {
-            let m = &map[n];
+        for s in &snap.tiers {
             t.row(&[
-                n.clone(),
-                m.requests().to_string(),
-                m.batches().to_string(),
-                format!("{:.2}", m.mean_occupancy()),
-                m.tokens().to_string(),
-                m.queue_depth().to_string(),
-                crate::util::human_duration(m.latency_p50()),
-                crate::util::human_duration(m.latency_p99()),
-                m.rejected().to_string(),
-                m.errors().to_string(),
+                s.tier.clone(),
+                s.requests.to_string(),
+                s.batches.to_string(),
+                format!("{:.2}", s.mean_occupancy),
+                s.tokens.to_string(),
+                s.queue_depth.to_string(),
+                crate::util::human_duration(Duration::from_secs_f64(s.p50_us / 1e6)),
+                crate::util::human_duration(Duration::from_secs_f64(s.p99_us / 1e6)),
+                s.rejected.to_string(),
+                s.errors.to_string(),
+                s.sheds.to_string(),
+                s.upgrades.to_string(),
+                s.slo_rejects.to_string(),
             ]);
         }
         t.render()
@@ -225,5 +524,66 @@ mod tests {
         assert!(m.tier("nope").is_none());
         let rep = m.report();
         assert!(rep.contains("| dense"), "{rep}");
+    }
+
+    #[test]
+    fn slo_counters_and_exec_sensor() {
+        let m = Metrics::default();
+        let t = m.tier_entry("dense");
+        t.record_shed();
+        t.record_shed();
+        t.record_speculative();
+        t.record_upgrade();
+        t.record_revoked();
+        t.record_slo_reject();
+        assert_eq!(t.sheds(), 2);
+        assert_eq!(t.speculative(), 1);
+        assert_eq!(t.upgrades(), 1);
+        assert_eq!(t.revoked(), 1);
+        assert_eq!(t.slo_rejects(), 1);
+        t.record_exec(Duration::from_millis(3));
+        t.record_exec(Duration::from_millis(5));
+        assert!(t.exec_p50() > Duration::ZERO);
+        assert!(t.exec_p50() <= t.exec_p99());
+        // Freshly recorded samples are inside the sliding window.
+        let win = t.windowed_exec();
+        assert_eq!(win.count(), 2);
+        assert!(win.p99() <= Duration::from_millis(5));
+        t.record_latency(Duration::from_millis(7));
+        assert_eq!(t.windowed_latency().count(), 1);
+    }
+
+    #[test]
+    fn snapshot_serializes_and_roundtrips() {
+        let m = Metrics::default();
+        let t = m.tier_entry("a");
+        t.record_batch(3, 4);
+        t.record_latency(Duration::from_millis(2));
+        t.record_shed();
+        m.tier_entry("b").record_batch(1, 2);
+        let snap = m.snapshot();
+        assert_eq!(snap.tiers.len(), 2);
+        assert_eq!(snap.tiers[0].tier, "a", "sorted by name");
+        assert_eq!(snap.tiers[0].requests, 3);
+        assert_eq!(snap.tiers[0].sheds, 1);
+        assert_eq!(snap.tiers[0].win_samples, 1);
+        assert!(snap.tiers[0].win_p50_us > 0.0);
+        // Through the JSON writer and back.
+        let doc = Json::parse(&snap.to_json().to_pretty()).unwrap();
+        let tiers = doc.get("tiers").and_then(Json::as_arr).unwrap();
+        assert_eq!(tiers.len(), 2);
+        assert_eq!(tiers[0].get("tier").and_then(Json::as_str), Some("a"));
+        assert_eq!(tiers[0].get("sheds").and_then(Json::as_f64), Some(1.0));
+        // And through a JsonReport as tier_snapshot entries.
+        let mut r = crate::util::bench::JsonReport::new("unit", 1);
+        snap.report_into(&mut r);
+        let doc = Json::parse(&r.to_json().to_pretty()).unwrap();
+        let entries = doc.get("entries").and_then(Json::as_arr).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(
+            entries[0].get("op").and_then(Json::as_str),
+            Some("tier_snapshot")
+        );
+        assert_eq!(entries[0].get("shape").and_then(Json::as_str), Some("a"));
     }
 }

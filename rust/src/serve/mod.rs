@@ -45,8 +45,18 @@
 //!   logprob)` shortlist that shrinks vocab-wide logit rows to `2·k`
 //!   floats.
 //! - [`Metrics`] tracks queue depth, a batch-occupancy histogram, and
-//!   p50/p99 end-to-end latency per tier, reusing the
-//!   [`crate::util::stats`] shapes the coordinator's batcher records.
+//!   p50/p99 end-to-end latency per tier (cumulative *and* sliding
+//!   window), reusing the [`crate::util::stats`] shapes the
+//!   coordinator's batcher records; [`Metrics::snapshot`] freezes the
+//!   whole registry into one JSON-serializable shape.
+//! - A [`Cascade`] overlays SLO routing on the registered row tiers:
+//!   requests carry an [`Slo`] (deadline + quality floor), the
+//!   [`slo`] estimator predicts each tier's completion time from the
+//!   live sensors, overload on the dense tier *sheds* to the sketched
+//!   tier as a counted quality downgrade, and a speculative mode
+//!   answers from the cheap tier immediately while the dense tier
+//!   verifies asynchronously through a two-phase
+//!   [`SpecReply::first`] / [`UpgradeHandle::upgraded`] reply.
 //! - [`ModelServer::shutdown`] drains: admissions stop with a typed
 //!   error, queued requests still get answers, workers exit, threads
 //!   join. Dropping the server does the same.
@@ -70,11 +80,15 @@
 //! ```
 
 pub mod batcher;
+pub mod cascade;
 pub mod metrics;
 pub mod router;
+pub mod slo;
 pub mod transform;
 
-pub use metrics::{Metrics, TierMetrics};
+pub use cascade::{Cascade, Routed, SpecReply, Upgrade, UpgradeHandle};
+pub use metrics::{Metrics, MetricsSnapshot, TierMetrics, TierSnapshot};
+pub use slo::{predict_latency, Decision, Slo, TierLoad};
 pub use transform::OutputTransform;
 
 use crate::linalg::Mat;
@@ -92,8 +106,13 @@ use std::time::{Duration, Instant};
 /// crate-wide [`crate::Result`].
 #[derive(Debug, Clone, PartialEq)]
 pub enum ServeError {
-    /// No tier registered under this name.
-    UnknownTier(String),
+    /// No tier registered under this name (and no default tier took the
+    /// request). Carries the registered names so the message says what
+    /// *would* have routed.
+    UnknownTier {
+        name: String,
+        registered: Vec<String>,
+    },
     /// A tier with this name already exists.
     DuplicateTier(String),
     /// The request row does not match the tier's input width.
@@ -122,12 +141,30 @@ pub enum ServeError {
     /// (the memory-fit/token-budget cap in
     /// [`SeqTierInfo::max_seq_len`]).
     SeqTooLong { len: usize, max: usize },
+    /// SLO admission: no eligible tier's predicted completion time meets
+    /// the request's deadline — not even after shedding to the cheapest
+    /// tier. Carries the best prediction the estimator saw, so callers
+    /// can tell a hopeless deadline from a transient overload.
+    SloInfeasible {
+        deadline: Duration,
+        best_predicted: Duration,
+    },
 }
 
 impl std::fmt::Display for ServeError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            ServeError::UnknownTier(t) => write!(f, "no tier named {t:?}"),
+            ServeError::UnknownTier { name, registered } => {
+                if registered.is_empty() {
+                    write!(f, "no tier named {name:?} (no tiers registered)")
+                } else {
+                    write!(
+                        f,
+                        "no tier named {name:?} (registered tiers: {})",
+                        registered.join(", ")
+                    )
+                }
+            }
             ServeError::DuplicateTier(t) => write!(f, "tier {t:?} already registered"),
             ServeError::BadInput(m) => write!(f, "bad request: {m}"),
             ServeError::QueueFull => write!(f, "tier queue full (admission rejected)"),
@@ -142,6 +179,14 @@ impl std::fmt::Display for ServeError {
                 f,
                 "sequence of {len} tokens exceeds the tier's admitted \
                  maximum of {max}"
+            ),
+            ServeError::SloInfeasible {
+                deadline,
+                best_predicted,
+            } => write!(
+                f,
+                "no tier can meet the {deadline:?} deadline (best \
+                 predicted completion {best_predicted:?})"
             ),
         }
     }
@@ -255,6 +300,10 @@ pub struct TierInfo {
     pub out_dim: usize,
     /// Batch cap (every batch executes padded to this).
     pub max_batch: usize,
+    /// Coalescing wait of the tier's batcher — the worst extra queue
+    /// time a lone request spends waiting for co-riders; the admission
+    /// estimator's pessimistic wait term.
+    pub max_wait: Duration,
     /// Admitted worker threads (≤ the requested count under a budget).
     pub workers: usize,
     /// Stored parameter bytes of the tier's model.
@@ -372,6 +421,7 @@ impl ModelServer {
             in_dim,
             out_dim: cfg.transform.out_width(probe.out_dim),
             max_batch: cfg.max_batch,
+            max_wait: cfg.max_wait,
             workers,
             weight_bytes,
             peak_batch_bytes: probe.peak_batch_bytes,
@@ -583,6 +633,19 @@ impl ModelServer {
         self.router.names()
     }
 
+    /// Configure the fallback tier for request routing: requests naming
+    /// an unknown tier route here instead of erroring (info lookups stay
+    /// strict). The tier must already be registered.
+    pub fn set_default_tier(&self, name: &str) -> Result<(), ServeError> {
+        self.router.set_default(name)
+    }
+
+    /// Freeze every tier's counters into one JSON-serializable
+    /// [`MetricsSnapshot`] (convenience for `self.metrics().snapshot()`).
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
     /// What registration admitted for row tier `name` (`None` for
     /// unknown names and for sequence tiers — see
     /// [`ModelServer::seq_tier_info`]).
@@ -634,18 +697,22 @@ impl ServeHandle {
         tier: &str,
         row: &[f32],
     ) -> Result<(Arc<TierQueue<ServeRequest>>, ServeRequest, PendingReply), ServeError> {
-        let t = self.router.get(tier)?;
+        // `route`, not `get`: unknown names fall back to the server's
+        // default tier when one is configured.
+        let t = self.router.route(tier)?;
         let (queue, info) = match &*t {
             Tier::Row { queue, info } => (Arc::clone(queue), info),
-            Tier::Seq { .. } => {
+            Tier::Seq { info, .. } => {
                 return Err(ServeError::BadInput(format!(
-                    "tier {tier:?} serves sequences — use infer_seq/submit_seq"
+                    "tier {:?} serves sequences — use infer_seq/submit_seq",
+                    info.name
                 )))
             }
         };
         if row.len() != info.in_dim {
             return Err(ServeError::BadInput(format!(
-                "tier {tier:?} serves rows of width {}, got {}",
+                "tier {:?} serves rows of width {}, got {}",
+                info.name,
                 info.in_dim,
                 row.len()
             )));
@@ -666,18 +733,20 @@ impl ServeHandle {
         tokens: &Mat,
     ) -> Result<(Arc<TierQueue<SeqServeRequest>>, SeqServeRequest, PendingSeqReply), ServeError>
     {
-        let t = self.router.get(tier)?;
+        let t = self.router.route(tier)?;
         let (queue, info) = match &*t {
             Tier::Seq { queue, info } => (Arc::clone(queue), info),
-            Tier::Row { .. } => {
+            Tier::Row { info, .. } => {
                 return Err(ServeError::BadInput(format!(
-                    "tier {tier:?} serves single rows — use infer/submit"
+                    "tier {:?} serves single rows — use infer/submit",
+                    info.name
                 )))
             }
         };
         if tokens.cols() != info.in_dim {
             return Err(ServeError::BadInput(format!(
-                "tier {tier:?} serves token rows of width {}, got {}",
+                "tier {:?} serves token rows of width {}, got {}",
+                info.name,
                 info.in_dim,
                 tokens.cols()
             )));
@@ -755,6 +824,30 @@ impl ServeHandle {
     pub fn try_infer_seq(&self, tier: &str, tokens: &Mat) -> Result<Mat, ServeError> {
         self.try_submit_seq(tier, tokens)?.wait()
     }
+
+    /// Registered tier names, sorted (same view as
+    /// [`ModelServer::tiers`] — handles are cloneable and outlive the
+    /// borrow of the server).
+    pub fn tiers(&self) -> Vec<String> {
+        self.router.names()
+    }
+
+    /// What registration admitted for row tier `name` (strict — the
+    /// default-tier fallback applies to requests, not info lookups).
+    pub fn tier_info(&self, name: &str) -> Option<TierInfo> {
+        match self.router.get(name).ok().as_deref() {
+            Some(Tier::Row { info, .. }) => Some(info.clone()),
+            _ => None,
+        }
+    }
+
+    /// What registration admitted for sequence tier `name`.
+    pub fn seq_tier_info(&self, name: &str) -> Option<SeqTierInfo> {
+        match self.router.get(name).ok().as_deref() {
+            Some(Tier::Seq { info, .. }) => Some(info.clone()),
+            _ => None,
+        }
+    }
 }
 
 /// An in-flight request; [`PendingReply::wait`] blocks for the result.
@@ -809,11 +902,15 @@ mod tests {
         let h = server.handle();
         let y = h.infer("dense", &[0.5; 8]).unwrap();
         assert_eq!(y.len(), 4);
-        // Unknown tier and wrong width are typed errors.
-        assert!(matches!(
-            h.infer("nope", &[0.0; 8]),
-            Err(ServeError::UnknownTier(_))
-        ));
+        // Unknown tier and wrong width are typed errors; the former
+        // names the registered tiers.
+        match h.infer("nope", &[0.0; 8]) {
+            Err(ServeError::UnknownTier { name, registered }) => {
+                assert_eq!(name, "nope");
+                assert_eq!(registered, vec!["dense"]);
+            }
+            other => panic!("expected UnknownTier, got {other:?}"),
+        }
         assert!(matches!(
             h.infer("dense", &[0.0; 3]),
             Err(ServeError::BadInput(_))
@@ -959,6 +1056,37 @@ mod tests {
             h.infer_seq("seq", &Mat::zeros(2, 8)),
             Err(ServeError::ShuttingDown)
         ));
+    }
+
+    #[test]
+    fn default_tier_catches_unknown_names() {
+        let mut server = ModelServer::new();
+        server
+            .register_tier("dense", mlp(1), 8, TierConfig::default())
+            .unwrap();
+        let h = server.handle();
+        // Before a default is set, unknown names error.
+        assert!(matches!(
+            h.infer("typo", &[0.5; 8]),
+            Err(ServeError::UnknownTier { .. })
+        ));
+        // A default must name a registered tier.
+        assert!(matches!(
+            server.set_default_tier("nope"),
+            Err(ServeError::UnknownTier { .. })
+        ));
+        server.set_default_tier("dense").unwrap();
+        // The same request now routes through the fallback and answers
+        // exactly what the tier would have.
+        let via_fallback = h.infer("typo", &[0.5; 8]).unwrap();
+        let direct = h.infer("dense", &[0.5; 8]).unwrap();
+        assert_eq!(via_fallback, direct);
+        // Info lookups stay strict.
+        assert!(server.tier_info("typo").is_none());
+        assert!(h.tier_info("typo").is_none());
+        assert_eq!(h.tier_info("dense").unwrap().max_batch, 4);
+        assert_eq!(h.tiers(), vec!["dense"]);
+        server.shutdown();
     }
 
     #[test]

@@ -60,10 +60,24 @@ impl Tier {
     }
 }
 
-/// Name → tier map shared between the server and its client handles.
+/// Name → tier map shared between the server and its client handles,
+/// plus the optional default tier unknown names fall back to on the
+/// *request-routing* path (info lookups stay strict).
 #[derive(Default)]
 pub(crate) struct Router {
     tiers: Mutex<HashMap<String, Arc<Tier>>>,
+    default_tier: Mutex<Option<String>>,
+}
+
+/// The typed unknown-tier error, carrying the registered names so the
+/// message tells the caller what *would* have routed.
+fn unknown(map: &HashMap<String, Arc<Tier>>, name: &str) -> ServeError {
+    let mut registered: Vec<String> = map.keys().cloned().collect();
+    registered.sort();
+    ServeError::UnknownTier {
+        name: name.to_string(),
+        registered,
+    }
 }
 
 impl Router {
@@ -80,17 +94,59 @@ impl Router {
         Ok(())
     }
 
+    /// Strict lookup — unknown names error (listing what is registered)
+    /// even when a default tier is configured. Info lookups and
+    /// registration duplicate checks use this: a fallback that silently
+    /// answered `tier_info("typo")` with another tier's limits would be
+    /// worse than the error.
     pub(crate) fn get(&self, name: &str) -> Result<Arc<Tier>, ServeError> {
-        self.locked()
-            .get(name)
-            .cloned()
-            .ok_or_else(|| ServeError::UnknownTier(name.to_string()))
+        let map = self.locked();
+        map.get(name).cloned().ok_or_else(|| unknown(&map, name))
+    }
+
+    /// Request-routing lookup: an unknown name falls back to the
+    /// configured default tier when one is set, so a fleet can repoint
+    /// stale clients instead of hard-erroring them.
+    pub(crate) fn route(&self, name: &str) -> Result<Arc<Tier>, ServeError> {
+        let map = self.locked();
+        if let Some(t) = map.get(name) {
+            return Ok(Arc::clone(t));
+        }
+        if let Some(d) = crate::util::lock_ignore_poison(&self.default_tier).as_deref() {
+            if let Some(t) = map.get(d) {
+                return Ok(Arc::clone(t));
+            }
+        }
+        Err(unknown(&map, name))
+    }
+
+    /// Configure the fallback tier for [`Router::route`]. The tier must
+    /// already be registered.
+    pub(crate) fn set_default(&self, name: &str) -> Result<(), ServeError> {
+        let map = self.locked();
+        if !map.contains_key(name) {
+            return Err(unknown(&map, name));
+        }
+        *crate::util::lock_ignore_poison(&self.default_tier) = Some(name.to_string());
+        Ok(())
     }
 
     /// Registered tier names, sorted.
     pub(crate) fn names(&self) -> Vec<String> {
         let mut v: Vec<String> = self.locked().keys().cloned().collect();
         v.sort();
+        v
+    }
+
+    /// Every registered tier with its name, sorted by name — the
+    /// enumeration the SLO cascade walks to pick a quality ladder.
+    pub(crate) fn entries(&self) -> Vec<(String, Arc<Tier>)> {
+        let mut v: Vec<(String, Arc<Tier>)> = self
+            .locked()
+            .iter()
+            .map(|(k, t)| (k.clone(), Arc::clone(t)))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
         v
     }
 
@@ -286,26 +342,87 @@ mod tests {
     fn router_insert_get_duplicate() {
         use crate::serve::metrics::TierMetrics;
         let r = Router::default();
-        let mk = || Tier::Row {
+        let mk = |n: &str| Tier::Row {
             queue: Arc::new(TierQueue::new(4, Arc::new(TierMetrics::default()))),
             info: TierInfo {
-                name: "a".into(),
+                name: n.into(),
                 in_dim: 2,
                 out_dim: 2,
                 max_batch: 4,
+                max_wait: std::time::Duration::from_millis(1),
                 workers: 1,
                 weight_bytes: 0,
                 peak_batch_bytes: 0,
                 bit_identical_to_unbatched: true,
             },
         };
-        r.insert("a", mk()).unwrap();
+        r.insert("a", mk("a")).unwrap();
         assert!(matches!(
-            r.insert("a", mk()),
+            r.insert("a", mk("a")),
             Err(ServeError::DuplicateTier(_))
         ));
         assert!(r.get("a").is_ok());
-        assert!(matches!(r.get("b"), Err(ServeError::UnknownTier(_))));
+        // The unknown-tier error names what IS registered.
+        match r.get("b") {
+            Err(ServeError::UnknownTier { name, registered }) => {
+                assert_eq!(name, "b");
+                assert_eq!(registered, vec!["a"]);
+            }
+            other => panic!("expected UnknownTier, got {other:?}"),
+        }
         assert_eq!(r.names(), vec!["a"]);
+        assert_eq!(r.entries().len(), 1);
+        assert_eq!(r.entries()[0].0, "a");
+    }
+
+    #[test]
+    fn router_default_tier_fallback_routes_only_requests() {
+        use crate::serve::metrics::TierMetrics;
+        let r = Router::default();
+        let mk = |n: &str| Tier::Row {
+            queue: Arc::new(TierQueue::new(4, Arc::new(TierMetrics::default()))),
+            info: TierInfo {
+                name: n.into(),
+                in_dim: 2,
+                out_dim: 2,
+                max_batch: 4,
+                max_wait: std::time::Duration::from_millis(1),
+                workers: 1,
+                weight_bytes: 0,
+                peak_batch_bytes: 0,
+                bit_identical_to_unbatched: true,
+            },
+        };
+        r.insert("a", mk("a")).unwrap();
+        r.insert("b", mk("b")).unwrap();
+        // No default configured: routing an unknown name errors.
+        assert!(matches!(
+            r.route("typo"),
+            Err(ServeError::UnknownTier { .. })
+        ));
+        // The default must itself be registered.
+        assert!(matches!(
+            r.set_default("nope"),
+            Err(ServeError::UnknownTier { .. })
+        ));
+        r.set_default("b").unwrap();
+        // Unknown names now route to the fallback; known names still
+        // route to themselves.
+        let routed = r.route("typo").unwrap();
+        match &*routed {
+            Tier::Row { info, .. } => assert_eq!(info.name, "b"),
+            _ => panic!("expected row tier"),
+        }
+        let direct = r.route("a").unwrap();
+        match &*direct {
+            Tier::Row { info, .. } => assert_eq!(info.name, "a"),
+            _ => panic!("expected row tier"),
+        }
+        // Strict lookups do NOT fall back — info for a typo stays an
+        // error even with a default configured.
+        assert!(matches!(
+            r.get("typo"),
+            Err(ServeError::UnknownTier { .. })
+        ));
     }
 }

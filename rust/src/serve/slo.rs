@@ -1,0 +1,313 @@
+//! SLO-driven admission control: the per-request deadline/quality
+//! contract ([`Slo`]), the per-tier completion-time estimator
+//! ([`predict_latency`] over a [`TierLoad`] sensor reading), and the
+//! shedding policy ([`admit`]) that picks which tier of a quality ladder
+//! a request runs on.
+//!
+//! This is the *decision* layer — pure functions over sensor readings,
+//! deterministic and unit-testable with no threads. The *mechanism*
+//! (reading live metrics, submitting to tier queues, speculative
+//! upgrades) lives in [`super::cascade`].
+//!
+//! ## The estimator
+//!
+//! A tier's predicted completion time for a newly admitted request is
+//!
+//! ```text
+//! B_eff      = clamp(ceil(mean_occupancy), 1, max_batch)     (max_batch before any batch)
+//! n_batches  = ceil((queue_depth + 1) / B_eff)
+//! rounds     = ceil(n_batches / workers)
+//! predicted  = max_wait + s · rounds
+//! ```
+//!
+//! where `s` is the tier's windowed median per-batch execution time
+//! (queue wait excluded — see [`super::TierMetrics::windowed_exec`]).
+//! `B_eff` converts observed occupancy into how many queued requests one
+//! executed batch retires; `rounds` is how many sequential batch
+//! executions the request waits behind once the worker pool fans out;
+//! `max_wait` is the batcher's coalescing wait, charged in full (the
+//! pessimistic bound for a lone request). A tier that has executed no
+//! batch inside the sliding window predicts `max_wait` alone — an idle
+//! tier is assumed fast, so cold starts route optimistically rather than
+//! rejecting on no evidence.
+//!
+//! ## The shedding policy
+//!
+//! [`admit`] walks the quality ladder **best quality first** over the
+//! tiers whose quality clears the request's floor, and routes to the
+//! first whose prediction meets the deadline: requests get the best
+//! quality the current load affords, and overload on the dense tier
+//! *sheds* down the ladder (a counted quality downgrade) instead of
+//! rejecting. Only when no eligible tier predicts in time is the request
+//! rejected, with the best prediction attached
+//! ([`super::ServeError::SloInfeasible`]).
+
+use std::time::Duration;
+
+/// A request's service-level objective: answer within `deadline`, from a
+/// tier of quality at least `min_quality`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slo {
+    /// Wall-clock completion deadline, measured from admission.
+    pub deadline: Duration,
+    /// Quality floor: tiers below this never serve the request, even if
+    /// that means rejecting it. Qualities are the cascade's per-tier
+    /// scores (conventionally `1.0` = dense, lower = sketched).
+    pub min_quality: f32,
+}
+
+impl Slo {
+    /// Deadline-only SLO: any tier quality is acceptable.
+    pub fn new(deadline: Duration) -> Self {
+        Slo {
+            deadline,
+            min_quality: 0.0,
+        }
+    }
+
+    /// Add a quality floor.
+    pub fn with_min_quality(mut self, q: f32) -> Self {
+        self.min_quality = q;
+        self
+    }
+}
+
+/// One tier's sensor reading, as fed to [`predict_latency`]. The cascade
+/// fills this from live [`super::TierMetrics`]; tests construct it
+/// directly.
+#[derive(Debug, Clone, Copy)]
+pub struct TierLoad {
+    /// Requests queued ahead of this one (enqueued, not yet batched).
+    pub queue_depth: usize,
+    /// Mean live rows per executed batch (0 before the first batch).
+    pub mean_occupancy: f64,
+    /// Windowed median per-batch execution time (zero when the tier has
+    /// been idle past the sliding window — the optimistic cold start).
+    pub exec_p50: Duration,
+    /// The tier's batch cap.
+    pub max_batch: usize,
+    /// The batcher's coalescing wait.
+    pub max_wait: Duration,
+    /// Worker threads draining the queue.
+    pub workers: usize,
+}
+
+/// Predicted completion time of a request admitted to a tier under
+/// `load` — the estimator formula in the module docs. Saturates at
+/// `Duration::MAX` instead of overflowing on absurd inputs.
+pub fn predict_latency(load: &TierLoad) -> Duration {
+    let max_batch = load.max_batch.max(1);
+    let b_eff = if load.mean_occupancy > 0.0 {
+        (load.mean_occupancy.ceil() as usize).clamp(1, max_batch)
+    } else {
+        // No occupancy evidence yet: assume batches fill to the cap.
+        max_batch
+    };
+    let n_batches = load.queue_depth.saturating_add(1).div_ceil(b_eff);
+    let rounds = n_batches.div_ceil(load.workers.max(1));
+    let exec = load
+        .exec_p50
+        .checked_mul(u32::try_from(rounds).unwrap_or(u32::MAX))
+        .unwrap_or(Duration::MAX);
+    load.max_wait.checked_add(exec).unwrap_or(Duration::MAX)
+}
+
+/// What [`admit`] decided for one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decision {
+    /// Route to ladder index `index` (0 = best quality). `shed_from` is
+    /// the index of the best *eligible* tier when the request was routed
+    /// below it — the recorded quality downgrade; `None` when the
+    /// request got its best eligible tier.
+    Route {
+        index: usize,
+        shed_from: Option<usize>,
+    },
+    /// No eligible tier predicts completion inside the deadline.
+    /// `best_predicted` is the fastest eligible prediction
+    /// (`Duration::MAX` when the quality floor leaves no tier eligible).
+    Infeasible { best_predicted: Duration },
+}
+
+/// The shedding policy: pick a ladder index for a request with `slo`
+/// given each tier's `(quality, predicted completion)`, ordered best
+/// quality first (the cascade's canonical order). Pure — no clocks, no
+/// queues — so the policy is exhaustively testable.
+pub fn admit(slo: &Slo, tiers: &[(f32, Duration)]) -> Decision {
+    let mut first_eligible: Option<usize> = None;
+    let mut best_predicted = Duration::MAX;
+    for (i, &(quality, predicted)) in tiers.iter().enumerate() {
+        if quality < slo.min_quality {
+            continue;
+        }
+        if first_eligible.is_none() {
+            first_eligible = Some(i);
+        }
+        best_predicted = best_predicted.min(predicted);
+        if predicted <= slo.deadline {
+            let shed_from = first_eligible.filter(|&f| f != i);
+            return Decision::Route {
+                index: i,
+                shed_from,
+            };
+        }
+    }
+    Decision::Infeasible { best_predicted }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load() -> TierLoad {
+        TierLoad {
+            queue_depth: 0,
+            mean_occupancy: 0.0,
+            exec_p50: Duration::from_millis(4),
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+        }
+    }
+
+    #[test]
+    fn estimator_charges_wait_plus_rounds() {
+        // Empty queue, no occupancy evidence: one batch, one round.
+        assert_eq!(predict_latency(&load()), Duration::from_millis(5));
+        // 8 queued + this one at B_eff = max_batch = 4 ⇒ 3 batches over
+        // 2 workers ⇒ 2 rounds ⇒ 1 + 2·4 ms.
+        let l = TierLoad {
+            queue_depth: 8,
+            ..load()
+        };
+        assert_eq!(predict_latency(&l), Duration::from_millis(9));
+        // Observed occupancy 1.0 shrinks B_eff: 9 requests ⇒ 9 batches
+        // over 2 workers ⇒ 5 rounds ⇒ 1 + 5·4 ms.
+        let l = TierLoad {
+            queue_depth: 8,
+            mean_occupancy: 1.0,
+            ..load()
+        };
+        assert_eq!(predict_latency(&l), Duration::from_millis(21));
+        // Fractional occupancy rounds up (2.3 ⇒ 3 rows per batch).
+        let l = TierLoad {
+            queue_depth: 5,
+            mean_occupancy: 2.3,
+            ..load()
+        };
+        // 6 requests / 3 per batch = 2 batches / 2 workers = 1 round.
+        assert_eq!(predict_latency(&l), Duration::from_millis(5));
+    }
+
+    #[test]
+    fn estimator_cold_start_is_optimistic_and_degenerate_inputs_saturate() {
+        // Idle past the window: no exec evidence ⇒ only the wait term.
+        let l = TierLoad {
+            exec_p50: Duration::ZERO,
+            queue_depth: 100,
+            ..load()
+        };
+        assert_eq!(predict_latency(&l), Duration::from_millis(1));
+        // Zero workers / zero cap are clamped, not divide-by-zero.
+        let l = TierLoad {
+            workers: 0,
+            max_batch: 0,
+            ..load()
+        };
+        assert_eq!(predict_latency(&l), Duration::from_millis(5));
+        // Saturation instead of overflow.
+        let l = TierLoad {
+            exec_p50: Duration::MAX,
+            queue_depth: usize::MAX - 1,
+            ..load()
+        };
+        assert_eq!(predict_latency(&l), Duration::MAX);
+    }
+
+    #[test]
+    fn admit_prefers_best_quality_that_meets_deadline() {
+        let ms = Duration::from_millis;
+        let slo = Slo::new(ms(10));
+        // Both feasible: the best-quality tier wins even though the
+        // cheaper one is faster.
+        let d = admit(&slo, &[(1.0, ms(8)), (0.6, ms(2))]);
+        assert_eq!(
+            d,
+            Decision::Route {
+                index: 0,
+                shed_from: None
+            }
+        );
+    }
+
+    #[test]
+    fn admit_sheds_overloaded_dense_to_sketched() {
+        let ms = Duration::from_millis;
+        let slo = Slo::new(ms(10));
+        // Dense predicts past the deadline: shed to the sketched tier,
+        // recording the downgrade from index 0.
+        let d = admit(&slo, &[(1.0, ms(50)), (0.6, ms(2))]);
+        assert_eq!(
+            d,
+            Decision::Route {
+                index: 1,
+                shed_from: Some(0)
+            }
+        );
+    }
+
+    #[test]
+    fn admit_respects_quality_floor() {
+        let ms = Duration::from_millis;
+        // Floor 0.9 makes the sketched tier ineligible: the request
+        // waits on dense even though sketched is faster...
+        let slo = Slo::new(ms(60)).with_min_quality(0.9);
+        let d = admit(&slo, &[(1.0, ms(50)), (0.6, ms(2))]);
+        assert_eq!(
+            d,
+            Decision::Route {
+                index: 0,
+                shed_from: None
+            }
+        );
+        // ...and when dense cannot meet the deadline either, the floor
+        // turns shedding into a typed reject carrying dense's prediction.
+        let slo = Slo::new(ms(10)).with_min_quality(0.9);
+        let d = admit(&slo, &[(1.0, ms(50)), (0.6, ms(2))]);
+        assert_eq!(
+            d,
+            Decision::Infeasible {
+                best_predicted: ms(50)
+            }
+        );
+        // A floor above every tier leaves nothing eligible.
+        let slo = Slo::new(ms(10)).with_min_quality(2.0);
+        let d = admit(&slo, &[(1.0, ms(1)), (0.6, ms(1))]);
+        assert_eq!(
+            d,
+            Decision::Infeasible {
+                best_predicted: Duration::MAX
+            }
+        );
+    }
+
+    #[test]
+    fn admit_infeasible_reports_fastest_eligible_prediction() {
+        let ms = Duration::from_millis;
+        let slo = Slo::new(ms(1));
+        let d = admit(&slo, &[(1.0, ms(50)), (0.6, ms(7))]);
+        assert_eq!(
+            d,
+            Decision::Infeasible {
+                best_predicted: ms(7)
+            }
+        );
+        // Empty ladder: infeasible by construction.
+        assert_eq!(
+            admit(&slo, &[]),
+            Decision::Infeasible {
+                best_predicted: Duration::MAX
+            }
+        );
+    }
+}

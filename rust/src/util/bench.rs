@@ -188,6 +188,14 @@ impl JsonReport {
         self.entries.push(e);
     }
 
+    /// Record one pre-built entry object (e.g. a
+    /// [`crate::serve::TierSnapshot`] serialized via `to_json`) — callers
+    /// with richer shapes than (op, shape, ms) still land in the same
+    /// `entries` array CI diffs.
+    pub fn push_entry(&mut self, entry: Json) {
+        self.entries.push(entry);
+    }
+
     /// Serialized report document.
     pub fn to_json(&self) -> Json {
         let mut doc = Json::obj();

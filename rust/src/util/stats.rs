@@ -61,6 +61,22 @@ impl OccupancyHist {
     pub fn buckets(&self) -> &[u64] {
         &self.buckets
     }
+
+    /// Fold `other`'s batches into `self` — aggregating occupancy across
+    /// several queues (e.g. every `coordinator` batcher of a process)
+    /// without re-recording. Bucket vectors of different capacities
+    /// align on index (rows used − 1), so the merged histogram is
+    /// exactly what one shared histogram would have recorded.
+    pub fn merge(&mut self, other: &OccupancyHist) {
+        self.batches += other.batches;
+        self.requests += other.requests;
+        if self.buckets.len() < other.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (b, &o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+    }
 }
 
 /// Bucket count of [`DurationHist`]: values 0–7 ns exact, then 4
@@ -167,6 +183,76 @@ impl DurationHist {
     pub fn p99(&self) -> Duration {
         self.quantile(0.99)
     }
+
+    /// Fold `other`'s samples into `self`. Buckets are index-aligned
+    /// (the layout is fixed), so the merged histogram reports exactly
+    /// what one histogram fed both sample streams would — the building
+    /// block of [`WindowedHist::snapshot`] and of aggregating per-tier
+    /// latency into a server-wide view.
+    pub fn merge(&mut self, other: &DurationHist) {
+        self.count += other.count;
+        self.total += other.total;
+        self.max = self.max.max(other.max);
+        for (b, &o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+    }
+}
+
+/// A sliding window over a [`DurationHist`]: a ring of `epochs` equal
+/// sub-histograms, where [`WindowedHist::record`] writes into the
+/// current epoch and [`WindowedHist::rotate`] retires the oldest. The
+/// [`WindowedHist::snapshot`] merge therefore covers only the most
+/// recent `epochs` rotations — the controller-facing view in which
+/// stale history cannot steer admission decisions, unlike the
+/// cumulative histograms the long-run metrics keep.
+///
+/// Rotation is explicit (no clock inside): callers decide the epoch
+/// length — `serve::metrics` rotates on wall time, tests rotate
+/// deterministically.
+#[derive(Clone, Debug)]
+pub struct WindowedHist {
+    epochs: Vec<DurationHist>,
+    /// Index of the epoch currently recording.
+    head: usize,
+}
+
+impl WindowedHist {
+    /// A window of `epochs` sub-histograms (at least 1).
+    pub fn new(epochs: usize) -> Self {
+        WindowedHist {
+            epochs: vec![DurationHist::default(); epochs.max(1)],
+            head: 0,
+        }
+    }
+
+    /// Number of epochs in the ring.
+    pub fn epochs(&self) -> usize {
+        self.epochs.len()
+    }
+
+    /// Record one sample into the current epoch.
+    pub fn record(&mut self, d: Duration) {
+        self.epochs[self.head].record(d);
+    }
+
+    /// Advance the window: the oldest epoch is cleared and becomes the
+    /// new recording epoch. After `epochs()` consecutive rotations with
+    /// no records, the snapshot is empty.
+    pub fn rotate(&mut self) {
+        self.head = (self.head + 1) % self.epochs.len();
+        self.epochs[self.head] = DurationHist::default();
+    }
+
+    /// Merge every live epoch into one [`DurationHist`] — the windowed
+    /// p50/p99/mean the admission controller reads.
+    pub fn snapshot(&self) -> DurationHist {
+        let mut out = DurationHist::default();
+        for e in &self.epochs {
+            out.merge(e);
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -218,6 +304,93 @@ mod tests {
             assert!(bucket_floor(idx) <= ns, "floor({idx}) vs {ns}");
             prev = idx;
         }
+    }
+
+    #[test]
+    fn occupancy_merge_matches_shared_recording() {
+        // Two queues' histograms merged == one histogram fed both streams.
+        let mut a = OccupancyHist::default();
+        let mut b = OccupancyHist::default();
+        let mut both = OccupancyHist::default();
+        for (used, cap) in [(1usize, 4usize), (4, 4), (2, 4)] {
+            a.record(used, cap);
+            both.record(used, cap);
+        }
+        // b saw a larger capacity: merge must grow a's buckets.
+        for (used, cap) in [(6usize, 8usize), (8, 8)] {
+            b.record(used, cap);
+            both.record(used, cap);
+        }
+        a.merge(&b);
+        assert_eq!(a.batches(), both.batches());
+        assert_eq!(a.requests(), both.requests());
+        assert_eq!(a.buckets(), both.buckets());
+        // Merging an empty histogram is the identity.
+        let before = a.buckets().to_vec();
+        a.merge(&OccupancyHist::default());
+        assert_eq!(a.buckets(), &before[..]);
+    }
+
+    #[test]
+    fn duration_merge_matches_shared_recording() {
+        let mut a = DurationHist::default();
+        let mut b = DurationHist::default();
+        let mut both = DurationHist::default();
+        for ms in [1u64, 3, 7] {
+            a.record(Duration::from_millis(ms));
+            both.record(Duration::from_millis(ms));
+        }
+        for ms in [2u64, 50] {
+            b.record(Duration::from_millis(ms));
+            both.record(Duration::from_millis(ms));
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.mean(), both.mean());
+        assert_eq!(a.max(), both.max());
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.quantile(q), both.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn windowed_hist_forgets_old_epochs() {
+        let mut w = WindowedHist::new(3);
+        assert_eq!(w.epochs(), 3);
+        // Epoch 0: slow samples.
+        w.record(Duration::from_millis(100));
+        w.record(Duration::from_millis(100));
+        assert_eq!(w.snapshot().count(), 2);
+        assert!(w.snapshot().p50() >= Duration::from_millis(80));
+        // Two newer epochs of fast samples: the slow epoch still rides
+        // the window...
+        for _ in 0..2 {
+            w.rotate();
+            for _ in 0..4 {
+                w.record(Duration::from_millis(1));
+            }
+        }
+        assert_eq!(w.snapshot().count(), 10);
+        assert!(w.snapshot().max() == Duration::from_millis(100));
+        // ...until one more rotation retires it: the stale history is
+        // gone and the snapshot reflects only recent samples.
+        w.rotate();
+        let snap = w.snapshot();
+        assert_eq!(snap.count(), 8);
+        assert!(snap.max() <= Duration::from_millis(1));
+        // A full ring of empty rotations drains the window entirely.
+        for _ in 0..3 {
+            w.rotate();
+        }
+        assert_eq!(w.snapshot().count(), 0);
+        assert_eq!(w.snapshot().p99(), Duration::ZERO);
+        // Degenerate: a zero-epoch request still yields a usable window.
+        let mut w1 = WindowedHist::new(0);
+        assert_eq!(w1.epochs(), 1);
+        w1.record(Duration::from_millis(2));
+        assert_eq!(w1.snapshot().count(), 1);
+        w1.rotate();
+        assert_eq!(w1.snapshot().count(), 0);
     }
 
     #[test]

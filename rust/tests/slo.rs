@@ -1,0 +1,328 @@
+//! Integration tests for SLO cascade routing: deterministic synthetic
+//! overload (a model whose forward sleeps a known time), shed-to-sketched
+//! with counted downgrades, typed infeasibility, bitwise speculative
+//! replies, and drain/revoke accounting on shutdown.
+//!
+//! Determinism policy: the load is synthetic — service time is a
+//! `thread::sleep` inside the model, so "dense is overloaded" is a fact
+//! the test *constructs* (sleep ≫ deadline), not a race it hopes for.
+//! Time margins are ≥ 2× so scheduler jitter cannot flip outcomes.
+
+use panther::linalg::Mat;
+use panther::nn::{ForwardCtx, Model};
+use panther::serve::{Cascade, ModelServer, ServeError, Slo, TierConfig, Upgrade, UpgradeHandle};
+use std::time::Duration;
+
+const D: usize = 6;
+
+/// A row-independent affine map with a built-in service time: forward
+/// sleeps `delay_ms`, then returns `x·scale + bias` elementwise. The
+/// output is a pure function of the input (the sleep only models load),
+/// so bitwise oracles against the standalone forward stay exact.
+#[derive(Clone)]
+struct SleepyAffine {
+    delay_ms: u64,
+    scale: f32,
+    bias: f32,
+}
+
+impl panther::nn::Module for SleepyAffine {
+    fn type_name(&self) -> &'static str {
+        "SleepyAffine"
+    }
+    fn forward(&self, x: &Mat, _ctx: &ForwardCtx) -> panther::Result<Mat> {
+        if self.delay_ms > 0 {
+            std::thread::sleep(Duration::from_millis(self.delay_ms));
+        }
+        let data = x.data().iter().map(|v| v * self.scale + self.bias);
+        Ok(Mat::from_vec(x.rows(), x.cols(), data.collect()))
+    }
+    fn params(&self) -> Vec<(String, panther::nn::ParamRef<'_>)> {
+        Vec::new()
+    }
+    fn params_mut(&mut self) -> Vec<(String, panther::nn::ParamMut<'_>)> {
+        Vec::new()
+    }
+    fn boxed_clone(&self) -> Box<dyn panther::nn::Module> {
+        Box::new(self.clone())
+    }
+}
+
+fn affine_model(delay_ms: u64, scale: f32, bias: f32) -> Model {
+    let mut m = Model::new();
+    let aff = SleepyAffine {
+        delay_ms,
+        scale,
+        bias,
+    };
+    m.add("aff", aff).unwrap();
+    m
+}
+
+/// The standalone single-row forward — the bitwise oracle.
+fn solo_forward(model: &Model, row: &[f32]) -> Vec<f32> {
+    let x = Mat::from_vec(1, row.len(), row.to_vec());
+    model.forward(&x, &ForwardCtx::new()).unwrap().row(0).to_vec()
+}
+
+/// Dense = slow + "high quality" (scale 2), sketched = instant + cheap
+/// (scale 0.5). `dense_delay_ms` is the synthetic service time.
+fn two_tier_server(dense_delay_ms: u64, dense_queue_cap: usize) -> ModelServer {
+    let mut server = ModelServer::new();
+    server
+        .register_tier(
+            "dense",
+            affine_model(dense_delay_ms, 2.0, 0.25),
+            D,
+            TierConfig {
+                max_batch: 1,
+                workers: 1,
+                queue_cap: dense_queue_cap,
+                max_wait: Duration::from_millis(1),
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    server
+        .register_tier(
+            "sketched",
+            affine_model(0, 0.5, -0.125),
+            D,
+            TierConfig {
+                max_batch: 4,
+                workers: 2,
+                queue_cap: 64,
+                max_wait: Duration::from_millis(1),
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    server
+}
+
+fn ladder(server: &ModelServer) -> Cascade {
+    Cascade::new(server, &[("dense", 1.0), ("sketched", 0.6)]).unwrap()
+}
+
+fn row(i: usize) -> Vec<f32> {
+    (0..D).map(|j| (i * D + j) as f32 * 0.1 - 1.0).collect()
+}
+
+/// Warm the dense tier's execution-time sensor: route one request with
+/// an unbounded deadline (best quality wins while sensors are empty),
+/// so the windowed exec histogram records the synthetic service time.
+fn warm_dense(cascade: &Cascade) {
+    let r = cascade.submit(&row(999), &Slo::new(Duration::MAX)).unwrap();
+    assert_eq!(r.tier, "dense", "cold sensors route to the best tier");
+    assert!(!r.shed);
+    r.wait().unwrap();
+}
+
+#[test]
+fn overload_sheds_to_sketched_with_counted_downgrades() {
+    // Dense service time 40 ms vs a 10 ms deadline: once the sensor has
+    // seen one batch, *every* deadline-bound request must shed. Dense
+    // alone would reject 100 % of them (≥ the 30 % overload bar); the
+    // cascade must serve 100 % (≥ the 95 % bar) within capacity.
+    let server = two_tier_server(40, 4);
+    let cascade = ladder(&server);
+    warm_dense(&cascade);
+    let sketched_oracle = affine_model(0, 0.5, -0.125);
+    let dense_pred = cascade.predict("dense").unwrap();
+    assert!(
+        dense_pred >= Duration::from_millis(30),
+        "sensor must have seen the 40 ms service time, got {dense_pred:?}"
+    );
+    assert!(cascade.predict("nope").is_none());
+
+    let n = 30;
+    let slo = Slo::new(Duration::from_millis(10));
+    let mut served = 0;
+    for i in 0..n {
+        let routed = cascade.submit(&row(i), &slo).unwrap();
+        assert_eq!(routed.tier, "sketched", "overloaded dense must shed");
+        assert!(routed.shed, "downgrade must be flagged");
+        assert!((routed.quality - 0.6).abs() < 1e-6);
+        let got = routed.wait().unwrap();
+        // Shed replies are the sketched tier's exact forward.
+        assert_eq!(got, solo_forward(&sketched_oracle, &row(i)));
+        served += 1;
+    }
+    assert_eq!(served, n, "the cascade serves everything dense would drop");
+
+    let m = server.metrics();
+    let dense = m.tier("dense").unwrap();
+    let sketched = m.tier("sketched").unwrap();
+    assert_eq!(dense.sheds(), n as u64, "every downgrade counted, on the tier shed FROM");
+    assert_eq!(dense.slo_rejects(), 0);
+    assert_eq!(sketched.requests(), n as u64, "shed work landed on sketched");
+    // The snapshot carries the same counters (the shape benches emit).
+    let snap = m.snapshot();
+    let d = snap.tiers.iter().find(|t| t.tier == "dense").unwrap();
+    assert_eq!(d.sheds, n as u64);
+}
+
+#[test]
+fn infeasible_slo_is_a_typed_reject() {
+    let server = two_tier_server(40, 4);
+    let cascade = ladder(&server);
+    warm_dense(&cascade);
+    // Quality floor 0.9 leaves only dense eligible; dense predicts ≥ 40
+    // ms against a 5 ms deadline ⇒ typed reject carrying the prediction.
+    let slo = Slo::new(Duration::from_millis(5)).with_min_quality(0.9);
+    match cascade.submit(&row(0), &slo) {
+        Err(ServeError::SloInfeasible {
+            deadline,
+            best_predicted,
+        }) => {
+            assert_eq!(deadline, Duration::from_millis(5));
+            assert!(best_predicted >= Duration::from_millis(30), "{best_predicted:?}");
+        }
+        other => panic!("expected SloInfeasible, got {:?}", other.map(|r| r.tier)),
+    }
+    let dense = server.metrics().tier("dense").unwrap();
+    assert_eq!(dense.slo_rejects(), 1, "reject charged to the wanted tier");
+    assert_eq!(dense.sheds(), 0, "a reject is not a shed");
+    // A floor above the whole ladder can never route.
+    let slo = Slo::new(Duration::MAX).with_min_quality(2.0);
+    match cascade.submit(&row(1), &slo) {
+        Err(ServeError::SloInfeasible { best_predicted, .. }) => {
+            assert_eq!(best_predicted, Duration::MAX, "no eligible tier at all");
+        }
+        other => panic!("expected SloInfeasible, got {:?}", other.map(|r| r.tier)),
+    }
+    // Without the floor the same deadline is served (by sketched).
+    let relaxed = Slo::new(Duration::from_millis(5));
+    let got = cascade.infer(&row(2), &relaxed).unwrap();
+    assert_eq!(got, solo_forward(&affine_model(0, 0.5, -0.125), &row(2)));
+}
+
+#[test]
+fn speculative_replies_bitwise_match_their_tiers() {
+    let server = two_tier_server(5, 16);
+    let cascade = ladder(&server);
+    let dense_oracle = affine_model(5, 2.0, 0.25);
+    let sketched_oracle = affine_model(0, 0.5, -0.125);
+    for i in 0..4 {
+        let spec = cascade.speculate(&row(i)).unwrap();
+        assert_eq!(spec.fast_tier, "sketched");
+        assert_eq!(spec.verify_tier, "dense");
+        let (first, handle) = spec.first();
+        // Phase 1: the cheap tier's exact forward, immediately.
+        assert_eq!(first.unwrap(), solo_forward(&sketched_oracle, &row(i)));
+        assert_eq!(handle.tier(), "dense");
+        // Phase 2: the dense tier's exact forward, asynchronously.
+        match handle.upgraded() {
+            Upgrade::Upgraded(v) => assert_eq!(v, solo_forward(&dense_oracle, &row(i))),
+            Upgrade::Revoked(e) => panic!("unloaded dense tier must upgrade, got {e}"),
+        }
+    }
+    let dense = server.metrics().tier("dense").unwrap();
+    assert_eq!(dense.speculative(), 4);
+    assert_eq!(dense.upgrades(), 4);
+    assert_eq!(dense.revoked(), 0);
+}
+
+#[test]
+fn shutdown_drains_or_revokes_every_speculative_upgrade() {
+    // Dense: 10 ms service, queue of 2, one worker — some verify legs
+    // are admitted (and must be *answered* by the drain), the rest are
+    // revoked at speculation time. Either way the books balance.
+    let mut server = two_tier_server(10, 2);
+    let cascade = ladder(&server);
+    let dense_oracle = affine_model(10, 2.0, 0.25);
+    let n = 6;
+    let mut handles: Vec<(usize, UpgradeHandle)> = Vec::new();
+    for i in 0..n {
+        let spec = cascade.speculate(&row(i)).unwrap();
+        let (first, handle) = spec.first();
+        first.unwrap();
+        handles.push((i, handle));
+    }
+    let m = server.metrics();
+    let dense = m.tier("dense").unwrap();
+    assert_eq!(dense.speculative(), n as u64);
+    // Drain while upgrades are still queued: queued verify work must be
+    // answered, not dropped, and no worker may be left running.
+    server.shutdown();
+    assert_eq!(dense.queue_depth(), 0, "drain leaves nothing queued");
+    assert_eq!(m.tier("sketched").unwrap().queue_depth(), 0);
+    // One handle is abandoned unconsumed — that is an explicit
+    // revocation, recorded on drop.
+    let (_, abandoned) = handles.pop().unwrap();
+    drop(abandoned);
+    let mut upgraded = 0u64;
+    for (i, handle) in handles {
+        match handle.upgraded() {
+            // An admitted upgrade that survived the drain is the dense
+            // tier's exact forward.
+            Upgrade::Upgraded(v) => {
+                assert_eq!(v, solo_forward(&dense_oracle, &row(i)));
+                upgraded += 1;
+            }
+            // A revoked one carries a typed reason.
+            Upgrade::Revoked(e) => assert!(
+                matches!(
+                    e,
+                    ServeError::QueueFull | ServeError::ShuttingDown | ServeError::Disconnected
+                ),
+                "untyped revocation: {e}"
+            ),
+        }
+    }
+    // The accounting invariant: every speculative attempt is settled.
+    assert_eq!(
+        dense.speculative(),
+        dense.upgrades() + dense.revoked(),
+        "speculative work must never be orphaned"
+    );
+    assert_eq!(dense.upgrades(), upgraded);
+    assert!(
+        dense.revoked() >= 1,
+        "the abandoned handle must be recorded as revoked"
+    );
+    // After shutdown, new speculation fails fast with a typed error.
+    assert!(matches!(
+        cascade.speculate(&row(0)),
+        Err(ServeError::ShuttingDown)
+    ));
+}
+
+#[test]
+fn cascade_construction_is_validated() {
+    let server = two_tier_server(0, 4);
+    // Unknown tier: the error lists what is registered.
+    match Cascade::new(&server, &[("dense", 1.0), ("typo", 0.5)]) {
+        Err(ServeError::UnknownTier { name, registered }) => {
+            assert_eq!(name, "typo");
+            assert_eq!(registered, vec!["dense", "sketched"]);
+        }
+        _ => panic!("expected UnknownTier"),
+    }
+    // Duplicates, empty ladders, and non-finite qualities are rejected.
+    assert!(matches!(
+        Cascade::new(&server, &[("dense", 1.0), ("dense", 0.5)]),
+        Err(ServeError::BadInput(_))
+    ));
+    assert!(matches!(Cascade::new(&server, &[]), Err(ServeError::BadInput(_))));
+    assert!(matches!(
+        Cascade::new(&server, &[("dense", f32::NAN)]),
+        Err(ServeError::BadInput(_))
+    ));
+    // Speculation needs two rungs.
+    let single = Cascade::new(&server, &[("dense", 1.0)]).unwrap();
+    assert!(matches!(
+        single.speculate(&row(0)),
+        Err(ServeError::BadInput(_))
+    ));
+    // Ladder order is by quality, not declaration order; width checked.
+    let c = Cascade::new(&server, &[("sketched", 0.6), ("dense", 1.0)]).unwrap();
+    assert_eq!(
+        c.tiers(),
+        vec![("dense".to_string(), 1.0), ("sketched".to_string(), 0.6)]
+    );
+    assert!(matches!(
+        c.infer(&[0.0; D + 1], &Slo::new(Duration::MAX)),
+        Err(ServeError::BadInput(_))
+    ));
+}
