@@ -1,9 +1,11 @@
 //! Tiered serving walk-through: pretrain a small nonlinear MLP with a
 //! warmup+cosine LR schedule, checkpoint it, sketchify a copy, register
 //! **dense** and **sketched** quality tiers of the same service under one
-//! memory budget, hammer both from concurrent client threads, then route
-//! by SLO through a dense/sketched [`Cascade`] — deadline-aware admission
-//! with overload shedding and a speculative two-phase reply.
+//! memory budget, hammer both from concurrent client threads, route by
+//! SLO through a dense/sketched [`Cascade`] — deadline-aware admission
+//! with overload shedding and a speculative two-phase reply — then close
+//! the loop online: a [`RankAdapter`] measures the sketched tier's real
+//! quality on live rows and hot-swaps it up the rank ladder atomically.
 //!
 //! This is the paper's pitch end to end: the compressed model is a
 //! drop-in *tier* — same request shape, same serving contract (batched
@@ -191,7 +193,55 @@ fn main() -> panther::Result<()> {
         Upgrade::Revoked(e) => println!("speculative: upgrade revoked ({e})"),
     }
 
-    // --- 7. graceful drain ---------------------------------------------------
+    // --- 7. online rank adaptation: measure, decide, hot-swap ----------------
+    // The sketched tier's 0.6 ladder score was a guess. Attach a rank
+    // adapter: it replays real admitted rows through the serving model
+    // and the dense reference, publishes the *measured* quality (which
+    // the cascade's ladder ordering picks up), and — under a tight error
+    // target — walks the tier up the rank ladder via an atomic hot-swap
+    // that never drops or corrupts an in-flight request.
+    use panther::serve::{AdaptConfig, AdaptDecision, RankAdapter};
+    let mut acfg = AdaptConfig::new(LayerSelector::by_type("Linear"), &[4, 8, 16]);
+    acfg.initial_rank = 8; // what the "sketched" tier actually serves
+    acfg.sketch_seed = 3; // the plan seed it was sketched with
+    acfg.target_err = 1e-4; // demand near-dense fidelity: forces a recovery
+    let mut adapter = RankAdapter::new(&server, "sketched", model.clone_model(), acfg)?;
+    for i in 0..32 {
+        adapter.observe(&Mat::randn(1, D_IN, &mut Philox::seeded(600 + i)).into_vec())?;
+    }
+    let reading = adapter.measure()?.expect("shadow rows present");
+    println!(
+        "\nmeasured quality of the serving rank-8 sketch: {:.4} (mean rel err {:.4})",
+        reading.quality, reading.mean_err
+    );
+    // The cascade now ranks rungs by *measured* quality, not the labels.
+    for (tier, q) in cascade.qualities() {
+        println!("  ladder: {tier:<9} effective quality {q:.4}");
+    }
+    match adapter.step(&server)? {
+        AdaptDecision::Swapped {
+            from_rank,
+            to_rank,
+            version,
+            candidate_err,
+            ..
+        } => println!(
+            "adapt: rank {from_rank} -> {to_rank} (version {version}, \
+             shadow err {candidate_err:.2e}) — applied as an atomic hot-swap"
+        ),
+        AdaptDecision::Hold { reason, .. } => println!("adapt: held ({reason:?})"),
+    }
+    // Rank 0 is the dense reference itself: after the recovery swap the
+    // "sketched" tier answers bit-identically to the dense tier.
+    let via_sketched = server.handle().infer("sketched", &row)?;
+    let via_dense = server.handle().infer("dense", &row)?;
+    println!(
+        "post-swap reply identical to dense tier: {} ({} swap(s) recorded)",
+        via_sketched == via_dense,
+        server.metrics().tier("sketched").unwrap().swaps()
+    );
+
+    // --- 8. graceful drain ---------------------------------------------------
     server.shutdown();
     std::fs::remove_file(&ckpt).ok();
     println!("drained and shut down cleanly");

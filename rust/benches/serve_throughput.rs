@@ -33,6 +33,11 @@
 //!   speculative two-phase path's upgrade/revoke split. All three land
 //!   in `BENCH_serve.json` (`op = "overload"`) plus one `tier_snapshot`
 //!   entry per tier — the machine-diffable overload record.
+//! - **adaptation**: one tier walks a rank ladder via atomic hot-swaps
+//!   under continuous client traffic. Per rung: the [`RankAdapter`]'s
+//!   shadow-measured quality against the dense reference and the publish
+//!   latency; plus one in-flight record proving zero errors across every
+//!   swap (`op = "adaptation"`).
 //!
 //! `--quick` shrinks request counts for the CI smoke lane;
 //! `PANTHER_BENCH_DIR` redirects the JSON output.
@@ -544,6 +549,140 @@ fn main() {
 
     // The frozen per-tier counters (sheds, speculative, upgrades,
     // revoked, windowed tails) ride along as machine-diffable entries.
+    server.metrics_snapshot().report_into(&mut report);
+    server.shutdown();
+
+    // --- online rank adaptation: quality vs. rank, swap latency -------------
+    // One tier walks the rank ladder under continuous client traffic:
+    // each rung is hot-swapped in, its *measured* quality (shadow-replay
+    // error vs. the dense reference) and the publish latency are
+    // recorded, and the background clients assert in flight that no
+    // request is ever dropped or corrupted across a swap.
+    use panther::serve::{AdaptConfig, RankAdapter};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let mut server = ModelServer::new();
+    server
+        .register_tier(
+            "adapt",
+            dense_model(1),
+            D_IN,
+            TierConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(200),
+                queue_cap: 1024,
+                workers: 2,
+                ..TierConfig::default()
+            },
+        )
+        .expect("register adapt");
+    let ranks = [8usize, 16, 32];
+    let mut acfg = AdaptConfig::new(
+        LayerSelector::by_type("Linear"),
+        &ranks,
+    );
+    acfg.sensor_epochs = 1; // one measurement round per rung: exact reads
+    let mut adapter =
+        RankAdapter::new(&server, "adapt", dense_model(1), acfg).expect("adapter");
+    let shadow_rows = if quick { 32 } else { 64 };
+    for i in 0..shadow_rows {
+        let row = Mat::randn(1, D_IN, &mut Philox::seeded(8600 + i as u64)).into_vec();
+        adapter.observe(&row).expect("observe");
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let traffic: Vec<_> = (0..4)
+        .map(|c| {
+            let h = server.handle();
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let row = Mat::randn(1, D_IN, &mut Philox::seeded(8800 + c as u64)).into_vec();
+                let mut n = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    h.infer("adapt", &row).expect("request across a swap");
+                    n += 1;
+                }
+                n
+            })
+        })
+        .collect();
+    let mut table = Table::new(&["rank", "measured quality", "swap latency", "weights"]);
+    let t_all = Instant::now();
+    for &rank in &ranks {
+        let mut m = dense_model(1);
+        SketchPlan::new()
+            .select(LayerSelector::by_type("Linear"))
+            .with(1, rank)
+            .seed(7)
+            .apply(&mut m)
+            .expect("sketch rung");
+        let weight_bytes = (m.total_params() * 4) as u64;
+        let t0 = Instant::now();
+        server.swap_tier_model("adapt", m).expect("hot swap");
+        let swap = t0.elapsed();
+        let r = adapter.measure().expect("measure").expect("shadow rows present");
+        table.row(&[
+            rank.to_string(),
+            format!("{:.4}", r.quality),
+            panther::util::human_duration(swap),
+            panther::util::human_bytes(weight_bytes),
+        ]);
+        report.entry_with(
+            "adaptation",
+            &format!("rank={rank}"),
+            swap.as_secs_f64() * 1e3,
+            &[
+                ("measured_quality", r.quality),
+                ("mean_err", r.mean_err),
+                ("swap_us", swap.as_secs_f64() * 1e6),
+                ("weight_bytes", weight_bytes as f64),
+            ],
+        );
+    }
+    // Back to dense: the recovery swap must read as (exactly) perfect.
+    let t0 = Instant::now();
+    server
+        .swap_tier_model("adapt", dense_model(1))
+        .expect("recovery swap");
+    let swap = t0.elapsed();
+    let r = adapter.measure().expect("measure").expect("shadow rows present");
+    table.row(&[
+        "dense".into(),
+        format!("{:.4}", r.quality),
+        panther::util::human_duration(swap),
+        panther::util::human_bytes(dense_free.weight_bytes),
+    ]);
+    report.entry_with(
+        "adaptation",
+        "rank=dense",
+        swap.as_secs_f64() * 1e3,
+        &[
+            ("measured_quality", r.quality),
+            ("mean_err", r.mean_err),
+            ("swap_us", swap.as_secs_f64() * 1e6),
+            ("weight_bytes", dense_free.weight_bytes as f64),
+        ],
+    );
+    stop.store(true, Ordering::Relaxed);
+    let in_flight: u64 = traffic.into_iter().map(|t| t.join().unwrap()).sum();
+    let adapt_wall = t_all.elapsed();
+    let tm = server.metrics().tier("adapt").unwrap();
+    assert_eq!(tm.errors(), 0, "no request may error across a hot swap");
+    report.entry_with(
+        "adaptation",
+        "hot_swap_under_traffic",
+        adapt_wall.as_secs_f64() * 1e3,
+        &[
+            ("requests", in_flight as f64),
+            ("swaps", tm.swaps() as f64),
+            ("errors", tm.errors() as f64),
+            ("rps", in_flight as f64 / adapt_wall.as_secs_f64()),
+        ],
+    );
+    println!(
+        "(adaptation: {} swaps under {} in-flight requests, 0 errors)",
+        tm.swaps(),
+        in_flight
+    );
+    println!("{}", table.render());
     server.metrics_snapshot().report_into(&mut report);
     server.shutdown();
 

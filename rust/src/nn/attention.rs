@@ -422,6 +422,10 @@ impl Module for MultiHeadAttention {
         "MultiheadAttention"
     }
 
+    fn io_dims(&self) -> Option<(usize, usize)> {
+        Some((self.weights.embed_dim, self.weights.embed_dim))
+    }
+
     fn forward(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<Mat> {
         Ok(self.forward_with(x, ctx, false)?.0)
     }
@@ -1091,6 +1095,10 @@ impl RandMultiHeadAttention {
 impl Module for RandMultiHeadAttention {
     fn type_name(&self) -> &'static str {
         "RandMultiheadAttention"
+    }
+
+    fn io_dims(&self) -> Option<(usize, usize)> {
+        Some((self.weights.embed_dim, self.weights.embed_dim))
     }
 
     fn forward(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<Mat> {

@@ -177,6 +177,11 @@ impl Module for Conv2d {
         "Conv2d"
     }
 
+    fn io_dims(&self) -> Option<(usize, usize)> {
+        let s = &self.shape;
+        Some((s.c_in * s.image * s.image, s.c_out))
+    }
+
     fn forward(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<Mat> {
         let ho = self.shape.out_size();
         let rows = x.rows() * ho * ho;
@@ -367,6 +372,11 @@ impl SKConv2d {
 impl Module for SKConv2d {
     fn type_name(&self) -> &'static str {
         "SKConv2d"
+    }
+
+    fn io_dims(&self) -> Option<(usize, usize)> {
+        let s = &self.shape;
+        Some((s.c_in * s.image * s.image, s.c_out))
     }
 
     fn forward(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<Mat> {

@@ -91,6 +91,10 @@ impl Module for Linear {
         "Linear"
     }
 
+    fn io_dims(&self) -> Option<(usize, usize)> {
+        Some((self.d_in(), self.d_out()))
+    }
+
     fn forward(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<Mat> {
         // One transient activation: the B×d_out output.
         let _act = ctx.mem().alloc((x.rows() * self.d_out() * 4) as u64)?;
@@ -305,6 +309,10 @@ impl SKLinear {
 impl Module for SKLinear {
     fn type_name(&self) -> &'static str {
         "SKLinear"
+    }
+
+    fn io_dims(&self) -> Option<(usize, usize)> {
+        Some((self.d_in, self.d_out))
     }
 
     fn forward(&self, x: &Mat, ctx: &ForwardCtx) -> crate::Result<Mat> {

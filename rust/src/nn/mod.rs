@@ -50,7 +50,7 @@ pub use attention::{
 pub use conv::{Conv2d, ConvShape, SKConv2d};
 pub use cost::{conv_cost, linear_cost, sketch_beats_dense, LayerCost};
 pub use linear::{Linear, SKLinear};
-pub use model::{LayerSelector, Model, NamedModule};
+pub use model::{LayerSelector, Model, NamedModule, ReplaceShapeMismatch};
 pub use module::{
     Cache, ForwardCtx, GradStore, Module, ParamMut, ParamRef, SeqBatch, StateDict, Workspace,
     WsMat,

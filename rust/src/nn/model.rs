@@ -22,6 +22,42 @@ pub struct NamedModule {
     pub module: Box<dyn Module>,
 }
 
+/// Typed rejection from [`Model::replace`]: the replacement module's
+/// per-row interface ([`Module::io_dims`]) does not match the outgoing
+/// layer's. Returned behind `anyhow::Error` — callers that need the
+/// shapes (the serve hot-swap path) downcast to this.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplaceShapeMismatch {
+    /// The registry name of the layer the swap targeted.
+    pub layer: String,
+    /// Outgoing module's type name.
+    pub old_type: &'static str,
+    /// Rejected replacement's type name.
+    pub new_type: &'static str,
+    /// Outgoing `(input width, output width)`.
+    pub old_dims: (usize, usize),
+    /// Replacement's `(input width, output width)`.
+    pub new_dims: (usize, usize),
+}
+
+impl std::fmt::Display for ReplaceShapeMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "replace {}: {} maps {}->{} but replacement {} maps {}->{}",
+            self.layer,
+            self.old_type,
+            self.old_dims.0,
+            self.old_dims.1,
+            self.new_type,
+            self.new_dims.0,
+            self.new_dims.1,
+        )
+    }
+}
+
+impl std::error::Error for ReplaceShapeMismatch {}
+
 /// The model: ordered named layers (a flattened module tree) with an index
 /// for O(1) name lookups.
 #[derive(Default)]
@@ -73,11 +109,32 @@ impl Model {
     /// Swap the module stored under `name`, returning the old one. The
     /// layer keeps its position and name — this is how
     /// [`super::plan::SketchPlan`] installs sketched replacements.
+    ///
+    /// The replacement's per-row interface is validated against the
+    /// outgoing layer: when both sides report [`Module::io_dims`] and
+    /// they differ, the swap is rejected with a typed
+    /// [`ReplaceShapeMismatch`] (downcastable from the returned error)
+    /// instead of deferring to an opaque GEMM dimension panic at the
+    /// next forward. Layers that report `None` (activations, third-party
+    /// modules) opt out of the check. The serve-layer hot-swap path
+    /// depends on this being safe.
     pub fn replace(&mut self, name: &str, module: Box<dyn Module>) -> Result<Box<dyn Module>> {
         let i = *self
             .index
             .get(name)
             .ok_or_else(|| anyhow!("no layer named {name}"))?;
+        let old = &self.layers[i].module;
+        if let (Some(old_dims), Some(new_dims)) = (old.io_dims(), module.io_dims()) {
+            if old_dims != new_dims {
+                return Err(anyhow::Error::new(ReplaceShapeMismatch {
+                    layer: name.to_string(),
+                    old_type: old.type_name(),
+                    new_type: module.type_name(),
+                    old_dims,
+                    new_dims,
+                }));
+            }
+        }
         Ok(std::mem::replace(&mut self.layers[i].module, module))
     }
 
@@ -388,6 +445,7 @@ impl Model {
 }
 
 /// Layer selection — the three modes of the paper's `LayerConfig`.
+#[derive(Clone)]
 pub enum LayerSelector {
     /// All layers of a given type: `{"type": "Linear"}`.
     ByType(String),
@@ -531,16 +589,40 @@ mod tests {
     fn get_is_index_backed_and_replace_preserves_order() {
         let mut m = toy_model();
         assert!(m.get("nope").is_none());
-        let copy = m.get("encoder.fc1").unwrap().boxed_clone();
+        // A shape-compatible swap (fc2 for a clone of itself) succeeds
+        // and keeps registration order.
+        let copy = m.get("encoder.fc2").unwrap().boxed_clone();
         let old = m.replace("encoder.fc2", copy).unwrap();
         assert_eq!(old.type_name(), "Linear");
-        // Order of names is unchanged after replace.
         let names: Vec<&str> = m.iter().map(|l| l.name.as_str()).collect();
         assert_eq!(
             names,
             vec!["encoder.fc1", "encoder.fc2", "encoder.conv", "encoder.attn"]
         );
         assert!(m.replace("nope", old).is_err());
+    }
+
+    #[test]
+    fn replace_rejects_shape_incompatible_modules_with_typed_error() {
+        let mut m = toy_model();
+        // fc1 maps 32->64, fc2 maps 64->32: installing a clone of fc1
+        // under fc2's name would panic deep inside the next forward's
+        // GEMM — replace now rejects it up front with a typed error.
+        let wrong = m.get("encoder.fc1").unwrap().boxed_clone();
+        let err = m.replace("encoder.fc2", wrong).unwrap_err();
+        let mismatch = err
+            .downcast_ref::<ReplaceShapeMismatch>()
+            .expect("error downcasts to ReplaceShapeMismatch");
+        assert_eq!(mismatch.layer, "encoder.fc2");
+        assert_eq!(mismatch.old_dims, (64, 32));
+        assert_eq!(mismatch.new_dims, (32, 64));
+        // The registry is untouched: fc2 still maps 64->32.
+        assert_eq!(m.get("encoder.fc2").unwrap().io_dims(), Some((64, 32)));
+        // Width-agnostic layers (activations) opt out of the check, so
+        // swapping one in over a Linear is allowed — the caller asked
+        // for a module that cannot state its interface.
+        let act = crate::nn::Activation::relu();
+        assert!(m.replace("encoder.fc2", Box::new(act)).is_ok());
     }
 
     #[test]

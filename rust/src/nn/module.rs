@@ -805,6 +805,18 @@ pub trait Module: Send + Sync {
     /// fits the tier's memory budget.
     fn set_head_group(&mut self, _heads: usize) {}
 
+    /// Fixed per-row interface widths as `(input width, output width)`,
+    /// when the layer has them — `Linear`/`SKLinear` report
+    /// `(d_in, d_out)`, the attention variants `(embed_dim, embed_dim)`,
+    /// conv layers `(c_in·image², c_out)` (per *output* row; conv expands
+    /// row counts, not widths). Shape-agnostic layers (activations) and
+    /// third-party modules default to `None`, which opts them out of the
+    /// [`super::Model::replace`] shape check — a swap is only rejected
+    /// when **both** sides report widths and they differ.
+    fn io_dims(&self) -> Option<(usize, usize)> {
+        None
+    }
+
     /// True for layers whose math couples rows within a sequence and which
     /// therefore consult [`ForwardCtx::seq_batch`] (the attention
     /// variants). The default — `false` — is the row-wise adapter: a layer

@@ -1,0 +1,827 @@
+//! Online rank adaptation: measure each sketched tier's *actual* quality
+//! against its dense sibling on live traffic, and move the tier up or
+//! down the rank ladder through atomic hot-swaps — without dropping or
+//! corrupting a single in-flight request.
+//!
+//! The serving stack registers a sketched tier with a *static* quality
+//! label chosen offline. Real traffic drifts: the rank that was accurate
+//! enough on the tuning set may not be on today's inputs, and a rank
+//! that is more accurate than needed wastes memory and time. The
+//! [`RankAdapter`] closes that loop with three pieces:
+//!
+//! 1. **Shadow stream** — [`RankAdapter::observe`] retains a bounded
+//!    ring of real admitted rows. [`RankAdapter::measure`] replays them
+//!    through the tier's *current* model and through the dense reference
+//!    (both via [`Model::forward_rows`] padded to the tier's batch cap —
+//!    the exact serving forward), records each row's relative L2 error
+//!    into a [`WindowedHist`] sensor, and publishes `1 − mean error` as
+//!    the tier's measured quality ([`super::TierMetrics`] gauge). The
+//!    window spans the last [`AdaptConfig::sensor_epochs`] measurement
+//!    rounds, so stale history ages out by construction.
+//! 2. **Controller** — [`RankAdapter::step`] compares the windowed mean
+//!    error against [`AdaptConfig::target_err`]: too much error proposes
+//!    richer ranks (up to and including the dense reference itself),
+//!    comfortably below `target − hysteresis` proposes the next cheaper
+//!    rank. Candidates are evaluated on the same shadow ring through a
+//!    [`crate::tuner`] [`Study`] (grid-sampled, median-pruned on
+//!    per-chunk interim error), constrained by the tier's memory
+//!    headroom ([`AdaptConfig::mem_budget`]); the cheapest candidate
+//!    meeting the error ceiling wins. The decision rule is deterministic
+//!    — same shadow rows, same verdict.
+//! 3. **Atomic apply** — the winning candidate is rebuilt from the dense
+//!    reference through [`SketchPlan`] (per-layer seeds derived from
+//!    [`AdaptConfig::sketch_seed`] and the layer name, so an identical
+//!    standalone build is *bitwise* identical) and published through
+//!    [`super::ModelServer::swap_tier_model`]: requests admitted before
+//!    the swap reply from the old version bit-for-bit, batches never mix
+//!    versions, and workers are untouched.
+//!
+//! The cascade ([`super::Cascade`]) reads the measured-quality gauge on
+//! every submit, so a swap (or a drift) re-orders SLO routing as soon as
+//! the adapter re-measures — no rebuild, no restart.
+
+use super::batcher::ModelSlot;
+use super::metrics::TierMetrics;
+use super::router::{probe_model, Tier};
+use super::{ModelServer, ServeError};
+use crate::nn::{ForwardCtx, LayerSelector, Model, SketchPlan};
+use crate::tuner::{Direction, GridSampler, MedianPruner, ParamValue, SearchSpace, Study, Trial};
+use crate::util::stats::WindowedHist;
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Policy knobs for one tier's rank adapter. Fields are public — set
+/// what the defaults from [`AdaptConfig::new`] don't cover.
+pub struct AdaptConfig {
+    /// Candidate sketch ranks, strictly ascending (higher rank = closer
+    /// to dense = better quality). The dense reference itself is always
+    /// the implicit top rung, reported as rank `0`.
+    pub ladder: Vec<usize>,
+    /// Sketch terms per converted layer (the `l` of the paper's
+    /// `(l, k)`).
+    pub num_terms: usize,
+    /// Base seed of every candidate's [`SketchPlan`]. Per-layer seeds
+    /// derive from this and the layer *name*, so a standalone model
+    /// sketched with the same seed/rank is bitwise identical to what
+    /// the adapter publishes — the hot-swap stress tests rely on it.
+    pub sketch_seed: u64,
+    /// Which layers each candidate plan converts.
+    pub selector: LayerSelector,
+    /// Relative-error ceiling the controller keeps the tier under: mean
+    /// windowed error above this proposes a richer rank.
+    pub target_err: f64,
+    /// Down-move margin: a cheaper rank is adopted only while error
+    /// stays under `target_err − hysteresis`, which keeps the
+    /// controller from oscillating at the boundary. `0.0` (the
+    /// constructor default) means `target_err / 4`.
+    pub hysteresis: f64,
+    /// Optional memory ceiling for *up*-moves: a candidate is rejected
+    /// unless its weights plus every worker's probe-measured batch
+    /// footprint fit. `None` = unconstrained.
+    pub mem_budget: Option<u64>,
+    /// Rows retained in the shadow ring (FIFO beyond this).
+    pub shadow_capacity: usize,
+    /// Sketch rank of the model the tier is *currently* serving (`0` if
+    /// it serves the dense reference). Must be `0` or a ladder entry.
+    pub initial_rank: usize,
+    /// Measurement rounds the quality sensor's sliding window spans.
+    pub sensor_epochs: usize,
+}
+
+impl AdaptConfig {
+    /// Config with conventional defaults: 1 sketch term, seed 7, 5%
+    /// error target, `target/4` hysteresis, 256 shadow rows, dense
+    /// start, 8-round sensor window, no memory ceiling.
+    pub fn new(selector: LayerSelector, ladder: &[usize]) -> Self {
+        AdaptConfig {
+            ladder: ladder.to_vec(),
+            num_terms: 1,
+            sketch_seed: 7,
+            selector,
+            target_err: 0.05,
+            hysteresis: 0.0,
+            mem_budget: None,
+            shadow_capacity: 256,
+            initial_rank: 0,
+            sensor_epochs: 8,
+        }
+    }
+}
+
+/// One [`RankAdapter::measure`] round's result.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QualityReading {
+    /// Windowed mean relative L2 error vs. the dense reference.
+    pub mean_err: f64,
+    /// `1 − mean_err` clamped to `[0, 1]` — what the metrics gauge and
+    /// the cascade see.
+    pub quality: f64,
+    /// Shadow rows replayed this round.
+    pub rows: usize,
+    /// Total samples in the sensor window backing `mean_err`.
+    pub window_rows: u64,
+}
+
+/// Why [`RankAdapter::step`] held instead of swapping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HoldReason {
+    /// No shadow rows observed yet — nothing to measure against.
+    NoShadowTraffic,
+    /// Error is inside the `[target − hysteresis, target]` band.
+    WithinBand,
+    /// Error exceeds the target but the tier already serves the dense
+    /// reference — there is no richer rung.
+    AtBestRung,
+    /// Error clears the down-move margin but the tier already serves
+    /// the cheapest ladder rank.
+    AtCheapestRung,
+    /// Every proposed candidate failed shadow evaluation (error above
+    /// the ceiling, pruned, or over the memory budget).
+    CandidateRejected,
+}
+
+/// What one [`RankAdapter::step`] decided.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AdaptDecision {
+    /// No swap; `live_err` is this round's windowed mean error when one
+    /// was measurable.
+    Hold {
+        reason: HoldReason,
+        live_err: Option<f64>,
+    },
+    /// A new model version was published.
+    Swapped {
+        /// Rank served before the swap (`0` = dense).
+        from_rank: usize,
+        /// Rank serving now (`0` = dense).
+        to_rank: usize,
+        /// Version number [`super::ModelServer::swap_tier_model`]
+        /// returned.
+        version: u64,
+        /// The live windowed error that triggered the move.
+        live_err: f64,
+        /// The winning candidate's shadow-replay error.
+        candidate_err: f64,
+    },
+}
+
+/// Guard against NaN/Inf from degenerate outputs: a non-finite error
+/// reads as total disagreement.
+fn sane(err: f64) -> f64 {
+    if err.is_finite() {
+        err.clamp(0.0, 1.0)
+    } else {
+        1.0
+    }
+}
+
+/// Errors ride through the [`WindowedHist`] as durations: `err` seconds
+/// keeps nanosecond (1e-9) resolution over the whole `[0, 1]` range.
+fn err_to_dur(err: f64) -> Duration {
+    Duration::from_secs_f64(sane(err))
+}
+
+/// Online rank controller for one row tier (see module docs). One
+/// adapter per tier; drive it from a single control thread —
+/// measurement and stepping take `&mut self` by design.
+pub struct RankAdapter {
+    tier: String,
+    reference: Model,
+    cfg: AdaptConfig,
+    slot: Arc<ModelSlot>,
+    metrics: Arc<TierMetrics>,
+    in_dim: usize,
+    max_batch: usize,
+    workers: usize,
+    peak_batch_bytes: u64,
+    shadow: VecDeque<Vec<f32>>,
+    sensor: WindowedHist,
+    rank: usize,
+    rounds: usize,
+}
+
+impl RankAdapter {
+    /// Attach an adapter to row tier `tier` of `server`. `reference` is
+    /// the dense model every candidate is rebuilt (and every quality
+    /// measurement is judged) against — pass a clone of the weights the
+    /// tier was sketched from. Validates the config, probes the
+    /// reference against the tier's interface, and pre-builds the
+    /// cheapest candidate so a selector that matches nothing fails here
+    /// rather than mid-adaptation.
+    pub fn new(
+        server: &ModelServer,
+        tier: &str,
+        reference: Model,
+        cfg: AdaptConfig,
+    ) -> Result<RankAdapter, ServeError> {
+        let bad = |m: String| Err(ServeError::BadInput(m));
+        if cfg.ladder.is_empty() {
+            return bad("adapt ladder must name at least one sketch rank".into());
+        }
+        if cfg.ladder.windows(2).any(|w| w[0] >= w[1]) || cfg.ladder[0] == 0 {
+            return bad(format!(
+                "adapt ladder {:?} must be strictly ascending positive ranks",
+                cfg.ladder
+            ));
+        }
+        if cfg.num_terms == 0 || cfg.shadow_capacity == 0 || cfg.sensor_epochs == 0 {
+            return bad("num_terms, shadow_capacity and sensor_epochs must be positive".into());
+        }
+        if !(cfg.target_err.is_finite() && cfg.target_err > 0.0) {
+            return bad(format!("target_err {} must be finite and positive", cfg.target_err));
+        }
+        if !(cfg.hysteresis.is_finite() && (0.0..cfg.target_err).contains(&cfg.hysteresis)) {
+            return bad(format!(
+                "hysteresis {} must be finite, non-negative and below target_err {}",
+                cfg.hysteresis, cfg.target_err
+            ));
+        }
+        if cfg.initial_rank != 0 && !cfg.ladder.contains(&cfg.initial_rank) {
+            return bad(format!(
+                "initial_rank {} is neither 0 (dense) nor a ladder entry of {:?}",
+                cfg.initial_rank, cfg.ladder
+            ));
+        }
+        let t = server.router.get(tier)?;
+        let (info, slot) = match &*t {
+            Tier::Row { info, slot, .. } => (info.clone(), Arc::clone(slot)),
+            Tier::Seq { .. } => {
+                return bad(format!(
+                    "tier {tier} is a sequence tier — rank adaptation serves row tiers only"
+                ))
+            }
+        };
+        // The reference must present the tier's exact raw interface:
+        // candidates built from it inherit the widths the swap probe
+        // enforces, and quality deltas are only meaningful against a
+        // reference answering the same question.
+        let raw_out = t.raw_out_dim().expect("row tier has a raw width");
+        let probe = probe_model(&reference, info.in_dim, info.max_batch)?;
+        if probe.out_dim != raw_out {
+            return bad(format!(
+                "dense reference maps {} -> {}, tier {tier} serves {} -> {raw_out}",
+                info.in_dim, probe.out_dim, info.in_dim,
+            ));
+        }
+        let metrics = server.metrics.tier_entry(tier);
+        metrics.set_rank(cfg.initial_rank);
+        let adapter = RankAdapter {
+            tier: tier.to_string(),
+            reference,
+            sensor: WindowedHist::new(cfg.sensor_epochs),
+            rank: cfg.initial_rank,
+            slot,
+            metrics,
+            in_dim: info.in_dim,
+            max_batch: info.max_batch,
+            workers: info.workers,
+            peak_batch_bytes: info.peak_batch_bytes,
+            shadow: VecDeque::with_capacity(cfg.shadow_capacity.min(4096)),
+            rounds: 0,
+            cfg,
+        };
+        // Fail a selector typo at attach time, not on the first move.
+        adapter.build(adapter.cfg.ladder[0])?;
+        Ok(adapter)
+    }
+
+    /// Feed one admitted request row into the shadow ring (FIFO-bounded
+    /// at [`AdaptConfig::shadow_capacity`]). Call it from the admission
+    /// path on a *sample* of traffic — the ring is the ground truth
+    /// every quality measurement and candidate evaluation replays.
+    pub fn observe(&mut self, row: &[f32]) -> Result<(), ServeError> {
+        if row.len() != self.in_dim {
+            return Err(ServeError::BadInput(format!(
+                "tier {:?} rows are width {}, got {}",
+                self.tier,
+                self.in_dim,
+                row.len()
+            )));
+        }
+        if self.shadow.len() == self.cfg.shadow_capacity {
+            self.shadow.pop_front();
+        }
+        self.shadow.push_back(row.to_vec());
+        Ok(())
+    }
+
+    /// The tier this adapter controls.
+    pub fn tier(&self) -> &str {
+        &self.tier
+    }
+
+    /// Sketch rank currently served (`0` = dense).
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Rows currently in the shadow ring.
+    pub fn shadow_len(&self) -> usize {
+        self.shadow.len()
+    }
+
+    /// Down-move margin in effect (explicit, or the `target/4` default).
+    fn margin(&self) -> f64 {
+        if self.cfg.hysteresis > 0.0 {
+            self.cfg.hysteresis
+        } else {
+            self.cfg.target_err / 4.0
+        }
+    }
+
+    /// The full quality ladder, ascending: configured sketch ranks then
+    /// the dense reference (rank 0) as the top rung.
+    fn positions(&self) -> Vec<usize> {
+        let mut p = self.cfg.ladder.clone();
+        p.push(0);
+        p
+    }
+
+    /// Rebuild the candidate at `rank` from the dense reference —
+    /// `rank == 0` is the reference itself, otherwise a [`SketchPlan`]
+    /// at `(num_terms, rank)` under the configured seed. Deterministic:
+    /// the same call always produces bitwise-identical weights.
+    fn build(&self, rank: usize) -> Result<Model, ServeError> {
+        let mut m = self.reference.clone_model();
+        if rank > 0 {
+            SketchPlan::new()
+                .select(self.cfg.selector.clone())
+                .with(self.cfg.num_terms, rank)
+                .seed(self.cfg.sketch_seed)
+                .apply(&mut m)
+                .map_err(|e| ServeError::BadInput(format!("candidate at rank {rank}: {e:#}")))?;
+        }
+        Ok(m)
+    }
+
+    /// Whether `candidate` fits the configured memory ceiling alongside
+    /// the tier's worker pool. The per-worker batch footprint is the
+    /// registration probe's measurement — activations scale with batch
+    /// shape, not weights, so it stays representative across ranks.
+    fn mem_ok(&self, candidate: &Model) -> bool {
+        match self.cfg.mem_budget {
+            None => true,
+            Some(budget) => {
+                let weights = (candidate.total_params() * 4) as u64;
+                weights.saturating_add(self.workers as u64 * self.peak_batch_bytes) <= budget
+            }
+        }
+    }
+
+    /// Per-row relative L2 errors of `model` vs. the dense reference
+    /// over `chunk`, replayed exactly like the serving path (padded
+    /// row-stack at the tier's batch cap).
+    fn chunk_errors(&self, model: &Model, chunk: &[&[f32]]) -> Result<Vec<f64>, ServeError> {
+        let exec = |e: anyhow::Error| ServeError::Exec(format!("shadow replay: {e:#}"));
+        let ctx = ForwardCtx::new().batch_hint(self.max_batch);
+        let got = model.forward_rows(chunk, self.max_batch, &ctx).map_err(exec)?;
+        let want = self
+            .reference
+            .forward_rows(chunk, self.max_batch, &ctx)
+            .map_err(exec)?;
+        Ok(got
+            .iter()
+            .zip(&want)
+            .map(|(g, w)| {
+                let mut diff = 0.0f64;
+                let mut norm = 0.0f64;
+                for (a, b) in g.iter().zip(w) {
+                    diff += (*a as f64 - *b as f64).powi(2);
+                    norm += (*b as f64).powi(2);
+                }
+                sane(diff.sqrt() / (norm.sqrt() + 1e-12))
+            })
+            .collect())
+    }
+
+    /// Replay the whole shadow ring through the tier's **currently
+    /// served** model version, fold this round's per-row errors into the
+    /// sliding sensor window, and publish the windowed quality to the
+    /// tier's metrics (where the cascade reads it). Returns `None` with
+    /// an empty ring.
+    pub fn measure(&mut self) -> Result<Option<QualityReading>, ServeError> {
+        if self.shadow.is_empty() {
+            return Ok(None);
+        }
+        let live = self.slot.current();
+        let rows: Vec<&[f32]> = self.shadow.iter().map(|r| r.as_slice()).collect();
+        self.sensor.rotate();
+        let mut measured = 0usize;
+        for chunk in rows.chunks(self.max_batch) {
+            for e in self.chunk_errors(&live.model, chunk)? {
+                self.sensor.record(err_to_dur(e));
+                measured += 1;
+            }
+        }
+        let snap = self.sensor.snapshot();
+        let mean_err = snap.mean().as_secs_f64();
+        let quality = 1.0 - mean_err.min(1.0);
+        self.metrics.set_measured_quality(quality);
+        Ok(Some(QualityReading {
+            mean_err,
+            quality,
+            rows: measured,
+            window_rows: snap.count(),
+        }))
+    }
+
+    /// Shadow-evaluate one candidate under the study's pruner: per-chunk
+    /// running mean error is reported as the trial's interim objective,
+    /// and a hopeless candidate stops early (`None`).
+    fn candidate_error(
+        &self,
+        model: &Model,
+        study: &mut Study,
+        trial: &mut Trial,
+    ) -> Result<Option<f64>, ServeError> {
+        let rows: Vec<&[f32]> = self.shadow.iter().map(|r| r.as_slice()).collect();
+        let mut sum = 0.0f64;
+        let mut n = 0usize;
+        for (ci, chunk) in rows.chunks(self.max_batch).enumerate() {
+            for e in self.chunk_errors(model, chunk)? {
+                sum += e;
+                n += 1;
+            }
+            if study.should_prune(trial, ci, sum / n as f64) {
+                return Ok(None);
+            }
+        }
+        Ok(Some(sum / n as f64))
+    }
+
+    /// Propose `candidates` (ascending quality = cheapest first) through
+    /// a tuner study, adopt the first one whose shadow error clears
+    /// `ceiling` and whose weights fit the memory budget, and publish it
+    /// atomically. Candidate order is the decision rule: the cheapest
+    /// rank that is good enough wins.
+    fn try_swap(
+        &mut self,
+        server: &ModelServer,
+        candidates: &[usize],
+        ceiling: f64,
+        live_err: f64,
+    ) -> Result<AdaptDecision, ServeError> {
+        let ranks: Vec<i64> = candidates.iter().map(|&r| r as i64).collect();
+        let space = SearchSpace::new().int_choices("rank", &ranks);
+        let mut study = Study::new(
+            &format!("adapt-{}-{}", self.tier, self.rounds),
+            Direction::Minimize,
+            space,
+            Box::new(GridSampler::new(self.cfg.sketch_seed)),
+            Box::new(MedianPruner {
+                n_startup_trials: 1,
+                n_warmup_steps: 1,
+            }),
+        );
+        for _ in 0..candidates.len() {
+            let mut trial = study.ask();
+            let rank = trial
+                .params
+                .get("rank")
+                .and_then(ParamValue::as_usize)
+                .expect("rank dimension is a usize grid");
+            let candidate = self.build(rank)?;
+            if !self.mem_ok(&candidate) {
+                study.tell(&mut trial, f64::INFINITY, false);
+                continue;
+            }
+            let Some(err) = self.candidate_error(&candidate, &mut study, &mut trial)? else {
+                continue; // pruned — already recorded by should_prune
+            };
+            let feasible = err <= ceiling;
+            study.tell(&mut trial, err, feasible);
+            if feasible {
+                let version = server.swap_tier_model(&self.tier, candidate)?;
+                let from_rank = self.rank;
+                self.rank = rank;
+                self.metrics.set_rank(rank);
+                // The sensor described the outgoing version: restart it
+                // and seed the gauge with the winner's shadow reading so
+                // routing never consults stale evidence.
+                self.sensor = WindowedHist::new(self.cfg.sensor_epochs);
+                self.metrics.set_measured_quality(1.0 - err.min(1.0));
+                return Ok(AdaptDecision::Swapped {
+                    from_rank,
+                    to_rank: rank,
+                    version,
+                    live_err,
+                    candidate_err: err,
+                });
+            }
+        }
+        Ok(AdaptDecision::Hold {
+            reason: HoldReason::CandidateRejected,
+            live_err: Some(live_err),
+        })
+    }
+
+    /// One controller round: measure, decide, and (maybe) swap — the
+    /// deterministic decision rule in the module docs. Call it
+    /// periodically from a control loop; it is cheap while the tier
+    /// holds (one shadow replay) and does one extra replay per evaluated
+    /// candidate when it moves.
+    pub fn step(&mut self, server: &ModelServer) -> Result<AdaptDecision, ServeError> {
+        self.rounds += 1;
+        let Some(reading) = self.measure()? else {
+            return Ok(AdaptDecision::Hold {
+                reason: HoldReason::NoShadowTraffic,
+                live_err: None,
+            });
+        };
+        let positions = self.positions();
+        let cur = positions
+            .iter()
+            .position(|&r| r == self.rank)
+            .expect("current rank validated against the ladder");
+        let err = reading.mean_err;
+        if err > self.cfg.target_err {
+            // Too coarse: walk richer rungs cheapest-first; the dense
+            // top rung (error 0) guarantees a feasible candidate unless
+            // the memory budget blocks everything.
+            if cur + 1 == positions.len() {
+                return Ok(AdaptDecision::Hold {
+                    reason: HoldReason::AtBestRung,
+                    live_err: Some(err),
+                });
+            }
+            let candidates = positions[cur + 1..].to_vec();
+            self.try_swap(server, &candidates, self.cfg.target_err, err)
+        } else if err <= self.cfg.target_err - self.margin() {
+            // Comfortably accurate: probe exactly one rung down, and
+            // only adopt it if it also clears the margin (hysteresis —
+            // an adopted down-move must not immediately bounce back).
+            if cur == 0 {
+                return Ok(AdaptDecision::Hold {
+                    reason: HoldReason::AtCheapestRung,
+                    live_err: Some(err),
+                });
+            }
+            let candidates = [positions[cur - 1]];
+            self.try_swap(server, &candidates, self.cfg.target_err - self.margin(), err)
+        } else {
+            Ok(AdaptDecision::Hold {
+                reason: HoldReason::WithinBand,
+                live_err: Some(err),
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Linear;
+    use crate::rng::Philox;
+    use crate::serve::TierConfig;
+
+    fn dense(seed: u64) -> Model {
+        let mut rng = Philox::seeded(seed);
+        let mut m = Model::new();
+        m.add("fc1", Linear::random(8, 24, &mut rng)).unwrap();
+        m.add("fc2", Linear::random(24, 4, &mut rng)).unwrap();
+        m
+    }
+
+    fn cfg(ladder: &[usize]) -> AdaptConfig {
+        AdaptConfig::new(LayerSelector::by_type("Linear"), ladder)
+    }
+
+    #[test]
+    fn config_validation_is_typed_and_early() {
+        let mut server = ModelServer::new();
+        server
+            .register_tier("t", dense(1), 8, TierConfig::default())
+            .unwrap();
+        let reject = |c: AdaptConfig| {
+            matches!(
+                RankAdapter::new(&server, "t", dense(1), c),
+                Err(ServeError::BadInput(_))
+            )
+        };
+        assert!(reject(cfg(&[])), "empty ladder");
+        assert!(reject(cfg(&[8, 4])), "descending ladder");
+        assert!(reject(cfg(&[0, 4])), "zero rank");
+        let mut c = cfg(&[4, 8]);
+        c.target_err = 0.0;
+        assert!(reject(c), "zero target");
+        let mut c = cfg(&[4, 8]);
+        c.initial_rank = 6;
+        assert!(reject(c), "initial rank outside ladder");
+        let mut c = cfg(&[4, 8]);
+        c.hysteresis = 1.0;
+        assert!(reject(c), "hysteresis at/above target");
+        // Selector matching nothing fails at attach, not at first move.
+        let c = AdaptConfig::new(LayerSelector::by_names(&["nope"]), &[4]);
+        assert!(matches!(
+            RankAdapter::new(&server, "t", dense(1), c),
+            Err(ServeError::BadInput(_))
+        ));
+        // Reference with the wrong interface is rejected.
+        let mut rng = Philox::seeded(9);
+        let mut wrong = Model::new();
+        wrong.add("fc", Linear::random(8, 5, &mut rng)).unwrap();
+        assert!(matches!(
+            RankAdapter::new(&server, "t", wrong, cfg(&[4])),
+            Err(ServeError::BadInput(_))
+        ));
+        // Unknown tier errors through the router.
+        assert!(matches!(
+            RankAdapter::new(&server, "ghost", dense(1), cfg(&[4])),
+            Err(ServeError::UnknownTier { .. })
+        ));
+    }
+
+    #[test]
+    fn shadow_ring_is_bounded_fifo_and_width_checked() {
+        let mut server = ModelServer::new();
+        server
+            .register_tier("t", dense(2), 8, TierConfig::default())
+            .unwrap();
+        let mut c = cfg(&[4]);
+        c.shadow_capacity = 3;
+        let mut a = RankAdapter::new(&server, "t", dense(2), c).unwrap();
+        assert!(matches!(
+            a.observe(&[0.0; 5]),
+            Err(ServeError::BadInput(_))
+        ));
+        for i in 0..5 {
+            a.observe(&[i as f32; 8]).unwrap();
+        }
+        assert_eq!(a.shadow_len(), 3);
+        // Oldest rows were evicted: the ring holds rows 2, 3, 4.
+        assert_eq!(a.shadow[0][0], 2.0);
+        assert_eq!(a.shadow[2][0], 4.0);
+    }
+
+    #[test]
+    fn measure_scores_dense_as_perfect_and_publishes_the_gauge() {
+        let mut server = ModelServer::new();
+        server
+            .register_tier("t", dense(3), 8, TierConfig::default())
+            .unwrap();
+        let mut a = RankAdapter::new(&server, "t", dense(3), cfg(&[4])).unwrap();
+        assert_eq!(a.measure().unwrap(), None, "empty ring measures nothing");
+        let mut rng = Philox::seeded(4);
+        for _ in 0..6 {
+            let row = crate::linalg::Mat::randn(1, 8, &mut rng);
+            a.observe(row.row(0)).unwrap();
+        }
+        // The tier serves exactly the reference: zero error, quality 1.
+        let r = a.measure().unwrap().unwrap();
+        assert_eq!(r.mean_err, 0.0);
+        assert_eq!(r.quality, 1.0);
+        assert_eq!(r.rows, 6);
+        assert_eq!(r.window_rows, 6);
+        assert_eq!(
+            server.metrics().tier("t").unwrap().measured_quality(),
+            Some(1.0)
+        );
+    }
+
+    /// A reference whose sketch is *exact at any rank*: with zero
+    /// weights, `V = Sᵀ·Wᵀ = 0`, so dense and every sketched candidate
+    /// output exactly the bias row. That turns the controller's
+    /// error-driven decisions deterministic — no dependence on what
+    /// relative error a random sketch happens to achieve.
+    fn exact_ref(bias: f32) -> Model {
+        let mut m = Model::new();
+        m.add(
+            "fc",
+            Linear::new(crate::linalg::Mat::zeros(4, 8), vec![bias; 4]),
+        )
+        .unwrap();
+        m
+    }
+
+    #[test]
+    fn step_walks_down_the_ladder_and_recovers_up() {
+        let mut server = ModelServer::new();
+        server
+            .register_tier("t", exact_ref(0.5), 8, TierConfig::default())
+            .unwrap();
+        let mut a =
+            RankAdapter::new(&server, "t", exact_ref(0.5), cfg(&[2, 4])).unwrap();
+        for i in 0..4 {
+            a.observe(&[i as f32 + 1.0; 8]).unwrap();
+        }
+        // Serving the dense reference: error is exactly 0, so each step
+        // probes one rung down — and the zero-weight sketch is exact, so
+        // each probe is adopted, until the ladder bottoms out.
+        match a.step(&server).unwrap() {
+            AdaptDecision::Swapped {
+                from_rank: 0,
+                to_rank: 4,
+                version: 1,
+                candidate_err,
+                ..
+            } => assert_eq!(candidate_err, 0.0),
+            other => panic!("expected the first down-swap, got {other:?}"),
+        }
+        match a.step(&server).unwrap() {
+            AdaptDecision::Swapped {
+                from_rank: 4,
+                to_rank: 2,
+                version: 2,
+                ..
+            } => {}
+            other => panic!("expected the second down-swap, got {other:?}"),
+        }
+        assert!(matches!(
+            a.step(&server).unwrap(),
+            AdaptDecision::Hold {
+                reason: HoldReason::AtCheapestRung,
+                ..
+            }
+        ));
+        let tm = server.metrics().tier("t").unwrap();
+        assert_eq!((a.rank(), tm.rank(), tm.swaps()), (2, 2, 2));
+        // Degrade what the tier serves behind the adapter's back: a
+        // wrong-bias model reads as relative error 1 (clamped). The
+        // up-walk proposes [4, dense]; rank 4 rebuilt from the reference
+        // is exact, so the cheapest richer rung wins.
+        server.swap_tier_model("t", exact_ref(9.0)).unwrap();
+        match a.step(&server).unwrap() {
+            AdaptDecision::Swapped {
+                from_rank: 2,
+                to_rank: 4,
+                version: 4,
+                live_err,
+                candidate_err,
+            } => {
+                assert!(live_err > a.cfg.target_err, "live err {live_err}");
+                assert_eq!(candidate_err, 0.0);
+            }
+            other => panic!("expected the recovery up-swap, got {other:?}"),
+        }
+        assert_eq!(a.rank(), 4);
+        assert_eq!(server.metrics().tier("t").unwrap().swaps(), 4);
+        server.shutdown();
+    }
+
+    #[test]
+    fn memory_budget_blocks_every_up_candidate() {
+        let mut server = ModelServer::new();
+        server
+            .register_tier("t", exact_ref(0.5), 8, TierConfig::default())
+            .unwrap();
+        // The tier serves garbage and the controller wants up — but a
+        // zero budget rejects every richer candidate, so it must hold
+        // (and say why) rather than swap over the ceiling.
+        server.swap_tier_model("t", exact_ref(9.0)).unwrap();
+        let mut c = cfg(&[2, 4]);
+        c.initial_rank = 2;
+        c.mem_budget = Some(0);
+        let mut a = RankAdapter::new(&server, "t", exact_ref(0.5), c).unwrap();
+        for i in 0..4 {
+            a.observe(&[i as f32 + 1.0; 8]).unwrap();
+        }
+        let d = a.step(&server).unwrap();
+        assert!(
+            matches!(
+                d,
+                AdaptDecision::Hold {
+                    reason: HoldReason::CandidateRejected,
+                    ..
+                }
+            ),
+            "budget must reject every richer candidate: {d:?}"
+        );
+        assert_eq!(a.rank(), 2, "no swap under a blocking budget");
+        assert_eq!(
+            server.metrics().tier("t").unwrap().swaps(),
+            1,
+            "only the setup swap"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn down_probe_rejects_candidates_above_the_ceiling() {
+        // Real random weights: a random sketch carries real error, so
+        // under a near-zero target the down-probe's candidate misses the
+        // ceiling and the tier keeps serving dense.
+        let mut server = ModelServer::new();
+        server
+            .register_tier("t", dense(5), 8, TierConfig::default())
+            .unwrap();
+        let mut c = cfg(&[4]);
+        c.target_err = 1e-9;
+        let mut a = RankAdapter::new(&server, "t", dense(5), c).unwrap();
+        let mut rng = Philox::seeded(6);
+        for _ in 0..6 {
+            let row = crate::linalg::Mat::randn(1, 8, &mut rng);
+            a.observe(row.row(0)).unwrap();
+        }
+        match a.step(&server).unwrap() {
+            AdaptDecision::Hold {
+                reason: HoldReason::CandidateRejected,
+                live_err,
+            } => assert_eq!(live_err, Some(0.0), "dense serving measures zero error"),
+            other => panic!("expected a rejected down-probe, got {other:?}"),
+        }
+        assert_eq!(a.rank(), 0);
+        assert_eq!(server.metrics().tier("t").unwrap().swaps(), 0);
+        server.shutdown();
+    }
+}

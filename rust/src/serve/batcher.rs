@@ -27,24 +27,81 @@ use std::collections::VecDeque;
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
+/// One published model version of a row tier. Requests capture the
+/// version live at admission, so a reply is always computed on the
+/// weights that were current when the request was accepted — the
+/// atomicity half of the hot-swap contract.
+pub(crate) struct ModelVersion {
+    pub(crate) model: Model,
+    /// Monotonic publish counter (0 = the registration model).
+    pub(crate) version: u64,
+}
+
+/// The versioned model slot of a row tier: an atomically swappable
+/// `Arc<ModelVersion>`. [`ModelSlot::publish`] installs a new model for
+/// *future* admissions only — requests already queued keep their captured
+/// `Arc`, in-flight batches finish on the old weights, and the old
+/// version is freed when its last queued request retires. Workers never
+/// touch the slot (they read the batch head's captured version), so a
+/// swap costs admissions one uncontended mutex grab and workers nothing.
+pub(crate) struct ModelSlot {
+    cur: Mutex<Arc<ModelVersion>>,
+}
+
+impl ModelSlot {
+    pub(crate) fn new(model: Model) -> Self {
+        ModelSlot {
+            cur: Mutex::new(Arc::new(ModelVersion { model, version: 0 })),
+        }
+    }
+
+    /// The version new admissions capture.
+    pub(crate) fn current(&self) -> Arc<ModelVersion> {
+        Arc::clone(&crate::util::lock_ignore_poison(&self.cur))
+    }
+
+    /// Atomically install `model` as the next version; returns the new
+    /// version number.
+    pub(crate) fn publish(&self, model: Model) -> u64 {
+        let mut g = crate::util::lock_ignore_poison(&self.cur);
+        let version = g.version + 1;
+        *g = Arc::new(ModelVersion { model, version });
+        version
+    }
+}
+
 /// How much of a batch's budget one queued request consumes. Row requests
 /// all weigh 1 (the budget is the batch cap); sequence requests weigh
 /// their token count (the budget is the tier's per-step token budget).
 pub(crate) trait BatchItem {
     fn weight(&self) -> usize;
+
+    /// Model-version fence for batch formation: coalescing never mixes
+    /// requests with different keys in one batch, so every batch executes
+    /// on exactly one model version. Kinds without versioning (sequence
+    /// tiers) keep the default constant key.
+    fn version_key(&self) -> u64 {
+        0
+    }
 }
 
 /// One queued inference request: a single feature row plus its reply
-/// channel and enqueue time (end-to-end latency is measured from here).
+/// channel, enqueue time (end-to-end latency is measured from here), and
+/// the model version captured at admission.
 pub(crate) struct ServeRequest {
     pub(crate) row: Vec<f32>,
     pub(crate) reply: mpsc::Sender<Result<Vec<f32>, ServeError>>,
     pub(crate) enqueued: Instant,
+    pub(crate) model: Arc<ModelVersion>,
 }
 
 impl BatchItem for ServeRequest {
     fn weight(&self) -> usize {
         1
+    }
+
+    fn version_key(&self) -> u64 {
+        self.model.version
     }
 }
 
@@ -151,13 +208,15 @@ impl<R: BatchItem> TierQueue<R> {
 
     /// Pull the next batch: block for the first request, then coalesce
     /// more FIFO requests while their summed [`BatchItem::weight`] fits
-    /// `max_weight`, waiting at most `max_wait` after the first pull. A
-    /// front request that does not fit the remaining budget stays queued
-    /// for the *next* step — the admit/retire boundary of the continuous
-    /// sequence batcher. Returns `None` when the queue is closed *and*
-    /// fully drained — the worker-exit signal. During a drain (closed,
-    /// non-empty) batches keep forming from whatever is queued, without
-    /// waiting for more.
+    /// `max_weight` **and** their [`BatchItem::version_key`] matches the
+    /// head's, waiting at most `max_wait` after the first pull. A front
+    /// request that does not fit the remaining budget — or was admitted
+    /// against a different model version — stays queued for the *next*
+    /// step, so a batch never mixes model versions and a hot-swap lands
+    /// exactly on a batch boundary. Returns `None` when the queue is
+    /// closed *and* fully drained — the worker-exit signal. During a
+    /// drain (closed, non-empty) batches keep forming from whatever is
+    /// queued, without waiting for more.
     pub(crate) fn next_batch(&self, max_weight: usize, max_wait: Duration) -> Option<Vec<R>> {
         let mut g = self.locked();
         loop {
@@ -175,6 +234,7 @@ impl<R: BatchItem> TierQueue<R> {
         // wedge the queue.
         let first = g.deque.pop_front().expect("non-empty");
         let mut weight = first.weight();
+        let version = first.version_key();
         batch.push(first);
         // `None` = un-representable deadline (e.g. `max_wait =
         // Duration::MAX`, a natural "always wait for a full batch"):
@@ -183,7 +243,7 @@ impl<R: BatchItem> TierQueue<R> {
         let deadline = Instant::now().checked_add(max_wait);
         loop {
             while let Some(front) = g.deque.front() {
-                if weight + front.weight() > max_weight {
+                if weight + front.weight() > max_weight || front.version_key() != version {
                     break;
                 }
                 let req = g.deque.pop_front().expect("front exists");
@@ -257,8 +317,13 @@ impl<R: BatchItem> TierQueue<R> {
 /// batch's callers get a typed [`ServeError::Exec`] instead of a hang,
 /// the warm context is discarded (its scratch state may be mid-borrow),
 /// and the worker keeps serving.
+///
+/// Workers do not own a model: each batch executes on the
+/// [`ModelVersion`] its requests captured at admission (the queue never
+/// mixes versions in one batch), which is what makes a hot-swap
+/// invisible to in-flight work — the old `Arc` lives exactly as long as
+/// requests admitted against it.
 pub(crate) fn worker_loop(
-    model: Arc<Model>,
     queue: Arc<TierQueue<ServeRequest>>,
     max_batch: usize,
     max_wait: Duration,
@@ -270,6 +335,8 @@ pub(crate) fn worker_loop(
     let mut x = Mat::zeros(max_batch, in_dim);
     while let Some(batch) = queue.next_batch(max_batch, max_wait) {
         let used = batch.len();
+        let model = Arc::clone(&batch[0].model);
+        let model = &model.model;
         // Live rows in 0..used, padding rows zeroed (previous batch's rows
         // past `used` must not linger — zero the whole tail).
         for (i, req) in batch.iter().enumerate() {
@@ -451,16 +518,27 @@ mod tests {
     use super::*;
     use std::sync::atomic::{AtomicBool, Ordering};
 
-    fn req(v: f32) -> (ServeRequest, mpsc::Receiver<Result<Vec<f32>, ServeError>>) {
+    fn req_versioned(
+        v: f32,
+        version: u64,
+    ) -> (ServeRequest, mpsc::Receiver<Result<Vec<f32>, ServeError>>) {
         let (tx, rx) = mpsc::channel();
         (
             ServeRequest {
                 row: vec![v],
                 reply: tx,
                 enqueued: Instant::now(),
+                model: Arc::new(ModelVersion {
+                    model: Model::new(),
+                    version,
+                }),
             },
             rx,
         )
+    }
+
+    fn req(v: f32) -> (ServeRequest, mpsc::Receiver<Result<Vec<f32>, ServeError>>) {
+        req_versioned(v, 0)
     }
 
     fn queue(cap: usize) -> Arc<TierQueue<ServeRequest>> {
@@ -570,6 +648,37 @@ mod tests {
         let step3 = q.next_batch(10, Duration::from_millis(5)).unwrap();
         assert_eq!(step3.len(), 1);
         assert_eq!(step3[0].weight(), 99);
+    }
+
+    #[test]
+    fn version_fence_splits_batches_at_the_swap_boundary() {
+        // Three v0 requests, then two v1: one pull must stop at the
+        // version boundary even though the cap (8) has room, and the next
+        // pull picks up the v1 run — a hot-swap always lands between
+        // batches, never inside one.
+        let q = queue(16);
+        for v in 0..3 {
+            let (r, _rx) = req_versioned(v as f32, 0);
+            q.submit(r).unwrap();
+        }
+        for v in 3..5 {
+            let (r, _rx) = req_versioned(v as f32, 1);
+            q.submit(r).unwrap();
+        }
+        // The fence must not cost the fenced batch a coalescing window:
+        // with newer-version requests already queued behind it, the pull
+        // ships immediately instead of waiting out `max_wait`.
+        let t0 = Instant::now();
+        let b1 = q.next_batch(8, Duration::from_secs(5)).unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(1), "no wait at fence");
+        assert_eq!(b1.len(), 3);
+        assert!(b1.iter().all(|r| r.version_key() == 0));
+        let b2 = q.next_batch(8, Duration::from_millis(5)).unwrap();
+        assert_eq!(b2.len(), 2);
+        assert!(b2.iter().all(|r| r.version_key() == 1));
+        // FIFO order is preserved across the fence.
+        assert_eq!(b1[0].row, vec![0.0]);
+        assert_eq!(b2[0].row, vec![3.0]);
     }
 
     #[test]

@@ -27,8 +27,14 @@
 //!   without consuming it counts as an explicit revocation — the
 //!   accounting invariant `speculative == upgrades + revoked` holds on
 //!   every path, so shutdown can prove no speculative work was orphaned.
+//!
+//! Ladder order is **live**: each submit ranks tiers by their *measured*
+//! quality (the [`super::adapt`] shadow-stream sensor) when one exists,
+//! falling back to the static construction-time score — so a hot-swap
+//! that changes a tier's rank re-orders routing as soon as the adapter
+//! re-measures, without rebuilding the cascade.
 
-use super::batcher::{ServeRequest, TierQueue};
+use super::batcher::{ModelSlot, ServeRequest, TierQueue};
 use super::metrics::TierMetrics;
 use super::router::Tier;
 use super::slo::{admit, predict_latency, Decision, Slo, TierLoad};
@@ -44,6 +50,26 @@ struct Rung {
     queue: Arc<TierQueue<ServeRequest>>,
     info: TierInfo,
     metrics: Arc<TierMetrics>,
+    /// The tier's versioned model slot: cascade submissions capture the
+    /// current version at admission exactly like [`super::ServeHandle`]
+    /// submissions do, so hot-swaps stay atomic under cascade traffic.
+    slot: Arc<ModelSlot>,
+}
+
+impl Rung {
+    /// The quality score routing ranks this rung by *right now*: the
+    /// tier's **measured** quality (the rank adapter's shadow-stream
+    /// sensor, see [`super::adapt`]) when one exists, else the static
+    /// score the ladder was built with. A swap to a different rank shows
+    /// up here as soon as the adapter re-measures — the ladder re-orders
+    /// itself around evidence instead of trusting construction-time
+    /// labels.
+    fn effective_quality(&self) -> f32 {
+        match self.metrics.measured_quality() {
+            Some(q) => q as f32,
+            None => self.quality,
+        }
+    }
 }
 
 /// SLO router over a ladder of row tiers, ordered best quality first.
@@ -79,8 +105,10 @@ impl Cascade {
                 )));
             }
             let tier = server.router.get(name)?;
-            let (queue, info) = match &*tier {
-                Tier::Row { queue, info } => (Arc::clone(queue), info.clone()),
+            let (queue, info, slot) = match &*tier {
+                Tier::Row { queue, info, slot, .. } => {
+                    (Arc::clone(queue), info.clone(), Arc::clone(slot))
+                }
                 Tier::Seq { .. } => {
                     return Err(ServeError::BadInput(format!(
                         "tier {name:?} serves sequences — cascades route \
@@ -95,6 +123,7 @@ impl Cascade {
                 queue,
                 info,
                 metrics,
+                slot,
             });
         }
         let (d0, o0) = (rungs[0].info.in_dim, rungs[0].info.out_dim);
@@ -107,15 +136,49 @@ impl Cascade {
                 )));
             }
         }
-        // Best quality first; stable sort keeps ladder order on ties.
+        // Best static quality first; stable sort keeps ladder order on
+        // ties. This is the *baseline* order — every submit re-ranks by
+        // effective (measured-when-available) quality, so the stored
+        // order only decides ties among unmeasured tiers.
         rungs.sort_by(|a, b| b.quality.partial_cmp(&a.quality).expect("finite"));
         Ok(Cascade { rungs })
     }
 
-    /// The ladder as `(name, quality)`, best quality first.
+    /// The ladder as `(name, static quality)`, best static quality first
+    /// — the construction-time labels. See [`Cascade::qualities`] for
+    /// the live (measured) view routing actually uses.
     pub fn tiers(&self) -> Vec<(String, f32)> {
         let entry = |r: &Rung| (r.name.clone(), r.quality);
         self.rungs.iter().map(entry).collect()
+    }
+
+    /// The live ladder as `(name, effective quality)`, best first —
+    /// effective quality is the tier's **measured** quality (the rank
+    /// adapter's shadow-stream sensor) when one exists, else its static
+    /// score. This is exactly the ordering and the values the next
+    /// [`Cascade::submit`] will hand to the admission policy.
+    pub fn qualities(&self) -> Vec<(String, f32)> {
+        let order = self.effective_order();
+        order
+            .into_iter()
+            .map(|i| (self.rungs[i].name.clone(), self.rungs[i].effective_quality()))
+            .collect()
+    }
+
+    /// Rung indices sorted best effective quality first (stable: ties
+    /// keep the static best-first baseline order).
+    fn effective_order(&self) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.rungs.len()).collect();
+        order.sort_by(|&a, &b| {
+            let (qa, qb) = (
+                self.rungs[a].effective_quality(),
+                self.rungs[b].effective_quality(),
+            );
+            // Measured qualities are clamped finite at the sensor and
+            // static ones validated at construction.
+            qb.partial_cmp(&qa).expect("finite quality")
+        });
+        order
     }
 
     /// Request row width (identical across the ladder).
@@ -164,22 +227,30 @@ impl Cascade {
     /// eligible tier can make the deadline.
     pub fn submit(&self, row: &[f32], slo: &Slo) -> Result<Routed, ServeError> {
         self.check_width(row)?;
+        // Rank the ladder by *effective* quality for this submit: a tier
+        // whose measured quality has drifted below its static label (or
+        // below the request's floor) is ranked — and floored — by the
+        // evidence, not the label.
+        let order = self.effective_order();
+        let eq: Vec<f32> = self.rungs.iter().map(Rung::effective_quality).collect();
         // The best eligible rung in the full ladder: routing anywhere
         // below it is the recorded quality downgrade, and rejects are
         // charged to it (the tier the request *wanted*; a floor above
         // the whole ladder charges the top rung).
-        let first_eligible = self.rungs.iter().position(|r| r.quality >= slo.min_quality);
+        let first_eligible = order.iter().copied().find(|&i| eq[i] >= slo.min_quality);
+        let top = order[0];
         // (original rung index, (quality, predicted)) — rungs that turn
         // out QueueFull are removed before re-running the policy, so the
         // loop strictly shrinks the candidate set and must terminate.
-        let mut candidates: Vec<(usize, (f32, Duration))> = (0..self.rungs.len())
-            .map(|i| (i, (self.rungs[i].quality, predict_latency(&self.load(i)))))
+        let mut candidates: Vec<(usize, (f32, Duration))> = order
+            .iter()
+            .map(|&i| (i, (eq[i], predict_latency(&self.load(i)))))
             .collect();
         loop {
             let ladder: Vec<(f32, Duration)> = candidates.iter().map(|c| c.1).collect();
             match admit(slo, &ladder) {
                 Decision::Infeasible { best_predicted } => {
-                    self.rungs[first_eligible.unwrap_or(0)].metrics.record_slo_reject();
+                    self.rungs[first_eligible.unwrap_or(top)].metrics.record_slo_reject();
                     return Err(ServeError::SloInfeasible {
                         deadline: slo.deadline,
                         best_predicted,
@@ -193,6 +264,7 @@ impl Cascade {
                         row: row.to_vec(),
                         reply: tx,
                         enqueued: Instant::now(),
+                        model: rung.slot.current(),
                     };
                     match rung.queue.try_submit(req) {
                         Ok(()) => {
@@ -207,7 +279,7 @@ impl Cascade {
                             }
                             return Ok(Routed {
                                 tier: rung.name.clone(),
-                                quality: rung.quality,
+                                quality: eq[orig],
                                 shed,
                                 pending: PendingReply { rx },
                             });
@@ -241,8 +313,13 @@ impl Cascade {
                 "speculative mode needs at least two tiers (fast + verify)".into(),
             ));
         }
-        let fast = &self.rungs[self.rungs.len() - 1];
-        let best = &self.rungs[0];
+        // Fast and verify legs are the worst and best rungs by
+        // *effective* quality — after a swap degrades (or an upgrade
+        // improves) a tier's measured quality, speculation re-picks its
+        // legs accordingly.
+        let order = self.effective_order();
+        let fast = &self.rungs[order[order.len() - 1]];
+        let best = &self.rungs[order[0]];
         // Fast leg first: if the server is draining, fail the whole call
         // before any speculative accounting opens.
         let (tx, rx) = mpsc::channel();
@@ -250,6 +327,7 @@ impl Cascade {
             row: row.to_vec(),
             reply: tx,
             enqueued: Instant::now(),
+            model: fast.slot.current(),
         };
         fast.queue.submit(freq)?;
         let first = PendingReply { rx };
@@ -261,6 +339,7 @@ impl Cascade {
             row: row.to_vec(),
             reply: vtx,
             enqueued: Instant::now(),
+            model: best.slot.current(),
         };
         let state = match best.queue.try_submit(vreq) {
             Ok(()) => UpgradeState::Pending(PendingReply { rx: vrx }),
@@ -288,7 +367,8 @@ impl Cascade {
 pub struct Routed {
     /// Name of the tier serving the request.
     pub tier: String,
-    /// That tier's quality score.
+    /// That tier's effective quality at routing time (measured when the
+    /// rank adapter has a reading, else the static ladder score).
     pub quality: f32,
     /// Whether routing downgraded below the best eligible tier.
     pub shed: bool,

@@ -62,12 +62,31 @@ impl RotatingWindow {
         if elapsed < WINDOW_EPOCH {
             return;
         }
-        let steps = (elapsed.as_nanos() / WINDOW_EPOCH.as_nanos()) as usize;
-        for _ in 0..steps.min(self.hist.epochs()) {
+        self.advance((elapsed.as_nanos() / WINDOW_EPOCH.as_nanos()) as u64);
+    }
+
+    /// Advance the ring by `steps` epochs. A gap of a full ring or more
+    /// clears every epoch in one move and re-anchors the grid at "now" —
+    /// which is also what makes huge `steps` safe: the old
+    /// `started += WINDOW_EPOCH * steps` re-anchor wrapped through the
+    /// `u32` epoch multiply and could push `started` decades into the
+    /// future, freezing the window (monotonic `elapsed()` saturates to
+    /// zero, so `tick` would never rotate again). Below a full ring
+    /// `steps < WINDOW_EPOCHS`, so the grid-preserving multiply cannot
+    /// overflow.
+    fn advance(&mut self, steps: u64) {
+        if steps >= self.hist.epochs() as u64 {
+            for _ in 0..self.hist.epochs() {
+                self.hist.rotate();
+            }
+            self.started = Instant::now();
+            return;
+        }
+        for _ in 0..steps {
             self.hist.rotate();
         }
         // Re-anchor on the epoch grid so quantization does not drift.
-        self.started += WINDOW_EPOCH * steps.min(u32::MAX as usize) as u32;
+        self.started += WINDOW_EPOCH * steps as u32;
         if self.started.elapsed() >= WINDOW_EPOCH {
             self.started = Instant::now();
         }
@@ -113,6 +132,17 @@ pub struct TierMetrics {
     /// Requests rejected as `SloInfeasible` with this tier as their best
     /// eligible quality — not even a downgrade could meet the deadline.
     slo_rejects: AtomicU64,
+    /// Model versions published through the hot-swap path (the rank
+    /// adapter's applied moves).
+    swaps: AtomicU64,
+    /// Current sketch-rank gauge (0 = dense / never set) — written by
+    /// [`crate::serve::RankAdapter`] alongside each swap.
+    rank: AtomicUsize,
+    /// Latest measured quality score from the shadow-replay sensor
+    /// (`1 − relative error` vs. the dense reference; `None` until the
+    /// first measurement). The cascade prefers this over the static
+    /// ladder score when present.
+    measured_quality: Mutex<Option<f64>>,
     occupancy: Mutex<OccupancyHist>,
     /// End-to-end latency (enqueue → reply), queue wait included.
     latency: Mutex<DurationHist>,
@@ -192,6 +222,18 @@ impl TierMetrics {
         self.slo_rejects.fetch_add(1, Ordering::SeqCst);
     }
 
+    pub(crate) fn record_swap(&self) {
+        self.swaps.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn set_rank(&self, rank: usize) {
+        self.rank.store(rank, Ordering::SeqCst);
+    }
+
+    pub(crate) fn set_measured_quality(&self, q: f64) {
+        *crate::util::lock_ignore_poison(&self.measured_quality) = Some(q);
+    }
+
     /// Requests currently queued (submitted, not yet batched).
     pub fn queue_depth(&self) -> usize {
         self.depth.load(Ordering::SeqCst)
@@ -237,6 +279,22 @@ impl TierMetrics {
     /// eligible quality.
     pub fn slo_rejects(&self) -> u64 {
         self.slo_rejects.load(Ordering::SeqCst)
+    }
+
+    /// Model versions hot-swapped into this tier.
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::SeqCst)
+    }
+
+    /// Current sketch-rank gauge (0 until the rank adapter sets it).
+    pub fn rank(&self) -> usize {
+        self.rank.load(Ordering::SeqCst)
+    }
+
+    /// Latest shadow-replay quality score (`1 − relative error` against
+    /// the dense reference), `None` before the first measurement.
+    pub fn measured_quality(&self) -> Option<f64> {
+        *crate::util::lock_ignore_poison(&self.measured_quality)
     }
 
     /// Batches executed.
@@ -325,6 +383,12 @@ pub struct TierSnapshot {
     pub upgrades: u64,
     pub revoked: u64,
     pub slo_rejects: u64,
+    /// Model versions hot-swapped into the tier.
+    pub swaps: u64,
+    /// Sketch-rank gauge (0 until the adapter sets it).
+    pub rank: usize,
+    /// Shadow-replay quality score, `None` before the first measurement.
+    pub measured_quality: Option<f64>,
 }
 
 fn us(d: Duration) -> f64 {
@@ -353,6 +417,9 @@ impl TierSnapshot {
             upgrades: m.upgrades(),
             revoked: m.revoked(),
             slo_rejects: m.slo_rejects(),
+            swaps: m.swaps(),
+            rank: m.rank(),
+            measured_quality: m.measured_quality(),
         }
     }
 
@@ -376,7 +443,14 @@ impl TierSnapshot {
             .set("speculative", self.speculative as f64)
             .set("upgrades", self.upgrades as f64)
             .set("revoked", self.revoked as f64)
-            .set("slo_rejects", self.slo_rejects as f64);
+            .set("slo_rejects", self.slo_rejects as f64)
+            .set("swaps", self.swaps as f64)
+            .set("rank", self.rank as f64);
+        // JSON has no NaN: the key is simply absent until the sensor has
+        // measured (consumers treat "missing" as "static score only").
+        if let Some(q) = self.measured_quality {
+            o.set("measured_quality", q);
+        }
         o
     }
 }
@@ -551,6 +625,72 @@ mod tests {
         assert!(win.p99() <= Duration::from_millis(5));
         t.record_latency(Duration::from_millis(7));
         assert_eq!(t.windowed_latency().count(), 1);
+    }
+
+    #[test]
+    fn rotating_window_saturates_huge_epoch_gaps() {
+        // Regression: the old re-anchor multiplied `WINDOW_EPOCH` by
+        // `steps.min(u32::MAX)`, so an idle gap of more than u32::MAX
+        // epochs truncated — and even in-range products pushed `started`
+        // decades into the future, where monotonic `elapsed()` saturates
+        // to zero and the window never rotates again. The saturating
+        // advance clears the ring in one move instead.
+        let mut w = RotatingWindow::default();
+        w.hist.record(Duration::from_millis(3));
+        // Exactly the overflow boundary and far past it: both clear.
+        for steps in [
+            WINDOW_EPOCHS as u64,
+            u32::MAX as u64,
+            u32::MAX as u64 + 1,
+            u64::MAX,
+        ] {
+            w.hist.record(Duration::from_millis(3));
+            w.advance(steps);
+            assert_eq!(w.hist.snapshot().count(), 0, "steps={steps}");
+            // `started` is re-anchored at "now", not in the future: the
+            // next record lands in a live epoch and is visible.
+            w.hist.record(Duration::from_millis(1));
+            assert_eq!(w.hist.snapshot().count(), 1, "steps={steps}");
+            w.advance(WINDOW_EPOCHS as u64);
+        }
+        // Below a full ring the advance is a plain rotation: a sample
+        // survives epochs-1 steps and expires on the next.
+        w.hist.record(Duration::from_millis(2));
+        w.advance(WINDOW_EPOCHS as u64 - 1);
+        assert_eq!(w.hist.snapshot().count(), 1);
+        w.advance(1);
+        assert_eq!(w.hist.snapshot().count(), 0);
+    }
+
+    #[test]
+    fn swap_and_quality_gauges_reach_snapshot_json() {
+        let m = Metrics::default();
+        let t = m.tier_entry("sk");
+        // Unmeasured: no key in the JSON, None in the snapshot.
+        let snap = m.snapshot();
+        assert_eq!(snap.tiers[0].measured_quality, None);
+        assert_eq!(snap.tiers[0].swaps, 0);
+        assert!(snap.to_json().to_pretty().contains("\"swaps\""));
+        assert!(!snap.to_json().to_pretty().contains("measured_quality"));
+        t.record_swap();
+        t.record_swap();
+        t.set_rank(12);
+        t.set_measured_quality(0.875);
+        assert_eq!(t.swaps(), 2);
+        assert_eq!(t.rank(), 12);
+        assert_eq!(t.measured_quality(), Some(0.875));
+        let snap = m.snapshot();
+        assert_eq!(snap.tiers[0].swaps, 2);
+        assert_eq!(snap.tiers[0].rank, 12);
+        assert_eq!(snap.tiers[0].measured_quality, Some(0.875));
+        let doc = Json::parse(&snap.to_json().to_pretty()).unwrap();
+        let tiers = doc.get("tiers").and_then(Json::as_arr).unwrap();
+        assert_eq!(tiers[0].get("swaps").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(tiers[0].get("rank").and_then(Json::as_f64), Some(12.0));
+        assert_eq!(
+            tiers[0].get("measured_quality").and_then(Json::as_f64),
+            Some(0.875)
+        );
     }
 
     #[test]

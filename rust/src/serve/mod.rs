@@ -79,6 +79,7 @@
 //! # Ok(()) }
 //! ```
 
+pub mod adapt;
 pub mod batcher;
 pub mod cascade;
 pub mod metrics;
@@ -86,6 +87,7 @@ pub mod router;
 pub mod slo;
 pub mod transform;
 
+pub use adapt::{AdaptConfig, AdaptDecision, HoldReason, QualityReading, RankAdapter};
 pub use cascade::{Cascade, Routed, SpecReply, Upgrade, UpgradeHandle};
 pub use metrics::{Metrics, MetricsSnapshot, TierMetrics, TierSnapshot};
 pub use slo::{predict_latency, Decision, Slo, TierLoad};
@@ -93,7 +95,7 @@ pub use transform::OutputTransform;
 
 use crate::linalg::Mat;
 use crate::nn::Model;
-use batcher::{seq_worker_loop, worker_loop, SeqServeRequest, ServeRequest, TierQueue};
+use batcher::{seq_worker_loop, worker_loop, ModelSlot, SeqServeRequest, ServeRequest, TierQueue};
 use router::{probe_model, probe_seq_model, Router, Tier};
 use std::path::Path;
 use std::sync::{mpsc, Arc};
@@ -434,14 +436,20 @@ impl ModelServer {
         // whose queue would admit requests nobody drains. On failure the
         // (unreachable) queue is closed, already-spawned workers drain out
         // and join, and no tier is registered.
-        let model = Arc::new(model);
+        //
+        // The model goes into a versioned slot rather than to the workers:
+        // every admitted request captures the slot's current version, and
+        // workers execute each batch on the version its requests captured
+        // — which is what lets [`ModelServer::swap_tier_model`] publish a
+        // new model later without touching the worker pool.
+        let slot = Arc::new(ModelSlot::new(model));
         let mut handles = Vec::with_capacity(workers);
         for i in 0..workers {
-            let (m, q, tm) = (Arc::clone(&model), Arc::clone(&queue), Arc::clone(&tier_metrics));
+            let (q, tm) = (Arc::clone(&queue), Arc::clone(&tier_metrics));
             let (cap, wait, tf) = (cfg.max_batch, cfg.max_wait, cfg.transform);
             let spawned = std::thread::Builder::new()
                 .name(format!("panther-serve-{name}-{i}"))
-                .spawn(move || worker_loop(m, q, cap, wait, in_dim, tf, tm));
+                .spawn(move || worker_loop(q, cap, wait, in_dim, tf, tm));
             match spawned {
                 Ok(h) => handles.push(h),
                 Err(e) => {
@@ -459,6 +467,8 @@ impl ModelServer {
             Tier::Row {
                 queue: Arc::clone(&queue),
                 info: info.clone(),
+                slot,
+                raw_out: probe.out_dim,
             },
         );
         if let Err(e) = inserted {
@@ -490,6 +500,57 @@ impl ModelServer {
         let state = crate::train::checkpoint::load(path)?;
         arch.load_state_dict(&state.state_dict())?;
         Ok(self.register_tier(name, arch, in_dim, cfg)?)
+    }
+
+    /// Atomically hot-swap row tier `name`'s model without dropping a
+    /// single request. The replacement is vetted like a registration
+    /// (same probe: row independence, one output row per input row, the
+    /// tier's input/output widths) and then **published** for future
+    /// admissions only:
+    ///
+    /// - requests admitted before the swap keep the version they
+    ///   captured — their replies are bit-identical to the old model's,
+    ///   even if they execute after the swap;
+    /// - batches never mix versions (the batcher fences on the
+    ///   version key), so the swap lands exactly on a batch boundary;
+    /// - workers are untouched — no queue pause, no thread churn.
+    ///
+    /// Returns the new version number (registration is version 0) and
+    /// bumps the tier's `swaps` counter. Worker admission is *not*
+    /// re-run: a swap changes weights, not the worker pool, so callers
+    /// that care about memory budgets (the rank adapter) must check
+    /// headroom before swapping. Sequence tiers are not swappable
+    /// ([`ServeError::BadInput`]).
+    pub fn swap_tier_model(&self, name: &str, model: Model) -> Result<u64, ServeError> {
+        if self.closed {
+            return Err(ServeError::ShuttingDown);
+        }
+        let tier = self.router.get(name)?;
+        let (info, slot) = match &*tier {
+            Tier::Row { info, slot, .. } => (info, slot),
+            Tier::Seq { .. } => {
+                return Err(ServeError::BadInput(format!(
+                    "tier {name} is a sequence tier — hot-swap serves row tiers only"
+                )));
+            }
+        };
+        let probe = probe_model(&model, info.in_dim, info.max_batch)?;
+        // The tier's transform was validated against the registration
+        // model's raw output width; the replacement must keep that raw
+        // interface exactly (the post-transform `info.out_dim` the
+        // clients see then follows).
+        let expected = tier.raw_out_dim().expect("row tier has a raw width");
+        if probe.out_dim != expected {
+            return Err(ServeError::BadInput(format!(
+                "replacement for tier {name} maps {} -> {}, expected {} -> {expected}",
+                info.in_dim, probe.out_dim, info.in_dim,
+            )));
+        }
+        let version = slot.publish(model);
+        if let Some(tm) = self.metrics.tier(name) {
+            tm.record_swap();
+        }
+        Ok(version)
     }
 
     /// Register `model` as **sequence** tier `name`: whole variable-length
@@ -700,8 +761,8 @@ impl ServeHandle {
         // `route`, not `get`: unknown names fall back to the server's
         // default tier when one is configured.
         let t = self.router.route(tier)?;
-        let (queue, info) = match &*t {
-            Tier::Row { queue, info } => (Arc::clone(queue), info),
+        let (queue, info, slot) = match &*t {
+            Tier::Row { queue, info, slot, .. } => (Arc::clone(queue), info, slot),
             Tier::Seq { info, .. } => {
                 return Err(ServeError::BadInput(format!(
                     "tier {:?} serves sequences — use infer_seq/submit_seq",
@@ -718,10 +779,15 @@ impl ServeHandle {
             )));
         }
         let (tx, rx) = mpsc::channel();
+        // Capture the tier's current model version at admission: this is
+        // the hot-swap atomicity point. Whatever `swap_tier_model`
+        // publishes later, this request executes — and replies — on the
+        // version it captured here.
         let req = ServeRequest {
             row: row.to_vec(),
             reply: tx,
             enqueued: Instant::now(),
+            model: slot.current(),
         };
         Ok((queue, req, PendingReply { rx }))
     }

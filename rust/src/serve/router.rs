@@ -26,7 +26,7 @@
 //!    height of 8); recorded in [`super::TierInfo`] so callers know which
 //!    guarantee they hold.
 
-use super::batcher::{SeqServeRequest, ServeRequest, TierQueue};
+use super::batcher::{ModelSlot, SeqServeRequest, ServeRequest, TierQueue};
 use super::{SeqTierInfo, ServeError, TierInfo};
 use crate::linalg::Mat;
 use crate::nn::{ForwardCtx, Model, SeqBatch};
@@ -44,6 +44,15 @@ pub(crate) enum Tier {
     Row {
         queue: Arc<TierQueue<ServeRequest>>,
         info: TierInfo,
+        /// The tier's versioned model: admissions capture the current
+        /// version here; the rank adapter publishes new versions through
+        /// it. Sequence tiers are not hot-swappable (their workers own a
+        /// static `Arc<Model>`), hence no slot on the `Seq` arm.
+        slot: Arc<ModelSlot>,
+        /// Raw (pre-transform) model output width, fixed at registration.
+        /// Hot-swap replacements must reproduce it exactly so the tier's
+        /// transform — and the `info.out_dim` clients see — keep holding.
+        raw_out: usize,
     },
     Seq {
         queue: Arc<TierQueue<SeqServeRequest>>,
@@ -56,6 +65,14 @@ impl Tier {
         match self {
             Tier::Row { queue, .. } => queue.close(),
             Tier::Seq { queue, .. } => queue.close(),
+        }
+    }
+
+    /// Raw model output width for row tiers; `None` for sequence tiers.
+    pub(crate) fn raw_out_dim(&self) -> Option<usize> {
+        match self {
+            Tier::Row { raw_out, .. } => Some(*raw_out),
+            Tier::Seq { .. } => None,
         }
     }
 }
@@ -344,6 +361,8 @@ mod tests {
         let r = Router::default();
         let mk = |n: &str| Tier::Row {
             queue: Arc::new(TierQueue::new(4, Arc::new(TierMetrics::default()))),
+            slot: Arc::new(ModelSlot::new(Model::new())),
+            raw_out: 2,
             info: TierInfo {
                 name: n.into(),
                 in_dim: 2,
@@ -381,6 +400,8 @@ mod tests {
         let r = Router::default();
         let mk = |n: &str| Tier::Row {
             queue: Arc::new(TierQueue::new(4, Arc::new(TierMetrics::default()))),
+            slot: Arc::new(ModelSlot::new(Model::new())),
+            raw_out: 2,
             info: TierInfo {
                 name: n.into(),
                 in_dim: 2,

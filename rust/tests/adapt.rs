@@ -1,0 +1,445 @@
+//! Integration tests for online rank adaptation (`panther::serve::adapt`)
+//! and the atomic versioned-layer hot-swap underneath it.
+//!
+//! The contracts under test, end to end through the server:
+//!
+//! - **Atomicity**: a hot-swap under concurrent traffic drops nothing and
+//!   corrupts nothing. Every request admitted before the swap replies
+//!   from the *old* model bit for bit; every request admitted after
+//!   replies from the *new* model bit for bit; requests racing the swap
+//!   reply from exactly one of the two (never a torn batch).
+//! - **Determinism**: the model the adapter publishes at rank `r` is
+//!   bitwise identical to a standalone model sketched with the same
+//!   plan seed at the same rank — per-layer seeds derive from the layer
+//!   name, not build order.
+//! - **Evidence-driven routing**: once the adapter measures a tier's
+//!   real quality, the cascade orders its ladder by the measurement; a
+//!   tier whose measured error crosses a request's `min_quality` floor
+//!   stops receiving floored requests entirely.
+//!
+//! Batch caps stay ≤ 4 (under the GEMM microkernel height) so the
+//! bitwise serving oracle of `tests/serve.rs` applies throughout.
+
+use panther::linalg::Mat;
+use panther::nn::{Activation, ForwardCtx, LayerSelector, Linear, Model, SketchPlan};
+use panther::rng::Philox;
+use panther::serve::{
+    AdaptConfig, AdaptDecision, Cascade, ModelServer, RankAdapter, ServeError, Slo, TierConfig,
+};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The same nonlinear row-independent stack as `tests/serve.rs`, biases
+/// nonzero so padding leaks would be visible.
+fn mlp(seed: u64, d_in: usize, d_out: usize) -> Model {
+    let mut rng = Philox::seeded(seed);
+    let mut m = Model::new();
+    let mut fc1 = Linear::random(d_in, 12, &mut rng);
+    for b in fc1.bias.iter_mut() {
+        *b = 0.3;
+    }
+    m.add("fc1", fc1).unwrap();
+    m.add("act", Activation::gelu()).unwrap();
+    let mut fc2 = Linear::random(12, d_out, &mut rng);
+    for b in fc2.bias.iter_mut() {
+        *b = -0.2;
+    }
+    m.add("fc2", fc2).unwrap();
+    m
+}
+
+/// Rank-4 sketch of the same stack under plan seed 23 — rebuilt calls
+/// are bitwise-identical twins (deterministic per-layer seed derivation).
+fn sk4(seed: u64, d_in: usize, d_out: usize) -> Model {
+    let mut m = mlp(seed, d_in, d_out);
+    SketchPlan::new()
+        .select(LayerSelector::by_type("Linear"))
+        .with(1, 4)
+        .seed(23)
+        .apply(&mut m)
+        .unwrap();
+    m
+}
+
+/// A model that answers every row with a constant far outside the mlp's
+/// output range: guaranteed (clamped) relative error 1 against any mlp
+/// reference — the deterministic "quality collapsed" stand-in.
+fn garbage(d_in: usize, d_out: usize) -> Model {
+    let mut m = Model::new();
+    m.add(
+        "fc",
+        Linear::new(Mat::zeros(d_out, d_in), vec![1.0e6; d_out]),
+    )
+    .unwrap();
+    m
+}
+
+fn request_rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| Mat::randn(1, d, &mut Philox::seeded(seed + i as u64)).into_vec())
+        .collect()
+}
+
+fn solo_forward(model: &Model, row: &[f32]) -> Vec<f32> {
+    model
+        .forward(&Mat::from_vec(1, row.len(), row.to_vec()), &ForwardCtx::new())
+        .unwrap()
+        .row(0)
+        .to_vec()
+}
+
+#[test]
+fn hot_swap_under_concurrent_traffic_is_atomic_and_lossless() {
+    let (d, k) = (12usize, 5usize);
+    let old_oracle = Arc::new(mlp(90, d, k));
+    let new_oracle = Arc::new(sk4(90, d, k));
+    let mut server = ModelServer::new();
+    server
+        .register_tier(
+            "t",
+            mlp(90, d, k),
+            d,
+            TierConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(300),
+                queue_cap: 2048,
+                workers: 3,
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    // Hammer threads race the swap: every reply must be bitwise one of
+    // the two versions — a mixed batch would match neither oracle.
+    let (n_threads, m_requests) = (6usize, 40usize);
+    let hammers: Vec<_> = (0..n_threads)
+        .map(|t| {
+            let h = server.handle();
+            let (old, new) = (Arc::clone(&old_oracle), Arc::clone(&new_oracle));
+            std::thread::spawn(move || {
+                for i in 0..m_requests {
+                    let seed = 7000 + (t * m_requests + i) as u64;
+                    let row = Mat::randn(1, d, &mut Philox::seeded(seed)).into_vec();
+                    let got = h.infer("t", &row).unwrap();
+                    let (want_old, want_new) =
+                        (solo_forward(&old, &row), solo_forward(&new, &row));
+                    assert!(
+                        got == want_old || got == want_new,
+                        "seed {seed}: reply matches neither model version — torn batch"
+                    );
+                }
+            })
+        })
+        .collect();
+    // Admit a wave of requests, then swap: everything admitted before
+    // the publish must reply from the old version, even though it drains
+    // after the new one is live.
+    let h = server.handle();
+    let pre_rows = request_rows(10, d, 8800);
+    let pre_pending: Vec<_> = pre_rows
+        .iter()
+        .map(|row| h.submit("t", row).unwrap())
+        .collect();
+    let version = server.swap_tier_model("t", sk4(90, d, k)).unwrap();
+    assert_eq!(version, 1, "first publish after the registration model");
+    for (p, row) in pre_pending.into_iter().zip(&pre_rows) {
+        assert_eq!(
+            p.wait().unwrap(),
+            solo_forward(&old_oracle, row),
+            "pre-swap-admitted request must reply from the old version"
+        );
+    }
+    // Everything admitted after the swap returned serves the new model,
+    // bitwise equal to the standalone twin built from the same plan.
+    for row in &request_rows(10, d, 9900) {
+        assert_eq!(
+            h.infer("t", row).unwrap(),
+            solo_forward(&new_oracle, row),
+            "post-swap request must reply from the new version"
+        );
+    }
+    for th in hammers {
+        th.join().unwrap();
+    }
+    let tm = server.metrics().tier("t").unwrap();
+    let total = (n_threads * m_requests + 20) as u64;
+    assert_eq!(tm.requests(), total, "every request accounted");
+    assert_eq!(tm.errors(), 0, "zero errored requests across the swap");
+    assert_eq!(tm.rejected(), 0, "zero dropped requests across the swap");
+    assert_eq!(tm.queue_depth(), 0);
+    assert_eq!(tm.swaps(), 1, "exactly the one publish");
+    server.shutdown();
+}
+
+#[test]
+fn drain_answers_across_multiple_swaps_with_exact_accounting() {
+    let (d, k) = (10usize, 5usize);
+    let mut server = ModelServer::new();
+    server
+        .register_tier(
+            "t",
+            mlp(70, d, k),
+            d,
+            TierConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 64,
+                workers: 1,
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    let h = server.handle();
+    let rows = request_rows(12, d, 4400);
+    // Three admission waves under three model versions, queued faster
+    // than the single worker drains: the queue holds a version mix, and
+    // the batcher's version fence must keep every batch pure.
+    let wave_a: Vec<_> = rows[0..4].iter().map(|r| h.submit("t", r).unwrap()).collect();
+    assert_eq!(server.swap_tier_model("t", sk4(70, d, k)).unwrap(), 1);
+    let wave_b: Vec<_> = rows[4..8].iter().map(|r| h.submit("t", r).unwrap()).collect();
+    // Swapping back to a rebuild of the registration model: version 2's
+    // weights are bitwise the originals (deterministic constructor).
+    assert_eq!(server.swap_tier_model("t", mlp(70, d, k)).unwrap(), 2);
+    let wave_c: Vec<_> = rows[8..12].iter().map(|r| h.submit("t", r).unwrap()).collect();
+    server.shutdown(); // drain: every admitted request still answers
+    let dense_oracle = mlp(70, d, k);
+    let sk_oracle = sk4(70, d, k);
+    for (p, row) in wave_a.into_iter().zip(&rows[0..4]) {
+        assert_eq!(p.wait().unwrap(), solo_forward(&dense_oracle, row));
+    }
+    for (p, row) in wave_b.into_iter().zip(&rows[4..8]) {
+        assert_eq!(p.wait().unwrap(), solo_forward(&sk_oracle, row));
+    }
+    for (p, row) in wave_c.into_iter().zip(&rows[8..12]) {
+        assert_eq!(p.wait().unwrap(), solo_forward(&dense_oracle, row));
+    }
+    let tm = server.metrics().tier("t").unwrap();
+    assert_eq!(tm.swaps(), 2, "exact swap accounting across the drain");
+    assert_eq!(tm.requests(), 12);
+    assert_eq!(tm.errors(), 0);
+    // The drained server publishes nothing further.
+    assert_eq!(
+        server.swap_tier_model("t", mlp(70, d, k)),
+        Err(ServeError::ShuttingDown)
+    );
+}
+
+#[test]
+fn adapter_swap_serves_the_standalone_twin_bitwise() {
+    let (d, k) = (10usize, 5usize);
+    let mut server = ModelServer::new();
+    server
+        .register_tier(
+            "t",
+            mlp(60, d, k),
+            d,
+            TierConfig {
+                max_batch: 4,
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    // A generous target makes the down-move deterministic: shadow errors
+    // are clamped to ≤ 1, so any rank-4 candidate clears the ceiling.
+    let mut cfg = AdaptConfig::new(LayerSelector::by_type("Linear"), &[4]);
+    cfg.target_err = 2.0;
+    cfg.sketch_seed = 23;
+    let mut adapter = RankAdapter::new(&server, "t", mlp(60, d, k), cfg).unwrap();
+    for row in &request_rows(8, d, 5500) {
+        adapter.observe(row).unwrap();
+    }
+    match adapter.step(&server).unwrap() {
+        AdaptDecision::Swapped {
+            from_rank: 0,
+            to_rank: 4,
+            version: 1,
+            ..
+        } => {}
+        other => panic!("expected the down-swap to rank 4, got {other:?}"),
+    }
+    assert_eq!(adapter.rank(), 4);
+    // The served model is now bitwise the standalone twin: same dense
+    // seed, same plan seed, same rank, built entirely outside the server.
+    let twin = sk4(60, d, k);
+    let h = server.handle();
+    for row in &request_rows(6, d, 6600) {
+        assert_eq!(
+            h.infer("t", row).unwrap(),
+            solo_forward(&twin, row),
+            "adapter-published model must equal its standalone twin bit for bit"
+        );
+    }
+    // The gauges reach the snapshot: rank, swap count, measured quality.
+    let snap = server.metrics_snapshot();
+    let ts = snap.tiers.iter().find(|t| t.tier == "t").unwrap();
+    assert_eq!(ts.swaps, 1);
+    assert_eq!(ts.rank, 4);
+    assert!(
+        ts.measured_quality.is_some(),
+        "adapter measurement must surface in the snapshot"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn quality_sensor_tracks_what_the_tier_actually_serves() {
+    let (d, k) = (10usize, 4usize);
+    let mut server = ModelServer::new();
+    server
+        .register_tier("t", mlp(50, d, k), d, TierConfig::default())
+        .unwrap();
+    let mut cfg = AdaptConfig::new(LayerSelector::by_type("Linear"), &[4]);
+    cfg.sensor_epochs = 1; // window = the current round only, exact reads
+    let mut adapter = RankAdapter::new(&server, "t", mlp(50, d, k), cfg).unwrap();
+    for row in &request_rows(6, d, 3300) {
+        adapter.observe(row).unwrap();
+    }
+    // Serving exactly the reference: zero error, quality 1.
+    let r = adapter.measure().unwrap().unwrap();
+    assert_eq!((r.mean_err, r.quality), (0.0, 1.0));
+    assert_eq!(
+        server.metrics().tier("t").unwrap().measured_quality(),
+        Some(1.0)
+    );
+    // Serving garbage: clamped error 1, quality 0 — the sensor follows
+    // the *served* version, not the adapter's own bookkeeping.
+    server.swap_tier_model("t", garbage(d, k)).unwrap();
+    let r = adapter.measure().unwrap().unwrap();
+    assert_eq!((r.mean_err, r.quality), (1.0, 0.0));
+    assert_eq!(
+        server.metrics().tier("t").unwrap().measured_quality(),
+        Some(0.0)
+    );
+    // And back: a recovery swap restores the perfect reading.
+    server.swap_tier_model("t", mlp(50, d, k)).unwrap();
+    let r = adapter.measure().unwrap().unwrap();
+    assert_eq!((r.mean_err, r.quality), (0.0, 1.0));
+    server.shutdown();
+}
+
+#[test]
+fn measured_quality_reorders_the_cascade_and_floors_requests() {
+    // The acceptance scenario: a tier whose static ladder label claims
+    // near-dense quality actually serves junk. Once the adapter
+    // measures it, the cascade must (a) re-rank the ladder by the
+    // evidence and (b) stop routing floored requests to it.
+    let (d, k) = (10usize, 4usize);
+    let mut server = ModelServer::new();
+    server
+        .register_tier(
+            "gold",
+            mlp(80, d, k),
+            d,
+            TierConfig {
+                max_batch: 4,
+                workers: 2,
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    server
+        .register_tier(
+            "fast",
+            garbage(d, k),
+            d,
+            TierConfig {
+                max_batch: 4,
+                workers: 2,
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    // Mislabeled on purpose: "fast" claims 0.95, above "gold"'s 0.9.
+    let cascade = Cascade::new(&server, &[("fast", 0.95), ("gold", 0.9)]).unwrap();
+    let slo = Slo::new(Duration::from_secs(5)).with_min_quality(0.8);
+    let row = request_rows(1, d, 1200).pop().unwrap();
+    // Before any measurement the static label wins: floored requests
+    // land on the mislabeled rung.
+    let routed = cascade.submit(&row, &slo).unwrap();
+    assert_eq!(routed.tier, "fast");
+    assert_eq!(routed.quality, 0.95);
+    routed.wait().unwrap();
+    // Measure what "fast" actually serves (reference = the real dense
+    // model it pretends to approximate): clamped error 1, quality 0.
+    let mut adapter = RankAdapter::new(
+        &server,
+        "fast",
+        mlp(80, d, k),
+        AdaptConfig::new(LayerSelector::by_type("Linear"), &[2]),
+    )
+    .unwrap();
+    for r in &request_rows(6, d, 1300) {
+        adapter.observe(r).unwrap();
+    }
+    assert_eq!(adapter.measure().unwrap().unwrap().quality, 0.0);
+    // (a) The ladder re-ranks by measured evidence.
+    let q = cascade.qualities();
+    assert_eq!(q[0], ("gold".to_string(), 0.9));
+    assert_eq!(q[1], ("fast".to_string(), 0.0));
+    // (b) Floored requests stop reaching the demoted rung entirely.
+    for _ in 0..6 {
+        let routed = cascade.submit(&row, &slo).unwrap();
+        assert_eq!(routed.tier, "gold", "measured 0.0 < floor 0.8 must exclude fast");
+        routed.wait().unwrap();
+    }
+    let metrics = server.metrics();
+    assert_eq!(
+        metrics.tier("fast").unwrap().requests(),
+        1,
+        "only the pre-measurement request ever reached the junk tier"
+    );
+    assert_eq!(metrics.tier("gold").unwrap().requests(), 6);
+    // A ladder with no rung at the floor is typed-infeasible, not
+    // silently served below quality.
+    let only_fast = Cascade::new(&server, &[("fast", 0.95)]).unwrap();
+    assert!(matches!(
+        only_fast.submit(&row, &slo),
+        Err(ServeError::SloInfeasible { .. })
+    ));
+    server.shutdown();
+}
+
+#[test]
+fn swap_rejections_are_typed_and_change_nothing() {
+    let (d, k) = (10usize, 5usize);
+    let mut server = ModelServer::new();
+    server
+        .register_tier("t", mlp(40, d, k), d, TierConfig::default())
+        .unwrap();
+    {
+        use panther::nn::{AttnWeights, MultiHeadAttention};
+        use panther::serve::SeqTierConfig;
+        let mut rng = Philox::seeded(41);
+        let mut m = Model::new();
+        m.add(
+            "attn",
+            MultiHeadAttention::new(AttnWeights::random(8, 2, &mut rng)),
+        )
+        .unwrap();
+        server
+            .register_seq_tier("seq", m, 8, SeqTierConfig::default())
+            .unwrap();
+    }
+    // Wrong output width: rejected before any publish.
+    let err = server.swap_tier_model("t", mlp(40, d, k + 1)).unwrap_err();
+    assert!(matches!(err, ServeError::BadInput(_)), "{err}");
+    // Sequence tiers don't hot-swap.
+    let err = server
+        .swap_tier_model("seq", mlp(40, 8, 8))
+        .unwrap_err();
+    assert!(matches!(err, ServeError::BadInput(_)), "{err}");
+    // Unknown tier routes the usual typed error.
+    assert!(matches!(
+        server.swap_tier_model("ghost", mlp(40, d, k)),
+        Err(ServeError::UnknownTier { .. })
+    ));
+    // Nothing was published and the tier still serves the original.
+    let tm = server.metrics().tier("t").unwrap();
+    assert_eq!(tm.swaps(), 0);
+    let oracle = mlp(40, d, k);
+    let row = request_rows(1, d, 2200).pop().unwrap();
+    assert_eq!(
+        server.handle().infer("t", &row).unwrap(),
+        solo_forward(&oracle, &row)
+    );
+    server.shutdown();
+}

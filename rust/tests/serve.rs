@@ -329,6 +329,91 @@ fn worker_panic_is_contained_and_tier_keeps_serving() {
 }
 
 #[test]
+fn panicking_model_leaves_server_serving_and_shutdown_still_drains() {
+    // The multi-worker escalation of the containment test above: a model
+    // that panics on a poisoned input, served by several workers. One
+    // panicking batch must (a) answer its own caller with a typed Exec
+    // error, (b) leave every worker serving the remaining traffic, and
+    // (c) not poison the drain — a shutdown issued with requests still
+    // queued behind the panic answers all of them.
+    struct Trap;
+    impl panther::nn::Module for Trap {
+        fn type_name(&self) -> &'static str {
+            "Trap"
+        }
+        fn forward(&self, x: &Mat, _ctx: &ForwardCtx) -> panther::Result<Mat> {
+            if x.data().iter().any(|&v| v == 666.0) {
+                panic!("trap sprung");
+            }
+            Ok(x.clone())
+        }
+        fn params(&self) -> Vec<(String, panther::nn::ParamRef<'_>)> {
+            Vec::new()
+        }
+        fn params_mut(&mut self) -> Vec<(String, panther::nn::ParamMut<'_>)> {
+            Vec::new()
+        }
+        fn boxed_clone(&self) -> Box<dyn panther::nn::Module> {
+            Box::new(Trap)
+        }
+    }
+    let mut m = Model::new();
+    m.add("trap", Trap).unwrap();
+    let mut server = ModelServer::new();
+    server
+        .register_tier(
+            "t",
+            m,
+            4,
+            TierConfig {
+                max_batch: 1,
+                max_wait: Duration::from_micros(100),
+                queue_cap: 128,
+                workers: 3,
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    // Spring the trap on every worker at least once (3 workers, 6 bombs
+    // racing across them), with healthy traffic interleaved.
+    let bombs: Vec<_> = (0..6)
+        .map(|_| {
+            let h = server.handle();
+            std::thread::spawn(move || h.infer("t", &[666.0, 0.0, 0.0, 0.0]).unwrap_err())
+        })
+        .collect();
+    let healthy: Vec<_> = (0..12)
+        .map(|i| {
+            let h = server.handle();
+            std::thread::spawn(move || h.infer("t", &[i as f32, 1.0, 2.0, 3.0]).unwrap())
+        })
+        .collect();
+    for b in bombs {
+        let err = b.join().unwrap();
+        assert!(matches!(err, ServeError::Exec(_)), "{err}");
+    }
+    for (i, t) in healthy.into_iter().enumerate() {
+        assert_eq!(t.join().unwrap(), vec![i as f32, 1.0, 2.0, 3.0]);
+    }
+    // Queue a final wave (healthy rows behind one more bomb) and shut
+    // down immediately: the drain must answer every single one.
+    let h = server.handle();
+    let last_bomb = h.submit("t", &[666.0, 0.0, 0.0, 0.0]).unwrap();
+    let queued: Vec<_> = (0..8)
+        .map(|i| (i, h.submit("t", &[i as f32, 5.0, 6.0, 7.0]).unwrap()))
+        .collect();
+    server.shutdown();
+    assert!(matches!(last_bomb.wait(), Err(ServeError::Exec(_))));
+    for (i, p) in queued {
+        assert_eq!(p.wait().unwrap(), vec![i as f32, 5.0, 6.0, 7.0]);
+    }
+    let tm = server.metrics().tier("t").unwrap();
+    assert_eq!(tm.requests(), 6 + 12 + 1 + 8);
+    assert_eq!(tm.errors(), 7, "each bomb errored exactly once");
+    assert_eq!(tm.queue_depth(), 0, "nothing left behind after the drain");
+}
+
+#[test]
 fn row_coupled_models_are_rejected_at_registration() {
     use panther::nn::{AttnWeights, MultiHeadAttention};
     let mut rng = Philox::seeded(47);
