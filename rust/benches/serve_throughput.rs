@@ -686,6 +686,67 @@ fn main() {
     server.metrics_snapshot().report_into(&mut report);
     server.shutdown();
 
+    // --- chaos: 1 % worker kills under closed-loop load ---------------------
+    // Isolated server (the sections above assert zero errors on their own
+    // tiers). "steady" is the fault-free control; "chaos" serves the same
+    // model under a seeded FaultPlan that kills the executing worker on
+    // ~1 % of batch ticks. A kill re-queues its batch before the panic and
+    // supervision respawns the worker, so the closed loop must still see
+    // zero errors — the faults cost throughput and tail latency only, and
+    // the respawn count lands in the report next to them.
+    {
+        use panther::serve::FaultPlan;
+        let mut server = ModelServer::new();
+        let chaos_cfg = |faults| TierConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 1024,
+            workers: 2,
+            faults,
+            ..TierConfig::default()
+        };
+        server
+            .register_tier("steady", dense_model(1), D_IN, chaos_cfg(None))
+            .expect("register steady");
+        let plan = Arc::new(FaultPlan::seeded(13).kill_rate(0.01));
+        server
+            .register_tier("chaos", dense_model(1), D_IN, chaos_cfg(Some(Arc::clone(&plan))))
+            .expect("register chaos");
+        let mut table = Table::new(&["tier", "req/s", "p50", "p99", "restarts"]);
+        for tier in ["steady", "chaos"] {
+            let (wall, n) = hammer(&server, tier, clients, per_client);
+            let tm = server.metrics().tier(tier).unwrap();
+            assert_eq!(tm.errors(), 0, "{tier}: kills must stay invisible to clients");
+            let rps = n as f64 / wall.as_secs_f64();
+            table.row(&[
+                tier.to_string(),
+                format!("{rps:.0}"),
+                panther::util::human_duration(tm.latency_p50()),
+                panther::util::human_duration(tm.latency_p99()),
+                tm.worker_restarts().to_string(),
+            ]);
+            report.entry_with(
+                "chaos",
+                &format!("tier={tier} clients={clients}"),
+                wall.as_secs_f64() * 1e3,
+                &[
+                    ("rps", rps),
+                    ("p99_us", tm.latency_p99().as_secs_f64() * 1e6),
+                    ("errors", tm.errors() as f64),
+                    ("worker_restarts", tm.worker_restarts() as f64),
+                    ("poisoned", tm.poisoned() as f64),
+                    ("nonfinite_rows", tm.nonfinite_rows() as f64),
+                ],
+            );
+        }
+        println!(
+            "(chaos: {} worker kills absorbed, 0 client-visible errors)",
+            server.metrics().tier("chaos").unwrap().worker_restarts()
+        );
+        println!("{}", table.render());
+        server.shutdown();
+    }
+
     match report.write() {
         Ok(path) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),

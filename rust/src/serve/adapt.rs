@@ -43,13 +43,15 @@
 use super::batcher::ModelSlot;
 use super::metrics::TierMetrics;
 use super::router::{probe_model, Tier};
-use super::{ModelServer, ServeError};
+use super::{ModelServer, ServeError, SwapHandle};
 use crate::nn::{ForwardCtx, LayerSelector, Model, SketchPlan};
 use crate::tuner::{Direction, GridSampler, MedianPruner, ParamValue, SearchSpace, Study, Trial};
+use crate::util::lock_ignore_poison;
 use crate::util::stats::WindowedHist;
 use std::collections::VecDeque;
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Policy knobs for one tier's rank adapter. Fields are public — set
 /// what the defaults from [`AdaptConfig::new`] don't cover.
@@ -457,7 +459,7 @@ impl RankAdapter {
     /// rank that is good enough wins.
     fn try_swap(
         &mut self,
-        server: &ModelServer,
+        swap: &SwapHandle,
         candidates: &[usize],
         ceiling: f64,
         live_err: f64,
@@ -492,7 +494,7 @@ impl RankAdapter {
             let feasible = err <= ceiling;
             study.tell(&mut trial, err, feasible);
             if feasible {
-                let version = server.swap_tier_model(&self.tier, candidate)?;
+                let version = swap.swap_tier_model(&self.tier, candidate)?;
                 let from_rank = self.rank;
                 self.rank = rank;
                 self.metrics.set_rank(rank);
@@ -518,10 +520,18 @@ impl RankAdapter {
 
     /// One controller round: measure, decide, and (maybe) swap — the
     /// deterministic decision rule in the module docs. Call it
-    /// periodically from a control loop; it is cheap while the tier
-    /// holds (one shadow replay) and does one extra replay per evaluated
-    /// candidate when it moves.
+    /// periodically from a control loop (or let an [`AdaptDaemon`] call
+    /// it on a cadence); it is cheap while the tier holds (one shadow
+    /// replay) and does one extra replay per evaluated candidate when it
+    /// moves.
     pub fn step(&mut self, server: &ModelServer) -> Result<AdaptDecision, ServeError> {
+        self.step_with(&server.swap_handle())
+    }
+
+    /// [`RankAdapter::step`] against a [`SwapHandle`] instead of the
+    /// server itself — what a background thread holds, since the handle
+    /// is `'static` and borrow-free.
+    pub fn step_with(&mut self, swap: &SwapHandle) -> Result<AdaptDecision, ServeError> {
         self.rounds += 1;
         let Some(reading) = self.measure()? else {
             return Ok(AdaptDecision::Hold {
@@ -546,7 +556,7 @@ impl RankAdapter {
                 });
             }
             let candidates = positions[cur + 1..].to_vec();
-            self.try_swap(server, &candidates, self.cfg.target_err, err)
+            self.try_swap(swap, &candidates, self.cfg.target_err, err)
         } else if err <= self.cfg.target_err - self.margin() {
             // Comfortably accurate: probe exactly one rung down, and
             // only adopt it if it also clears the margin (hysteresis —
@@ -558,13 +568,126 @@ impl RankAdapter {
                 });
             }
             let candidates = [positions[cur - 1]];
-            self.try_swap(server, &candidates, self.cfg.target_err - self.margin(), err)
+            self.try_swap(swap, &candidates, self.cfg.target_err - self.margin(), err)
         } else {
             Ok(AdaptDecision::Hold {
                 reason: HoldReason::WithinBand,
                 live_err: Some(err),
             })
         }
+    }
+}
+
+/// Background cadence thread driving a [`RankAdapter`]: calls
+/// [`RankAdapter::step_with`] every `interval` until shut down, so the
+/// adapter no longer needs a caller-owned control loop. The daemon owns
+/// the adapter behind a mutex and forwards [`AdaptDaemon::observe`] into
+/// it, so the shadow stream keeps filling while the controller runs on
+/// its own thread.
+///
+/// Failure policy: a step that errors (e.g. a swap racing a shutdown) is
+/// *counted* ([`AdaptDaemon::swap_errors`]) and the cadence continues —
+/// a transient swap failure must not kill the control loop. Shutdown is
+/// graceful and prompt (the interval sleep is sliced so even long
+/// cadences stop within a few milliseconds) and runs on drop too.
+pub struct AdaptDaemon {
+    adapter: Arc<Mutex<RankAdapter>>,
+    stop: Arc<AtomicBool>,
+    steps: Arc<AtomicU64>,
+    swap_errors: Arc<AtomicU64>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl AdaptDaemon {
+    /// Spawn the cadence thread. The daemon holds a [`SwapHandle`], not
+    /// the server, so the server stays free for other threads; after
+    /// [`ModelServer::shutdown`] the steps keep ticking but swaps return
+    /// [`ServeError::ShuttingDown`] (counted, not fatal) until the
+    /// daemon itself is shut down.
+    pub fn spawn(
+        server: &ModelServer,
+        adapter: RankAdapter,
+        interval: Duration,
+    ) -> Result<Self, ServeError> {
+        let swap = server.swap_handle();
+        let name = format!("panther-adapt-{}", adapter.tier());
+        let adapter = Arc::new(Mutex::new(adapter));
+        let stop = Arc::new(AtomicBool::new(false));
+        let steps = Arc::new(AtomicU64::new(0));
+        let swap_errors = Arc::new(AtomicU64::new(0));
+        let (a, s, st, se) = (
+            Arc::clone(&adapter),
+            Arc::clone(&stop),
+            Arc::clone(&steps),
+            Arc::clone(&swap_errors),
+        );
+        let handle = std::thread::Builder::new()
+            .name(name)
+            .spawn(move || {
+                while !s.load(Ordering::SeqCst) {
+                    // Sliced sleep: a multi-second cadence still reacts
+                    // to shutdown within one slice.
+                    let wake = Instant::now() + interval;
+                    while Instant::now() < wake {
+                        if s.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        std::thread::sleep(Duration::from_millis(2).min(interval));
+                    }
+                    if lock_ignore_poison(&a).step_with(&swap).is_err() {
+                        se.fetch_add(1, Ordering::Relaxed);
+                    }
+                    st.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+            .map_err(|e| ServeError::Spawn(e.to_string()))?;
+        Ok(AdaptDaemon {
+            adapter,
+            stop,
+            steps,
+            swap_errors,
+            handle: Some(handle),
+        })
+    }
+
+    /// Feed one admitted row into the adapter's shadow ring (see
+    /// [`RankAdapter::observe`]).
+    pub fn observe(&self, row: &[f32]) -> Result<(), ServeError> {
+        lock_ignore_poison(&self.adapter).observe(row)
+    }
+
+    /// The adapter's current rank.
+    pub fn rank(&self) -> usize {
+        lock_ignore_poison(&self.adapter).rank()
+    }
+
+    /// Controller rounds completed so far.
+    pub fn steps(&self) -> u64 {
+        self.steps.load(Ordering::Relaxed)
+    }
+
+    /// Steps that returned an error (swap refused, tier gone, server
+    /// draining) — counted and survived, per the failure policy.
+    pub fn swap_errors(&self) -> u64 {
+        self.swap_errors.load(Ordering::Relaxed)
+    }
+
+    /// Stop the cadence and join the thread. Also runs on drop.
+    pub fn shutdown(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for AdaptDaemon {
+    fn drop(&mut self) {
+        self.halt();
     }
 }
 
@@ -823,5 +946,57 @@ mod tests {
         assert_eq!(a.rank(), 0);
         assert_eq!(server.metrics().tier("t").unwrap().swaps(), 0);
         server.shutdown();
+    }
+
+    #[test]
+    fn daemon_walks_the_ladder_on_its_own_cadence() {
+        let mut server = ModelServer::new();
+        server
+            .register_tier("t", exact_ref(0.5), 8, TierConfig::default())
+            .unwrap();
+        let a = RankAdapter::new(&server, "t", exact_ref(0.5), cfg(&[2, 4])).unwrap();
+        let daemon = AdaptDaemon::spawn(&server, a, Duration::from_millis(2)).unwrap();
+        for i in 0..4 {
+            daemon.observe(&[i as f32 + 1.0; 8]).unwrap();
+        }
+        // Zero measured error walks the tier down rung by rung with no
+        // caller-driven stepping; wait (bounded) for the bottom rung.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while daemon.rank() != 2 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(daemon.rank(), 2, "daemon reached the cheapest rung");
+        assert!(daemon.steps() >= 2, "at least the two down-swap rounds ran");
+        assert_eq!(daemon.swap_errors(), 0, "happy path counts no errors");
+        let tm = server.metrics().tier("t").unwrap();
+        assert_eq!((tm.rank(), tm.swaps()), (2, 2));
+        // Graceful shutdown: the observe/rank surface stays usable right
+        // up to the join, and dropping after shutdown is a no-op.
+        daemon.shutdown();
+        server.shutdown();
+    }
+
+    #[test]
+    fn daemon_counts_swap_errors_against_a_draining_server() {
+        let mut server = ModelServer::new();
+        server
+            .register_tier("t", exact_ref(0.5), 8, TierConfig::default())
+            .unwrap();
+        let a = RankAdapter::new(&server, "t", exact_ref(0.5), cfg(&[2, 4])).unwrap();
+        let daemon = AdaptDaemon::spawn(&server, a, Duration::from_millis(2)).unwrap();
+        for i in 0..4 {
+            daemon.observe(&[i as f32 + 1.0; 8]).unwrap();
+        }
+        // Drain the server out from under the daemon: its next down-swap
+        // attempt gets ShuttingDown, which the cadence must survive and
+        // count rather than die on.
+        server.shutdown();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while daemon.swap_errors() == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(daemon.swap_errors() >= 1, "swap against a drained server is counted");
+        assert_eq!(daemon.rank(), 0, "no swap landed");
+        daemon.shutdown();
     }
 }

@@ -18,6 +18,7 @@
 //! leak into live rows (see [`super::router`]), which is what rules out
 //! row-coupled layers like attention at caps > 1.
 
+use super::fault::FaultPlan;
 use super::metrics::TierMetrics;
 use super::transform::OutputTransform;
 use super::ServeError;
@@ -286,6 +287,39 @@ impl<R: BatchItem> TierQueue<R> {
         Some(batch)
     }
 
+    /// Push a batch back to the *front* of the queue in order, bypassing
+    /// the capacity bound (the requests already held seats when they were
+    /// admitted). Used by an injected worker kill: the dying worker
+    /// re-queues its batch so no request is lost — transiently exceeding
+    /// capacity beats deadlocking a single-worker tier on its own full
+    /// queue.
+    pub(crate) fn requeue_front(&self, batch: Vec<R>) {
+        let n = batch.len();
+        if n == 0 {
+            return;
+        }
+        let mut g = self.locked();
+        for r in batch.into_iter().rev() {
+            g.deque.push_front(r);
+        }
+        self.metrics.depth_add(n);
+        drop(g);
+        self.not_empty.notify_all();
+    }
+
+    /// Whether the queue has been closed (the supervisor's exit check).
+    pub(crate) fn is_closed(&self) -> bool {
+        self.locked().closed
+    }
+
+    /// Closed *and* empty: nothing left for a worker to do. The
+    /// supervisor stops respawning at this point — a panic during the
+    /// final drain is still respawned so re-queued requests get served.
+    pub(crate) fn is_drained(&self) -> bool {
+        let g = self.locked();
+        g.closed && g.deque.is_empty()
+    }
+
     /// Stop admissions and wake everyone: blocked submitters error out,
     /// idle workers drain and exit.
     pub(crate) fn close(&self) {
@@ -301,7 +335,22 @@ impl<R: BatchItem> TierQueue<R> {
     }
 }
 
-/// The per-worker batch-execution loop. Each worker owns a warm
+/// How one padded forward attempt ended. The worker's control flow
+/// branches on *how* a batch failed because only panics are eligible for
+/// quarantine bisection — a typed model error re-runs identically, so
+/// retrying it would just double the work.
+enum ExecOutcome {
+    /// Forward succeeded with the expected row count.
+    Done(Mat),
+    /// Typed failure (model error or row-count mismatch): the batch fails
+    /// with [`ServeError::Exec`], exactly as before quarantine existed.
+    Failed(String),
+    /// The forward panicked (payload rendered to a string); the warm
+    /// context has already been replaced by the time this is returned.
+    Panicked(String),
+}
+
+/// The per-worker batch-execution spec + loop. Each worker owns a warm
 /// [`ForwardCtx`] (its [`crate::nn::Workspace`] arena makes steady-state
 /// inference forwards allocation-free) and one reusable `max_batch × d_in`
 /// input matrix; the GEMM work inside `Model::forward` lands on the
@@ -316,83 +365,258 @@ impl<R: BatchItem> TierQueue<R> {
 /// containment policy as [`crate::util::threadpool::ThreadPool`]): the
 /// batch's callers get a typed [`ServeError::Exec`] instead of a hang,
 /// the warm context is discarded (its scratch state may be mid-borrow),
-/// and the worker keeps serving.
+/// and the worker keeps serving. With `quarantine_strikes > 0` the panic
+/// instead enters bisection quarantine (see [`RowWorker::quarantine`]):
+/// innocent requests are replayed and only the culprit is answered with
+/// [`ServeError::PoisonedInput`].
 ///
 /// Workers do not own a model: each batch executes on the
 /// [`ModelVersion`] its requests captured at admission (the queue never
 /// mixes versions in one batch), which is what makes a hot-swap
 /// invisible to in-flight work — the old `Arc` lives exactly as long as
 /// requests admitted against it.
-pub(crate) fn worker_loop(
-    queue: Arc<TierQueue<ServeRequest>>,
-    max_batch: usize,
-    max_wait: Duration,
-    in_dim: usize,
-    transform: OutputTransform,
-    metrics: Arc<TierMetrics>,
-) {
-    let mut ctx = ForwardCtx::new().batch_hint(max_batch);
-    let mut x = Mat::zeros(max_batch, in_dim);
-    while let Some(batch) = queue.next_batch(max_batch, max_wait) {
+///
+/// The spec is `Clone` so the supervisor can respawn a crashed worker
+/// with the identical setup (same warm-context construction, same
+/// queue/metrics handles).
+#[derive(Clone)]
+pub(crate) struct RowWorker {
+    pub(crate) queue: Arc<TierQueue<ServeRequest>>,
+    pub(crate) max_batch: usize,
+    pub(crate) max_wait: Duration,
+    pub(crate) in_dim: usize,
+    pub(crate) transform: OutputTransform,
+    pub(crate) metrics: Arc<TierMetrics>,
+    /// Seeded fault plan (chaos testing); `None` — the production default
+    /// — costs one branch per batch.
+    pub(crate) faults: Option<Arc<FaultPlan>>,
+    /// Panic strikes before a lone request is declared poisoned; `0`
+    /// disables quarantine (panic ⇒ whole batch fails typed, as always).
+    pub(crate) quarantine_strikes: u32,
+    /// Scan outputs for non-finite rows and answer those requests with
+    /// [`ServeError::NonFiniteOutput`] instead of shipping garbage.
+    pub(crate) numeric_guard: bool,
+}
+
+impl RowWorker {
+    pub(crate) fn run(&self) {
+        let mut ctx = ForwardCtx::new().batch_hint(self.max_batch);
+        let mut x = Mat::zeros(self.max_batch, self.in_dim);
+        while let Some(batch) = self.queue.next_batch(self.max_batch, self.max_wait) {
+            // One fault tick per *shipped* batch; quarantine re-executions
+            // below do not consult the plan, so pinned ticks map 1:1 to
+            // shipped batches and chaos assertions stay exact.
+            let fb = self.faults.as_ref().map(|f| f.begin_batch(batch.len()));
+            if let Some(f) = &fb {
+                if let Some(d) = f.exec_delay {
+                    std::thread::sleep(d);
+                }
+                if f.kill_before_forward {
+                    // Re-queue first so no request is lost, then die
+                    // outside the forward catch_unwind: this takes the
+                    // whole worker thread down and is what the supervisor
+                    // respawn path recovers from.
+                    self.queue.requeue_front(batch);
+                    panic!("fault injection: worker killed before forward");
+                }
+            }
+            let panic_mid = fb.as_ref().is_some_and(|f| f.panic_mid_batch);
+            let poison_row = fb.as_ref().and_then(|f| f.poison_row);
+            match self.exec(&batch, &mut ctx, &mut x, panic_mid) {
+                ExecOutcome::Done(mut y) => self.reply_success(batch, &mut y, poison_row),
+                ExecOutcome::Failed(msg) => fail_batch(batch, &self.metrics, self.max_batch, msg),
+                ExecOutcome::Panicked(cause) => {
+                    if self.quarantine_strikes > 0 {
+                        self.quarantine(batch, &mut ctx, &mut x);
+                    } else {
+                        let msg = format!("forward panicked: {cause}");
+                        fail_batch(batch, &self.metrics, self.max_batch, msg);
+                    }
+                }
+            }
+        }
+    }
+
+    /// One padded forward over `batch` (live rows in `0..len`, tail
+    /// zeroed — a previous batch's rows must not linger). Records
+    /// `record_exec` for every attempt, success or not: failed batches
+    /// held the worker just as long, and the SLO admission estimator
+    /// divides queue depth by this sensor. On panic the warm context is
+    /// replaced (its scratch state may be mid-borrow) before returning.
+    fn exec(
+        &self,
+        batch: &[ServeRequest],
+        ctx: &mut ForwardCtx,
+        x: &mut Mat,
+        panic_mid: bool,
+    ) -> ExecOutcome {
         let used = batch.len();
         let model = Arc::clone(&batch[0].model);
         let model = &model.model;
-        // Live rows in 0..used, padding rows zeroed (previous batch's rows
-        // past `used` must not linger — zero the whole tail).
         for (i, req) in batch.iter().enumerate() {
             x.row_mut(i).copy_from_slice(&req.row);
         }
-        for i in used..max_batch {
+        for i in used..self.max_batch {
             x.row_mut(i).fill(0.0);
         }
         let t_exec = Instant::now();
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            model.forward(&x, &ctx)
+            if panic_mid {
+                panic!("fault injection: panic mid-batch");
+            }
+            model.forward(&*x, &*ctx)
         }));
-        // Per-batch service time (queue wait excluded) — the sensor the
-        // SLO admission estimator divides queue depth by. Failed batches
-        // count too: they held the worker just as long.
-        metrics.record_exec(t_exec.elapsed());
-        // All metrics for a batch are recorded BEFORE any reply is sent:
-        // a client that unblocks from `infer` must already see its own
-        // request accounted (tests read counters right after replies).
+        self.metrics.record_exec(t_exec.elapsed());
         match result {
             // The probe pinned rows-out == rows-in at registration; check
             // it in release too — row routing must never misattribute.
-            Ok(Ok(y)) if y.rows() == max_batch => {
-                for req in &batch {
-                    metrics.record_latency(req.enqueued.elapsed());
-                }
-                metrics.record_batch(used, max_batch);
-                // Raw mode skips the transform allocation entirely — the
-                // reply rows are views into the batch output.
-                let decoded = match transform {
-                    OutputTransform::Raw => None,
-                    t => Some(t.apply(&y)),
-                };
-                let rows = decoded.as_ref().unwrap_or(&y);
-                for (i, req) in batch.into_iter().enumerate() {
-                    let _ = req.reply.send(Ok(rows.row(i).to_vec()));
-                }
-            }
-            Ok(Ok(y)) => {
-                let msg = format!(
-                    "model mapped {max_batch} rows to {} — cannot route rows",
-                    y.rows()
-                );
-                fail_batch(batch, &metrics, max_batch, msg);
-            }
-            Ok(Err(e)) => fail_batch(batch, &metrics, max_batch, format!("{e:#}")),
+            Ok(Ok(y)) if y.rows() == self.max_batch => ExecOutcome::Done(y),
+            Ok(Ok(y)) => ExecOutcome::Failed(format!(
+                "model mapped {} rows to {} — cannot route rows",
+                self.max_batch,
+                y.rows()
+            )),
+            Ok(Err(e)) => ExecOutcome::Failed(format!("{e:#}")),
             Err(payload) => {
                 let cause = payload
                     .downcast_ref::<String>()
                     .cloned()
                     .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
                     .unwrap_or_else(|| "<non-string panic>".to_string());
-                // The context may hold wedged RefCell borrows from the
-                // unwound forward — start fresh.
-                ctx = ForwardCtx::new().batch_hint(max_batch);
-                fail_batch(batch, &metrics, max_batch, format!("forward panicked: {cause}"));
+                *ctx = ForwardCtx::new().batch_hint(self.max_batch);
+                ExecOutcome::Panicked(cause)
+            }
+        }
+    }
+
+    /// Retire a successful batch: inject the (test-only) output poison,
+    /// run the numeric guard, record all metrics, then reply. All metrics
+    /// for a batch are recorded BEFORE any reply is sent: a client that
+    /// unblocks from `infer` must already see its own request accounted
+    /// (tests read counters right after replies).
+    fn reply_success(&self, batch: Vec<ServeRequest>, y: &mut Mat, poison_row: Option<usize>) {
+        let used = batch.len();
+        if let Some(r) = poison_row.filter(|&r| r < used) {
+            y.row_mut(r).fill(f32::NAN);
+        }
+        // The guard scans only live rows (padding is the model's business)
+        // and runs before the transform so a softmax cannot launder a NaN
+        // into a uniform-looking distribution.
+        let mut bad = vec![false; used];
+        if self.numeric_guard {
+            let mut n_bad = 0u64;
+            for (i, flag) in bad.iter_mut().enumerate() {
+                if y.row(i).iter().any(|v| !v.is_finite()) {
+                    *flag = true;
+                    n_bad += 1;
+                }
+            }
+            if n_bad > 0 {
+                self.metrics.record_nonfinite_rows(n_bad);
+                self.metrics.record_error(n_bad);
+                // Feed the cascade's quality gauge so routing steers
+                // around a numerically sick tier (ratchets down; only an
+                // explicit probe raises it back).
+                self.metrics.degrade_measured_quality(1.0 - n_bad as f64 / used as f64);
+            }
+        }
+        for req in &batch {
+            self.metrics.record_latency(req.enqueued.elapsed());
+        }
+        self.metrics.record_batch(used, self.max_batch);
+        // Raw mode skips the transform allocation entirely — the reply
+        // rows are views into the batch output.
+        let decoded = match self.transform {
+            OutputTransform::Raw => None,
+            t => Some(t.apply(y)),
+        };
+        let rows = decoded.as_ref().unwrap_or(y);
+        for (i, req) in batch.into_iter().enumerate() {
+            let _ = req.reply.send(if bad[i] {
+                Err(ServeError::NonFiniteOutput)
+            } else {
+                Ok(rows.row(i).to_vec())
+            });
+        }
+    }
+
+    /// Bisection quarantine for a panicked batch: split it in half and
+    /// re-execute each side, recursing into whichever side still panics,
+    /// until culprits are isolated as singletons. A *singleton* whose solo
+    /// execution has panicked `quarantine_strikes` times is answered with
+    /// [`ServeError::PoisonedInput`]; every other request is replayed to a
+    /// normal reply. Padded batching is bitwise-stable across batch
+    /// composition, so replayed sub-batches reproduce the fault-free
+    /// outputs exactly.
+    ///
+    /// Strikes count *solo* panics only — a multi-request batch panic
+    /// cannot be attributed to any one row, so it triggers a split rather
+    /// than a strike. The one exception is a shipped batch that was
+    /// already a singleton: its panic *was* a solo execution, so it
+    /// arrives here with one strike.
+    ///
+    /// Quarantine re-executions never consult the fault plan: injection is
+    /// per shipped batch, which keeps chaos accounting deterministic.
+    fn quarantine(&self, batch: Vec<ServeRequest>, ctx: &mut ForwardCtx, x: &mut Mat) {
+        let mut stack: Vec<(Vec<ServeRequest>, u32)> = Vec::new();
+        if batch.len() == 1 {
+            stack.push((batch, 1));
+        } else {
+            let mut left = batch;
+            let right = left.split_off(left.len() / 2);
+            stack.push((right, 0));
+            stack.push((left, 0));
+        }
+        while let Some((group, strikes)) = stack.pop() {
+            if group.len() == 1 {
+                self.retry_singleton(group, strikes, ctx, x);
+                continue;
+            }
+            match self.exec(&group, ctx, x, false) {
+                ExecOutcome::Done(mut y) => self.reply_success(group, &mut y, None),
+                ExecOutcome::Failed(msg) => fail_batch(group, &self.metrics, self.max_batch, msg),
+                ExecOutcome::Panicked(_) => {
+                    let mut left = group;
+                    let right = left.split_off(left.len() / 2);
+                    stack.push((right, 0));
+                    stack.push((left, 0));
+                }
+            }
+        }
+    }
+
+    /// Solo-execute one quarantined request until it succeeds or accrues
+    /// `quarantine_strikes` solo panics, then answer it with
+    /// [`ServeError::PoisonedInput`] (counted under both `errors` and
+    /// `poisoned`, and terminal-accounted through `record_batch` exactly
+    /// like any other reply).
+    fn retry_singleton(
+        &self,
+        mut group: Vec<ServeRequest>,
+        mut strikes: u32,
+        ctx: &mut ForwardCtx,
+        x: &mut Mat,
+    ) {
+        loop {
+            if strikes >= self.quarantine_strikes {
+                let req = group.pop().expect("singleton group");
+                self.metrics.record_error(1);
+                self.metrics.record_poisoned();
+                self.metrics.record_latency(req.enqueued.elapsed());
+                self.metrics.record_batch(1, self.max_batch);
+                let _ = req.reply.send(Err(ServeError::PoisonedInput));
+                return;
+            }
+            match self.exec(&group, ctx, x, false) {
+                ExecOutcome::Done(mut y) => {
+                    self.reply_success(group, &mut y, None);
+                    return;
+                }
+                ExecOutcome::Failed(msg) => {
+                    fail_batch(group, &self.metrics, self.max_batch, msg);
+                    return;
+                }
+                ExecOutcome::Panicked(_) => strikes += 1,
             }
         }
     }
@@ -421,81 +645,235 @@ fn fail_batch(batch: Vec<ServeRequest>, metrics: &TierMetrics, max_batch: usize,
 /// admission and retirement are per step, so long and short sequences
 /// share the tier without head-of-line blocking beyond one step.
 ///
-/// Panic containment matches [`worker_loop`]: a panicking forward fails
+/// Panic containment matches [`RowWorker`]: a panicking forward fails
 /// only its own step's sequences and the warm context is replaced
 /// (`forward_seq` restores the context's sequence batch even on error,
-/// so the ctx is only discarded on a panic).
-pub(crate) fn seq_worker_loop(
-    model: Arc<Model>,
-    queue: Arc<TierQueue<SeqServeRequest>>,
-    max_tokens: usize,
-    max_wait: Duration,
-    in_dim: usize,
-    transform: OutputTransform,
-    metrics: Arc<TierMetrics>,
-) {
-    let mut ctx = ForwardCtx::new();
-    while let Some(batch) = queue.next_batch(max_tokens, max_wait) {
+/// so the ctx is only discarded on a panic). Fault injection, quarantine
+/// bisection (over whole sequences — the culprit unit here is a
+/// sequence, not a row), and the numeric guard all mirror the row
+/// worker; the spec is `Clone` for the same supervisor-respawn reason.
+#[derive(Clone)]
+pub(crate) struct SeqWorker {
+    pub(crate) model: Arc<Model>,
+    pub(crate) queue: Arc<TierQueue<SeqServeRequest>>,
+    pub(crate) max_tokens: usize,
+    pub(crate) max_wait: Duration,
+    pub(crate) in_dim: usize,
+    pub(crate) transform: OutputTransform,
+    pub(crate) metrics: Arc<TierMetrics>,
+    pub(crate) faults: Option<Arc<FaultPlan>>,
+    pub(crate) quarantine_strikes: u32,
+    pub(crate) numeric_guard: bool,
+}
+
+impl SeqWorker {
+    pub(crate) fn run(&self) {
+        let mut ctx = ForwardCtx::new();
+        while let Some(batch) = self.queue.next_batch(self.max_tokens, self.max_wait) {
+            // The fault tick's `rows` is the packed token count, so the
+            // poison fault lands on a token row, matching what the guard
+            // scans.
+            let fb = self.faults.as_ref().map(|f| {
+                let total: usize = batch.iter().map(|r| r.tokens.rows()).sum();
+                f.begin_batch(total)
+            });
+            if let Some(f) = &fb {
+                if let Some(d) = f.exec_delay {
+                    std::thread::sleep(d);
+                }
+                if f.kill_before_forward {
+                    self.queue.requeue_front(batch);
+                    panic!("fault injection: worker killed before forward");
+                }
+            }
+            let panic_mid = fb.as_ref().is_some_and(|f| f.panic_mid_batch);
+            let poison_row = fb.as_ref().and_then(|f| f.poison_row);
+            match self.exec(&batch, &mut ctx, panic_mid) {
+                ExecOutcome::Done(mut y) => self.reply_success(batch, &mut y, poison_row),
+                ExecOutcome::Failed(msg) => fail_seq_batch(batch, &self.metrics, msg),
+                ExecOutcome::Panicked(cause) => {
+                    if self.quarantine_strikes > 0 {
+                        self.quarantine(batch, &mut ctx);
+                    } else {
+                        let msg = format!("forward panicked: {cause}");
+                        fail_seq_batch(batch, &self.metrics, msg);
+                    }
+                }
+            }
+        }
+    }
+
+    /// One packed masked forward over `batch`. `record_exec` fires for
+    /// every attempted forward (a pack failure never reaches execution
+    /// and records nothing, as before).
+    fn exec(
+        &self,
+        batch: &[SeqServeRequest],
+        ctx: &mut ForwardCtx,
+        panic_mid: bool,
+    ) -> ExecOutcome {
         let lens: Vec<usize> = batch.iter().map(|r| r.tokens.rows()).collect();
         let total: usize = lens.iter().sum();
-        let mut x = Mat::zeros(total, in_dim);
+        let mut x = Mat::zeros(total, self.in_dim);
         let mut off = 0;
-        for req in &batch {
+        for req in batch {
             for i in 0..req.tokens.rows() {
                 x.row_mut(off + i).copy_from_slice(req.tokens.row(i));
             }
             off += req.tokens.rows();
         }
-        let sb = match SeqBatch::packed(lens.clone()) {
+        let sb = match SeqBatch::packed(lens) {
             Ok(sb) => sb,
-            Err(e) => {
-                fail_seq_batch(batch, &metrics, format!("{e:#}"));
-                continue;
-            }
+            Err(e) => return ExecOutcome::Failed(format!("{e:#}")),
         };
         let t_exec = Instant::now();
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            model.forward_seq(&x, &sb, &ctx)
+            if panic_mid {
+                panic!("fault injection: panic mid-batch");
+            }
+            self.model.forward_seq(&x, &sb, &*ctx)
         }));
-        metrics.record_exec(t_exec.elapsed());
+        self.metrics.record_exec(t_exec.elapsed());
         match result {
-            Ok(Ok(y)) if y.rows() == total => {
-                for req in &batch {
-                    metrics.record_latency(req.enqueued.elapsed());
-                }
-                metrics.record_batch(batch.len(), batch.len());
-                metrics.record_tokens(total as u64);
-                let mut off = 0;
-                for (req, &len) in batch.into_iter().zip(&lens) {
-                    let mut slice = Mat::zeros(len, y.cols());
-                    for i in 0..len {
-                        slice.row_mut(i).copy_from_slice(y.row(off + i));
-                    }
-                    off += len;
-                    let out = match transform {
-                        OutputTransform::Raw => slice,
-                        t => t.apply(&slice),
-                    };
-                    let _ = req.reply.send(Ok(out));
-                }
-            }
-            Ok(Ok(y)) => {
-                let msg = format!(
-                    "model mapped {total} packed token rows to {} — cannot \
-                     route sequence slices",
-                    y.rows()
-                );
-                fail_seq_batch(batch, &metrics, msg);
-            }
-            Ok(Err(e)) => fail_seq_batch(batch, &metrics, format!("{e:#}")),
+            Ok(Ok(y)) if y.rows() == total => ExecOutcome::Done(y),
+            Ok(Ok(y)) => ExecOutcome::Failed(format!(
+                "model mapped {total} packed token rows to {} — cannot \
+                 route sequence slices",
+                y.rows()
+            )),
+            Ok(Err(e)) => ExecOutcome::Failed(format!("{e:#}")),
             Err(payload) => {
                 let cause = payload
                     .downcast_ref::<String>()
                     .cloned()
                     .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
                     .unwrap_or_else(|| "<non-string panic>".to_string());
-                ctx = ForwardCtx::new();
-                fail_seq_batch(batch, &metrics, format!("forward panicked: {cause}"));
+                *ctx = ForwardCtx::new();
+                ExecOutcome::Panicked(cause)
+            }
+        }
+    }
+
+    /// Retire a successful step: poison injection, numeric guard (a
+    /// sequence is bad if *any* of its token rows is non-finite —
+    /// `nonfinite_rows` counts token rows, `errors` counts sequences),
+    /// metrics, then per-sequence replies.
+    fn reply_success(&self, batch: Vec<SeqServeRequest>, y: &mut Mat, poison_row: Option<usize>) {
+        let lens: Vec<usize> = batch.iter().map(|r| r.tokens.rows()).collect();
+        let total: usize = lens.iter().sum();
+        if let Some(r) = poison_row.filter(|&r| r < total) {
+            y.row_mut(r).fill(f32::NAN);
+        }
+        let mut bad = vec![false; batch.len()];
+        if self.numeric_guard {
+            let mut bad_rows = 0u64;
+            let mut bad_seqs = 0u64;
+            let mut off = 0;
+            for (s, &len) in lens.iter().enumerate() {
+                let mut seq_bad = false;
+                for i in 0..len {
+                    if y.row(off + i).iter().any(|v| !v.is_finite()) {
+                        seq_bad = true;
+                        bad_rows += 1;
+                    }
+                }
+                off += len;
+                if seq_bad {
+                    bad[s] = true;
+                    bad_seqs += 1;
+                }
+            }
+            if bad_rows > 0 {
+                self.metrics.record_nonfinite_rows(bad_rows);
+                self.metrics.record_error(bad_seqs);
+                self.metrics
+                    .degrade_measured_quality(1.0 - bad_rows as f64 / total.max(1) as f64);
+            }
+        }
+        for req in &batch {
+            self.metrics.record_latency(req.enqueued.elapsed());
+        }
+        self.metrics.record_batch(batch.len(), batch.len());
+        self.metrics.record_tokens(total as u64);
+        let mut off = 0;
+        for (s, (req, &len)) in batch.into_iter().zip(&lens).enumerate() {
+            let start = off;
+            off += len;
+            if bad[s] {
+                let _ = req.reply.send(Err(ServeError::NonFiniteOutput));
+                continue;
+            }
+            let mut slice = Mat::zeros(len, y.cols());
+            for i in 0..len {
+                slice.row_mut(i).copy_from_slice(y.row(start + i));
+            }
+            let out = match self.transform {
+                OutputTransform::Raw => slice,
+                t => t.apply(&slice),
+            };
+            let _ = req.reply.send(Ok(out));
+        }
+    }
+
+    /// [`RowWorker::quarantine`] over whole sequences: bisect the step's
+    /// sequence list, re-execute each side, and strike out lone sequences
+    /// whose solo steps panic `quarantine_strikes` times.
+    fn quarantine(&self, batch: Vec<SeqServeRequest>, ctx: &mut ForwardCtx) {
+        let mut stack: Vec<(Vec<SeqServeRequest>, u32)> = Vec::new();
+        if batch.len() == 1 {
+            stack.push((batch, 1));
+        } else {
+            let mut left = batch;
+            let right = left.split_off(left.len() / 2);
+            stack.push((right, 0));
+            stack.push((left, 0));
+        }
+        while let Some((group, strikes)) = stack.pop() {
+            if group.len() == 1 {
+                self.retry_singleton(group, strikes, ctx);
+                continue;
+            }
+            match self.exec(&group, ctx, false) {
+                ExecOutcome::Done(mut y) => self.reply_success(group, &mut y, None),
+                ExecOutcome::Failed(msg) => fail_seq_batch(group, &self.metrics, msg),
+                ExecOutcome::Panicked(_) => {
+                    let mut left = group;
+                    let right = left.split_off(left.len() / 2);
+                    stack.push((right, 0));
+                    stack.push((left, 0));
+                }
+            }
+        }
+    }
+
+    /// Solo-step one quarantined sequence until success or
+    /// `quarantine_strikes` solo panics ⇒ [`ServeError::PoisonedInput`].
+    fn retry_singleton(
+        &self,
+        mut group: Vec<SeqServeRequest>,
+        mut strikes: u32,
+        ctx: &mut ForwardCtx,
+    ) {
+        loop {
+            if strikes >= self.quarantine_strikes {
+                let req = group.pop().expect("singleton group");
+                self.metrics.record_error(1);
+                self.metrics.record_poisoned();
+                self.metrics.record_latency(req.enqueued.elapsed());
+                self.metrics.record_batch(1, 1);
+                let _ = req.reply.send(Err(ServeError::PoisonedInput));
+                return;
+            }
+            match self.exec(&group, ctx, false) {
+                ExecOutcome::Done(mut y) => {
+                    self.reply_success(group, &mut y, None);
+                    return;
+                }
+                ExecOutcome::Failed(msg) => {
+                    fail_seq_batch(group, &self.metrics, msg);
+                    return;
+                }
+                ExecOutcome::Panicked(_) => strikes += 1,
             }
         }
     }
@@ -555,6 +933,32 @@ mod tests {
             },
             rx,
         )
+    }
+
+    #[test]
+    fn requeue_front_preserves_order_and_bypasses_capacity() {
+        let q = queue(2);
+        let (r1, _rx1) = req(1.0);
+        let (r2, _rx2) = req(2.0);
+        q.try_submit(r1).unwrap();
+        q.try_submit(r2).unwrap();
+        let batch = q.next_batch(2, Duration::from_millis(1)).unwrap();
+        assert_eq!(q.metrics.queue_depth(), 0);
+        // A newcomer takes the freed seats, then the dying worker's batch
+        // goes back in *front* of it, above the capacity bound.
+        let (r3, _rx3) = req(3.0);
+        q.try_submit(r3).unwrap();
+        q.requeue_front(batch);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.metrics.queue_depth(), 3);
+        let replay = q.next_batch(4, Duration::from_millis(1)).unwrap();
+        let order: Vec<f32> = replay.iter().map(|r| r.row[0]).collect();
+        assert_eq!(order, vec![1.0, 2.0, 3.0]);
+        assert!(!q.is_closed());
+        assert!(!q.is_drained());
+        q.close();
+        assert!(q.is_closed());
+        assert!(q.is_drained());
     }
 
     #[test]

@@ -42,6 +42,13 @@ use super::{ModelServer, PendingReply, ServeError, TierInfo};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
+/// How long [`Cascade::submit`] waits before its one retry of the last
+/// remaining rung after a `QueueFull` rejection — one short drain
+/// window (several batch slots at serving-scale exec times) charged to
+/// the caller's wall clock, bounded so a doomed request still fails
+/// fast.
+const LAST_RUNG_BACKOFF: Duration = Duration::from_millis(20);
+
 /// One rung of the quality ladder: a registered row tier plus the
 /// quality score the cascade ranks it by.
 struct Rung {
@@ -189,13 +196,19 @@ impl Cascade {
     /// Live sensor reading for rung `i` — what the estimator sees.
     fn load(&self, i: usize) -> TierLoad {
         let r = &self.rungs[i];
+        // A supervised tier advertises its *live* pool size: while a
+        // crashed worker waits out its respawn backoff the latency
+        // estimator sees the reduced drain rate, not the configured one.
+        // The gauge is zero only for unsupervised tiers — fall back to
+        // the static worker count there.
+        let live = r.metrics.live_workers();
         TierLoad {
             queue_depth: r.metrics.queue_depth(),
             mean_occupancy: r.metrics.mean_occupancy(),
             exec_p50: r.metrics.windowed_exec().p50(),
             max_batch: r.info.max_batch,
             max_wait: r.info.max_wait,
-            workers: r.info.workers,
+            workers: if live > 0 { live } else { r.info.workers },
         }
     }
 
@@ -222,9 +235,11 @@ impl Cascade {
     /// Route one request by its SLO (the policy in [`super::slo`]):
     /// best-quality eligible tier whose prediction meets the deadline;
     /// a full queue falls through to the next rung (the prediction was
-    /// stale — shed anyway rather than reject). Returns the in-flight
-    /// [`Routed`] reply, or [`ServeError::SloInfeasible`] when no
-    /// eligible tier can make the deadline.
+    /// stale — shed anyway rather than reject). When the rejecting rung
+    /// is the *last* one standing, it is retried exactly once after a
+    /// short bounded backoff before the request fails. Returns the
+    /// in-flight [`Routed`] reply, or [`ServeError::SloInfeasible`]
+    /// when no eligible tier can make the deadline.
     pub fn submit(&self, row: &[f32], slo: &Slo) -> Result<Routed, ServeError> {
         self.check_width(row)?;
         // Rank the ladder by *effective* quality for this submit: a tier
@@ -241,11 +256,13 @@ impl Cascade {
         let top = order[0];
         // (original rung index, (quality, predicted)) — rungs that turn
         // out QueueFull are removed before re-running the policy, so the
-        // loop strictly shrinks the candidate set and must terminate.
+        // loop strictly shrinks the candidate set and must terminate
+        // (the one last-rung retry is bounded by the flag below).
         let mut candidates: Vec<(usize, (f32, Duration))> = order
             .iter()
             .map(|&i| (i, (eq[i], predict_latency(&self.load(i)))))
             .collect();
+        let mut last_rung_retried = false;
         loop {
             let ladder: Vec<(f32, Duration)> = candidates.iter().map(|c| c.1).collect();
             match admit(slo, &ladder) {
@@ -285,7 +302,23 @@ impl Cascade {
                             });
                         }
                         Err(ServeError::QueueFull) => {
-                            candidates.remove(index);
+                            // When the rejecting rung is the ONLY rung
+                            // left there is nowhere to shed — the next
+                            // stop is SloInfeasible. Wait out one short
+                            // drain window and retry it once before
+                            // giving up. Counter semantics: every
+                            // `try_submit` attempt ticks the tier's
+                            // `rejected` counter (a granted retry shows
+                            // as rejected == 1 with the request still
+                            // served), and a retry is never a shed —
+                            // shed counts only routing *below* the best
+                            // eligible rung.
+                            if candidates.len() == 1 && !last_rung_retried {
+                                last_rung_retried = true;
+                                std::thread::sleep(LAST_RUNG_BACKOFF);
+                            } else {
+                                candidates.remove(index);
+                            }
                         }
                         Err(e) => return Err(e),
                     }

@@ -1,0 +1,279 @@
+//! Deterministic, seeded fault injection for chaos-testing the serve
+//! stack.
+//!
+//! A [`FaultPlan`] is installed per tier through
+//! [`super::TierConfig::faults`]. Workers call [`FaultPlan::begin_batch`]
+//! exactly once per shipped batch; the returned [`BatchFaults`] says which
+//! faults fire for that batch *tick* (a global 1-based counter across the
+//! tier's workers). When no plan is installed the worker hot path pays a
+//! single `Option` branch and touches none of this module.
+//!
+//! Injection points (all decided purely from the plan's configuration,
+//! its seed, and the tick — so a chaos run is reproducible bit-for-bit):
+//!
+//! - **kill before forward** — the worker re-queues its batch at the front
+//!   of the tier queue and panics *outside* the forward `catch_unwind`,
+//!   killing the worker thread. No request is lost and none sees an error:
+//!   the re-queued rows are re-batched by surviving (or respawned)
+//!   workers, and because padded batching is bitwise-stable across batch
+//!   composition, replies match the fault-free run exactly. This is the
+//!   supervision path's test vector.
+//! - **panic mid-batch** — a panic raised *inside* the forward region,
+//!   indistinguishable from model code panicking. With quarantine off the
+//!   batch fails with [`super::ServeError::Exec`]; with quarantine on the
+//!   bisection retry re-executes the requests (the injected panic does not
+//!   re-fire at later ticks, so a transient panic costs nothing).
+//! - **exec delay** — `thread::sleep` before the forward, inflating
+//!   observed exec latency for SLO/overload experiments.
+//! - **poison output rows** — one deterministic row of the batch output is
+//!   overwritten with NaN after the forward, exercising the
+//!   [`super::TierConfig::numeric_guard`] sweep and its `nonfinite_rows`
+//!   accounting.
+//!
+//! Faults can be pinned to explicit ticks (`*_at`) for exact-count
+//! assertions, or fired at a seeded rate (`*_rate`) for throughput-style
+//! chaos (e.g. the bench's 1%-kill section). Both can be combined.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Domain-separation tags so each injection point draws independent
+/// decisions from the same seed.
+const TAG_KILL: u64 = 0x4b49;
+const TAG_PANIC: u64 = 0x5041;
+const TAG_DELAY: u64 = 0x4445;
+const TAG_POISON: u64 = 0x504f;
+
+/// splitmix64 finalizer: a cheap, well-mixed hash of (seed, tag, tick).
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Uniform draw in `[0, 1)` from a hash value (53 mantissa bits).
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Seeded, per-tier fault plan (see the module docs for the injection
+/// points). Construct with [`FaultPlan::seeded`], configure with the
+/// builder methods, install via [`super::TierConfig::faults`].
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    kill_ticks: Vec<u64>,
+    kill_rate: f64,
+    panic_ticks: Vec<u64>,
+    panic_rate: f64,
+    delay_ticks: Vec<u64>,
+    delay_rate: f64,
+    delay: Duration,
+    poison_ticks: Vec<u64>,
+    poison_rate: f64,
+    tick: AtomicU64,
+}
+
+impl FaultPlan {
+    /// A quiet plan; the seed drives every rate-based decision.
+    pub fn seeded(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Kill the executing worker (batch re-queued first) at exactly these
+    /// 1-based batch ticks.
+    pub fn kill_at(mut self, ticks: &[u64]) -> Self {
+        self.kill_ticks.extend_from_slice(ticks);
+        self
+    }
+
+    /// Kill the executing worker on a seeded `rate` fraction of ticks.
+    pub fn kill_rate(mut self, rate: f64) -> Self {
+        self.kill_rate = rate;
+        self
+    }
+
+    /// Panic inside the forward region at exactly these ticks.
+    pub fn panic_at(mut self, ticks: &[u64]) -> Self {
+        self.panic_ticks.extend_from_slice(ticks);
+        self
+    }
+
+    /// Panic inside the forward region on a seeded `rate` fraction of
+    /// ticks.
+    pub fn panic_rate(mut self, rate: f64) -> Self {
+        self.panic_rate = rate;
+        self
+    }
+
+    /// Sleep `delay` before the forward at exactly these ticks.
+    pub fn delay_at(mut self, ticks: &[u64], delay: Duration) -> Self {
+        self.delay_ticks.extend_from_slice(ticks);
+        self.delay = delay;
+        self
+    }
+
+    /// Sleep `delay` before the forward on a seeded `rate` fraction of
+    /// ticks.
+    pub fn delay_rate(mut self, rate: f64, delay: Duration) -> Self {
+        self.delay_rate = rate;
+        self.delay = delay;
+        self
+    }
+
+    /// Overwrite one deterministic output row with NaN at exactly these
+    /// ticks.
+    pub fn poison_at(mut self, ticks: &[u64]) -> Self {
+        self.poison_ticks.extend_from_slice(ticks);
+        self
+    }
+
+    /// Overwrite one deterministic output row with NaN on a seeded `rate`
+    /// fraction of ticks.
+    pub fn poison_rate(mut self, rate: f64) -> Self {
+        self.poison_rate = rate;
+        self
+    }
+
+    /// Batch ticks consumed so far.
+    pub fn ticks(&self) -> u64 {
+        self.tick.load(Ordering::Relaxed)
+    }
+
+    fn fires(&self, tag: u64, ticks: &[u64], rate: f64, tick: u64) -> bool {
+        ticks.contains(&tick) || (rate > 0.0 && unit(mix(self.seed ^ tag ^ tick)) < rate)
+    }
+
+    /// Consume the next batch tick and decide which faults fire for a
+    /// batch of `rows` used rows. Called once per shipped batch.
+    pub fn begin_batch(&self, rows: usize) -> BatchFaults {
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        let poison_fires =
+            rows > 0 && self.fires(TAG_POISON, &self.poison_ticks, self.poison_rate, tick);
+        let poison_row = if poison_fires {
+            Some((mix(self.seed ^ TAG_POISON ^ tick.rotate_left(17)) % rows as u64) as usize)
+        } else {
+            None
+        };
+        BatchFaults {
+            kill_before_forward: self.fires(TAG_KILL, &self.kill_ticks, self.kill_rate, tick),
+            panic_mid_batch: self.fires(TAG_PANIC, &self.panic_ticks, self.panic_rate, tick),
+            exec_delay: if self.fires(TAG_DELAY, &self.delay_ticks, self.delay_rate, tick) {
+                Some(self.delay)
+            } else {
+                None
+            },
+            poison_row,
+        }
+    }
+}
+
+/// The faults that fire for one batch tick (see [`FaultPlan`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchFaults {
+    /// Re-queue the batch and panic outside the forward `catch_unwind`.
+    pub kill_before_forward: bool,
+    /// Panic inside the forward region (as model code would).
+    pub panic_mid_batch: bool,
+    /// Sleep this long before the forward.
+    pub exec_delay: Option<Duration>,
+    /// Used-row index whose output is overwritten with NaN.
+    pub poison_row: Option<usize>,
+}
+
+impl BatchFaults {
+    /// True when no fault fires this tick.
+    pub fn is_quiet(&self) -> bool {
+        !self.kill_before_forward
+            && !self.panic_mid_batch
+            && self.exec_delay.is_none()
+            && self.poison_row.is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quiet_plan_stays_quiet() {
+        let plan = FaultPlan::seeded(42);
+        for rows in [1usize, 4, 32] {
+            assert!(plan.begin_batch(rows).is_quiet());
+        }
+        assert_eq!(plan.ticks(), 3);
+    }
+
+    #[test]
+    fn pinned_ticks_fire_exactly_once_each() {
+        let plan = FaultPlan::seeded(1)
+            .kill_at(&[2])
+            .panic_at(&[3])
+            .poison_at(&[4])
+            .delay_at(&[5], Duration::from_millis(1));
+        let mut kills = 0;
+        let mut panics = 0;
+        let mut poisons = 0;
+        let mut delays = 0;
+        for _ in 0..10 {
+            let f = plan.begin_batch(8);
+            kills += f.kill_before_forward as u32;
+            panics += f.panic_mid_batch as u32;
+            poisons += f.poison_row.is_some() as u32;
+            delays += f.exec_delay.is_some() as u32;
+        }
+        assert_eq!((kills, panics, poisons, delays), (1, 1, 1, 1));
+    }
+
+    #[test]
+    fn rate_decisions_are_seed_deterministic_and_roughly_calibrated() {
+        let a = FaultPlan::seeded(7).kill_rate(0.1);
+        let b = FaultPlan::seeded(7).kill_rate(0.1);
+        let mut fired = 0u32;
+        for _ in 0..2000 {
+            let fa = a.begin_batch(4).kill_before_forward;
+            let fb = b.begin_batch(4).kill_before_forward;
+            assert_eq!(fa, fb);
+            fired += fa as u32;
+        }
+        // 10% of 2000 with generous slack: the point is calibration, not
+        // exactness.
+        assert!((100..=300).contains(&fired), "fired {fired}");
+        // A different seed fires on a different tick set.
+        let c = FaultPlan::seeded(8).kill_rate(0.1);
+        let diverges = (0..2000).any(|t| {
+            c.begin_batch(4).kill_before_forward
+                != FaultPlan::seeded(7).kill_rate(0.1).fires(TAG_KILL, &[], 0.1, t + 1)
+        });
+        assert!(diverges);
+    }
+
+    #[test]
+    fn poison_row_is_in_range_and_deterministic() {
+        let plan = FaultPlan::seeded(9).poison_rate(1.0);
+        let mut rows_hit = Vec::new();
+        for _ in 0..64 {
+            let f = plan.begin_batch(8);
+            let r = f.poison_row.expect("rate 1.0 always fires");
+            assert!(r < 8);
+            rows_hit.push(r);
+        }
+        let again = FaultPlan::seeded(9).poison_rate(1.0);
+        let replay: Vec<usize> = (0..64)
+            .map(|_| again.begin_batch(8).poison_row.unwrap())
+            .collect();
+        assert_eq!(rows_hit, replay);
+        // The hash spreads across rows rather than pinning one index.
+        assert!(rows_hit.iter().collect::<std::collections::HashSet<_>>().len() > 1);
+    }
+
+    #[test]
+    fn zero_rows_never_poisons() {
+        let plan = FaultPlan::seeded(3).poison_rate(1.0);
+        assert_eq!(plan.begin_batch(0).poison_row, None);
+    }
+}

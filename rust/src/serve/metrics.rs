@@ -135,6 +135,22 @@ pub struct TierMetrics {
     /// Model versions published through the hot-swap path (the rank
     /// adapter's applied moves).
     swaps: AtomicU64,
+    /// Worker threads respawned by the tier supervisor after a panic
+    /// escaped the forward `catch_unwind` (e.g. an injected kill).
+    worker_restarts: AtomicU64,
+    /// Requests answered with [`crate::serve::ServeError::PoisonedInput`]
+    /// after quarantine bisection isolated them as the reproducible cause
+    /// of batch panics.
+    poisoned: AtomicU64,
+    /// Output rows the numeric guard converted to
+    /// [`crate::serve::ServeError::NonFiniteOutput`] because they carried
+    /// NaN/Inf.
+    nonfinite_rows: AtomicU64,
+    /// Worker threads currently alive (set at registration, maintained by
+    /// the supervisor: a dead worker lowers it until its respawn lands).
+    /// Zero means "not supervised" — readers fall back to the static
+    /// configured count.
+    live_workers: AtomicUsize,
     /// Current sketch-rank gauge (0 = dense / never set) — written by
     /// [`crate::serve::RankAdapter`] alongside each swap.
     rank: AtomicUsize,
@@ -234,6 +250,38 @@ impl TierMetrics {
         *crate::util::lock_ignore_poison(&self.measured_quality) = Some(q);
     }
 
+    /// Ratchet the measured-quality gauge *down* to `q` (numeric guard:
+    /// a sick batch lowers the score immediately; only a real measurement
+    /// — [`TierMetrics::set_measured_quality`] — can raise it again).
+    pub(crate) fn degrade_measured_quality(&self, q: f64) {
+        let mut cur = crate::util::lock_ignore_poison(&self.measured_quality);
+        *cur = Some(cur.map_or(q, |c| c.min(q)));
+    }
+
+    pub(crate) fn record_worker_restart(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn record_poisoned(&self) {
+        self.poisoned.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn record_nonfinite_rows(&self, n: u64) {
+        self.nonfinite_rows.fetch_add(n, Ordering::SeqCst);
+    }
+
+    pub(crate) fn set_live_workers(&self, n: usize) {
+        self.live_workers.store(n, Ordering::SeqCst);
+    }
+
+    pub(crate) fn live_workers_sub(&self, n: usize) {
+        self.live_workers.fetch_sub(n, Ordering::SeqCst);
+    }
+
+    pub(crate) fn live_workers_add(&self, n: usize) {
+        self.live_workers.fetch_add(n, Ordering::SeqCst);
+    }
+
     /// Requests currently queued (submitted, not yet batched).
     pub fn queue_depth(&self) -> usize {
         self.depth.load(Ordering::SeqCst)
@@ -284,6 +332,26 @@ impl TierMetrics {
     /// Model versions hot-swapped into this tier.
     pub fn swaps(&self) -> u64 {
         self.swaps.load(Ordering::SeqCst)
+    }
+
+    /// Worker threads respawned by the tier supervisor after a panic.
+    pub fn worker_restarts(&self) -> u64 {
+        self.worker_restarts.load(Ordering::SeqCst)
+    }
+
+    /// Requests answered as `PoisonedInput` by quarantine bisection.
+    pub fn poisoned(&self) -> u64 {
+        self.poisoned.load(Ordering::SeqCst)
+    }
+
+    /// Output rows the numeric guard rejected as NaN/Inf.
+    pub fn nonfinite_rows(&self) -> u64 {
+        self.nonfinite_rows.load(Ordering::SeqCst)
+    }
+
+    /// Worker threads currently alive (0 when the tier is unsupervised).
+    pub fn live_workers(&self) -> usize {
+        self.live_workers.load(Ordering::SeqCst)
     }
 
     /// Current sketch-rank gauge (0 until the rank adapter sets it).
@@ -385,6 +453,14 @@ pub struct TierSnapshot {
     pub slo_rejects: u64,
     /// Model versions hot-swapped into the tier.
     pub swaps: u64,
+    /// Worker threads respawned by the supervisor after a panic.
+    pub worker_restarts: u64,
+    /// Requests answered as `PoisonedInput` by quarantine bisection.
+    pub poisoned: u64,
+    /// Output rows the numeric guard rejected as NaN/Inf.
+    pub nonfinite_rows: u64,
+    /// Worker threads alive at snapshot time (0 when unsupervised).
+    pub live_workers: usize,
     /// Sketch-rank gauge (0 until the adapter sets it).
     pub rank: usize,
     /// Shadow-replay quality score, `None` before the first measurement.
@@ -418,6 +494,10 @@ impl TierSnapshot {
             revoked: m.revoked(),
             slo_rejects: m.slo_rejects(),
             swaps: m.swaps(),
+            worker_restarts: m.worker_restarts(),
+            poisoned: m.poisoned(),
+            nonfinite_rows: m.nonfinite_rows(),
+            live_workers: m.live_workers(),
             rank: m.rank(),
             measured_quality: m.measured_quality(),
         }
@@ -445,6 +525,10 @@ impl TierSnapshot {
             .set("revoked", self.revoked as f64)
             .set("slo_rejects", self.slo_rejects as f64)
             .set("swaps", self.swaps as f64)
+            .set("worker_restarts", self.worker_restarts as f64)
+            .set("poisoned", self.poisoned as f64)
+            .set("nonfinite_rows", self.nonfinite_rows as f64)
+            .set("live_workers", self.live_workers as f64)
             .set("rank", self.rank as f64);
         // JSON has no NaN: the key is simply absent until the sensor has
         // measured (consumers treat "missing" as "static score only").
@@ -690,6 +774,49 @@ mod tests {
         assert_eq!(
             tiers[0].get("measured_quality").and_then(Json::as_f64),
             Some(0.875)
+        );
+    }
+
+    #[test]
+    fn fault_counters_and_quality_ratchet() {
+        let m = Metrics::default();
+        let t = m.tier_entry("dense");
+        t.set_live_workers(3);
+        t.live_workers_sub(1);
+        t.record_worker_restart();
+        t.live_workers_add(1);
+        t.record_poisoned();
+        t.record_nonfinite_rows(4);
+        assert_eq!(t.worker_restarts(), 1);
+        assert_eq!(t.poisoned(), 1);
+        assert_eq!(t.nonfinite_rows(), 4);
+        assert_eq!(t.live_workers(), 3);
+        // The guard only ratchets quality down; measurements raise it.
+        t.degrade_measured_quality(0.5);
+        assert_eq!(t.measured_quality(), Some(0.5));
+        t.degrade_measured_quality(0.8);
+        assert_eq!(t.measured_quality(), Some(0.5));
+        t.set_measured_quality(0.9);
+        assert_eq!(t.measured_quality(), Some(0.9));
+        let snap = m.snapshot();
+        assert_eq!(snap.tiers[0].worker_restarts, 1);
+        assert_eq!(snap.tiers[0].poisoned, 1);
+        assert_eq!(snap.tiers[0].nonfinite_rows, 4);
+        assert_eq!(snap.tiers[0].live_workers, 3);
+        let doc = Json::parse(&snap.to_json().to_pretty()).unwrap();
+        let tiers = doc.get("tiers").and_then(Json::as_arr).unwrap();
+        assert_eq!(
+            tiers[0].get("worker_restarts").and_then(Json::as_f64),
+            Some(1.0)
+        );
+        assert_eq!(tiers[0].get("poisoned").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(
+            tiers[0].get("nonfinite_rows").and_then(Json::as_f64),
+            Some(4.0)
+        );
+        assert_eq!(
+            tiers[0].get("live_workers").and_then(Json::as_f64),
+            Some(3.0)
         );
     }
 

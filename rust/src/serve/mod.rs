@@ -57,6 +57,19 @@
 //!   answers from the cheap tier immediately while the dense tier
 //!   verifies asynchronously through a two-phase
 //!   [`SpecReply::first`] / [`UpgradeHandle::upgraded`] reply.
+//! - **Fault tolerance**: each tier's worker pool runs under a
+//!   self-healing supervisor — a panicked worker is respawned with the
+//!   same warm setup under capped exponential backoff, `worker_restarts`
+//!   and the `live_workers` gauge record it, and a degraded pool
+//!   advertises its real capacity to SLO routing. A seeded per-tier
+//!   [`FaultPlan`] (chaos testing) injects worker kills, mid-batch
+//!   panics, exec delays, and NaN output poisoning reproducibly.
+//!   Opt-in **poison-input quarantine** bisects a panicking batch to
+//!   isolate the culprit request ([`ServeError::PoisonedInput`]) while
+//!   replaying its innocent batch-mates, and an opt-in **numeric guard**
+//!   converts NaN/Inf output rows into typed
+//!   [`ServeError::NonFiniteOutput`] replies that degrade the tier's
+//!   measured-quality gauge.
 //! - [`ModelServer::shutdown`] drains: admissions stop with a typed
 //!   error, queued requests still get answers, workers exit, threads
 //!   join. Dropping the server does the same.
@@ -82,22 +95,25 @@
 pub mod adapt;
 pub mod batcher;
 pub mod cascade;
+pub mod fault;
 pub mod metrics;
 pub mod router;
 pub mod slo;
 pub mod transform;
 
-pub use adapt::{AdaptConfig, AdaptDecision, HoldReason, QualityReading, RankAdapter};
+pub use adapt::{AdaptConfig, AdaptDaemon, AdaptDecision, HoldReason, QualityReading, RankAdapter};
 pub use cascade::{Cascade, Routed, SpecReply, Upgrade, UpgradeHandle};
+pub use fault::{BatchFaults, FaultPlan};
 pub use metrics::{Metrics, MetricsSnapshot, TierMetrics, TierSnapshot};
 pub use slo::{predict_latency, Decision, Slo, TierLoad};
 pub use transform::OutputTransform;
 
 use crate::linalg::Mat;
 use crate::nn::Model;
-use batcher::{seq_worker_loop, worker_loop, ModelSlot, SeqServeRequest, ServeRequest, TierQueue};
+use batcher::{ModelSlot, RowWorker, SeqServeRequest, SeqWorker, ServeRequest, TierQueue};
 use router::{probe_model, probe_seq_model, Router, Tier};
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -128,6 +144,15 @@ pub enum ServeError {
     Disconnected,
     /// The model's forward failed while executing the batch.
     Exec(String),
+    /// Quarantine isolated this request as the one whose presence makes
+    /// batch execution panic: its solo execution panicked
+    /// [`TierConfig::quarantine_strikes`] times. Its batch-mates were
+    /// replayed to normal replies.
+    PoisonedInput,
+    /// The tier's [`TierConfig::numeric_guard`] found NaN/Inf in this
+    /// request's output row(s); the reply is withheld rather than
+    /// shipping non-finite values downstream.
+    NonFiniteOutput,
     /// Registration probe: the model couples batch rows (attention-style
     /// layers), so row-batched serving would corrupt results.
     RowCoupled(String),
@@ -173,6 +198,13 @@ impl std::fmt::Display for ServeError {
             ServeError::ShuttingDown => write!(f, "server is shutting down"),
             ServeError::Disconnected => write!(f, "reply channel disconnected"),
             ServeError::Exec(m) => write!(f, "batch execution failed: {m}"),
+            ServeError::PoisonedInput => write!(
+                f,
+                "request quarantined: its presence makes batch execution panic"
+            ),
+            ServeError::NonFiniteOutput => {
+                write!(f, "model produced non-finite output for this request")
+            }
             ServeError::RowCoupled(m) => write!(f, "model not row-batchable: {m}"),
             ServeError::Probe(m) => write!(f, "registration probe failed: {m}"),
             ServeError::Spawn(m) => write!(f, "spawning tier worker failed: {m}"),
@@ -226,6 +258,21 @@ pub struct TierConfig {
     /// Server-side decode applied to each result row before it is
     /// replied (see [`OutputTransform`]); `Raw` is a zero-copy no-op.
     pub transform: OutputTransform,
+    /// Seeded fault-injection plan for chaos testing ([`FaultPlan`]).
+    /// `None` — the default — costs the workers one branch per batch.
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Poison-input quarantine: when a batch's forward *panics*, retry
+    /// its requests in bisected sub-batches and answer the request whose
+    /// solo execution panics this many times with
+    /// [`ServeError::PoisonedInput`], replaying its innocent batch-mates.
+    /// `0` (the default) disables quarantine — a panic fails the whole
+    /// batch with [`ServeError::Exec`], the pre-quarantine behavior.
+    pub quarantine_strikes: u32,
+    /// Scan each batch's output rows for NaN/Inf and answer affected
+    /// requests with [`ServeError::NonFiniteOutput`] instead of shipping
+    /// garbage; bad rows are counted (`nonfinite_rows`) and degrade the
+    /// tier's measured-quality gauge so a cascade routes around it.
+    pub numeric_guard: bool,
 }
 
 impl Default for TierConfig {
@@ -238,6 +285,9 @@ impl Default for TierConfig {
             mem_budget: None,
             head_group: None,
             transform: OutputTransform::Raw,
+            faults: None,
+            quarantine_strikes: 0,
+            numeric_guard: false,
         }
     }
 }
@@ -275,6 +325,15 @@ pub struct SeqTierConfig {
     /// Probe sequence length `n0` for the admission fit (measured at
     /// `n0` and `2·n0`).
     pub probe_len: usize,
+    /// Seeded fault-injection plan, as for [`TierConfig::faults`].
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Quarantine strikes, as for [`TierConfig::quarantine_strikes`] —
+    /// the isolated unit here is a whole sequence.
+    pub quarantine_strikes: u32,
+    /// Numeric guard, as for [`TierConfig::numeric_guard`] — a sequence
+    /// whose reply contains any non-finite token row gets
+    /// [`ServeError::NonFiniteOutput`].
+    pub numeric_guard: bool,
 }
 
 impl Default for SeqTierConfig {
@@ -288,6 +347,9 @@ impl Default for SeqTierConfig {
             head_group: None,
             transform: OutputTransform::Raw,
             probe_len: 16,
+            faults: None,
+            quarantine_strikes: 0,
+            numeric_guard: false,
         }
     }
 }
@@ -346,12 +408,13 @@ pub struct SeqTierInfo {
     pub seq_stable: bool,
 }
 
-/// The serving front end: tier registry + worker pools + metrics.
+/// The serving front end: tier registry + worker pools (one self-healing
+/// supervisor thread per tier) + metrics.
 pub struct ModelServer {
     router: Arc<Router>,
     metrics: Arc<Metrics>,
     workers: Vec<std::thread::JoinHandle<()>>,
-    closed: bool,
+    closed: Arc<AtomicBool>,
 }
 
 impl Default for ModelServer {
@@ -366,7 +429,7 @@ impl ModelServer {
             router: Arc::new(Router::default()),
             metrics: Arc::new(Metrics::default()),
             workers: Vec::new(),
-            closed: false,
+            closed: Arc::new(AtomicBool::new(false)),
         }
     }
 
@@ -381,7 +444,7 @@ impl ModelServer {
         in_dim: usize,
         cfg: TierConfig,
     ) -> Result<TierInfo, ServeError> {
-        if self.closed {
+        if self.closed.load(Ordering::SeqCst) {
             return Err(ServeError::ShuttingDown);
         }
         if in_dim == 0 || cfg.max_batch == 0 || cfg.queue_cap == 0 || cfg.workers == 0 {
@@ -443,13 +506,23 @@ impl ModelServer {
         // — which is what lets [`ModelServer::swap_tier_model`] publish a
         // new model later without touching the worker pool.
         let slot = Arc::new(ModelSlot::new(model));
+        let spec = RowWorker {
+            queue: Arc::clone(&queue),
+            max_batch: cfg.max_batch,
+            max_wait: cfg.max_wait,
+            in_dim,
+            transform: cfg.transform,
+            metrics: Arc::clone(&tier_metrics),
+            faults: cfg.faults.clone(),
+            quarantine_strikes: cfg.quarantine_strikes,
+            numeric_guard: cfg.numeric_guard,
+        };
         let mut handles = Vec::with_capacity(workers);
         for i in 0..workers {
-            let (q, tm) = (Arc::clone(&queue), Arc::clone(&tier_metrics));
-            let (cap, wait, tf) = (cfg.max_batch, cfg.max_wait, cfg.transform);
+            let w = spec.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("panther-serve-{name}-{i}"))
-                .spawn(move || worker_loop(q, cap, wait, in_dim, tf, tm));
+                .spawn(move || w.run());
             match spawned {
                 Ok(h) => handles.push(h),
                 Err(e) => {
@@ -462,6 +535,7 @@ impl ModelServer {
                 }
             }
         }
+        tier_metrics.set_live_workers(workers);
         let inserted = self.router.insert(
             name,
             Tier::Row {
@@ -481,14 +555,59 @@ impl ModelServer {
             self.metrics.remove_tier(name);
             return Err(e);
         }
-        self.workers.extend(handles);
+        let rtier = name.to_string();
+        let respawn = move |k: usize| {
+            let w = spec.clone();
+            std::thread::Builder::new()
+                .name(format!("panther-serve-{rtier}-r{k}"))
+                .spawn(move || w.run())
+        };
+        let dq = Arc::clone(&queue);
+        self.supervise(name, handles, tier_metrics, move || dq.is_drained(), respawn);
         Ok(info)
     }
 
+    /// Hand a freshly spawned worker pool to a per-tier supervisor
+    /// thread, which respawns panicked workers (same warm setup — the
+    /// spec clones into an identical loop) under capped exponential
+    /// backoff. If even the supervisor thread cannot be spawned the pool
+    /// keeps serving unsupervised — registration never fails for want of
+    /// self-healing.
+    fn supervise(
+        &mut self,
+        name: &str,
+        handles: Vec<std::thread::JoinHandle<()>>,
+        metrics: Arc<TierMetrics>,
+        drained: impl Fn() -> bool + Send + 'static,
+        respawn: impl Fn(usize) -> std::io::Result<std::thread::JoinHandle<()>> + Send + 'static,
+    ) {
+        // The handles ride a channel so a failed supervisor spawn leaves
+        // them in hand for the unsupervised fallback.
+        let (tx, rx) = mpsc::channel::<Vec<std::thread::JoinHandle<()>>>();
+        let spawned = std::thread::Builder::new()
+            .name(format!("panther-supervise-{name}"))
+            .spawn(move || {
+                let handles = rx.recv().unwrap_or_default();
+                supervise_pool(handles, &metrics, drained, respawn);
+            });
+        match spawned {
+            Ok(h) => {
+                let _ = tx.send(handles);
+                self.workers.push(h);
+            }
+            Err(_) => self.workers.extend(handles),
+        }
+    }
+
     /// [`ModelServer::register_tier`] with weights restored from a
-    /// checkpoint (v1 or v2): `arch` provides the architecture, the
+    /// checkpoint (v1–v3): `arch` provides the architecture, the
     /// checkpoint the parameters — the same contract as
-    /// [`Model::load_state_dict`].
+    /// [`Model::load_state_dict`]. Loads through
+    /// [`crate::train::checkpoint::load_with_recovery`]: a checkpoint
+    /// whose CRC32 checksums do not verify falls back to its `.bak`
+    /// sibling, and a corrupt pair is a typed
+    /// [`crate::train::checkpoint::CheckpointError`] — never a tier
+    /// serving silently wrong weights.
     pub fn register_tier_from_checkpoint(
         &mut self,
         name: &str,
@@ -497,7 +616,7 @@ impl ModelServer {
         path: impl AsRef<Path>,
         cfg: TierConfig,
     ) -> crate::Result<TierInfo> {
-        let state = crate::train::checkpoint::load(path)?;
+        let (state, _recovered) = crate::train::checkpoint::load_with_recovery(path)?;
         arch.load_state_dict(&state.state_dict())?;
         Ok(self.register_tier(name, arch, in_dim, cfg)?)
     }
@@ -522,35 +641,19 @@ impl ModelServer {
     /// headroom before swapping. Sequence tiers are not swappable
     /// ([`ServeError::BadInput`]).
     pub fn swap_tier_model(&self, name: &str, model: Model) -> Result<u64, ServeError> {
-        if self.closed {
-            return Err(ServeError::ShuttingDown);
+        self.swap_handle().swap_tier_model(name, model)
+    }
+
+    /// A cloneable, `&self`-only handle that can hot-swap tier models
+    /// without borrowing the server — what a background
+    /// [`adapt::AdaptDaemon`] holds so the server stays free for
+    /// registration, metrics, and shutdown on other threads.
+    pub fn swap_handle(&self) -> SwapHandle {
+        SwapHandle {
+            router: Arc::clone(&self.router),
+            metrics: Arc::clone(&self.metrics),
+            closed: Arc::clone(&self.closed),
         }
-        let tier = self.router.get(name)?;
-        let (info, slot) = match &*tier {
-            Tier::Row { info, slot, .. } => (info, slot),
-            Tier::Seq { .. } => {
-                return Err(ServeError::BadInput(format!(
-                    "tier {name} is a sequence tier — hot-swap serves row tiers only"
-                )));
-            }
-        };
-        let probe = probe_model(&model, info.in_dim, info.max_batch)?;
-        // The tier's transform was validated against the registration
-        // model's raw output width; the replacement must keep that raw
-        // interface exactly (the post-transform `info.out_dim` the
-        // clients see then follows).
-        let expected = tier.raw_out_dim().expect("row tier has a raw width");
-        if probe.out_dim != expected {
-            return Err(ServeError::BadInput(format!(
-                "replacement for tier {name} maps {} -> {}, expected {} -> {expected}",
-                info.in_dim, probe.out_dim, info.in_dim,
-            )));
-        }
-        let version = slot.publish(model);
-        if let Some(tm) = self.metrics.tier(name) {
-            tm.record_swap();
-        }
-        Ok(version)
     }
 
     /// Register `model` as **sequence** tier `name`: whole variable-length
@@ -576,7 +679,7 @@ impl ModelServer {
         in_dim: usize,
         cfg: SeqTierConfig,
     ) -> Result<SeqTierInfo, ServeError> {
-        if self.closed {
+        if self.closed.load(Ordering::SeqCst) {
             return Err(ServeError::ShuttingDown);
         }
         if in_dim == 0
@@ -639,13 +742,24 @@ impl ModelServer {
         // Same all-or-nothing spawn discipline as register_tier: the tier
         // only becomes routable once its whole worker pool is live.
         let model = Arc::new(model);
+        let spec = SeqWorker {
+            model: Arc::clone(&model),
+            queue: Arc::clone(&queue),
+            max_tokens: cfg.max_tokens,
+            max_wait: cfg.max_wait,
+            in_dim,
+            transform: cfg.transform,
+            metrics: Arc::clone(&tier_metrics),
+            faults: cfg.faults.clone(),
+            quarantine_strikes: cfg.quarantine_strikes,
+            numeric_guard: cfg.numeric_guard,
+        };
         let mut handles = Vec::with_capacity(cfg.workers);
         for i in 0..cfg.workers {
-            let (m, q, tm) = (Arc::clone(&model), Arc::clone(&queue), Arc::clone(&tier_metrics));
-            let (toks, wait, tf) = (cfg.max_tokens, cfg.max_wait, cfg.transform);
+            let w = spec.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("panther-serve-{name}-{i}"))
-                .spawn(move || seq_worker_loop(m, q, toks, wait, in_dim, tf, tm));
+                .spawn(move || w.run());
             match spawned {
                 Ok(h) => handles.push(h),
                 Err(e) => {
@@ -658,6 +772,7 @@ impl ModelServer {
                 }
             }
         }
+        tier_metrics.set_live_workers(cfg.workers);
         let inserted = self.router.insert(
             name,
             Tier::Seq {
@@ -673,7 +788,15 @@ impl ModelServer {
             self.metrics.remove_tier(name);
             return Err(e);
         }
-        self.workers.extend(handles);
+        let rtier = name.to_string();
+        let respawn = move |k: usize| {
+            let w = spec.clone();
+            std::thread::Builder::new()
+                .name(format!("panther-serve-{rtier}-r{k}"))
+                .spawn(move || w.run())
+        };
+        let dq = Arc::clone(&queue);
+        self.supervise(name, handles, tier_metrics, move || dq.is_drained(), respawn);
         Ok(info)
     }
 
@@ -727,9 +850,10 @@ impl ModelServer {
 
     /// Graceful drain: stop admissions (subsequent submits get
     /// [`ServeError::ShuttingDown`]), answer everything already queued,
-    /// then join every worker thread. Idempotent; also runs on drop.
+    /// then join every tier supervisor (which joins its worker pool).
+    /// Idempotent; also runs on drop.
     pub fn shutdown(&mut self) {
-        self.closed = true;
+        self.closed.store(true, Ordering::SeqCst);
         self.router.close_all();
         for h in self.workers.drain(..) {
             let _ = h.join();
@@ -740,6 +864,110 @@ impl ModelServer {
 impl Drop for ModelServer {
     fn drop(&mut self) {
         self.shutdown();
+    }
+}
+
+/// The per-tier supervision loop: poll the pool, join finished workers,
+/// and respawn the ones that died by panic — under capped exponential
+/// backoff (1 ms doubling to a 128 ms cap across *consecutive* crash
+/// cycles; a quiet cycle resets the streak) so a hard-crashing model
+/// cannot hot-loop thread creation. A worker that exits cleanly (queue
+/// closed and drained) is not respawned; a panic before the drain
+/// completes is, even during shutdown, so re-queued requests still get
+/// answers. The `live_workers` gauge tracks running threads throughout —
+/// a degraded tier advertises its real capacity to SLO routing. Returns
+/// (ending the supervisor thread) once every worker has exited cleanly.
+fn supervise_pool(
+    mut handles: Vec<std::thread::JoinHandle<()>>,
+    metrics: &TierMetrics,
+    drained: impl Fn() -> bool,
+    respawn: impl Fn(usize) -> std::io::Result<std::thread::JoinHandle<()>>,
+) {
+    const POLL: Duration = Duration::from_millis(2);
+    const MAX_BACKOFF_SHIFT: u32 = 7;
+    let mut streak: u32 = 0;
+    let mut respawned: usize = 0;
+    while !handles.is_empty() {
+        let mut deaths = 0usize;
+        let mut i = 0;
+        while i < handles.len() {
+            if handles[i].is_finished() {
+                let panicked = handles.swap_remove(i).join().is_err();
+                metrics.live_workers_sub(1);
+                if panicked && !drained() {
+                    deaths += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        if deaths > 0 {
+            std::thread::sleep(Duration::from_millis(1u64 << streak.min(MAX_BACKOFF_SHIFT)));
+            streak += 1;
+            for _ in 0..deaths {
+                metrics.record_worker_restart();
+                respawned += 1;
+                if let Ok(h) = respawn(respawned) {
+                    metrics.live_workers_add(1);
+                    handles.push(h);
+                }
+            }
+        } else {
+            streak = 0;
+            if handles.is_empty() {
+                break;
+            }
+            std::thread::sleep(POLL);
+        }
+    }
+}
+
+/// A cloneable handle for hot-swapping tier models from other threads
+/// (see [`ModelServer::swap_handle`]). Carries exactly the shared state
+/// [`ModelServer::swap_tier_model`] needs — router, metrics, and the
+/// drain flag — so a background adapter daemon can swap without holding
+/// any borrow of the server.
+#[derive(Clone)]
+pub struct SwapHandle {
+    router: Arc<Router>,
+    metrics: Arc<Metrics>,
+    closed: Arc<AtomicBool>,
+}
+
+impl SwapHandle {
+    /// [`ModelServer::swap_tier_model`] — same vetting (registration
+    /// probe, raw output width) and the same publish-for-future-admissions
+    /// atomicity; the server method delegates here.
+    pub fn swap_tier_model(&self, name: &str, model: Model) -> Result<u64, ServeError> {
+        if self.closed.load(Ordering::SeqCst) {
+            return Err(ServeError::ShuttingDown);
+        }
+        let tier = self.router.get(name)?;
+        let (info, slot) = match &*tier {
+            Tier::Row { info, slot, .. } => (info, slot),
+            Tier::Seq { .. } => {
+                return Err(ServeError::BadInput(format!(
+                    "tier {name} is a sequence tier — hot-swap serves row tiers only"
+                )));
+            }
+        };
+        let probe = probe_model(&model, info.in_dim, info.max_batch)?;
+        // The tier's transform was validated against the registration
+        // model's raw output width; the replacement must keep that raw
+        // interface exactly (the post-transform `info.out_dim` the
+        // clients see then follows).
+        let expected = tier.raw_out_dim().expect("row tier has a raw width");
+        if probe.out_dim != expected {
+            return Err(ServeError::BadInput(format!(
+                "replacement for tier {name} maps {} -> {}, expected {} -> {expected}",
+                info.in_dim, probe.out_dim, info.in_dim,
+            )));
+        }
+        let version = slot.publish(model);
+        if let Some(tm) = self.metrics.tier(name) {
+            tm.record_swap();
+        }
+        Ok(version)
     }
 }
 

@@ -1,22 +1,43 @@
 //! Checkpoints: serialize a [`super::ModelState`] to a simple binary file.
 //!
-//! Current format — **v2**, name-keyed (little-endian):
+//! Current format — **v3**, name-keyed and checksummed (little-endian):
 //! ```text
-//! magic "PNTH" | version u32 = 2 | step u64 | model-name (u32 len + utf8)
+//! magic "PNTH" | version u32 = 3 | step u64 | model-name (u32 len + utf8)
 //! | n_params u32 | n records:
 //!     param-name (u32 len + utf8) | rank u32 | dims u64 × rank
 //!     | param f32 × prod(dims) | m f32 × prod(dims) | v f32 × prod(dims)
+//!     | record CRC32 u32                  (over the record's bytes above)
+//! | optional optimizer section (see below)
+//! | footer: "PCRC" | file CRC32 u32      (over every byte before "PCRC")
 //! ```
 //! Tensor payloads are bulk-serialized as little-endian byte chunks
 //! (64 KiB staged per IO call — not one write per `f32`, and not a full
 //! per-tensor buffer that would double the largest tensor's memory).
 //!
-//! Legacy **v1** files (positional, three groups of shape-prefixed
-//! tensors) still load; their parameters get synthesized positional names
-//! `param.{i}` since v1 never stored names.
+//! **Integrity.** Every tensor record carries a CRC32 ([`crate::util::crc`])
+//! of its serialized bytes, and the footer carries a CRC32 of the whole
+//! file up to (excluding) the footer marker, so header tampering is caught
+//! even when every record checksum passes. Loads fail with a typed
+//! [`CheckpointError`] — [`CheckpointError::CorruptCheckpoint`] on any
+//! checksum mismatch, [`CheckpointError::Truncated`] when the file ends (or
+//! a length field claims more bytes than the file holds) before the
+//! promised structure is complete, [`CheckpointError::Malformed`] for
+//! structural garbage — never a panic, and never a silently different
+//! model. Length claims are validated against the file size *before* any
+//! allocation they would size, so a bit-flipped length cannot trigger a
+//! huge allocation.
 //!
-//! After the records, v2 files may carry an **optional optimizer
-//! section**:
+//! **Recovery.** [`save`] keeps the previously saved file as a `.bak`
+//! sibling (`foo.ckpt` → `foo.ckpt.bak`), and [`load_with_recovery`] falls
+//! back to it when the primary is corrupt or truncated.
+//!
+//! Legacy **v1** files (positional, three groups of shape-prefixed
+//! tensors) and **v2** files (name-keyed, no checksums) still load; v1
+//! parameters get synthesized positional names `param.{i}` since v1 never
+//! stored names.
+//!
+//! After the records (and before the v3 footer), files may carry an
+//! **optional optimizer section**:
 //! ```text
 //! "OPTS" | kind (u32 len + utf8) | n_hyper u32 | hyper f32 × n_hyper
 //! ```
@@ -24,24 +45,95 @@
 //! [`super::Trainer`](super::trainer::Trainer) uses it to persist the
 //! optimizer identity and scalar state; the moments themselves ride in the
 //! per-record `m`/`v` slots). Readers that don't care ([`load`]) skip it;
-//! files without it load as `None` — both directions stay compatible, so
-//! the version stays 2.
+//! files without it load as `None` — both directions stay compatible.
 
 use super::optimizer::OptimMeta;
 use super::ModelState;
 use crate::runtime::HostTensor;
-use anyhow::{bail, ensure, Context, Result};
+use crate::util::crc::Crc32;
+use anyhow::{Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 4] = b"PNTH";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
 const OPT_MAGIC: &[u8; 4] = b"OPTS";
+const FOOTER_MAGIC: &[u8; 4] = b"PCRC";
 
-/// Write a checkpoint (always the current v2 format). The state is
+/// Typed checkpoint load failure. Every way a load can fail on file
+/// *content* (as opposed to e.g. the file not existing) surfaces one of
+/// these, reachable through [`anyhow::Error::downcast_ref`] on the returned
+/// error — callers can distinguish corruption from truncation from
+/// structural garbage without string matching.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CheckpointError {
+    /// A stored CRC32 does not match the bytes actually read. `record` is
+    /// the parameter name, or `"<file>"` for the whole-file footer;
+    /// `expected` is the checksum stored in the file, `actual` the one
+    /// computed over the bytes.
+    CorruptCheckpoint {
+        /// Parameter name of the failing record, or `"<file>"`.
+        record: String,
+        /// Checksum stored in the file.
+        expected: u32,
+        /// Checksum computed over the bytes read.
+        actual: u32,
+    },
+    /// The file ends — or a length field claims more bytes than the whole
+    /// file holds — before the promised structure is complete.
+    Truncated {
+        /// What was being read when the data ran out.
+        detail: String,
+    },
+    /// Structurally invalid: bad magic, unsupported version, bad utf8,
+    /// impossible shapes, or trailing garbage.
+    Malformed {
+        /// What was wrong.
+        detail: String,
+    },
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::CorruptCheckpoint {
+                record,
+                expected,
+                actual,
+            } => write!(
+                f,
+                "checkpoint corrupt: record `{record}` checksum mismatch \
+                 (stored {expected:#010x}, computed {actual:#010x})"
+            ),
+            CheckpointError::Truncated { detail } => {
+                write!(f, "checkpoint truncated: {detail}")
+            }
+            CheckpointError::Malformed { detail } => {
+                write!(f, "malformed checkpoint: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+fn malformed(detail: impl Into<String>) -> anyhow::Error {
+    anyhow::Error::new(CheckpointError::Malformed {
+        detail: detail.into(),
+    })
+}
+
+fn truncated(detail: impl Into<String>) -> anyhow::Error {
+    anyhow::Error::new(CheckpointError::Truncated {
+        detail: detail.into(),
+    })
+}
+
+/// Write a checkpoint (always the current v3 format). The state is
 /// validated up front and the bytes go to a sibling temp file that is
 /// renamed into place only on success — a failed save never truncates an
-/// existing checkpoint at `path`.
+/// existing checkpoint at `path`. On success the previously saved file (if
+/// any) is kept as `path.bak` for [`load_with_recovery`].
 pub fn save(state: &ModelState, path: impl AsRef<Path>) -> Result<()> {
     save_with_optimizer(state, None, path)
 }
@@ -55,25 +147,25 @@ pub fn save_with_optimizer(
 ) -> Result<()> {
     let path = path.as_ref();
     let n = state.params.len();
-    ensure!(
-        state.m.len() == n && state.v.len() == n,
-        "param/moment arity mismatch: {n} params, {} m, {} v",
-        state.m.len(),
-        state.v.len()
-    );
-    ensure!(
-        state.names.is_empty() || state.names.len() == n,
-        "state has {} names for {n} params",
-        state.names.len()
-    );
+    if state.m.len() != n || state.v.len() != n {
+        anyhow::bail!(
+            "param/moment arity mismatch: {n} params, {} m, {} v",
+            state.m.len(),
+            state.v.len()
+        );
+    }
+    if !state.names.is_empty() && state.names.len() != n {
+        anyhow::bail!("state has {} names for {n} params", state.names.len());
+    }
     for i in 0..n {
         for group in [&state.m[i], &state.v[i]] {
-            ensure!(
-                group.shape() == state.params[i].shape(),
-                "moment shape {:?} != param shape {:?} at index {i}",
-                group.shape(),
-                state.params[i].shape()
-            );
+            if group.shape() != state.params[i].shape() {
+                anyhow::bail!(
+                    "moment shape {:?} != param shape {:?} at index {i}",
+                    group.shape(),
+                    state.params[i].shape()
+                );
+            }
         }
     }
     // Per-process temp name so concurrent savers can't interleave into one
@@ -81,33 +173,51 @@ pub fn save_with_optimizer(
     // can't persist the rename ahead of the data blocks.
     let mut tmp_name = path.as_os_str().to_owned();
     tmp_name.push(format!(".{}.tmp", std::process::id()));
-    let tmp = std::path::PathBuf::from(tmp_name);
+    let tmp = PathBuf::from(tmp_name);
     let f = std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
-    let mut w = BufWriter::new(f);
-    let res = write_body(&mut w, state, n)
-        .and_then(|_| match opt {
-            Some(meta) => write_opt_section(&mut w, meta),
-            None => Ok(()),
-        })
-        .and(w.flush().map_err(anyhow::Error::from))
-        .and(w.get_ref().sync_all().map_err(anyhow::Error::from));
+    let mut w = CrcWriter::new(BufWriter::new(f));
+    let res = (|| -> Result<()> {
+        write_body(&mut w, state, n)?;
+        if let Some(meta) = opt {
+            write_opt_section(&mut w, meta)?;
+        }
+        let file_crc = w.file_crc();
+        w.write_raw(FOOTER_MAGIC)?;
+        w.write_raw(&file_crc.to_le_bytes())?;
+        w.flush()?;
+        w.inner.get_ref().sync_all()?;
+        Ok(())
+    })();
     drop(w);
     if let Err(e) = res {
         let _ = std::fs::remove_file(&tmp);
         return Err(e);
     }
+    // Keep the previous checkpoint as `.bak` (best-effort: a failure here
+    // degrades recovery, not the save itself).
+    if path.exists() {
+        let _ = std::fs::rename(path, bak_path(path));
+    }
     std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} into place"))?;
     Ok(())
 }
 
-/// v2 payload after validation: header + n name/shape/param/m/v records.
-fn write_body(w: &mut impl Write, state: &ModelState, n: usize) -> Result<()> {
+/// Sibling backup path kept by [`save`]: `foo.ckpt` → `foo.ckpt.bak`.
+fn bak_path(path: &Path) -> PathBuf {
+    let mut name = path.as_os_str().to_owned();
+    name.push(".bak");
+    PathBuf::from(name)
+}
+
+/// v3 payload after validation: header + n checksummed records.
+fn write_body<W: Write>(w: &mut CrcWriter<W>, state: &ModelState, n: usize) -> Result<()> {
     w.write_all(MAGIC)?;
     w.write_all(&VERSION.to_le_bytes())?;
     w.write_all(&state.step.to_le_bytes())?;
     write_str(w, &state.model)?;
     w.write_all(&(n as u32).to_le_bytes())?;
     for i in 0..n {
+        w.begin_record();
         // Hand-built states may omit names; synthesize the same positional
         // fallback v1 migration uses so round-trips stay name-stable.
         match state.names.get(i) {
@@ -122,42 +232,77 @@ fn write_body(w: &mut impl Write, state: &ModelState, n: usize) -> Result<()> {
         for group in [&state.params[i], &state.m[i], &state.v[i]] {
             write_f32s(w, group.data())?;
         }
+        let crc = w.end_record();
+        // The stored record checksum is covered by the file checksum but
+        // (by construction) not by its own record checksum.
+        w.write_all(&crc.to_le_bytes())?;
     }
     Ok(())
 }
 
-/// Read a checkpoint (v2, or legacy v1 with synthesized names), ignoring
-/// any trailing optimizer section.
+/// Read a checkpoint (v3, or legacy v1/v2), ignoring any trailing
+/// optimizer section.
 pub fn load(path: impl AsRef<Path>) -> Result<ModelState> {
     Ok(load_with_optimizer(path)?.0)
+}
+
+/// [`load`], falling back to the `.bak` sibling kept by [`save`] when the
+/// primary file is corrupt, truncated, or unreadable. Returns the state
+/// plus `true` when the backup supplied it. Fails only when both copies
+/// are unusable; the primary's typed error is surfaced, with the backup's
+/// failure attached as context.
+pub fn load_with_recovery(path: impl AsRef<Path>) -> Result<(ModelState, bool)> {
+    let path = path.as_ref();
+    let primary_err = match load(path) {
+        Ok(state) => return Ok((state, false)),
+        Err(e) => e,
+    };
+    match load(bak_path(path)) {
+        Ok(state) => Ok((state, true)),
+        Err(bak_err) => Err(primary_err.context(format!(
+            "backup {:?} is also unusable: {bak_err:#}",
+            bak_path(path)
+        ))),
+    }
 }
 
 /// [`load`] plus the optional optimizer section (`None` for files written
 /// by plain [`save`] and for legacy v1 checkpoints).
 pub fn load_with_optimizer(path: impl AsRef<Path>) -> Result<(ModelState, Option<OptimMeta>)> {
-    let f = std::fs::File::open(path.as_ref())
-        .with_context(|| format!("opening {:?}", path.as_ref()))?;
-    let mut r = BufReader::new(f);
+    let path = path.as_ref();
+    let f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    // Used to reject length fields that claim more data than the file
+    // holds *before* sizing any allocation by them.
+    let file_len = f.metadata().map(|m| m.len()).unwrap_or(u64::MAX);
+    let mut r = HashingReader::new(BufReader::new(f));
     let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
+    read_exact_ck(&mut r, &mut magic, "magic")?;
     if &magic != MAGIC {
-        bail!("not a panther checkpoint (bad magic)");
+        return Err(malformed("not a panther checkpoint (bad magic)"));
     }
     let version = read_u32(&mut r)?;
     let step = read_u64(&mut r)?;
-    let model = read_str(&mut r)?;
+    let model = read_str(&mut r, file_len)?;
     let n = read_u32(&mut r)? as usize;
-    let state = match version {
-        1 => load_v1_body(&mut r, model, step, n)?,
-        2 => load_v2_body(&mut r, model, step, n)?,
-        other => bail!("unsupported checkpoint version {other}"),
-    };
-    let opt = if version >= 2 {
-        read_opt_section(&mut r)?
-    } else {
-        None
-    };
-    Ok((state, opt))
+    // Every record needs at least name-len + rank + record fields.
+    ensure_claim(n as u128 * 8, file_len, "parameter record count")?;
+    match version {
+        1 => {
+            let state = load_v1_body(&mut r, model, step, n, file_len)?;
+            Ok((state, None))
+        }
+        2 => {
+            let state = load_v2_body(&mut r, model, step, n, file_len)?;
+            let opt = read_opt_section(&mut r, file_len)?;
+            Ok((state, opt))
+        }
+        3 => {
+            let state = load_v3_body(&mut r, model, step, n, file_len)?;
+            let opt = read_v3_tail(&mut r, file_len)?;
+            Ok((state, opt))
+        }
+        other => Err(malformed(format!("unsupported checkpoint version {other}"))),
+    }
 }
 
 /// Trailing optimizer section: marker | kind | hyperparameter list.
@@ -169,14 +314,25 @@ fn write_opt_section(w: &mut impl Write, meta: &OptimMeta) -> Result<()> {
     Ok(())
 }
 
-/// Read the optional optimizer section: clean EOF right after the records
-/// means "no section" (files written by plain [`save`]); anything else
-/// must be a complete, well-formed section.
-fn read_opt_section(r: &mut impl Read) -> Result<Option<OptimMeta>> {
+/// Optimizer section payload after its marker.
+fn read_opt_payload(r: &mut impl Read, file_len: u64) -> Result<OptimMeta> {
+    let kind = read_str(r, file_len)?;
+    let n = read_u32(r)? as usize;
+    ensure_claim(n as u128 * 4, file_len, "optimizer hyperparameter count")?;
+    let hyper = read_f32s(r, n)?;
+    Ok(OptimMeta { kind, hyper })
+}
+
+/// Read the optional v2 optimizer section: clean EOF right after the
+/// records means "no section" (files written by plain [`save`]); anything
+/// else must be a complete, well-formed section.
+fn read_opt_section(r: &mut impl Read, file_len: u64) -> Result<Option<OptimMeta>> {
     let mut marker = [0u8; 4];
     let mut got = 0;
     while got < 4 {
-        let k = r.read(&mut marker[got..])?;
+        let k = r
+            .read(&mut marker[got..])
+            .map_err(|e| truncated(format!("optimizer section marker: {e}")))?;
         if k == 0 {
             break;
         }
@@ -185,26 +341,116 @@ fn read_opt_section(r: &mut impl Read) -> Result<Option<OptimMeta>> {
     if got == 0 {
         return Ok(None);
     }
-    ensure!(
-        got == 4 && &marker == OPT_MAGIC,
-        "trailing garbage after checkpoint records (expected optimizer section)"
-    );
-    let kind = read_str(r)?;
-    let n = read_u32(r)? as usize;
-    let hyper = read_f32s(r, n)?;
-    Ok(Some(OptimMeta { kind, hyper }))
+    if got != 4 || &marker != OPT_MAGIC {
+        return Err(malformed(
+            "trailing garbage after checkpoint records (expected optimizer section)",
+        ));
+    }
+    Ok(Some(read_opt_payload(r, file_len)?))
 }
 
-/// v2 body: n records of name | shape | param | m | v.
-fn load_v2_body(r: &mut impl Read, model: String, step: u64, n: usize) -> Result<ModelState> {
+/// v3 tail: optional optimizer section, then the mandatory whole-file
+/// checksum footer, then clean EOF. The file checksum covers every byte
+/// before the footer marker.
+fn read_v3_tail<R: Read>(r: &mut HashingReader<R>, file_len: u64) -> Result<Option<OptimMeta>> {
+    // Snapshot before the marker read: if the marker turns out to be the
+    // footer, its bytes are excluded from the file checksum.
+    let mut at_footer = r.file_crc();
+    let mut marker = [0u8; 4];
+    read_exact_ck(r, &mut marker, "optimizer section or footer marker")?;
+    let opt = if &marker == OPT_MAGIC {
+        let meta = read_opt_payload(r, file_len)?;
+        at_footer = r.file_crc();
+        read_exact_ck(r, &mut marker, "footer marker")?;
+        if &marker != FOOTER_MAGIC {
+            return Err(malformed("expected checksum footer after optimizer section"));
+        }
+        Some(meta)
+    } else if &marker == FOOTER_MAGIC {
+        None
+    } else {
+        return Err(malformed(
+            "expected optimizer section or checksum footer after records",
+        ));
+    };
+    let stored = read_u32(r)?;
+    if stored != at_footer {
+        return Err(anyhow::Error::new(CheckpointError::CorruptCheckpoint {
+            record: "<file>".to_string(),
+            expected: stored,
+            actual: at_footer,
+        }));
+    }
+    let mut b = [0u8; 1];
+    let extra = r
+        .read(&mut b)
+        .map_err(|e| truncated(format!("after footer: {e}")))?;
+    if extra != 0 {
+        return Err(malformed("trailing garbage after checksum footer"));
+    }
+    Ok(opt)
+}
+
+/// v3 body: n records of name | shape | param | m | v | record CRC32.
+fn load_v3_body<R: Read>(
+    r: &mut HashingReader<R>,
+    model: String,
+    step: u64,
+    n: usize,
+    file_len: u64,
+) -> Result<ModelState> {
     let mut names = Vec::with_capacity(n);
     let mut params = Vec::with_capacity(n);
     let mut m = Vec::with_capacity(n);
     let mut v = Vec::with_capacity(n);
     for _ in 0..n {
-        names.push(read_str(r)?);
-        let shape = read_shape(r)?;
-        let count: usize = shape.iter().product();
+        r.begin_record();
+        let name = read_str(r, file_len)?;
+        let shape = read_shape(r, file_len)?;
+        let count = element_count(&shape, file_len)?;
+        let p = read_f32s(r, count)?;
+        let mi = read_f32s(r, count)?;
+        let vi = read_f32s(r, count)?;
+        let actual = r.end_record();
+        let stored = read_u32(r)?;
+        if stored != actual {
+            return Err(anyhow::Error::new(CheckpointError::CorruptCheckpoint {
+                record: name,
+                expected: stored,
+                actual,
+            }));
+        }
+        names.push(name);
+        params.push(HostTensor::new(&shape, p));
+        m.push(HostTensor::new(&shape, mi));
+        v.push(HostTensor::new(&shape, vi));
+    }
+    Ok(ModelState {
+        model,
+        names,
+        params,
+        m,
+        v,
+        step,
+    })
+}
+
+/// v2 body: n records of name | shape | param | m | v (no checksums).
+fn load_v2_body(
+    r: &mut impl Read,
+    model: String,
+    step: u64,
+    n: usize,
+    file_len: u64,
+) -> Result<ModelState> {
+    let mut names = Vec::with_capacity(n);
+    let mut params = Vec::with_capacity(n);
+    let mut m = Vec::with_capacity(n);
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        names.push(read_str(r, file_len)?);
+        let shape = read_shape(r, file_len)?;
+        let count = element_count(&shape, file_len)?;
         params.push(HostTensor::new(&shape, read_f32s(r, count)?));
         m.push(HostTensor::new(&shape, read_f32s(r, count)?));
         v.push(HostTensor::new(&shape, read_f32s(r, count)?));
@@ -221,13 +467,19 @@ fn load_v2_body(r: &mut impl Read, model: String, step: u64, n: usize) -> Result
 
 /// Legacy v1 body: three groups (params, m, v) of shape-prefixed tensors,
 /// no names.
-fn load_v1_body(r: &mut impl Read, model: String, step: u64, n: usize) -> Result<ModelState> {
+fn load_v1_body(
+    r: &mut impl Read,
+    model: String,
+    step: u64,
+    n: usize,
+    file_len: u64,
+) -> Result<ModelState> {
     let mut groups = Vec::with_capacity(3);
     for _ in 0..3 {
         let mut tensors = Vec::with_capacity(n);
         for _ in 0..n {
-            let shape = read_shape(r)?;
-            let count: usize = shape.iter().product();
+            let shape = read_shape(r, file_len)?;
+            let count = element_count(&shape, file_len)?;
             tensors.push(HostTensor::new(&shape, read_f32s(r, count)?));
         }
         groups.push(tensors);
@@ -245,6 +497,36 @@ fn load_v1_body(r: &mut impl Read, model: String, step: u64, n: usize) -> Result
     })
 }
 
+/// Reject a length field that claims more bytes than the whole file holds.
+/// Classified as truncation: the data the field promises cannot exist.
+/// Called *before* any allocation sized by the field, so a bit-flipped
+/// length can never trigger a huge allocation.
+fn ensure_claim(bytes_claimed: u128, file_len: u64, what: &str) -> Result<()> {
+    if bytes_claimed > file_len as u128 {
+        return Err(truncated(format!(
+            "{what} claims {bytes_claimed} bytes but the file holds {file_len}"
+        )));
+    }
+    Ok(())
+}
+
+/// Element count of a shape, with overflow-checked arithmetic and a
+/// claim-vs-file-size bound (4 bytes per element, three tensors per
+/// record would be 12 — the 4-byte bound is the allocation guard).
+fn element_count(shape: &[usize], file_len: u64) -> Result<usize> {
+    let mut count: u128 = 1;
+    for &d in shape {
+        count = count
+            .checked_mul(d as u128)
+            .ok_or_else(|| malformed("tensor element count overflows"))?;
+    }
+    let bytes = count
+        .checked_mul(4)
+        .ok_or_else(|| malformed("tensor byte count overflows"))?;
+    ensure_claim(bytes, file_len, "tensor payload")?;
+    Ok(count as usize)
+}
+
 fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
     let b = s.as_bytes();
     w.write_all(&(b.len() as u32).to_le_bytes())?;
@@ -252,15 +534,17 @@ fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
     Ok(())
 }
 
-fn read_str(r: &mut impl Read) -> Result<String> {
+fn read_str(r: &mut impl Read, file_len: u64) -> Result<String> {
     let len = read_u32(r)? as usize;
+    ensure_claim(len as u128, file_len, "string length")?;
     let mut b = vec![0u8; len];
-    r.read_exact(&mut b)?;
-    String::from_utf8(b).context("bad utf8 string in checkpoint")
+    read_exact_ck(r, &mut b, "string payload")?;
+    String::from_utf8(b).map_err(|_| malformed("bad utf8 string in checkpoint"))
 }
 
-fn read_shape(r: &mut impl Read) -> Result<Vec<usize>> {
+fn read_shape(r: &mut impl Read, file_len: u64) -> Result<Vec<usize>> {
     let rank = read_u32(r)? as usize;
+    ensure_claim(rank as u128 * 8, file_len, "tensor rank")?;
     let mut shape = Vec::with_capacity(rank);
     for _ in 0..rank {
         shape.push(read_u64(r)? as usize);
@@ -287,7 +571,8 @@ fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
 }
 
 /// Bulk-deserialize `n` f32s: chunked reads + in-memory decode, O(1) extra
-/// memory beyond the result.
+/// memory beyond the result. Callers bound `n` against the file size
+/// (see [`element_count`]) before this allocates.
 fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
     let mut out = Vec::with_capacity(n);
     let mut buf = vec![0u8; IO_CHUNK.min(n.max(1)) * 4];
@@ -295,7 +580,7 @@ fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
     while remaining > 0 {
         let take = IO_CHUNK.min(remaining);
         let bytes = &mut buf[..take * 4];
-        r.read_exact(bytes)?;
+        read_exact_ck(r, bytes, "tensor payload")?;
         out.extend(
             bytes
                 .chunks_exact(4)
@@ -306,16 +591,121 @@ fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
     Ok(out)
 }
 
+/// `read_exact` with the failure typed as [`CheckpointError::Truncated`].
+fn read_exact_ck(r: &mut impl Read, buf: &mut [u8], what: &str) -> Result<()> {
+    r.read_exact(buf)
+        .map_err(|e| truncated(format!("{what}: {e}")))
+}
+
 fn read_u32(r: &mut impl Read) -> Result<u32> {
     let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
+    read_exact_ck(r, &mut b, "u32 field")?;
     Ok(u32::from_le_bytes(b))
 }
 
 fn read_u64(r: &mut impl Read) -> Result<u64> {
     let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
+    read_exact_ck(r, &mut b, "u64 field")?;
     Ok(u64::from_le_bytes(b))
+}
+
+/// Writer that folds every written byte into a whole-file CRC32 and,
+/// between [`CrcWriter::begin_record`] / [`CrcWriter::end_record`], into a
+/// per-record CRC32. [`CrcWriter::write_raw`] bypasses both hashers for
+/// the footer itself.
+struct CrcWriter<W: Write> {
+    inner: W,
+    file: Crc32,
+    record: Option<Crc32>,
+}
+
+impl<W: Write> CrcWriter<W> {
+    fn new(inner: W) -> Self {
+        CrcWriter {
+            inner,
+            file: Crc32::new(),
+            record: None,
+        }
+    }
+
+    fn begin_record(&mut self) {
+        self.record = Some(Crc32::new());
+    }
+
+    fn end_record(&mut self) -> u32 {
+        self.record
+            .take()
+            .expect("end_record without begin_record")
+            .finish()
+    }
+
+    fn file_crc(&self) -> u32 {
+        self.file.finish()
+    }
+
+    /// Write without hashing (the footer must not checksum itself).
+    fn write_raw(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        self.inner.write_all(bytes)
+    }
+}
+
+impl<W: Write> Write for CrcWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let k = self.inner.write(buf)?;
+        self.file.update(&buf[..k]);
+        if let Some(rec) = &mut self.record {
+            rec.update(&buf[..k]);
+        }
+        Ok(k)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// Reader twin of [`CrcWriter`]: folds every byte read into a whole-file
+/// CRC32 and, between `begin_record`/`end_record`, into a per-record one.
+struct HashingReader<R: Read> {
+    inner: R,
+    file: Crc32,
+    record: Option<Crc32>,
+}
+
+impl<R: Read> HashingReader<R> {
+    fn new(inner: R) -> Self {
+        HashingReader {
+            inner,
+            file: Crc32::new(),
+            record: None,
+        }
+    }
+
+    fn begin_record(&mut self) {
+        self.record = Some(Crc32::new());
+    }
+
+    fn end_record(&mut self) -> u32 {
+        self.record
+            .take()
+            .expect("end_record without begin_record")
+            .finish()
+    }
+
+    fn file_crc(&self) -> u32 {
+        self.file.finish()
+    }
+}
+
+impl<R: Read> Read for HashingReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let k = self.inner.read(buf)?;
+        self.file.update(&buf[..k]);
+        if let Some(rec) = &mut self.record {
+            rec.update(&buf[..k]);
+        }
+        Ok(k)
+    }
 }
 
 #[cfg(test)]
@@ -454,6 +844,135 @@ mod tests {
         std::fs::write(&path, &blob).unwrap();
         let err = load(&path).unwrap_err();
         assert!(err.to_string().contains("version"), "got: {err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn record_payload_corruption_is_typed() {
+        let dir = std::env::temp_dir().join("panther_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("flip_record.ckpt");
+        save(&toy_state(), &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Header is 33 bytes (magic 4 + version 4 + step 8 + model-name
+        // 4+9 + n 4); record 0 payload (`emb.w`, [4,3]) starts at
+        // 33 + 9 + 4 + 16 = 62. Byte 70 sits inside its param f32s.
+        bytes[70] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        match err.downcast_ref::<CheckpointError>() {
+            Some(CheckpointError::CorruptCheckpoint {
+                record,
+                expected,
+                actual,
+            }) => {
+                assert_eq!(record, "emb.w");
+                assert_ne!(expected, actual);
+            }
+            other => panic!("expected CorruptCheckpoint, got {other:?} ({err})"),
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn header_tampering_is_caught_by_the_file_footer() {
+        let dir = std::env::temp_dir().join("panther_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("flip_header.ckpt");
+        save(&toy_state(), &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Byte 8 is inside the step field: every record checksum still
+        // passes, so only the whole-file footer can catch it.
+        bytes[8] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        match err.downcast_ref::<CheckpointError>() {
+            Some(CheckpointError::CorruptCheckpoint { record, .. }) => {
+                assert_eq!(record, "<file>");
+            }
+            other => panic!("expected file-footer CorruptCheckpoint, got {other:?} ({err})"),
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn truncation_is_typed() {
+        let dir = std::env::temp_dir().join("panther_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("truncated.ckpt");
+        save(&toy_state(), &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<CheckpointError>(),
+                Some(CheckpointError::Truncated { .. })
+            ),
+            "expected Truncated, got {err}"
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn save_keeps_bak_and_recovery_falls_back() {
+        let dir = std::env::temp_dir().join("panther_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("recover.ckpt");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(bak_path(&path)).ok();
+        let first = toy_state();
+        save(&first, &path).unwrap();
+        let mut second = toy_state();
+        second.step = 43;
+        save(&second, &path).unwrap();
+        // The previous save survives as `.bak`.
+        assert_eq!(load(bak_path(&path)).unwrap().step, 42);
+        // Healthy primary: no fallback.
+        let (state, recovered) = load_with_recovery(&path).unwrap();
+        assert_eq!((state.step, recovered), (43, false));
+        // Corrupt primary: the backup answers, flagged.
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        let (state, recovered) = load_with_recovery(&path).unwrap();
+        assert_eq!((state.step, recovered), (42, true));
+        for (a, b) in state.params.iter().zip(&first.params) {
+            assert_eq!(a, b);
+        }
+        // Both unusable: the primary's typed error surfaces.
+        std::fs::remove_file(bak_path(&path)).unwrap();
+        let err = load_with_recovery(&path).unwrap_err();
+        assert!(err.downcast_ref::<CheckpointError>().is_some(), "got {err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn legacy_v2_files_still_load() {
+        // Hand-written v2 bytes: one [2]-tensor named "w", no checksums,
+        // no footer.
+        let mut blob: Vec<u8> = Vec::new();
+        blob.extend_from_slice(b"PNTH");
+        blob.extend_from_slice(&2u32.to_le_bytes());
+        blob.extend_from_slice(&7u64.to_le_bytes());
+        blob.extend_from_slice(&3u32.to_le_bytes());
+        blob.extend_from_slice(b"old");
+        blob.extend_from_slice(&1u32.to_le_bytes());
+        blob.extend_from_slice(&1u32.to_le_bytes());
+        blob.push(b'w');
+        blob.extend_from_slice(&1u32.to_le_bytes());
+        blob.extend_from_slice(&2u64.to_le_bytes());
+        for x in [1.5f32, -2.5, 0.0, 0.0, 0.0, 0.0] {
+            blob.extend_from_slice(&x.to_le_bytes());
+        }
+        let dir = std::env::temp_dir().join("panther_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("legacy_v2.ckpt");
+        std::fs::write(&path, &blob).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.model, "old");
+        assert_eq!(back.step, 7);
+        assert_eq!(back.names, vec!["w"]);
+        assert_eq!(back.params[0].data(), &[1.5, -2.5]);
         std::fs::remove_file(path).ok();
     }
 }

@@ -12,8 +12,9 @@
 //!   [`crate::nn::SketchPlan`] — trains and fine-tunes without an AOT
 //!   artifact.
 //!
-//! Both serialize through [`checkpoint`] (v2, name-keyed; the native
-//! trainer adds the optional optimizer section so resumes are exact).
+//! Both serialize through [`checkpoint`] (v3, name-keyed and CRC32
+//! checksummed; the native trainer adds the optional optimizer section so
+//! resumes are exact).
 
 pub mod checkpoint;
 pub mod optimizer;
@@ -32,7 +33,7 @@ use crate::runtime::{HostTensor, ModelSpec, Runtime};
 use anyhow::{bail, Context, Result};
 
 /// Host-side model state: params + Adam moments, in manifest order, plus
-/// the manifest's parameter *names* — checkpoints (v2) and the serving path
+/// the manifest's parameter *names* — checkpoints (v3) and the serving path
 /// key tensors by name, the executable boundary stays positional.
 pub struct ModelState {
     pub model: String,
@@ -97,7 +98,7 @@ impl ModelState {
     /// [`crate::nn::Model::state_dict`] produces, so runtime states and
     /// `nn` models exchange weights through one format. Params beyond the
     /// stored names (hand-built nameless states) get the same synthesized
-    /// `param.{i}` keys checkpoint v2 writes for them.
+    /// `param.{i}` keys the checkpoint writer uses for them.
     pub fn state_dict(&self) -> crate::nn::StateDict {
         self.params
             .iter()

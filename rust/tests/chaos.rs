@@ -1,0 +1,270 @@
+//! Chaos integration tests: seeded fault injection against the full
+//! serve stack.
+//!
+//! The contract under test is the robustness tentpole's headline claim:
+//! with a seeded [`FaultPlan`] installed, **every request still gets a
+//! reply** — a success or a *typed* error, never a hang or a silent
+//! drop — surviving replies are **bitwise identical** to the fault-free
+//! run, and the fault counters come out exact because injection is
+//! deterministic in (seed, tick).
+//!
+//! Three fault families, one test each:
+//!
+//! - worker kills → supervision respawns, re-queued batches lose nothing;
+//! - poison inputs → bisection quarantines the culprit, replays the rest;
+//! - NaN outputs → the numeric guard converts them to typed errors and
+//!   the measured-quality gauge routes the cascade around the sick tier.
+
+use panther::linalg::Mat;
+use panther::nn::{Activation, ForwardCtx, Linear, Model};
+use panther::rng::Philox;
+use panther::serve::{Cascade, FaultPlan, ModelServer, ServeError, Slo, TierConfig};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Nonlinear row-independent stack with nonzero biases (padding leaks
+/// would show in the bitwise oracle).
+fn mlp(seed: u64, d_in: usize, d_out: usize) -> Model {
+    let mut rng = Philox::seeded(seed);
+    let mut m = Model::new();
+    let mut fc1 = Linear::random(d_in, 12, &mut rng);
+    for b in fc1.bias.iter_mut() {
+        *b = 0.3;
+    }
+    m.add("fc1", fc1).unwrap();
+    m.add("act", Activation::gelu()).unwrap();
+    let mut fc2 = Linear::random(12, d_out, &mut rng);
+    for b in fc2.bias.iter_mut() {
+        *b = -0.2;
+    }
+    m.add("fc2", fc2).unwrap();
+    m
+}
+
+fn request_rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| Mat::randn(1, d, &mut Philox::seeded(seed + i as u64)).into_vec())
+        .collect()
+}
+
+/// The fault-free oracle: the unbatched single-row forward.
+fn solo_forward(model: &Model, row: &[f32]) -> Vec<f32> {
+    let ctx = ForwardCtx::new();
+    model
+        .forward(&Mat::from_vec(1, row.len(), row.to_vec()), &ctx)
+        .unwrap()
+        .row(0)
+        .to_vec()
+}
+
+/// Poll `ok` until it holds or `deadline` passes; returns the final
+/// reading. Used only for counters that settle asynchronously (the
+/// supervisor notices a death on its own cadence).
+fn poll_until(deadline: Duration, mut ok: impl FnMut() -> bool) -> bool {
+    let start = Instant::now();
+    while start.elapsed() < deadline {
+        if ok() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    ok()
+}
+
+#[test]
+fn seeded_kills_lose_no_request_and_respawn_exactly() {
+    // Kill ticks 1 and 3 are pinned: exactly two workers die mid-run, no
+    // matter how the racing pool interleaves ticks. Every killed batch is
+    // re-queued before the panic, so all 12 requests must come back — and
+    // because padded batching is composition-invariant (cap 4 < the GEMM
+    // microkernel height), every reply must be bitwise the fault-free
+    // single-row forward.
+    let d = 10;
+    let model = mlp(42, d, 5);
+    let rows = request_rows(12, d, 900);
+    let expected: Vec<Vec<f32>> = rows.iter().map(|r| solo_forward(&model, r)).collect();
+    let plan = Arc::new(FaultPlan::seeded(7).kill_at(&[1, 3]));
+    let mut server = ModelServer::new();
+    server
+        .register_tier(
+            "t",
+            model,
+            d,
+            TierConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(2),
+                workers: 2,
+                faults: Some(Arc::clone(&plan)),
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    let h = server.handle();
+    let pending: Vec<_> = rows.iter().map(|r| h.submit("t", r).unwrap()).collect();
+    for (want, p) in expected.iter().zip(pending) {
+        assert_eq!(&p.wait().unwrap(), want, "survivor replies must be bitwise fault-free");
+    }
+    let tm = server.metrics().tier("t").unwrap();
+    assert!(
+        poll_until(Duration::from_secs(10), || tm.worker_restarts() == 2),
+        "both killed workers must be respawned, got {}",
+        tm.worker_restarts()
+    );
+    assert!(
+        poll_until(Duration::from_secs(10), || tm.live_workers() == 2),
+        "the pool must heal back to full strength, got {}",
+        tm.live_workers()
+    );
+    assert_eq!(tm.errors(), 0, "a kill is invisible to clients");
+    assert_eq!(tm.requests(), 12, "every request terminally accounted once");
+    // 12 requests in ≥ 3 batches plus 2 re-shipped killed batches.
+    assert!(plan.ticks() >= 5, "ticks {}", plan.ticks());
+    server.shutdown();
+    assert_eq!(tm.worker_restarts(), 2, "drain must not spawn extra workers");
+}
+
+/// Panics whenever any input value equals the marker `666.0` —
+/// indistinguishable from buggy model code tripping on one bad request.
+struct Trap;
+
+impl panther::nn::Module for Trap {
+    fn type_name(&self) -> &'static str {
+        "Trap"
+    }
+    fn forward(&self, x: &Mat, _ctx: &ForwardCtx) -> panther::Result<Mat> {
+        if x.data().iter().any(|&v| v == 666.0) {
+            panic!("trap sprung");
+        }
+        Ok(x.clone())
+    }
+    fn params(&self) -> Vec<(String, panther::nn::ParamRef<'_>)> {
+        Vec::new()
+    }
+    fn params_mut(&mut self) -> Vec<(String, panther::nn::ParamMut<'_>)> {
+        Vec::new()
+    }
+    fn boxed_clone(&self) -> Box<dyn panther::nn::Module> {
+        Box::new(Trap)
+    }
+}
+
+#[test]
+fn poison_input_is_quarantined_and_batchmates_replayed_bitwise() {
+    // One poison row among 31 innocents. Whatever batch composition the
+    // worker ships, bisection must corner the poison row alone, strike it
+    // out (two solo panics at strikes = 2), and answer it with the typed
+    // PoisonedInput — while every innocent is replayed and answered with
+    // its exact forward (Trap is the identity on clean rows).
+    let d = 4;
+    let mut m = Model::new();
+    m.add("trap", Trap).unwrap();
+    let mut server = ModelServer::new();
+    server
+        .register_tier(
+            "t",
+            m,
+            d,
+            TierConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(50),
+                workers: 1,
+                quarantine_strikes: 2,
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    let mut rows = request_rows(31, d, 2200);
+    let poison_index = 13;
+    rows.insert(poison_index, vec![1.0, 666.0, 3.0, 4.0]);
+    let h = server.handle();
+    let pending: Vec<_> = rows.iter().map(|r| h.submit("t", r).unwrap()).collect();
+    for (i, (row, p)) in rows.iter().zip(pending).enumerate() {
+        match p.wait() {
+            Ok(got) => {
+                assert_ne!(i, poison_index, "the poison row must not succeed");
+                assert_eq!(&got, row, "innocent {i} must be replayed bitwise");
+            }
+            Err(ServeError::PoisonedInput) => {
+                assert_eq!(i, poison_index, "only the poison row is quarantined");
+            }
+            Err(e) => panic!("request {i}: expected Ok or PoisonedInput, got {e}"),
+        }
+    }
+    let tm = server.metrics().tier("t").unwrap();
+    assert_eq!(tm.poisoned(), 1, "exactly one request struck out");
+    assert_eq!(tm.errors(), 1, "the strike-out is the only client-visible error");
+    assert_eq!(tm.requests(), 32, "every request terminally accounted once");
+    server.shutdown();
+}
+
+#[test]
+fn nan_outputs_are_typed_and_demote_the_tier_in_the_cascade() {
+    // poison_at(&[1]) NaNs one row of the first shipped batch. The
+    // numeric guard must convert it into a typed NonFiniteOutput (never a
+    // NaN handed to a client), count the row, and ratchet the tier's
+    // measured quality to ≤ 0.5 — below the healthy rung's 0.6, so the
+    // next cascade submit prefers "healthy" as the best effective rung
+    // (a re-ranking, not a shed).
+    let d = 6;
+    let sick_model = mlp(42, d, 3);
+    let healthy_model = mlp(43, d, 3);
+    let sick_oracle = mlp(42, d, 3);
+    let healthy_oracle = mlp(43, d, 3);
+    let mut server = ModelServer::new();
+    server
+        .register_tier(
+            "sick",
+            sick_model,
+            d,
+            TierConfig {
+                max_batch: 2,
+                max_wait: Duration::from_millis(20),
+                workers: 1,
+                faults: Some(Arc::new(FaultPlan::seeded(11).poison_at(&[1]))),
+                numeric_guard: true,
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    server
+        .register_tier(
+            "healthy",
+            healthy_model,
+            d,
+            TierConfig {
+                max_batch: 2,
+                workers: 1,
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    let rows = request_rows(2, d, 3100);
+    let h = server.handle();
+    let pending: Vec<_> = rows.iter().map(|r| h.submit("sick", r).unwrap()).collect();
+    let mut oks = 0;
+    let mut nonfinite = 0;
+    for (row, p) in rows.iter().zip(pending) {
+        match p.wait() {
+            Ok(got) => {
+                assert_eq!(got, solo_forward(&sick_oracle, row), "clean rows stay bitwise");
+                oks += 1;
+            }
+            Err(ServeError::NonFiniteOutput) => nonfinite += 1,
+            Err(e) => panic!("expected Ok or NonFiniteOutput, got {e}"),
+        }
+    }
+    assert_eq!((oks, nonfinite), (1, 1), "one poisoned row, one clean row");
+    let tm = server.metrics().tier("sick").unwrap();
+    assert_eq!(tm.nonfinite_rows(), 1);
+    assert_eq!(tm.errors(), 1);
+    let q = tm.measured_quality().expect("the guard must seed the quality gauge");
+    assert!(q <= 0.5, "a poisoned batch of ≤ 2 rows degrades to ≤ 0.5, got {q}");
+    // The cascade now ranks the degraded tier below the healthy one.
+    let cascade = Cascade::new(&server, &[("sick", 1.0), ("healthy", 0.6)]).unwrap();
+    assert_eq!(cascade.qualities()[0].0, "healthy", "evidence outranks the static label");
+    let routed = cascade.submit(&rows[0], &Slo::new(Duration::MAX)).unwrap();
+    assert_eq!(routed.tier, "healthy", "routing must avoid the sick tier");
+    assert!(!routed.shed, "picking the best effective rung is not a shed");
+    assert_eq!(routed.wait().unwrap(), solo_forward(&healthy_oracle, &rows[0]));
+    server.shutdown();
+}

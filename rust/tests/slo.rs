@@ -10,7 +10,9 @@
 
 use panther::linalg::Mat;
 use panther::nn::{ForwardCtx, Model};
-use panther::serve::{Cascade, ModelServer, ServeError, Slo, TierConfig, Upgrade, UpgradeHandle};
+use panther::serve::{
+    Cascade, ModelServer, Routed, ServeError, Slo, TierConfig, Upgrade, UpgradeHandle,
+};
 use std::time::Duration;
 
 const D: usize = 6;
@@ -286,6 +288,143 @@ fn shutdown_drains_or_revokes_every_speculative_upgrade() {
         cascade.speculate(&row(0)),
         Err(ServeError::ShuttingDown)
     ));
+}
+
+/// Shared handle to the token stream that releases [`GatedAffine`]
+/// forwards, one token per batch.
+type Gate = std::sync::Arc<std::sync::Mutex<std::sync::mpsc::Receiver<()>>>;
+
+/// An affine map whose forward blocks until the test sends a token —
+/// the queue fills and drains exactly when the test says so, never on
+/// scheduler luck.
+#[derive(Clone)]
+struct GatedAffine {
+    gate: Gate,
+    scale: f32,
+    bias: f32,
+}
+
+impl panther::nn::Module for GatedAffine {
+    fn type_name(&self) -> &'static str {
+        "GatedAffine"
+    }
+    fn forward(&self, x: &Mat, _ctx: &ForwardCtx) -> panther::Result<Mat> {
+        self.gate.lock().unwrap().recv().ok();
+        let data = x.data().iter().map(|v| v * self.scale + self.bias);
+        Ok(Mat::from_vec(x.rows(), x.cols(), data.collect()))
+    }
+    fn params(&self) -> Vec<(String, panther::nn::ParamRef<'_>)> {
+        Vec::new()
+    }
+    fn params_mut(&mut self) -> Vec<(String, panther::nn::ParamMut<'_>)> {
+        Vec::new()
+    }
+    fn boxed_clone(&self) -> Box<dyn panther::nn::Module> {
+        Box::new(self.clone())
+    }
+}
+
+/// A one-rung cascade over a gated tier (1 worker, batch 1, queue cap
+/// 1) plus the sender that releases one forward per token.
+fn gated_single_rung() -> (ModelServer, std::sync::mpsc::Sender<()>) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut m = panther::nn::Model::new();
+    m.add(
+        "aff",
+        GatedAffine {
+            gate: std::sync::Arc::new(std::sync::Mutex::new(rx)),
+            scale: 2.0,
+            bias: 0.25,
+        },
+    )
+    .unwrap();
+    let mut server = ModelServer::new();
+    server
+        .register_tier(
+            "dense",
+            m,
+            D,
+            TierConfig {
+                max_batch: 1,
+                workers: 1,
+                queue_cap: 1,
+                max_wait: Duration::from_millis(1),
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    (server, tx)
+}
+
+/// Park the worker on request A and fill the one-slot queue with B, so
+/// the next submit deterministically sees `QueueFull`.
+fn park_and_fill(cascade: &Cascade, server: &ModelServer) -> (Routed, Routed) {
+    let unbounded = Slo::new(Duration::MAX);
+    let a = cascade.submit(&row(0), &unbounded).unwrap();
+    let dense = server.metrics().tier("dense").unwrap();
+    while dense.queue_depth() > 0 {
+        std::thread::sleep(Duration::from_micros(100));
+    }
+    let b = cascade.submit(&row(1), &unbounded).unwrap();
+    assert_eq!(dense.queue_depth(), 1, "queue must be at capacity");
+    (a, b)
+}
+
+#[test]
+fn last_rung_queue_full_is_retried_once_and_served() {
+    // Worker parked on A, queue holds B: C's first try_submit rejects.
+    // The moment the reject is visible we release A — the worker drains
+    // B from the queue well inside C's 20 ms backoff window (µs of work
+    // against a ≥ 10× margin), so the single retry is admitted.
+    let (server, gate) = gated_single_rung();
+    let cascade = Cascade::new(&server, &[("dense", 1.0)]).unwrap();
+    let (a, b) = park_and_fill(&cascade, &server);
+    let dense = server.metrics().tier("dense").unwrap();
+    let c = std::thread::spawn({
+        let cascade = Cascade::new(&server, &[("dense", 1.0)]).unwrap();
+        move || cascade.submit(&row(2), &Slo::new(Duration::MAX))
+    });
+    while dense.rejected() < 1 {
+        std::thread::sleep(Duration::from_micros(100));
+    }
+    // C is inside its backoff; free the worker so the queue drains.
+    gate.send(()).unwrap();
+    let routed = c.join().unwrap().expect("retry must admit C");
+    assert_eq!(routed.tier, "dense");
+    assert!(!routed.shed, "a granted retry is not a shed");
+    // Release B and C, then check every reply is the exact forward.
+    gate.send(()).unwrap();
+    gate.send(()).unwrap();
+    let oracle = affine_model(0, 2.0, 0.25);
+    for (i, r) in [(0, a), (1, b), (2, routed)] {
+        assert_eq!(r.wait().unwrap(), solo_forward(&oracle, &row(i)));
+    }
+    assert_eq!(dense.rejected(), 1, "one rejected attempt, then admitted");
+    assert_eq!(dense.sheds(), 0);
+    assert_eq!(dense.slo_rejects(), 0);
+    assert_eq!(dense.requests(), 3, "all three requests served");
+}
+
+#[test]
+fn last_rung_retry_exhausted_is_a_typed_reject() {
+    // Nothing drains during the backoff: the retry rejects too, and the
+    // request fails typed. Both attempts are counted as rejections.
+    let (server, gate) = gated_single_rung();
+    let cascade = Cascade::new(&server, &[("dense", 1.0)]).unwrap();
+    let (a, b) = park_and_fill(&cascade, &server);
+    match cascade.submit(&row(2), &Slo::new(Duration::MAX)) {
+        Err(ServeError::SloInfeasible { .. }) => {}
+        other => panic!("expected SloInfeasible, got {:?}", other.map(|r| r.tier)),
+    }
+    let dense = server.metrics().tier("dense").unwrap();
+    assert_eq!(dense.rejected(), 2, "first attempt + the one retry");
+    assert_eq!(dense.slo_rejects(), 1, "the failure itself is typed and counted once");
+    assert_eq!(dense.sheds(), 0, "a retry is never a shed");
+    // Unblock A and B so shutdown drains cleanly.
+    gate.send(()).unwrap();
+    gate.send(()).unwrap();
+    a.wait().unwrap();
+    b.wait().unwrap();
 }
 
 #[test]
