@@ -6,6 +6,9 @@
 //! with overload shedding and a speculative two-phase reply — then close
 //! the loop online: a [`RankAdapter`] measures the sketched tier's real
 //! quality on live rows and hot-swaps it up the rank ladder atomically.
+//! The finale flips on end-to-end tracing, scripts one overload shed and
+//! one speculative upgrade, and exports the run as a Chrome trace plus
+//! Prometheus text.
 //!
 //! This is the paper's pitch end to end: the compressed model is a
 //! drop-in *tier* — same request shape, same serving contract (batched
@@ -18,7 +21,7 @@
 use panther::linalg::Mat;
 use panther::nn::{Activation, ForwardCtx, LayerSelector, Linear, Model, SketchPlan};
 use panther::rng::Philox;
-use panther::serve::{Cascade, ModelServer, Slo, TierConfig, Upgrade};
+use panther::serve::{Cascade, ModelServer, Slo, TierConfig, TraceConfig, Upgrade};
 use panther::train::{Adam, LrSchedule, ScheduledOpt, Trainer};
 use std::time::{Duration, Instant};
 
@@ -33,6 +36,31 @@ fn build_model(seed: u64) -> Model {
     m.add("act", Activation::gelu()).unwrap();
     m.add("fc2", Linear::random(D_HID, D_OUT, &mut rng)).unwrap();
     m
+}
+
+/// Elementwise pass-through that sleeps a fixed time per batch — makes a
+/// tier's capacity a scripted fact, so the tracing section can saturate
+/// it on cue. Row-independent, so the registration probe admits it.
+#[derive(Clone)]
+struct SlowLane(Duration);
+
+impl panther::nn::Module for SlowLane {
+    fn type_name(&self) -> &'static str {
+        "SlowLane"
+    }
+    fn forward(&self, x: &Mat, _ctx: &ForwardCtx) -> panther::Result<Mat> {
+        std::thread::sleep(self.0);
+        Ok(x.clone())
+    }
+    fn params(&self) -> Vec<(String, panther::nn::ParamRef<'_>)> {
+        Vec::new()
+    }
+    fn params_mut(&mut self) -> Vec<(String, panther::nn::ParamMut<'_>)> {
+        Vec::new()
+    }
+    fn boxed_clone(&self) -> Box<dyn panther::nn::Module> {
+        Box::new(self.clone())
+    }
 }
 
 fn main() -> panther::Result<()> {
@@ -241,7 +269,77 @@ fn main() -> panther::Result<()> {
         server.metrics().tier("sketched").unwrap().swaps()
     );
 
-    // --- 8. graceful drain ---------------------------------------------------
+    // --- 8. tracing: the run as a structured, exportable event stream --------
+    // Flip tracing on — every admission from here mints a trace id and
+    // accumulates spans — then reproduce the two cascade moments worth
+    // seeing in a trace viewer, an overload shed and a speculative
+    // upgrade, on a deliberately saturable rung: one worker, batch cap 1,
+    // a 1-slot queue, 15ms per batch.
+    use panther::util::events::EventClass;
+    let tracer = server.enable_tracing(TraceConfig::default());
+    let mut slow = Model::new();
+    slow.add("throttle", SlowLane(Duration::from_millis(15)))?;
+    slow.add("head", Linear::random(D_IN, D_OUT, &mut Philox::seeded(5)))?;
+    server.register_tier(
+        "slowdense",
+        slow,
+        D_IN,
+        TierConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(100),
+            queue_cap: 1,
+            workers: 1,
+            ..TierConfig::default()
+        },
+    )?;
+    let traced = Cascade::new(&server, &[("slowdense", 1.0), ("sketched", 0.6)])?;
+    let h = server.handle();
+    // Two warm requests give the completion estimator real 15ms samples.
+    h.infer("slowdense", &row)?;
+    h.infer("slowdense", &row)?;
+    // Saturate the slow rung: one request executing, one parked in its
+    // 1-slot queue — the next eligible submit must shed down the ladder.
+    let busy = [h.submit("slowdense", &row)?, h.submit("slowdense", &row)?];
+    let routed = traced.submit(&row, &Slo::new(Duration::from_millis(500)))?;
+    println!("\ntraced submit -> tier {:?} (shed: {})", routed.tier, routed.shed);
+    routed.wait()?;
+    for p in busy {
+        p.wait()?;
+    }
+    // Speculative two-phase with the rung drained again: the fast answer
+    // comes from the sketched rung, the verify leg upgrades on slowdense.
+    let spec = traced.speculate(&row)?;
+    let (first, upgrade) = spec.first();
+    first?;
+    let upgraded = matches!(upgrade.upgraded(), Upgrade::Upgraded(_));
+    println!("traced speculate -> upgraded: {upgraded}");
+    let log = tracer.log();
+    let slow_log = log.tiers.iter().find(|t| t.tier == "slowdense").unwrap();
+    println!(
+        "slowdense events: {} shed, {} speculate, {} upgrade \
+         (suppressed {}, ring overflow {})",
+        slow_log.recorded(EventClass::Shed),
+        slow_log.recorded(EventClass::Speculate),
+        slow_log.recorded(EventClass::Upgrade),
+        slow_log.suppressed.iter().sum::<u64>(),
+        slow_log.overflow,
+    );
+    let chrome = dir.join("trace_chrome.json");
+    std::fs::write(&chrome, log.export_chrome_trace())?;
+    let prom_text = server.metrics().prometheus();
+    let prom = dir.join("metrics.prom");
+    std::fs::write(&prom, &prom_text)?;
+    println!("chrome trace -> {} (open in chrome://tracing or Perfetto)", chrome.display());
+    println!("prometheus text -> {}, e.g.:", prom.display());
+    for line in prom_text.lines() {
+        let interesting =
+            line.contains("sheds") || line.contains("speculative") || line.contains("upgrades");
+        if interesting && line.contains("tier=\"slowdense\"") {
+            println!("  {line}");
+        }
+    }
+
+    // --- 9. graceful drain ---------------------------------------------------
     server.shutdown();
     std::fs::remove_file(&ckpt).ok();
     println!("drained and shut down cleanly");

@@ -747,8 +747,101 @@ fn main() {
         server.shutdown();
     }
 
+    // --- tracing overhead: the same closed loop, untraced then traced -------
+    // One tier, hammered twice. The first pass runs with tracing disabled
+    // (the request path's never-taken `Option` branch); the second enables
+    // a generous TraceConfig (zero refill, capacity above the offered
+    // load) so every event class records without suppression. Both rps
+    // land under `op = "trace_overhead"`, and the traced run's JSONL and
+    // Chrome exports are written next to `BENCH_serve.json` for the CI
+    // trace-smoke lane to parse.
+    {
+        use panther::serve::TraceConfig;
+        use panther::util::events::EventClass;
+        let mut server = ModelServer::new();
+        server
+            .register_tier(
+                "traced",
+                dense_model(1),
+                D_IN,
+                TierConfig {
+                    max_batch: 8,
+                    max_wait: Duration::from_micros(200),
+                    queue_cap: 1024,
+                    workers: 2,
+                    ..TierConfig::default()
+                },
+            )
+            .expect("register traced");
+        hammer(&server, "traced", clients, 10.min(per_client)); // warm the pool
+        let (wall_u, n_u) = hammer(&server, "traced", clients, per_client);
+        let untraced_rps = n_u as f64 / wall_u.as_secs_f64();
+        let tracer = server.enable_tracing(TraceConfig {
+            ring_capacity: 1 << 16,
+            bucket_capacity: 1 << 24,
+            refill_per_sec: 0.0,
+        });
+        let (wall_t, n_t) = hammer(&server, "traced", clients, per_client);
+        let traced_rps = n_t as f64 / wall_t.as_secs_f64();
+        let log = tracer.log();
+        let admits: u64 = log.tiers.iter().map(|t| t.recorded(EventClass::Admit)).sum();
+        assert_eq!(admits, n_t, "every traced request must record its admission");
+        let recorded: u64 = log.tiers.iter().flat_map(|t| t.recorded.iter().copied()).sum();
+        let overhead_pct = 100.0 * (untraced_rps - traced_rps) / untraced_rps;
+        report.entry_with(
+            "trace_overhead",
+            &format!("untraced clients={clients}"),
+            wall_u.as_secs_f64() * 1e3,
+            &[("rps", untraced_rps)],
+        );
+        report.entry_with(
+            "trace_overhead",
+            &format!("traced clients={clients}"),
+            wall_t.as_secs_f64() * 1e3,
+            &[
+                ("rps", traced_rps),
+                ("overhead_pct", overhead_pct),
+                ("events_recorded", recorded as f64),
+            ],
+        );
+        let dir = trace_export_dir();
+        let jsonl = dir.join("TRACE_serve.jsonl");
+        let chrome = dir.join("TRACE_serve_chrome.json");
+        if let Err(e) = std::fs::write(&jsonl, log.export_jsonl()) {
+            eprintln!("could not write {}: {e}", jsonl.display());
+        }
+        if let Err(e) = std::fs::write(&chrome, log.export_chrome_trace()) {
+            eprintln!("could not write {}: {e}", chrome.display());
+        }
+        println!(
+            "(tracing: {untraced_rps:.0} req/s untraced, {traced_rps:.0} traced \
+             [{overhead_pct:+.1}%], {recorded} events; exports in {})",
+            dir.display()
+        );
+        server.shutdown();
+    }
+
     match report.write() {
         Ok(path) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+}
+
+/// Where the trace exports go: `$PANTHER_BENCH_DIR` if set, else the
+/// nearest ancestor containing `.git` — the same resolution
+/// [`JsonReport::write`] uses, so the exports land next to
+/// `BENCH_serve.json`.
+fn trace_export_dir() -> std::path::PathBuf {
+    if let Some(d) = std::env::var_os("PANTHER_BENCH_DIR") {
+        return d.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        if dir.join(".git").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return ".".into();
+        }
     }
 }

@@ -31,9 +31,12 @@
 //! head-level parallelism and panel reuse in one call.
 
 use super::mat::{Mat, MatMut, MatRef};
+use crate::util::events::StageProfiler;
 use crate::util::threadpool::ThreadPool;
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
 
 /// Microkernel rows: 8 rows of C per register block.
 const MR: usize = 8;
@@ -77,6 +80,42 @@ fn give_pack_buf(buf: Vec<f32>) {
     if pool.len() < PACK_POOL_MAX {
         pool.push(buf);
     }
+}
+
+thread_local! {
+    /// Stage profiler for GEMM phase attribution on this thread (see
+    /// [`install_profiler`]). Thread-local so concurrent serve workers
+    /// each attribute their own products; `None` (the default) costs one
+    /// TLS read per packed dispatch — sub-threshold products never look.
+    static PROFILER: RefCell<Option<Arc<StageProfiler>>> = const { RefCell::new(None) };
+}
+
+/// RAII guard from [`install_profiler`]: restores the previously
+/// installed profiler (usually `None`) on drop.
+pub struct GemmProfilerGuard {
+    prev: Option<Arc<StageProfiler>>,
+}
+
+impl Drop for GemmProfilerGuard {
+    fn drop(&mut self) {
+        PROFILER.with(|slot| *slot.borrow_mut() = self.prev.take());
+    }
+}
+
+/// Attribute this thread's packed-GEMM phases (`gemm/pack` panel packing,
+/// `gemm/kernel` tile execution) to `p` until the returned guard drops.
+/// Installed per forward by [`crate::nn::Model::forward`] when its
+/// [`crate::nn::ForwardCtx`] carries a profiler; nestable (the guard
+/// restores whatever was installed before).
+pub fn install_profiler(p: Arc<StageProfiler>) -> GemmProfilerGuard {
+    let prev = PROFILER.with(|slot| slot.borrow_mut().replace(p));
+    GemmProfilerGuard { prev }
+}
+
+/// This thread's installed profiler, if any.
+#[inline]
+fn profiled() -> Option<Arc<StageProfiler>> {
+    PROFILER.with(|slot| slot.borrow().clone())
 }
 
 /// Raw pointer to C's storage shared with pooled workers. Each call site
@@ -365,12 +404,18 @@ fn packed_gemm(alpha: f32, a: MatRef, b: MatRef, overwrite: bool, c: &mut MatMut
         }
         return;
     }
+    let prof = profiled();
     let mut ap = take_pack_buf(m.div_ceil(MR) * MR * k);
     let mut bp = take_pack_buf(n.div_ceil(NR) * NR * k);
+    let t_pack = prof.as_ref().map(|_| Instant::now());
     pack_a(&a, &mut ap);
     pack_b(&b, &mut bp);
+    if let (Some(p), Some(t)) = (&prof, t_pack) {
+        p.record("gemm/pack", t.elapsed());
+    }
     let col_tiles = n.div_ceil(NC);
     let tiles = m.div_ceil(MC) * col_tiles;
+    let t_kern = prof.as_ref().map(|_| Instant::now());
     if tiles == 1 || m * k * n < PAR_MIN_WORK {
         for t in 0..tiles {
             tile_job(t, col_tiles, alpha, &ap, &bp, overwrite, c, m, k, n);
@@ -381,6 +426,9 @@ fn packed_gemm(alpha: f32, a: MatRef, b: MatRef, overwrite: bool, c: &mut MatMut
         pool().parallel_for(tiles, move |t| {
             tile_job(t, col_tiles, alpha, apr, bpr, overwrite, cref, m, k, n);
         });
+    }
+    if let (Some(p), Some(t)) = (&prof, t_kern) {
+        p.record("gemm/kernel", t.elapsed());
     }
     give_pack_buf(ap);
     give_pack_buf(bp);
@@ -690,13 +738,18 @@ pub fn gemm_batch(alpha: f32, a: &[MatRef], b: &[MatRef], beta: f32, c: &mut [Ma
     if tiles_total == 0 {
         return;
     }
+    let prof = profiled();
     let mut ap_buf = take_pack_buf(ap_len);
     let mut bp_buf = take_pack_buf(bp_len);
+    let t_pack = prof.as_ref().map(|_| Instant::now());
     for (i, it) in items.iter().enumerate() {
         if it.ap.1 > it.ap.0 {
             pack_a(&a[i], &mut ap_buf[it.ap.0..it.ap.1]);
             pack_b(&b[i], &mut bp_buf[it.bp.0..it.bp.1]);
         }
+    }
+    if let (Some(p), Some(t)) = (&prof, t_pack) {
+        p.record("gemm/pack", t.elapsed());
     }
     let c_views: &[MatMut] = c;
     let run = |t: usize| {
@@ -716,12 +769,16 @@ pub fn gemm_batch(alpha: f32, a: &[MatRef], b: &[MatRef], beta: f32, c: &mut [Ma
             it.n,
         );
     };
+    let t_kern = prof.as_ref().map(|_| Instant::now());
     if tiles_total == 1 || work_total < PAR_MIN_WORK {
         for t in 0..tiles_total {
             run(t);
         }
     } else {
         pool().parallel_for(tiles_total, run);
+    }
+    if let (Some(p), Some(t)) = (&prof, t_kern) {
+        p.record("gemm/kernel", t.elapsed());
     }
     give_pack_buf(ap_buf);
     give_pack_buf(bp_buf);

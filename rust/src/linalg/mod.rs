@@ -17,8 +17,8 @@ mod tri;
 
 pub use chol::{cholesky_lower, CholError};
 pub use gemm::{
-    gemm, gemm_batch, gemm_threads, matmul, matmul_nt, matmul_tn, set_gemm_threads,
-    GemmPoolError,
+    gemm, gemm_batch, gemm_threads, install_profiler, matmul, matmul_nt, matmul_tn,
+    set_gemm_threads, GemmPoolError, GemmProfilerGuard,
 };
 pub use mat::{Mat, MatMut, MatRef};
 pub use qr::{qr_cp, qr_thin, QrCp};

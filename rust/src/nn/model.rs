@@ -153,6 +153,22 @@ impl Model {
     /// feed-forward stacks registration order *is* execution order; layer
     /// output/input widths must chain (each layer asserts its own).
     pub fn forward(&self, x: &Mat, ctx: &super::module::ForwardCtx) -> Result<Mat> {
+        // Profiled twin of the plain loop below: attach the profiler to
+        // the GEMM substrate for the whole forward and time each layer.
+        // The `None` arm is the common path — one never-taken branch.
+        if let Some(prof) = ctx.profiler() {
+            let _gemm = crate::linalg::install_profiler(std::sync::Arc::clone(&prof));
+            let mut cur = x.clone();
+            for l in &self.layers {
+                let t = std::time::Instant::now();
+                cur = l
+                    .module
+                    .forward(&cur, ctx)
+                    .with_context(|| format!("forward through layer {}", l.name))?;
+                prof.record(&format!("layer/{}", l.name), t.elapsed());
+            }
+            return Ok(cur);
+        }
         let mut cur = x.clone();
         for l in &self.layers {
             cur = l

@@ -449,6 +449,12 @@ pub struct ForwardCtx {
     /// [`SeqBatch`]). Interior-mutable so long-lived warm contexts (serve
     /// workers) can swap it per step without rebuilding the workspace.
     seq: RefCell<Option<SeqBatch>>,
+    /// Stage profiler attached for the current forward, if any (see
+    /// [`crate::util::events::StageProfiler`]). Interior-mutable like
+    /// `seq` so warm serve contexts can attach/detach per step; when
+    /// `None` (the default) the only cost is one never-taken branch per
+    /// profiled stage.
+    profiler: RefCell<Option<std::sync::Arc<crate::util::events::StageProfiler>>>,
 }
 
 impl ForwardCtx {
@@ -472,6 +478,7 @@ impl ForwardCtx {
             ws: Workspace::new(),
             batch_hint: None,
             seq: RefCell::new(None),
+            profiler: RefCell::new(None),
         }
     }
 
@@ -512,6 +519,20 @@ impl ForwardCtx {
     /// The current sequence decomposition, if one is installed.
     pub fn seq_batch(&self) -> Option<SeqBatch> {
         self.seq.borrow().clone()
+    }
+
+    /// Attach (or detach, with `None`) a stage profiler. While attached,
+    /// [`crate::nn::Model::forward`] attributes wall time per layer and
+    /// the GEMM kernels attribute pack/kernel phases to it. Interior-
+    /// mutable so a warm per-worker context can toggle profiling between
+    /// steps without rebuilding its workspace.
+    pub fn set_profiler(&self, p: Option<std::sync::Arc<crate::util::events::StageProfiler>>) {
+        *self.profiler.borrow_mut() = p;
+    }
+
+    /// The attached stage profiler, if any.
+    pub fn profiler(&self) -> Option<std::sync::Arc<crate::util::events::StageProfiler>> {
+        self.profiler.borrow().clone()
     }
 
     /// The `(row_offset, valid_len)` segments a sequence-aware layer should

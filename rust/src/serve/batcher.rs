@@ -18,12 +18,14 @@
 //! leak into live rows (see [`super::router`]), which is what rules out
 //! row-coupled layers like attention at caps > 1.
 
-use super::fault::FaultPlan;
+use super::fault::{BatchFaults, FaultPlan};
 use super::metrics::TierMetrics;
+use super::trace::{TierTrace, TraceCtx};
 use super::transform::OutputTransform;
 use super::ServeError;
 use crate::linalg::Mat;
 use crate::nn::{ForwardCtx, Model, SeqBatch};
+use crate::util::events::EventClass;
 use std::collections::VecDeque;
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
@@ -94,6 +96,11 @@ pub(crate) struct ServeRequest {
     pub(crate) reply: mpsc::Sender<Result<Vec<f32>, ServeError>>,
     pub(crate) enqueued: Instant,
     pub(crate) model: Arc<ModelVersion>,
+    /// Trace context minted at admission (`None` when tracing is off —
+    /// the hot path's single never-taken branch). The request's span
+    /// chain is recorded at *reply* time, so kills/requeues/quarantine
+    /// replays never double-count a request's events.
+    pub(crate) trace: Option<TraceCtx>,
 }
 
 impl BatchItem for ServeRequest {
@@ -112,6 +119,8 @@ pub(crate) struct SeqServeRequest {
     pub(crate) tokens: Mat,
     pub(crate) reply: mpsc::Sender<Result<Mat, ServeError>>,
     pub(crate) enqueued: Instant,
+    /// See [`ServeRequest::trace`].
+    pub(crate) trace: Option<TraceCtx>,
 }
 
 impl BatchItem for SeqServeRequest {
@@ -396,6 +405,10 @@ pub(crate) struct RowWorker {
     /// Scan outputs for non-finite rows and answer those requests with
     /// [`ServeError::NonFiniteOutput`] instead of shipping garbage.
     pub(crate) numeric_guard: bool,
+    /// The tier's trace sink for tier-level events (fault arms,
+    /// quarantine rounds), captured at registration; `None` when tracing
+    /// was off — one branch per batch, like `faults`.
+    pub(crate) trace: Option<Arc<TierTrace>>,
 }
 
 impl RowWorker {
@@ -407,6 +420,11 @@ impl RowWorker {
             // below do not consult the plan, so pinned ticks map 1:1 to
             // shipped batches and chaos assertions stay exact.
             let fb = self.faults.as_ref().map(|f| f.begin_batch(batch.len()));
+            if let (Some(t), Some(f)) = (&self.trace, &fb) {
+                if !f.is_quiet() {
+                    t.record_now(EventClass::Fault, 0, fault_detail(f));
+                }
+            }
             if let Some(f) = &fb {
                 if let Some(d) = f.exec_delay {
                     std::thread::sleep(d);
@@ -422,15 +440,24 @@ impl RowWorker {
             }
             let panic_mid = fb.as_ref().is_some_and(|f| f.panic_mid_batch);
             let poison_row = fb.as_ref().and_then(|f| f.poison_row);
-            match self.exec(&batch, &mut ctx, &mut x, panic_mid) {
-                ExecOutcome::Done(mut y) => self.reply_success(batch, &mut y, poison_row),
-                ExecOutcome::Failed(msg) => fail_batch(batch, &self.metrics, self.max_batch, msg),
+            // Exec is timed here, in the caller, so every reply path can
+            // record the same `queue_wait`/`exec` spans for its requests.
+            let t_exec = Instant::now();
+            let outcome = self.exec(&batch, &mut ctx, &mut x, panic_mid);
+            let exec_dur = t_exec.elapsed();
+            match outcome {
+                ExecOutcome::Done(mut y) => {
+                    self.reply_success(batch, &mut y, poison_row, t_exec, exec_dur)
+                }
+                ExecOutcome::Failed(msg) => {
+                    fail_batch(batch, &self.metrics, self.max_batch, msg, t_exec, exec_dur)
+                }
                 ExecOutcome::Panicked(cause) => {
                     if self.quarantine_strikes > 0 {
                         self.quarantine(batch, &mut ctx, &mut x);
                     } else {
                         let msg = format!("forward panicked: {cause}");
-                        fail_batch(batch, &self.metrics, self.max_batch, msg);
+                        fail_batch(batch, &self.metrics, self.max_batch, msg, t_exec, exec_dur);
                     }
                 }
             }
@@ -494,7 +521,14 @@ impl RowWorker {
     /// for a batch are recorded BEFORE any reply is sent: a client that
     /// unblocks from `infer` must already see its own request accounted
     /// (tests read counters right after replies).
-    fn reply_success(&self, batch: Vec<ServeRequest>, y: &mut Mat, poison_row: Option<usize>) {
+    fn reply_success(
+        &self,
+        batch: Vec<ServeRequest>,
+        y: &mut Mat,
+        poison_row: Option<usize>,
+        exec_at: Instant,
+        exec_dur: Duration,
+    ) {
         let used = batch.len();
         if let Some(r) = poison_row.filter(|&r| r < used) {
             y.row_mut(r).fill(f32::NAN);
@@ -526,12 +560,29 @@ impl RowWorker {
         self.metrics.record_batch(used, self.max_batch);
         // Raw mode skips the transform allocation entirely — the reply
         // rows are views into the batch output.
+        let t_tf = Instant::now();
         let decoded = match self.transform {
             OutputTransform::Raw => None,
             t => Some(t.apply(y)),
         };
+        let tf_dur = t_tf.elapsed();
         let rows = decoded.as_ref().unwrap_or(y);
         for (i, req) in batch.into_iter().enumerate() {
+            // The span chain is recorded before this request's reply is
+            // sent — a client that unblocks already sees its full chain,
+            // same discipline as the metrics above.
+            if let Some(tr) = &req.trace {
+                record_request_spans(tr, req.enqueued, exec_at, exec_dur);
+                if decoded.is_some() {
+                    tr.span_at(EventClass::Transform, t_tf, tf_dur, String::new());
+                }
+                if bad[i] {
+                    tr.instant(EventClass::NonFinite, String::new());
+                    tr.instant(EventClass::Error, "kind=NonFiniteOutput".to_string());
+                } else {
+                    tr.instant(EventClass::Reply, String::new());
+                }
+            }
             let _ = req.reply.send(if bad[i] {
                 Err(ServeError::NonFiniteOutput)
             } else {
@@ -572,9 +623,18 @@ impl RowWorker {
                 self.retry_singleton(group, strikes, ctx, x);
                 continue;
             }
-            match self.exec(&group, ctx, x, false) {
-                ExecOutcome::Done(mut y) => self.reply_success(group, &mut y, None),
-                ExecOutcome::Failed(msg) => fail_batch(group, &self.metrics, self.max_batch, msg),
+            // Tier-level bisection-round event: one per re-executed group.
+            if let Some(t) = &self.trace {
+                t.record_now(EventClass::Quarantine, 0, format!("group={}", group.len()));
+            }
+            let t_exec = Instant::now();
+            let outcome = self.exec(&group, ctx, x, false);
+            let dur = t_exec.elapsed();
+            match outcome {
+                ExecOutcome::Done(mut y) => self.reply_success(group, &mut y, None, t_exec, dur),
+                ExecOutcome::Failed(msg) => {
+                    fail_batch(group, &self.metrics, self.max_batch, msg, t_exec, dur)
+                }
                 ExecOutcome::Panicked(_) => {
                     let mut left = group;
                     let right = left.split_off(left.len() / 2);
@@ -597,6 +657,9 @@ impl RowWorker {
         ctx: &mut ForwardCtx,
         x: &mut Mat,
     ) {
+        // The last solo attempt's timing backs the struck-out request's
+        // `exec` span (zero-length if it arrived pre-struck).
+        let (mut last_at, mut last_dur) = (Instant::now(), Duration::ZERO);
         loop {
             if strikes >= self.quarantine_strikes {
                 let req = group.pop().expect("singleton group");
@@ -604,16 +667,27 @@ impl RowWorker {
                 self.metrics.record_poisoned();
                 self.metrics.record_latency(req.enqueued.elapsed());
                 self.metrics.record_batch(1, self.max_batch);
+                if let Some(tr) = &req.trace {
+                    record_request_spans(tr, req.enqueued, last_at, last_dur);
+                    tr.instant(EventClass::Poisoned, format!("strikes={strikes}"));
+                    tr.instant(EventClass::Error, "kind=PoisonedInput".to_string());
+                }
                 let _ = req.reply.send(Err(ServeError::PoisonedInput));
                 return;
             }
-            match self.exec(&group, ctx, x, false) {
+            if let Some(t) = &self.trace {
+                t.record_now(EventClass::Quarantine, 0, format!("solo strikes={strikes}"));
+            }
+            last_at = Instant::now();
+            let outcome = self.exec(&group, ctx, x, false);
+            last_dur = last_at.elapsed();
+            match outcome {
                 ExecOutcome::Done(mut y) => {
-                    self.reply_success(group, &mut y, None);
+                    self.reply_success(group, &mut y, None, last_at, last_dur);
                     return;
                 }
                 ExecOutcome::Failed(msg) => {
-                    fail_batch(group, &self.metrics, self.max_batch, msg);
+                    fail_batch(group, &self.metrics, self.max_batch, msg, last_at, last_dur);
                     return;
                 }
                 ExecOutcome::Panicked(_) => strikes += 1,
@@ -622,16 +696,56 @@ impl RowWorker {
     }
 }
 
+/// Record the guaranteed per-request span chain at reply time: the
+/// `queue_wait` span (enqueue → exec start) and the `exec` span (the
+/// batched forward the request rode in). The caller records the terminal
+/// (`reply` xor `error`) right after, so every answered request's chain is
+/// `admit → queue_wait → exec → terminal` — exactly once each.
+fn record_request_spans(trace: &TraceCtx, enqueued: Instant, exec_at: Instant, exec_dur: Duration) {
+    let wait = exec_at.checked_duration_since(enqueued).unwrap_or_default();
+    trace.span_at(EventClass::QueueWait, enqueued, wait, String::new());
+    trace.span_at(EventClass::Exec, exec_at, exec_dur, String::new());
+}
+
+/// Compact `what-fired` tag for a tier-level `fault` event.
+fn fault_detail(f: &BatchFaults) -> String {
+    let mut parts: Vec<&str> = Vec::new();
+    if f.kill_before_forward {
+        parts.push("kill");
+    }
+    if f.panic_mid_batch {
+        parts.push("panic");
+    }
+    if f.exec_delay.is_some() {
+        parts.push("delay");
+    }
+    if f.poison_row.is_some() {
+        parts.push("poison");
+    }
+    parts.join("+")
+}
+
 /// Answer every request of a failed batch with [`ServeError::Exec`],
 /// recording all counters first (same reply-after-accounting order as the
 /// success path).
-fn fail_batch(batch: Vec<ServeRequest>, metrics: &TierMetrics, max_batch: usize, msg: String) {
+fn fail_batch(
+    batch: Vec<ServeRequest>,
+    metrics: &TierMetrics,
+    max_batch: usize,
+    msg: String,
+    exec_at: Instant,
+    exec_dur: Duration,
+) {
     metrics.record_error(batch.len() as u64);
     for req in &batch {
         metrics.record_latency(req.enqueued.elapsed());
     }
     metrics.record_batch(batch.len(), max_batch);
     for req in batch {
+        if let Some(tr) = &req.trace {
+            record_request_spans(tr, req.enqueued, exec_at, exec_dur);
+            tr.instant(EventClass::Error, "kind=Exec".to_string());
+        }
         let _ = req.reply.send(Err(ServeError::Exec(msg.clone())));
     }
 }
@@ -664,6 +778,8 @@ pub(crate) struct SeqWorker {
     pub(crate) faults: Option<Arc<FaultPlan>>,
     pub(crate) quarantine_strikes: u32,
     pub(crate) numeric_guard: bool,
+    /// See [`RowWorker::trace`].
+    pub(crate) trace: Option<Arc<TierTrace>>,
 }
 
 impl SeqWorker {
@@ -677,6 +793,11 @@ impl SeqWorker {
                 let total: usize = batch.iter().map(|r| r.tokens.rows()).sum();
                 f.begin_batch(total)
             });
+            if let (Some(t), Some(f)) = (&self.trace, &fb) {
+                if !f.is_quiet() {
+                    t.record_now(EventClass::Fault, 0, fault_detail(f));
+                }
+            }
             if let Some(f) = &fb {
                 if let Some(d) = f.exec_delay {
                     std::thread::sleep(d);
@@ -688,15 +809,22 @@ impl SeqWorker {
             }
             let panic_mid = fb.as_ref().is_some_and(|f| f.panic_mid_batch);
             let poison_row = fb.as_ref().and_then(|f| f.poison_row);
-            match self.exec(&batch, &mut ctx, panic_mid) {
-                ExecOutcome::Done(mut y) => self.reply_success(batch, &mut y, poison_row),
-                ExecOutcome::Failed(msg) => fail_seq_batch(batch, &self.metrics, msg),
+            let t_exec = Instant::now();
+            let outcome = self.exec(&batch, &mut ctx, panic_mid);
+            let exec_dur = t_exec.elapsed();
+            match outcome {
+                ExecOutcome::Done(mut y) => {
+                    self.reply_success(batch, &mut y, poison_row, t_exec, exec_dur)
+                }
+                ExecOutcome::Failed(msg) => {
+                    fail_seq_batch(batch, &self.metrics, msg, t_exec, exec_dur)
+                }
                 ExecOutcome::Panicked(cause) => {
                     if self.quarantine_strikes > 0 {
                         self.quarantine(batch, &mut ctx);
                     } else {
                         let msg = format!("forward panicked: {cause}");
-                        fail_seq_batch(batch, &self.metrics, msg);
+                        fail_seq_batch(batch, &self.metrics, msg, t_exec, exec_dur);
                     }
                 }
             }
@@ -758,7 +886,14 @@ impl SeqWorker {
     /// sequence is bad if *any* of its token rows is non-finite —
     /// `nonfinite_rows` counts token rows, `errors` counts sequences),
     /// metrics, then per-sequence replies.
-    fn reply_success(&self, batch: Vec<SeqServeRequest>, y: &mut Mat, poison_row: Option<usize>) {
+    fn reply_success(
+        &self,
+        batch: Vec<SeqServeRequest>,
+        y: &mut Mat,
+        poison_row: Option<usize>,
+        exec_at: Instant,
+        exec_dur: Duration,
+    ) {
         let lens: Vec<usize> = batch.iter().map(|r| r.tokens.rows()).collect();
         let total: usize = lens.iter().sum();
         if let Some(r) = poison_row.filter(|&r| r < total) {
@@ -800,6 +935,11 @@ impl SeqWorker {
             let start = off;
             off += len;
             if bad[s] {
+                if let Some(tr) = &req.trace {
+                    record_request_spans(tr, req.enqueued, exec_at, exec_dur);
+                    tr.instant(EventClass::NonFinite, String::new());
+                    tr.instant(EventClass::Error, "kind=NonFiniteOutput".to_string());
+                }
                 let _ = req.reply.send(Err(ServeError::NonFiniteOutput));
                 continue;
             }
@@ -807,10 +947,18 @@ impl SeqWorker {
             for i in 0..len {
                 slice.row_mut(i).copy_from_slice(y.row(start + i));
             }
-            let out = match self.transform {
-                OutputTransform::Raw => slice,
-                t => t.apply(&slice),
+            let t_tf = Instant::now();
+            let (out, transformed) = match self.transform {
+                OutputTransform::Raw => (slice, false),
+                t => (t.apply(&slice), true),
             };
+            if let Some(tr) = &req.trace {
+                record_request_spans(tr, req.enqueued, exec_at, exec_dur);
+                if transformed {
+                    tr.span_at(EventClass::Transform, t_tf, t_tf.elapsed(), String::new());
+                }
+                tr.instant(EventClass::Reply, String::new());
+            }
             let _ = req.reply.send(Ok(out));
         }
     }
@@ -833,9 +981,17 @@ impl SeqWorker {
                 self.retry_singleton(group, strikes, ctx);
                 continue;
             }
-            match self.exec(&group, ctx, false) {
-                ExecOutcome::Done(mut y) => self.reply_success(group, &mut y, None),
-                ExecOutcome::Failed(msg) => fail_seq_batch(group, &self.metrics, msg),
+            if let Some(t) = &self.trace {
+                t.record_now(EventClass::Quarantine, 0, format!("group={}", group.len()));
+            }
+            let t_exec = Instant::now();
+            let outcome = self.exec(&group, ctx, false);
+            let dur = t_exec.elapsed();
+            match outcome {
+                ExecOutcome::Done(mut y) => self.reply_success(group, &mut y, None, t_exec, dur),
+                ExecOutcome::Failed(msg) => {
+                    fail_seq_batch(group, &self.metrics, msg, t_exec, dur)
+                }
                 ExecOutcome::Panicked(_) => {
                     let mut left = group;
                     let right = left.split_off(left.len() / 2);
@@ -854,6 +1010,7 @@ impl SeqWorker {
         mut strikes: u32,
         ctx: &mut ForwardCtx,
     ) {
+        let (mut last_at, mut last_dur) = (Instant::now(), Duration::ZERO);
         loop {
             if strikes >= self.quarantine_strikes {
                 let req = group.pop().expect("singleton group");
@@ -861,16 +1018,27 @@ impl SeqWorker {
                 self.metrics.record_poisoned();
                 self.metrics.record_latency(req.enqueued.elapsed());
                 self.metrics.record_batch(1, 1);
+                if let Some(tr) = &req.trace {
+                    record_request_spans(tr, req.enqueued, last_at, last_dur);
+                    tr.instant(EventClass::Poisoned, format!("strikes={strikes}"));
+                    tr.instant(EventClass::Error, "kind=PoisonedInput".to_string());
+                }
                 let _ = req.reply.send(Err(ServeError::PoisonedInput));
                 return;
             }
-            match self.exec(&group, ctx, false) {
+            if let Some(t) = &self.trace {
+                t.record_now(EventClass::Quarantine, 0, format!("solo strikes={strikes}"));
+            }
+            last_at = Instant::now();
+            let outcome = self.exec(&group, ctx, false);
+            last_dur = last_at.elapsed();
+            match outcome {
                 ExecOutcome::Done(mut y) => {
-                    self.reply_success(group, &mut y, None);
+                    self.reply_success(group, &mut y, None, last_at, last_dur);
                     return;
                 }
                 ExecOutcome::Failed(msg) => {
-                    fail_seq_batch(group, &self.metrics, msg);
+                    fail_seq_batch(group, &self.metrics, msg, last_at, last_dur);
                     return;
                 }
                 ExecOutcome::Panicked(_) => strikes += 1,
@@ -880,13 +1048,23 @@ impl SeqWorker {
 }
 
 /// [`fail_batch`] for sequence steps.
-fn fail_seq_batch(batch: Vec<SeqServeRequest>, metrics: &TierMetrics, msg: String) {
+fn fail_seq_batch(
+    batch: Vec<SeqServeRequest>,
+    metrics: &TierMetrics,
+    msg: String,
+    exec_at: Instant,
+    exec_dur: Duration,
+) {
     metrics.record_error(batch.len() as u64);
     for req in &batch {
         metrics.record_latency(req.enqueued.elapsed());
     }
     metrics.record_batch(batch.len(), batch.len().max(1));
     for req in batch {
+        if let Some(tr) = &req.trace {
+            record_request_spans(tr, req.enqueued, exec_at, exec_dur);
+            tr.instant(EventClass::Error, "kind=Exec".to_string());
+        }
         let _ = req.reply.send(Err(ServeError::Exec(msg.clone())));
     }
 }
@@ -910,6 +1088,7 @@ mod tests {
                     model: Model::new(),
                     version,
                 }),
+                trace: None,
             },
             rx,
         )
@@ -930,6 +1109,7 @@ mod tests {
                 tokens: Mat::zeros(len, 1),
                 reply: tx,
                 enqueued: Instant::now(),
+                trace: None,
             },
             rx,
         )

@@ -36,9 +36,11 @@
 
 use super::batcher::{ModelSlot, ServeRequest, TierQueue};
 use super::metrics::TierMetrics;
-use super::router::Tier;
+use super::router::{Router, Tier};
 use super::slo::{admit, predict_latency, Decision, Slo, TierLoad};
+use super::trace::TraceCtx;
 use super::{ModelServer, PendingReply, ServeError, TierInfo};
+use crate::util::events::EventClass;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -84,6 +86,11 @@ impl Rung {
 /// across client threads (it is `Send + Sync`).
 pub struct Cascade {
     rungs: Vec<Rung>,
+    /// The owning server's router, read live for the tracer: cascade
+    /// admissions mint trace ids exactly like [`super::ServeHandle`]
+    /// admissions, plus cascade-only events (shed, SLO reject,
+    /// speculation, upgrade/revoke).
+    router: Arc<Router>,
 }
 
 impl Cascade {
@@ -148,7 +155,10 @@ impl Cascade {
         // effective (measured-when-available) quality, so the stored
         // order only decides ties among unmeasured tiers.
         rungs.sort_by(|a, b| b.quality.partial_cmp(&a.quality).expect("finite"));
-        Ok(Cascade { rungs })
+        Ok(Cascade {
+            rungs,
+            router: Arc::clone(&server.router),
+        })
     }
 
     /// The ladder as `(name, static quality)`, best static quality first
@@ -267,7 +277,13 @@ impl Cascade {
             let ladder: Vec<(f32, Duration)> = candidates.iter().map(|c| c.1).collect();
             match admit(slo, &ladder) {
                 Decision::Infeasible { best_predicted } => {
-                    self.rungs[first_eligible.unwrap_or(top)].metrics.record_slo_reject();
+                    let charged = first_eligible.unwrap_or(top);
+                    self.rungs[charged].metrics.record_slo_reject();
+                    if let Some(tr) = self.router.tracer() {
+                        let detail = format!("deadline_us={}", slo.deadline.as_micros());
+                        tr.tier(&self.rungs[charged].name)
+                            .record_now(EventClass::SloReject, 0, detail);
+                    }
                     return Err(ServeError::SloInfeasible {
                         deadline: slo.deadline,
                         best_predicted,
@@ -277,11 +293,15 @@ impl Cascade {
                     let orig = candidates[index].0;
                     let rung = &self.rungs[orig];
                     let (tx, rx) = mpsc::channel();
+                    let model = rung.slot.current();
+                    let trace = self.admit_trace(&rung.name, model.version);
+                    let trace_id = trace.as_ref().map_or(0, TraceCtx::id);
                     let req = ServeRequest {
                         row: row.to_vec(),
                         reply: tx,
                         enqueued: Instant::now(),
-                        model: rung.slot.current(),
+                        model,
+                        trace: trace.clone(),
                     };
                     match rung.queue.try_submit(req) {
                         Ok(()) => {
@@ -293,6 +313,16 @@ impl Cascade {
                             if shed {
                                 let f = first_eligible.expect("shed implies eligible");
                                 self.rungs[f].metrics.record_shed();
+                                // The shed is charged to the tier the
+                                // request *wanted* — record it on that
+                                // tier's event stream, tagged with the
+                                // routed request's trace id so the trace
+                                // links the downgrade to the reply.
+                                if let Some(tr) = self.router.tracer() {
+                                    let detail = format!("to={}", rung.name);
+                                    tr.tier(&self.rungs[f].name)
+                                        .record_now(EventClass::Shed, trace_id, detail);
+                                }
                             }
                             return Ok(Routed {
                                 tier: rung.name.clone(),
@@ -302,6 +332,12 @@ impl Cascade {
                             });
                         }
                         Err(ServeError::QueueFull) => {
+                            // The admission attempt minted a trace id
+                            // that will never reach a worker — close its
+                            // chain so every admit has a terminal.
+                            if let Some(t) = &trace {
+                                t.instant(EventClass::Error, "kind=QueueFull".to_string());
+                            }
                             // When the rejecting rung is the ONLY rung
                             // left there is nowhere to shed — the next
                             // stop is SloInfeasible. Wait out one short
@@ -320,11 +356,27 @@ impl Cascade {
                                 candidates.remove(index);
                             }
                         }
-                        Err(e) => return Err(e),
+                        Err(e) => {
+                            if let Some(t) = &trace {
+                                t.instant(EventClass::Error, "kind=Admission".to_string());
+                            }
+                            return Err(e);
+                        }
                     }
                 }
             }
         }
+    }
+
+    /// Mint an admission trace context on `tier` (recording the `admit`
+    /// instant with the pinned model version) when tracing is enabled —
+    /// the same admission-point contract as [`super::ServeHandle`].
+    fn admit_trace(&self, tier: &str, version: u64) -> Option<TraceCtx> {
+        self.router.tracer().map(|tr| {
+            let ctx = tr.ctx(tier);
+            ctx.instant(EventClass::Admit, format!("v={version}"));
+            ctx
+        })
     }
 
     /// [`Cascade::submit`] + wait: route by SLO and block for the reply.
@@ -356,28 +408,48 @@ impl Cascade {
         // Fast leg first: if the server is draining, fail the whole call
         // before any speculative accounting opens.
         let (tx, rx) = mpsc::channel();
+        let fmodel = fast.slot.current();
+        let ftrace = self.admit_trace(&fast.name, fmodel.version);
+        let fast_id = ftrace.as_ref().map_or(0, TraceCtx::id);
         let freq = ServeRequest {
             row: row.to_vec(),
             reply: tx,
             enqueued: Instant::now(),
-            model: fast.slot.current(),
+            model: fmodel,
+            trace: ftrace.clone(),
         };
-        fast.queue.submit(freq)?;
+        if let Err(e) = fast.queue.submit(freq) {
+            if let Some(t) = &ftrace {
+                t.instant(EventClass::Error, "kind=Admission".to_string());
+            }
+            return Err(e);
+        }
         let first = PendingReply { rx };
         // Verify leg: every attempt is counted as speculative work, and
         // every failure path immediately closes the books as revoked.
         best.metrics.record_speculative();
         let (vtx, vrx) = mpsc::channel();
+        let vmodel = best.slot.current();
+        let vtrace = self.admit_trace(&best.name, vmodel.version);
+        if let Some(t) = &vtrace {
+            // Tie the verify leg's trace to the fast leg's id so a trace
+            // viewer can pair the two halves of one speculation.
+            t.instant(EventClass::Speculate, format!("fast={fast_id}"));
+        }
         let vreq = ServeRequest {
             row: row.to_vec(),
             reply: vtx,
             enqueued: Instant::now(),
-            model: best.slot.current(),
+            model: vmodel,
+            trace: vtrace.clone(),
         };
         let state = match best.queue.try_submit(vreq) {
             Ok(()) => UpgradeState::Pending(PendingReply { rx: vrx }),
             Err(e) => {
                 best.metrics.record_revoked();
+                if let Some(t) = &vtrace {
+                    t.instant(EventClass::Revoke, "kind=QueueFull".to_string());
+                }
                 UpgradeState::Revoked(e)
             }
         };
@@ -389,6 +461,7 @@ impl Cascade {
                 tier: best.name.clone(),
                 state,
                 metrics: Arc::clone(&best.metrics),
+                trace: vtrace,
             },
         })
     }
@@ -438,6 +511,10 @@ pub struct UpgradeHandle {
     tier: String,
     state: UpgradeState,
     metrics: Arc<TierMetrics>,
+    /// The verify leg's trace context (when tracing was on at
+    /// speculation time): the upgrade/revoke outcome is recorded on the
+    /// same trace id the verify request executed under.
+    trace: Option<TraceCtx>,
 }
 
 impl UpgradeHandle {
@@ -454,10 +531,16 @@ impl UpgradeHandle {
             UpgradeState::Pending(p) => match p.wait() {
                 Ok(v) => {
                     self.metrics.record_upgrade();
+                    if let Some(t) = &self.trace {
+                        t.instant(EventClass::Upgrade, String::new());
+                    }
                     Upgrade::Upgraded(v)
                 }
                 Err(e) => {
                     self.metrics.record_revoked();
+                    if let Some(t) = &self.trace {
+                        t.instant(EventClass::Revoke, "kind=Exec".to_string());
+                    }
                     Upgrade::Revoked(e)
                 }
             },
@@ -472,6 +555,9 @@ impl Drop for UpgradeHandle {
         if matches!(self.state, UpgradeState::Pending(_)) {
             // Abandoned before the outcome: close the books as revoked.
             self.metrics.record_revoked();
+            if let Some(t) = &self.trace {
+                t.instant(EventClass::Revoke, "kind=Dropped".to_string());
+            }
             self.state = UpgradeState::Consumed;
         }
     }

@@ -621,11 +621,15 @@ impl Metrics {
     }
 
     /// Render a per-tier summary table (example epilogues, `serve` demos).
+    /// Every [`TierSnapshot`] counter family has a column — including the
+    /// hot-swap, supervision, and quarantine counters — so the human
+    /// table never lags the machine-readable snapshot.
     pub fn report(&self) -> String {
         let snap = self.snapshot();
         let mut t = crate::util::bench::Table::new(&[
             "tier", "requests", "batches", "occ", "tokens", "depth", "p50", "p99", "rejected",
-            "errors", "sheds", "upgrades", "slo_rej",
+            "errors", "sheds", "upgrades", "slo_rej", "swaps", "restarts", "poisoned", "nonfin",
+            "live", "quality",
         ]);
         for s in &snap.tiers {
             t.row(&[
@@ -642,9 +646,74 @@ impl Metrics {
                 s.sheds.to_string(),
                 s.upgrades.to_string(),
                 s.slo_rejects.to_string(),
+                s.swaps.to_string(),
+                s.worker_restarts.to_string(),
+                s.poisoned.to_string(),
+                s.nonfinite_rows.to_string(),
+                s.live_workers.to_string(),
+                match s.measured_quality {
+                    Some(q) => format!("{q:.4}"),
+                    None => "-".to_string(),
+                },
             ]);
         }
         t.render()
+    }
+
+    /// Render every tier's counters in Prometheus text exposition format
+    /// (version 0.0.4): monotone counters as `panther_<name>_total` and
+    /// point-in-time readings as `panther_<name>` gauges, one
+    /// `{tier="..."}` sample per registered tier. Scrape-ready — serve it
+    /// from any HTTP handler as `text/plain; version=0.0.4`.
+    pub fn prometheus(&self) -> String {
+        let snap = self.snapshot();
+        let mut out = String::new();
+        let counters: [(&str, fn(&TierSnapshot) -> f64); 14] = [
+            ("requests", |s| s.requests as f64),
+            ("batches", |s| s.batches as f64),
+            ("tokens", |s| s.tokens as f64),
+            ("rejected", |s| s.rejected as f64),
+            ("errors", |s| s.errors as f64),
+            ("sheds", |s| s.sheds as f64),
+            ("speculative", |s| s.speculative as f64),
+            ("upgrades", |s| s.upgrades as f64),
+            ("revoked", |s| s.revoked as f64),
+            ("slo_rejects", |s| s.slo_rejects as f64),
+            ("swaps", |s| s.swaps as f64),
+            ("worker_restarts", |s| s.worker_restarts as f64),
+            ("poisoned", |s| s.poisoned as f64),
+            ("nonfinite_rows", |s| s.nonfinite_rows as f64),
+        ];
+        for (name, get) in counters {
+            out.push_str(&format!("# TYPE panther_{name}_total counter\n"));
+            for s in &snap.tiers {
+                out.push_str(&format!(
+                    "panther_{name}_total{{tier=\"{}\"}} {}\n",
+                    s.tier,
+                    get(s)
+                ));
+            }
+        }
+        let gauges: [(&str, fn(&TierSnapshot) -> Option<f64>); 7] = [
+            ("queue_depth", |s| Some(s.queue_depth as f64)),
+            ("mean_occupancy", |s| Some(s.mean_occupancy)),
+            ("live_workers", |s| Some(s.live_workers as f64)),
+            ("rank", |s| Some(s.rank as f64)),
+            ("latency_p50_us", |s| Some(s.p50_us)),
+            ("latency_p99_us", |s| Some(s.p99_us)),
+            ("measured_quality", |s| s.measured_quality),
+        ];
+        for (name, get) in gauges {
+            out.push_str(&format!("# TYPE panther_{name} gauge\n"));
+            for s in &snap.tiers {
+                // Prometheus has no "missing": an unmeasured gauge emits
+                // no sample for that tier rather than a fake zero.
+                if let Some(v) = get(s) {
+                    out.push_str(&format!("panther_{name}{{tier=\"{}\"}} {v}\n", s.tier));
+                }
+            }
+        }
+        out
     }
 }
 
@@ -818,6 +887,55 @@ mod tests {
             tiers[0].get("live_workers").and_then(Json::as_f64),
             Some(3.0)
         );
+    }
+
+    #[test]
+    fn report_table_tracks_every_snapshot_family() {
+        let m = Metrics::default();
+        let t = m.tier_entry("dense");
+        t.record_swap();
+        t.record_worker_restart();
+        t.record_poisoned();
+        t.record_nonfinite_rows(2);
+        t.set_live_workers(3);
+        let rep = m.report();
+        for col in ["swaps", "restarts", "poisoned", "nonfin", "live", "quality"] {
+            assert!(rep.contains(col), "missing column {col}:\n{rep}");
+        }
+        // Unmeasured quality renders as a dash, not a fake number.
+        assert!(rep.contains('-'), "{rep}");
+        t.set_measured_quality(0.875);
+        assert!(m.report().contains("0.8750"), "{}", m.report());
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let m = Metrics::default();
+        let t = m.tier_entry("dense");
+        t.record_batch(2, 4);
+        t.record_error(1);
+        t.record_poisoned();
+        t.set_live_workers(2);
+        let text = m.prometheus();
+        assert!(text.contains("# TYPE panther_requests_total counter\n"));
+        assert!(text.contains("panther_requests_total{tier=\"dense\"} 2\n"));
+        assert!(text.contains("panther_errors_total{tier=\"dense\"} 1\n"));
+        assert!(text.contains("panther_poisoned_total{tier=\"dense\"} 1\n"));
+        assert!(text.contains("# TYPE panther_live_workers gauge\n"));
+        assert!(text.contains("panther_live_workers{tier=\"dense\"} 2\n"));
+        // Unmeasured quality emits no sample (never a fake zero).
+        assert!(!text.contains("panther_measured_quality{"));
+        t.set_measured_quality(0.5);
+        assert!(m
+            .prometheus()
+            .contains("panther_measured_quality{tier=\"dense\"} 0.5\n"));
+        // Every line is either a TYPE comment or `name{tier="..."} value`.
+        for line in text.lines() {
+            assert!(
+                line.starts_with("# TYPE panther_") || line.starts_with("panther_"),
+                "{line}"
+            );
+        }
     }
 
     #[test]

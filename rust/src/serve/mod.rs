@@ -99,6 +99,7 @@ pub mod fault;
 pub mod metrics;
 pub mod router;
 pub mod slo;
+pub mod trace;
 pub mod transform;
 
 pub use adapt::{AdaptConfig, AdaptDaemon, AdaptDecision, HoldReason, QualityReading, RankAdapter};
@@ -106,10 +107,12 @@ pub use cascade::{Cascade, Routed, SpecReply, Upgrade, UpgradeHandle};
 pub use fault::{BatchFaults, FaultPlan};
 pub use metrics::{Metrics, MetricsSnapshot, TierMetrics, TierSnapshot};
 pub use slo::{predict_latency, Decision, Slo, TierLoad};
+pub use trace::{TierTrace, TierTraceLog, TraceConfig, TraceCtx, TraceLog, Tracer};
 pub use transform::OutputTransform;
 
 use crate::linalg::Mat;
 use crate::nn::Model;
+use crate::util::events::EventClass;
 use batcher::{ModelSlot, RowWorker, SeqServeRequest, SeqWorker, ServeRequest, TierQueue};
 use router::{probe_model, probe_seq_model, Router, Tier};
 use std::path::Path;
@@ -433,6 +436,32 @@ impl ModelServer {
         }
     }
 
+    /// Turn on request tracing: every admission from here on mints a
+    /// trace id and records its span chain into per-tier event rings (see
+    /// [`trace`]). Workers and supervisors capture their tier's sink at
+    /// **registration**, so enable tracing *before* registering tiers to
+    /// also get tier-level events (quarantine rounds, fault arms,
+    /// restarts); per-request admission/exec/reply events work either
+    /// way. Returns the tracer for snapshots/export. With tracing off the
+    /// hot path pays one never-taken `Option` branch (the `FaultPlan`
+    /// idiom) and replies are bitwise identical.
+    pub fn enable_tracing(&self, cfg: TraceConfig) -> Arc<Tracer> {
+        let tracer = Arc::new(Tracer::new(cfg));
+        self.router.set_tracer(Some(Arc::clone(&tracer)));
+        tracer
+    }
+
+    /// The installed tracer, if [`ModelServer::enable_tracing`] ran.
+    pub fn tracer(&self) -> Option<Arc<Tracer>> {
+        self.router.tracer()
+    }
+
+    /// Stop tracing new admissions. Already-admitted requests keep their
+    /// trace contexts and finish recording into the (still live) sinks.
+    pub fn disable_tracing(&self) {
+        self.router.set_tracer(None);
+    }
+
     /// Register `model` as tier `name`, serving rows of width `in_dim`.
     /// Runs the registration probe (row independence, footprint), applies
     /// the memory-budget admission, and spawns the tier's workers. The
@@ -506,6 +535,7 @@ impl ModelServer {
         // — which is what lets [`ModelServer::swap_tier_model`] publish a
         // new model later without touching the worker pool.
         let slot = Arc::new(ModelSlot::new(model));
+        let tier_trace = self.router.tracer().map(|t| t.tier(name));
         let spec = RowWorker {
             queue: Arc::clone(&queue),
             max_batch: cfg.max_batch,
@@ -516,6 +546,7 @@ impl ModelServer {
             faults: cfg.faults.clone(),
             quarantine_strikes: cfg.quarantine_strikes,
             numeric_guard: cfg.numeric_guard,
+            trace: tier_trace.clone(),
         };
         let mut handles = Vec::with_capacity(workers);
         for i in 0..workers {
@@ -563,7 +594,14 @@ impl ModelServer {
                 .spawn(move || w.run())
         };
         let dq = Arc::clone(&queue);
-        self.supervise(name, handles, tier_metrics, move || dq.is_drained(), respawn);
+        self.supervise(
+            name,
+            handles,
+            tier_metrics,
+            tier_trace,
+            move || dq.is_drained(),
+            respawn,
+        );
         Ok(info)
     }
 
@@ -578,6 +616,7 @@ impl ModelServer {
         name: &str,
         handles: Vec<std::thread::JoinHandle<()>>,
         metrics: Arc<TierMetrics>,
+        trace: Option<Arc<TierTrace>>,
         drained: impl Fn() -> bool + Send + 'static,
         respawn: impl Fn(usize) -> std::io::Result<std::thread::JoinHandle<()>> + Send + 'static,
     ) {
@@ -588,7 +627,7 @@ impl ModelServer {
             .name(format!("panther-supervise-{name}"))
             .spawn(move || {
                 let handles = rx.recv().unwrap_or_default();
-                supervise_pool(handles, &metrics, drained, respawn);
+                supervise_pool(handles, &metrics, trace.as_deref(), drained, respawn);
             });
         match spawned {
             Ok(h) => {
@@ -742,6 +781,7 @@ impl ModelServer {
         // Same all-or-nothing spawn discipline as register_tier: the tier
         // only becomes routable once its whole worker pool is live.
         let model = Arc::new(model);
+        let tier_trace = self.router.tracer().map(|t| t.tier(name));
         let spec = SeqWorker {
             model: Arc::clone(&model),
             queue: Arc::clone(&queue),
@@ -753,6 +793,7 @@ impl ModelServer {
             faults: cfg.faults.clone(),
             quarantine_strikes: cfg.quarantine_strikes,
             numeric_guard: cfg.numeric_guard,
+            trace: tier_trace.clone(),
         };
         let mut handles = Vec::with_capacity(cfg.workers);
         for i in 0..cfg.workers {
@@ -796,7 +837,14 @@ impl ModelServer {
                 .spawn(move || w.run())
         };
         let dq = Arc::clone(&queue);
-        self.supervise(name, handles, tier_metrics, move || dq.is_drained(), respawn);
+        self.supervise(
+            name,
+            handles,
+            tier_metrics,
+            tier_trace,
+            move || dq.is_drained(),
+            respawn,
+        );
         Ok(info)
     }
 
@@ -880,6 +928,7 @@ impl Drop for ModelServer {
 fn supervise_pool(
     mut handles: Vec<std::thread::JoinHandle<()>>,
     metrics: &TierMetrics,
+    trace: Option<&TierTrace>,
     drained: impl Fn() -> bool,
     respawn: impl Fn(usize) -> std::io::Result<std::thread::JoinHandle<()>>,
 ) {
@@ -910,6 +959,9 @@ fn supervise_pool(
                 if let Ok(h) = respawn(respawned) {
                     metrics.live_workers_add(1);
                     handles.push(h);
+                    if let Some(t) = trace {
+                        t.record_now(EventClass::Restart, 0, format!("respawn={respawned}"));
+                    }
                 }
             }
         } else {
@@ -951,6 +1003,7 @@ impl SwapHandle {
                 )));
             }
         };
+        let t_probe = Instant::now();
         let probe = probe_model(&model, info.in_dim, info.max_batch)?;
         // The tier's transform was validated against the registration
         // model's raw output width; the replacement must keep that raw
@@ -966,6 +1019,16 @@ impl SwapHandle {
         let version = slot.publish(model);
         if let Some(tm) = self.metrics.tier(name) {
             tm.record_swap();
+        }
+        // Tier-level swap fence event: span covers re-probe + publish.
+        if let Some(tracer) = self.router.tracer() {
+            tracer.tier(name).record_at(
+                EventClass::Swap,
+                t_probe,
+                t_probe.elapsed(),
+                0,
+                format!("v={version}"),
+            );
         }
         Ok(version)
     }
@@ -1011,11 +1074,21 @@ impl ServeHandle {
         // the hot-swap atomicity point. Whatever `swap_tier_model`
         // publishes later, this request executes — and replies — on the
         // version it captured here.
+        let model = slot.current();
+        // Admission is also the tracing point: mint the trace id and
+        // record the `admit` instant (carrying the pinned version). One
+        // never-taken branch when tracing is off.
+        let trace = self.router.tracer().map(|tr| {
+            let ctx = tr.ctx(&info.name);
+            ctx.instant(EventClass::Admit, format!("v={}", model.version));
+            ctx
+        });
         let req = ServeRequest {
             row: row.to_vec(),
             reply: tx,
             enqueued: Instant::now(),
-            model: slot.current(),
+            model,
+            trace,
         };
         Ok((queue, req, PendingReply { rx }))
     }
@@ -1055,10 +1128,16 @@ impl ServeHandle {
             });
         }
         let (tx, rx) = mpsc::channel();
+        let trace = self.router.tracer().map(|tr| {
+            let ctx = tr.ctx(&info.name);
+            ctx.instant(EventClass::Admit, format!("tokens={}", tokens.rows()));
+            ctx
+        });
         let req = SeqServeRequest {
             tokens: tokens.clone(),
             reply: tx,
             enqueued: Instant::now(),
+            trace,
         };
         Ok((queue, req, PendingSeqReply { rx }))
     }

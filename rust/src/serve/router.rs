@@ -27,12 +27,14 @@
 //!    guarantee they hold.
 
 use super::batcher::{ModelSlot, SeqServeRequest, ServeRequest, TierQueue};
+use super::trace::Tracer;
 use super::{SeqTierInfo, ServeError, TierInfo};
 use crate::linalg::Mat;
 use crate::nn::{ForwardCtx, Model, SeqBatch};
 use crate::rng::Philox;
 use crate::util::memtrack::MemTracker;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
 /// One registered tier: the model replicaset behind its queue. Row tiers
@@ -84,6 +86,10 @@ impl Tier {
 pub(crate) struct Router {
     tiers: Mutex<HashMap<String, Arc<Tier>>>,
     default_tier: Mutex<Option<String>>,
+    /// Lock-free "is tracing on?" flag mirroring `tracer`, so the
+    /// admission hot path pays one relaxed load when tracing is off.
+    tracing: AtomicBool,
+    tracer: Mutex<Option<Arc<Tracer>>>,
 }
 
 /// The typed unknown-tier error, carrying the registered names so the
@@ -165,6 +171,23 @@ impl Router {
             .collect();
         v.sort_by(|a, b| a.0.cmp(&b.0));
         v
+    }
+
+    /// Install (or clear) the tracer. Admissions pick it up immediately;
+    /// worker/supervisor tier-level sinks are captured at registration.
+    pub(crate) fn set_tracer(&self, t: Option<Arc<Tracer>>) {
+        let mut cur = crate::util::lock_ignore_poison(&self.tracer);
+        self.tracing.store(t.is_some(), Ordering::Relaxed);
+        *cur = t;
+    }
+
+    /// The installed tracer, if tracing is enabled. One relaxed load when
+    /// off — the hot-path cost the acceptance criteria bound.
+    pub(crate) fn tracer(&self) -> Option<Arc<Tracer>> {
+        if !self.tracing.load(Ordering::Relaxed) {
+            return None;
+        }
+        crate::util::lock_ignore_poison(&self.tracer).clone()
     }
 
     /// Close every tier queue (stops admissions; queued work drains).

@@ -1,0 +1,431 @@
+//! Request-scoped tracing for the serve stack.
+//!
+//! Every admitted request gets a trace id at admission and accumulates
+//! structured [`Event`]s — queue wait, exec, transform, terminal
+//! reply/error, plus the cascade/chaos machinery around it (sheds,
+//! speculation legs, quarantine rounds, hot-swap fences, supervisor
+//! restarts) — into one bounded [`EventRing`] per tier. A per-class
+//! token-bucket [`ClassLimiter`] caps the record rate so a chaos storm
+//! cannot flood the ring, with exact recorded/suppressed accounting.
+//!
+//! The contract with the hot path mirrors `FaultPlan`: when tracing is
+//! off the workers hold `None` and pay a single never-taken branch;
+//! replies are bitwise identical either way (tested in `tests/trace.rs`).
+//!
+//! **Per-answered-request span chain** (recorded at reply time so worker
+//! kills, requeues, and quarantine replays cannot double-count): exactly
+//! one `admit`, one `queue_wait` span, one `exec` span, and exactly one
+//! terminal (`reply` xor `error`), plus one `transform` span when the
+//! tier's output transform is not `Raw`.
+//!
+//! Exporters: [`TraceLog::export_jsonl`] (one JSON object per line) and
+//! [`TraceLog::export_chrome_trace`] (a `chrome://tracing` / Perfetto
+//! loadable JSON document).
+
+use crate::util::events::{ClassLimiter, Event, EventClass, EventRing};
+use crate::util::json::Json;
+use crate::util::lock_ignore_poison;
+use crate::util::log as plog;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Tracing knobs. Defaults keep a few thousand recent events per tier and
+/// admit bursts of ~1024 per event class with a modest steady-state refill.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    /// Per-tier ring capacity (oldest events are evicted past this).
+    pub ring_capacity: usize,
+    /// Token-bucket burst capacity per event class.
+    pub bucket_capacity: u64,
+    /// Token refill rate per class per second; `0.0` never refills
+    /// (exactly `bucket_capacity` events per class get recorded — the
+    /// deterministic setting the accounting tests use).
+    pub refill_per_sec: f64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            ring_capacity: 4096,
+            bucket_capacity: 1024,
+            refill_per_sec: 256.0,
+        }
+    }
+}
+
+/// Per-tier trace sink: one ring + one rate limiter. Carries its own copy
+/// of the tracer's start instant so recording needs no back-reference.
+pub struct TierTrace {
+    name: String,
+    start: Instant,
+    ring: EventRing,
+    limiter: ClassLimiter,
+}
+
+impl TierTrace {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Record an instant event happening now.
+    pub fn record_now(&self, class: EventClass, trace: u64, detail: String) {
+        self.record_at(class, Instant::now(), Duration::ZERO, trace, detail);
+    }
+
+    /// Record a span that started at `at` and lasted `dur` (`ZERO` = instant).
+    /// Suppressed events (rate limiter) are counted, not recorded — and the
+    /// suppression also covers the warn/error log line, so the token bucket
+    /// rate-limits structured logging too.
+    pub fn record_at(
+        &self,
+        class: EventClass,
+        at: Instant,
+        dur: Duration,
+        trace: u64,
+        detail: String,
+    ) {
+        if !self.limiter.admit(class) {
+            return;
+        }
+        if let Some(lv) = class.severity() {
+            plog::log(
+                lv,
+                "panther::serve::trace",
+                &format!(
+                    "tier={} event={} trace={} {}",
+                    self.name,
+                    class.name(),
+                    trace,
+                    detail
+                ),
+            );
+        }
+        let t_us = at
+            .checked_duration_since(self.start)
+            .unwrap_or_default()
+            .as_micros() as u64;
+        self.ring.push(Event {
+            t_us,
+            dur_us: dur.as_micros() as u64,
+            class,
+            trace,
+            detail,
+        });
+    }
+}
+
+/// A request's handle into its tier's trace sink: the trace id plus the
+/// sink. Cloned onto both legs of a speculative pair.
+#[derive(Clone)]
+pub struct TraceCtx {
+    id: u64,
+    tier: Arc<TierTrace>,
+}
+
+impl TraceCtx {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn tier(&self) -> &Arc<TierTrace> {
+        &self.tier
+    }
+
+    /// Record an instant event for this request.
+    pub fn instant(&self, class: EventClass, detail: String) {
+        self.tier.record_now(class, self.id, detail);
+    }
+
+    /// Record a span for this request.
+    pub fn span_at(&self, class: EventClass, at: Instant, dur: Duration, detail: String) {
+        self.tier.record_at(class, at, dur, self.id, detail);
+    }
+}
+
+/// The tracer: allocates trace ids and owns one [`TierTrace`] per tier.
+pub struct Tracer {
+    start: Instant,
+    next_id: AtomicU64,
+    cfg: TraceConfig,
+    tiers: Mutex<HashMap<String, Arc<TierTrace>>>,
+}
+
+impl Tracer {
+    pub fn new(cfg: TraceConfig) -> Tracer {
+        Tracer {
+            start: Instant::now(),
+            next_id: AtomicU64::new(1),
+            cfg,
+            tiers: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The per-tier sink, created on first use.
+    pub fn tier(&self, name: &str) -> Arc<TierTrace> {
+        let mut tiers = lock_ignore_poison(&self.tiers);
+        Arc::clone(tiers.entry(name.to_string()).or_insert_with(|| {
+            Arc::new(TierTrace {
+                name: name.to_string(),
+                start: self.start,
+                ring: EventRing::new(self.cfg.ring_capacity),
+                limiter: ClassLimiter::new(self.cfg.bucket_capacity, self.cfg.refill_per_sec),
+            })
+        }))
+    }
+
+    /// Mint a fresh trace id bound to `tier`'s sink (ids start at 1; 0 is
+    /// reserved for tier-level events).
+    pub fn ctx(&self, tier: &str) -> TraceCtx {
+        TraceCtx {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            tier: self.tier(tier),
+        }
+    }
+
+    /// Snapshot every tier's retained events and exact per-class accounting.
+    pub fn log(&self) -> TraceLog {
+        let tiers = lock_ignore_poison(&self.tiers);
+        let mut out: Vec<TierTraceLog> = tiers
+            .values()
+            .map(|t| {
+                let mut recorded = [0u64; EventClass::COUNT];
+                let mut suppressed = [0u64; EventClass::COUNT];
+                for c in EventClass::ALL {
+                    recorded[c as usize] = t.limiter.recorded(c);
+                    suppressed[c as usize] = t.limiter.suppressed(c);
+                }
+                TierTraceLog {
+                    tier: t.name.clone(),
+                    events: t.ring.snapshot(),
+                    recorded,
+                    suppressed,
+                    overflow: t.ring.overflow(),
+                }
+            })
+            .collect();
+        out.sort_by(|a, b| a.tier.cmp(&b.tier));
+        TraceLog { tiers: out }
+    }
+}
+
+/// One tier's snapshot: retained events (oldest first) plus the exact
+/// per-class recorded/suppressed counters and the ring-overflow count.
+pub struct TierTraceLog {
+    pub tier: String,
+    pub events: Vec<Event>,
+    pub recorded: [u64; EventClass::COUNT],
+    pub suppressed: [u64; EventClass::COUNT],
+    /// Events evicted from the ring to make room (distinct from
+    /// rate-limiter suppression: these were recorded, then aged out).
+    pub overflow: u64,
+}
+
+impl TierTraceLog {
+    pub fn recorded(&self, class: EventClass) -> u64 {
+        self.recorded[class as usize]
+    }
+
+    pub fn suppressed(&self, class: EventClass) -> u64 {
+        self.suppressed[class as usize]
+    }
+}
+
+/// Point-in-time export of the whole tracer (tiers sorted by name).
+pub struct TraceLog {
+    pub tiers: Vec<TierTraceLog>,
+}
+
+impl TraceLog {
+    /// All retained events across tiers that belong to `trace` id,
+    /// ordered by start time. The per-request chain-completeness tests
+    /// reconstruct each reply's path from this.
+    pub fn events_for(&self, trace: u64) -> Vec<(&str, &Event)> {
+        let mut out: Vec<(&str, &Event)> = self
+            .tiers
+            .iter()
+            .flat_map(|t| {
+                t.events
+                    .iter()
+                    .filter(|e| e.trace == trace)
+                    .map(|e| (t.tier.as_str(), e))
+            })
+            .collect();
+        out.sort_by_key(|(_, e)| e.t_us);
+        out
+    }
+
+    /// One JSON object per line:
+    /// `{"tier":..,"class":..,"t_us":..,"dur_us":..,"trace":..,"detail":..}`.
+    pub fn export_jsonl(&self) -> String {
+        let mut out = String::new();
+        for t in &self.tiers {
+            for e in &t.events {
+                let mut o = Json::obj();
+                o.set("tier", t.tier.as_str())
+                    .set("class", e.class.name())
+                    .set("t_us", e.t_us)
+                    .set("dur_us", e.dur_us)
+                    .set("trace", e.trace)
+                    .set("detail", e.detail.as_str());
+                out.push_str(&o.to_string());
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Chrome trace-event JSON (`chrome://tracing` / Perfetto). Tiers map
+    /// to processes (with `process_name` metadata), trace ids to threads;
+    /// spans are `ph:"X"` complete events, instants are `ph:"i"`.
+    pub fn export_chrome_trace(&self) -> String {
+        let mut events: Vec<Json> = Vec::new();
+        for (pid, t) in self.tiers.iter().enumerate() {
+            let mut meta = Json::obj();
+            let mut args = Json::obj();
+            args.set("name", t.tier.as_str());
+            meta.set("ph", "M")
+                .set("name", "process_name")
+                .set("pid", pid)
+                .set("args", args);
+            events.push(meta);
+            for e in &t.events {
+                let mut o = Json::obj();
+                let mut args = Json::obj();
+                args.set("detail", e.detail.as_str());
+                o.set("name", e.class.name())
+                    .set("cat", "serve")
+                    .set("pid", pid)
+                    .set("tid", e.trace)
+                    .set("ts", e.t_us)
+                    .set("args", args);
+                if e.dur_us > 0 {
+                    o.set("ph", "X").set("dur", e.dur_us);
+                } else {
+                    o.set("ph", "i").set("s", "t");
+                }
+                events.push(o);
+            }
+        }
+        let mut doc = Json::obj();
+        doc.set("traceEvents", Json::Arr(events));
+        doc.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_start_at_one_and_increment() {
+        let tr = Tracer::new(TraceConfig::default());
+        let a = tr.ctx("t");
+        let b = tr.ctx("t");
+        assert_eq!(a.id(), 1);
+        assert_eq!(b.id(), 2);
+        // Same tier name → same sink.
+        assert!(Arc::ptr_eq(a.tier(), b.tier()));
+    }
+
+    #[test]
+    fn jsonl_round_trips() {
+        let tr = Tracer::new(TraceConfig::default());
+        let c = tr.ctx("t");
+        c.instant(EventClass::Admit, "v=0".to_string());
+        c.span_at(
+            EventClass::Exec,
+            Instant::now(),
+            Duration::from_micros(250),
+            String::new(),
+        );
+        let log = tr.log();
+        let jsonl = log.export_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            let v = Json::parse(line).expect("jsonl line parses");
+            assert_eq!(v.get("tier").and_then(Json::as_str), Some("t"));
+            assert_eq!(v.get("trace").and_then(Json::as_f64), Some(1.0));
+        }
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("class").and_then(Json::as_str), Some("admit"));
+        assert_eq!(first.get("detail").and_then(Json::as_str), Some("v=0"));
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let tr = Tracer::new(TraceConfig::default());
+        let c = tr.ctx("fast");
+        c.instant(EventClass::Admit, String::new());
+        c.span_at(
+            EventClass::Exec,
+            Instant::now(),
+            Duration::from_micros(100),
+            String::new(),
+        );
+        tr.tier("slow")
+            .record_now(EventClass::Restart, 0, "worker=1".to_string());
+        let doc = Json::parse(&tr.log().export_chrome_trace()).expect("chrome trace parses");
+        let evs = doc
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .expect("traceEvents array");
+        // 2 process_name metadata + 3 events.
+        assert_eq!(evs.len(), 5);
+        let metas: Vec<_> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .collect();
+        assert_eq!(metas.len(), 2);
+        let spans: Vec<_> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .collect();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].get("dur").and_then(Json::as_f64), Some(100.0));
+        assert_eq!(spans[0].get("name").and_then(Json::as_str), Some("exec"));
+    }
+
+    #[test]
+    fn limiter_suppression_is_accounted() {
+        let tr = Tracer::new(TraceConfig {
+            ring_capacity: 64,
+            bucket_capacity: 3,
+            refill_per_sec: 0.0,
+        });
+        let sink = tr.tier("t");
+        for i in 0..10 {
+            sink.record_now(EventClass::Fault, 0, format!("n={i}"));
+        }
+        let log = tr.log();
+        let t = &log.tiers[0];
+        assert_eq!(t.recorded(EventClass::Fault), 3);
+        assert_eq!(t.suppressed(EventClass::Fault), 7);
+        assert_eq!(t.events.len(), 3);
+        assert_eq!(t.overflow, 0);
+    }
+
+    #[test]
+    fn ring_overflow_is_separate_from_suppression() {
+        let tr = Tracer::new(TraceConfig {
+            ring_capacity: 2,
+            bucket_capacity: 1024,
+            refill_per_sec: 0.0,
+        });
+        let sink = tr.tier("t");
+        for i in 0..5 {
+            sink.record_now(EventClass::Reply, i, String::new());
+        }
+        let log = tr.log();
+        let t = &log.tiers[0];
+        assert_eq!(t.recorded(EventClass::Reply), 5);
+        assert_eq!(t.suppressed(EventClass::Reply), 0);
+        assert_eq!(t.events.len(), 2);
+        assert_eq!(t.overflow, 3);
+        // The retained events are the newest ones.
+        assert_eq!(t.events[0].trace, 3);
+        assert_eq!(t.events[1].trace, 4);
+    }
+}

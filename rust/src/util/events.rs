@@ -1,0 +1,402 @@
+//! Structured event primitives for the serve-stack tracing layer
+//! ([`crate::serve::trace`]): a typed event vocabulary, a bounded ring
+//! buffer, a token-bucket rate limiter with exact per-class accounting, and
+//! a wall-clock stage profiler.
+//!
+//! Everything here is `std`-only and independent of the serve layer so the
+//! profiler can also be threaded through `nn` forwards and `linalg::gemm`
+//! without a dependency cycle.
+
+use crate::util::bench::Table;
+use crate::util::lock_ignore_poison;
+use crate::util::log::Level;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// The event vocabulary of the serve stack. Per-request classes trace one
+/// request's path (admission → reply); tier-level classes (recorded with
+/// trace id 0) describe the machinery around it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(usize)]
+pub enum EventClass {
+    /// Request admitted; detail carries the pinned model version.
+    Admit = 0,
+    /// Span from enqueue to batch execution start (queue + coalesce wait).
+    QueueWait = 1,
+    /// Span covering the batched model forward the request rode in.
+    Exec = 2,
+    /// Output transform (softmax/top-k) applied to the request's batch.
+    Transform = 3,
+    /// Terminal: reply sent with an `Ok` payload.
+    Reply = 4,
+    /// Terminal: reply sent with a typed error; detail names the kind.
+    Error = 5,
+    /// Cascade routed the request below the best eligible rung.
+    Shed = 6,
+    /// Cascade found no rung that can meet the deadline (tier-level).
+    SloReject = 7,
+    /// Speculative fast+verify pair launched; detail links the fast leg.
+    Speculate = 8,
+    /// Speculative verify leg settled with an upgraded answer.
+    Upgrade = 9,
+    /// Speculative verify leg failed or was dropped; fast answer stands.
+    Revoke = 10,
+    /// Quarantine bisection re-executed a sub-batch (tier-level).
+    Quarantine = 11,
+    /// A row struck out of quarantine as a confirmed poison input.
+    Poisoned = 12,
+    /// Numeric guard rejected non-finite output rows.
+    NonFinite = 13,
+    /// Model hot-swap published a new version (tier-level).
+    Swap = 14,
+    /// Supervisor respawned a dead worker (tier-level).
+    Restart = 15,
+    /// Fault injection armed for a batch (tier-level; detail says what).
+    Fault = 16,
+}
+
+impl EventClass {
+    pub const COUNT: usize = 17;
+
+    /// Every class, indexable by `class as usize`.
+    pub const ALL: [EventClass; EventClass::COUNT] = [
+        EventClass::Admit,
+        EventClass::QueueWait,
+        EventClass::Exec,
+        EventClass::Transform,
+        EventClass::Reply,
+        EventClass::Error,
+        EventClass::Shed,
+        EventClass::SloReject,
+        EventClass::Speculate,
+        EventClass::Upgrade,
+        EventClass::Revoke,
+        EventClass::Quarantine,
+        EventClass::Poisoned,
+        EventClass::NonFinite,
+        EventClass::Swap,
+        EventClass::Restart,
+        EventClass::Fault,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EventClass::Admit => "admit",
+            EventClass::QueueWait => "queue_wait",
+            EventClass::Exec => "exec",
+            EventClass::Transform => "transform",
+            EventClass::Reply => "reply",
+            EventClass::Error => "error",
+            EventClass::Shed => "shed",
+            EventClass::SloReject => "slo_reject",
+            EventClass::Speculate => "speculate",
+            EventClass::Upgrade => "upgrade",
+            EventClass::Revoke => "revoke",
+            EventClass::Quarantine => "quarantine",
+            EventClass::Poisoned => "poisoned",
+            EventClass::NonFinite => "nonfinite",
+            EventClass::Swap => "swap",
+            EventClass::Restart => "restart",
+            EventClass::Fault => "fault",
+        }
+    }
+
+    /// Log severity for classes that should also surface through
+    /// [`crate::util::log`] when recorded; `None` stays trace-only.
+    pub fn severity(self) -> Option<Level> {
+        match self {
+            EventClass::Fault | EventClass::Restart | EventClass::Quarantine => Some(Level::Warn),
+            EventClass::Poisoned | EventClass::NonFinite | EventClass::Error => {
+                Some(Level::Error)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// One structured event. `dur_us == 0` marks an instant; `trace == 0` marks
+/// a tier-level event not attached to any single request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Event {
+    /// Microseconds since the tracer started.
+    pub t_us: u64,
+    /// Span duration in microseconds (0 = instant event).
+    pub dur_us: u64,
+    pub class: EventClass,
+    /// Trace id of the request this event belongs to (0 = tier-level).
+    pub trace: u64,
+    /// Free-form detail (`"v=3"`, `"kind=PoisonedInput"`, ...).
+    pub detail: String,
+}
+
+/// Bounded FIFO ring of events. Pushing past capacity drops the oldest
+/// event and counts it in `overflow` — recent history always survives a
+/// storm; the counter keeps the loss honest.
+pub struct EventRing {
+    inner: Mutex<VecDeque<Event>>,
+    cap: usize,
+    dropped: AtomicU64,
+}
+
+impl EventRing {
+    pub fn new(cap: usize) -> EventRing {
+        EventRing {
+            inner: Mutex::new(VecDeque::with_capacity(cap.max(1))),
+            cap: cap.max(1),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn push(&self, e: Event) {
+        let mut q = lock_ignore_poison(&self.inner);
+        if q.len() == self.cap {
+            q.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        q.push_back(e);
+    }
+
+    /// Oldest-first copy of the retained events.
+    pub fn snapshot(&self) -> Vec<Event> {
+        lock_ignore_poison(&self.inner).iter().cloned().collect()
+    }
+
+    /// Events evicted to make room (ring overflow, not rate limiting).
+    pub fn overflow(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+struct BucketState {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Classic token bucket: `capacity` burst tokens, refilled continuously at
+/// `refill_per_sec`. With `refill_per_sec == 0.0` the bucket never refills —
+/// exactly `capacity` takes succeed, which makes suppression tests
+/// deterministic.
+pub struct TokenBucket {
+    capacity: f64,
+    refill_per_sec: f64,
+    state: Mutex<BucketState>,
+}
+
+impl TokenBucket {
+    pub fn new(capacity: u64, refill_per_sec: f64) -> TokenBucket {
+        TokenBucket {
+            capacity: capacity as f64,
+            refill_per_sec: refill_per_sec.max(0.0),
+            state: Mutex::new(BucketState {
+                tokens: capacity as f64,
+                last: Instant::now(),
+            }),
+        }
+    }
+
+    /// Take one token if available.
+    pub fn try_take(&self) -> bool {
+        let mut st = lock_ignore_poison(&self.state);
+        if self.refill_per_sec > 0.0 {
+            let now = Instant::now();
+            let dt = now.duration_since(st.last).as_secs_f64();
+            st.tokens = (st.tokens + dt * self.refill_per_sec).min(self.capacity);
+            st.last = now;
+        }
+        if st.tokens >= 1.0 {
+            st.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Per-[`EventClass`] token buckets with exact accounting: every attempt is
+/// counted as either recorded or suppressed, so
+/// `recorded(c) + suppressed(c)` equals the number of `admit(c)` calls for
+/// every class `c` — the invariant the trace tests assert.
+pub struct ClassLimiter {
+    buckets: Vec<TokenBucket>,
+    recorded: Vec<AtomicU64>,
+    suppressed: Vec<AtomicU64>,
+}
+
+impl ClassLimiter {
+    pub fn new(capacity: u64, refill_per_sec: f64) -> ClassLimiter {
+        ClassLimiter {
+            buckets: (0..EventClass::COUNT)
+                .map(|_| TokenBucket::new(capacity, refill_per_sec))
+                .collect(),
+            recorded: (0..EventClass::COUNT).map(|_| AtomicU64::new(0)).collect(),
+            suppressed: (0..EventClass::COUNT).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Charge one event of `class`; `true` means record it, `false` means
+    /// it was suppressed (and counted as such).
+    pub fn admit(&self, class: EventClass) -> bool {
+        let i = class as usize;
+        if self.buckets[i].try_take() {
+            self.recorded[i].fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            self.suppressed[i].fetch_add(1, Ordering::Relaxed);
+            false
+        }
+    }
+
+    pub fn recorded(&self, class: EventClass) -> u64 {
+        self.recorded[class as usize].load(Ordering::Relaxed)
+    }
+
+    pub fn suppressed(&self, class: EventClass) -> u64 {
+        self.suppressed[class as usize].load(Ordering::Relaxed)
+    }
+
+    pub fn total_suppressed(&self) -> u64 {
+        self.suppressed.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Aggregate wall time of one named stage.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageStat {
+    pub calls: u64,
+    pub total_ns: u64,
+}
+
+impl StageStat {
+    pub fn mean(&self) -> Duration {
+        if self.calls == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_nanos(self.total_ns / self.calls)
+        }
+    }
+}
+
+/// Stage-level wall-clock profiler: named stages (`"layer/fc1"`,
+/// `"gemm/pack"`, `"gemm/kernel"`) accumulate call counts and total time.
+/// Attached behind an `Option` so the unprofiled path pays one branch.
+#[derive(Default)]
+pub struct StageProfiler {
+    stages: Mutex<BTreeMap<String, StageStat>>,
+}
+
+impl StageProfiler {
+    pub fn new() -> StageProfiler {
+        StageProfiler::default()
+    }
+
+    pub fn record(&self, stage: &str, d: Duration) {
+        let mut m = lock_ignore_poison(&self.stages);
+        let s = m.entry(stage.to_string()).or_default();
+        s.calls += 1;
+        s.total_ns += d.as_nanos() as u64;
+    }
+
+    /// Alphabetical copy of the accumulated stages.
+    pub fn snapshot(&self) -> BTreeMap<String, StageStat> {
+        lock_ignore_poison(&self.stages).clone()
+    }
+
+    /// Human-readable table of stages, calls, total, and mean time.
+    pub fn report(&self) -> String {
+        let mut t = Table::new(&["stage", "calls", "total", "mean"]);
+        for (name, s) in self.snapshot() {
+            t.row(&[
+                name,
+                s.calls.to_string(),
+                crate::util::human_duration(Duration::from_nanos(s.total_ns)),
+                crate::util::human_duration(s.mean()),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_table_is_consistent() {
+        assert_eq!(EventClass::ALL.len(), EventClass::COUNT);
+        for (i, c) in EventClass::ALL.iter().enumerate() {
+            assert_eq!(*c as usize, i);
+        }
+        // Names are unique (the exporters key on them).
+        let mut names: Vec<_> = EventClass::ALL.iter().map(|c| c.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), EventClass::COUNT);
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let ring = EventRing::new(3);
+        for i in 0..5u64 {
+            ring.push(Event {
+                t_us: i,
+                dur_us: 0,
+                class: EventClass::Admit,
+                trace: i,
+                detail: String::new(),
+            });
+        }
+        let snap = ring.snapshot();
+        assert_eq!(snap.iter().map(|e| e.t_us).collect::<Vec<_>>(), [2, 3, 4]);
+        assert_eq!(ring.overflow(), 2);
+    }
+
+    #[test]
+    fn zero_refill_bucket_is_exact() {
+        let b = TokenBucket::new(3, 0.0);
+        assert_eq!((0..10).filter(|_| b.try_take()).count(), 3);
+    }
+
+    #[test]
+    fn limiter_accounting_is_exact() {
+        let lim = ClassLimiter::new(2, 0.0);
+        let attempts = 7u64;
+        for _ in 0..attempts {
+            lim.admit(EventClass::Fault);
+        }
+        assert_eq!(lim.recorded(EventClass::Fault), 2);
+        assert_eq!(lim.suppressed(EventClass::Fault), attempts - 2);
+        // Other classes untouched.
+        assert_eq!(lim.recorded(EventClass::Reply), 0);
+        assert_eq!(lim.total_suppressed(), attempts - 2);
+    }
+
+    #[test]
+    fn refilling_bucket_recovers() {
+        let b = TokenBucket::new(1, 1000.0);
+        assert!(b.try_take());
+        // Drained now; after ~2 ms at 1000 tokens/s at least one token is back.
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(b.try_take());
+    }
+
+    #[test]
+    fn profiler_accumulates() {
+        let p = StageProfiler::new();
+        p.record("gemm/pack", Duration::from_micros(10));
+        p.record("gemm/pack", Duration::from_micros(20));
+        p.record("layer/fc1", Duration::from_micros(5));
+        let snap = p.snapshot();
+        assert_eq!(snap["gemm/pack"].calls, 2);
+        assert_eq!(snap["gemm/pack"].total_ns, 30_000);
+        assert_eq!(snap["gemm/pack"].mean(), Duration::from_micros(15));
+        assert_eq!(snap["layer/fc1"].calls, 1);
+        let rep = p.report();
+        assert!(rep.contains("gemm/pack") && rep.contains("layer/fc1"));
+    }
+}

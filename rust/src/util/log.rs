@@ -1,7 +1,22 @@
-//! Leveled, timestamped logging to stderr. `PANTHER_LOG` selects the level
-//! (`error|warn|info|debug|trace`, default `info`).
+//! Leveled, timestamped logging to stderr with per-module level overrides
+//! and an optional structured JSON-line output mode.
+//!
+//! `PANTHER_LOG` configures levels. Each comma-separated token is either a
+//! bare level (`error|warn|info|debug|trace`) setting the default, or a
+//! `module=level` override (`PANTHER_LOG=info,serve=debug`). An override
+//! applies when any `::`-segment of the call site's `module_path!()` equals
+//! the key (so `serve=debug` covers `panther::serve::batcher`); when several
+//! tokens match, the last one wins.
+//!
+//! `PANTHER_LOG_FORMAT=json` switches output from the human-readable line to
+//! one JSON object per line (`{"level":..,"module":..,"msg":..,"t_s":..}`),
+//! escaped through [`crate::util::json`] so messages with quotes or control
+//! characters stay machine-parseable.
 
+use crate::util::json::Json;
+use crate::util::lock_ignore_poison;
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -34,41 +49,129 @@ impl Level {
             Level::Trace => "TRACE",
         }
     }
-}
 
-static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
-
-static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
-
-fn level() -> Level {
-    let raw = LEVEL.load(Ordering::Relaxed);
-    if raw == 255 {
-        let lv = std::env::var("PANTHER_LOG")
-            .map(|s| Level::from_str(&s))
-            .unwrap_or(Level::Info);
-        LEVEL.store(lv as u8, Ordering::Relaxed);
-        lv
-    } else {
-        // SAFETY-free mapping: raw was stored from a valid Level.
-        match raw {
-            0 => Level::Error,
-            1 => Level::Warn,
-            2 => Level::Info,
-            3 => Level::Debug,
-            _ => Level::Trace,
+    /// Lowercase name (JSON output).
+    fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
         }
     }
 }
 
-/// Override the level programmatically (tests, examples).
+struct LogConfig {
+    default: Level,
+    /// `(module-segment, level)` overrides in specification order.
+    overrides: Vec<(String, Level)>,
+    json: bool,
+}
+
+/// Cached `max(default, overrides)` for the lock-free rejection fast path.
+/// 255 = configuration not yet loaded.
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(255);
+
+static CONFIG: OnceLock<Mutex<LogConfig>> = OnceLock::new();
+
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Parse a `PANTHER_LOG` spec into `(default, overrides)`.
+fn parse_spec(spec: &str) -> (Level, Vec<(String, Level)>) {
+    let mut default = Level::Info;
+    let mut overrides = Vec::new();
+    for tok in spec.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        match tok.split_once('=') {
+            Some((m, lv)) => overrides.push((m.trim().to_string(), Level::from_str(lv.trim()))),
+            None => default = Level::from_str(tok),
+        }
+    }
+    (default, overrides)
+}
+
+/// Effective level for a `module_path!()`-style module string: the default,
+/// unless an override key equals the full path or any `::`-segment of it
+/// (last matching override wins).
+fn effective(cfg: &LogConfig, module: &str) -> Level {
+    let mut lv = cfg.default;
+    for (key, l) in &cfg.overrides {
+        if module == key.as_str() || module.split("::").any(|seg| seg == key) {
+            lv = *l;
+        }
+    }
+    lv
+}
+
+fn max_of(cfg: &LogConfig) -> Level {
+    cfg.overrides
+        .iter()
+        .map(|(_, l)| *l)
+        .fold(cfg.default, Level::max)
+}
+
+fn config() -> &'static Mutex<LogConfig> {
+    CONFIG.get_or_init(|| {
+        let (default, overrides) = std::env::var("PANTHER_LOG")
+            .map(|s| parse_spec(&s))
+            .unwrap_or((Level::Info, Vec::new()));
+        let json = std::env::var("PANTHER_LOG_FORMAT")
+            .is_ok_and(|s| s.eq_ignore_ascii_case("json"));
+        let cfg = LogConfig {
+            default,
+            overrides,
+            json,
+        };
+        MAX_LEVEL.store(max_of(&cfg) as u8, Ordering::Relaxed);
+        Mutex::new(cfg)
+    })
+}
+
+/// Override the default level programmatically (tests, examples).
 pub fn set_level(lv: Level) {
-    LEVEL.store(lv as u8, Ordering::Relaxed);
+    let mut cfg = lock_ignore_poison(config());
+    cfg.default = lv;
+    MAX_LEVEL.store(max_of(&cfg) as u8, Ordering::Relaxed);
+}
+
+/// Add a per-module override programmatically, as if `module=level` had been
+/// appended to `PANTHER_LOG`.
+pub fn set_module_level(module: &str, lv: Level) {
+    let mut cfg = lock_ignore_poison(config());
+    cfg.overrides.push((module.to_string(), lv));
+    MAX_LEVEL.store(max_of(&cfg) as u8, Ordering::Relaxed);
+}
+
+/// Switch JSON-line output on/off programmatically, as if
+/// `PANTHER_LOG_FORMAT=json` had been set.
+pub fn set_format_json(on: bool) {
+    lock_ignore_poison(config()).json = on;
 }
 
 /// Core log call — prefer the macros.
 pub fn log(lv: Level, module: &str, msg: &str) {
-    if lv <= level() {
-        let t = START.get_or_init(Instant::now).elapsed();
+    // Lock-free fast path: nothing anywhere logs at this level.
+    let max = MAX_LEVEL.load(Ordering::Relaxed);
+    if max != 255 && lv as u8 > max {
+        return;
+    }
+    let cfg = lock_ignore_poison(config());
+    if lv > effective(&cfg, module) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed();
+    if cfg.json {
+        let mut o = Json::obj();
+        o.set("t_s", (t.as_secs_f64() * 1e3).round() / 1e3)
+            .set("level", lv.name())
+            .set("module", module)
+            .set("msg", msg);
+        eprintln!("{}", o.to_string());
+    } else {
         eprintln!("[{:>9.3}s {} {}] {}", t.as_secs_f64(), lv.tag(), module, msg);
     }
 }
@@ -116,5 +219,41 @@ mod tests {
     fn level_ordering() {
         assert!(Level::Error < Level::Warn);
         assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn spec_parsing() {
+        let (d, o) = parse_spec("info,serve=debug, gemm = trace ,warn");
+        // Last bare token wins for the default.
+        assert_eq!(d, Level::Warn);
+        assert_eq!(
+            o,
+            vec![
+                ("serve".to_string(), Level::Debug),
+                ("gemm".to_string(), Level::Trace)
+            ]
+        );
+        let (d, o) = parse_spec("");
+        assert_eq!(d, Level::Info);
+        assert!(o.is_empty());
+    }
+
+    #[test]
+    fn effective_module_levels() {
+        let (default, overrides) = parse_spec("warn,serve=debug,batcher=error");
+        let cfg = LogConfig {
+            default,
+            overrides,
+            json: false,
+        };
+        // Segment match anywhere in the path.
+        assert_eq!(effective(&cfg, "panther::serve"), Level::Debug);
+        assert_eq!(effective(&cfg, "panther::serve::cascade"), Level::Debug);
+        // Later override wins when both match.
+        assert_eq!(effective(&cfg, "panther::serve::batcher"), Level::Error);
+        // No match falls back to the default.
+        assert_eq!(effective(&cfg, "panther::linalg::gemm"), Level::Warn);
+        // The fast-path cache must admit the most verbose configured level.
+        assert_eq!(max_of(&cfg), Level::Debug);
     }
 }

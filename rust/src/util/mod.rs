@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod cli;
 pub mod crc;
+pub mod events;
 pub mod json;
 pub mod log;
 pub mod memtrack;

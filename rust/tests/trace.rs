@@ -1,0 +1,479 @@
+//! Trace-completeness integration tests: end-to-end request tracing
+//! against the full serve stack, under chaos.
+//!
+//! The contracts under test are the observability tentpole's claims:
+//!
+//! - **disabled ⇒ invisible**: with no tracer installed the workers hold
+//!   `None` and replies are bitwise identical to a traced server's;
+//! - **enabled ⇒ complete**: every answered request's span chain can be
+//!   reconstructed from the trace log — exactly one `admit`, one
+//!   `queue_wait`, one `exec`, and exactly one terminal (`reply` xor
+//!   `error`) — even when worker kills requeue its batch, quarantine
+//!   bisection replays it, or a hot-swap races its admission;
+//! - **exact accounting**: the per-class token bucket records or
+//!   suppresses every attempt, never both, never neither — with zero
+//!   refill, `recorded == capacity` and `recorded + suppressed ==
+//!   attempts` hold exactly;
+//! - **profiler attribution**: an attached [`StageProfiler`] sees per-layer
+//!   and GEMM pack/kernel wall time without changing any output bit.
+
+use panther::linalg::Mat;
+use panther::nn::{Activation, ForwardCtx, Linear, Model};
+use panther::rng::Philox;
+use panther::serve::{FaultPlan, ModelServer, ServeError, TierConfig, TraceConfig, TraceLog};
+use panther::util::events::{EventClass, StageProfiler};
+use panther::util::json::Json;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn mlp(seed: u64, d_in: usize, d_out: usize) -> Model {
+    let mut rng = Philox::seeded(seed);
+    let mut m = Model::new();
+    let mut fc1 = Linear::random(d_in, 12, &mut rng);
+    for b in fc1.bias.iter_mut() {
+        *b = 0.3;
+    }
+    m.add("fc1", fc1).unwrap();
+    m.add("act", Activation::gelu()).unwrap();
+    let mut fc2 = Linear::random(12, d_out, &mut rng);
+    for b in fc2.bias.iter_mut() {
+        *b = -0.2;
+    }
+    m.add("fc2", fc2).unwrap();
+    m
+}
+
+fn request_rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| Mat::randn(1, d, &mut Philox::seeded(seed + i as u64)).into_vec())
+        .collect()
+}
+
+fn solo_forward(model: &Model, row: &[f32]) -> Vec<f32> {
+    model
+        .forward(&Mat::from_vec(1, row.len(), row.to_vec()), &ForwardCtx::new())
+        .unwrap()
+        .row(0)
+        .to_vec()
+}
+
+/// Per-class event counts for one trace id across the whole log.
+fn counts_for(log: &TraceLog, id: u64) -> [usize; EventClass::COUNT] {
+    let mut c = [0usize; EventClass::COUNT];
+    for (_, e) in log.events_for(id) {
+        c[e.class as usize] += 1;
+    }
+    c
+}
+
+/// Assert the canonical answered-request chain for trace `id`: exactly one
+/// admit, one queue_wait span, one exec span, and the given terminal.
+fn assert_chain(log: &TraceLog, id: u64, terminal: EventClass) {
+    let c = counts_for(log, id);
+    assert_eq!(c[EventClass::Admit as usize], 1, "trace {id}: admit count");
+    assert_eq!(c[EventClass::QueueWait as usize], 1, "trace {id}: queue_wait count");
+    assert_eq!(c[EventClass::Exec as usize], 1, "trace {id}: exec count");
+    let (replies, errors) = (c[EventClass::Reply as usize], c[EventClass::Error as usize]);
+    assert_eq!(replies + errors, 1, "trace {id}: exactly one terminal");
+    assert_eq!(
+        c[terminal as usize], 1,
+        "trace {id}: expected terminal {}",
+        terminal.name()
+    );
+}
+
+fn poll_until(deadline: Duration, mut ok: impl FnMut() -> bool) -> bool {
+    let start = Instant::now();
+    while start.elapsed() < deadline {
+        if ok() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    ok()
+}
+
+#[test]
+fn disabled_tracing_is_invisible_and_enabled_chains_are_complete() {
+    let d = 10;
+    let rows = request_rows(12, d, 500);
+    let oracle = mlp(42, d, 5);
+    let expected: Vec<Vec<f32>> = rows.iter().map(|r| solo_forward(&oracle, r)).collect();
+    let cfg = TierConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(2),
+        workers: 2,
+        ..TierConfig::default()
+    };
+    // Untraced server: the baseline replies.
+    let mut plain = ModelServer::new();
+    plain.register_tier("t", mlp(42, d, 5), d, cfg.clone()).unwrap();
+    assert!(plain.tracer().is_none(), "tracing is opt-in");
+    let h = plain.handle();
+    let got_plain: Vec<Vec<f32>> = rows.iter().map(|r| h.infer("t", r).unwrap()).collect();
+    plain.shutdown();
+    // Traced server, same model, same rows.
+    let mut traced = ModelServer::new();
+    let tracer = traced.enable_tracing(TraceConfig::default());
+    traced.register_tier("t", mlp(42, d, 5), d, cfg).unwrap();
+    let h = traced.handle();
+    let got_traced: Vec<Vec<f32>> = rows.iter().map(|r| h.infer("t", r).unwrap()).collect();
+    assert_eq!(got_plain, expected, "untraced replies match the oracle bitwise");
+    assert_eq!(got_traced, expected, "tracing must not change a single output bit");
+    // Sequential submission from one thread mints ids 1..=12 in order;
+    // each must carry the full chain with a `reply` terminal and no
+    // transform span (the tier's transform is Raw).
+    let log = tracer.log();
+    for id in 1..=12u64 {
+        assert_chain(&log, id, EventClass::Reply);
+        let c = counts_for(&log, id);
+        assert_eq!(c[EventClass::Transform as usize], 0, "raw tier has no transform span");
+    }
+    // The admit instant precedes the queue_wait span start, which
+    // precedes (or ties) the exec span start.
+    for id in 1..=12u64 {
+        let evs = log.events_for(id);
+        assert_eq!(evs[0].1.class, EventClass::Admit, "trace {id} starts at admission");
+    }
+    // Spans carry durations; the queue wait ends where exec begins.
+    let t = &log.tiers[0];
+    assert_eq!(t.tier, "t");
+    assert_eq!(t.overflow, 0);
+    assert_eq!(t.recorded(EventClass::Admit), 12);
+    assert_eq!(t.suppressed(EventClass::Admit), 0);
+    traced.shutdown();
+}
+
+#[test]
+fn chains_stay_exact_under_seeded_kills() {
+    // Kill ticks 1 and 3: two workers die mid-run and their batches are
+    // requeued. Reply-time recording means a killed batch contributes
+    // *nothing* — each request still gets exactly one queue_wait/exec
+    // span pair, from the attempt that actually answered it.
+    let d = 10;
+    let model = mlp(42, d, 5);
+    let rows = request_rows(12, d, 900);
+    let expected: Vec<Vec<f32>> = rows.iter().map(|r| solo_forward(&model, r)).collect();
+    let plan = Arc::new(FaultPlan::seeded(7).kill_at(&[1, 3]));
+    let mut server = ModelServer::new();
+    let tracer = server.enable_tracing(TraceConfig::default());
+    server
+        .register_tier(
+            "t",
+            model,
+            d,
+            TierConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(2),
+                workers: 2,
+                faults: Some(Arc::clone(&plan)),
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    let h = server.handle();
+    let pending: Vec<_> = rows.iter().map(|r| h.submit("t", r).unwrap()).collect();
+    for (want, p) in expected.iter().zip(pending) {
+        assert_eq!(&p.wait().unwrap(), want, "survivors stay bitwise fault-free");
+    }
+    let log = tracer.log();
+    for id in 1..=12u64 {
+        assert_chain(&log, id, EventClass::Reply);
+    }
+    let t = &log.tiers[0];
+    assert_eq!(t.recorded(EventClass::Exec), 12, "kills never double-count exec spans");
+    assert_eq!(t.recorded(EventClass::Error), 0, "a kill is invisible to clients");
+    assert_eq!(t.recorded(EventClass::Fault), 2, "one fault event per armed kill tick");
+    // The supervisor respawns both workers and records each restart
+    // (tier-level, trace id 0) on its own cadence.
+    assert!(
+        poll_until(Duration::from_secs(10), || {
+            tracer.log().tiers[0].recorded(EventClass::Restart) == 2
+        }),
+        "both respawns must be traced"
+    );
+    server.shutdown();
+}
+
+/// Panics whenever any input value equals the marker `666.0`.
+struct Trap;
+
+impl panther::nn::Module for Trap {
+    fn type_name(&self) -> &'static str {
+        "Trap"
+    }
+    fn forward(&self, x: &Mat, _ctx: &ForwardCtx) -> panther::Result<Mat> {
+        if x.data().iter().any(|&v| v == 666.0) {
+            panic!("trap sprung");
+        }
+        Ok(x.clone())
+    }
+    fn params(&self) -> Vec<(String, panther::nn::ParamRef<'_>)> {
+        Vec::new()
+    }
+    fn params_mut(&mut self) -> Vec<(String, panther::nn::ParamMut<'_>)> {
+        Vec::new()
+    }
+    fn boxed_clone(&self) -> Box<dyn panther::nn::Module> {
+        Box::new(Trap)
+    }
+}
+
+#[test]
+fn quarantine_bisection_traces_rounds_and_the_poison_chain() {
+    let d = 4;
+    let mut m = Model::new();
+    m.add("trap", Trap).unwrap();
+    let mut server = ModelServer::new();
+    let tracer = server.enable_tracing(TraceConfig::default());
+    server
+        .register_tier(
+            "t",
+            m,
+            d,
+            TierConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(50),
+                workers: 1,
+                quarantine_strikes: 2,
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    let mut rows = request_rows(31, d, 2200);
+    let poison_index = 13;
+    rows.insert(poison_index, vec![1.0, 666.0, 3.0, 4.0]);
+    let h = server.handle();
+    let pending: Vec<_> = rows.iter().map(|r| h.submit("t", r).unwrap()).collect();
+    for (i, p) in pending.into_iter().enumerate() {
+        match p.wait() {
+            Ok(_) => assert_ne!(i, poison_index),
+            Err(ServeError::PoisonedInput) => assert_eq!(i, poison_index),
+            Err(e) => panic!("request {i}: expected Ok or PoisonedInput, got {e}"),
+        }
+    }
+    let log = tracer.log();
+    // Ids are minted 1..=32 in submission order; the poison row's chain
+    // terminates in an error with the poisoned marker, every innocent's
+    // in a reply — each with exactly one exec span despite the replays.
+    let poison_id = poison_index as u64 + 1;
+    for id in 1..=32u64 {
+        if id == poison_id {
+            assert_chain(&log, id, EventClass::Error);
+            let c = counts_for(&log, id);
+            assert_eq!(c[EventClass::Poisoned as usize], 1, "strike-out marker");
+            let evs = log.events_for(id);
+            let err = evs.iter().find(|(_, e)| e.class == EventClass::Error).unwrap();
+            assert_eq!(err.1.detail, "kind=PoisonedInput");
+        } else {
+            assert_chain(&log, id, EventClass::Reply);
+        }
+    }
+    let t = &log.tiers[0];
+    // Bisection rounds are tier-level events. The exact count depends on
+    // how the coalescer composed batches, but striking out a poison row
+    // always takes at least one traced solo retry.
+    assert!(
+        t.recorded(EventClass::Quarantine) >= 1,
+        "bisection rounds traced, got {}",
+        t.recorded(EventClass::Quarantine)
+    );
+    assert_eq!(t.recorded(EventClass::Poisoned), 1, "exactly one strike-out");
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_hot_swaps_keep_every_chain_complete() {
+    let (d, k) = (12usize, 5usize);
+    let mut server = ModelServer::new();
+    let tracer = server.enable_tracing(TraceConfig::default());
+    server
+        .register_tier(
+            "t",
+            mlp(90, d, k),
+            d,
+            TierConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(300),
+                queue_cap: 2048,
+                workers: 3,
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    let (n_threads, m_requests) = (6usize, 20usize);
+    let hammers: Vec<_> = (0..n_threads)
+        .map(|t| {
+            let h = server.handle();
+            std::thread::spawn(move || {
+                for i in 0..m_requests {
+                    let seed = 7000 + (t * m_requests + i) as u64;
+                    let row = Mat::randn(1, d, &mut Philox::seeded(seed)).into_vec();
+                    h.infer("t", &row).unwrap();
+                }
+            })
+        })
+        .collect();
+    // Two hot-swaps race the hammer traffic.
+    assert_eq!(server.swap_tier_model("t", mlp(91, d, k)).unwrap(), 1);
+    assert_eq!(server.swap_tier_model("t", mlp(92, d, k)).unwrap(), 2);
+    for th in hammers {
+        th.join().unwrap();
+    }
+    let total = (n_threads * m_requests) as u64;
+    let log = tracer.log();
+    for id in 1..=total {
+        assert_chain(&log, id, EventClass::Reply);
+    }
+    let t = &log.tiers[0];
+    assert_eq!(t.recorded(EventClass::Swap), 2, "one swap span per publish");
+    let swaps: Vec<_> = t
+        .events
+        .iter()
+        .filter(|e| e.class == EventClass::Swap)
+        .collect();
+    assert_eq!(swaps.len(), 2);
+    assert_eq!(swaps[0].detail, "v=1");
+    assert_eq!(swaps[1].detail, "v=2");
+    for s in swaps {
+        assert_eq!(s.trace, 0, "swaps are tier-level events");
+    }
+    // Every admit carries the version the request pinned — one of the
+    // three versions ever live.
+    for e in t.events.iter().filter(|e| e.class == EventClass::Admit) {
+        assert!(
+            ["v=0", "v=1", "v=2"].contains(&e.detail.as_str()),
+            "unexpected pinned version {:?}",
+            e.detail
+        );
+    }
+    server.shutdown();
+}
+
+#[test]
+fn rate_limiter_accounts_for_every_suppressed_event_exactly() {
+    // Zero refill ⇒ exactly `bucket_capacity` events per class survive;
+    // the rest are counted, never silently lost.
+    let d = 10;
+    let mut server = ModelServer::new();
+    let tracer = server.enable_tracing(TraceConfig {
+        ring_capacity: 4096,
+        bucket_capacity: 8,
+        refill_per_sec: 0.0,
+    });
+    server
+        .register_tier(
+            "t",
+            mlp(42, d, 5),
+            d,
+            TierConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                workers: 1,
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    let h = server.handle();
+    let rows = request_rows(20, d, 4100);
+    for r in &rows {
+        h.infer("t", r).unwrap();
+    }
+    let log = tracer.log();
+    let t = &log.tiers[0];
+    for class in [
+        EventClass::Admit,
+        EventClass::QueueWait,
+        EventClass::Exec,
+        EventClass::Reply,
+    ] {
+        assert_eq!(t.recorded(class), 8, "{}: capacity records", class.name());
+        assert_eq!(t.suppressed(class), 12, "{}: the rest are counted", class.name());
+    }
+    assert_eq!(t.recorded(EventClass::Error), 0);
+    assert_eq!(t.suppressed(EventClass::Error), 0);
+    assert_eq!(t.overflow, 0, "suppression is not ring overflow");
+    server.shutdown();
+}
+
+#[test]
+fn exports_parse_and_cover_the_run() {
+    let d = 10;
+    let mut server = ModelServer::new();
+    let tracer = server.enable_tracing(TraceConfig::default());
+    server
+        .register_tier(
+            "t",
+            mlp(42, d, 5),
+            d,
+            TierConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                workers: 1,
+                ..TierConfig::default()
+            },
+        )
+        .unwrap();
+    let h = server.handle();
+    for r in &request_rows(6, d, 5100) {
+        h.infer("t", r).unwrap();
+    }
+    let log = tracer.log();
+    let jsonl = log.export_jsonl();
+    // 6 requests x (admit + queue_wait + exec + reply) = 24 lines.
+    assert_eq!(jsonl.lines().count(), 24);
+    for line in jsonl.lines() {
+        let v = Json::parse(line).expect("every JSONL line parses");
+        for key in ["tier", "class", "t_us", "dur_us", "trace", "detail"] {
+            assert!(v.get(key).is_some(), "line missing {key}: {line}");
+        }
+    }
+    let chrome = Json::parse(&log.export_chrome_trace()).expect("chrome trace parses");
+    let evs = chrome.get("traceEvents").and_then(Json::as_arr).unwrap();
+    // 1 process metadata + 24 events.
+    assert_eq!(evs.len(), 25);
+    // Every event renders as process metadata, a complete span, or an
+    // instant — nothing else. (Span-vs-instant is decided by whether the
+    // duration rounded to >= 1 µs, so the split is timing-dependent.)
+    for e in evs {
+        let ph = e.get("ph").and_then(Json::as_str).unwrap();
+        assert!(["M", "X", "i"].contains(&ph), "unexpected phase {ph}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn profiler_attributes_stages_without_changing_outputs() {
+    // 16x64 through a 64->64 linear clears both packed-GEMM gates
+    // (m >= 8 and m*k*n >= 32768), so pack/kernel phases must appear.
+    let mut rng = Philox::seeded(77);
+    let mut m = Model::new();
+    m.add("fc1", Linear::random(64, 64, &mut rng)).unwrap();
+    m.add("act", Activation::gelu()).unwrap();
+    let x = Mat::randn(16, 64, &mut Philox::seeded(78));
+    let ctx = ForwardCtx::new();
+    assert!(ctx.profiler().is_none(), "profiling is opt-in");
+    let y_plain = m.forward(&x, &ctx).unwrap();
+    let prof = Arc::new(StageProfiler::new());
+    ctx.set_profiler(Some(Arc::clone(&prof)));
+    let y_prof = m.forward(&x, &ctx).unwrap();
+    assert_eq!(
+        y_plain.data(),
+        y_prof.data(),
+        "profiling must not change a single output bit"
+    );
+    let stages = prof.snapshot();
+    for stage in ["layer/fc1", "layer/act", "gemm/pack", "gemm/kernel"] {
+        let s = stages.get(stage).unwrap_or_else(|| panic!("missing stage {stage}"));
+        assert!(s.calls >= 1, "{stage}: calls");
+    }
+    assert_eq!(stages["layer/fc1"].calls, 1);
+    // Detached again: the next forward leaves the profile untouched.
+    ctx.set_profiler(None);
+    let before = prof.snapshot();
+    m.forward(&x, &ctx).unwrap();
+    assert_eq!(prof.snapshot(), before);
+    // The human report renders one row per stage.
+    let rep = prof.report();
+    assert!(rep.contains("gemm/pack"), "{rep}");
+}
